@@ -1,0 +1,74 @@
+//! Walk the paper's Table-4 ablation live: evaluate each pipeline stage's
+//! bundle on a PPL slice and print the improvement chain
+//! (QuaRot&static → +QSM → +clipping → +LoRA), plus the speed cost of
+//! the dynamic baseline it replaces.
+//!
+//! ```sh
+//! cargo run --release --example ablation_walkthrough
+//! ```
+
+use mergequant::artifacts_dir;
+use mergequant::engine::{Engine, KvCache, QModel, Workspace};
+use mergequant::eval::{corpus, perplexity};
+
+fn main() -> anyhow::Result<()> {
+    let model = "tiny-llama3";
+    let rows = [
+        ("FP16 reference        ", "fp16"),
+        ("QuaRot & per-tensor   ", "quarot_static"),
+        ("+ QSM (per-channel)   ", "mq_qsm_only"),
+        ("+ adaptive clipping   ", "mq_qsm_clip"),
+        ("+ LoRA compensation   ", "mergequant"),
+    ];
+    let dir = artifacts_dir().join("models").join(model);
+    if !dir.join("mergequant.qmod").exists() {
+        eprintln!("run `make artifacts` first");
+        return Ok(());
+    }
+    let toks = corpus::val_stream(&artifacts_dir(), "synth-wiki")?;
+    let slice = &toks[..6144.min(toks.len())];
+    println!("Table-4 ablation on {model} (PPL over {} tokens):",
+             slice.len());
+    let mut prev: Option<f64> = None;
+    for (label, method) in rows {
+        let path = dir.join(format!("{method}.qmod"));
+        if !path.exists() {
+            println!("  {label}  [bundle missing]");
+            continue;
+        }
+        let engine = Engine::new(QModel::load(&path)?);
+        let ppl = perplexity(&engine, slice, 256);
+        let delta = prev.map_or(String::new(),
+                                |p| format!("  (Δ {:+.3})", ppl - p));
+        println!("  {label} ppl = {ppl:8.3}{delta}");
+        prev = Some(ppl);
+    }
+
+    // Speed sidebar: what the static path buys on this model.
+    println!("\ndecode-speed sidebar (batch 4, 32 steps):");
+    for method in ["fp16", "rtn", "mergequant"] {
+        let path = dir.join(format!("{method}.qmod"));
+        if !path.exists() {
+            continue;
+        }
+        let engine = Engine::new(QModel::load(&path)?);
+        let cfg = engine.config().clone();
+        let mut ws = Workspace::new();
+        let mut caches: Vec<KvCache> = (0..4)
+            .map(|_| {
+                let mut c = KvCache::new(cfg.n_layers, 96, cfg.d_model);
+                engine.prefill(&[3, 4, 5, 6], &mut c, &mut ws);
+                c
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let toks = vec![5u32; 4];
+        for _ in 0..32 {
+            let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+            engine.decode_batch(&toks, &mut refs, &mut ws);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!("  {method:<12} {:.0} tok/s", 4.0 * 32.0 / dt);
+    }
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Inspect every exported bundle of a model: quant modes per layer,
+//! resident sizes, clip ratios, reconstruction stats — the "what did the
+//! pipeline actually do" tour of the MergeQuant method (paper §4).
+//!
+//! ```sh
+//! cargo run --release --example quantize_inspect [-- --model tiny-llama-s]
+//! ```
+
+use mergequant::artifacts_dir;
+use mergequant::cli::Args;
+use mergequant::engine::{Linear, QModel, QuantMode};
+
+fn describe(lin: &Linear) -> String {
+    match lin {
+        Linear::Fp { n, j, .. } => format!("fp32 ({n}×{j})"),
+        Linear::Quant { qw, mode } => {
+            let m = match mode {
+                QuantMode::Static => "static".into(),
+                QuantMode::TensorStatic { a_scale, .. } =>
+                    format!("tensor-static a_scale={a_scale:.4}"),
+                QuantMode::Dynamic { a_clip, hadamard, .. } => format!(
+                    "dynamic clip={a_clip:.2}{}",
+                    if *hadamard { " +hadamard" } else { "" }),
+            };
+            format!("w{}b{} {} ({}×{}, {:.1} KB)", qw.bits,
+                    if qw.zero.is_some() { "-asym" } else { "" }, m,
+                    qw.n, qw.j, qw.resident_bytes() as f64 / 1e3)
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let model = args.get_or("model", "tiny-llama-s");
+    let dir = artifacts_dir().join("models").join(model);
+    if !dir.exists() {
+        eprintln!("run `make artifacts` first ({} missing)", dir.display());
+        return Ok(());
+    }
+    let mut bundles: Vec<_> = std::fs::read_dir(&dir)?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().is_some_and(|x| x == "qmod"))
+        .map(|e| e.path())
+        .collect();
+    bundles.sort();
+    println!("{} bundles under {}", bundles.len(), dir.display());
+    for path in bundles {
+        let qm = QModel::load(&path)?;
+        println!("\n== {} ==", qm.method);
+        println!("  weights resident: {:.2} MB",
+                 qm.weight_bytes() as f64 / 1e6);
+        let l = &qm.layers[0];
+        println!("  layer 0:");
+        for (name, lin) in [("q", &l.q), ("k", &l.k), ("v", &l.v),
+                            ("o", &l.o), ("gate", &l.gate), ("up", &l.up),
+                            ("down", &l.down)] {
+            println!("    {name:<5} {}", describe(lin));
+        }
+        if let Some(qmax) = l.attn_norm.quant_qmax {
+            let recon = l.attn_norm.recon_idx.as_ref();
+            let dup = recon.map_or(0, |idx| {
+                let mut seen = std::collections::HashSet::new();
+                idx.iter().filter(|&&i| !seen.insert(i)).count()
+            });
+            println!("    attn_norm: merged γ/s multiplier (qmax={qmax}), \
+                      reconstruction gather with {dup} duplicated channels");
+        } else {
+            println!("    attn_norm: plain fp32 RMSNorm");
+        }
+    }
+    Ok(())
+}

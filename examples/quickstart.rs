@@ -1,0 +1,48 @@
+//! Quickstart: load a MergeQuant bundle, inspect it, and generate text.
+//!
+//! ```sh
+//! make artifacts                      # once (build-time Python)
+//! cargo run --release --example quickstart
+//! ```
+
+use mergequant::artifacts_dir;
+use mergequant::engine::{memory::account_model, Engine, QModel};
+
+fn main() -> anyhow::Result<()> {
+    let bundle = artifacts_dir()
+        .join("models/tiny-llama-s/mergequant.qmod");
+    if !bundle.exists() {
+        eprintln!("run `make artifacts` first ({} missing)",
+                  bundle.display());
+        return Ok(());
+    }
+
+    // 1. Load the W4A4 statically-quantized bundle.
+    let model = QModel::load(&bundle)?;
+    let cfg = model.config.clone();
+    println!("loaded {} ({}): d={} layers={} vocab={}",
+             cfg.name, model.method, cfg.d_model, cfg.n_layers, cfg.vocab);
+    println!("resident weights: {:.2} MB (int4-packed)",
+             model.weight_bytes() as f64 / 1e6);
+    let mb = account_model(&model, 1, 2048);
+    println!("decode memory (batch 1, seq 2048): {:.2} MB total",
+             mb.total() as f64 / 1e6);
+
+    // 2. Greedy generation — the static path runs zero Quant/DeQuant steps.
+    let engine = Engine::new(model);
+    let prompt: Vec<u32> = vec![1, 17, 42, 99, 7, 256];
+    let t0 = std::time::Instant::now();
+    let completion = engine.generate(&prompt, 48, 128);
+    let dt = t0.elapsed();
+    println!("prompt     : {prompt:?}");
+    println!("completion : {completion:?}");
+    println!("decode rate: {:.0} tok/s",
+             completion.len() as f64 / dt.as_secs_f64());
+
+    // 3. Perplexity on the held-out synthetic corpus.
+    let toks = mergequant::eval::corpus::val_stream(&artifacts_dir(),
+                                                    "synth-wiki")?;
+    let ppl = mergequant::eval::perplexity(&engine, &toks[..4096], 256);
+    println!("ppl[synth-wiki] = {ppl:.3}");
+    Ok(())
+}

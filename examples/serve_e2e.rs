@@ -1,0 +1,140 @@
+//! End-to-end serving driver (the DESIGN.md validation run): start the
+//! coordinator on a quantized bundle, attach the TCP gateway, fire a
+//! closed-loop client fleet with Poisson think times at it, and report
+//! latency/throughput — then do the same for the FP16 bundle and print
+//! the serving-level speedup.
+//!
+//! ```sh
+//! cargo run --release --example serve_e2e [-- --requests 32 --clients 4]
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use mergequant::cli::Args;
+use mergequant::coordinator::server::TcpGateway;
+use mergequant::coordinator::{SchedulerConfig, Server};
+use mergequant::engine::{Engine, QModel};
+use mergequant::util::json::Json;
+use mergequant::util::rng::Rng;
+use mergequant::util::stats::summarize;
+use mergequant::artifacts_dir;
+
+struct RunStats {
+    wall_s: f64,
+    gen_tokens: usize,
+    lat_ms: Vec<f64>,
+    ttft_ms: Vec<f64>,
+}
+
+fn drive(method: &str, n_requests: usize, n_clients: usize,
+         prompt_len: usize, max_new: usize) -> anyhow::Result<RunStats> {
+    let bundle = artifacts_dir()
+        .join(format!("models/tiny-llama-s/{method}.qmod"));
+    let engine = Engine::new(QModel::load(&bundle)?);
+    let vocab = engine.config().vocab as u32;
+    let server = Arc::new(Server::start(
+        engine,
+        SchedulerConfig {
+            max_batch: 8,
+            kv_slabs: 8,
+            max_seq: prompt_len + max_new + 4,
+            max_prefills_per_iter: 2,
+            queue_cap: 256,
+            prefill_chunk: 0,
+        },
+    ));
+    let gateway = TcpGateway::start(server.clone(), 0)?;
+    let addr = gateway.addr;
+
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    let per_client = n_requests / n_clients;
+    for c in 0..n_clients {
+        handles.push(std::thread::spawn(move || -> anyhow::Result<RunStats> {
+            let mut rng = Rng::new(100 + c as u64);
+            let stream = TcpStream::connect(addr)?;
+            let mut reader = BufReader::new(stream.try_clone()?);
+            let mut out = stream;
+            let mut stats = RunStats {
+                wall_s: 0.0, gen_tokens: 0,
+                lat_ms: Vec::new(), ttft_ms: Vec::new(),
+            };
+            for _ in 0..per_client {
+                // Poisson think time (closed loop, ~20 req/s offered)
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    rng.exp(20.0)));
+                let prompt: Vec<String> = (0..prompt_len)
+                    .map(|_| (3 + rng.next_u64() % (vocab as u64 - 3))
+                        .to_string())
+                    .collect();
+                writeln!(out, "{{\"prompt\":[{}],\"max_new\":{max_new}}}",
+                         prompt.join(","))?;
+                let mut line = String::new();
+                reader.read_line(&mut line)?;
+                let j = Json::parse(line.trim()).map_err(anyhow::Error::msg)?;
+                stats.gen_tokens += j.get("tokens")
+                    .and_then(Json::as_arr).map_or(0, |a| a.len());
+                if let Some(l) = j.get("latency_ms").and_then(Json::as_f64) {
+                    stats.lat_ms.push(l);
+                }
+                if let Some(t) = j.get("ttft_ms").and_then(Json::as_f64) {
+                    stats.ttft_ms.push(t);
+                }
+            }
+            Ok(stats)
+        }));
+    }
+    let mut agg = RunStats {
+        wall_s: 0.0, gen_tokens: 0, lat_ms: Vec::new(), ttft_ms: Vec::new(),
+    };
+    for h in handles {
+        let s = h.join().expect("client panicked")?;
+        agg.gen_tokens += s.gen_tokens;
+        agg.lat_ms.extend(s.lat_ms);
+        agg.ttft_ms.extend(s.ttft_ms);
+    }
+    agg.wall_s = t0.elapsed().as_secs_f64();
+    gateway.stop();
+    let report = match Arc::try_unwrap(server) {
+        Ok(srv) => srv.shutdown(),
+        Err(_) => String::new(),
+    };
+    println!("  scheduler: {report}");
+    Ok(agg)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let n_requests = args.get_usize("requests", 24);
+    let n_clients = args.get_usize("clients", 4);
+    let prompt_len = args.get_usize("prompt-len", 64);
+    let max_new = args.get_usize("max-new", 32);
+
+    if !artifacts_dir().join("models/tiny-llama-s/mergequant.qmod").exists() {
+        eprintln!("run `make artifacts` first");
+        return Ok(());
+    }
+    println!("== serve_e2e: {n_requests} requests, {n_clients} clients, \
+              prompt {prompt_len}, decode {max_new} ==");
+    let mut throughput = std::collections::HashMap::new();
+    for method in ["fp16", "mergequant"] {
+        println!("[{method}]");
+        let s = drive(method, n_requests, n_clients, prompt_len, max_new)?;
+        let lat = summarize(&s.lat_ms);
+        let ttft = summarize(&s.ttft_ms);
+        let tput = s.gen_tokens as f64 / s.wall_s;
+        println!("  wall {:.2}s  throughput {:.1} gen tok/s", s.wall_s, tput);
+        println!("  latency p50 {:.1}ms p99 {:.1}ms; ttft p50 {:.1}ms",
+                 lat.p50, lat.p99, ttft.p50);
+        throughput.insert(method, tput);
+    }
+    if let (Some(fp), Some(mq)) =
+        (throughput.get("fp16"), throughput.get("mergequant"))
+    {
+        println!("serving throughput speedup (mergequant vs fp16): {:.2}x",
+                 mq / fp);
+    }
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""Build-time analysis tooling (EXPERIMENTS.md §Perf L1/L2 evidence).
+
+* ``hlo_stats`` — op-census of an exported HLO text module: counts by
+  opcode, dot/fusion counts, constant payload bytes, parameter count.
+  Used to audit the lowered graphs (no duplicated norm subgraphs, KV
+  updated via dynamic-update-slice, integer dots present in the
+  quantized module).
+* ``vmem_report`` — structural VMEM footprint of the L1 Pallas schedule
+  across the model zoo + paper-scale shapes (DESIGN.md §8).
+* ``alpha_sweep`` — dimension-reconstruction behaviour vs the Eq. (6)
+  threshold hyperparameter α: how many strong channels, split elements,
+  and what residual scale non-uniformity remains. This is the design-
+  choice ablation DESIGN.md calls out (α=5 for Llama-2-likes, α=2 for
+  the Llama-3-like).
+
+CLI: ``python -m compile.analysis [hlo|vmem|alpha|all]`` →
+``artifacts/reports/analysis_*.json`` + stdout summary.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+from collections import Counter
+from pathlib import Path
+
+import numpy as np
+
+ART = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def hlo_stats(text: str) -> dict:
+    """Opcode census of an HLO text module."""
+    ops = Counter()
+    const_bytes = 0
+    params = 0
+    for line in text.splitlines():
+        m = re.search(r"=\s*[a-z0-9\[\],{}:\s]*?([a-z][a-z0-9-]*)\(", line)
+        if not m:
+            continue
+        op = m.group(1)
+        ops[op] += 1
+        if op == "parameter":
+            params += 1
+        if "constant(" in line:
+            # rough payload size: count numeric literals on the line
+            const_bytes += 4 * max(line.count(",") + 1, 1)
+    return {
+        "total_ops": sum(ops.values()),
+        "by_opcode": dict(ops.most_common()),
+        "dots": ops.get("dot", 0),
+        "dynamic_update_slices": ops.get("dynamic-update-slice", 0),
+        "parameters": params,
+        "approx_constant_bytes": const_bytes,
+    }
+
+
+def run_hlo() -> dict:
+    out = {}
+    hlo_dir = ART / "hlo"
+    for path in sorted(hlo_dir.glob("*.hlo.txt")):
+        stats = hlo_stats(path.read_text())
+        out[path.stem] = stats
+        print(f"[hlo] {path.stem}: {stats['total_ops']} ops, "
+              f"{stats['dots']} dots, "
+              f"{stats['dynamic_update_slices']} dyn-update-slice, "
+              f"{stats['parameters']} params")
+    (ART / "reports" / "analysis_hlo.json").write_text(json.dumps(out))
+    return out
+
+
+def run_vmem() -> dict:
+    from .kernels.qsm_matmul import vmem_footprint_bytes
+    from .model import MODEL_ZOO
+    shapes = []
+    for cfg in MODEL_ZOO.values():
+        shapes.append((cfg.name + ".qkv", 2048, cfg.d_model, 3 * cfg.d_model))
+        shapes.append((cfg.name + ".ffn", 2048, cfg.d_model, cfg.d_ff))
+    # paper-scale shapes (Llama-2-7B)
+    shapes.append(("llama2-7b.qkv", 2048, 4096, 3 * 4096))
+    shapes.append(("llama2-7b.ffn", 2048, 4096, 11008))
+    out = {}
+    for name, m, n, j in shapes:
+        fp = vmem_footprint_bytes(m, n, j)
+        out[name] = fp
+        print(f"[vmem] {name}: {fp['total']/2**20:.2f} MiB "
+              f"(fits16MiB={fp['fits_16MiB']})")
+    (ART / "reports" / "analysis_vmem.json").write_text(json.dumps(out))
+    return out
+
+
+def run_alpha() -> dict:
+    """Sweep the Eq. (6) α on real calibrated scales from the zoo."""
+    import pickle
+
+    from .aot import calib_batches
+    from .model import MODEL_ZOO
+    from .quant import calibration as C
+    from .quant.reconstruct import reconstruct
+
+    batches = calib_batches(n_batches=4)
+    out = {}
+    for name, cfg in MODEL_ZOO.items():
+        pkl = ART / "models" / name / f"{name}.params.pkl"
+        if not pkl.exists():
+            continue
+        with open(pkl, "rb") as f:
+            params = pickle.load(f)
+        calib = C.calibrate(cfg, params, batches)
+        stats = calib.layers[0].attn_norm_out
+        s = np.maximum(stats.absmax, 1e-6) / 7.0
+        rows = {}
+        for alpha in (1.0, 2.0, 3.0, 5.0, 8.0):
+            r = reconstruct(s, stats.sqsum, alpha=alpha)
+            kept = r.fold_scale
+            rows[str(alpha)] = {
+                "n_strong": int(len(r.strong)),
+                "n_split_extra": int(r.n_split_extra),
+                "threshold": float(r.threshold),
+                "scale_cv_before": float(np.std(s) / np.mean(s)),
+                "scale_cv_after": float(np.std(kept) / np.mean(kept)),
+            }
+            print(f"[alpha] {name} α={alpha}: strong={rows[str(alpha)]['n_strong']} "
+                  f"extra={rows[str(alpha)]['n_split_extra']} "
+                  f"cv {rows[str(alpha)]['scale_cv_before']:.2f}→"
+                  f"{rows[str(alpha)]['scale_cv_after']:.2f}")
+        out[name] = rows
+    (ART / "reports" / "analysis_alpha.json").write_text(json.dumps(out))
+    return out
+
+
+def main() -> None:
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    (ART / "reports").mkdir(parents=True, exist_ok=True)
+    if which in ("hlo", "all"):
+        run_hlo()
+    if which in ("vmem", "all"):
+        run_vmem()
+    if which in ("alpha", "all"):
+        run_alpha()
+
+
+if __name__ == "__main__":
+    main()

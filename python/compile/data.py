@@ -1,0 +1,259 @@
+"""Synthetic corpora and evaluation tasks.
+
+The paper calibrates/evaluates on WikiText-2 and C4 and five zero-shot
+choice tasks. Neither the datasets nor the Llama checkpoints are available
+in this offline image, so we build the closest synthetic equivalents
+(DESIGN.md §2):
+
+* ``synth-wiki`` / ``synth-c4`` — topic-mixture bigram languages over a
+  512-word vocabulary with Zipfian unigram priors. The two corpora share
+  the vocabulary but differ in topic priors and sampling temperature, so a
+  model trained on the mix shows a (small) domain gap between them, just
+  as Llama does between WikiText-2 and C4.
+* five choice tasks (``synth-piqa`` .. ``synth-winogrande``) — real
+  continuations from the generator vs. corrupted distractors, scored with
+  length-normalised log-likelihood exactly like lm-eval-harness scores
+  PIQA/ARC/HellaSwag/WinoGrande.
+
+Everything is deterministic given the seed so that artifacts are
+reproducible and the Rust side can re-derive nothing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+
+VOCAB_SIZE = 512
+BOS = 0
+EOS = 1
+PAD = 2
+N_SPECIAL = 3
+N_TOPICS = 8
+
+
+@dataclasses.dataclass
+class CorpusSpec:
+    """Sampling parameters for one synthetic corpus."""
+
+    name: str
+    seed: int
+    temperature: float
+    topic_concentration: float  # Dirichlet concentration over topics
+    doc_len: tuple[int, int]  # min/max document length (tokens)
+
+
+SYNTH_WIKI = CorpusSpec("synth-wiki", seed=7, temperature=1.0,
+                        topic_concentration=0.4, doc_len=(64, 256))
+SYNTH_C4 = CorpusSpec("synth-c4", seed=11, temperature=1.15,
+                      topic_concentration=1.2, doc_len=(48, 192))
+
+
+class BigramWorld:
+    """Shared latent structure: per-topic bigram transition tables.
+
+    One fixed ``BigramWorld`` underlies both corpora; the corpora differ in
+    *how* they sample from it (topic prior, temperature). A trained model
+    therefore learns genuine transferable structure.
+    """
+
+    def __init__(self, seed: int = 1234, vocab: int = VOCAB_SIZE,
+                 n_topics: int = N_TOPICS):
+        rng = np.random.default_rng(seed)
+        self.vocab = vocab
+        self.n_topics = n_topics
+        # Zipfian unigram prior over the non-special vocabulary.
+        ranks = np.arange(1, vocab - N_SPECIAL + 1)
+        zipf = 1.0 / ranks**1.05
+        self.unigram = zipf / zipf.sum()
+        # Per-topic sparse bigram logits: each token prefers a topic-specific
+        # set of ~24 successors, blended with the unigram prior.
+        self.next_tokens = rng.integers(
+            N_SPECIAL, vocab, size=(n_topics, vocab, 24))
+        self.next_logits = rng.gumbel(size=(n_topics, vocab, 24)) * 1.2 + 2.0
+
+    def sample_doc(self, rng: np.random.Generator, topic_probs: np.ndarray,
+                   length: int, temperature: float) -> np.ndarray:
+        topic = int(rng.choice(self.n_topics, p=topic_probs))
+        out = np.empty(length + 2, dtype=np.int32)
+        out[0] = BOS
+        tok = int(N_SPECIAL + rng.choice(len(self.unigram), p=self.unigram))
+        out[1] = tok
+        nxt = self.next_tokens[topic]
+        lgt = self.next_logits[topic] / temperature
+        for i in range(2, length + 1):
+            if rng.random() < 0.08:  # unigram resets keep entropy realistic
+                tok = int(N_SPECIAL +
+                          rng.choice(len(self.unigram), p=self.unigram))
+            else:
+                p = np.exp(lgt[tok] - lgt[tok].max())
+                p /= p.sum()
+                tok = int(nxt[tok][rng.choice(24, p=p)])
+            out[i] = tok
+        out[length + 1] = EOS
+        return out
+
+
+_WORLD: BigramWorld | None = None
+
+
+def world() -> BigramWorld:
+    global _WORLD
+    if _WORLD is None:
+        _WORLD = BigramWorld()
+    return _WORLD
+
+
+def sample_topic_probs(rng: np.random.Generator, spec: CorpusSpec) -> np.ndarray:
+    return rng.dirichlet(np.full(N_TOPICS, spec.topic_concentration))
+
+
+def generate_corpus(spec: CorpusSpec, n_tokens: int) -> np.ndarray:
+    """Concatenated token stream of exactly ``n_tokens`` tokens.
+
+    Sequential bigram sampling is a Python loop, so streams are cached on
+    disk (deterministic given the spec) and longer cached streams serve
+    shorter requests by prefix.
+    """
+    cache_dir = Path(__file__).resolve().parents[2] / "artifacts" / "corpora_cache"
+    cache_dir.mkdir(parents=True, exist_ok=True)
+    for existing in sorted(cache_dir.glob(f"{spec.name}-*.npy")):
+        try:
+            cached_n = int(existing.stem.split("-")[-1])
+        except ValueError:
+            continue
+        if cached_n >= n_tokens:
+            return np.load(existing)[:n_tokens]
+    rng = np.random.default_rng(spec.seed)
+    w = world()
+    chunks: list[np.ndarray] = []
+    total = 0
+    while total < n_tokens:
+        length = int(rng.integers(*spec.doc_len))
+        doc = w.sample_doc(rng, sample_topic_probs(rng, spec), length,
+                           spec.temperature)
+        chunks.append(doc)
+        total += len(doc)
+    out = np.concatenate(chunks)[:n_tokens]
+    np.save(cache_dir / f"{spec.name}-{n_tokens}.npy", out)
+    return out
+
+
+def batch_iterator(tokens: np.ndarray, batch: int, seq: int, seed: int = 0):
+    """Yield (inputs, targets) int32 batches forever (training iterator)."""
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    while True:
+        starts = rng.integers(0, n, size=batch)
+        x = np.stack([tokens[s:s + seq] for s in starts])
+        y = np.stack([tokens[s + 1:s + seq + 1] for s in starts])
+        yield x.astype(np.int32), y.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Zero-shot choice tasks
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ChoiceItem:
+    prefix: list[int]
+    choices: list[list[int]]  # token sequences
+    answer: int
+
+
+def _corrupt_swap(rng, seq):
+    seq = list(seq)
+    if len(seq) >= 4:
+        i, j = rng.choice(len(seq), size=2, replace=False)
+        seq[i], seq[j] = seq[j], seq[i]
+    return seq
+
+
+def _corrupt_random(rng, seq):
+    return [int(N_SPECIAL + rng.integers(0, VOCAB_SIZE - N_SPECIAL))
+            for _ in seq]
+
+
+def _corrupt_topic(rng, w: BigramWorld, seq, temperature=1.0):
+    """Plausible same-length continuation from a *different* topic."""
+    topic = int(rng.integers(0, w.n_topics))
+    tok = int(seq[0])
+    out = [tok]
+    for _ in range(len(seq) - 1):
+        lgt = w.next_logits[topic][tok] / temperature
+        p = np.exp(lgt - lgt.max())
+        p /= p.sum()
+        tok = int(w.next_tokens[topic][tok][rng.choice(24, p=p)])
+        out.append(tok)
+    return out
+
+
+def make_task(name: str, n_items: int, seed: int) -> list[ChoiceItem]:
+    """Build one synthetic choice task.
+
+    ``piqa``: 2-choice, swap corruption (subtle) — mirrors physical
+    plausibility being a small perturbation.
+    ``arc-e``: 4-choice, random-token distractors (easy).
+    ``arc-c``: 4-choice, other-topic plausible distractors (hard).
+    ``hellaswag``: 4-choice, longer continuations, other-topic distractors.
+    ``winogrande``: 2-choice, single-token difference.
+    """
+    rng = np.random.default_rng(seed)
+    w = world()
+    spec = SYNTH_WIKI
+    items: list[ChoiceItem] = []
+    for _ in range(n_items):
+        probs = sample_topic_probs(rng, spec)
+        cont_len = 12 if name != "hellaswag" else 24
+        doc = w.sample_doc(rng, probs, 32 + cont_len, spec.temperature)
+        prefix = doc[: 32].tolist()
+        true_cont = doc[32: 32 + cont_len].tolist()
+        if name == "piqa":
+            distractors = [_corrupt_swap(rng, true_cont)]
+        elif name == "arc-e":
+            distractors = [_corrupt_random(rng, true_cont) for _ in range(3)]
+        elif name in ("arc-c", "hellaswag"):
+            distractors = [_corrupt_topic(rng, w, true_cont) for _ in range(3)]
+        elif name == "winogrande":
+            d = list(true_cont)
+            pos = int(rng.integers(0, len(d)))
+            d[pos] = int(N_SPECIAL + rng.integers(0, VOCAB_SIZE - N_SPECIAL))
+            distractors = [d]
+        else:
+            raise ValueError(name)
+        answer = int(rng.integers(0, 1 + len(distractors)))
+        choices = list(distractors)
+        choices.insert(answer, true_cont)
+        items.append(ChoiceItem(prefix, choices, answer))
+    return items
+
+
+TASK_NAMES = ["piqa", "arc-e", "arc-c", "hellaswag", "winogrande"]
+
+
+def export_tasks(out_dir: Path, n_items: int = 200, seed: int = 99) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for i, name in enumerate(TASK_NAMES):
+        items = make_task(name, n_items, seed + i)
+        payload = [dataclasses.asdict(it) for it in items]
+        (out_dir / f"{name}.json").write_text(json.dumps(payload))
+
+
+def export_corpora(out_dir: Path, train_tokens: int, val_tokens: int) -> dict:
+    """Write train/val token streams for both corpora as little-endian i32."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meta = {}
+    for spec in (SYNTH_WIKI, SYNTH_C4):
+        full = generate_corpus(spec, train_tokens + val_tokens)
+        train, val = full[:train_tokens], full[train_tokens:]
+        (out_dir / f"{spec.name}.train.i32").write_bytes(
+            train.astype("<i4").tobytes())
+        (out_dir / f"{spec.name}.val.i32").write_bytes(
+            val.astype("<i4").tobytes())
+        meta[spec.name] = {"train_tokens": int(train_tokens),
+                           "val_tokens": int(val_tokens)}
+    (out_dir / "corpora.json").write_text(json.dumps(meta))
+    return meta

@@ -1,0 +1,160 @@
+"""L1 Pallas kernel: QSM-aligned static-quant matmul (paper Eq. 5).
+
+The paper's point is that after Quantization Step Migration the per-channel
+static path looks *exactly* like a per-tensor int GEMM: integer activations
+(already scaled by the merged RMSNorm multiplier), integer weights (with
+the per-channel activation scale folded along the input dimension), and a
+single per-output-column rescale in the epilogue. On CUDA that aligns with
+CUTLASS INT4 GEMM; on TPU we express it as an MXU-shaped Pallas kernel:
+
+  grid (M/bm, J/bj); each program holds an (bm, n) activation tile and an
+  (n, bj) weight tile in VMEM, accumulates on the MXU, and applies the
+  per-column ``out_scale`` epilogue before writing back — one HBM round
+  trip for the output, zero explicit Quant/DeQuant passes.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls (see /opt/xla-example/README.md). Numerics are validated
+against ``ref.py`` by pytest; TPU perf is estimated structurally
+(DESIGN.md §8, EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 64
+DEFAULT_BJ = 128
+
+
+def _qsm_kernel(xq_ref, wq_ref, scale_ref, o_ref):
+    acc = jnp.dot(xq_ref[...], wq_ref[...],
+                  preferred_element_type=jnp.float32)
+    o_ref[...] = acc * scale_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bj"))
+def qsm_matmul(xq: jax.Array, wq: jax.Array, out_scale: jax.Array,
+               bm: int = DEFAULT_BM, bj: int = DEFAULT_BJ) -> jax.Array:
+    """xq: (m, n) int-valued f32; wq: (n, j) int-valued f32; out_scale: (j,).
+
+    Returns (m, j) f32 = (xq @ wq) * out_scale.
+    """
+    m, n = xq.shape
+    n2, j = wq.shape
+    assert n == n2, (xq.shape, wq.shape)
+    bm_ = min(bm, m)
+    bj_ = min(bj, j)
+    grid = (pl.cdiv(m, bm_), pl.cdiv(j, bj_))
+    return pl.pallas_call(
+        _qsm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, n), lambda i, k: (i, 0)),
+            pl.BlockSpec((n, bj_), lambda i, k: (0, k)),
+            pl.BlockSpec((bj_,), lambda i, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bj_), lambda i, k: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((m, j), jnp.float32),
+        interpret=True,
+    )(xq, wq, out_scale)
+
+
+def _qsm_asym_kernel(xq_ref, wq_ref, zero_ref, scale_ref, o_ref):
+    xq = xq_ref[...]
+    acc = jnp.dot(xq, wq_ref[...], preferred_element_type=jnp.float32)
+    rowsum = jnp.sum(xq, axis=-1, keepdims=True)
+    o_ref[...] = (acc - rowsum * zero_ref[...][None, :]) * scale_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bj"))
+def qsm_matmul_asym(xq: jax.Array, wq: jax.Array, zero: jax.Array,
+                    out_scale: jax.Array, bm: int = DEFAULT_BM,
+                    bj: int = DEFAULT_BJ) -> jax.Array:
+    """Asymmetric-weight variant (Table 5): Y = ((xq@wq) - rowsum·z) · s_j.
+
+    The zero-point correction costs one extra row reduction that stays in
+    VMEM — still no per-channel work in the accumulator.
+    """
+    m, n = xq.shape
+    _, j = wq.shape
+    bm_ = min(bm, m)
+    bj_ = min(bj, j)
+    grid = (pl.cdiv(m, bm_), pl.cdiv(j, bj_))
+    return pl.pallas_call(
+        _qsm_asym_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, n), lambda i, k: (i, 0)),
+            pl.BlockSpec((n, bj_), lambda i, k: (0, k)),
+            pl.BlockSpec((bj_,), lambda i, k: (k,)),
+            pl.BlockSpec((bj_,), lambda i, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bj_), lambda i, k: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((m, j), jnp.float32),
+        interpret=True,
+    )(xq, wq, zero, out_scale)
+
+
+def _dyn_kernel(x_ref, wq_ref, wscale_ref, o_ref, *, qmax, clip):
+    x = x_ref[...]
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.maximum(absmax * clip / qmax, 1e-8)
+    q = x / s
+    xq = jnp.clip(jnp.sign(q) * jnp.floor(jnp.abs(q) + 0.5), -qmax, qmax)
+    acc = jnp.dot(xq, wq_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = acc * s * wscale_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "clip", "bm", "bj"))
+def dyn_quant_matmul(x: jax.Array, wq: jax.Array, w_scale: jax.Array,
+                     qmax: int = 7, clip: float = 1.0,
+                     bm: int = DEFAULT_BM, bj: int = DEFAULT_BJ) -> jax.Array:
+    """Per-token *dynamic* baseline kernel (the cost MergeQuant removes).
+
+    Fusing quantize+GEMM into one kernel is the best case for dynamic
+    quantization; the paper's Table 6 overhead is the *unfused* PyTorch
+    reality, which our Rust substrate reproduces. Keeping this kernel
+    fused makes our accuracy comparisons conservative.
+    """
+    m, n = x.shape
+    _, j = wq.shape
+    bm_ = min(bm, m)
+    bj_ = min(bj, j)
+    grid = (pl.cdiv(m, bm_), pl.cdiv(j, bj_))
+    kern = functools.partial(_dyn_kernel, qmax=qmax, clip=clip)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, n), lambda i, k: (i, 0)),
+            pl.BlockSpec((n, bj_), lambda i, k: (0, k)),
+            pl.BlockSpec((bj_,), lambda i, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bj_), lambda i, k: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((m, j), jnp.float32),
+        interpret=True,
+    )(x, wq, w_scale)
+
+
+def vmem_footprint_bytes(m: int, n: int, j: int, bm: int = DEFAULT_BM,
+                         bj: int = DEFAULT_BJ, act_bytes: int = 1,
+                         w_bytes: int = 1) -> dict:
+    """Structural VMEM estimate for one grid step (DESIGN.md §8).
+
+    act tile (bm, n) + weight tile (n, bj) + f32 accumulator (bm, bj)
+    + scale vector. Used by EXPERIMENTS.md §Perf to check the schedule
+    fits comfortably under the ~16 MiB TPU VMEM budget.
+    """
+    bm = min(bm, m)
+    bj = min(bj, j)
+    act = bm * n * act_bytes
+    wgt = n * bj * w_bytes
+    acc = bm * bj * 4
+    scale = bj * 4
+    total = act + wgt + acc + scale
+    return {"act": act, "weight": wgt, "acc": acc, "scale": scale,
+            "total": total, "fits_16MiB": total < 16 * 2**20}

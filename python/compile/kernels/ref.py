@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *correctness* definitions; the Pallas kernels in
+``qsm_matmul.py`` / ``rmsnorm_quant.py`` must match them bit-for-bit
+(same rounding semantics) under pytest sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def round_half_away(x: jax.Array) -> jax.Array:
+    """Round-half-away-from-zero — the ⌈·⌋ of the paper's Eq. (1).
+
+    Matches ``f32::round`` in Rust so the native engine and the JAX
+    pipeline agree exactly (jnp.round is banker's rounding, which does not).
+    """
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def quantize_sym(x: jax.Array, scale: jax.Array, qmax: int) -> jax.Array:
+    """Symmetric quantization: round(x/scale) clamped to [-qmax, qmax].
+
+    Returns integer *values* in float32 (the TPU MXU consumes bf16/int8
+    operands; carrying int values in f32 keeps interpret-mode exact).
+    """
+    return jnp.clip(round_half_away(x / scale), -qmax, qmax)
+
+
+def rmsnorm_quant_ref(x: jax.Array, g_merged: jax.Array, qmax: int,
+                      eps: float = 1e-5) -> jax.Array:
+    """Paper Eq. (4): RMSNorm whose multiplier already holds γ/s.
+
+    x: (..., d); g_merged: (d,) = gamma / s_channel.
+    Output: integer-valued f32 in [-qmax, qmax].
+    """
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return jnp.clip(round_half_away(x / rms * g_merged), -qmax, qmax)
+
+
+def qsm_matmul_ref(xq: jax.Array, wq: jax.Array, out_scale: jax.Array) -> jax.Array:
+    """Paper Eq. (5): integer GEMM with per-output-column rescale epilogue.
+
+    xq: (m, n) integer-valued f32 (quantized activations, scale already
+    migrated into the norm multiplier); wq: (n, j) integer-valued f32
+    (weights with s_k folded in, then per-column quantized);
+    out_scale: (j,) the per-column dequant factor s_j^{s_X·W}.
+    """
+    acc = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+    return acc * out_scale
+
+
+def qsm_matmul_asym_ref(xq: jax.Array, wq: jax.Array, zero: jax.Array,
+                        out_scale: jax.Array) -> jax.Array:
+    """Asymmetric-weight variant (Table 5): W_int = round(W/s)+z.
+
+    Y = s_j * (Σ_k xq_k wq_kj  −  z_j Σ_k xq_k).
+    """
+    acc = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+    rowsum = jnp.sum(xq, axis=-1, keepdims=True)
+    return (acc - rowsum * zero[None, :]) * out_scale
+
+
+def dyn_quant_matmul_ref(x: jax.Array, wq: jax.Array, w_scale: jax.Array,
+                         qmax: int, clip: float = 1.0) -> jax.Array:
+    """Per-token dynamic baseline (out/down layers + RTN/QuaRot baselines).
+
+    x: (m, n) f32; per-row scale s_t = clip·absmax/qmax computed *online* —
+    this is the explicit Quant/DeQuant step MergeQuant eliminates.
+    """
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    s = jnp.maximum(absmax * clip / qmax, 1e-8)
+    xq = jnp.clip(round_half_away(x / s), -qmax, qmax)
+    acc = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+    return acc * s * w_scale
+
+
+def hadamard_block64_ref(x: jax.Array) -> jax.Array:
+    """Normalised block-diagonal Walsh–Hadamard transform, block size 64.
+
+    Any d divisible by 64 is supported; this is the online rotation used by
+    the '+hadamard' variants (DESIGN.md §2 hardware note).
+    """
+    d = x.shape[-1]
+    assert d % 64 == 0, d
+    shape = x.shape
+    x = x.reshape(-1, d // 64, 64)
+    h = 1
+    while h < 64:
+        x = x.reshape(x.shape[0], x.shape[1], -1, 2, h)
+        a = x[..., 0, :]
+        b = x[..., 1, :]
+        x = jnp.concatenate([a + b, a - b], axis=-1)
+        h *= 2
+    x = x.reshape(shape)
+    return x / jnp.sqrt(64.0)

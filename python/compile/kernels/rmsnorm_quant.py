@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: fused RMSNorm + static per-channel quantize (Eq. 4).
+
+After quantization migration the RMSNorm multiplier holds γ_k / s_k, so
+normalising and quantizing is a *single* VMEM-resident pass: load an
+(bm, d) activation tile, compute the row RMS, multiply by the merged
+vector, round, clamp — the integer activations stream straight into the
+QSM matmul kernel. This is the CUDA "fused norm+quant" kernel rethought
+for TPU (DESIGN.md §8): d stays whole in the lane dimension (d ≤ 1024
+everywhere in the zoo, far under VMEM), the grid tiles only rows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 64
+
+
+def _rmsnorm_quant_kernel(x_ref, g_ref, o_ref, *, qmax, eps):
+    x = x_ref[...]
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    v = x / rms * g_ref[...][None, :]
+    o_ref[...] = jnp.clip(jnp.sign(v) * jnp.floor(jnp.abs(v) + 0.5),
+                          -qmax, qmax)
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "eps", "bm"))
+def rmsnorm_quant(x: jax.Array, g_merged: jax.Array, qmax: int = 7,
+                  eps: float = 1e-5, bm: int = DEFAULT_BM) -> jax.Array:
+    """x: (m, d) f32; g_merged: (d,) = γ/s. Returns int-valued f32 (m, d)."""
+    m, d = x.shape
+    bm_ = min(bm, m)
+    kern = functools.partial(_rmsnorm_quant_kernel, qmax=qmax, eps=eps)
+    return pl.pallas_call(
+        kern,
+        grid=(pl.cdiv(m, bm_),),
+        in_specs=[
+            pl.BlockSpec((bm_, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=True,
+    )(x, g_merged)
+
+
+def _rmsnorm_quant_recon_kernel(x_ref, g_ref, idx_ref, o_ref, *, qmax, eps):
+    x = x_ref[...]
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    v = x / rms * g_ref[...][None, :]
+    q = jnp.clip(jnp.sign(v) * jnp.floor(jnp.abs(v) + 0.5), -qmax, qmax)
+    o_ref[...] = jnp.take(q, idx_ref[...], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "eps", "bm"))
+def rmsnorm_quant_recon(x: jax.Array, g_merged: jax.Array, recon_idx: jax.Array,
+                        qmax: int = 7, eps: float = 1e-5,
+                        bm: int = DEFAULT_BM) -> jax.Array:
+    """Fused norm + quantize + dimension reconstruction (paper App. C.1).
+
+    ``recon_idx`` (d,) gathers the kept channels and duplicates the split
+    "strong parameter" channels — the only runtime cost MergeQuant adds,
+    and it fuses into the same VMEM pass as the norm.
+    """
+    m, d = x.shape
+    bm_ = min(bm, m)
+    kern = functools.partial(_rmsnorm_quant_recon_kernel, qmax=qmax, eps=eps)
+    return pl.pallas_call(
+        kern,
+        grid=(pl.cdiv(m, bm_),),
+        in_specs=[
+            pl.BlockSpec((bm_, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=True,
+    )(x, g_merged, recon_idx)

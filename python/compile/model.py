@@ -1,0 +1,266 @@
+"""L2: tiny Llama-architecture model in JAX.
+
+Implements the FP32 reference forward (training + evaluation), the
+single-token decode step with an explicit KV cache (exported to HLO for the
+Rust PJRT runtime), and evaluation helpers. The *quantized* forward lives
+in ``python/compile/qforward.py``.
+
+Architecture = Llama: RMSNorm, RoPE, MHA, SwiGLU FFN, untied LM head.
+One deliberate addition: a fixed per-channel ``outlier gain`` applied to
+the embedding output. Real Llama activations carry structured outliers in
+a handful of channels (paper Fig. 5/6); a ~1M-parameter model trained for a
+few hundred steps does not develop them reliably, so we bake the mechanism
+into the architecture — the model trains *with* the gain, and every
+residual-stream activation inherits the structured-outlier pattern the
+paper's method exists to handle. See DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 512
+    n_layers: int = 4
+    max_seq: int = 512
+    rope_theta: float = 10000.0
+    # channels that get an architectural gain (induced structured outliers)
+    outlier_channels: tuple[int, ...] = (7, 33, 71)
+    outlier_gain: float = 12.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, v, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        per_layer = 4 * d * d + 3 * d * f + 2 * d
+        return v * d + L * per_layer + d + d * v
+
+
+# The four models of DESIGN.md §5 (stand-ins for Llama-2 7B/13B/70B, Llama-3-8B).
+MODEL_ZOO: dict[str, ModelConfig] = {
+    "tiny-llama-s": ModelConfig("tiny-llama-s", d_model=128, n_heads=4,
+                                d_ff=512, n_layers=4, vocab=512),
+    "tiny-llama-m": ModelConfig("tiny-llama-m", d_model=192, n_heads=6,
+                                d_ff=512, n_layers=6, vocab=512,
+                                outlier_channels=(7, 33, 71, 150)),
+    "tiny-llama-l": ModelConfig("tiny-llama-l", d_model=256, n_heads=8,
+                                d_ff=1024, n_layers=8, vocab=512,
+                                outlier_channels=(7, 33, 71, 150, 201)),
+    "tiny-llama3": ModelConfig("tiny-llama3", d_model=192, n_heads=6,
+                               d_ff=512, n_layers=6, vocab=1024,
+                               outlier_channels=(7, 33, 71, 150),
+                               outlier_gain=18.0),
+}
+
+
+def outlier_gain_vector(cfg: ModelConfig) -> np.ndarray:
+    g = np.ones(cfg.d_model, dtype=np.float32)
+    for c in cfg.outlier_channels:
+        g[c % cfg.d_model] = cfg.outlier_gain
+    return g
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    """Scaled-normal init, Llama-style."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    keys = iter(jax.random.split(key, 4 + 8 * cfg.n_layers))
+
+    def dense(k, n, m):
+        return jax.random.normal(k, (n, m), jnp.float32) / np.sqrt(n)
+
+    params: Params = {
+        "embed": jax.random.normal(next(keys), (v, d), jnp.float32) * 0.02,
+        "outlier_gain": jnp.asarray(outlier_gain_vector(cfg)),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "lm_head": dense(next(keys), d, v),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append({
+            "attn_norm": jnp.ones((d,), jnp.float32),
+            "wq": dense(next(keys), d, d),
+            "wk": dense(next(keys), d, d),
+            "wv": dense(next(keys), d, d),
+            "wo": dense(next(keys), d, d),
+            "ffn_norm": jnp.ones((d,), jnp.float32),
+            "w_gate": dense(next(keys), d, f),
+            "w_up": dense(next(keys), d, f),
+            "w_down": dense(next(keys), f, d),
+        })
+    return params
+
+
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-5) -> jax.Array:
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x / rms * g
+
+
+def rope_angles(cfg: ModelConfig, positions: jax.Array):
+    """cos/sin tables for given positions: (T, head_dim/2)."""
+    hd = cfg.head_dim
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, T, H, head_dim); cos/sin: (T, head_dim/2)."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    out = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.reshape(x.shape)
+
+
+def attention(q, k, v, causal_from: int = 0):
+    """q: (B,Tq,H,hd), k/v: (B,Tk,H,hd). Causal mask offset by causal_from
+    (absolute position of q[0]) so decode steps attend to the full cache."""
+    _, Tq, _, hd = q.shape
+    Tk = k.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+    qpos = jnp.arange(Tq)[:, None] + causal_from
+    kpos = jnp.arange(Tk)[None, :]
+    mask = kpos <= qpos
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def block_forward(cfg: ModelConfig, layer: Params, x: jax.Array,
+                  cos: jax.Array, sin: jax.Array) -> jax.Array:
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    h = rmsnorm(x, layer["attn_norm"])
+    q = (h @ layer["wq"]).reshape(B, T, H, hd)
+    k = (h @ layer["wk"]).reshape(B, T, H, hd)
+    v = (h @ layer["wv"]).reshape(B, T, H, hd)
+    q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    attn = attention(q, k, v).reshape(B, T, d)
+    x = x + attn @ layer["wo"]
+    h = rmsnorm(x, layer["ffn_norm"])
+    ff = jax.nn.silu(h @ layer["w_gate"]) * (h @ layer["w_up"])
+    return x + ff @ layer["w_down"]
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    """FP32 reference forward: tokens (B,T) int32 -> logits (B,T,V)."""
+    x = params["embed"][tokens] * params["outlier_gain"]
+    cos, sin = rope_angles(cfg, jnp.arange(tokens.shape[1]))
+    for layer in params["layers"]:
+        x = block_forward(cfg, layer, x, cos, sin)
+    x = rmsnorm(x, params["final_norm"])
+    return x @ params["lm_head"]
+
+
+def loss_fn(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            targets: jax.Array) -> jax.Array:
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Decode step with explicit KV cache (exported to HLO for the PJRT runtime)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_heads, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def decode_step(cfg: ModelConfig, params: Params, token: jax.Array,
+                pos: jax.Array, kcache: jax.Array, vcache: jax.Array):
+    """One decode step.
+
+    token: (B,) int32; pos: scalar int32 (current position);
+    kcache/vcache: (L,B,maxT,H,hd). Returns (logits (B,V), kcache, vcache).
+    """
+    B = token.shape[0]
+    H, hd, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    maxT = kcache.shape[2]
+    x = params["embed"][token][:, None, :] * params["outlier_gain"]  # (B,1,d)
+    cos, sin = rope_angles(cfg, pos[None])
+    visible = (jnp.arange(maxT) <= pos)[None, None, None, :]  # (1,1,1,maxT)
+    new_k, new_v = kcache, vcache
+    for li, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["attn_norm"])
+        q = (h @ layer["wq"]).reshape(B, 1, H, hd)
+        k = (h @ layer["wk"]).reshape(B, 1, H, hd)
+        v = (h @ layer["wv"]).reshape(B, 1, H, hd)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        kc = jax.lax.dynamic_update_slice(new_k[li], k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(new_v[li], v, (0, pos, 0, 0))
+        new_k = new_k.at[li].set(kc)
+        new_v = new_v.at[li].set(vc)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kc) / np.sqrt(hd)
+        scores = jnp.where(visible, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", probs, vc).reshape(B, 1, d)
+        x = x + attn @ layer["wo"]
+        hn = rmsnorm(x, layer["ffn_norm"])
+        ff = jax.nn.silu(hn @ layer["w_gate"]) * (hn @ layer["w_up"])
+        x = x + ff @ layer["w_down"]
+    x = rmsnorm(x, params["final_norm"])
+    logits = (x @ params["lm_head"])[:, 0, :]
+    return logits, new_k, new_v
+
+
+# ---------------------------------------------------------------------------
+# Evaluation helpers (used by pytest, the pipeline and artifact goldens)
+# ---------------------------------------------------------------------------
+
+def perplexity(cfg: ModelConfig, params: Params, tokens: np.ndarray,
+               seq: int = 256, forward_fn=None) -> float:
+    """Non-overlapping windows, mean NLL exponentiated."""
+    fwd = forward_fn or jax.jit(lambda t: forward(cfg, params, t))
+    n = (len(tokens) - 1) // seq
+    total, count = 0.0, 0
+    for i in range(n):
+        x = jnp.asarray(tokens[i * seq:(i + 1) * seq][None])
+        y = tokens[i * seq + 1:(i + 1) * seq + 1]
+        logits = jnp.asarray(fwd(x))[0]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -np.asarray(logp)[np.arange(seq), y]
+        total += float(nll.sum())
+        count += seq
+    return float(np.exp(total / max(count, 1)))
+
+
+def choice_accuracy(cfg: ModelConfig, params: Params, items: list,
+                    forward_fn=None) -> float:
+    """Length-normalised log-likelihood scoring (lm-eval-harness rule).
+
+    ``items``: list of dicts {prefix, choices, answer} (see data.make_task).
+    """
+    fwd = forward_fn or jax.jit(lambda t: forward(cfg, params, t))
+    correct = 0
+    for it in items:
+        prefix, choices = it["prefix"], it["choices"]
+        scores = []
+        for ch in choices:
+            toks = np.asarray(prefix + ch, dtype=np.int32)
+            logits = jnp.asarray(fwd(jnp.asarray(toks[None])))[0]
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            span = np.arange(len(prefix) - 1, len(toks) - 1)
+            tgt = toks[span + 1]
+            ll = float(np.asarray(logp)[span, tgt].sum())
+            scores.append(ll / max(len(ch), 1))
+        if int(np.argmax(scores)) == it["answer"]:
+            correct += 1
+    return correct / max(len(items), 1)

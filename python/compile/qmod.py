@@ -1,0 +1,214 @@
+"""`.qmod` — the quantized-model bundle format (Python writer + reader).
+
+Layout (little-endian):
+
+    magic   b"QMOD1\\n"
+    u32     meta_len
+    bytes   meta (JSON, UTF-8)
+    bytes   tensor blobs, each 64-byte aligned, raw little-endian
+
+The JSON meta carries the model config, the method name, the full
+structural schema (norm specs, linear modes, scalars) and a tensor table
+``[{name, dtype, shape, offset, nbytes}]``. The Rust loader
+(rust/src/engine/qmod.rs) mirrors this exactly; tests on both sides parse
+the same fixture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .model import ModelConfig
+from .quant.quantizer import QWeight
+
+MAGIC = b"QMOD1\n"
+ALIGN = 64
+
+_DTYPES = {"f32": ("<f4", 4), "i8": ("<i1", 1), "i32": ("<i4", 4),
+           "i16": ("<i2", 2)}
+
+
+class _Writer:
+    def __init__(self):
+        self.tensors: list[dict] = []
+        self.blobs: list[bytes] = []
+        self.offset = 0
+
+    def add(self, name: str, arr: np.ndarray) -> str:
+        if arr.dtype == np.float32:
+            dt = "f32"
+        elif arr.dtype == np.int8:
+            dt = "i8"
+        elif arr.dtype == np.int16:
+            dt = "i16"
+        elif arr.dtype == np.int32:
+            dt = "i32"
+        else:
+            raise TypeError(f"{name}: {arr.dtype}")
+        raw = np.ascontiguousarray(arr).astype(_DTYPES[dt][0]).tobytes()
+        pad = (-self.offset) % ALIGN
+        if pad:
+            self.blobs.append(b"\0" * pad)
+            self.offset += pad
+        self.tensors.append({"name": name, "dtype": dt,
+                             "shape": list(arr.shape),
+                             "offset": self.offset, "nbytes": len(raw)})
+        self.blobs.append(raw)
+        self.offset += len(raw)
+        return name
+
+
+def _qweight_meta(w: _Writer, prefix: str, qw: QWeight) -> dict:
+    meta = {"bits": qw.bits, "group": qw.group, "sym": qw.zero is None,
+            "wq": w.add(f"{prefix}.wq", qw.wq.astype(np.int8)),
+            "scale": w.add(f"{prefix}.scale", qw.scale.astype(np.float32))}
+    if qw.zero is not None:
+        meta["zero"] = w.add(f"{prefix}.zero", qw.zero.astype(np.int16))
+    return meta
+
+
+def _linear_meta(w: _Writer, prefix: str, spec: dict) -> dict:
+    mode = spec["mode"]
+    meta: dict = {"mode": mode}
+    if mode == "fp":
+        meta["w"] = w.add(f"{prefix}.w", np.asarray(spec["w"], np.float32))
+        return meta
+    meta["qw"] = _qweight_meta(w, prefix, spec["qw"])
+    if mode == "tensor_static":
+        meta["a_scale"] = float(spec["a_scale"])
+        meta["a_qmax"] = int(spec["a_qmax"])
+    elif mode == "dynamic":
+        meta["a_qmax"] = int(spec["a_qmax"])
+        meta["a_clip"] = float(spec.get("a_clip", 1.0))
+        meta["hadamard"] = bool(spec.get("hadamard", False))
+    return meta
+
+
+def _norm_meta(w: _Writer, prefix: str, spec: dict) -> dict:
+    meta: dict = {"g": w.add(f"{prefix}.g", np.asarray(spec["g"], np.float32))}
+    q = spec.get("quant")
+    if q is not None:
+        meta["quant"] = {"qmax": int(q["qmax"])}
+        if q.get("recon_idx") is not None:
+            meta["quant"]["recon_idx"] = w.add(
+                f"{prefix}.recon_idx",
+                np.asarray(q["recon_idx"], np.int32))
+    return meta
+
+
+def save_qmod(path: Path, qm: dict) -> None:
+    cfg: ModelConfig = qm["config"]
+    w = _Writer()
+    layers_meta = []
+    for i, layer in enumerate(qm["layers"]):
+        p = f"layers.{i}"
+        layers_meta.append({
+            "attn_norm": _norm_meta(w, f"{p}.attn_norm", layer["attn_norm"]),
+            "q": _linear_meta(w, f"{p}.q", layer["q"]),
+            "k": _linear_meta(w, f"{p}.k", layer["k"]),
+            "v": _linear_meta(w, f"{p}.v", layer["v"]),
+            "o": _linear_meta(w, f"{p}.o", layer["o"]),
+            "ffn_norm": _norm_meta(w, f"{p}.ffn_norm", layer["ffn_norm"]),
+            "gate": _linear_meta(w, f"{p}.gate", layer["gate"]),
+            "up": _linear_meta(w, f"{p}.up", layer["up"]),
+            "down": _linear_meta(w, f"{p}.down", layer["down"]),
+        })
+    meta = {
+        "format": 1,
+        "method": qm["method"],
+        "config": {**dataclasses.asdict(cfg),
+                   "outlier_channels": list(cfg.outlier_channels)},
+        "embed": w.add("embed", np.asarray(qm["embed"], np.float32)),
+        "outlier_gain": w.add("outlier_gain",
+                              np.asarray(qm["outlier_gain"], np.float32)),
+        "final_norm": w.add("final_norm",
+                            np.asarray(qm["final_norm"], np.float32)),
+        "lm_head": w.add("lm_head", np.asarray(qm["lm_head"], np.float32)),
+        "layers": layers_meta,
+        "tensors": w.tensors,
+    }
+    meta_bytes = json.dumps(meta).encode()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(len(meta_bytes).to_bytes(4, "little"))
+        f.write(meta_bytes)
+        base = f.tell()
+        pad = (-base) % ALIGN
+        f.write(b"\0" * pad)
+        for blob in w.blobs:
+            f.write(blob)
+
+
+def load_qmod(path: Path) -> dict:
+    """Read a .qmod back into the qforward QuantModel structure (tests)."""
+    raw = Path(path).read_bytes()
+    assert raw[:len(MAGIC)] == MAGIC, "bad magic"
+    mlen = int.from_bytes(raw[len(MAGIC):len(MAGIC) + 4], "little")
+    meta = json.loads(raw[len(MAGIC) + 4:len(MAGIC) + 4 + mlen])
+    base = len(MAGIC) + 4 + mlen
+    base += (-base) % ALIGN
+    table = {t["name"]: t for t in meta["tensors"]}
+
+    def tensor(name: str) -> np.ndarray:
+        t = table[name]
+        dt, _ = _DTYPES[t["dtype"]]
+        start = base + t["offset"]
+        arr = np.frombuffer(raw, dtype=dt, count=int(np.prod(t["shape"])) if t["shape"] else 1,
+                            offset=start)
+        return arr.reshape(t["shape"]).copy()
+
+    def qweight(m: dict) -> QWeight:
+        return QWeight(wq=tensor(m["wq"]).astype(np.int8),
+                       scale=tensor(m["scale"]),
+                       zero=tensor(m["zero"]) if "zero" in m else None,
+                       group=m["group"], bits=m["bits"])
+
+    def linear(m: dict) -> dict:
+        if m["mode"] == "fp":
+            return {"mode": "fp", "w": tensor(m["w"])}
+        spec = {"mode": m["mode"], "qw": qweight(m["qw"])}
+        if m["mode"] == "tensor_static":
+            spec["a_scale"] = m["a_scale"]
+            spec["a_qmax"] = m["a_qmax"]
+        elif m["mode"] == "dynamic":
+            spec["a_qmax"] = m["a_qmax"]
+            spec["a_clip"] = m["a_clip"]
+            spec["hadamard"] = m["hadamard"]
+        return spec
+
+    def norm(m: dict) -> dict:
+        spec = {"g": tensor(m["g"]), "quant": None}
+        if "quant" in m:
+            q = {"qmax": m["quant"]["qmax"], "recon_idx": None}
+            if "recon_idx" in m["quant"]:
+                q["recon_idx"] = tensor(m["quant"]["recon_idx"])
+            spec["quant"] = q
+        return spec
+
+    ccfg = dict(meta["config"])
+    ccfg["outlier_channels"] = tuple(ccfg["outlier_channels"])
+    cfg = ModelConfig(**ccfg)
+    return {
+        "config": cfg,
+        "method": meta["method"],
+        "embed": tensor("embed"),
+        "outlier_gain": tensor("outlier_gain"),
+        "final_norm": tensor("final_norm"),
+        "lm_head": tensor("lm_head"),
+        "layers": [
+            {
+                "attn_norm": norm(lm["attn_norm"]),
+                "q": linear(lm["q"]), "k": linear(lm["k"]),
+                "v": linear(lm["v"]), "o": linear(lm["o"]),
+                "ffn_norm": norm(lm["ffn_norm"]),
+                "gate": linear(lm["gate"]), "up": linear(lm["up"]),
+                "down": linear(lm["down"]),
+            }
+            for lm in meta["layers"]
+        ],
+    }

@@ -1,0 +1,7 @@
+"""MergeQuant quantization pipeline (build-time).
+
+Submodules: quantizer (primitives), calibration, reconstruct (dimension
+reconstruction), clipping, gptq, lora (compensation), hadamard (rotations),
+baselines, pipeline (MergeQuant + method registry), qforward (quantized
+forward / QuantModel schema).
+"""

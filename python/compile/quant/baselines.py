@@ -1,0 +1,379 @@
+"""Baseline quantization methods (paper §5 "Baselines").
+
+Every method returns a QuantModel (see qforward.py). All are W4A4 by
+default and share the weight quantizers (GPTQ / RTN) and the engine's
+four linear modes. The *-lite* suffixed methods are faithful-at-our-scale
+reductions of the originals (DESIGN.md §2):
+
+* ``rtn``           — per-token dynamic activations, RTN weights.
+* ``smoothquant``   — per-channel smoothing folded into norms/weights,
+                      then **per-tensor static** activations (the paper's
+                      only static baseline, Table 1).
+* ``omniquant``-lite— grid-searched equivalent smoothing (the learnable
+                      transform) + weight clip search, per-token dynamic.
+* ``qllm``-lite     — outlier channel rebalancing (channel disassembly's
+                      equalising effect folded diagonally), dynamic.
+* ``quarot``        — residual-stream randomized Hadamard rotation, GPTQ,
+                      per-token dynamic; ``±`` online block-Hadamard on
+                      the down-projection input.
+* ``spinquant``     — same, but the rotation is *selected* (proxy for
+                      learned): best of K candidates on calibration loss.
+* ``quarot_static`` — QuaRot rotation + per-tensor static activations
+                      (Table 4 row 1; also Fig. 1 "per-tensor + rotation").
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .. import model as M
+from . import calibration as C
+from . import hadamard as H
+from .gptq import gptq_quantize
+from .quantizer import qmax_for_bits, quantize_weight
+from .qforward import QuantModel
+
+
+def _np_params(params) -> dict:
+    """Copy params to mutable numpy."""
+    return {
+        "embed": np.asarray(params["embed"], np.float32).copy(),
+        "outlier_gain": np.asarray(params["outlier_gain"], np.float32).copy(),
+        "final_norm": np.asarray(params["final_norm"], np.float32).copy(),
+        "lm_head": np.asarray(params["lm_head"], np.float32).copy(),
+        "layers": [
+            {k: np.asarray(v, np.float32).copy() for k, v in l.items()}
+            for l in params["layers"]
+        ],
+    }
+
+
+def fold_norms(params: dict) -> dict:
+    """Fold norm γ into the following linears and the outlier gain into the
+    embedding, leaving every norm all-ones (rotation precondition)."""
+    p = _np_params(params)
+    p["embed"] = p["embed"] * p["outlier_gain"][None, :]
+    p["outlier_gain"] = np.ones_like(p["outlier_gain"])
+    for l in p["layers"]:
+        g = l["attn_norm"]
+        for w in ("wq", "wk", "wv"):
+            l[w] = g[:, None] * l[w]
+        l["attn_norm"] = np.ones_like(g)
+        g = l["ffn_norm"]
+        for w in ("w_gate", "w_up"):
+            l[w] = g[:, None] * l[w]
+        l["ffn_norm"] = np.ones_like(g)
+    g = p["final_norm"]
+    p["lm_head"] = g[:, None] * p["lm_head"]
+    p["final_norm"] = np.ones_like(g)
+    return p
+
+
+_CTX_MEMO: dict = {}
+
+
+def _gptq_ctx(x_samples: np.ndarray):
+    """Memoize Hessian factorizations across the q/k/v (gate/up) fan-outs
+    that share one calibration input array."""
+    from .gptq import GptqContext
+    key = (id(x_samples), x_samples.shape)
+    if key not in _CTX_MEMO:
+        if len(_CTX_MEMO) > 32:
+            _CTX_MEMO.clear()
+        _CTX_MEMO[key] = GptqContext(x_samples)
+    return _CTX_MEMO[key]
+
+
+def _quantize_w(w: np.ndarray, x_samples: np.ndarray | None, *, w_bits: int,
+                use_gptq: bool, sym: bool = True, group: int = 0):
+    if use_gptq and x_samples is not None:
+        return gptq_quantize(w, x_samples, bits=w_bits, sym=sym, group=group,
+                             ctx=_gptq_ctx(x_samples))
+    return quantize_weight(w, bits=w_bits, sym=sym, group=group)
+
+
+def _dyn_spec(w, x_samples, *, w_bits, a_bits, use_gptq, hadamard=False,
+              a_clip=1.0, sym=True, group=0):
+    if hadamard:
+        w = H.fold_online_hadamard_into_weight(w)
+        if x_samples is not None:
+            x_samples = H.fwht_block64(x_samples)
+    return {
+        "mode": "dynamic",
+        "qw": _quantize_w(w, x_samples, w_bits=w_bits, use_gptq=use_gptq,
+                          sym=sym, group=group),
+        "a_qmax": qmax_for_bits(a_bits),
+        "a_clip": float(a_clip),
+        "hadamard": bool(hadamard),
+    }
+
+
+def _tensor_static_spec(w, x_samples, a_absmax, *, w_bits, a_bits, use_gptq):
+    return {
+        "mode": "tensor_static",
+        "qw": _quantize_w(w, x_samples, w_bits=w_bits, use_gptq=use_gptq),
+        "a_scale": float(max(a_absmax, 1e-8) / qmax_for_bits(a_bits)),
+        "a_qmax": qmax_for_bits(a_bits),
+    }
+
+
+def _assemble(cfg, p, layer_specs, method) -> QuantModel:
+    return {
+        "config": cfg,
+        "method": method,
+        "embed": p["embed"],
+        "outlier_gain": p["outlier_gain"],
+        "final_norm": p["final_norm"],
+        "lm_head": p["lm_head"],
+        "layers": layer_specs,
+    }
+
+
+def _build_token_or_tensor(cfg: M.ModelConfig, p: dict, calib: C.Calibration,
+                           *, method: str, activation: str, w_bits: int,
+                           a_bits: int, use_gptq: bool,
+                           online_hadamard: bool) -> QuantModel:
+    """Shared builder: every linear quantized, activations per-token dynamic
+    or per-tensor static; norms untouched."""
+    layers = []
+    for l, lc in zip(p["layers"], calib.layers):
+        def spec(w, stats, hadamard=False):
+            if activation == "dynamic":
+                return _dyn_spec(w, stats.samples, w_bits=w_bits,
+                                 a_bits=a_bits, use_gptq=use_gptq,
+                                 hadamard=hadamard)
+            return _tensor_static_spec(w, stats.samples,
+                                       float(stats.absmax.max()),
+                                       w_bits=w_bits, a_bits=a_bits,
+                                       use_gptq=use_gptq)
+
+        layers.append({
+            "attn_norm": {"g": l["attn_norm"], "quant": None},
+            "q": spec(l["wq"], lc.attn_norm_out),
+            "k": spec(l["wk"], lc.attn_norm_out),
+            "v": spec(l["wv"], lc.attn_norm_out),
+            "o": spec(l["wo"], lc.o_in),
+            "ffn_norm": {"g": l["ffn_norm"], "quant": None},
+            "gate": spec(l["w_gate"], lc.ffn_norm_out),
+            "up": spec(l["w_up"], lc.ffn_norm_out),
+            "down": spec(l["w_down"], lc.down_in,
+                         hadamard=online_hadamard and activation == "dynamic"),
+        })
+    return _assemble(cfg, p, layers, method)
+
+
+def rtn(cfg: M.ModelConfig, params, calib: C.Calibration, *, w_bits=4,
+        a_bits=4) -> QuantModel:
+    p = _np_params(params)
+    return _build_token_or_tensor(cfg, p, calib, method="rtn",
+                                  activation="dynamic", w_bits=w_bits,
+                                  a_bits=a_bits, use_gptq=False,
+                                  online_hadamard=False)
+
+
+def smoothquant(cfg: M.ModelConfig, params, calib: C.Calibration, *,
+                w_bits=4, a_bits=4, alpha=0.5, use_gptq=True) -> QuantModel:
+    """Per-channel smoothing + per-tensor static activations."""
+    p = _np_params(params)
+    layers = []
+    for l, lc in zip(p["layers"], calib.layers):
+        def smoothed(stats, ws: list[np.ndarray]):
+            a_max = np.maximum(stats.absmax, 1e-5)
+            w_max = np.maximum(
+                np.max(np.abs(np.concatenate(ws, axis=1)), axis=1), 1e-5)
+            sm = np.maximum(a_max**alpha / w_max**(1 - alpha), 1e-5)
+            return sm, stats.samples / sm, a_max / sm
+
+        sm_a, xs_a, amax_a = smoothed(lc.attn_norm_out,
+                                      [l["wq"], l["wk"], l["wv"]])
+        sm_f, xs_f, amax_f = smoothed(lc.ffn_norm_out,
+                                      [l["w_gate"], l["w_up"]])
+
+        def ts(w, xs, amax):
+            return _tensor_static_spec(w, xs, float(amax.max()),
+                                       w_bits=w_bits, a_bits=a_bits,
+                                       use_gptq=use_gptq)
+
+        layers.append({
+            "attn_norm": {"g": l["attn_norm"] / sm_a, "quant": None},
+            "q": ts(sm_a[:, None] * l["wq"], xs_a, amax_a),
+            "k": ts(sm_a[:, None] * l["wk"], xs_a, amax_a),
+            "v": ts(sm_a[:, None] * l["wv"], xs_a, amax_a),
+            "o": _tensor_static_spec(l["wo"], lc.o_in.samples,
+                                     float(lc.o_in.absmax.max()),
+                                     w_bits=w_bits, a_bits=a_bits,
+                                     use_gptq=use_gptq),
+            "ffn_norm": {"g": l["ffn_norm"] / sm_f, "quant": None},
+            "gate": ts(sm_f[:, None] * l["w_gate"], xs_f, amax_f),
+            "up": ts(sm_f[:, None] * l["w_up"], xs_f, amax_f),
+            "down": _tensor_static_spec(l["w_down"], lc.down_in.samples,
+                                        float(lc.down_in.absmax.max()),
+                                        w_bits=w_bits, a_bits=a_bits,
+                                        use_gptq=use_gptq),
+        })
+    return _assemble(cfg, p, layers, "smoothquant")
+
+
+def omniquant_lite(cfg: M.ModelConfig, params, calib: C.Calibration, *,
+                   w_bits=4, a_bits=4) -> QuantModel:
+    """Grid-searched equivalent smoothing per layer + per-token dynamic."""
+    p = _np_params(params)
+    qa = qmax_for_bits(a_bits)
+    layers = []
+    for l, lc in zip(p["layers"], calib.layers):
+        def best_alpha(stats, ws):
+            wcat = np.concatenate(ws, axis=1)
+            best, best_sm = np.inf, np.ones(stats.absmax.shape, np.float32)
+            for alpha in (0.3, 0.45, 0.6, 0.75, 0.9):
+                a_max = np.maximum(stats.absmax, 1e-5)
+                w_max = np.maximum(np.max(np.abs(wcat), axis=1), 1e-5)
+                sm = np.maximum(a_max**alpha / w_max**(1 - alpha), 1e-5)
+                xs = stats.samples / sm
+                s = np.maximum(np.max(np.abs(xs), axis=-1, keepdims=True) / qa,
+                               1e-8)
+                xq = np.clip(np.round(xs / s), -qa, qa) * s
+                wsm = sm[:, None] * wcat
+                wq = quantize_weight(wsm, bits=w_bits).dequant()
+                err = float(np.sum((xq @ wq - stats.samples @ wcat) ** 2))
+                if err < best:
+                    best, best_sm = err, sm
+            return best_sm
+
+        sm_a = best_alpha(lc.attn_norm_out, [l["wq"], l["wk"], l["wv"]])
+        sm_f = best_alpha(lc.ffn_norm_out, [l["w_gate"], l["w_up"]])
+
+        def dyn(w, stats, sm=None):
+            if sm is not None:
+                w = sm[:, None] * w
+                xs = stats.samples / sm
+            else:
+                xs = stats.samples
+            return _dyn_spec(w, xs, w_bits=w_bits, a_bits=a_bits,
+                             use_gptq=True)
+
+        layers.append({
+            "attn_norm": {"g": l["attn_norm"] / sm_a, "quant": None},
+            "q": dyn(l["wq"], lc.attn_norm_out, sm_a),
+            "k": dyn(l["wk"], lc.attn_norm_out, sm_a),
+            "v": dyn(l["wv"], lc.attn_norm_out, sm_a),
+            "o": dyn(l["wo"], lc.o_in),
+            "ffn_norm": {"g": l["ffn_norm"] / sm_f, "quant": None},
+            "gate": dyn(l["w_gate"], lc.ffn_norm_out, sm_f),
+            "up": dyn(l["w_up"], lc.ffn_norm_out, sm_f),
+            "down": dyn(l["w_down"], lc.down_in),
+        })
+    return _assemble(cfg, p, layers, "omniquant")
+
+
+def qllm_lite(cfg: M.ModelConfig, params, calib: C.Calibration, *,
+              w_bits=4, a_bits=4, theta_alpha=3.0) -> QuantModel:
+    """Outlier-channel equalisation (channel-disassembly effect), dynamic."""
+    p = _np_params(params)
+    layers = []
+    for l, lc in zip(p["layers"], calib.layers):
+        def equalise(stats):
+            am = stats.absmax
+            t = float(np.mean(am) + theta_alpha * np.std(am))
+            sm = np.maximum(am / t, 1.0).astype(np.float32)  # divide outliers
+            return sm
+
+        sm_a, sm_f = equalise(lc.attn_norm_out), equalise(lc.ffn_norm_out)
+
+        def dyn(w, stats, sm=None):
+            if sm is not None:
+                w = sm[:, None] * w
+                xs = stats.samples / sm
+            else:
+                xs = stats.samples
+            return _dyn_spec(w, xs, w_bits=w_bits, a_bits=a_bits,
+                             use_gptq=True)
+
+        layers.append({
+            "attn_norm": {"g": l["attn_norm"] / sm_a, "quant": None},
+            "q": dyn(l["wq"], lc.attn_norm_out, sm_a),
+            "k": dyn(l["wk"], lc.attn_norm_out, sm_a),
+            "v": dyn(l["wv"], lc.attn_norm_out, sm_a),
+            "o": dyn(l["wo"], lc.o_in),
+            "ffn_norm": {"g": l["ffn_norm"] / sm_f, "quant": None},
+            "gate": dyn(l["w_gate"], lc.ffn_norm_out, sm_f),
+            "up": dyn(l["w_up"], lc.ffn_norm_out, sm_f),
+            "down": dyn(l["w_down"], lc.down_in),
+        })
+    return _assemble(cfg, p, layers, "qllm")
+
+
+def _rotated_model(cfg: M.ModelConfig, params, batches, rotation: np.ndarray):
+    """Fold norms + rotation, then recalibrate on the rotated FP model."""
+    folded = fold_norms(params)
+    rot = H.fold_residual_rotation(folded, rotation)
+    calib = C.calibrate(cfg, rot, batches)
+    return rot, calib
+
+
+def quarot(cfg: M.ModelConfig, params, batches: list[np.ndarray], *,
+           w_bits=4, a_bits=4, online_hadamard=True, seed=0,
+           activation="dynamic", sym=True, group=0,
+           method_name=None) -> QuantModel:
+    rot_m = H.random_hadamard_like(cfg.d_model, seed)
+    p, calib = _rotated_model(cfg, params, batches, rot_m)
+    name = method_name or ("quarot" if online_hadamard else "quarot_nh")
+    if activation == "tensor_static":
+        name = method_name or "quarot_static"
+        return _build_token_or_tensor(cfg, p, calib, method=name,
+                                      activation="tensor_static",
+                                      w_bits=w_bits, a_bits=a_bits,
+                                      use_gptq=True, online_hadamard=False)
+    if sym and group == 0:
+        return _build_token_or_tensor(cfg, p, calib, method=name,
+                                      activation="dynamic", w_bits=w_bits,
+                                      a_bits=a_bits, use_gptq=True,
+                                      online_hadamard=online_hadamard)
+    # Table 5 variants: asym / grouped weights.
+    layers = []
+    for l, lc in zip(p["layers"], calib.layers):
+        def dyn(w, stats, hadamard=False):
+            return _dyn_spec(w, stats.samples, w_bits=w_bits, a_bits=a_bits,
+                             use_gptq=True, hadamard=hadamard, sym=sym,
+                             group=group)
+        layers.append({
+            "attn_norm": {"g": l["attn_norm"], "quant": None},
+            "q": dyn(l["wq"], lc.attn_norm_out),
+            "k": dyn(l["wk"], lc.attn_norm_out),
+            "v": dyn(l["wv"], lc.attn_norm_out),
+            "o": dyn(l["wo"], lc.o_in),
+            "ffn_norm": {"g": l["ffn_norm"], "quant": None},
+            "gate": dyn(l["w_gate"], lc.ffn_norm_out),
+            "up": dyn(l["w_up"], lc.ffn_norm_out),
+            "down": dyn(l["w_down"], lc.down_in, hadamard=online_hadamard),
+        })
+    return _assemble(cfg, p, layers, name)
+
+
+def _rotation_proxy_loss(cfg, params, batches, rotation, a_bits=4) -> float:
+    """Cheap calibration loss for rotation selection (SpinQuant proxy)."""
+    p, calib = _rotated_model(cfg, params, batches, rotation)
+    qa = qmax_for_bits(a_bits)
+    loss = 0.0
+    for lc in calib.layers:
+        for stats in (lc.attn_norm_out, lc.ffn_norm_out, lc.o_in, lc.down_in):
+            xs = stats.samples
+            s = np.maximum(np.max(np.abs(xs), axis=-1, keepdims=True) / qa, 1e-8)
+            xq = np.clip(np.round(xs / s), -qa, qa) * s
+            loss += float(np.sum((xq - xs) ** 2))
+    return loss
+
+
+def spinquant(cfg: M.ModelConfig, params, batches: list[np.ndarray], *,
+              w_bits=4, a_bits=4, online_hadamard=True,
+              n_candidates=6) -> QuantModel:
+    """'Learned' rotation via candidate selection on calibration loss."""
+    best_seed, best = 0, np.inf
+    for seed in range(n_candidates):
+        rot = H.random_hadamard_like(cfg.d_model, seed)
+        l = _rotation_proxy_loss(cfg, params, batches, rot, a_bits)
+        if l < best:
+            best, best_seed = l, seed
+    name = "spinquant" if online_hadamard else "spinquant_nh"
+    return quarot(cfg, params, batches, w_bits=w_bits, a_bits=a_bits,
+                  online_hadamard=online_hadamard, seed=best_seed,
+                  method_name=name)

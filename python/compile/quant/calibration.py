@@ -1,0 +1,146 @@
+"""Offline channel-wise calibration (paper §4.1, Appendix B).
+
+Runs the FP32 model over a small calibration set (mixed synth-wiki +
+synth-c4, like the paper's WikiText-2 + C4 mix) and collects, per layer:
+
+* the RMSNorm *outputs* feeding qkv / gate+up — per-channel absmax and
+  second moment (the Hessian diagonal of the following linear, ``Σ x_k²``,
+  used by dimension reconstruction's importance ranking);
+* the inputs of the out- and down-projections (per-token layers);
+* raw samples of each, subsampled, for clipping search / GPTQ Hessians.
+
+Everything is numpy; calibration is build-time only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import model as M
+
+
+@dataclasses.dataclass
+class TensorStats:
+    """Streaming per-channel statistics + a bounded sample reservoir."""
+
+    absmax: np.ndarray  # (d,)
+    sqsum: np.ndarray  # (d,)  Σ x²  (Hessian diagonal)
+    count: int
+    samples: np.ndarray  # (S, d) subsampled rows
+
+    @staticmethod
+    def collect(rows: np.ndarray, max_samples: int = 2048) -> "TensorStats":
+        rows = rows.reshape(-1, rows.shape[-1]).astype(np.float32)
+        take = min(len(rows), max_samples)
+        idx = np.linspace(0, len(rows) - 1, take).astype(int)
+        return TensorStats(
+            absmax=np.max(np.abs(rows), axis=0),
+            sqsum=np.sum(rows * rows, axis=0),
+            count=len(rows),
+            samples=rows[idx],
+        )
+
+    def merge(self, other: "TensorStats") -> "TensorStats":
+        samples = np.concatenate([self.samples, other.samples])
+        if len(samples) > 4096:
+            idx = np.linspace(0, len(samples) - 1, 4096).astype(int)
+            samples = samples[idx]
+        return TensorStats(
+            absmax=np.maximum(self.absmax, other.absmax),
+            sqsum=self.sqsum + other.sqsum,
+            count=self.count + other.count,
+            samples=samples,
+        )
+
+
+@dataclasses.dataclass
+class LayerCalib:
+    attn_norm_out: TensorStats  # input to q/k/v (post-γ RMSNorm output)
+    ffn_norm_out: TensorStats  # input to gate/up
+    o_in: TensorStats  # input to out-projection
+    down_in: TensorStats  # input to down-projection
+
+
+@dataclasses.dataclass
+class Calibration:
+    layers: list[LayerCalib]
+    final_norm_in: TensorStats
+
+
+def forward_with_capture(cfg: M.ModelConfig, params, tokens: jax.Array):
+    """FP32 forward that also returns the activations calibration needs."""
+    captures = []
+    x = params["embed"][tokens] * params["outlier_gain"]
+    cos, sin = M.rope_angles(cfg, jnp.arange(tokens.shape[1]))
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    for layer in params["layers"]:
+        cap = {}
+        h = M.rmsnorm(x, layer["attn_norm"])
+        cap["attn_norm_out"] = h
+        q = (h @ layer["wq"]).reshape(B, T, H, hd)
+        k = (h @ layer["wk"]).reshape(B, T, H, hd)
+        v = (h @ layer["wv"]).reshape(B, T, H, hd)
+        q, k = M.apply_rope(q, cos, sin), M.apply_rope(k, cos, sin)
+        attn = M.attention(q, k, v).reshape(B, T, d)
+        cap["o_in"] = attn
+        x = x + attn @ layer["wo"]
+        h = M.rmsnorm(x, layer["ffn_norm"])
+        cap["ffn_norm_out"] = h
+        ff = jax.nn.silu(h @ layer["w_gate"]) * (h @ layer["w_up"])
+        cap["down_in"] = ff
+        x = x + ff @ layer["w_down"]
+        captures.append(cap)
+    final_in = x
+    x = M.rmsnorm(x, params["final_norm"])
+    logits = x @ params["lm_head"]
+    return logits, captures, final_in
+
+
+def calibrate(cfg: M.ModelConfig, params, batches: list[np.ndarray],
+              max_samples: int = 2048) -> Calibration:
+    """batches: list of (B, T) int32 token arrays."""
+    params = jax.tree.map(jnp.asarray, params)
+    fwd = jax.jit(lambda t: forward_with_capture(cfg, params, t))
+    acc: list[LayerCalib] | None = None
+    final_stats: TensorStats | None = None
+    for toks in batches:
+        _, captures, final_in = fwd(jnp.asarray(toks))
+        layer_stats = [
+            LayerCalib(
+                attn_norm_out=TensorStats.collect(np.asarray(c["attn_norm_out"]), max_samples),
+                ffn_norm_out=TensorStats.collect(np.asarray(c["ffn_norm_out"]), max_samples),
+                o_in=TensorStats.collect(np.asarray(c["o_in"]), max_samples),
+                down_in=TensorStats.collect(np.asarray(c["down_in"]), max_samples),
+            )
+            for c in captures
+        ]
+        fstats = TensorStats.collect(np.asarray(final_in), max_samples)
+        if acc is None:
+            acc, final_stats = layer_stats, fstats
+        else:
+            acc = [
+                LayerCalib(
+                    attn_norm_out=a.attn_norm_out.merge(b.attn_norm_out),
+                    ffn_norm_out=a.ffn_norm_out.merge(b.ffn_norm_out),
+                    o_in=a.o_in.merge(b.o_in),
+                    down_in=a.down_in.merge(b.down_in),
+                )
+                for a, b in zip(acc, layer_stats)
+            ]
+            final_stats = final_stats.merge(fstats)
+    assert acc is not None
+    return Calibration(layers=acc, final_norm_in=final_stats)
+
+
+def channel_absmax_report(calib: Calibration) -> dict:
+    """Per-layer channel absmax vectors (Figures 5/6 data)."""
+    return {
+        f"layer{i}.{name}": getattr(lc, name).absmax.tolist()
+        for i, lc in enumerate(calib.layers)
+        for name in ("attn_norm_out", "ffn_norm_out", "o_in", "down_in")
+    }

@@ -1,0 +1,107 @@
+"""Adaptive clipping (paper §4.2, Eq. 7; ablated in Table 7 / Fig. 7).
+
+Two regimes:
+
+* **Per-channel adaptive clipping** for the statically quantized layers
+  (qkv / gate / up inputs). For each channel k we pick the clip ratio r
+  minimizing   L_k(r) = ‖X̂_k(r) − X_k‖² + ‖Ŵ^X_k(r) − W^X_k‖²
+  — activation round-off under the clipped scale plus the quantization
+  error of the *folded* weight row s_k(r)·W_k (the dequant-migration
+  side-effect the clipping is balancing).
+* **Uniform per-token clipping** for the dynamic layers (out / down
+  inputs): one ratio per layer minimizing the layer *output* MSE on the
+  calibration sample, searched on a grid.
+
+``channel_clipping`` (the Table 7 middle row) is the naive variant that
+only minimizes the activation term.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .quantizer import qmax_for_bits, quantize_weight, round_half_away
+
+CLIP_GRID = np.linspace(0.5, 1.0, 11)
+
+
+def _act_error(col: np.ndarray, scale: float, qmax: int) -> float:
+    xq = np.clip(round_half_away(col / scale), -qmax, qmax)
+    d = xq * scale - col
+    return float(np.sum(d * d))
+
+
+def _weight_row_error(row_folded: np.ndarray, qmax: int) -> float:
+    """Per-row quantization proxy for the folded-weight term of Eq. (7).
+
+    Per-column scales couple all channels; a per-row absmax proxy keeps the
+    search per-channel separable while preserving the effect that matters:
+    larger folded rows quantize worse.
+    """
+    s = max(np.max(np.abs(row_folded)) / qmax, 1e-8)
+    wq = np.clip(round_half_away(row_folded / s), -qmax, qmax)
+    d = wq * s - row_folded
+    return float(np.sum(d * d))
+
+
+def adaptive_channel_clip(samples: np.ndarray, absmax: np.ndarray,
+                          w_rows: np.ndarray, a_bits: int = 4,
+                          w_bits: int = 4) -> np.ndarray:
+    """Per-channel clip ratios for a statically quantized input.
+
+    samples: (S, d) calibration activations (post-norm); absmax: (d,);
+    w_rows: (d, j) the concatenated weight the activation feeds (e.g.
+    [wq|wk|wv]). Returns ratios (d,).
+    """
+    qa, qw = qmax_for_bits(a_bits), qmax_for_bits(w_bits)
+    d = samples.shape[1]
+    ratios = np.ones(d, dtype=np.float32)
+    for k in range(d):
+        col = samples[:, k]
+        base = max(absmax[k], 1e-8)
+        best, best_r = np.inf, 1.0
+        for r in CLIP_GRID:
+            scale = base * r / qa
+            loss = _act_error(col, scale, qa)
+            loss += _weight_row_error(scale * qa * w_rows[k], qw)
+            if loss < best:
+                best, best_r = loss, r
+        ratios[k] = best_r
+    return ratios
+
+
+def channel_clip_act_only(samples: np.ndarray, absmax: np.ndarray,
+                          a_bits: int = 4) -> np.ndarray:
+    """Naive per-channel clipping: activation MSE only (Table 7 row 2)."""
+    qa = qmax_for_bits(a_bits)
+    d = samples.shape[1]
+    ratios = np.ones(d, dtype=np.float32)
+    for k in range(d):
+        col = samples[:, k]
+        base = max(absmax[k], 1e-8)
+        errs = [_act_error(col, base * r / qa, qa) for r in CLIP_GRID]
+        ratios[k] = CLIP_GRID[int(np.argmin(errs))]
+    return ratios
+
+
+def uniform_token_clip(samples: np.ndarray, w: np.ndarray, a_bits: int = 4,
+                       w_bits: int = 4) -> float:
+    """Uniform clip ratio for a per-token dynamic layer (out / down).
+
+    Minimizes ‖Q(X;r) @ Ŵ − X @ W‖² over the grid, with Ŵ the RTN-int4
+    weight — i.e. the difference between the layer output before and after
+    quantization (paper §4.2 last paragraph).
+    """
+    qa = qmax_for_bits(a_bits)
+    ref = samples @ w
+    wdq = quantize_weight(w, bits=w_bits).dequant()
+    best, best_r = np.inf, 1.0
+    for r in CLIP_GRID:
+        s = np.maximum(np.max(np.abs(samples), axis=-1, keepdims=True) * r / qa,
+                       1e-8)
+        xq = np.clip(round_half_away(samples / s), -qa, qa)
+        out = (xq * s) @ wdq
+        err = float(np.sum((out - ref) ** 2))
+        if err < best:
+            best, best_r = err, float(r)
+    return best_r

@@ -1,0 +1,110 @@
+"""GPTQ weight quantization (Frantar et al. 2022) — the paper's standard
+per-channel weight quantizer (§5 "Quantization settings").
+
+Standard formulation: quantize W (n, j) row by row along the input
+dimension with error feedback, using the Cholesky factor of the damped
+inverse Hessian H = X^T X from calibration inputs. Supports symmetric /
+asymmetric and grouped scales so Table 5's W3 variants reuse it.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .quantizer import QWeight, qmax_for_bits, round_half_away
+
+
+def _solve_hinv_chol(h: np.ndarray, damp_frac: float = 0.01) -> np.ndarray:
+    """Upper Cholesky factor of H^{-1} with GPTQ's percdamp damping."""
+    n = h.shape[0]
+    damp = damp_frac * float(np.mean(np.diag(h))) + 1e-8
+    h = h + damp * np.eye(n, dtype=h.dtype)
+    hinv = np.linalg.inv(h)
+    # Symmetrize for numerical safety before Cholesky.
+    hinv = (hinv + hinv.T) / 2
+    try:
+        return np.linalg.cholesky(hinv).T
+    except np.linalg.LinAlgError:
+        # Escalate damping until SPD.
+        for mult in (10.0, 100.0, 1000.0):
+            h2 = h + mult * damp * np.eye(n, dtype=h.dtype)
+            hinv = np.linalg.inv(h2)
+            hinv = (hinv + hinv.T) / 2
+            try:
+                return np.linalg.cholesky(hinv).T
+            except np.linalg.LinAlgError:
+                continue
+        raise
+
+
+def _scales_for(w: np.ndarray, bits: int, sym: bool, group: int):
+    """Pre-compute (scale, zero) per (group, column) exactly like RTN."""
+    n, j = w.shape
+    g = group or n
+    wg = w.reshape(n // g, g, j)
+    if sym:
+        qm = qmax_for_bits(bits)
+        scale = np.maximum(np.max(np.abs(wg), axis=1) / qm, 1e-8)
+        zero = np.zeros_like(scale)
+        lo, hi = -qm, qm
+    else:
+        lo_v = np.minimum(wg.min(axis=1), 0.0)
+        hi_v = np.maximum(wg.max(axis=1), 0.0)
+        qrange = 2**bits - 1
+        scale = np.maximum((hi_v - lo_v) / qrange, 1e-8)
+        zero = round_half_away(-lo_v / scale)
+        lo, hi = 0, qrange
+    return scale, zero, lo, hi
+
+
+class GptqContext:
+    """Precomputed Hessian Cholesky factor for one set of calibration
+    inputs — reusable across the q/k/v (or gate/up) fan-out and across
+    LoRA-compensation rounds, which all share X."""
+
+    def __init__(self, x_samples: np.ndarray, damp_frac: float = 0.01):
+        h = x_samples.T.astype(np.float64) @ x_samples.astype(np.float64)
+        self.dead = np.diag(h) == 0
+        h[self.dead, self.dead] = 1.0
+        self.hinv_u = _solve_hinv_chol(h, damp_frac)
+
+
+def gptq_quantize(w: np.ndarray, x_samples: np.ndarray, bits: int = 4,
+                  sym: bool = True, group: int = 0,
+                  damp_frac: float = 0.01,
+                  ctx: GptqContext | None = None) -> QWeight:
+    """Quantize W (n, j) given calibration inputs X (S, n).
+
+    Returns a QWeight with the same storage layout as RTN so the engine
+    and the dequant path are shared. Pass ``ctx`` to reuse the Hessian
+    factorization across multiple weights sharing the same inputs.
+    """
+    n, j = w.shape
+    g = group or n
+    if ctx is None:
+        ctx = GptqContext(x_samples, damp_frac)
+    dead = ctx.dead
+    w = w.astype(np.float64).copy()
+    w[dead, :] = 0.0
+    hinv_u = ctx.hinv_u
+
+    scale, zero, lo, hi = _scales_for(w.astype(np.float32), bits, sym, group)
+    wq = np.zeros((n, j), dtype=np.float64)
+    for i in range(n):
+        gi = i // g
+        wi = w[i, :]
+        q = np.clip(round_half_away(wi / scale[gi]) + zero[gi], lo, hi)
+        wq[i, :] = q
+        dq = (q - zero[gi]) * scale[gi]
+        err = (wi - dq) / hinv_u[i, i]
+        # Error feedback into the not-yet-quantized rows.
+        if i + 1 < n:
+            w[i + 1:, :] -= np.outer(hinv_u[i, i + 1:], err)
+    zq = None
+    if not sym:
+        # Shift to signed storage, matching quantizer.quantize_weight.
+        shift = 2 ** (bits - 1)
+        wq = wq - shift
+        zq = (zero - shift).astype(np.int16)
+    return QWeight(wq=wq.astype(np.int8), scale=scale.astype(np.float32),
+                   zero=zq, group=group, bits=bits)

@@ -1,0 +1,115 @@
+"""Rotation utilities for the QuaRot / SpinQuant baselines and the
+'+hadamard' MergeQuant variants.
+
+Two rotations are used (DESIGN.md §2 hardware note):
+
+* **Residual-stream rotation** — a dense orthogonal Q folded *offline*
+  into embedding / in-proj / out-proj / head weights. Valid because
+  RMSNorm is rotation-invariant once its γ is folded into the following
+  linear (the standard QuaRot trick). Zero runtime cost.
+* **Online block-Hadamard** — normalised Walsh–Hadamard with block size
+  64 applied to a linear's *input* at runtime (and its transpose folded
+  into the weight offline). Works for any d divisible by 64, which every
+  model in the zoo satisfies; on CUDA this is QuaRot's fused Hadamard
+  kernel, on TPU a small VMEM-resident pass.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+BLOCK = 64
+
+
+def random_orthogonal(d: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(d, d))
+    q, r = np.linalg.qr(a)
+    return (q * np.sign(np.diag(r))).astype(np.float32)
+
+
+def random_hadamard_like(d: int, seed: int) -> np.ndarray:
+    """Randomised Hadamard: H · diag(±1), the QuaRot construction.
+
+    Requires d divisible by BLOCK; uses the block-diagonal FWHT matrix.
+    """
+    rng = np.random.default_rng(seed)
+    signs = rng.choice([-1.0, 1.0], size=d).astype(np.float32)
+    h = hadamard_matrix(d)
+    return h * signs[None, :]
+
+
+def hadamard_matrix(d: int) -> np.ndarray:
+    """Dense matrix of the block-FWHT(64) transform (for folding/tests)."""
+    assert d % BLOCK == 0, d
+    h1 = np.array([[1.0]])
+    h = h1
+    while h.shape[0] < BLOCK:
+        h = np.block([[h, h], [h, -h]])
+    h = h / np.sqrt(BLOCK)
+    full = np.zeros((d, d), dtype=np.float32)
+    for b in range(d // BLOCK):
+        s = b * BLOCK
+        full[s:s + BLOCK, s:s + BLOCK] = h
+    return full
+
+
+def fwht_block64(x: np.ndarray) -> np.ndarray:
+    """Apply the normalised block-FWHT(64) along the last axis.
+
+    Matches kernels/ref.py::hadamard_block64_ref and the Rust
+    quant::hadamard implementation exactly (same butterfly order).
+    """
+    d = x.shape[-1]
+    assert d % BLOCK == 0, d
+    shape = x.shape
+    x = x.reshape(-1, d // BLOCK, BLOCK).copy()
+    h = 1
+    while h < BLOCK:
+        nb = BLOCK // (2 * h)
+        x = x.reshape(x.shape[0], x.shape[1], nb, 2, h)
+        a = x[..., 0, :].copy()
+        b = x[..., 1, :].copy()
+        x[..., 0, :] = a + b
+        x[..., 1, :] = a - b
+        x = x.reshape(x.shape[0], shape[-1] // BLOCK, BLOCK)
+        h *= 2
+    return (x / np.sqrt(BLOCK)).reshape(shape)
+
+
+def fold_online_hadamard_into_weight(w: np.ndarray) -> np.ndarray:
+    """Given y = (x H) @ W', choose W' = Hᵀ W so y = x @ W.
+
+    Block-FWHT is symmetric (H = Hᵀ), so folding = applying the transform
+    to each weight column, i.e. along the input axis.
+    """
+    return fwht_block64(w.T).T.astype(np.float32)
+
+
+def fold_residual_rotation(params: dict, q: np.ndarray) -> dict:
+    """Fold a residual-stream rotation Q into model weights (offline).
+
+    Precondition: norm γ vectors have already been folded into the
+    following linears (see baselines.fold_norms), so every norm is
+    all-ones and commutes with Q.
+    """
+    out = {
+        "embed": params["embed"] @ q,
+        "outlier_gain": np.ones_like(params["outlier_gain"]),
+        "final_norm": params["final_norm"].copy(),
+        "lm_head": q.T @ params["lm_head"],
+        "layers": [],
+    }
+    for layer in params["layers"]:
+        out["layers"].append({
+            "attn_norm": layer["attn_norm"].copy(),
+            "wq": q.T @ layer["wq"],
+            "wk": q.T @ layer["wk"],
+            "wv": q.T @ layer["wv"],
+            "wo": layer["wo"] @ q,
+            "ffn_norm": layer["ffn_norm"].copy(),
+            "w_gate": q.T @ layer["w_gate"],
+            "w_up": q.T @ layer["w_up"],
+            "w_down": layer["w_down"] @ q,
+        })
+    return out

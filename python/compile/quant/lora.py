@@ -1,0 +1,82 @@
+"""Quantization compensation (paper §4.3).
+
+Low-rank matrices A (n×r), B (r×j) are learned per linear layer to
+minimize the reconstruction error between the layer's original FP output
+and its quantized output; the deployed weight is q(W + AB) — the
+compensation is *absorbed before* weight quantization, so it costs nothing
+at inference.
+
+The paper trains A, B with 15 epochs of LoRA fine-tuning on 256 samples.
+At our scale the same objective has a cheap exact solution: with X the
+calibration inputs of the layer and R the current quantization residual,
+    min_{ΔW} ‖X ΔW − R‖²   ⇒   ΔW = (XᵀX + λI)⁻¹ Xᵀ R   (ridge),
+rank-restricted by truncated SVD to r, alternated with re-quantization for
+a few rounds (quantizing W+AB changes the residual). This is the same
+objective the paper optimizes, solved in closed form — documented as a
+substitution in DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .quantizer import QWeight
+from .gptq import gptq_quantize
+
+
+def _ridge_lowrank(x: np.ndarray, resid: np.ndarray, rank: int,
+                   lam_frac: float = 0.01) -> np.ndarray:
+    """argmin_ΔW ‖X ΔW − resid‖² + λ‖ΔW‖², truncated to ``rank``."""
+    n = x.shape[1]
+    h = x.T @ x
+    lam = lam_frac * float(np.mean(np.diag(h))) + 1e-8
+    dw = np.linalg.solve(h + lam * np.eye(n), x.T @ resid)
+    u, s, vt = np.linalg.svd(dw, full_matrices=False)
+    r = min(rank, len(s))
+    return (u[:, :r] * s[:r]) @ vt[:r]
+
+
+def compensate(w_folded: np.ndarray, x_in: np.ndarray, x_ref: np.ndarray,
+               w_ref: np.ndarray, quantize, rank: int = 8,
+               rounds: int = 3) -> tuple[QWeight, np.ndarray]:
+    """Learn the low-rank compensation for one linear layer.
+
+    w_folded: the weight actually being quantized (scales folded, possibly
+      reconstructed), (n, j).
+    x_in: calibration inputs *of the quantized path* (integer activations
+      for static layers, fp inputs for dynamic layers), (S, n).
+    x_ref / w_ref: the FP reference input and weight producing the target
+      output X_ref @ W_ref, (S, n_ref) / (n_ref, j).
+    quantize: callable W -> QWeight (the GPTQ/RTN config in use).
+
+    Returns (final QWeight of W+AB, the dense AB correction).
+    """
+    target = x_ref @ w_ref
+    ab = np.zeros_like(w_folded)
+    qw = quantize(w_folded)
+
+    def obj(q):
+        d = x_in @ q.dequant() - target
+        return float(np.sum(d * d))
+
+    # Keep the best round: re-quantizing W+AB can regress (the correction
+    # may push absmax up and coarsen the scale), so this is early stopping
+    # on the same reconstruction objective the paper fine-tunes.
+    best_qw, best_ab, best = qw, np.zeros_like(ab), obj(qw)
+    for _ in range(rounds):
+        out = x_in @ qw.dequant()
+        resid = target - out
+        ab = ab + _ridge_lowrank(x_in, resid, rank)
+        qw = quantize(w_folded + ab)
+        e = obj(qw)
+        if e < best:
+            best_qw, best_ab, best = qw, ab.copy(), e
+    return best_qw, best_ab
+
+
+def default_gptq_quantizer(x_samples: np.ndarray, bits: int = 4,
+                           sym: bool = True, group: int = 0):
+    """Quantizer factory shared by pipeline stages."""
+    def q(w: np.ndarray) -> QWeight:
+        return gptq_quantize(w, x_samples, bits=bits, sym=sym, group=group)
+    return q

@@ -1,0 +1,284 @@
+"""The MergeQuant pipeline (paper §4) and the method registry.
+
+``mergequant()`` runs the full offline flow on a trained FP model:
+
+1. channel-wise calibration of the RMSNorm outputs (§4.1);
+2. adaptive clipping of the per-channel scales (§4.2, Eq. 7);
+3. dimension reconstruction of the scale vector (§4.2, Eq. 6);
+4. Quantization Step Migration: merge γ/s into the norm multiplier
+   (Eq. 4) and fold the per-channel σ into the weight rows (Eq. 5);
+5. GPTQ per-column weight quantization of the folded weights;
+6. low-rank quantization compensation (§4.3);
+7. out/down projections: per-token dynamic with a uniform searched clip,
+   optionally behind an online block-Hadamard (the non-``_nh`` variant).
+
+Every stage is individually toggleable — Table 4's ablation rows and
+Fig. 1's calibration comparison are produced with the same entry point.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .. import model as M
+from . import baselines as B
+from . import calibration as C
+from . import clipping as CL
+from . import hadamard as H
+from .gptq import GptqContext, gptq_quantize
+from .lora import compensate
+from .quantizer import qmax_for_bits, quantize_weight, round_half_away
+from .reconstruct import Reconstruction, identity_reconstruction, reconstruct
+from .qforward import QuantModel, fp_quant_model
+
+DEFAULT_ALPHA = {"tiny-llama-s": 5.0, "tiny-llama-m": 5.0,
+                 "tiny-llama-l": 5.0, "tiny-llama3": 2.0}
+
+
+def _static_branch(norm_g: np.ndarray, stats: C.TensorStats,
+                   weights: dict[str, np.ndarray], *, a_bits: int,
+                   w_bits: int, w_sym: bool, w_group: int, clipping: str,
+                   do_reconstruct: bool, alpha: float, lora_rank: int,
+                   use_gptq: bool):
+    """Build the merged norm + static LinearSpecs for one norm's fan-out.
+
+    weights: name -> original FP weight (d, j), all sharing the norm output.
+    Returns (norm_spec, {name: linear_spec}, report dict).
+    """
+    qa = qmax_for_bits(a_bits)
+    absmax = np.maximum(stats.absmax, 1e-6)
+    wcat = np.concatenate(list(weights.values()), axis=1)
+
+    # --- adaptive clipping of the per-channel scales (Eq. 7) ---
+    if clipping == "adaptive":
+        ratios = CL.adaptive_channel_clip(stats.samples, absmax, wcat,
+                                          a_bits=a_bits, w_bits=w_bits)
+    elif clipping == "channel":
+        ratios = CL.channel_clip_act_only(stats.samples, absmax, a_bits=a_bits)
+    else:
+        ratios = np.ones_like(absmax)
+    s = absmax * ratios / qa  # per-channel static scales s_k
+
+    # --- dimension reconstruction (Eq. 6 + pruning schemes) ---
+    recon: Reconstruction = (reconstruct(s, stats.sqsum, alpha=alpha)
+                             if do_reconstruct else identity_reconstruction(s))
+
+    # --- quantization migration: merged multiplier γ/s (Eq. 4) ---
+    g_merged = norm_g / s
+    norm_spec = {"g": g_merged.astype(np.float32),
+                 "quant": {"qmax": qa,
+                           "recon_idx": (recon.recon_idx
+                                         if do_reconstruct else None)}}
+
+    # Integer activations the static GEMMs will see (for GPTQ/LoRA).
+    xq = np.clip(round_half_away(stats.samples / s), -qa, qa)
+    xq_rec = recon.apply_to_activation(xq)
+
+    specs = {}
+    ctx = GptqContext(xq_rec) if use_gptq else None
+    for name, w in weights.items():
+        w_folded = recon.apply_to_weight(w)  # σ_i · W[src_i, :]  (Eq. 5)
+
+        def quantize(mat):
+            if use_gptq:
+                return gptq_quantize(mat, xq_rec, bits=w_bits, sym=w_sym,
+                                     group=w_group, ctx=ctx)
+            return quantize_weight(mat, bits=w_bits, sym=w_sym, group=w_group)
+
+        if lora_rank > 0:
+            qw, _ = compensate(w_folded, xq_rec, stats.samples, w,
+                               quantize, rank=lora_rank, rounds=2)
+        else:
+            qw = quantize(w_folded)
+        specs[name] = {"mode": "static", "qw": qw}
+
+    report = {"threshold": recon.threshold,
+              "n_strong": int(len(recon.strong)),
+              "n_split_extra": int(recon.n_split_extra),
+              "clip_ratios": ratios.tolist()}
+    return norm_spec, specs, report
+
+
+def _dynamic_branch(w: np.ndarray, stats: C.TensorStats, *, a_bits: int,
+                    w_bits: int, w_sym: bool, w_group: int, clipping: str,
+                    hadamard: bool, lora_rank: int, use_gptq: bool):
+    """Per-token dynamic LinearSpec for out/down (§4.2 last paragraph)."""
+    x = stats.samples
+    w_eff = w
+    if hadamard:
+        w_eff = H.fold_online_hadamard_into_weight(w)
+        x = H.fwht_block64(x)
+    clip = (CL.uniform_token_clip(x, w_eff, a_bits=a_bits, w_bits=w_bits)
+            if clipping != "none" else 1.0)
+
+    ctx = GptqContext(x) if use_gptq else None
+
+    def quantize(mat):
+        if use_gptq:
+            return gptq_quantize(mat, x, bits=w_bits, sym=w_sym,
+                                 group=w_group, ctx=ctx)
+        return quantize_weight(mat, bits=w_bits, sym=w_sym, group=w_group)
+
+    if lora_rank > 0:
+        qw, _ = compensate(w_eff, x, x, w_eff, quantize, rank=lora_rank,
+                           rounds=2)
+    else:
+        qw = quantize(w_eff)
+    return {"mode": "dynamic", "qw": qw, "a_qmax": qmax_for_bits(a_bits),
+            "a_clip": float(clip), "hadamard": bool(hadamard)}, clip
+
+
+def mergequant(cfg: M.ModelConfig, params, batches: list[np.ndarray], *,
+               a_bits: int = 4, w_bits: int = 4, w_sym: bool = True,
+               w_group: int = 0, hadamard: bool = True,
+               clipping: str = "adaptive", do_reconstruct: bool = True,
+               lora_rank: int = 8, use_gptq: bool = True,
+               alpha: float | None = None,
+               calib: C.Calibration | None = None,
+               collect_report: dict | None = None) -> QuantModel:
+    """Full MergeQuant (defaults) or any ablation of it (Table 4, 5, 7)."""
+    alpha = DEFAULT_ALPHA.get(cfg.name, 5.0) if alpha is None else alpha
+    p = B._np_params(params)
+    t0 = time.time()
+    if calib is None:
+        calib = C.calibrate(cfg, p, batches)
+    calib_time = time.time() - t0
+
+    t1 = time.time()
+    layers = []
+    report = {"layers": [], "calib_seconds": calib_time}
+    for l, lc in zip(p["layers"], calib.layers):
+        attn_norm, attn_specs, rep_a = _static_branch(
+            l["attn_norm"], lc.attn_norm_out,
+            {"q": l["wq"], "k": l["wk"], "v": l["wv"]},
+            a_bits=a_bits, w_bits=w_bits, w_sym=w_sym, w_group=w_group,
+            clipping=clipping, do_reconstruct=do_reconstruct, alpha=alpha,
+            lora_rank=lora_rank, use_gptq=use_gptq)
+        ffn_norm, ffn_specs, rep_f = _static_branch(
+            l["ffn_norm"], lc.ffn_norm_out,
+            {"gate": l["w_gate"], "up": l["w_up"]},
+            a_bits=a_bits, w_bits=w_bits, w_sym=w_sym, w_group=w_group,
+            clipping=clipping, do_reconstruct=do_reconstruct, alpha=alpha,
+            lora_rank=lora_rank, use_gptq=use_gptq)
+        o_spec, o_clip = _dynamic_branch(
+            l["wo"], lc.o_in, a_bits=a_bits, w_bits=w_bits, w_sym=w_sym,
+            w_group=w_group, clipping=clipping, hadamard=hadamard,
+            lora_rank=lora_rank, use_gptq=use_gptq)
+        down_spec, down_clip = _dynamic_branch(
+            l["w_down"], lc.down_in, a_bits=a_bits, w_bits=w_bits,
+            w_sym=w_sym, w_group=w_group, clipping=clipping,
+            hadamard=hadamard, lora_rank=lora_rank, use_gptq=use_gptq)
+        layers.append({
+            "attn_norm": attn_norm, **attn_specs, "o": o_spec,
+            "ffn_norm": ffn_norm, **ffn_specs, "down": down_spec,
+        })
+        report["layers"].append({"attn": rep_a, "ffn": rep_f,
+                                 "o_clip": o_clip, "down_clip": down_clip})
+    report["quantize_seconds"] = time.time() - t1
+    if collect_report is not None:
+        collect_report.update(report)
+
+    name = "mergequant" if hadamard else "mergequant_nh"
+    qm = B._assemble(cfg, p, layers, name)
+    return qm
+
+
+# ---------------------------------------------------------------------------
+# Method registry — every Table 1 / Table 4 / Table 5 / Fig 1 configuration
+# ---------------------------------------------------------------------------
+
+def build_method(name: str, cfg: M.ModelConfig, params,
+                 batches: list[np.ndarray],
+                 calib: C.Calibration | None = None) -> QuantModel:
+    """Build a QuantModel by method name.
+
+    ``calib`` (FP-model calibration) is reused across non-rotated methods;
+    rotated methods recalibrate internally on the rotated model.
+    """
+    def need_calib() -> C.Calibration:
+        nonlocal calib
+        if calib is None:
+            calib = C.calibrate(cfg, params, batches)
+        return calib
+
+    if name == "fp16":
+        return fp_quant_model(cfg, params)
+    if name == "rtn":
+        return B.rtn(cfg, params, need_calib())
+    if name == "smoothquant":
+        return B.smoothquant(cfg, params, need_calib())
+    if name == "omniquant":
+        return B.omniquant_lite(cfg, params, need_calib())
+    if name == "qllm":
+        return B.qllm_lite(cfg, params, need_calib())
+    if name == "quarot":
+        return B.quarot(cfg, params, batches, online_hadamard=True)
+    if name == "quarot_nh":
+        return B.quarot(cfg, params, batches, online_hadamard=False)
+    if name == "quarot_static":
+        return B.quarot(cfg, params, batches, activation="tensor_static")
+    if name == "spinquant":
+        return B.spinquant(cfg, params, batches, online_hadamard=True)
+    if name == "spinquant_nh":
+        return B.spinquant(cfg, params, batches, online_hadamard=False)
+    if name == "mergequant":
+        return mergequant(cfg, params, batches, hadamard=True, calib=calib)
+    if name == "mergequant_nh":
+        return mergequant(cfg, params, batches, hadamard=False, calib=calib)
+    # --- Table 4 ablation rows ---
+    if name == "mq_qsm_only":
+        return mergequant(cfg, params, batches, hadamard=False,
+                          clipping="none", lora_rank=0, calib=calib)
+    if name == "mq_qsm_clip":
+        return mergequant(cfg, params, batches, hadamard=False,
+                          clipping="adaptive", lora_rank=0, calib=calib)
+    # --- Table 7 clipping rows ---
+    if name == "mq_noclip":
+        return mergequant(cfg, params, batches, hadamard=True,
+                          clipping="none", lora_rank=0, calib=calib)
+    if name == "mq_channelclip":
+        return mergequant(cfg, params, batches, hadamard=True,
+                          clipping="channel", lora_rank=0, calib=calib)
+    if name == "mq_adaptiveclip":
+        return mergequant(cfg, params, batches, hadamard=True,
+                          clipping="adaptive", lora_rank=0, calib=calib)
+    # --- Table 5 rows (W3A4) ---
+    if name == "quarot_w3_asym":
+        return B.quarot(cfg, params, batches, w_bits=3, sym=False)
+    if name == "quarot_w3_group":
+        return B.quarot(cfg, params, batches, w_bits=3, group=64)
+    if name == "mergequant_w3_asym":
+        return mergequant(cfg, params, batches, w_bits=3, w_sym=False,
+                          calib=calib)
+    if name == "mergequant_w3_group":
+        return mergequant(cfg, params, batches, w_bits=3, w_group=64,
+                          calib=calib)
+    # --- Fig 1 calibration variants ---
+    if name == "pertensor_static":
+        p = B._np_params(params)
+        return B._build_token_or_tensor(
+            cfg, p, need_calib(), method=name, activation="tensor_static",
+            w_bits=4, a_bits=4, use_gptq=True, online_hadamard=False)
+    if name == "pertoken_dynamic":
+        return B.rtn(cfg, params, need_calib())
+    if name == "pertoken_dynamic_rot":
+        return B.quarot(cfg, params, batches, online_hadamard=False,
+                        method_name=name)
+    if name == "perchannel_static":
+        return mergequant(cfg, params, batches, hadamard=False,
+                          clipping="none", lora_rank=0, calib=calib)
+    raise ValueError(f"unknown method {name!r}")
+
+
+TABLE1_METHODS = ["fp16", "smoothquant", "omniquant", "qllm", "quarot_nh",
+                  "spinquant_nh", "mergequant_nh", "quarot", "spinquant",
+                  "mergequant"]
+TABLE4_METHODS = ["fp16", "quarot_static", "mq_qsm_only", "mq_qsm_clip",
+                  "mergequant"]
+TABLE5_METHODS = ["fp16", "quarot_w3_asym", "quarot_w3_group",
+                  "mergequant_w3_asym", "mergequant_w3_group"]
+TABLE7_METHODS = ["fp16", "mq_noclip", "mq_channelclip", "mq_adaptiveclip"]
+FIG1_METHODS = ["fp16", "pertensor_static", "pertoken_dynamic",
+                "pertoken_dynamic_rot", "perchannel_static", "mergequant_nh"]

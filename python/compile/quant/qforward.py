@@ -1,0 +1,216 @@
+"""Quantized model structure + JAX quantized forward.
+
+This module defines the **canonical QuantModel schema** shared with the
+Rust engine (rust/src/engine mirrors it; qmod.py serializes it):
+
+QuantModel
+├── config: ModelConfig fields
+├── method: str
+├── embed (v,d) f32 — outlier gain (and any residual rotation) folded in
+├── final_norm (d,) f32, lm_head (d,v) f32 — kept FP (standard practice)
+└── layers[L]:
+    ├── attn_norm / ffn_norm: NormSpec
+    │     g (d,) f32            — γ, or merged γ/s when quant is set
+    │     quant: None | {qmax, recon_idx (d,) i32 | None}
+    └── q,k,v,o,gate,up,down: LinearSpec
+          mode  "fp"            w (n,j) f32
+                "static"        qw: QWeight — input is the integer
+                                activations the merged norm emits (Eq. 5)
+                "tensor_static" qw + a_scale (scalar), a_qmax — SmoothQuant
+                "dynamic"       qw + a_qmax, a_clip, hadamard — per-token
+exactly one of {w, qw} present per linear.
+
+The JAX forward here is the *reference semantics* for the Rust engine
+(parity-tested via artifact goldens) and the source of the quantized HLO
+artifacts. ``use_pallas=True`` routes the three hot ops through the L1
+Pallas kernels so they lower into the exported HLO.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import model as M
+from ..kernels import ref as KREF
+from .quantizer import QWeight
+
+QuantModel = dict[str, Any]
+
+
+def _norm_apply(norm: dict, x: jax.Array, use_pallas: bool) -> jax.Array:
+    """Apply a NormSpec; returns fp32 or integer-valued activations."""
+    g = jnp.asarray(norm["g"])
+    q = norm.get("quant")
+    if q is None:
+        return M.rmsnorm(x, g)
+    qmax = q["qmax"]
+    recon = q.get("recon_idx")
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    if use_pallas:
+        from ..kernels import rmsnorm_quant as KP
+        if recon is not None:
+            out = KP.rmsnorm_quant_recon(x2, g, jnp.asarray(recon), qmax=qmax)
+        else:
+            out = KP.rmsnorm_quant(x2, g, qmax=qmax)
+    else:
+        out = KREF.rmsnorm_quant_ref(x2, g, qmax)
+        if recon is not None:
+            out = out[..., jnp.asarray(recon)]
+    return out.reshape(shape)
+
+
+def _static_scale_zero(qw: QWeight):
+    """Flatten grouped scales to jnp; returns (scale (G,j), zero or None)."""
+    scale = jnp.asarray(qw.scale)
+    zero = None if qw.zero is None else jnp.asarray(qw.zero, jnp.float32)
+    return scale, zero
+
+
+def _int_matmul(xq: jax.Array, qw: QWeight, use_pallas: bool) -> jax.Array:
+    """(xq @ W_int) with per-(group,column) rescale; zero-point corrected."""
+    n, j = qw.wq.shape
+    g = qw.group or n
+    scale, zero = _static_scale_zero(qw)
+    wq = jnp.asarray(qw.wq, jnp.float32)
+    if g == n:
+        if use_pallas:
+            from ..kernels import qsm_matmul as KP
+            if zero is None:
+                return KP.qsm_matmul(xq, wq, scale[0])
+            return KP.qsm_matmul_asym(xq, wq, zero[0], scale[0])
+        if zero is None:
+            return KREF.qsm_matmul_ref(xq, wq, scale[0])
+        return KREF.qsm_matmul_asym_ref(xq, wq, zero[0], scale[0])
+    # Grouped: accumulate per group then rescale (engine mirrors this).
+    xg = xq.reshape(xq.shape[0], n // g, g)
+    wg = wq.reshape(n // g, g, j)
+    acc = jnp.einsum("mkg,kgj->mkj", xg, wg)
+    if zero is not None:
+        rowsum = jnp.sum(xg, axis=-1)  # (m, G)
+        acc = acc - rowsum[..., None] * zero[None]
+    return jnp.sum(acc * scale[None], axis=1)
+
+
+def _linear_apply(spec: dict, x: jax.Array, use_pallas: bool) -> jax.Array:
+    """Apply a LinearSpec to (..., n) activations."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    mode = spec["mode"]
+    if mode == "fp":
+        out = x2 @ jnp.asarray(spec["w"])
+    elif mode == "static":
+        out = _int_matmul(x2, spec["qw"], use_pallas)
+    elif mode == "tensor_static":
+        a_scale = spec["a_scale"]
+        qm = spec["a_qmax"]
+        xq = jnp.clip(KREF.round_half_away(x2 / a_scale), -qm, qm)
+        out = _int_matmul(xq, spec["qw"], use_pallas) * a_scale
+    elif mode == "dynamic":
+        if spec.get("hadamard"):
+            x2 = KREF.hadamard_block64_ref(x2)
+        qm = spec["a_qmax"]
+        clip = spec.get("a_clip", 1.0)
+        if use_pallas and spec["qw"].group == 0 and spec["qw"].zero is None:
+            from ..kernels import qsm_matmul as KP
+            out = KP.dyn_quant_matmul(x2, jnp.asarray(spec["qw"].wq, jnp.float32),
+                                      jnp.asarray(spec["qw"].scale[0]),
+                                      qmax=qm, clip=clip)
+        else:
+            s = jnp.maximum(jnp.max(jnp.abs(x2), axis=-1, keepdims=True)
+                            * clip / qm, 1e-8)
+            xq = jnp.clip(KREF.round_half_away(x2 / s), -qm, qm)
+            out = _int_matmul(xq, spec["qw"], use_pallas) * s
+    else:
+        raise ValueError(mode)
+    return out.reshape(*shape[:-1], out.shape[-1])
+
+
+def quant_forward(cfg: M.ModelConfig, qm: QuantModel, tokens: jax.Array,
+                  use_pallas: bool = False) -> jax.Array:
+    """Quantized forward: tokens (B,T) -> logits (B,T,V)."""
+    x = jnp.asarray(qm["embed"])[tokens] * jnp.asarray(qm["outlier_gain"])
+    cos, sin = M.rope_angles(cfg, jnp.arange(tokens.shape[1]))
+    B, T, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    for layer in qm["layers"]:
+        h = _norm_apply(layer["attn_norm"], x, use_pallas)
+        q = _linear_apply(layer["q"], h, use_pallas).reshape(B, T, H, hd)
+        k = _linear_apply(layer["k"], h, use_pallas).reshape(B, T, H, hd)
+        v = _linear_apply(layer["v"], h, use_pallas).reshape(B, T, H, hd)
+        q, k = M.apply_rope(q, cos, sin), M.apply_rope(k, cos, sin)
+        attn = M.attention(q, k, v).reshape(B, T, d)
+        x = x + _linear_apply(layer["o"], attn, use_pallas)
+        h = _norm_apply(layer["ffn_norm"], x, use_pallas)
+        gate = _linear_apply(layer["gate"], h, use_pallas)
+        up = _linear_apply(layer["up"], h, use_pallas)
+        x = x + _linear_apply(layer["down"], jax.nn.silu(gate) * up, use_pallas)
+    x = M.rmsnorm(x, jnp.asarray(qm["final_norm"]))
+    return x @ jnp.asarray(qm["lm_head"])
+
+
+def quant_decode_step(cfg: M.ModelConfig, qm: QuantModel, token: jax.Array,
+                      pos: jax.Array, kcache: jax.Array, vcache: jax.Array,
+                      use_pallas: bool = False):
+    """Quantized single-token decode with KV cache (mirrors model.decode_step)."""
+    B = token.shape[0]
+    H, hd, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    maxT = kcache.shape[2]
+    x = jnp.asarray(qm["embed"])[token][:, None, :] * jnp.asarray(qm["outlier_gain"])
+    cos, sin = M.rope_angles(cfg, pos[None])
+    visible = (jnp.arange(maxT) <= pos)[None, None, None, :]
+    new_k, new_v = kcache, vcache
+    for li, layer in enumerate(qm["layers"]):
+        h = _norm_apply(layer["attn_norm"], x, use_pallas)
+        q = _linear_apply(layer["q"], h, use_pallas).reshape(B, 1, H, hd)
+        k = _linear_apply(layer["k"], h, use_pallas).reshape(B, 1, H, hd)
+        v = _linear_apply(layer["v"], h, use_pallas).reshape(B, 1, H, hd)
+        q, k = M.apply_rope(q, cos, sin), M.apply_rope(k, cos, sin)
+        kc = jax.lax.dynamic_update_slice(new_k[li], k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(new_v[li], v, (0, pos, 0, 0))
+        new_k = new_k.at[li].set(kc)
+        new_v = new_v.at[li].set(vc)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kc) / np.sqrt(hd)
+        scores = jnp.where(visible, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", probs, vc).reshape(B, 1, d)
+        x = x + _linear_apply(layer["o"], attn, use_pallas)
+        hn = _norm_apply(layer["ffn_norm"], x, use_pallas)
+        gate = _linear_apply(layer["gate"], hn, use_pallas)
+        up = _linear_apply(layer["up"], hn, use_pallas)
+        x = x + _linear_apply(layer["down"], jax.nn.silu(gate) * up, use_pallas)
+    x = M.rmsnorm(x, jnp.asarray(qm["final_norm"]))
+    logits = (x @ jnp.asarray(qm["lm_head"]))[:, 0, :]
+    return logits, new_k, new_v
+
+
+def fp_quant_model(cfg: M.ModelConfig, params) -> QuantModel:
+    """Wrap FP32 params in the QuantModel schema (the FP16 baseline row)."""
+    def lin(w):
+        return {"mode": "fp", "w": np.asarray(w, np.float32)}
+
+    return {
+        "config": cfg,
+        "method": "fp16",
+        "embed": np.asarray(params["embed"], np.float32),
+        "outlier_gain": np.asarray(params["outlier_gain"], np.float32),
+        "final_norm": np.asarray(params["final_norm"], np.float32),
+        "lm_head": np.asarray(params["lm_head"], np.float32),
+        "layers": [
+            {
+                "attn_norm": {"g": np.asarray(l["attn_norm"], np.float32),
+                              "quant": None},
+                "q": lin(l["wq"]), "k": lin(l["wk"]), "v": lin(l["wv"]),
+                "o": lin(l["wo"]),
+                "ffn_norm": {"g": np.asarray(l["ffn_norm"], np.float32),
+                             "quant": None},
+                "gate": lin(l["w_gate"]), "up": lin(l["w_up"]),
+                "down": lin(l["w_down"]),
+            }
+            for l in params["layers"]
+        ],
+    }

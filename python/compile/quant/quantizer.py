@@ -1,0 +1,112 @@
+"""Core quantization primitives (paper §2, Eq. 1).
+
+Conventions shared with the Rust engine (rust/src/quant):
+
+* rounding is round-half-away-from-zero (``f32::round`` in Rust);
+* symmetric b-bit integer range is [-(2^(b-1)-1), 2^(b-1)-1] (no -2^(b-1),
+  matching the paper's ``2^{b-1}-1`` denominator);
+* asymmetric b-bit range is [0, 2^b - 1] with an integer zero point;
+* weight matrices are stored (n, j) = (input dim, output dim); "per-channel
+  weight quantization" means one scale per output column j; grouped
+  quantization splits the *input* dimension into contiguous groups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def qmax_for_bits(bits: int) -> int:
+    return 2 ** (bits - 1) - 1
+
+
+def round_half_away(x: np.ndarray) -> np.ndarray:
+    return np.sign(x) * np.floor(np.abs(x) + 0.5)
+
+
+def quantize_sym(x: np.ndarray, scale: np.ndarray, bits: int) -> np.ndarray:
+    """Integer values (float array) in [-qmax, qmax]; scale broadcasts."""
+    qm = qmax_for_bits(bits)
+    return np.clip(round_half_away(x / scale), -qm, qm)
+
+
+def absmax_scale(x: np.ndarray, axis, bits: int, clip: float = 1.0,
+                 keepdims: bool = True) -> np.ndarray:
+    qm = qmax_for_bits(bits)
+    s = np.max(np.abs(x), axis=axis, keepdims=keepdims) * clip / qm
+    return np.maximum(s, 1e-8)
+
+
+@dataclasses.dataclass
+class QWeight:
+    """A quantized weight matrix plus everything needed to dequantize.
+
+    wq: int8 (n, j) integer values.
+    scale: f32 (G, j) where G = n/group (G=1 for per-column row-wise).
+    zero: int8 (G, j) zero points (asymmetric) or None (symmetric).
+    group: group size along the input dim (0 ⇒ one group = whole column).
+    bits: weight bit width.
+    """
+
+    wq: np.ndarray
+    scale: np.ndarray
+    zero: np.ndarray | None
+    group: int
+    bits: int
+
+    @property
+    def shape(self):
+        return self.wq.shape
+
+    def dequant(self) -> np.ndarray:
+        n, j = self.wq.shape
+        g = self.group or n
+        wq = self.wq.astype(np.float32).reshape(n // g, g, j)
+        if self.zero is not None:
+            wq = wq - self.zero[:, None, :].astype(np.float32)
+        w = wq * self.scale[:, None, :]
+        return w.reshape(n, j)
+
+
+def quantize_weight(w: np.ndarray, bits: int = 4, sym: bool = True,
+                    group: int = 0, clip: float = 1.0) -> QWeight:
+    """RTN weight quantization, per output column, optionally grouped/asym."""
+    n, j = w.shape
+    g = group or n
+    assert n % g == 0, (n, g)
+    wg = w.reshape(n // g, g, j)
+    if sym:
+        qm = qmax_for_bits(bits)
+        scale = np.maximum(np.max(np.abs(wg), axis=1) * clip / qm, 1e-8)
+        wq = np.clip(round_half_away(wg / scale[:, None, :]), -qm, qm)
+        zero = None
+    else:
+        lo = np.minimum(wg.min(axis=1) * clip, 0.0)
+        hi = np.maximum(wg.max(axis=1) * clip, 0.0)
+        qrange = 2**bits - 1
+        scale = np.maximum((hi - lo) / qrange, 1e-8)
+        # Shift to signed storage (wq−zero is shift-invariant) so int8
+        # holds any bits ≤ 8; the Rust engine shares this convention.
+        shift = 2 ** (bits - 1)
+        zero_u = round_half_away(-lo / scale)
+        wq = np.clip(round_half_away(wg / scale[:, None, :])
+                     + zero_u[:, None, :], 0, qrange) - shift
+        zero = (zero_u - shift).astype(np.int16)
+    return QWeight(wq=wq.reshape(n, j).astype(np.int8), scale=scale.astype(np.float32),
+                   zero=zero, group=group, bits=bits)
+
+
+def weight_quant_error(w: np.ndarray, qw: QWeight) -> float:
+    d = qw.dequant() - w
+    return float(np.sum(d * d))
+
+
+def per_token_dynamic_matmul(x: np.ndarray, qw: QWeight, a_bits: int = 4,
+                             clip: float = 1.0) -> np.ndarray:
+    """Reference per-token dynamic path (numpy; mirrors engine/dynamic.rs)."""
+    qm = qmax_for_bits(a_bits)
+    s = absmax_scale(x, axis=-1, bits=a_bits, clip=clip)
+    xq = np.clip(round_half_away(x / s), -qm, qm)
+    return (xq @ qw.dequant()) * s

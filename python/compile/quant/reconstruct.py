@@ -1,0 +1,145 @@
+"""Dimension reconstruction (paper §4.2).
+
+DeQuant migration folds the per-channel activation scale s_k into the
+weight rows. Channels whose s_k is far above the rest ("strong
+parameters", s_k > T = μ + α·σ) would dominate the per-column weight
+quantization after folding. We:
+
+1. split every strong scale s_k into (s_k − mT, T, …, T) — the quantized
+   activation value xq_k is *duplicated* into the extra positions at
+   runtime via a single gather (``recon_idx``), so each folded weight row
+   carries a bounded factor ≤ T;
+2. restore the original dimension by pruning an equal number M of
+   unimportant channels — preferring *neighbors* of outlier channels
+   (Guo et al. 2023: channels adjacent to outliers carry little
+   information) ranked by the Hessian diagonal Σ x_k², with the paper's
+   three neighbor cases handled explicitly.
+
+The output is a permutation-with-duplicates index vector (d,), the folded
+per-position scale (d,), and bookkeeping for tests/reports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Reconstruction:
+    recon_idx: np.ndarray  # i32 (d,): reconstructed position -> source channel
+    fold_scale: np.ndarray  # f32 (d,): σ factor folded into that weight row
+    threshold: float
+    strong: np.ndarray  # indices of strong channels
+    pruned: np.ndarray  # indices of pruned channels
+    n_split_extra: int  # M
+
+    def apply_to_weight(self, w: np.ndarray) -> np.ndarray:
+        """Folded weight W'_ij = σ_i · W[src_i, j] (offline)."""
+        return w[self.recon_idx] * self.fold_scale[:, None]
+
+    def apply_to_activation(self, xq: np.ndarray) -> np.ndarray:
+        """Runtime gather (paper App. C.1 ``Reconstructed_activation_matrix``)."""
+        return xq[..., self.recon_idx]
+
+
+def split_threshold(s: np.ndarray, alpha: float) -> float:
+    """T = μ(s) + α·σ(s), Eq. (6)."""
+    return float(np.mean(s) + alpha * np.std(s))
+
+
+def split_strong(s: np.ndarray, threshold: float) -> tuple[list[int], list[list[float]]]:
+    """Decompose each strong scale into parts ≤ T: (s−mT, T, ..., T)."""
+    strong, parts = [], []
+    for k, sk in enumerate(s):
+        if sk > threshold:
+            strong.append(k)
+            m = int(np.ceil(sk / threshold)) - 1
+            rem = sk - m * threshold
+            parts.append([rem] + [threshold] * m)
+    return strong, parts
+
+
+def neighbor_channels(strong: list[int], d: int) -> list[int]:
+    """Neighbors of outlier channels, the paper's three cases:
+
+    (1) adjacent outliers share no duplicate neighbor;
+    (2) a single normal channel between two outliers counts once;
+    (3) outliers at position 0 / d−1 have only one side.
+    """
+    strong_set = set(strong)
+    seen: set[int] = set()
+    out: list[int] = []
+    for k in strong:
+        for nb in (k - 1, k + 1):
+            if 0 <= nb < d and nb not in strong_set and nb not in seen:
+                seen.add(nb)
+                out.append(nb)
+    return out
+
+
+def choose_pruned(strong: list[int], hessian_diag: np.ndarray, m_needed: int) -> list[int]:
+    """Pick M channels to prune (paper's three schemes on N vs M)."""
+    d = len(hessian_diag)
+    neigh = neighbor_channels(strong, d)
+    n = len(neigh)
+    if m_needed == 0:
+        return []
+    if n >= m_needed:
+        # Scheme 1/2: least-important M neighbors by Hessian diagonal.
+        order = sorted(neigh, key=lambda c: hessian_diag[c])
+        return order[:m_needed]
+    # Scheme 3: all neighbors + least-important others.
+    rest = [c for c in range(d)
+            if c not in set(neigh) and c not in set(strong)]
+    rest.sort(key=lambda c: hessian_diag[c])
+    return neigh + rest[: m_needed - n]
+
+
+def reconstruct(s: np.ndarray, hessian_diag: np.ndarray,
+                alpha: float = 5.0) -> Reconstruction:
+    """Build the reconstruction for one calibrated scale vector s (d,)."""
+    d = len(s)
+    t = split_threshold(s, alpha)
+    strong, parts = split_strong(s, t)
+    m = sum(len(p) - 1 for p in parts)
+    pruned = choose_pruned(strong, hessian_diag, m)
+    pruned_set = set(pruned)
+    assert len(pruned) == m, (len(pruned), m)
+
+    recon_idx: list[int] = []
+    fold_scale: list[float] = []
+    strong_parts = dict(zip(strong, parts))
+    for k in range(d):
+        if k in pruned_set:
+            continue
+        if k in strong_parts:
+            for sigma in strong_parts[k]:
+                recon_idx.append(k)
+                fold_scale.append(sigma)
+        else:
+            recon_idx.append(k)
+            fold_scale.append(float(s[k]))
+    assert len(recon_idx) == d, (len(recon_idx), d)
+    return Reconstruction(
+        recon_idx=np.asarray(recon_idx, dtype=np.int32),
+        fold_scale=np.asarray(fold_scale, dtype=np.float32),
+        threshold=t,
+        strong=np.asarray(strong, dtype=np.int32),
+        pruned=np.asarray(sorted(pruned), dtype=np.int32),
+        n_split_extra=m,
+    )
+
+
+def identity_reconstruction(s: np.ndarray) -> Reconstruction:
+    """No-op reconstruction (used by the '+QSM only' ablation row)."""
+    d = len(s)
+    return Reconstruction(
+        recon_idx=np.arange(d, dtype=np.int32),
+        fold_scale=np.asarray(s, dtype=np.float32),
+        threshold=float("inf"),
+        strong=np.empty(0, dtype=np.int32),
+        pruned=np.empty(0, dtype=np.int32),
+        n_split_extra=0,
+    )

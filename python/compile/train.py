@@ -1,0 +1,94 @@
+"""Build-time training of the tiny model zoo (DESIGN.md §5).
+
+AdamW on the synth-wiki + synth-c4 mix. This is also the end-to-end
+training validation run required by the brief: the loss curve of every
+model is written to ``artifacts/models/<name>/train_log.json`` and
+summarized in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import json
+import pickle
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 wd=0.01):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+
+    def upd(p, m_, v_):
+        return p - lr * (m_ * mhat_scale / (jnp.sqrt(v_ * vhat_scale) + eps)
+                         + wd * p)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train_model(cfg: M.ModelConfig, steps: int = 400, batch: int = 32,
+                seq: int = 128, lr: float = 3e-3, seed: int = 0,
+                log_every: int = 25):
+    """Returns (params, train_log)."""
+    wiki = D.generate_corpus(D.SYNTH_WIKI, 400_000)
+    c4 = D.generate_corpus(D.SYNTH_C4, 200_000)
+    mix = np.concatenate([wiki, c4])
+    it = D.batch_iterator(mix, batch, seq, seed=seed)
+
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    # Freeze the architectural outlier-gain (it is part of the architecture,
+    # not a learned parameter — see model.py docstring).
+    gain = params.pop("outlier_gain")
+
+    def loss(p, x, y):
+        return M.loss_fn(cfg, {**p, "outlier_gain": gain}, x, y)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss))
+    opt = adamw_init(params)
+    log = []
+    t0 = time.time()
+    for step in range(steps):
+        x, y = next(it)
+        lval, grads = grad_fn(params, jnp.asarray(x), jnp.asarray(y))
+        warm = min(1.0, (step + 1) / 40)
+        decay = 0.5 * (1 + np.cos(np.pi * step / steps))
+        params, opt = adamw_update(params, grads, opt, lr * warm * (0.1 + 0.9 * decay))
+        if step % log_every == 0 or step == steps - 1:
+            log.append({"step": step, "loss": float(lval),
+                        "elapsed_s": time.time() - t0})
+            print(f"[{cfg.name}] step {step:4d} loss {float(lval):.4f}")
+    params["outlier_gain"] = gain
+    return params, log
+
+
+def train_or_load(cfg: M.ModelConfig, cache_dir: Path, steps: int = 400,
+                  **kw):
+    """Train once; cache the pickled params + log under cache_dir."""
+    cache_dir.mkdir(parents=True, exist_ok=True)
+    pkl = cache_dir / f"{cfg.name}.params.pkl"
+    logf = cache_dir / f"{cfg.name}.train_log.json"
+    if pkl.exists():
+        with open(pkl, "rb") as f:
+            return pickle.load(f), json.loads(logf.read_text())
+    params, log = train_model(cfg, steps=steps, **kw)
+    params = jax.tree.map(lambda a: np.asarray(a, np.float32), params)
+    with open(pkl, "wb") as f:
+        pickle.dump(params, f)
+    logf.write_text(json.dumps(log))
+    return params, log

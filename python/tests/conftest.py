@@ -1,0 +1,30 @@
+import numpy as np
+import jax
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="session")
+def small_cfg():
+    return M.ModelConfig("t-small", d_model=64, n_heads=2, d_ff=128,
+                         n_layers=2, vocab=128, outlier_channels=(5, 20),
+                         outlier_gain=10.0)
+
+
+@pytest.fixture(scope="session")
+def small_params(small_cfg):
+    return M.init_params(jax.random.PRNGKey(0), small_cfg)
+
+
+@pytest.fixture(scope="session")
+def small_batches():
+    rng = np.random.default_rng(17)
+    return [rng.integers(3, 128, size=(2, 32)).astype(np.int32)
+            for _ in range(3)]
+
+
+@pytest.fixture(scope="session")
+def small_calib(small_cfg, small_params, small_batches):
+    from compile.quant import calibration as C
+    return C.calibrate(small_cfg, small_params, small_batches)

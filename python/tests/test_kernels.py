@@ -1,0 +1,136 @@
+"""L1 Pallas kernels vs the pure-jnp oracle — the core correctness signal.
+
+Randomized shape/value sweeps stand in for hypothesis (not vendored in
+this image): every case draws fresh shapes/values from a seeded rng.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref as R
+from compile.kernels import qsm_matmul as KQ
+from compile.kernels import rmsnorm_quant as KN
+
+RNG = np.random.default_rng(0)
+
+SHAPES = [(1, 64, 64), (3, 64, 128), (16, 128, 64), (33, 128, 384),
+          (65, 192, 192), (128, 256, 128)]
+
+
+def _intvals(shape, qmax):
+    return RNG.integers(-qmax, qmax + 1, size=shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("m,n,j", SHAPES)
+@pytest.mark.parametrize("qmax", [7, 3])
+def test_qsm_matmul_matches_ref(m, n, j, qmax):
+    xq = _intvals((m, n), qmax)
+    wq = _intvals((n, j), qmax)
+    scale = RNG.uniform(1e-3, 0.1, size=j).astype(np.float32)
+    got = KQ.qsm_matmul(jnp.asarray(xq), jnp.asarray(wq), jnp.asarray(scale))
+    want = R.qsm_matmul_ref(jnp.asarray(xq), jnp.asarray(wq),
+                            jnp.asarray(scale))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("m,n,j", SHAPES[:4])
+def test_qsm_matmul_asym_matches_ref(m, n, j):
+    xq = _intvals((m, n), 7)
+    wq = RNG.integers(0, 8, size=(n, j)).astype(np.float32)
+    zero = RNG.integers(0, 8, size=j).astype(np.float32)
+    scale = RNG.uniform(1e-3, 0.1, size=j).astype(np.float32)
+    got = KQ.qsm_matmul_asym(jnp.asarray(xq), jnp.asarray(wq),
+                             jnp.asarray(zero), jnp.asarray(scale))
+    want = R.qsm_matmul_asym_ref(jnp.asarray(xq), jnp.asarray(wq),
+                                 jnp.asarray(zero), jnp.asarray(scale))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("m,n,j", SHAPES[:4])
+@pytest.mark.parametrize("clip", [1.0, 0.8])
+def test_dyn_quant_matmul_matches_ref(m, n, j, clip):
+    x = RNG.normal(size=(m, n)).astype(np.float32) * 3
+    wq = _intvals((n, j), 7)
+    ws = RNG.uniform(1e-3, 0.1, size=j).astype(np.float32)
+    got = KQ.dyn_quant_matmul(jnp.asarray(x), jnp.asarray(wq),
+                              jnp.asarray(ws), qmax=7, clip=clip)
+    want = R.dyn_quant_matmul_ref(jnp.asarray(x), jnp.asarray(wq),
+                                  jnp.asarray(ws), 7, clip)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,d", [(1, 64), (7, 64), (32, 128), (70, 192),
+                                 (128, 256)])
+@pytest.mark.parametrize("qmax", [7, 3])
+def test_rmsnorm_quant_matches_ref(m, d, qmax):
+    x = RNG.normal(size=(m, d)).astype(np.float32) * 2
+    x[:, 5] *= 20  # outlier channel
+    g = RNG.uniform(0.1, 4.0, size=d).astype(np.float32)
+    got = KN.rmsnorm_quant(jnp.asarray(x), jnp.asarray(g), qmax=qmax)
+    want = R.rmsnorm_quant_ref(jnp.asarray(x), jnp.asarray(g), qmax)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("m,d", [(5, 64), (32, 128)])
+def test_rmsnorm_quant_recon_matches_gather(m, d):
+    x = RNG.normal(size=(m, d)).astype(np.float32)
+    g = RNG.uniform(0.1, 4.0, size=d).astype(np.float32)
+    idx = RNG.integers(0, d, size=d).astype(np.int32)
+    got = KN.rmsnorm_quant_recon(jnp.asarray(x), jnp.asarray(g),
+                                 jnp.asarray(idx), qmax=7)
+    base = R.rmsnorm_quant_ref(jnp.asarray(x), jnp.asarray(g), 7)
+    want = np.asarray(base)[:, idx]
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_rmsnorm_quant_output_is_integral():
+    x = RNG.normal(size=(16, 64)).astype(np.float32)
+    g = RNG.uniform(0.1, 4.0, size=64).astype(np.float32)
+    out = np.asarray(KN.rmsnorm_quant(jnp.asarray(x), jnp.asarray(g)))
+    assert np.all(out == np.round(out))
+    assert out.min() >= -7 and out.max() <= 7
+
+
+def test_round_half_away_semantics():
+    x = jnp.asarray([0.5, -0.5, 1.5, -1.5, 2.5, 0.49, -0.49])
+    got = np.asarray(R.round_half_away(x))
+    np.testing.assert_array_equal(got, [1, -1, 2, -2, 3, 0, -0.0])
+
+
+@pytest.mark.parametrize("d", [64, 128, 192])
+def test_hadamard_ref_orthogonal(d):
+    x = RNG.normal(size=(8, d)).astype(np.float32)
+    y = R.hadamard_block64_ref(jnp.asarray(x))
+    # norm preserved
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=1),
+                               np.linalg.norm(x, axis=1), rtol=1e-5)
+    # involutive (symmetric orthogonal)
+    z = R.hadamard_block64_ref(y)
+    np.testing.assert_allclose(np.asarray(z), x, atol=1e-5)
+
+
+def test_vmem_footprint_fits():
+    fp = KQ.vmem_footprint_bytes(2048, 1024, 1024)
+    assert fp["fits_16MiB"]
+    assert fp["total"] == fp["act"] + fp["weight"] + fp["acc"] + fp["scale"]
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_qsm_matmul_random_sweep(seed):
+    """Property sweep: random small shapes, exactness vs integer math."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, 40))
+    n = int(rng.integers(8, 100))
+    j = int(rng.integers(8, 100))
+    xq = rng.integers(-7, 8, size=(m, n)).astype(np.float32)
+    wq = rng.integers(-7, 8, size=(n, j)).astype(np.float32)
+    scale = rng.uniform(1e-3, 0.1, size=j).astype(np.float32)
+    got = np.asarray(KQ.qsm_matmul(jnp.asarray(xq), jnp.asarray(wq),
+                                   jnp.asarray(scale)))
+    exact = (xq.astype(np.int64) @ wq.astype(np.int64)).astype(np.float32)
+    np.testing.assert_allclose(got, exact * scale, rtol=1e-6)

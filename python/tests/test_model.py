@@ -1,0 +1,125 @@
+"""Model-level tests: shapes, decode/prefill parity, outlier structure."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import data as D
+
+RNG = np.random.default_rng(3)
+
+
+def test_forward_shapes(small_cfg, small_params):
+    toks = RNG.integers(3, small_cfg.vocab, size=(2, 16)).astype(np.int32)
+    logits = M.forward(small_cfg, small_params, jnp.asarray(toks))
+    assert logits.shape == (2, 16, small_cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_param_count_matches_zoo():
+    for cfg in M.MODEL_ZOO.values():
+        assert 0.5e6 < cfg.param_count() < 20e6
+
+
+def test_decode_matches_prefill(small_cfg, small_params):
+    """Step-by-step decode logits == full prefill logits at each position."""
+    T = 12
+    toks = RNG.integers(3, small_cfg.vocab, size=(1, T)).astype(np.int32)
+    full = np.asarray(M.forward(small_cfg, small_params, jnp.asarray(toks)))
+
+    k, v = M.init_cache(small_cfg, 1, T)
+    step = jax.jit(lambda t, p, kk, vv: M.decode_step(
+        small_cfg, small_params, t, p, kk, vv))
+    for pos in range(T):
+        logits, k, v = step(jnp.asarray(toks[:, pos]), jnp.int32(pos), k, v)
+        np.testing.assert_allclose(np.asarray(logits)[0], full[0, pos],
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_causality(small_cfg, small_params):
+    """Changing a future token must not change past logits."""
+    toks = RNG.integers(3, small_cfg.vocab, size=(1, 16)).astype(np.int32)
+    a = np.asarray(M.forward(small_cfg, small_params, jnp.asarray(toks)))
+    toks2 = toks.copy()
+    toks2[0, -1] = (toks2[0, -1] + 1) % small_cfg.vocab
+    b = np.asarray(M.forward(small_cfg, small_params, jnp.asarray(toks2)))
+    np.testing.assert_allclose(a[0, :-1], b[0, :-1], rtol=1e-5, atol=1e-5)
+
+
+def test_outlier_channels_are_structured(small_cfg, small_params):
+    """The induced outlier channels dominate the residual-stream absmax."""
+    from compile.quant import calibration as C
+    batches = [RNG.integers(3, small_cfg.vocab, size=(2, 32)).astype(np.int32)]
+    calib = C.calibrate(small_cfg, small_params, batches)
+    am = calib.layers[0].attn_norm_out.absmax
+    outliers = [c % small_cfg.d_model for c in small_cfg.outlier_channels]
+    normal = [i for i in range(small_cfg.d_model) if i not in outliers]
+    assert am[outliers].min() > 2.5 * np.median(am[normal])
+
+
+def test_rope_rotation_preserves_norm(small_cfg):
+    x = RNG.normal(size=(1, 8, small_cfg.n_heads,
+                         small_cfg.head_dim)).astype(np.float32)
+    cos, sin = M.rope_angles(small_cfg, jnp.arange(8))
+    y = np.asarray(M.apply_rope(jnp.asarray(x), cos, sin))
+    np.testing.assert_allclose(np.linalg.norm(y, axis=-1),
+                               np.linalg.norm(x, axis=-1), rtol=1e-5)
+
+
+def test_perplexity_of_random_model_near_vocab(small_cfg, small_params):
+    toks = D.generate_corpus(D.SYNTH_WIKI, 2100)
+    toks = np.clip(toks, 0, small_cfg.vocab - 1)
+    ppl = M.perplexity(small_cfg, small_params, toks, seq=64)
+    assert 0.3 * small_cfg.vocab < ppl < 3 * small_cfg.vocab
+
+
+def test_choice_accuracy_random_model_near_chance(small_cfg, small_params):
+    items = [{"prefix": RNG.integers(3, 128, 8).tolist(),
+              "choices": [RNG.integers(3, 128, 4).tolist() for _ in range(4)],
+              "answer": int(RNG.integers(0, 4))} for _ in range(40)]
+    acc = M.choice_accuracy(small_cfg, small_params, items)
+    assert 0.0 <= acc <= 0.7  # random model, 4 choices
+
+
+# --------------------------------- data ------------------------------------
+
+def test_corpus_deterministic():
+    a = D.generate_corpus(D.SYNTH_WIKI, 5000)
+    b = D.generate_corpus(D.SYNTH_WIKI, 5000)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_corpora_differ():
+    a = D.generate_corpus(D.SYNTH_WIKI, 5000)
+    b = D.generate_corpus(D.SYNTH_C4, 5000)
+    assert not np.array_equal(a, b)
+
+
+def test_batch_iterator_shapes():
+    toks = D.generate_corpus(D.SYNTH_WIKI, 10_000)
+    it = D.batch_iterator(toks, batch=4, seq=32)
+    x, y = next(it)
+    assert x.shape == (4, 32) and y.shape == (4, 32)
+    np.testing.assert_array_equal(x[:, 1:], y[:, :-1])
+
+
+@pytest.mark.parametrize("name", D.TASK_NAMES)
+def test_tasks_well_formed(name):
+    items = D.make_task(name, 20, seed=5)
+    n_choices = 2 if name in ("piqa", "winogrande") else 4
+    for it in items:
+        assert len(it.choices) == n_choices
+        assert 0 <= it.answer < n_choices
+        assert all(0 <= t < D.VOCAB_SIZE
+                   for ch in it.choices for t in ch)
+        # the true continuation is present at the answer slot
+        assert len(it.choices[it.answer]) in (12, 24)
+
+
+def test_task_deterministic():
+    a = D.make_task("piqa", 10, seed=5)
+    b = D.make_task("piqa", 10, seed=5)
+    assert all(x.choices == y.choices and x.answer == y.answer
+               for x, y in zip(a, b))

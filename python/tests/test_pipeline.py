@@ -1,0 +1,175 @@
+"""Pipeline-level tests: method registry, QSM model structure, orderings,
+qmod roundtrip, Pallas-path equivalence."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import qmod as QM
+from compile.quant import pipeline as P
+from compile.quant import baselines as B
+from compile.quant.qforward import quant_forward, fp_quant_model
+
+RNG = np.random.default_rng(11)
+
+
+@pytest.fixture(scope="module")
+def mq_model(small_cfg, small_params, small_batches, small_calib):
+    return P.mergequant(small_cfg, small_params, small_batches,
+                        calib=small_calib, lora_rank=4)
+
+
+def _logit_err(cfg, params, qm, toks):
+    ref = M.forward(cfg, params, jnp.asarray(toks))
+    got = quant_forward(cfg, qm, jnp.asarray(toks))
+    return float(jnp.mean(jnp.abs(got - ref)))
+
+
+def test_mergequant_structure(small_cfg, mq_model):
+    layer = mq_model["layers"][0]
+    assert layer["attn_norm"]["quant"] is not None
+    assert layer["attn_norm"]["quant"]["qmax"] == 7
+    for name in ("q", "k", "v", "gate", "up"):
+        assert layer[name]["mode"] == "static"
+        assert layer[name]["qw"].wq.dtype == np.int8
+    for name in ("o", "down"):
+        assert layer[name]["mode"] == "dynamic"
+        assert layer[name]["hadamard"]  # default variant uses the rotation
+        assert 0.5 <= layer[name]["a_clip"] <= 1.0
+
+
+def test_merged_multiplier_holds_gamma_over_s(small_cfg, small_params,
+                                              small_calib, small_batches):
+    """g_merged · s == γ  (quant migration bookkeeping)."""
+    qm = P.mergequant(small_cfg, small_params, small_batches,
+                      calib=small_calib, clipping="none", lora_rank=0,
+                      do_reconstruct=False)
+    qa = 7
+    stats = small_calib.layers[0].attn_norm_out
+    s = np.maximum(stats.absmax, 1e-6) / qa
+    g_merged = qm["layers"][0]["attn_norm"]["g"]
+    gamma = np.asarray(small_params["layers"][0]["attn_norm"])
+    np.testing.assert_allclose(g_merged * s, gamma, rtol=1e-4)
+
+
+def test_fp16_wrapper_is_exact(small_cfg, small_params):
+    toks = RNG.integers(3, 128, size=(2, 16)).astype(np.int32)
+    qm = fp_quant_model(small_cfg, small_params)
+    err = _logit_err(small_cfg, small_params, qm, toks)
+    assert err < 1e-5
+
+
+def test_perchannel_beats_pertensor_static(small_cfg, small_params,
+                                           small_batches, small_calib):
+    """Fig 1's core claim on the outlier model."""
+    toks = RNG.integers(3, 128, size=(2, 32)).astype(np.int32)
+    e_channel = _logit_err(small_cfg, small_params,
+                           P.build_method("perchannel_static", small_cfg,
+                                          small_params, small_batches,
+                                          calib=small_calib), toks)
+    e_tensor = _logit_err(small_cfg, small_params,
+                          P.build_method("pertensor_static", small_cfg,
+                                         small_params, small_batches,
+                                         calib=small_calib), toks)
+    assert e_channel < e_tensor
+
+
+def test_ablation_monotone(small_cfg, small_params, small_batches,
+                           small_calib, mq_model):
+    """Table 4 shape: +clipping and +LoRA do not hurt vs QSM-only."""
+    toks = RNG.integers(3, 128, size=(4, 32)).astype(np.int32)
+    e_qsm = _logit_err(small_cfg, small_params,
+                       P.build_method("mq_qsm_only", small_cfg, small_params,
+                                      small_batches, calib=small_calib), toks)
+    e_full = _logit_err(small_cfg, small_params, mq_model, toks)
+    assert e_full < e_qsm * 1.25  # full pipeline no (much) worse
+    assert e_full < 1.0
+
+
+def test_all_registry_methods_build_and_run(small_cfg, small_params,
+                                            small_batches, small_calib):
+    toks = RNG.integers(3, 128, size=(1, 16)).astype(np.int32)
+    methods = set(P.TABLE1_METHODS + P.TABLE4_METHODS + P.TABLE5_METHODS +
+                  P.TABLE7_METHODS + P.FIG1_METHODS)
+    for meth in sorted(methods):
+        qm = P.build_method(meth, small_cfg, small_params, small_batches,
+                            calib=small_calib)
+        out = quant_forward(small_cfg, qm, jnp.asarray(toks))
+        assert np.isfinite(np.asarray(out)).all(), meth
+
+
+def test_unknown_method_raises(small_cfg, small_params, small_batches):
+    with pytest.raises(ValueError):
+        P.build_method("nope", small_cfg, small_params, small_batches)
+
+
+def test_fold_norms_preserves_forward(small_cfg, small_params):
+    toks = RNG.integers(3, 128, size=(2, 16)).astype(np.int32)
+    ref = M.forward(small_cfg, small_params, jnp.asarray(toks))
+    folded = B.fold_norms(small_params)
+    got = M.forward(small_cfg, folded, jnp.asarray(toks))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_residual_rotation_preserves_forward(small_cfg, small_params):
+    from compile.quant import hadamard as H
+    toks = RNG.integers(3, 128, size=(2, 16)).astype(np.int32)
+    ref = M.forward(small_cfg, small_params, jnp.asarray(toks))
+    rot = H.fold_residual_rotation(B.fold_norms(small_params),
+                                   H.random_hadamard_like(small_cfg.d_model, 1))
+    got = M.forward(small_cfg, rot, jnp.asarray(toks))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_qmod_roundtrip(tmp_path, small_cfg, mq_model):
+    path = tmp_path / "m.qmod"
+    QM.save_qmod(path, mq_model)
+    loaded = QM.load_qmod(path)
+    assert loaded["method"] == mq_model["method"]
+    assert loaded["config"].d_model == small_cfg.d_model
+    toks = RNG.integers(3, 128, size=(1, 16)).astype(np.int32)
+    a = quant_forward(small_cfg, mq_model, jnp.asarray(toks))
+    b = quant_forward(small_cfg, loaded, jnp.asarray(toks))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_qmod_roundtrip_fp_and_asym(tmp_path, small_cfg, small_params,
+                                    small_batches, small_calib):
+    for meth in ("fp16", "mergequant_w3_asym", "mergequant_w3_group"):
+        qm = P.build_method(meth, small_cfg, small_params, small_batches,
+                            calib=small_calib)
+        path = tmp_path / f"{meth}.qmod"
+        QM.save_qmod(path, qm)
+        loaded = QM.load_qmod(path)
+        toks = RNG.integers(3, 128, size=(1, 8)).astype(np.int32)
+        a = quant_forward(small_cfg, qm, jnp.asarray(toks))
+        b = quant_forward(small_cfg, loaded, jnp.asarray(toks))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_pallas_path_matches_ref_path(small_cfg, mq_model):
+    toks = RNG.integers(3, 128, size=(2, 16)).astype(np.int32)
+    a = quant_forward(small_cfg, mq_model, jnp.asarray(toks),
+                      use_pallas=False)
+    b = quant_forward(small_cfg, mq_model, jnp.asarray(toks),
+                      use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_quant_decode_matches_quant_prefill(small_cfg, mq_model):
+    from compile.quant.qforward import quant_decode_step
+    import jax
+    T = 8
+    toks = RNG.integers(3, 128, size=(1, T)).astype(np.int32)
+    full = np.asarray(quant_forward(small_cfg, mq_model, jnp.asarray(toks)))
+    k, v = M.init_cache(small_cfg, 1, T)
+    step = jax.jit(lambda t, p, kk, vv: quant_decode_step(
+        small_cfg, mq_model, t, p, kk, vv))
+    for pos in range(T):
+        logits, k, v = step(jnp.asarray(toks[:, pos]), jnp.int32(pos), k, v)
+        np.testing.assert_allclose(np.asarray(logits)[0], full[0, pos],
+                                   rtol=3e-3, atol=3e-3)

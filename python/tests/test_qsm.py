@@ -1,0 +1,83 @@
+"""Quantization Step Migration exactness (paper §4.1, Eq. 4–5).
+
+The central claim: merging γ/s into the norm multiplier and folding s into
+the weight rows changes *nothing* about the computed output (before weight
+quantization). These tests verify both migrations exactly.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels import ref as R
+
+RNG = np.random.default_rng(7)
+
+
+def test_quant_migration_exact():
+    """round(RMSNorm(x)/s) == round(x/RMS(x) · (γ/s))  (Eq. 4)."""
+    d = 96
+    x = RNG.normal(size=(32, d)).astype(np.float32) * 3
+    gamma = RNG.uniform(0.2, 2.0, size=d).astype(np.float32)
+    s = RNG.uniform(0.05, 0.5, size=d).astype(np.float32)
+    # unmerged: normalize with gamma, then divide by s, then round
+    normed = np.asarray(M.rmsnorm(jnp.asarray(x), jnp.asarray(gamma)))
+    lhs = np.clip(np.sign(normed / s) * np.floor(np.abs(normed / s) + 0.5),
+                  -7, 7)
+    # merged: multiplier already holds gamma/s
+    rhs = np.asarray(R.rmsnorm_quant_ref(jnp.asarray(x),
+                                         jnp.asarray(gamma / s), 7))
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+def test_dequant_migration_exact():
+    """Σ_k s_k xq_k W_kj == Σ_k xq_k (s_k W_kj)  (Eq. 5), exactly."""
+    n, j = 64, 48
+    xq = RNG.integers(-7, 8, size=(16, n)).astype(np.float32)
+    s = RNG.uniform(0.05, 0.5, size=n).astype(np.float32)
+    w = RNG.normal(size=(n, j)).astype(np.float32)
+    inside = (xq * s) @ w  # scale stuck inside the accumulation (Eq. 3)
+    migrated = xq @ (s[:, None] * w)  # scale folded into the weight
+    np.testing.assert_allclose(inside, migrated, rtol=1e-5, atol=1e-5)
+
+
+def test_qsm_end_to_end_matches_fakequant():
+    """Full static path == textbook per-channel fake-quant linear layer."""
+    d, j = 64, 32
+    x = RNG.normal(size=(24, d)).astype(np.float32) * 2
+    x[:, 5] *= 12  # outlier channel
+    gamma = RNG.uniform(0.5, 1.5, size=d).astype(np.float32)
+    w = RNG.normal(size=(d, j)).astype(np.float32)
+
+    normed = np.asarray(M.rmsnorm(jnp.asarray(x), jnp.asarray(gamma)))
+    s = np.abs(normed).max(axis=0) / 7  # per-channel calibration
+
+    # textbook: fake-quantize activations, then FP matmul
+    xq = np.clip(np.sign(normed / s) * np.floor(np.abs(normed / s) + 0.5),
+                 -7, 7)
+    want = (xq * s) @ w
+
+    # QSM: merged norm emits integers, weight carries s (no weight quant yet)
+    xq_merged = np.asarray(R.rmsnorm_quant_ref(jnp.asarray(x),
+                                               jnp.asarray(gamma / s), 7))
+    got = xq_merged @ (s[:, None] * w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_layernorm_migration_variant():
+    """LayerNorm case: both γ/s and β/s merge (paper §4.1)."""
+    d = 64
+    x = RNG.normal(size=(16, d)).astype(np.float32)
+    gamma = RNG.uniform(0.5, 1.5, size=d).astype(np.float32)
+    beta = RNG.normal(size=d).astype(np.float32) * 0.1
+    s = RNG.uniform(0.05, 0.2, size=d).astype(np.float32)
+
+    mu = x.mean(-1, keepdims=True)
+    sd = x.std(-1, keepdims=True) + 1e-5
+    ln = (x - mu) / sd * gamma + beta
+    lhs = np.round(ln / s)
+
+    merged = (x - mu) / sd * (gamma / s) + beta / s
+    rhs = np.round(merged)
+    np.testing.assert_allclose(lhs, rhs, atol=1.0)  # ties may differ by 1
+    assert np.mean(lhs != rhs) < 0.01

@@ -1,0 +1,277 @@
+"""Unit tests for quantizer / reconstruct / clipping / gptq / lora / hadamard."""
+
+import numpy as np
+import pytest
+
+from compile.quant import quantizer as Q
+from compile.quant import reconstruct as RC
+from compile.quant import clipping as CL
+from compile.quant import hadamard as H
+from compile.quant.gptq import gptq_quantize
+from compile.quant.lora import compensate
+
+RNG = np.random.default_rng(1)
+
+
+# ----------------------------- quantizer -----------------------------------
+
+def test_qmax_for_bits():
+    assert Q.qmax_for_bits(4) == 7
+    assert Q.qmax_for_bits(3) == 3
+    assert Q.qmax_for_bits(8) == 127
+
+
+@pytest.mark.parametrize("bits", [3, 4, 8])
+@pytest.mark.parametrize("sym", [True, False])
+@pytest.mark.parametrize("group", [0, 16])
+def test_weight_quant_dequant_error_bounded(bits, sym, group):
+    w = RNG.normal(size=(64, 32)).astype(np.float32)
+    qw = Q.quantize_weight(w, bits=bits, sym=sym, group=group)
+    err = np.abs(qw.dequant() - w)
+    # max error per element is half a quantization step of its group/column
+    n = w.shape[0]
+    g = group or n
+    wg = np.abs(w.reshape(n // g, g, 32))
+    step = qw.scale
+    assert np.all(err.reshape(n // g, g, 32) <= 0.5 * step[:, None, :] + 1e-5)
+
+
+def test_more_bits_less_error():
+    w = RNG.normal(size=(128, 64)).astype(np.float32)
+    errs = [Q.weight_quant_error(w, Q.quantize_weight(w, bits=b))
+            for b in (2, 3, 4, 8)]
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_grouped_no_worse_than_per_column():
+    w = RNG.normal(size=(128, 64)).astype(np.float32)
+    w[5, :] *= 30  # one huge input row ruins the whole-column scale
+    e_col = Q.weight_quant_error(w, Q.quantize_weight(w, bits=4, group=0))
+    e_grp = Q.weight_quant_error(w, Q.quantize_weight(w, bits=4, group=16))
+    assert e_grp <= e_col
+
+
+def test_asym_handles_shifted_weights():
+    w = (RNG.normal(size=(64, 32)) + 3.0).astype(np.float32)  # all-positive
+    e_sym = Q.weight_quant_error(w, Q.quantize_weight(w, bits=4, sym=True))
+    e_asym = Q.weight_quant_error(w, Q.quantize_weight(w, bits=4, sym=False))
+    assert e_asym < e_sym
+
+
+def test_quantize_sym_range():
+    x = RNG.normal(size=(100,)).astype(np.float32) * 10
+    s = Q.absmax_scale(x, axis=None, bits=4, keepdims=False)
+    xq = Q.quantize_sym(x, s, 4)
+    assert xq.min() >= -7 and xq.max() <= 7
+    assert np.all(xq == np.round(xq))
+
+
+# ----------------------------- reconstruct ---------------------------------
+
+def _scales_with_outliers(d=64, outliers=(5, 20), mag=8.0):
+    s = RNG.uniform(0.5, 1.5, size=d).astype(np.float32)
+    for o in outliers:
+        s[o] = mag
+    return s
+
+
+def test_split_threshold_eq6():
+    s = np.asarray([1.0, 2.0, 3.0, 4.0], np.float32)
+    assert RC.split_threshold(s, 0.0) == pytest.approx(2.5)
+    assert RC.split_threshold(s, 2.0) == pytest.approx(2.5 + 2 * np.std(s))
+
+
+def test_reconstruct_invariants():
+    s = _scales_with_outliers()
+    hd = RNG.uniform(0.1, 1.0, size=64)
+    r = RC.reconstruct(s, hd, alpha=2.0)
+    assert len(r.recon_idx) == 64 and len(r.fold_scale) == 64
+    assert np.all(r.fold_scale <= r.threshold + 1e-5)
+    assert set(r.pruned) & set(r.strong) == set()
+    # split parts of each strong channel sum back to its scale
+    for k in r.strong:
+        parts = r.fold_scale[r.recon_idx == k]
+        assert parts.sum() == pytest.approx(s[k], rel=1e-5)
+    # non-strong kept channels keep their scale
+    for i, src in enumerate(r.recon_idx):
+        if src not in set(r.strong):
+            assert r.fold_scale[i] == pytest.approx(s[src], rel=1e-6)
+
+
+def test_reconstruct_output_equivalence():
+    """Folded+reconstructed GEMM equals original QSM GEMM up to pruning."""
+    d, j = 64, 48
+    s = _scales_with_outliers()
+    hd = RNG.uniform(0.1, 1.0, size=d)
+    r = RC.reconstruct(s, hd, alpha=2.0)
+    w = RNG.normal(size=(d, j)).astype(np.float32)
+    xq = RNG.integers(-7, 8, size=(16, d)).astype(np.float32)
+    full = (xq * s) @ w  # exact per-channel dequant GEMM
+    recon_out = r.apply_to_activation(xq) @ r.apply_to_weight(w)
+    # identical except the pruned channels' contribution
+    pruned_contrib = (xq[:, r.pruned] * s[r.pruned]) @ w[r.pruned]
+    np.testing.assert_allclose(recon_out, full - pruned_contrib, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_neighbor_cases():
+    # case 1: adjacent outliers 5,6 -> neighbors 4,7 (no duplicates)
+    assert set(RC.neighbor_channels([5, 6], 64)) == {4, 7}
+    # case 2: outliers 5,7 with one normal channel between -> 6 counted once
+    assert sorted(RC.neighbor_channels([5, 7], 64)) == [4, 6, 8]
+    # case 3: boundary outliers
+    assert set(RC.neighbor_channels([0], 64)) == {1}
+    assert set(RC.neighbor_channels([63], 64)) == {62}
+
+
+def test_choose_pruned_schemes():
+    hd = np.arange(64, dtype=np.float64)  # importance = channel index
+    # N > M: prune least-important neighbors only
+    pr = RC.choose_pruned([10, 30], hd, 2)
+    assert pr == [9, 11]
+    # N == M
+    pr = RC.choose_pruned([10, 30], hd, 4)
+    assert sorted(pr) == [9, 11, 29, 31]
+    # N < M: all neighbors + least-important others
+    pr = RC.choose_pruned([10], hd, 4)
+    assert set(pr) >= {9, 11}
+    assert len(pr) == 4 and 0 in pr and 1 in pr
+
+
+def test_identity_reconstruction_noop():
+    s = _scales_with_outliers()
+    r = RC.identity_reconstruction(s)
+    x = RNG.normal(size=(4, 64)).astype(np.float32)
+    np.testing.assert_array_equal(r.apply_to_activation(x), x)
+    w = RNG.normal(size=(64, 8)).astype(np.float32)
+    np.testing.assert_allclose(r.apply_to_weight(w), s[:, None] * w,
+                               rtol=1e-6)
+
+
+# ----------------------------- clipping ------------------------------------
+
+def test_clip_ratios_in_grid():
+    x = RNG.normal(size=(256, 32)).astype(np.float32)
+    x[:, 3] *= 15
+    am = np.abs(x).max(axis=0)
+    w = RNG.normal(size=(32, 16)).astype(np.float32)
+    r_ad = CL.adaptive_channel_clip(x, am, w)
+    r_ch = CL.channel_clip_act_only(x, am)
+    for r in (r_ad, r_ch):
+        assert np.all((r >= 0.5 - 1e-6) & (r <= 1.0 + 1e-6))
+
+
+def test_heavy_tail_channel_gets_clipped():
+    """A channel with a moderate spike should clip below 1.0: sacrificing
+    the one spike buys resolution for the entire body of the channel."""
+    x = RNG.normal(size=(512, 8)).astype(np.float32)
+    x[0, 2] = 12.0
+    am = np.abs(x).max(axis=0)
+    r = CL.channel_clip_act_only(x, am)
+    assert r[2] < 1.0
+    # and picking that ratio really does reduce the round-off error
+    qa = 7
+    def err(ratio):
+        s = am[2] * ratio / qa
+        xq = np.clip(np.round(x[:, 2] / s), -qa, qa)
+        return float(np.sum((xq * s - x[:, 2]) ** 2))
+    assert err(r[2]) <= err(1.0)
+
+
+def test_uniform_token_clip_improves_output_mse():
+    x = RNG.standard_t(df=2, size=(512, 32)).astype(np.float32)  # heavy tails
+    w = RNG.normal(size=(32, 16)).astype(np.float32)
+    r = CL.uniform_token_clip(x, w)
+    assert 0.5 <= r <= 1.0
+
+    def out_err(clip):
+        return float(np.sum(
+            (Q.per_token_dynamic_matmul(x, Q.quantize_weight(w), clip=clip)
+             - x @ w) ** 2))
+    assert out_err(r) <= out_err(1.0) + 1e-3
+
+
+# ----------------------------- gptq -----------------------------------------
+
+def _correlated_inputs(s=512, n=64):
+    basis = RNG.normal(size=(8, n)).astype(np.float32)
+    z = RNG.normal(size=(s, 8)).astype(np.float32)
+    return z @ basis + 0.1 * RNG.normal(size=(s, n)).astype(np.float32)
+
+
+@pytest.mark.parametrize("sym,group", [(True, 0), (False, 0), (True, 16)])
+def test_gptq_beats_rtn_on_output_error(sym, group):
+    x = _correlated_inputs()
+    w = RNG.normal(size=(64, 32)).astype(np.float32)
+    ref = x @ w
+    q_rtn = Q.quantize_weight(w, bits=3, sym=sym, group=group)
+    q_gptq = gptq_quantize(w, x, bits=3, sym=sym, group=group)
+    e_rtn = float(np.sum((x @ q_rtn.dequant() - ref) ** 2))
+    e_gptq = float(np.sum((x @ q_gptq.dequant() - ref) ** 2))
+    assert e_gptq < e_rtn
+
+
+def test_gptq_handles_dead_inputs():
+    x = _correlated_inputs()
+    x[:, 7] = 0.0
+    w = RNG.normal(size=(64, 16)).astype(np.float32)
+    qw = gptq_quantize(w, x, bits=4)
+    assert np.isfinite(qw.dequant()).all()
+
+
+def test_gptq_integer_range():
+    x = _correlated_inputs()
+    w = RNG.normal(size=(64, 16)).astype(np.float32)
+    qw = gptq_quantize(w, x, bits=4)
+    assert qw.wq.min() >= -7 and qw.wq.max() <= 7
+
+
+# ----------------------------- lora ----------------------------------------
+
+def test_compensation_reduces_output_error():
+    x = _correlated_inputs()
+    w = RNG.normal(size=(64, 32)).astype(np.float32)
+
+    def quant(mat):
+        return Q.quantize_weight(mat, bits=3)
+
+    base = quant(w)
+    e_base = float(np.sum((x @ base.dequant() - x @ w) ** 2))
+    qw, ab = compensate(w, x, x, w, quant, rank=8, rounds=3)
+    e_comp = float(np.sum((x @ qw.dequant() - x @ w) ** 2))
+    assert e_comp <= e_base  # never worse (best-round early stopping)
+    assert np.linalg.matrix_rank(ab) <= 8 * 3  # rank accumulates per round
+
+
+# ----------------------------- hadamard ------------------------------------
+
+@pytest.mark.parametrize("d", [64, 128, 192, 512])
+def test_fwht_matches_dense_matrix(d):
+    x = RNG.normal(size=(4, d)).astype(np.float32)
+    hm = H.hadamard_matrix(d)
+    np.testing.assert_allclose(H.fwht_block64(x), x @ hm.T, atol=1e-4)
+
+
+def test_fwht_orthogonal_and_involutive():
+    x = RNG.normal(size=(8, 128)).astype(np.float32)
+    y = H.fwht_block64(x)
+    np.testing.assert_allclose(np.linalg.norm(y, axis=1),
+                               np.linalg.norm(x, axis=1), rtol=1e-5)
+    np.testing.assert_allclose(H.fwht_block64(y), x, atol=1e-4)
+
+
+def test_online_hadamard_fold_preserves_output():
+    x = RNG.normal(size=(16, 128)).astype(np.float32)
+    w = RNG.normal(size=(128, 32)).astype(np.float32)
+    wf = H.fold_online_hadamard_into_weight(w)
+    np.testing.assert_allclose(H.fwht_block64(x) @ wf, x @ w, atol=1e-3)
+
+
+def test_random_orthogonal_is_orthogonal():
+    q = H.random_orthogonal(64, seed=3)
+    np.testing.assert_allclose(q @ q.T, np.eye(64), atol=1e-5)
+
+
+def test_random_hadamard_like_is_orthogonal():
+    q = H.random_hadamard_like(128, seed=3)
+    np.testing.assert_allclose(q @ q.T, np.eye(128), atol=1e-4)

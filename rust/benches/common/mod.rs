@@ -1,0 +1,96 @@
+//! Shared helpers for the per-table bench binaries.
+
+#![allow(dead_code)]
+
+use mergequant::engine::{Engine, QModel};
+use mergequant::{artifacts_dir, bench};
+
+/// Load a trained bundle, or `None` when artifacts are absent.
+/// `rtn` aliases the `pertoken_dynamic` bundle (same method, Fig.-1 name).
+pub fn try_engine(model: &str, method: &str) -> Option<Engine> {
+    let file = if method == "rtn" { "pertoken_dynamic" } else { method };
+    let p = artifacts_dir()
+        .join("models")
+        .join(model)
+        .join(format!("{file}.qmod"));
+    if !p.exists() {
+        return None;
+    }
+    QModel::load(&p).ok().map(Engine::new)
+}
+
+/// Load a bundle, falling back to a synthetic model of the same mode
+/// family so speed benches run on a fresh checkout.
+pub fn engine_or_synthetic(model: &str, method: &str) -> (Engine, bool) {
+    if let Some(e) = try_engine(model, method) {
+        return (e, true);
+    }
+    let mode = match method {
+        "fp16" => "fp16",
+        "rtn" => "rtn",
+        m if m.starts_with("quarot") => "quarot",
+        _ => "mergequant",
+    };
+    (Engine::new(bench::synthetic_model(mode, 128, 512, 4, 512)), false)
+}
+
+/// Eval budget knobs (env-tunable so the full run can be scaled).
+pub fn eval_tokens() -> usize {
+    std::env::var("MQ_EVAL_TOKENS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4096)
+}
+
+pub fn task_items() -> usize {
+    std::env::var("MQ_TASK_ITEMS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24)
+}
+
+pub fn eval_ppl(engine: &Engine, corpus: &str) -> Option<f64> {
+    let toks =
+        mergequant::eval::corpus::val_stream(&artifacts_dir(), corpus).ok()?;
+    let n = eval_tokens().min(toks.len());
+    Some(mergequant::eval::perplexity(engine, &toks[..n], 256))
+}
+
+pub fn eval_task(engine: &Engine, task: &str) -> Option<f64> {
+    let items = mergequant::eval::parse_task(
+        &mergequant::eval::corpus::load_json(
+            &artifacts_dir().join("tasks").join(format!("{task}.json")),
+        )
+        .ok()?,
+    )
+    .ok()?;
+    let n = task_items().min(items.len());
+    Some(mergequant::eval::choice_accuracy(engine, &items[..n]))
+}
+
+pub const TASKS: [&str; 5] =
+    ["piqa", "arc-e", "arc-c", "hellaswag", "winogrande"];
+
+/// Paper-style accuracy row: ppl on both corpora + 5 task accuracies.
+pub fn accuracy_row(b: &mut mergequant::bench::Bench, engine: &Engine,
+                    label: &str) {
+    let mut ppl_sum = 0.0;
+    for c in ["synth-wiki", "synth-c4"] {
+        if let Some(p) = eval_ppl(engine, c) {
+            b.record(&format!("{label} ppl[{c}]"), p);
+            ppl_sum += p;
+        }
+    }
+    b.record(&format!("{label} ppl[avg]"), ppl_sum / 2.0);
+    let mut accs = Vec::new();
+    for t in TASKS {
+        if let Some(a) = eval_task(engine, t) {
+            b.record(&format!("{label} acc[{t}]"), a * 100.0);
+            accs.push(a);
+        }
+    }
+    if !accs.is_empty() {
+        b.record(&format!("{label} acc[avg]"),
+                 accs.iter().sum::<f64>() / accs.len() as f64 * 100.0);
+    }
+}

@@ -1,0 +1,50 @@
+//! Fig. 1: accuracy of per-tensor / per-token / per-channel calibration,
+//! with and without rotation, on the PIQA-like task (plus PPL for
+//! context). The reproduced claim: under 4-bit symmetric quantization only
+//! per-channel calibration holds accuracy; per-tensor collapses even with
+//! rotation; per-token needs rotation and still cannot be made static.
+
+mod common;
+
+use mergequant::bench::Bench;
+
+const VARIANTS: [(&str, &str); 6] = [
+    ("per-tensor static", "pertensor_static"),
+    ("per-tensor static + rotation", "quarot_static"),
+    ("per-token dynamic", "pertoken_dynamic"),
+    ("per-token dynamic + rotation", "pertoken_dynamic_rot"),
+    ("per-channel static (QSM)", "perchannel_static"),
+    ("per-channel static full (MergeQuant_nh)", "mergequant_nh"),
+];
+
+fn main() {
+    let mut b = Bench::new("fig1_calibration");
+    if !mergequant::bench::artifacts_ready() {
+        eprintln!("fig1 requires `make artifacts`; skipping");
+        b.finish("SKIPPED (no artifacts)");
+        return;
+    }
+    let model = "tiny-llama-s";
+    if let Some(engine) = common::try_engine(model, "fp16") {
+        if let Some(acc) = common::eval_task(&engine, "piqa") {
+            b.record("fp16 acc[piqa]", acc * 100.0);
+        }
+        if let Some(p) = common::eval_ppl(&engine, "synth-wiki") {
+            b.record("fp16 ppl[synth-wiki]", p);
+        }
+    }
+    for (label, method) in VARIANTS {
+        match common::try_engine(model, method) {
+            Some(engine) => {
+                if let Some(acc) = common::eval_task(&engine, "piqa") {
+                    b.record(&format!("{label} acc[piqa]"), acc * 100.0);
+                }
+                if let Some(p) = common::eval_ppl(&engine, "synth-wiki") {
+                    b.record(&format!("{label} ppl[synth-wiki]"), p);
+                }
+            }
+            None => eprintln!("missing bundle {model}/{method}"),
+        }
+    }
+    b.finish("calibration granularity comparison on PIQA (paper Fig. 1)");
+}

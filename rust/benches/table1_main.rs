@@ -1,0 +1,51 @@
+//! Table 1: the main accuracy comparison — perplexity on both corpora and
+//! the five zero-shot tasks, for every method row the paper reports per
+//! model. Mirrors the paper's row structure exactly (Llama-2-70B gets the
+//! reduced method set, Llama-3 only the rotation trio + MergeQuant).
+//!
+//! Budget knobs: MQ_EVAL_TOKENS (default 6144), MQ_TASK_ITEMS (default
+//! 40), MQ_TABLE1_MODELS (comma list, default "tiny-llama-s,tiny-llama3").
+
+mod common;
+
+use mergequant::bench::Bench;
+
+const PLAN: [(&str, &[&str]); 4] = [
+    ("tiny-llama-s",
+     &["fp16", "smoothquant", "omniquant", "qllm", "quarot_nh",
+       "spinquant_nh", "mergequant_nh", "quarot", "spinquant", "mergequant"]),
+    ("tiny-llama-m",
+     &["fp16", "smoothquant", "omniquant", "qllm", "quarot_nh",
+       "spinquant_nh", "mergequant_nh", "quarot", "spinquant", "mergequant"]),
+    ("tiny-llama-l",
+     &["fp16", "smoothquant", "qllm", "quarot_nh", "mergequant_nh",
+       "quarot", "spinquant", "mergequant"]),
+    ("tiny-llama3", &["fp16", "quarot", "spinquant", "mergequant"]),
+];
+
+fn main() {
+    let models_env = std::env::var("MQ_TABLE1_MODELS")
+        .unwrap_or_else(|_| "tiny-llama-s,tiny-llama3".into());
+    let selected: Vec<&str> = models_env.split(',').collect();
+    let mut b = Bench::new("table1_main");
+    if !mergequant::bench::artifacts_ready() {
+        eprintln!("table1 requires `make artifacts`; skipping");
+        b.finish("SKIPPED (no artifacts)");
+        return;
+    }
+    for (model, methods) in PLAN {
+        if !selected.contains(&model) {
+            continue;
+        }
+        for m in methods {
+            match common::try_engine(model, m) {
+                Some(engine) => {
+                    common::accuracy_row(&mut b, &engine,
+                                         &format!("{model}/{m}"));
+                }
+                None => eprintln!("missing bundle {model}/{m}; skipped"),
+            }
+        }
+    }
+    b.finish("PPL + zero-shot accuracy, all methods (paper Table 1)");
+}

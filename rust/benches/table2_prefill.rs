@@ -1,0 +1,46 @@
+//! Table 2: prefill speedup across batch sizes (paper: seq 2048, batch
+//! 1–64, Llama-2-7B). Substrate scaling: seq 512, batch 1–16 on
+//! tiny-llama-s; the reproduced quantity is the speedup column ordering
+//! QuaRot < RTN < MergeQuant (QuaRot pays the online Hadamard, RTN pays
+//! the quant pass, MergeQuant pays only the int8 gather).
+
+mod common;
+
+use mergequant::bench::Bench;
+use mergequant::engine::{KvCache, Workspace};
+
+const SEQ: usize = 512;
+
+fn main() {
+    let mut b = Bench::new("table2_prefill");
+    let methods = ["fp16", "quarot", "rtn", "mergequant"];
+    let batches: Vec<usize> =
+        if std::env::var("MQ_BENCH_FAST").is_ok() { vec![1] }
+        else { vec![1, 4, 8, 16] };
+    for &batch in &batches {
+        let mut times = std::collections::HashMap::new();
+        for m in methods {
+            let (engine, _) = common::engine_or_synthetic("tiny-llama-s", m);
+            let cfg = engine.config().clone();
+            let prompt: Vec<u32> = (0..SEQ)
+                .map(|i| 3 + (i as u32 * 13) % (cfg.vocab as u32 - 3))
+                .collect();
+            let mut ws = Workspace::new();
+            let mut caches: Vec<KvCache> = (0..batch)
+                .map(|_| KvCache::new(cfg.n_layers, SEQ, cfg.d_model))
+                .collect();
+            let t = b.measure(&format!("{m} prefill b{batch} seq{SEQ}"), || {
+                for c in caches.iter_mut() {
+                    c.reset();
+                    engine.prefill(&prompt, c, &mut ws);
+                }
+            });
+            times.insert(m, t);
+        }
+        for m in ["quarot", "rtn", "mergequant"] {
+            b.record(&format!("{m} prefill_speedup_vs_fp16 b{batch}"),
+                     times["fp16"] / times[m]);
+        }
+    }
+    b.finish("prefill speedup across batch sizes (paper Table 2)");
+}

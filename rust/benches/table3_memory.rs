@@ -1,0 +1,41 @@
+//! Table 3: memory usage for decoding one token (batch 1, seq 2048).
+//!
+//! Two views: (a) measured resident bytes of the loaded tiny bundles
+//! (weights + KV + workspace), (b) the same accounting formulas projected
+//! onto Llama-2-7B dimensions — the paper's absolute column (FP16 ≈ 13.9
+//! GB, QuaRot 4.16, RTN 3.90, MergeQuant 3.87; saving ≈ 3.58×).
+
+mod common;
+
+use mergequant::bench::Bench;
+use mergequant::engine::memory::{account_model, project, MethodKind,
+                                 LLAMA2_7B};
+
+fn main() {
+    let mut b = Bench::new("table3_memory");
+
+    // (a) measured on the tiny bundles
+    for m in ["fp16", "rtn", "quarot", "mergequant"] {
+        if let Some(engine) = common::try_engine("tiny-llama-s", m) {
+            let mb = account_model(&engine.model, 1, 2048);
+            b.record(&format!("measured {m} total_MB"),
+                     mb.total() as f64 / 1e6);
+            b.record(&format!("measured {m} weights_MB"),
+                     mb.weights as f64 / 1e6);
+            b.record(&format!("measured {m} dyn_overhead_KB"),
+                     mb.dynamic_overhead as f64 / 1e3);
+        }
+    }
+
+    // (b) projected Llama-2-7B (paper's absolute numbers)
+    let fp = project(&LLAMA2_7B, &MethodKind::Fp16, 1, 2048, 16).total();
+    b.record("7B fp16 GB", fp as f64 / 1e9);
+    for (name, kind) in [("quarot", MethodKind::QuarotDynamic),
+                         ("rtn", MethodKind::RtnDynamic),
+                         ("mergequant", MethodKind::MergeQuant)] {
+        let t = project(&LLAMA2_7B, &kind, 1, 2048, 4).total();
+        b.record(&format!("7B {name} GB"), t as f64 / 1e9);
+        b.record(&format!("7B {name} saving_factor"), fp as f64 / t as f64);
+    }
+    b.finish("memory for single-token decode, batch 1 seq 2048 (paper Table 3)");
+}

@@ -1,0 +1,31 @@
+//! Table 4: the component ablation on the Llama-3 stand-in — QuaRot with
+//! per-tensor static calibration, then +QSM (per-channel static), then
+//! +adaptive clipping, then +LoRA compensation (= full MergeQuant).
+
+mod common;
+
+use mergequant::bench::Bench;
+
+const ROWS: [(&str, &str); 5] = [
+    ("FP16", "fp16"),
+    ("QuaRot & Static", "quarot_static"),
+    ("+ QSM", "mq_qsm_only"),
+    ("+ Clipping", "mq_qsm_clip"),
+    ("+ LoRA fine-tuning (full MergeQuant)", "mergequant"),
+];
+
+fn main() {
+    let mut b = Bench::new("table4_ablation");
+    if !mergequant::bench::artifacts_ready() {
+        eprintln!("table4 requires `make artifacts`; skipping");
+        b.finish("SKIPPED (no artifacts)");
+        return;
+    }
+    for (label, method) in ROWS {
+        match common::try_engine("tiny-llama3", method) {
+            Some(engine) => common::accuracy_row(&mut b, &engine, label),
+            None => eprintln!("missing bundle tiny-llama3/{method}"),
+        }
+    }
+    b.finish("QSM / clipping / LoRA ablation on tiny-llama3 (paper Table 4)");
+}

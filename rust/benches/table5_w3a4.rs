@@ -1,0 +1,30 @@
+//! Table 5: W3A4 — 3-bit asymmetric and grouped weight quantization on
+//! the Llama-2-7B stand-in, QuaRot vs MergeQuant.
+
+mod common;
+
+use mergequant::bench::Bench;
+
+const ROWS: [(&str, &str); 5] = [
+    ("FP16", "fp16"),
+    ("QuaRot w3-asym", "quarot_w3_asym"),
+    ("QuaRot w3-group", "quarot_w3_group"),
+    ("MergeQuant w3-asym", "mergequant_w3_asym"),
+    ("MergeQuant w3-group", "mergequant_w3_group"),
+];
+
+fn main() {
+    let mut b = Bench::new("table5_w3a4");
+    if !mergequant::bench::artifacts_ready() {
+        eprintln!("table5 requires `make artifacts`; skipping");
+        b.finish("SKIPPED (no artifacts)");
+        return;
+    }
+    for (label, method) in ROWS {
+        match common::try_engine("tiny-llama-s", method) {
+            Some(engine) => common::accuracy_row(&mut b, &engine, label),
+            None => eprintln!("missing bundle tiny-llama-s/{method}"),
+        }
+    }
+    b.finish("W3A4 weight-quantization variants (paper Table 5)");
+}

@@ -1,0 +1,51 @@
+//! Table 6: dimension reconstruction vs dynamic quantization step latency.
+//!
+//! Exactly the paper's sweep — batch {1,16,32} × hidden {4096,5120,8192} ×
+//! sequence {1,128,256} — on the raw ops (no model): the per-token dynamic
+//! Quant pass (read f32, absmax-reduce, divide, round, write int8) against
+//! MergeQuant's only runtime addition, the reconstruction gather over an
+//! int8 tensor. Expect gather to win by ~1.5–3×, matching the paper's
+//! 1.54×–2.96× column.
+
+use mergequant::bench::Bench;
+use mergequant::quant::dynamic::per_token_quant;
+use mergequant::quant::reconstruct::reconstruct_i8;
+use mergequant::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("table6_reconstruct");
+    let mut rng = Rng::new(6);
+    for &batch in &[1usize, 16, 32] {
+        for &hidden in &[4096usize, 5120, 8192] {
+            for &seqlen in &[1usize, 128, 256] {
+                let m = batch * seqlen;
+                let x: Vec<f32> =
+                    (0..m * hidden).map(|_| rng.normal() * 2.0).collect();
+                let xq_src: Vec<i8> = (0..m * hidden)
+                    .map(|_| rng.usize(0, 15) as i8 - 7)
+                    .collect();
+                let idx: Vec<u32> = (0..hidden)
+                    .map(|_| rng.usize(0, hidden) as u32)
+                    .collect();
+                let mut xq = vec![0i8; m * hidden];
+                let mut scales = vec![0f32; m];
+                let mut out = vec![0i8; m * hidden];
+
+                let t_dyn = b.measure(
+                    &format!("dynamic_quant b{batch} h{hidden} s{seqlen}"),
+                    || per_token_quant(&x, m, hidden, 7, 1.0, &mut xq,
+                                       &mut scales),
+                );
+                let t_rec = b.measure(
+                    &format!("reconstruction b{batch} h{hidden} s{seqlen}"),
+                    || reconstruct_i8(&xq_src, &idx, m, hidden, &mut out),
+                );
+                b.record(
+                    &format!("speedup b{batch} h{hidden} s{seqlen}"),
+                    t_dyn / t_rec,
+                );
+            }
+        }
+    }
+    b.finish("dimension reconstruction vs dynamic quant step (paper Table 6)");
+}

@@ -1,0 +1,46 @@
+//! Table 7: clipping ablation (no clipping / naive channel clipping /
+//! adaptive clipping) under activation-only quantization, PPL on both
+//! corpora. Run on the smallest and the hardest-to-quantize models.
+
+mod common;
+
+use mergequant::bench::Bench;
+
+const ROWS: [(&str, &str); 4] = [
+    ("FP16", "fp16"),
+    ("No-clipping", "mq_noclip"),
+    ("Channel-clipping", "mq_channelclip"),
+    ("Adaptive clipping", "mq_adaptiveclip"),
+];
+
+fn main() {
+    let mut b = Bench::new("table7_clipping");
+    if !mergequant::bench::artifacts_ready() {
+        eprintln!("table7 requires `make artifacts`; skipping");
+        b.finish("SKIPPED (no artifacts)");
+        return;
+    }
+    for model in ["tiny-llama-s", "tiny-llama3"] {
+        for (label, method) in ROWS {
+            match common::try_engine(model, method) {
+                Some(engine) => {
+                    let mut sum = 0.0;
+                    let mut k = 0;
+                    for c in ["synth-wiki", "synth-c4"] {
+                        if let Some(p) = common::eval_ppl(&engine, c) {
+                            b.record(&format!("{model} {label} ppl[{c}]"), p);
+                            sum += p;
+                            k += 1;
+                        }
+                    }
+                    if k == 2 {
+                        b.record(&format!("{model} {label} ppl[avg]"),
+                                 sum / 2.0);
+                    }
+                }
+                None => eprintln!("missing bundle {model}/{method}"),
+            }
+        }
+    }
+    b.finish("clipping component ablation (paper Table 7)");
+}

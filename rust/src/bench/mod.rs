@@ -1,0 +1,202 @@
+//! Bench harness (criterion substitute): named measurements with warmup,
+//! adaptive iteration counts, and paper-style table printing. Every
+//! `rust/benches/*.rs` binary (one per paper table/figure) is built on
+//! this and appends machine-readable JSON lines to
+//! `artifacts/bench_results.jsonl` for EXPERIMENTS.md.
+
+use std::io::Write as _;
+use std::time::Duration;
+
+use crate::util::json::{num, obj, s, Json};
+use crate::util::stats::{summarize, time_adaptive, Summary};
+
+pub struct Bench {
+    pub name: String,
+    rows: Vec<(String, Summary, f64)>, // (label, timing, aux metric)
+    min_time: Duration,
+    max_iters: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        let fast = std::env::var("MQ_BENCH_FAST").is_ok();
+        Bench {
+            name: name.into(),
+            rows: Vec::new(),
+            min_time: if fast { Duration::from_millis(50) }
+                      else { Duration::from_millis(300) },
+            max_iters: if fast { 10 } else { 200 },
+        }
+    }
+
+    /// Measure a closure; returns the mean seconds.
+    pub fn measure<F: FnMut()>(&mut self, label: &str, f: F) -> f64 {
+        let times = time_adaptive(self.min_time, self.max_iters, f);
+        let s = summarize(&times);
+        let mean = s.mean;
+        self.rows.push((label.to_string(), s, f64::NAN));
+        eprintln!("  [{}] {label}: {:.3} ms (p50 {:.3} ms, n={})",
+                  self.name, mean * 1e3,
+                  self.rows.last().unwrap().1.p50 * 1e3,
+                  self.rows.last().unwrap().1.n);
+        mean
+    }
+
+    /// Record a non-timing metric row (accuracy, memory, speedup…).
+    pub fn record(&mut self, label: &str, value: f64) {
+        let mut s = Summary::default();
+        s.mean = value;
+        s.n = 1;
+        self.rows.push((label.to_string(), s, value));
+        eprintln!("  [{}] {label}: {value:.4}", self.name);
+    }
+
+    /// Print a paper-style table and persist JSON lines.
+    pub fn finish(self, header: &str) {
+        println!("\n=== {} — {header} ===", self.name);
+        for (label, s, aux) in &self.rows {
+            if aux.is_nan() {
+                println!("{label:<48} {:>10.4} ms  (p50 {:.4}, p90 {:.4})",
+                         s.mean * 1e3, s.p50 * 1e3, s.p90 * 1e3);
+            } else {
+                println!("{label:<48} {aux:>12.4}");
+            }
+        }
+        let path = crate::artifacts_dir().join("bench_results.jsonl");
+        if let Some(parent) = path.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+        {
+            for (label, sum, aux) in &self.rows {
+                let j = obj(vec![
+                    ("bench", s(&self.name)),
+                    ("label", s(label)),
+                    ("mean_s", num(sum.mean)),
+                    ("p50_s", num(sum.p50)),
+                    ("n", num(sum.n as f64)),
+                    ("value", if aux.is_nan() { Json::Null } else { num(*aux) }),
+                ]);
+                let _ = writeln!(f, "{}", j.to_string());
+            }
+        }
+    }
+}
+
+/// Shared helper: does the full artifacts tree exist? Benches degrade to
+/// synthetic-weight mode when it does not (CI without `make artifacts`).
+pub fn artifacts_ready() -> bool {
+    crate::artifacts_dir().join("manifest.json").exists()
+}
+
+/// Build a synthetic QModel for op-level benches that do not need trained
+/// weights (Table 6, and fallbacks). `mode`: "fp16" | "mergequant" |
+/// "rtn" | "quarot".
+pub fn synthetic_model(mode: &str, d: usize, ff: usize, n_layers: usize,
+                       vocab: usize) -> crate::engine::QModel {
+    use crate::engine::qmod::*;
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(0xC0FFEE);
+    let config = ModelConfig {
+        name: format!("synthetic-{mode}"),
+        vocab,
+        d_model: d,
+        n_heads: (d / 32).max(1),
+        d_ff: ff,
+        n_layers,
+        max_seq: 4096,
+        rope_theta: 10000.0,
+    };
+    fn normal(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        let mut v = vec![0f32; len];
+        rng.fill_normal(&mut v, scale);
+        v
+    }
+    fn fp_lin(rng: &mut Rng, n: usize, j: usize) -> Linear {
+        Linear::Fp { wt: normal(rng, n * j, 0.05), n, j }
+    }
+    fn q_lin(rng: &mut Rng, n: usize, j: usize, mode: QuantMode) -> Linear {
+        let wt: Vec<i8> =
+            (0..n * j).map(|_| rng.usize(0, 15) as i8 - 7).collect();
+        let mut packed = Vec::with_capacity(j * n.div_ceil(2));
+        for c in 0..j {
+            packed.extend(crate::quant::pack::pack_int4(&wt[c * n..(c + 1) * n]));
+        }
+        let scale: Vec<f32> = (0..j).map(|_| 0.01 + rng.f32() * 0.01).collect();
+        Linear::Quant {
+            qw: QWeight { n, j, wt, packed: Some(packed), scale, zero: None,
+                          group: 0, bits: 4 },
+            mode,
+        }
+    }
+    fn make_norm(rng: &mut Rng, quant: bool, recon: bool, d: usize) -> Norm {
+        Norm {
+            g: (0..d).map(|_| 0.5 + rng.f32()).collect(),
+            quant_qmax: if quant { Some(7) } else { None },
+            recon_idx: if recon {
+                Some((0..d).map(|_| rng.usize(0, d) as u32).collect())
+            } else {
+                None
+            },
+        }
+    }
+    fn dynq(rng: &mut Rng, n: usize, j: usize, h: bool, clip: f32) -> Linear {
+        q_lin(rng, n, j, QuantMode::Dynamic {
+            a_qmax: 7, a_clip: clip, hadamard: h })
+    }
+    let mut layers = Vec::new();
+    for _ in 0..n_layers {
+        let layer = match mode {
+            "fp16" => LayerWeights {
+                attn_norm: make_norm(&mut rng, false, false, d),
+                q: fp_lin(&mut rng, d, d),
+                k: fp_lin(&mut rng, d, d),
+                v: fp_lin(&mut rng, d, d),
+                o: fp_lin(&mut rng, d, d),
+                ffn_norm: make_norm(&mut rng, false, false, d),
+                gate: fp_lin(&mut rng, d, ff),
+                up: fp_lin(&mut rng, d, ff),
+                down: fp_lin(&mut rng, ff, d),
+            },
+            "mergequant" => LayerWeights {
+                attn_norm: make_norm(&mut rng, true, true, d),
+                q: q_lin(&mut rng, d, d, QuantMode::Static),
+                k: q_lin(&mut rng, d, d, QuantMode::Static),
+                v: q_lin(&mut rng, d, d, QuantMode::Static),
+                o: dynq(&mut rng, d, d, false, 0.75),
+                ffn_norm: make_norm(&mut rng, true, true, d),
+                gate: q_lin(&mut rng, d, ff, QuantMode::Static),
+                up: q_lin(&mut rng, d, ff, QuantMode::Static),
+                down: dynq(&mut rng, ff, d, false, 0.65),
+            },
+            "rtn" | "quarot" => {
+                let had = mode == "quarot";
+                LayerWeights {
+                    attn_norm: make_norm(&mut rng, false, false, d),
+                    q: dynq(&mut rng, d, d, false, 1.0),
+                    k: dynq(&mut rng, d, d, false, 1.0),
+                    v: dynq(&mut rng, d, d, false, 1.0),
+                    o: dynq(&mut rng, d, d, false, 1.0),
+                    ffn_norm: make_norm(&mut rng, false, false, d),
+                    gate: dynq(&mut rng, d, ff, false, 1.0),
+                    up: dynq(&mut rng, d, ff, false, 1.0),
+                    down: dynq(&mut rng, ff, d, had, 1.0),
+                }
+            }
+            other => panic!("unknown synthetic mode {other}"),
+        };
+        layers.push(layer);
+    }
+    QModel {
+        config,
+        method: mode.into(),
+        embed: normal(&mut rng, vocab * d, 0.02),
+        outlier_gain: vec![1.0; d],
+        final_norm: vec![1.0; d],
+        lm_head_t: normal(&mut rng, vocab * d, 0.05),
+        layers,
+    }
+}

@@ -1,0 +1,91 @@
+//! Minimal CLI argument parser (clap substitute).
+//!
+//! Supports `program <subcommand> --flag value --bool-flag positional…`.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let next_is_value =
+                    it.peek().is_some_and(|n| !n.starts_with("--"));
+                if next_is_value {
+                    args.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.insert(name.to_string(), "true".into());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("serve --model tiny-llama-s --port 9000 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("model"), Some("tiny-llama-s"));
+        assert_eq!(a.get_usize("port", 0), 9000);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn positional() {
+        let a = parse("eval model.qmod --seq 128");
+        assert_eq!(a.positional, vec!["model.qmod"]);
+        assert_eq!(a.get_usize("seq", 0), 128);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("serve");
+        assert_eq!(a.get_or("model", "default"), "default");
+        assert_eq!(a.get_usize("port", 8080), 8080);
+        assert!(!a.get_bool("verbose"));
+    }
+}

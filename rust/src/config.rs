@@ -1,0 +1,109 @@
+//! Launcher configuration: resolve model bundles + scheduler settings from
+//! CLI flags and/or a JSON config file — the deployment-facing config
+//! system (DESIGN.md deliverable (a)).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::SchedulerConfig;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub model: String,
+    pub method: String,
+    pub scheduler: SchedulerConfig,
+    pub port: u16,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "tiny-llama-s".into(),
+            method: "mergequant".into(),
+            scheduler: SchedulerConfig::default(),
+            port: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Load from a JSON file, falling back to defaults per-field.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(anyhow::Error::msg)?;
+        Ok(Self::from_json(&j))
+    }
+
+    pub fn from_json(j: &Json) -> Self {
+        let mut cfg = ServeConfig::default();
+        if let Some(m) = j.get("model").and_then(Json::as_str) {
+            cfg.model = m.into();
+        }
+        if let Some(m) = j.get("method").and_then(Json::as_str) {
+            cfg.method = m.into();
+        }
+        if let Some(p) = j.get("port").and_then(Json::as_usize) {
+            cfg.port = p as u16;
+        }
+        if let Some(s) = j.get("scheduler") {
+            let d = SchedulerConfig::default();
+            cfg.scheduler = SchedulerConfig {
+                max_batch: s.get("max_batch").and_then(Json::as_usize)
+                    .unwrap_or(d.max_batch),
+                kv_slabs: s.get("kv_slabs").and_then(Json::as_usize)
+                    .unwrap_or(d.kv_slabs),
+                max_seq: s.get("max_seq").and_then(Json::as_usize)
+                    .unwrap_or(d.max_seq),
+                max_prefills_per_iter: s.get("max_prefills_per_iter")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.max_prefills_per_iter),
+                queue_cap: s.get("queue_cap").and_then(Json::as_usize)
+                    .unwrap_or(d.queue_cap),
+                prefill_chunk: s.get("prefill_chunk")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.prefill_chunk),
+            };
+        }
+        cfg
+    }
+
+    /// Path of the configured `.qmod` bundle.
+    pub fn bundle_path(&self) -> PathBuf {
+        crate::artifacts_dir()
+            .join("models")
+            .join(&self.model)
+            .join(format!("{}.qmod", self.method))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_json_overrides() {
+        let j = Json::parse(
+            r#"{"model":"tiny-llama-m","method":"rtn",
+                "scheduler":{"max_batch":4,"max_seq":256},"port":9999}"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_json(&j);
+        assert_eq!(c.model, "tiny-llama-m");
+        assert_eq!(c.method, "rtn");
+        assert_eq!(c.scheduler.max_batch, 4);
+        assert_eq!(c.scheduler.max_seq, 256);
+        assert_eq!(c.scheduler.queue_cap,
+                   SchedulerConfig::default().queue_cap);
+        assert_eq!(c.port, 9999);
+    }
+
+    #[test]
+    fn bundle_path_shape() {
+        let c = ServeConfig::default();
+        let p = c.bundle_path();
+        assert!(p.ends_with("models/tiny-llama-s/mergequant.qmod"));
+    }
+}

@@ -1,0 +1,134 @@
+//! Fixed-slab KV-cache pool.
+//!
+//! Pre-allocates `capacity` KV slabs (each `max_seq` tokens) and hands out
+//! ids. Running out of slabs is the backpressure signal the scheduler uses
+//! to stop admitting. Invariants enforced here and property-tested in
+//! `tests/coordinator_props.rs`:
+//!   * a slab id is never handed out twice without an intervening free;
+//!   * freeing an unallocated id is an error;
+//!   * freed slabs are reset (len == 0) before reuse.
+
+use crate::engine::KvCache;
+
+pub struct KvPool {
+    slabs: Vec<KvCache>,
+    free: Vec<usize>,
+    allocated: Vec<bool>,
+}
+
+impl KvPool {
+    pub fn new(capacity: usize, n_layers: usize, max_seq: usize, d: usize)
+               -> Self {
+        let slabs =
+            (0..capacity).map(|_| KvCache::new(n_layers, max_seq, d)).collect();
+        KvPool {
+            slabs,
+            free: (0..capacity).rev().collect(),
+            allocated: vec![false; capacity],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slabs.len()
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn alloc(&mut self) -> Option<usize> {
+        let id = self.free.pop()?;
+        debug_assert!(!self.allocated[id]);
+        self.allocated[id] = true;
+        self.slabs[id].reset();
+        Some(id)
+    }
+
+    pub fn dealloc(&mut self, id: usize) {
+        assert!(self.allocated[id], "double free of KV slab {id}");
+        self.allocated[id] = false;
+        self.free.push(id);
+    }
+
+    pub fn get_mut(&mut self, id: usize) -> &mut KvCache {
+        assert!(self.allocated[id], "access to unallocated slab {id}");
+        &mut self.slabs[id]
+    }
+
+    /// Mutable access to several distinct slabs at once (batched decode).
+    pub fn get_many_mut(&mut self, ids: &[usize]) -> Vec<&mut KvCache> {
+        // verify distinctness
+        for (a, &ia) in ids.iter().enumerate() {
+            assert!(self.allocated[ia], "slab {ia} not allocated");
+            for &ib in &ids[a + 1..] {
+                assert_ne!(ia, ib, "duplicate slab id in batch");
+            }
+        }
+        // split via raw pointers, safe because ids are distinct
+        let base = self.slabs.as_mut_ptr();
+        ids.iter()
+            .map(|&i| unsafe { &mut *base.add(i) })
+            .collect()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.slabs.iter().map(|s| s.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool() -> KvPool {
+        KvPool::new(4, 2, 16, 8)
+    }
+
+    #[test]
+    fn alloc_until_empty() {
+        let mut p = pool();
+        let ids: Vec<_> = (0..4).map(|_| p.alloc().unwrap()).collect();
+        assert_eq!(p.available(), 0);
+        assert!(p.alloc().is_none());
+        let mut sorted = ids.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4, "ids must be unique");
+    }
+
+    #[test]
+    fn freed_slab_is_reset() {
+        let mut p = pool();
+        let id = p.alloc().unwrap();
+        p.get_mut(id).len = 7;
+        p.dealloc(id);
+        let id2 = p.alloc().unwrap();
+        assert_eq!(p.get_mut(id2).len, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut p = pool();
+        let id = p.alloc().unwrap();
+        p.dealloc(id);
+        p.dealloc(id);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate slab id")]
+    fn duplicate_batch_ids_panic() {
+        let mut p = pool();
+        let id = p.alloc().unwrap();
+        let _ = p.get_many_mut(&[id, id]);
+    }
+
+    #[test]
+    fn get_many_mut_distinct() {
+        let mut p = pool();
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        let caches = p.get_many_mut(&[a, b]);
+        assert_eq!(caches.len(), 2);
+    }
+}

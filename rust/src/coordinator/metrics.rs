@@ -1,0 +1,88 @@
+//! Serving metrics: counters + latency/TTFT recorders.
+
+use std::time::Duration;
+
+use crate::util::stats::{summarize, Summary};
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests_completed: u64,
+    pub prompt_tokens: u64,
+    pub generated_tokens: u64,
+    pub decode_iterations: u64,
+    pub prefill_calls: u64,
+    pub peak_active: usize,
+    pub rejected: u64,
+    latencies_s: Vec<f64>,
+    ttfts_s: Vec<f64>,
+    batch_sizes: Vec<f64>,
+}
+
+impl Metrics {
+    pub fn record_completion(&mut self, latency: Duration, ttft: Duration,
+                             prompt_len: usize, generated: usize) {
+        self.requests_completed += 1;
+        self.prompt_tokens += prompt_len as u64;
+        self.generated_tokens += generated as u64;
+        self.latencies_s.push(latency.as_secs_f64());
+        self.ttfts_s.push(ttft.as_secs_f64());
+    }
+
+    pub fn record_decode_iter(&mut self, batch: usize) {
+        self.decode_iterations += 1;
+        self.batch_sizes.push(batch as f64);
+        self.peak_active = self.peak_active.max(batch);
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        summarize(&self.latencies_s)
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        summarize(&self.ttfts_s)
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        summarize(&self.batch_sizes).mean
+    }
+
+    pub fn report(&self) -> String {
+        let lat = self.latency_summary();
+        let ttft = self.ttft_summary();
+        format!(
+            "requests={} prompt_toks={} gen_toks={} decode_iters={} \
+             mean_batch={:.2} peak_batch={} lat_p50={:.1}ms lat_p99={:.1}ms \
+             ttft_p50={:.1}ms",
+            self.requests_completed,
+            self.prompt_tokens,
+            self.generated_tokens,
+            self.decode_iterations,
+            self.mean_batch_size(),
+            self.peak_active,
+            lat.p50 * 1e3,
+            lat.p99 * 1e3,
+            ttft.p50 * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::default();
+        m.record_completion(Duration::from_millis(100),
+                            Duration::from_millis(10), 8, 4);
+        m.record_completion(Duration::from_millis(200),
+                            Duration::from_millis(20), 16, 8);
+        m.record_decode_iter(2);
+        assert_eq!(m.requests_completed, 2);
+        assert_eq!(m.prompt_tokens, 24);
+        assert_eq!(m.generated_tokens, 12);
+        assert_eq!(m.peak_active, 2);
+        assert!((m.latency_summary().mean - 0.15).abs() < 1e-9);
+        assert!(!m.report().is_empty());
+    }
+}

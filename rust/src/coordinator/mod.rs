@@ -1,0 +1,32 @@
+//! The serving coordinator: request router, continuous batcher,
+//! prefill/decode scheduler, KV-cache pool, metrics, and a TCP gateway.
+//!
+//! Architecture (vLLM-router-like, scaled to one box):
+//!
+//! ```text
+//!  clients ──TCP/json──► gateway ──mpsc──► scheduler (owns Engine)
+//!                                             │  admit → prefill (slab from KvPool)
+//!                                             │  step  → decode_batch over active set
+//!                                             ▼
+//!                                       responses (mpsc per request)
+//! ```
+//!
+//! The scheduler runs iteration-level (continuous) batching: every loop it
+//! admits up to `max_prefills_per_iter` pending requests (bounded by free
+//! KV slabs and `max_batch`), then advances *all* active sequences one
+//! decode step in a single batched engine call. Invariants (property-
+//! tested): every request is answered exactly once, the active set never
+//! exceeds `max_batch`, KV slabs are never double-allocated, FIFO
+//! admission order.
+
+pub mod kv_pool;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use kv_pool::KvPool;
+pub use metrics::Metrics;
+pub use request::{Request, Response};
+pub use scheduler::{Scheduler, SchedulerConfig};
+pub use server::Server;

@@ -1,0 +1,46 @@
+//! Request/response types of the serving layer.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    /// Optional stop token (EOS).
+    pub stop_token: Option<u32>,
+    pub submitted: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new: usize) -> Self {
+        Request {
+            id,
+            prompt,
+            max_new,
+            stop_token: None,
+            submitted: Instant::now(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    /// Time to first token (prefill complete → first logit sampled).
+    pub ttft: Duration,
+    /// Total latency from submission to completion.
+    pub latency: Duration,
+    pub prompt_len: usize,
+}
+
+impl Response {
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        let decode_time = self.latency.saturating_sub(self.ttft);
+        if decode_time.is_zero() || self.tokens.len() <= 1 {
+            return 0.0;
+        }
+        (self.tokens.len() - 1) as f64 / decode_time.as_secs_f64()
+    }
+}

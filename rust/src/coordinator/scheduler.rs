@@ -1,0 +1,304 @@
+//! Iteration-level (continuous-batching) scheduler.
+//!
+//! Owns the engine, a KV pool and the pending queue. Each call to
+//! [`Scheduler::step`] performs one scheduling iteration:
+//!
+//! 1. **Admission (router):** pop pending requests FIFO while there is
+//!    batch room and a free KV slab, capped at `max_prefills_per_iter`
+//!    per iteration to bound decode stalls; run their prefill and sample
+//!    their first token (TTFT point).
+//! 2. **Decode:** one batched decode step across all active sequences.
+//! 3. **Completion:** sequences that hit `max_new` / stop token / cache
+//!    capacity are finalized, their slabs returned to the pool.
+//!
+//! The scheduler is synchronous and single-threaded by design (the engine
+//! is CPU-bound); [`super::server::Server`] wraps it in a worker thread.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::engine::{model::argmax, Engine, Workspace};
+
+use super::kv_pool::KvPool;
+use super::metrics::Metrics;
+use super::request::{Request, Response};
+
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Max concurrently active sequences (decode batch cap).
+    pub max_batch: usize,
+    /// KV slabs (≥ max_batch; extra slabs buffer admissions).
+    pub kv_slabs: usize,
+    /// Per-sequence KV capacity.
+    pub max_seq: usize,
+    /// New prefills admitted per iteration.
+    pub max_prefills_per_iter: usize,
+    /// Pending-queue bound (backpressure: submit fails beyond it).
+    pub queue_cap: usize,
+    /// Chunked prefill: prompts longer than this are prefilled
+    /// `prefill_chunk` tokens per iteration so long prompts cannot stall
+    /// the decode batch (0 ⇒ disabled, whole prompt in one call).
+    pub prefill_chunk: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch: 8,
+            kv_slabs: 8,
+            max_seq: 512,
+            max_prefills_per_iter: 2,
+            queue_cap: 1024,
+            prefill_chunk: 0,
+        }
+    }
+}
+
+struct Active {
+    req: Request,
+    slab: usize,
+    tokens: Vec<u32>,
+    next: u32,
+    ttft: Duration,
+    done: bool,
+}
+
+/// One request mid-way through a chunked prefill (at most one in flight;
+/// that alone bounds per-iteration prefill work by `prefill_chunk`).
+struct Prefilling {
+    req: Request,
+    slab: usize,
+    consumed: usize,
+}
+
+pub struct Scheduler {
+    engine: Engine,
+    cfg: SchedulerConfig,
+    pool: KvPool,
+    pending: VecDeque<Request>,
+    prefilling: Option<Prefilling>,
+    active: Vec<Active>,
+    ws: Workspace,
+    pub metrics: Metrics,
+    completed: Vec<Response>,
+}
+
+impl Scheduler {
+    pub fn new(engine: Engine, cfg: SchedulerConfig) -> Self {
+        let mc = engine.config();
+        let pool = KvPool::new(cfg.kv_slabs, mc.n_layers, cfg.max_seq,
+                               mc.d_model);
+        Scheduler {
+            engine,
+            cfg,
+            pool,
+            pending: VecDeque::new(),
+            prefilling: None,
+            active: Vec::new(),
+            ws: Workspace::new(),
+            metrics: Metrics::default(),
+            completed: Vec::new(),
+        }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Enqueue a request; `Err` when the queue is full (backpressure).
+    pub fn submit(&mut self, req: Request) -> Result<(), Request> {
+        if self.pending.len() >= self.cfg.queue_cap {
+            self.metrics.rejected += 1;
+            return Err(req);
+        }
+        self.pending.push_back(req);
+        Ok(())
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || !self.active.is_empty()
+            || self.prefilling.is_some()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Drain finished responses accumulated since the last call.
+    pub fn take_completed(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.completed)
+    }
+
+    /// One scheduling iteration. Returns number of sequences advanced.
+    pub fn step(&mut self) -> usize {
+        self.admit();
+        self.decode();
+        self.finalize();
+        self.active.len()
+    }
+
+    /// Advance the in-flight chunked prefill by one chunk; returns true
+    /// if it consumed this iteration's prefill budget.
+    fn advance_chunked(&mut self) -> bool {
+        let Some(mut pf) = self.prefilling.take() else { return false };
+        let chunk = self.cfg.prefill_chunk.max(1);
+        let end = (pf.consumed + chunk).min(pf.req.prompt.len());
+        let toks: Vec<u32> = pf.req.prompt[pf.consumed..end].to_vec();
+        let cache = self.pool.get_mut(pf.slab);
+        self.engine.prefill(&toks, cache, &mut self.ws);
+        self.metrics.prefill_calls += 1;
+        pf.consumed = end;
+        if pf.consumed == pf.req.prompt.len() {
+            let vocab = self.engine.config().vocab;
+            let first = argmax(
+                &self.ws.logits[(toks.len() - 1) * vocab..toks.len() * vocab],
+            ) as u32;
+            let ttft = pf.req.submitted.elapsed();
+            self.active.push(Active {
+                req: pf.req,
+                slab: pf.slab,
+                tokens: vec![first],
+                next: first,
+                ttft,
+                done: false,
+            });
+        } else {
+            self.prefilling = Some(pf);
+        }
+        true
+    }
+
+    fn admit(&mut self) {
+        let mut admitted = usize::from(self.advance_chunked());
+        while admitted < self.cfg.max_prefills_per_iter
+            && self.prefilling.is_none()
+            && self.active.len() < self.cfg.max_batch
+            && !self.pending.is_empty()
+        {
+            // A prompt longer than the slab can never run — reject.
+            let prompt_len = self.pending.front().unwrap().prompt.len();
+            if prompt_len + 1 >= self.cfg.max_seq {
+                let req = self.pending.pop_front().unwrap();
+                self.metrics.rejected += 1;
+                self.completed.push(Response {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    ttft: Duration::ZERO,
+                    latency: req.submitted.elapsed(),
+                    prompt_len,
+                });
+                continue;
+            }
+            let Some(slab) = self.pool.alloc() else { break };
+            let req = self.pending.pop_front().unwrap();
+            // Long prompts go through the chunked path so one admission
+            // cannot stall the whole decode batch.
+            if self.cfg.prefill_chunk > 0
+                && req.prompt.len() > self.cfg.prefill_chunk
+            {
+                self.prefilling = Some(Prefilling { req, slab, consumed: 0 });
+                admitted += usize::from(self.advance_chunked());
+                continue;
+            }
+            let vocab = self.engine.config().vocab;
+            let cache = self.pool.get_mut(slab);
+            self.engine.prefill(&req.prompt, cache, &mut self.ws);
+            self.metrics.prefill_calls += 1;
+            let last = &self.ws.logits
+                [(req.prompt.len() - 1) * vocab..req.prompt.len() * vocab];
+            let first = argmax(last) as u32;
+            let ttft = req.submitted.elapsed();
+            self.active.push(Active {
+                req,
+                slab,
+                tokens: vec![first],
+                next: first,
+                ttft,
+                done: false,
+            });
+            admitted += 1;
+        }
+    }
+
+    fn decode(&mut self) {
+        if self.active.is_empty() {
+            return;
+        }
+        // Sequences that already reached their budget skip the step.
+        let run_idx: Vec<usize> = (0..self.active.len())
+            .filter(|&i| !self.active[i].done
+                && self.active[i].tokens.len() < self.active[i].req.max_new)
+            .collect();
+        if run_idx.is_empty() {
+            for a in &mut self.active {
+                a.done = true;
+            }
+            return;
+        }
+        let tokens: Vec<u32> =
+            run_idx.iter().map(|&i| self.active[i].next).collect();
+        let slabs: Vec<usize> =
+            run_idx.iter().map(|&i| self.active[i].slab).collect();
+        let mut caches = self.pool.get_many_mut(&slabs);
+        self.engine.decode_batch(&tokens, &mut caches, &mut self.ws);
+        self.metrics.record_decode_iter(run_idx.len());
+        let vocab = self.engine.config().vocab;
+        for (bi, &i) in run_idx.iter().enumerate() {
+            let row = &self.ws.logits[bi * vocab..(bi + 1) * vocab];
+            let tok = argmax(row) as u32;
+            let a = &mut self.active[i];
+            a.tokens.push(tok);
+            a.next = tok;
+            let cache_full = {
+                let c = self.pool.get_mut(a.slab);
+                c.len + 1 >= c.cap
+            };
+            if a.tokens.len() >= a.req.max_new
+                || Some(tok) == a.req.stop_token
+                || cache_full
+            {
+                a.done = true;
+            }
+        }
+    }
+
+    fn finalize(&mut self) {
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].done {
+                let a = self.active.swap_remove(i);
+                self.pool.dealloc(a.slab);
+                let latency = a.req.submitted.elapsed();
+                self.metrics.record_completion(latency, a.ttft,
+                                               a.req.prompt.len(),
+                                               a.tokens.len());
+                self.completed.push(Response {
+                    id: a.req.id,
+                    tokens: a.tokens,
+                    ttft: a.ttft,
+                    latency,
+                    prompt_len: a.req.prompt.len(),
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Run until all submitted work completes; returns all responses.
+    pub fn run_to_completion(&mut self) -> Vec<Response> {
+        let mut out = Vec::new();
+        let start = Instant::now();
+        while self.has_work() {
+            self.step();
+            out.extend(self.take_completed());
+            assert!(start.elapsed() < Duration::from_secs(600),
+                    "scheduler livelock");
+        }
+        out
+    }
+}

@@ -1,0 +1,215 @@
+//! Threaded serving front-end.
+//!
+//! [`Server`] owns the scheduler on a worker thread and exposes:
+//!   * an in-process async-ish API (`submit` → `Receiver<Response>`),
+//!   * an optional TCP gateway speaking line-delimited JSON
+//!     (`{"prompt":[..],"max_new":N}` → `{"id":..,"tokens":[..],…}`),
+//!     which is what `examples/serve_e2e.rs` exercises end to end.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::util::json::{num, obj, Json};
+
+use super::request::{Request, Response};
+use super::scheduler::{Scheduler, SchedulerConfig};
+use crate::engine::Engine;
+
+enum Msg {
+    Submit(Request, Sender<Response>),
+    Shutdown,
+}
+
+pub struct Server {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<String>>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    pub fn start(engine: Engine, cfg: SchedulerConfig) -> Self {
+        let (tx, rx) = channel::<Msg>();
+        let worker = std::thread::spawn(move || worker_loop(engine, cfg, rx));
+        Server { tx, worker: Some(worker), next_id: AtomicU64::new(1) }
+    }
+
+    /// Submit a prompt; the response arrives on the returned channel.
+    pub fn submit(&self, prompt: Vec<u32>, max_new: usize)
+                  -> Receiver<Response> {
+        let (rtx, rrx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request::new(id, prompt, max_new);
+        self.tx
+            .send(Msg::Submit(req, rtx))
+            .expect("server worker gone");
+        rrx
+    }
+
+    /// Stop the worker and return its final metrics report.
+    pub fn shutdown(mut self) -> String {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.worker
+            .take()
+            .map(|h| h.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(engine: Engine, cfg: SchedulerConfig, rx: Receiver<Msg>)
+               -> String {
+    let mut sched = Scheduler::new(engine, cfg);
+    let mut reply_map: std::collections::HashMap<u64, Sender<Response>> =
+        std::collections::HashMap::new();
+    let mut shutdown = false;
+    loop {
+        // Drain the mailbox: block only when idle.
+        loop {
+            let msg = if sched.has_work() {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            } else {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => {
+                        shutdown = true;
+                        break;
+                    }
+                }
+            };
+            match msg {
+                Msg::Submit(req, reply) => {
+                    reply_map.insert(req.id, reply);
+                    if let Err(req) = sched.submit(req) {
+                        // queue full — answer with empty tokens
+                        if let Some(r) = reply_map.remove(&req.id) {
+                            let _ = r.send(Response {
+                                id: req.id,
+                                tokens: Vec::new(),
+                                ttft: std::time::Duration::ZERO,
+                                latency: req.submitted.elapsed(),
+                                prompt_len: req.prompt.len(),
+                            });
+                        }
+                    }
+                }
+                Msg::Shutdown => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+        sched.step();
+        for resp in sched.take_completed() {
+            if let Some(r) = reply_map.remove(&resp.id) {
+                let _ = r.send(resp);
+            }
+        }
+        if shutdown && !sched.has_work() {
+            return sched.metrics.report();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// TCP gateway (line-delimited JSON)
+// ---------------------------------------------------------------------
+
+pub struct TcpGateway {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl TcpGateway {
+    /// Serve `server` on 127.0.0.1:<port> (0 = ephemeral).
+    pub fn start(server: Arc<Server>, port: u16) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            // Connection handlers are detached: they block in read_line
+            // until their client hangs up, so joining them on stop() would
+            // deadlock against clients that keep their socket open.
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let srv = server.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, srv);
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(TcpGateway { addr, stop, handle: Some(handle) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, server: Arc<Server>) -> anyhow::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let j = match Json::parse(trimmed) {
+            Ok(j) => j,
+            Err(e) => {
+                writeln!(out, "{}", obj(vec![("error", Json::Str(e))])
+                    .to_string())?;
+                continue;
+            }
+        };
+        let prompt: Vec<u32> = j
+            .get("prompt")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|v| v.as_usize()).map(|v| v as u32)
+                .collect())
+            .unwrap_or_default();
+        let max_new = j.get("max_new").and_then(Json::as_usize).unwrap_or(16);
+        let resp = server.submit(prompt, max_new).recv()?;
+        let reply = obj(vec![
+            ("id", num(resp.id as f64)),
+            ("prompt_len", num(resp.prompt_len as f64)),
+            ("ttft_ms", num(resp.ttft.as_secs_f64() * 1e3)),
+            ("latency_ms", num(resp.latency.as_secs_f64() * 1e3)),
+            ("tokens", Json::Arr(
+                resp.tokens.iter().map(|&t| num(t as f64)).collect())),
+        ]);
+        writeln!(out, "{}", reply.to_string())?;
+    }
+}

@@ -1,0 +1,11 @@
+//! Native quantized inference engine: loads `.qmod` bundles and executes
+//! prefill / batched decode on the integer-kernel substrate. This is the
+//! measured system behind the paper's speed tables (Fig. 3, Tables 2/3/6)
+//! and the accuracy tables (1/4/5/7 via [`crate::eval`]).
+
+pub mod memory;
+pub mod model;
+pub mod qmod;
+
+pub use model::{Engine, KvCache, Workspace};
+pub use qmod::{Linear, ModelConfig, Norm, QModel, QuantMode, QWeight};

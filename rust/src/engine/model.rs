@@ -1,0 +1,620 @@
+//! Quantized forward passes: prefill and batched decode with KV caches.
+//!
+//! Semantics mirror `python/compile/quant/qforward.py` exactly (validated
+//! against the artifact goldens): same rounding, same clamp ranges, same
+//! merged-norm → gather → integer-GEMM → epilogue pipeline. The static
+//! MergeQuant path runs **zero** per-token quantization passes — the norm
+//! emits integers (Eq. 4) and the epilogue is per-output-column (Eq. 5);
+//! the dynamic baselines pay `quant::dynamic` passes per linear — exactly
+//! the overhead the paper measures in Table 6.
+
+use crate::quant::dynamic::per_token_quant;
+use crate::quant::gemm::{
+    epilogue_asym, epilogue_sym, gemm_f32, gemm_i8, gemm_i8_grouped,
+    gemm_i8_packed4, rowsum_i8,
+};
+use crate::quant::hadamard::fwht_block64;
+use crate::quant::reconstruct::reconstruct_i8;
+
+use super::qmod::{Linear, Norm, QModel, QuantMode, QWeight};
+
+const EPS: f32 = 1e-5;
+
+/// Reusable scratch buffers — no allocation on the decode hot path after
+/// the first step.
+#[derive(Default)]
+pub struct Workspace {
+    pub x: Vec<f32>,        // residual stream (m, d)
+    pub h: Vec<f32>,        // f32 norm output (m, d)
+    pub hq: Vec<i8>,        // quantized norm output (m, d)
+    pub hq2: Vec<i8>,       // reconstructed quantized activations (m, d)
+    pub qbuf: Vec<f32>,     // q/k/v projections (m, d)
+    pub kbuf: Vec<f32>,
+    pub vbuf: Vec<f32>,
+    pub attn: Vec<f32>,     // attention output (m, d)
+    pub gate: Vec<f32>,     // (m, ff)
+    pub up: Vec<f32>,
+    pub ff: Vec<f32>,       // silu(gate)·up (m, ff)
+    pub proj: Vec<f32>,     // o/down projection output (m, d)
+    pub acc: Vec<i32>,      // integer GEMM accumulator
+    pub xq: Vec<i8>,        // dynamic-quant activation buffer
+    pub row_scale: Vec<f32>,
+    pub row_sum: Vec<i32>,
+    pub had: Vec<f32>,      // hadamard-transformed activations
+    pub scratch_w: Vec<i8>, // unpacked weight row
+    pub scores: Vec<f32>,   // attention score row (≤ max cache len)
+    pub logits: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current resident bytes across all scratch buffers (Table 3).
+    pub fn bytes(&self) -> usize {
+        self.x.len() * 4
+            + self.h.len() * 4
+            + self.hq.len()
+            + self.hq2.len()
+            + (self.qbuf.len() + self.kbuf.len() + self.vbuf.len()) * 4
+            + (self.attn.len() + self.gate.len() + self.up.len()
+                + self.ff.len() + self.proj.len()) * 4
+            + self.acc.len() * 4
+            + self.xq.len()
+            + self.row_scale.len() * 4
+            + self.row_sum.len() * 4
+            + self.had.len() * 4
+            + self.scratch_w.len()
+            + self.scores.len() * 4
+            + self.logits.len() * 4
+    }
+}
+
+/// Per-sequence KV cache: layout (L, cap, d) with d = H·hd.
+pub struct KvCache {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    pub cap: usize,
+    pub len: usize,
+    pub n_layers: usize,
+    d: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, cap: usize, d: usize) -> Self {
+        KvCache {
+            k: vec![0f32; n_layers * cap * d],
+            v: vec![0f32; n_layers * cap * d],
+            cap,
+            len: 0,
+            n_layers,
+            d,
+        }
+    }
+
+    #[inline]
+    fn layer_k(&self, l: usize) -> &[f32] {
+        &self.k[l * self.cap * self.d..(l + 1) * self.cap * self.d]
+    }
+
+    #[inline]
+    fn layer_v(&self, l: usize) -> &[f32] {
+        &self.v[l * self.cap * self.d..(l + 1) * self.cap * self.d]
+    }
+
+    #[inline]
+    fn write(&mut self, l: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        assert!(pos < self.cap, "KV cache overflow: {pos} >= {}", self.cap);
+        let off = l * self.cap * self.d + pos * self.d;
+        self.k[off..off + self.d].copy_from_slice(k_row);
+        self.v[off..off + self.d].copy_from_slice(v_row);
+    }
+
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+}
+
+enum Act<'a> {
+    F32(&'a [f32]),
+    I8(&'a [i8]),
+}
+
+pub struct Engine {
+    pub model: QModel,
+}
+
+impl Engine {
+    pub fn new(model: QModel) -> Self {
+        Engine { model }
+    }
+
+    pub fn config(&self) -> &super::qmod::ModelConfig {
+        &self.model.config
+    }
+
+    // ------------------------------------------------------------------
+    // Primitive ops
+    // ------------------------------------------------------------------
+
+    fn rmsnorm_f32(x: &[f32], g: &[f32], m: usize, d: usize, out: &mut [f32]) {
+        for i in 0..m {
+            let row = &x[i * d..(i + 1) * d];
+            let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+            let inv = 1.0 / (ms + EPS).sqrt();
+            let or = &mut out[i * d..(i + 1) * d];
+            for c in 0..d {
+                or[c] = row[c] * inv * g[c];
+            }
+        }
+    }
+
+    /// Merged-multiplier norm emitting integers (Eq. 4), then the
+    /// dimension-reconstruction gather (App. C.1). Result lands in `hq2`.
+    fn rmsnorm_quant(x: &[f32], norm: &Norm, m: usize, d: usize,
+                     hq: &mut [i8], hq2: &mut [i8]) {
+        let qmax = norm.quant_qmax.unwrap() as f32;
+        for i in 0..m {
+            let row = &x[i * d..(i + 1) * d];
+            let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+            let inv = 1.0 / (ms + EPS).sqrt();
+            let qr = &mut hq[i * d..(i + 1) * d];
+            for c in 0..d {
+                let v = (row[c] * inv * norm.g[c]).round();
+                qr[c] = v.clamp(-qmax, qmax) as i8;
+            }
+        }
+        if let Some(idx) = &norm.recon_idx {
+            reconstruct_i8(&hq[..m * d], idx, m, d, &mut hq2[..m * d]);
+        } else {
+            hq2[..m * d].copy_from_slice(&hq[..m * d]);
+        }
+    }
+
+    /// Integer GEMM + rescale epilogue (group-0 fast path, grouped general).
+    #[allow(clippy::too_many_arguments)]
+    fn int_matmul(qw: &QWeight, xq: &[i8], m: usize, row_scale: Option<&[f32]>,
+                  acc: &mut Vec<i32>, rsum: &mut Vec<i32>,
+                  scratch: &mut Vec<i8>, out: &mut [f32]) {
+        let (n, j) = (qw.n, qw.j);
+        if qw.group != 0 {
+            gemm_i8_grouped(&xq[..m * n], &qw.wt, m, n, j, qw.group,
+                            &qw.scale, qw.zero.as_deref(), row_scale,
+                            &mut out[..m * j]);
+            return;
+        }
+        acc.resize(m * j, 0);
+        // Small m (decode GEMV): the per-row nibble unpack would double the
+        // work per weight element, so use the i8 mirror; large m amortizes
+        // the unpack across rows and enjoys the halved weight footprint.
+        match &qw.packed {
+            Some(p) if m >= 8 => gemm_i8_packed4(&xq[..m * n], p, m, n, j,
+                                                 scratch, &mut acc[..m * j]),
+            _ => gemm_i8(&xq[..m * n], &qw.wt, m, n, j, &mut acc[..m * j]),
+        }
+        match &qw.zero {
+            Some(z) => {
+                rowsum_i8(&xq[..m * n], m, n, rsum);
+                epilogue_asym(&acc[..m * j], rsum, z, &qw.scale, row_scale,
+                              m, j, &mut out[..m * j]);
+            }
+            None => epilogue_sym(&acc[..m * j], &qw.scale, row_scale, m, j,
+                                 &mut out[..m * j]),
+        }
+    }
+
+    /// Apply one linear to m rows; writes (m, j) into `out`. Scratch
+    /// buffers are passed individually so callers can split a Workspace.
+    #[allow(clippy::too_many_arguments)]
+    fn linear(lin: &Linear, input: Act, m: usize, acc: &mut Vec<i32>,
+              xqb: &mut Vec<i8>, rs: &mut Vec<f32>, rsum: &mut Vec<i32>,
+              had: &mut Vec<f32>, scratch: &mut Vec<i8>, out: &mut [f32]) {
+        match lin {
+            Linear::Fp { wt, n, j } => {
+                let x = match input {
+                    Act::F32(x) => x,
+                    Act::I8(_) => unreachable!("fp linear needs f32 input"),
+                };
+                gemm_f32(&x[..m * n], wt, m, *n, *j, &mut out[..m * j]);
+            }
+            Linear::Quant { qw, mode } => match mode {
+                QuantMode::Static => {
+                    let xq = match input {
+                        Act::I8(xq) => xq,
+                        Act::F32(_) => unreachable!("static linear needs i8"),
+                    };
+                    Self::int_matmul(qw, xq, m, None, acc, rsum, scratch, out);
+                }
+                QuantMode::TensorStatic { a_scale, a_qmax } => {
+                    let x = match input {
+                        Act::F32(x) => x,
+                        _ => unreachable!("tensor_static needs f32"),
+                    };
+                    let n = qw.n;
+                    xqb.resize(m * n, 0);
+                    let inv = 1.0 / *a_scale;
+                    let qm = *a_qmax as f32;
+                    for (q, &v) in xqb[..m * n].iter_mut().zip(&x[..m * n]) {
+                        *q = (v * inv).round().clamp(-qm, qm) as i8;
+                    }
+                    rs.clear();
+                    rs.resize(m, *a_scale);
+                    Self::int_matmul(qw, xqb, m, Some(rs), acc, rsum, scratch,
+                                     out);
+                }
+                QuantMode::Dynamic { a_qmax, a_clip, hadamard } => {
+                    let x = match input {
+                        Act::F32(x) => x,
+                        _ => unreachable!("dynamic needs f32"),
+                    };
+                    let n = qw.n;
+                    let xin: &[f32] = if *hadamard {
+                        had.resize(m * n, 0.0);
+                        had[..m * n].copy_from_slice(&x[..m * n]);
+                        fwht_block64(had, m, n);
+                        &had[..m * n]
+                    } else {
+                        &x[..m * n]
+                    };
+                    // The explicit per-token Quant pass (Table 6 cost).
+                    xqb.resize(m * n, 0);
+                    rs.resize(m, 0.0);
+                    per_token_quant(xin, m, n, *a_qmax, *a_clip, xqb, rs);
+                    Self::int_matmul(qw, xqb, m, Some(rs), acc, rsum, scratch,
+                                     out);
+                }
+            },
+        }
+    }
+
+    fn embed(&self, tokens: &[u32], out: &mut Vec<f32>) {
+        let d = self.model.config.d_model;
+        out.resize(tokens.len() * d, 0.0);
+        for (i, &t) in tokens.iter().enumerate() {
+            let row = &self.model.embed[t as usize * d..(t as usize + 1) * d];
+            let or = &mut out[i * d..(i + 1) * d];
+            for c in 0..d {
+                or[c] = row[c] * self.model.outlier_gain[c];
+            }
+        }
+    }
+
+    /// RoPE in place on a (m, d) buffer interpreted as (m, H, hd);
+    /// `positions[i]` is the absolute position of row i.
+    fn rope(&self, buf: &mut [f32], m: usize, positions: &[usize]) {
+        let cfg = &self.model.config;
+        let (h, hd, d) = (cfg.n_heads, cfg.head_dim(), cfg.d_model);
+        let theta = cfg.rope_theta;
+        for i in 0..m {
+            let pos = positions[i] as f32;
+            let row = &mut buf[i * d..(i + 1) * d];
+            for head in 0..h {
+                let hr = &mut row[head * hd..(head + 1) * hd];
+                for p in 0..hd / 2 {
+                    let inv = theta.powf(-(2.0 * p as f32) / hd as f32);
+                    let ang = pos * inv;
+                    let (sin, cos) = ang.sin_cos();
+                    let a = hr[2 * p];
+                    let b = hr[2 * p + 1];
+                    hr[2 * p] = a * cos - b * sin;
+                    hr[2 * p + 1] = a * sin + b * cos;
+                }
+            }
+        }
+    }
+
+    /// One attention head-batched pass for a single query row against a
+    /// cached K/V region of length `klen`. q: (d,), out: (d,).
+    #[allow(clippy::too_many_arguments)]
+    fn attend_one(&self, q: &[f32], kcache: &[f32], vcache: &[f32],
+                  cache_stride: usize, klen: usize, scores: &mut Vec<f32>,
+                  out: &mut [f32]) {
+        let cfg = &self.model.config;
+        let (h, hd) = (cfg.n_heads, cfg.head_dim());
+        let scale = 1.0 / (hd as f32).sqrt();
+        scores.resize(klen, 0.0);
+        for head in 0..h {
+            let qh = &q[head * hd..(head + 1) * hd];
+            // scores
+            let mut maxv = f32::NEG_INFINITY;
+            for t in 0..klen {
+                let kh = &kcache[t * cache_stride + head * hd
+                    ..t * cache_stride + (head + 1) * hd];
+                let s = crate::quant::gemm::dot_f32(qh, kh) * scale;
+                scores[t] = s;
+                maxv = maxv.max(s);
+            }
+            // softmax
+            let mut denom = 0f32;
+            for s in scores[..klen].iter_mut() {
+                *s = (*s - maxv).exp();
+                denom += *s;
+            }
+            let inv = 1.0 / denom;
+            // weighted value sum
+            let oh = &mut out[head * hd..(head + 1) * hd];
+            oh.fill(0.0);
+            for t in 0..klen {
+                let w = scores[t] * inv;
+                let vh = &vcache[t * cache_stride + head * hd
+                    ..t * cache_stride + (head + 1) * hd];
+                for c in 0..hd {
+                    oh[c] += w * vh[c];
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Prefill
+    // ------------------------------------------------------------------
+
+    /// Prefill one sequence **continuing from `cache.len`**; fills cache
+    /// positions `cache.len .. cache.len+t` and returns logits (t, vocab)
+    /// in `ws.logits`. With `cache.len == 0` this is a plain prefill; with
+    /// a non-empty cache it implements *chunked prefill* (the scheduler
+    /// bounds decode stalls with it) and multi-turn prompt reuse.
+    pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache,
+                   ws: &mut Workspace) {
+        let cfg = &self.model.config;
+        let (d, ff, vocab) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+        let t = tokens.len();
+        let m = t;
+        let start = cache.len;
+        let positions: Vec<usize> = (start..start + t).collect();
+
+        self.embed(tokens, &mut ws.x);
+        ws.qbuf.resize(m * d, 0.0);
+        ws.kbuf.resize(m * d, 0.0);
+        ws.vbuf.resize(m * d, 0.0);
+        ws.attn.resize(m * d, 0.0);
+        ws.gate.resize(m * ff, 0.0);
+        ws.up.resize(m * ff, 0.0);
+        ws.ff.resize(m * ff, 0.0);
+        ws.proj.resize(m * d, 0.0);
+
+        for (l, layer) in self.model.layers.iter().enumerate() {
+            // ---- attention ----
+            if layer.attn_norm.quant_qmax.is_some() {
+                ws.hq.resize(m * d, 0);
+                ws.hq2.resize(m * d, 0);
+                Self::rmsnorm_quant(&ws.x, &layer.attn_norm, m, d,
+                                    &mut ws.hq, &mut ws.hq2);
+                Self::linear(&layer.q, Act::I8(&ws.hq2), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.qbuf);
+                Self::linear(&layer.k, Act::I8(&ws.hq2), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.kbuf);
+                Self::linear(&layer.v, Act::I8(&ws.hq2), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.vbuf);
+            } else {
+                ws.h.resize(m * d, 0.0);
+                Self::rmsnorm_f32(&ws.x, &layer.attn_norm.g, m, d, &mut ws.h);
+                Self::linear(&layer.q, Act::F32(&ws.h), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.qbuf);
+                Self::linear(&layer.k, Act::F32(&ws.h), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.kbuf);
+                Self::linear(&layer.v, Act::F32(&ws.h), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.vbuf);
+            }
+            self.rope(&mut ws.qbuf, m, &positions);
+            self.rope(&mut ws.kbuf, m, &positions);
+            for i in 0..t {
+                cache.write(l, start + i, &ws.kbuf[i * d..(i + 1) * d],
+                            &ws.vbuf[i * d..(i + 1) * d]);
+            }
+            // causal attention, row-wise over cached K/V
+            for i in 0..t {
+                self.attend_one(&ws.qbuf[i * d..(i + 1) * d],
+                                cache.layer_k(l), cache.layer_v(l),
+                                d, start + i + 1, &mut ws.scores,
+                                &mut ws.attn[i * d..(i + 1) * d]);
+            }
+            Self::linear(&layer.o, Act::F32(&ws.attn), m, &mut ws.acc,
+                         &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                         &mut ws.had, &mut ws.scratch_w, &mut ws.proj);
+            for (xv, pv) in ws.x.iter_mut().zip(&ws.proj) {
+                *xv += pv;
+            }
+            // ---- ffn ----
+            if layer.ffn_norm.quant_qmax.is_some() {
+                ws.hq.resize(m * d, 0);
+                ws.hq2.resize(m * d, 0);
+                Self::rmsnorm_quant(&ws.x, &layer.ffn_norm, m, d,
+                                    &mut ws.hq, &mut ws.hq2);
+                Self::linear(&layer.gate, Act::I8(&ws.hq2), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.gate);
+                Self::linear(&layer.up, Act::I8(&ws.hq2), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.up);
+            } else {
+                ws.h.resize(m * d, 0.0);
+                Self::rmsnorm_f32(&ws.x, &layer.ffn_norm.g, m, d, &mut ws.h);
+                Self::linear(&layer.gate, Act::F32(&ws.h), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.gate);
+                Self::linear(&layer.up, Act::F32(&ws.h), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.up);
+            }
+            for i in 0..m * ff {
+                let g = ws.gate[i];
+                ws.ff[i] = g / (1.0 + (-g).exp()) * ws.up[i]; // SiLU·up
+            }
+            Self::linear(&layer.down, Act::F32(&ws.ff), m, &mut ws.acc,
+                         &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                         &mut ws.had, &mut ws.scratch_w, &mut ws.proj);
+            for (xv, pv) in ws.x.iter_mut().zip(&ws.proj) {
+                *xv += pv;
+            }
+        }
+        cache.len = start + t;
+        // final norm + lm head
+        ws.h.resize(m * d, 0.0);
+        Self::rmsnorm_f32(&ws.x, &self.model.final_norm, m, d, &mut ws.h);
+        ws.logits.resize(m * vocab, 0.0);
+        gemm_f32(&ws.h, &self.model.lm_head_t, m, d, vocab, &mut ws.logits);
+    }
+
+    // ------------------------------------------------------------------
+    // Batched decode (continuous batching: one step over many sequences)
+    // ------------------------------------------------------------------
+
+    /// One decode step for a batch of sequences. `tokens[i]` is the next
+    /// input token of sequence i; each sequence attends to its own cache.
+    /// Returns logits (B, vocab) in `ws.logits`.
+    pub fn decode_batch(&self, tokens: &[u32], caches: &mut [&mut KvCache],
+                        ws: &mut Workspace) {
+        let cfg = &self.model.config;
+        let (d, ff, vocab) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+        let b = tokens.len();
+        assert_eq!(caches.len(), b);
+        let m = b;
+        let positions: Vec<usize> = caches.iter().map(|c| c.len).collect();
+
+        self.embed(tokens, &mut ws.x);
+        ws.qbuf.resize(m * d, 0.0);
+        ws.kbuf.resize(m * d, 0.0);
+        ws.vbuf.resize(m * d, 0.0);
+        ws.attn.resize(m * d, 0.0);
+        ws.gate.resize(m * ff, 0.0);
+        ws.up.resize(m * ff, 0.0);
+        ws.ff.resize(m * ff, 0.0);
+        ws.proj.resize(m * d, 0.0);
+
+        for (l, layer) in self.model.layers.iter().enumerate() {
+            if layer.attn_norm.quant_qmax.is_some() {
+                ws.hq.resize(m * d, 0);
+                ws.hq2.resize(m * d, 0);
+                Self::rmsnorm_quant(&ws.x, &layer.attn_norm, m, d,
+                                    &mut ws.hq, &mut ws.hq2);
+                Self::linear(&layer.q, Act::I8(&ws.hq2), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.qbuf);
+                Self::linear(&layer.k, Act::I8(&ws.hq2), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.kbuf);
+                Self::linear(&layer.v, Act::I8(&ws.hq2), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.vbuf);
+            } else {
+                ws.h.resize(m * d, 0.0);
+                Self::rmsnorm_f32(&ws.x, &layer.attn_norm.g, m, d, &mut ws.h);
+                Self::linear(&layer.q, Act::F32(&ws.h), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.qbuf);
+                Self::linear(&layer.k, Act::F32(&ws.h), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.kbuf);
+                Self::linear(&layer.v, Act::F32(&ws.h), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.vbuf);
+            }
+            self.rope(&mut ws.qbuf, m, &positions);
+            self.rope(&mut ws.kbuf, m, &positions);
+            for (i, cache) in caches.iter_mut().enumerate() {
+                let pos = positions[i];
+                cache.write(l, pos, &ws.kbuf[i * d..(i + 1) * d],
+                            &ws.vbuf[i * d..(i + 1) * d]);
+            }
+            for (i, cache) in caches.iter().enumerate() {
+                self.attend_one(&ws.qbuf[i * d..(i + 1) * d],
+                                cache.layer_k(l), cache.layer_v(l),
+                                d, positions[i] + 1, &mut ws.scores,
+                                &mut ws.attn[i * d..(i + 1) * d]);
+            }
+            Self::linear(&layer.o, Act::F32(&ws.attn), m, &mut ws.acc,
+                         &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                         &mut ws.had, &mut ws.scratch_w, &mut ws.proj);
+            for (xv, pv) in ws.x.iter_mut().zip(&ws.proj) {
+                *xv += pv;
+            }
+            if layer.ffn_norm.quant_qmax.is_some() {
+                ws.hq.resize(m * d, 0);
+                ws.hq2.resize(m * d, 0);
+                Self::rmsnorm_quant(&ws.x, &layer.ffn_norm, m, d,
+                                    &mut ws.hq, &mut ws.hq2);
+                Self::linear(&layer.gate, Act::I8(&ws.hq2), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.gate);
+                Self::linear(&layer.up, Act::I8(&ws.hq2), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.up);
+            } else {
+                ws.h.resize(m * d, 0.0);
+                Self::rmsnorm_f32(&ws.x, &layer.ffn_norm.g, m, d, &mut ws.h);
+                Self::linear(&layer.gate, Act::F32(&ws.h), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.gate);
+                Self::linear(&layer.up, Act::F32(&ws.h), m, &mut ws.acc,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.up);
+            }
+            for i in 0..m * ff {
+                let g = ws.gate[i];
+                ws.ff[i] = g / (1.0 + (-g).exp()) * ws.up[i];
+            }
+            Self::linear(&layer.down, Act::F32(&ws.ff), m, &mut ws.acc,
+                         &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                         &mut ws.had, &mut ws.scratch_w, &mut ws.proj);
+            for (xv, pv) in ws.x.iter_mut().zip(&ws.proj) {
+                *xv += pv;
+            }
+        }
+        for cache in caches.iter_mut() {
+            cache.len += 1;
+        }
+        ws.h.resize(m * d, 0.0);
+        Self::rmsnorm_f32(&ws.x, &self.model.final_norm, m, d, &mut ws.h);
+        ws.logits.resize(m * vocab, 0.0);
+        gemm_f32(&ws.h, &self.model.lm_head_t, m, d, vocab, &mut ws.logits);
+    }
+
+    /// Greedy generation helper (examples / integration tests).
+    pub fn generate(&self, prompt: &[u32], max_new: usize, max_seq: usize)
+                    -> Vec<u32> {
+        let cfg = &self.model.config;
+        let mut cache = KvCache::new(cfg.n_layers, max_seq, cfg.d_model);
+        let mut ws = Workspace::new();
+        // prefill all but the last prompt token, then step
+        self.prefill(prompt, &mut cache, &mut ws);
+        let vocab = cfg.vocab;
+        let last = &ws.logits[(prompt.len() - 1) * vocab..prompt.len() * vocab];
+        let mut next = argmax(last) as u32;
+        let mut out = vec![next];
+        for _ in 1..max_new {
+            if cache.len + 1 >= max_seq {
+                break;
+            }
+            let toks = [next];
+            let mut caches = [&mut cache];
+            self.decode_batch(&toks, &mut caches, &mut ws);
+            next = argmax(&ws.logits[..vocab]) as u32;
+            out.push(next);
+        }
+        out
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}

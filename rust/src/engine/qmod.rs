@@ -1,0 +1,427 @@
+//! `.qmod` bundle loader — mirrors `python/compile/qmod.py` exactly.
+//!
+//! Weights arrive as (n, j) int8 from Python; the loader transposes them to
+//! the engine's (j, n) layout and, for bit widths ≤ 4, packs them into
+//! nibbles (`quant::pack`) so the resident format really is 4-bit.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::pack::pack_int4;
+use crate::util::json::Json;
+
+const MAGIC: &[u8] = b"QMOD1\n";
+const ALIGN: usize = 64;
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub rope_theta: f32,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// Quantized weight in engine layout.
+#[derive(Clone, Debug)]
+pub struct QWeight {
+    pub n: usize,
+    pub j: usize,
+    /// Transposed integer weights (j, n), one i8 per value…
+    pub wt: Vec<i8>,
+    /// …or packed nibbles (j, ceil(n/2)) when bits ≤ 4 (the hot format).
+    pub packed: Option<Vec<u8>>,
+    /// (G, j) scales, row-major; G = n/group (1 when group = 0).
+    pub scale: Vec<f32>,
+    /// (G, j) zero points (asymmetric only).
+    pub zero: Option<Vec<i32>>,
+    pub group: usize,
+    pub bits: u32,
+}
+
+impl QWeight {
+    pub fn ngroups(&self) -> usize {
+        if self.group == 0 { 1 } else { self.n / self.group }
+    }
+
+    /// Resident bytes of the weight payload (Table 3 accounting).
+    pub fn resident_bytes(&self) -> usize {
+        let w = match &self.packed {
+            Some(p) => p.len(),
+            None => self.wt.len(),
+        };
+        w + self.scale.len() * 4
+            + self.zero.as_ref().map_or(0, |z| z.len() * 4)
+    }
+
+    /// Dequantize to (j, n) f32 (tests / parity checks only).
+    pub fn dequant_t(&self) -> Vec<f32> {
+        let g = if self.group == 0 { self.n } else { self.group };
+        let mut out = vec![0f32; self.j * self.n];
+        for c in 0..self.j {
+            for k in 0..self.n {
+                let gi = k / g;
+                let mut v = self.wt[c * self.n + k] as f32;
+                if let Some(z) = &self.zero {
+                    v -= z[gi * self.j + c] as f32;
+                }
+                out[c * self.n + k] = v * self.scale[gi * self.j + c];
+            }
+        }
+        out
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum QuantMode {
+    /// Input is already integer (merged-norm output) — paper Eq. 5 path.
+    Static,
+    /// SmoothQuant-style fixed scalar activation scale.
+    TensorStatic { a_scale: f32, a_qmax: i32 },
+    /// Per-token dynamic (the baseline, and out/down projections).
+    Dynamic { a_qmax: i32, a_clip: f32, hadamard: bool },
+}
+
+#[derive(Clone, Debug)]
+pub enum Linear {
+    Fp { wt: Vec<f32>, n: usize, j: usize },
+    Quant { qw: QWeight, mode: QuantMode },
+}
+
+impl Linear {
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            Linear::Fp { n, j, .. } => (*n, *j),
+            Linear::Quant { qw, .. } => (qw.n, qw.j),
+        }
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            Linear::Fp { wt, .. } => wt.len() * 4,
+            Linear::Quant { qw, .. } => qw.resident_bytes(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Norm {
+    pub g: Vec<f32>,
+    /// Some(qmax) ⇒ merged multiplier emits clamped integers (Eq. 4).
+    pub quant_qmax: Option<i32>,
+    /// Dimension-reconstruction gather indices (paper App. C.1).
+    pub recon_idx: Option<Vec<u32>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub attn_norm: Norm,
+    pub q: Linear,
+    pub k: Linear,
+    pub v: Linear,
+    pub o: Linear,
+    pub ffn_norm: Norm,
+    pub gate: Linear,
+    pub up: Linear,
+    pub down: Linear,
+}
+
+#[derive(Clone, Debug)]
+pub struct QModel {
+    pub config: ModelConfig,
+    pub method: String,
+    pub embed: Vec<f32>,       // (vocab, d)
+    pub outlier_gain: Vec<f32>, // (d,)
+    pub final_norm: Vec<f32>,  // (d,)
+    pub lm_head_t: Vec<f32>,   // (vocab, d) transposed
+    pub layers: Vec<LayerWeights>,
+}
+
+struct Blob<'a> {
+    meta: Json,
+    data: &'a [u8],
+}
+
+impl<'a> Blob<'a> {
+    fn tensor_entry(&self, name: &str) -> Result<(&Json, &'a [u8])> {
+        let tensors = self.meta.req("tensors").map_err(anyhow::Error::msg)?;
+        let entry = tensors
+            .as_arr()
+            .context("tensors not array")?
+            .iter()
+            .find(|t| t.get("name").and_then(Json::as_str) == Some(name))
+            .with_context(|| format!("tensor {name} missing"))?;
+        let off = entry.req_usize("offset").map_err(anyhow::Error::msg)?;
+        let nbytes = entry.req_usize("nbytes").map_err(anyhow::Error::msg)?;
+        Ok((entry, &self.data[off..off + nbytes]))
+    }
+
+    fn f32(&self, name: &str) -> Result<Vec<f32>> {
+        let (entry, raw) = self.tensor_entry(name)?;
+        ensure_dtype(entry, "f32")?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn i8(&self, name: &str) -> Result<Vec<i8>> {
+        let (entry, raw) = self.tensor_entry(name)?;
+        ensure_dtype(entry, "i8")?;
+        Ok(raw.iter().map(|&b| b as i8).collect())
+    }
+
+    fn i16_as_i32(&self, name: &str) -> Result<Vec<i32>> {
+        let (entry, raw) = self.tensor_entry(name)?;
+        ensure_dtype(entry, "i16")?;
+        Ok(raw
+            .chunks_exact(2)
+            .map(|c| i16::from_le_bytes([c[0], c[1]]) as i32)
+            .collect())
+    }
+
+    fn i32_as_u32(&self, name: &str) -> Result<Vec<u32>> {
+        let (entry, raw) = self.tensor_entry(name)?;
+        ensure_dtype(entry, "i32")?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as u32)
+            .collect())
+    }
+
+    fn shape(&self, name: &str) -> Result<Vec<usize>> {
+        let (entry, _) = self.tensor_entry(name)?;
+        Ok(entry
+            .req("shape")
+            .map_err(anyhow::Error::msg)?
+            .as_arr()
+            .context("shape not array")?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect())
+    }
+}
+
+fn ensure_dtype(entry: &Json, want: &str) -> Result<()> {
+    let dt = entry.req_str("dtype").map_err(anyhow::Error::msg)?;
+    if dt != want {
+        bail!("dtype {dt} != {want}");
+    }
+    Ok(())
+}
+
+fn transpose_f32(w: &[f32], n: usize, j: usize) -> Vec<f32> {
+    let mut out = vec![0f32; n * j];
+    for r in 0..n {
+        for c in 0..j {
+            out[c * n + r] = w[r * j + c];
+        }
+    }
+    out
+}
+
+fn transpose_i8(w: &[i8], n: usize, j: usize) -> Vec<i8> {
+    let mut out = vec![0i8; n * j];
+    for r in 0..n {
+        for c in 0..j {
+            out[c * n + r] = w[r * j + c];
+        }
+    }
+    out
+}
+
+fn load_qweight(blob: &Blob, meta: &Json) -> Result<QWeight> {
+    let wq_name = meta.req_str("wq").map_err(anyhow::Error::msg)?;
+    let shape = blob.shape(wq_name)?;
+    let (n, j) = (shape[0], shape[1]);
+    let wq = blob.i8(wq_name)?;
+    let wt = transpose_i8(&wq, n, j);
+    let bits = meta.req_usize("bits").map_err(anyhow::Error::msg)? as u32;
+    let group = meta.req_usize("group").map_err(anyhow::Error::msg)?;
+    let scale = blob.f32(meta.req_str("scale").map_err(anyhow::Error::msg)?)?;
+    let zero = match meta.get("zero").and_then(Json::as_str) {
+        Some(zname) => Some(blob.i16_as_i32(zname)?),
+        None => None,
+    };
+    // Pack to nibbles when values fit int4 (symmetric ≤4 bits, or shifted
+    // asymmetric codes which lie in [-2^(b-1), 2^(b-1)-1] ⊆ [-8, 7]).
+    let packed = if bits <= 4 {
+        let row_bytes = n.div_ceil(2);
+        let mut p = Vec::with_capacity(j * row_bytes);
+        for c in 0..j {
+            p.extend(pack_int4(&wt[c * n..(c + 1) * n]));
+        }
+        Some(p)
+    } else {
+        None
+    };
+    Ok(QWeight { n, j, wt, packed, scale, zero, group, bits })
+}
+
+fn load_linear(blob: &Blob, meta: &Json) -> Result<Linear> {
+    match meta.req_str("mode").map_err(anyhow::Error::msg)? {
+        "fp" => {
+            let name = meta.req_str("w").map_err(anyhow::Error::msg)?;
+            let shape = blob.shape(name)?;
+            let w = blob.f32(name)?;
+            Ok(Linear::Fp {
+                wt: transpose_f32(&w, shape[0], shape[1]),
+                n: shape[0],
+                j: shape[1],
+            })
+        }
+        "static" => Ok(Linear::Quant {
+            qw: load_qweight(blob, meta.req("qw").map_err(anyhow::Error::msg)?)?,
+            mode: QuantMode::Static,
+        }),
+        "tensor_static" => Ok(Linear::Quant {
+            qw: load_qweight(blob, meta.req("qw").map_err(anyhow::Error::msg)?)?,
+            mode: QuantMode::TensorStatic {
+                a_scale: meta
+                    .req("a_scale")
+                    .map_err(anyhow::Error::msg)?
+                    .as_f64()
+                    .context("a_scale")? as f32,
+                a_qmax: meta.req_usize("a_qmax").map_err(anyhow::Error::msg)?
+                    as i32,
+            },
+        }),
+        "dynamic" => Ok(Linear::Quant {
+            qw: load_qweight(blob, meta.req("qw").map_err(anyhow::Error::msg)?)?,
+            mode: QuantMode::Dynamic {
+                a_qmax: meta.req_usize("a_qmax").map_err(anyhow::Error::msg)?
+                    as i32,
+                a_clip: meta
+                    .req("a_clip")
+                    .map_err(anyhow::Error::msg)?
+                    .as_f64()
+                    .context("a_clip")? as f32,
+                hadamard: meta
+                    .get("hadamard")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false),
+            },
+        }),
+        other => bail!("unknown linear mode {other}"),
+    }
+}
+
+fn load_norm(blob: &Blob, meta: &Json) -> Result<Norm> {
+    let g = blob.f32(meta.req_str("g").map_err(anyhow::Error::msg)?)?;
+    let (quant_qmax, recon_idx) = match meta.get("quant") {
+        Some(q) => {
+            let qmax = q.req_usize("qmax").map_err(anyhow::Error::msg)? as i32;
+            let idx = match q.get("recon_idx").and_then(Json::as_str) {
+                Some(name) => Some(blob.i32_as_u32(name)?),
+                None => None,
+            };
+            (Some(qmax), idx)
+        }
+        None => (None, None),
+    };
+    Ok(Norm { g, quant_qmax, recon_idx })
+}
+
+impl QModel {
+    pub fn load(path: &Path) -> Result<QModel> {
+        let raw = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if !raw.starts_with(MAGIC) {
+            bail!("bad magic in {}", path.display());
+        }
+        if raw.len() < MAGIC.len() + 4 {
+            bail!("truncated header in {}", path.display());
+        }
+        let mlen = u32::from_le_bytes(
+            raw[MAGIC.len()..MAGIC.len() + 4].try_into().unwrap(),
+        ) as usize;
+        let meta_start = MAGIC.len() + 4;
+        if raw.len() < meta_start + mlen {
+            bail!("truncated metadata in {} ({} < {})", path.display(),
+                  raw.len(), meta_start + mlen);
+        }
+        let meta: Json = Json::parse(
+            std::str::from_utf8(&raw[meta_start..meta_start + mlen])
+                .context("meta not utf8")?,
+        )
+        .map_err(anyhow::Error::msg)?;
+        let mut base = meta_start + mlen;
+        base += base.wrapping_neg() % ALIGN;
+        let data = raw.get(base..).unwrap_or(&[]);
+
+        let blob = Blob { meta: meta.clone(), data };
+        let cfgj = meta.req("config").map_err(anyhow::Error::msg)?;
+        let config = ModelConfig {
+            name: cfgj.req_str("name").map_err(anyhow::Error::msg)?.into(),
+            vocab: cfgj.req_usize("vocab").map_err(anyhow::Error::msg)?,
+            d_model: cfgj.req_usize("d_model").map_err(anyhow::Error::msg)?,
+            n_heads: cfgj.req_usize("n_heads").map_err(anyhow::Error::msg)?,
+            d_ff: cfgj.req_usize("d_ff").map_err(anyhow::Error::msg)?,
+            n_layers: cfgj.req_usize("n_layers").map_err(anyhow::Error::msg)?,
+            max_seq: cfgj.req_usize("max_seq").map_err(anyhow::Error::msg)?,
+            rope_theta: cfgj
+                .req("rope_theta")
+                .map_err(anyhow::Error::msg)?
+                .as_f64()
+                .context("rope_theta")? as f32,
+        };
+        let (v, d) = (config.vocab, config.d_model);
+        let lm_head = blob.f32("lm_head")?; // (d, v)
+        let mut layers = Vec::new();
+        for lm in meta
+            .req("layers")
+            .map_err(anyhow::Error::msg)?
+            .as_arr()
+            .context("layers")?
+        {
+            layers.push(LayerWeights {
+                attn_norm: load_norm(&blob, lm.req("attn_norm").map_err(anyhow::Error::msg)?)?,
+                q: load_linear(&blob, lm.req("q").map_err(anyhow::Error::msg)?)?,
+                k: load_linear(&blob, lm.req("k").map_err(anyhow::Error::msg)?)?,
+                v: load_linear(&blob, lm.req("v").map_err(anyhow::Error::msg)?)?,
+                o: load_linear(&blob, lm.req("o").map_err(anyhow::Error::msg)?)?,
+                ffn_norm: load_norm(&blob, lm.req("ffn_norm").map_err(anyhow::Error::msg)?)?,
+                gate: load_linear(&blob, lm.req("gate").map_err(anyhow::Error::msg)?)?,
+                up: load_linear(&blob, lm.req("up").map_err(anyhow::Error::msg)?)?,
+                down: load_linear(&blob, lm.req("down").map_err(anyhow::Error::msg)?)?,
+            });
+        }
+        Ok(QModel {
+            config,
+            method: meta.req_str("method").map_err(anyhow::Error::msg)?.into(),
+            embed: blob.f32("embed")?,
+            outlier_gain: blob.f32("outlier_gain")?,
+            final_norm: blob.f32("final_norm")?,
+            lm_head_t: transpose_f32(&lm_head, d, v),
+            layers,
+        })
+    }
+
+    /// Total resident weight bytes (Table 3 memory accounting).
+    pub fn weight_bytes(&self) -> usize {
+        let mut total = (self.embed.len()
+            + self.outlier_gain.len()
+            + self.final_norm.len()
+            + self.lm_head_t.len())
+            * 4;
+        for l in &self.layers {
+            total += (l.attn_norm.g.len() + l.ffn_norm.g.len()) * 4;
+            total += l.attn_norm.recon_idx.as_ref().map_or(0, |r| r.len() * 4);
+            total += l.ffn_norm.recon_idx.as_ref().map_or(0, |r| r.len() * 4);
+            for lin in [&l.q, &l.k, &l.v, &l.o, &l.gate, &l.up, &l.down] {
+                total += lin.resident_bytes();
+            }
+        }
+        total
+    }
+}

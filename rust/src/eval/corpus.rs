@@ -1,0 +1,66 @@
+//! Loaders for the exported token streams and task files.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Read a little-endian i32 token stream (`*.i32` artifact files).
+pub fn load_tokens(path: &Path) -> Result<Vec<u32>> {
+    let raw = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    anyhow::ensure!(raw.len() % 4 == 0, "token file not multiple of 4");
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as u32)
+        .collect())
+}
+
+/// Read a `*.f32` blob (golden logits).
+pub fn load_f32(path: &Path) -> Result<Vec<f32>> {
+    let raw = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn load_json(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    Json::parse(&text).map_err(anyhow::Error::msg)
+}
+
+/// Validation stream of one corpus from the artifacts tree.
+pub fn val_stream(artifacts: &Path, corpus: &str) -> Result<Vec<u32>> {
+    load_tokens(&artifacts.join("corpora").join(format!("{corpus}.val.i32")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_roundtrip(){
+        let dir = std::env::temp_dir().join("mq_corpus_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.i32");
+        let vals: Vec<i32> = vec![0, 5, 511, 100000];
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        let toks = load_tokens(&p).unwrap();
+        assert_eq!(toks, vec![0u32, 5, 511, 100000]);
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join("mq_corpus_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.i32");
+        std::fs::write(&p, [1u8, 2, 3]).unwrap();
+        assert!(load_tokens(&p).is_err());
+    }
+}

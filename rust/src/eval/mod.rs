@@ -1,0 +1,139 @@
+//! Evaluation harness: perplexity over the exported corpora and the five
+//! zero-shot choice tasks, scored exactly like lm-eval-harness
+//! (length-normalized log-likelihood). Powers Tables 1/4/5/7 and Fig. 1.
+
+pub mod corpus;
+
+use crate::engine::{Engine, KvCache, Workspace};
+use crate::util::json::Json;
+
+/// log-softmax of one row, returning logp[target].
+fn logp_target(logits: &[f32], target: usize) -> f64 {
+    let maxv = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let denom: f64 =
+        logits.iter().map(|&v| ((v - maxv) as f64).exp()).sum();
+    (logits[target] - maxv) as f64 - denom.ln()
+}
+
+/// Perplexity over a token stream with non-overlapping windows of `seq`
+/// (mirrors `python/compile/model.py::perplexity`).
+pub fn perplexity(engine: &Engine, tokens: &[u32], seq: usize) -> f64 {
+    let cfg = engine.config();
+    let vocab = cfg.vocab;
+    let n = (tokens.len() - 1) / seq;
+    let mut ws = Workspace::new();
+    let mut cache = KvCache::new(cfg.n_layers, seq, cfg.d_model);
+    let mut total = 0f64;
+    let mut count = 0usize;
+    for w in 0..n {
+        let x = &tokens[w * seq..(w + 1) * seq];
+        cache.reset();
+        engine.prefill(x, &mut cache, &mut ws);
+        for i in 0..seq {
+            let target = tokens[w * seq + i + 1] as usize;
+            let row = &ws.logits[i * vocab..(i + 1) * vocab];
+            total -= logp_target(row, target);
+            count += 1;
+        }
+    }
+    (total / count.max(1) as f64).exp()
+}
+
+/// One item of a choice task.
+pub struct ChoiceItem {
+    pub prefix: Vec<u32>,
+    pub choices: Vec<Vec<u32>>,
+    pub answer: usize,
+}
+
+pub fn parse_task(json: &Json) -> anyhow::Result<Vec<ChoiceItem>> {
+    let arr = json.as_arr().ok_or_else(|| anyhow::anyhow!("task not array"))?;
+    let mut out = Vec::new();
+    for it in arr {
+        let prefix = it
+            .req("prefix")
+            .map_err(anyhow::Error::msg)?
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap() as u32)
+            .collect();
+        let choices = it
+            .req("choices")
+            .map_err(anyhow::Error::msg)?
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|ch| {
+                ch.as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.as_usize().unwrap() as u32)
+                    .collect()
+            })
+            .collect();
+        let answer = it.req_usize("answer").map_err(anyhow::Error::msg)?;
+        out.push(ChoiceItem { prefix, choices, answer });
+    }
+    Ok(out)
+}
+
+/// Accuracy under length-normalized log-likelihood scoring.
+pub fn choice_accuracy(engine: &Engine, items: &[ChoiceItem]) -> f64 {
+    let cfg = engine.config();
+    let vocab = cfg.vocab;
+    let mut ws = Workspace::new();
+    let mut correct = 0usize;
+    for it in items {
+        let mut best = f64::NEG_INFINITY;
+        let mut best_i = 0usize;
+        for (ci, ch) in it.choices.iter().enumerate() {
+            let mut toks = it.prefix.clone();
+            toks.extend_from_slice(ch);
+            let mut cache =
+                KvCache::new(cfg.n_layers, toks.len(), cfg.d_model);
+            engine.prefill(&toks, &mut cache, &mut ws);
+            let mut ll = 0f64;
+            for pos in it.prefix.len() - 1..toks.len() - 1 {
+                let row = &ws.logits[pos * vocab..(pos + 1) * vocab];
+                ll += logp_target(row, toks[pos + 1] as usize);
+            }
+            let score = ll / ch.len().max(1) as f64;
+            if score > best {
+                best = score;
+                best_i = ci;
+            }
+        }
+        if best_i == it.answer {
+            correct += 1;
+        }
+    }
+    correct as f64 / items.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logp_target_is_log_softmax() {
+        let logits = [1.0f32, 2.0, 3.0];
+        let lp = logp_target(&logits, 2);
+        let denom: f64 = logits.iter().map(|&v| (v as f64).exp()).sum();
+        let want = (3.0f64).exp().ln() - denom.ln();
+        assert!((lp - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_task_roundtrip() {
+        let j = Json::parse(
+            r#"[{"prefix":[1,2],"choices":[[3,4],[5,6]],"answer":1}]"#,
+        )
+        .unwrap();
+        let items = parse_task(&j).unwrap();
+        assert_eq!(items.len(), 1);
+        assert_eq!(items[0].prefix, vec![1, 2]);
+        assert_eq!(items[0].choices[1], vec![5, 6]);
+        assert_eq!(items[0].answer, 1);
+    }
+}

@@ -1,0 +1,48 @@
+//! MergeQuant — accurate 4-bit static quantization of LLMs by channel-wise
+//! calibration (Wang et al., 2025), reproduced as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! This crate is Layer 3: the runtime/serving side. It loads quantized
+//! model bundles (`.qmod`) and AOT-compiled HLO produced by the build-time
+//! Python layers, and provides:
+//!
+//! * [`quant`] — integer-kernel substrate: packed-INT4/INT8 GEMM with the
+//!   per-output-column rescale epilogue that Quantization Step Migration
+//!   aligns to, per-token dynamic quant ops (the baseline overhead), the
+//!   dimension-reconstruction gather, and the online block-Hadamard.
+//! * [`engine`] — the native quantized inference engine (prefill + batched
+//!   decode with KV cache) executing `.qmod` bundles.
+//! * [`runtime`] — PJRT wrapper (via the `xla` crate) executing the
+//!   AOT-lowered JAX/Pallas HLO artifacts; parity-checked against
+//!   [`engine`].
+//! * [`coordinator`] — the serving layer: request router, continuous
+//!   batcher, prefill/decode scheduler, KV pool, metrics.
+//! * [`eval`] — perplexity + zero-shot choice-task evaluation (Tables 1,
+//!   4, 5, 7; Fig. 1).
+//! * [`bench`] — the measurement harness behind every paper table/figure
+//!   (criterion is not vendored in this image; this is a from-scratch
+//!   substrate, DESIGN.md §2).
+//! * [`util`] — PRNG, JSON, stats, property-testing substrates.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod eval;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Root of the artifacts tree (overridable via `MERGEQUANT_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("MERGEQUANT_ARTIFACTS") {
+        return p.into();
+    }
+    // Resolve relative to the crate manifest so tests/benches work from
+    // any working directory.
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

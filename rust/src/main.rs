@@ -1,0 +1,203 @@
+//! `mergequant` — leader binary / CLI launcher.
+//!
+//! Subcommands:
+//!   serve     — start the serving coordinator (+ optional TCP gateway)
+//!   eval      — perplexity + zero-shot accuracy of a bundle
+//!   generate  — greedy generation from a prompt
+//!   inspect   — dump bundle structure and memory accounting
+//!   runtime   — load + run an AOT HLO artifact via PJRT (smoke)
+//!
+//! Run `mergequant <cmd> --help-less`: flags are documented below per arm.
+
+use anyhow::{bail, Context, Result};
+
+use mergequant::cli::Args;
+use mergequant::config::ServeConfig;
+use mergequant::coordinator::{server::TcpGateway, Server};
+use mergequant::engine::{Engine, QModel};
+use mergequant::eval::{choice_accuracy, corpus, parse_task, perplexity};
+use mergequant::{artifacts_dir, runtime};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_engine(model: &str, method: &str) -> Result<Engine> {
+    let path = artifacts_dir()
+        .join("models")
+        .join(model)
+        .join(format!("{method}.qmod"));
+    let qm = QModel::load(&path)
+        .with_context(|| format!("loading {}", path.display()))?;
+    Ok(Engine::new(qm))
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse();
+    match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("runtime") => cmd_runtime(&args),
+        other => {
+            eprintln!(
+                "mergequant — 4-bit static quantization serving stack\n\
+                 usage: mergequant <serve|eval|generate|inspect|runtime> \
+                 [--model NAME] [--method NAME] …\n\
+                 (got {other:?})"
+            );
+            bail!("unknown subcommand");
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ServeConfig::from_file(std::path::Path::new(path))?,
+        None => ServeConfig::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.into();
+    }
+    if let Some(m) = args.get("method") {
+        cfg.method = m.into();
+    }
+    cfg.port = args.get_usize("port", cfg.port as usize) as u16;
+    cfg.scheduler.max_batch =
+        args.get_usize("max-batch", cfg.scheduler.max_batch);
+    cfg.scheduler.max_seq = args.get_usize("max-seq", cfg.scheduler.max_seq);
+    cfg.scheduler.kv_slabs =
+        args.get_usize("kv-slabs", cfg.scheduler.kv_slabs.max(cfg.scheduler.max_batch));
+
+    let engine = load_engine(&cfg.model, &cfg.method)?;
+    println!("serving {} / {} (params ~{:.1} MB quantized)", cfg.model,
+             cfg.method, engine.model.weight_bytes() as f64 / 1e6);
+    let server = std::sync::Arc::new(Server::start(engine, cfg.scheduler.clone()));
+    let gateway = TcpGateway::start(server.clone(), cfg.port)?;
+    println!("listening on {}", gateway.addr);
+    println!("protocol: one JSON per line: {{\"prompt\":[1,2,3],\"max_new\":16}}");
+    let secs = args.get_usize("run-secs", 0);
+    if secs > 0 {
+        std::thread::sleep(std::time::Duration::from_secs(secs as u64));
+        gateway.stop();
+        Ok(())
+    } else {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tiny-llama-s");
+    let method = args.get_or("method", "mergequant");
+    let seq = args.get_usize("seq", 256);
+    let engine = load_engine(model, method)?;
+    let art = artifacts_dir();
+    println!("model={model} method={method}");
+    for corpus_name in ["synth-wiki", "synth-c4"] {
+        let toks = corpus::val_stream(&art, corpus_name)?;
+        let limit = args.get_usize("max-tokens", toks.len());
+        let ppl = perplexity(&engine, &toks[..limit.min(toks.len())], seq);
+        println!("  ppl[{corpus_name}] = {ppl:.3}");
+    }
+    if args.get_bool("tasks") {
+        for t in ["piqa", "arc-e", "arc-c", "hellaswag", "winogrande"] {
+            let items = parse_task(&corpus::load_json(
+                &art.join("tasks").join(format!("{t}.json")))?)?;
+            let n = args.get_usize("task-items", items.len());
+            let acc = choice_accuracy(&engine, &items[..n.min(items.len())]);
+            println!("  acc[{t}] = {:.2}%", acc * 100.0);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tiny-llama-s");
+    let method = args.get_or("method", "mergequant");
+    let engine = load_engine(model, method)?;
+    let prompt: Vec<u32> = args
+        .get_or("prompt", "1,17,42,99")
+        .split(',')
+        .filter_map(|t| t.trim().parse().ok())
+        .collect();
+    let max_new = args.get_usize("max-new", 32);
+    let out = engine.generate(&prompt, max_new,
+                              prompt.len() + max_new + 8);
+    println!("prompt:     {prompt:?}");
+    println!("completion: {out:?}");
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "tiny-llama-s");
+    let method = args.get_or("method", "mergequant");
+    let engine = load_engine(model, method)?;
+    let m = &engine.model;
+    let cfg = &m.config;
+    println!("bundle  : {model}/{method}");
+    println!("config  : d={} heads={} ff={} layers={} vocab={}",
+             cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.n_layers, cfg.vocab);
+    println!("weights : {:.2} MB resident", m.weight_bytes() as f64 / 1e6);
+    let mb = mergequant::engine::memory::account_model(
+        m, args.get_usize("batch", 1), args.get_usize("seq", 2048));
+    println!("memory(batch-1, seq-2048 decode): total {:.2} MB",
+             mb.total() as f64 / 1e6);
+    println!("  weights={:.2}MB kv={:.2}MB act={:.3}MB dyn_overhead={:.3}MB recon={:.3}MB",
+             mb.weights as f64 / 1e6, mb.kv_cache as f64 / 1e6,
+             mb.activations as f64 / 1e6, mb.dynamic_overhead as f64 / 1e6,
+             mb.recon_indices as f64 / 1e6);
+    for (i, l) in m.layers.iter().enumerate().take(
+        if args.get_bool("all-layers") { usize::MAX } else { 1 }) {
+        println!("layer {i}:");
+        let modes = [("q", &l.q), ("k", &l.k), ("v", &l.v), ("o", &l.o),
+                     ("gate", &l.gate), ("up", &l.up), ("down", &l.down)];
+        for (name, lin) in modes {
+            let desc = match lin {
+                mergequant::engine::Linear::Fp { .. } => "fp32".to_string(),
+                mergequant::engine::Linear::Quant { qw, mode } => format!(
+                    "{:?} w{}b group={} {}", mode_name(mode), qw.bits,
+                    qw.group,
+                    if qw.zero.is_some() { "asym" } else { "sym" }),
+            };
+            println!("  {name:<5} {desc}");
+        }
+        println!("  attn_norm quant={:?} recon={}",
+                 l.attn_norm.quant_qmax,
+                 l.attn_norm.recon_idx.is_some());
+    }
+    Ok(())
+}
+
+fn mode_name(m: &mergequant::engine::QuantMode) -> &'static str {
+    match m {
+        mergequant::engine::QuantMode::Static => "static",
+        mergequant::engine::QuantMode::TensorStatic { .. } => "tensor_static",
+        mergequant::engine::QuantMode::Dynamic { hadamard, .. } => {
+            if *hadamard { "dynamic+had" } else { "dynamic" }
+        }
+    }
+}
+
+fn cmd_runtime(args: &Args) -> Result<()> {
+    let name = args.get_or("artifact", "tiny-llama-s.prefill.fp32");
+    let path = artifacts_dir().join("hlo").join(format!("{name}.hlo.txt"));
+    let mut rt = runtime::Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+    rt.load_hlo(name, &path)?;
+    println!("compiled {name}");
+    // smoke-execute with an arbitrary token batch from the HLO meta
+    let meta = corpus::load_json(&artifacts_dir().join("hlo").join("hlo.json"))?;
+    let info = meta.req(name).map_err(anyhow::Error::msg)?;
+    let batch = info.req_usize("batch").map_err(anyhow::Error::msg)?;
+    let seq = info.req_usize("seq").map_err(anyhow::Error::msg)?;
+    let tokens: Vec<i32> = (0..batch * seq).map(|i| 3 + (i as i32 % 64)).collect();
+    let logits = rt.execute_prefill_logits(name, &tokens, batch, seq)?;
+    println!("executed: {} logits, first = {:.4}", logits.len(), logits[0]);
+    Ok(())
+}

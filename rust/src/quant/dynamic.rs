@@ -1,0 +1,104 @@
+//! Per-token dynamic quantization ops — the explicit "Quant"/"DeQuant"
+//! passes that dynamic W4A4 pays on every token (paper Fig. 4 red box,
+//! Table 6). These are deliberately separate memory passes, mirroring the
+//! PyTorch implementation the paper benchmarks against; the fused static
+//! path in the engine never runs them.
+
+use super::{qmax_for_bits, quantize_value};
+
+/// Per-token (per-row) absmax quantize: x (m, n) f32 → xq i8 + row scales.
+/// One full read pass + one write pass over the activation tensor.
+pub fn per_token_quant(x: &[f32], m: usize, n: usize, qmax: i32, clip: f32,
+                       xq: &mut [i8], scales: &mut [f32]) {
+    assert_eq!(x.len(), m * n);
+    assert_eq!(xq.len(), m * n);
+    assert_eq!(scales.len(), m);
+    for i in 0..m {
+        let row = &x[i * n..(i + 1) * n];
+        let absmax = row.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        let s = (absmax * clip / qmax as f32).max(1e-8);
+        scales[i] = s;
+        let inv = 1.0 / s;
+        let qr = &mut xq[i * n..(i + 1) * n];
+        for (q, &v) in qr.iter_mut().zip(row) {
+            *q = quantize_value(v, inv, qmax);
+        }
+    }
+}
+
+/// Explicit dequantize pass: y (m, j) i32 acc → f32 with row×col scales.
+/// (In the fused engine this is the GEMM epilogue; as a standalone pass it
+/// costs one more full write of the output — the dynamic-path reality.)
+pub fn dequant_pass(acc: &[i32], row_scale: &[f32], col_scale: &[f32],
+                    m: usize, j: usize, out: &mut [f32]) {
+    for i in 0..m {
+        for c in 0..j {
+            out[i * j + c] = acc[i * j + c] as f32 * row_scale[i] * col_scale[c];
+        }
+    }
+}
+
+/// Convenience: the full dynamic-quant step for a given bit width
+/// (allocating variant used by tests/benches).
+pub fn dynamic_quant_step(x: &[f32], m: usize, n: usize, bits: u32,
+                          clip: f32) -> (Vec<i8>, Vec<f32>) {
+    let mut xq = vec![0i8; m * n];
+    let mut scales = vec![0f32; m];
+    per_token_quant(x, m, n, qmax_for_bits(bits), clip, &mut xq, &mut scales);
+    (xq, scales)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quant_dequant_bounded_error() {
+        let mut rng = Rng::new(1);
+        let (m, n) = (16, 64);
+        let x: Vec<f32> = (0..m * n).map(|_| rng.normal() * 3.0).collect();
+        let (xq, s) = dynamic_quant_step(&x, m, n, 4, 1.0);
+        for i in 0..m {
+            for k in 0..n {
+                let deq = xq[i * n + k] as f32 * s[i];
+                // max error is half a step per element
+                assert!((deq - x[i * n + k]).abs() <= 0.5 * s[i] + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn per_row_scales_independent() {
+        let x = [1.0f32, 2.0, 100.0, 50.0];
+        let (xq, s) = dynamic_quant_step(&x, 2, 2, 4, 1.0);
+        assert!((s[0] - 2.0 / 7.0).abs() < 1e-6);
+        assert!((s[1] - 100.0 / 7.0).abs() < 1e-6);
+        assert_eq!(xq[1], 7);
+        assert_eq!(xq[2], 7);
+    }
+
+    #[test]
+    fn clip_shrinks_scale() {
+        let x = [7.0f32, -7.0];
+        let (_, s1) = dynamic_quant_step(&x, 1, 2, 4, 1.0);
+        let (_, s2) = dynamic_quant_step(&x, 1, 2, 4, 0.5);
+        assert!((s2[0] - 0.5 * s1[0]).abs() < 1e-7);
+    }
+
+    #[test]
+    fn dequant_pass_matches() {
+        let acc = vec![14i32, -7];
+        let mut out = vec![0f32; 2];
+        dequant_pass(&acc, &[2.0], &[0.5, 1.0], 1, 2, &mut out);
+        assert_eq!(out, vec![14.0, -14.0]);
+    }
+
+    #[test]
+    fn integral_and_in_range() {
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..256).map(|_| rng.normal() * 10.0).collect();
+        let (xq, _) = dynamic_quant_step(&x, 4, 64, 3, 1.0);
+        assert!(xq.iter().all(|&q| (-3..=3).contains(&q)));
+    }
+}

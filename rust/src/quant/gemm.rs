@@ -1,0 +1,281 @@
+//! GEMM kernels. Weight layout is **transposed**: `wt` is (j, n) row-major
+//! so every output column reads one contiguous weight row — the right
+//! layout for both GEMV decode and j-tiled prefill GEMM, and the CPU
+//! analogue of the K-major tiling an INT4 tensor-core kernel wants.
+//!
+//! The integer kernels accumulate i32 and finish with the per-output-column
+//! rescale epilogue of paper Eq. (5): after Quantization Step Migration the
+//! per-channel static path needs *only* this epilogue, which is why it
+//! aligns with integer acceleration kernels at all.
+
+use super::pack::unpack_int4_into;
+
+/// y (m, j) = x (m, n) @ wt^T, f32 reference path (the FP16 baseline cost).
+pub fn gemm_f32(x: &[f32], wt: &[f32], m: usize, n: usize, j: usize,
+                out: &mut [f32]) {
+    assert_eq!(x.len(), m * n);
+    assert_eq!(wt.len(), j * n);
+    assert_eq!(out.len(), m * j);
+    for i in 0..m {
+        let xr = &x[i * n..(i + 1) * n];
+        let or = &mut out[i * j..(i + 1) * j];
+        for (c, o) in or.iter_mut().enumerate() {
+            let wr = &wt[c * n..(c + 1) * n];
+            *o = dot_f32(xr, wr);
+        }
+    }
+}
+
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    // 4 independent accumulators — breaks the dependency chain so LLVM
+    // vectorizes and pipelines the loop.
+    let mut acc = [0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    // i16 products (i8·i8 always fits) accumulated in i32: LLVM lowers
+    // this reduction to vpmaddwd/vpdpwssd under AVX-512BW, giving the
+    // integer path its width advantage over the f32 path.
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        acc += (x as i16 * y as i16) as i32;
+    }
+    acc
+}
+
+/// Integer GEMM, unpacked i8 weights: acc (m, j) i32.
+pub fn gemm_i8(xq: &[i8], wt: &[i8], m: usize, n: usize, j: usize,
+               acc: &mut [i32]) {
+    assert_eq!(xq.len(), m * n);
+    assert_eq!(wt.len(), j * n);
+    assert_eq!(acc.len(), m * j);
+    for i in 0..m {
+        let xr = &xq[i * n..(i + 1) * n];
+        let ar = &mut acc[i * j..(i + 1) * j];
+        for (c, o) in ar.iter_mut().enumerate() {
+            *o = dot_i8(xr, &wt[c * n..(c + 1) * n]);
+        }
+    }
+}
+
+/// Integer GEMM over **packed int4** weights (j, n/2 bytes per row).
+///
+/// Unpacks one weight row at a time into a scratch buffer: the row is then
+/// reused across all m activation rows, so the unpack cost amortizes and
+/// HBM→cache traffic is halved vs i8 (the bandwidth win static INT4 buys).
+pub fn gemm_i8_packed4(xq: &[i8], wpacked: &[u8], m: usize, n: usize,
+                       j: usize, scratch: &mut Vec<i8>, acc: &mut [i32]) {
+    assert_eq!(xq.len(), m * n);
+    let row_bytes = n.div_ceil(2);
+    assert_eq!(wpacked.len(), j * row_bytes);
+    assert_eq!(acc.len(), m * j);
+    scratch.resize(n, 0);
+    for c in 0..j {
+        unpack_int4_into(&wpacked[c * row_bytes..(c + 1) * row_bytes],
+                         scratch);
+        for i in 0..m {
+            acc[i * j + c] = dot_i8(&xq[i * n..(i + 1) * n], scratch);
+        }
+    }
+}
+
+/// Epilogue for symmetric per-column scales (group = whole column):
+/// y = acc · colscale, with an optional per-row factor (dynamic path).
+pub fn epilogue_sym(acc: &[i32], col_scale: &[f32], row_scale: Option<&[f32]>,
+                    m: usize, j: usize, out: &mut [f32]) {
+    assert_eq!(acc.len(), m * j);
+    assert_eq!(col_scale.len(), j);
+    for i in 0..m {
+        let rs = row_scale.map_or(1.0, |r| r[i]);
+        let ar = &acc[i * j..(i + 1) * j];
+        let or = &mut out[i * j..(i + 1) * j];
+        for c in 0..j {
+            or[c] = ar[c] as f32 * col_scale[c] * rs;
+        }
+    }
+}
+
+/// Asymmetric epilogue: y = (acc − rowsum·zero_j) · colscale · rowscale.
+/// `xq_rowsum` is Σ_k xq_ik (one pass, stays in cache).
+pub fn epilogue_asym(acc: &[i32], xq_rowsum: &[i32], zero: &[i32],
+                     col_scale: &[f32], row_scale: Option<&[f32]>, m: usize,
+                     j: usize, out: &mut [f32]) {
+    for i in 0..m {
+        let rs = row_scale.map_or(1.0, |r| r[i]);
+        let rsum = xq_rowsum[i];
+        for c in 0..j {
+            out[i * j + c] = (acc[i * j + c] - rsum * zero[c]) as f32
+                * col_scale[c]
+                * rs;
+        }
+    }
+}
+
+pub fn rowsum_i8(xq: &[i8], m: usize, n: usize, out: &mut Vec<i32>) {
+    out.clear();
+    for i in 0..m {
+        out.push(xq[i * n..(i + 1) * n].iter().map(|&v| v as i32).sum());
+    }
+}
+
+/// Grouped integer GEMM + epilogue in one (general path; Table 5 W3-group).
+/// scale/zero are (G, j) row-major; group divides n.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_grouped(xq: &[i8], wt: &[i8], m: usize, n: usize, j: usize,
+                       group: usize, scale: &[f32], zero: Option<&[i32]>,
+                       row_scale: Option<&[f32]>, out: &mut [f32]) {
+    let g = if group == 0 { n } else { group };
+    let ngroups = n / g;
+    assert_eq!(scale.len(), ngroups * j);
+    for i in 0..m {
+        let rs = row_scale.map_or(1.0, |r| r[i]);
+        for c in 0..j {
+            let wr = &wt[c * n..(c + 1) * n];
+            let xr = &xq[i * n..(i + 1) * n];
+            let mut y = 0f32;
+            for gi in 0..ngroups {
+                let lo = gi * g;
+                let acc = dot_i8(&xr[lo..lo + g], &wr[lo..lo + g]);
+                let corr = match zero {
+                    Some(z) => {
+                        let rsum: i32 =
+                            xr[lo..lo + g].iter().map(|&v| v as i32).sum();
+                        acc - rsum * z[gi * j + c]
+                    }
+                    None => acc,
+                };
+                y += corr as f32 * scale[gi * j + c];
+            }
+            out[i * j + c] = y * rs;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::pack_int4;
+    use crate::util::rng::Rng;
+
+    fn naive_f32(x: &[f32], wt: &[f32], m: usize, n: usize, j: usize)
+                 -> Vec<f32> {
+        let mut out = vec![0f32; m * j];
+        for i in 0..m {
+            for c in 0..j {
+                let mut s = 0f64;
+                for k in 0..n {
+                    s += x[i * n + k] as f64 * wt[c * n + k] as f64;
+                }
+                out[i * j + c] = s as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn gemm_f32_matches_naive() {
+        let mut rng = Rng::new(1);
+        let (m, n, j) = (7, 65, 33);
+        let x: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let wt: Vec<f32> = (0..j * n).map(|_| rng.normal()).collect();
+        let mut out = vec![0f32; m * j];
+        gemm_f32(&x, &wt, m, n, j, &mut out);
+        let want = naive_f32(&x, &wt, m, n, j);
+        for (a, b) in out.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gemm_i8_exact() {
+        let mut rng = Rng::new(2);
+        let (m, n, j) = (5, 48, 17);
+        let xq: Vec<i8> = (0..m * n).map(|_| rng.usize(0, 15) as i8 - 7).collect();
+        let wt: Vec<i8> = (0..j * n).map(|_| rng.usize(0, 15) as i8 - 7).collect();
+        let mut acc = vec![0i32; m * j];
+        gemm_i8(&xq, &wt, m, n, j, &mut acc);
+        for i in 0..m {
+            for c in 0..j {
+                let want: i32 = (0..n)
+                    .map(|k| xq[i * n + k] as i32 * wt[c * n + k] as i32)
+                    .sum();
+                assert_eq!(acc[i * j + c], want);
+            }
+        }
+    }
+
+    #[test]
+    fn packed4_matches_i8() {
+        let mut rng = Rng::new(3);
+        let (m, n, j) = (4, 64, 12);
+        let xq: Vec<i8> = (0..m * n).map(|_| rng.usize(0, 15) as i8 - 7).collect();
+        let wt: Vec<i8> = (0..j * n).map(|_| rng.usize(0, 15) as i8 - 7).collect();
+        let mut packed = Vec::new();
+        for c in 0..j {
+            packed.extend(pack_int4(&wt[c * n..(c + 1) * n]));
+        }
+        let mut a1 = vec![0i32; m * j];
+        let mut a2 = vec![0i32; m * j];
+        gemm_i8(&xq, &wt, m, n, j, &mut a1);
+        let mut scratch = Vec::new();
+        gemm_i8_packed4(&xq, &packed, m, n, j, &mut scratch, &mut a2);
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn epilogues() {
+        let acc = vec![10i32, -4, 6, 8];
+        let mut out = vec![0f32; 4];
+        epilogue_sym(&acc, &[0.5, 2.0], Some(&[1.0, 0.5]), 2, 2, &mut out);
+        assert_eq!(out, vec![5.0, -8.0, 1.5, 8.0]);
+
+        let mut out2 = vec![0f32; 4];
+        epilogue_asym(&acc, &[2, 3], &[1, -1], &[0.5, 2.0], None, 2, 2,
+                      &mut out2);
+        // row0: (10-2*1)*0.5=4, (-4+2)*2=-4 ; row1: (6-3)*0.5=1.5, (8+3)*2=22
+        assert_eq!(out2, vec![4.0, -4.0, 1.5, 22.0]);
+    }
+
+    #[test]
+    fn grouped_matches_dequant_reference() {
+        let mut rng = Rng::new(4);
+        let (m, n, j, g) = (3, 32, 5, 8);
+        let xq: Vec<i8> = (0..m * n).map(|_| rng.usize(0, 15) as i8 - 7).collect();
+        let wt: Vec<i8> = (0..j * n).map(|_| rng.usize(0, 15) as i8 - 7).collect();
+        let ngroups = n / g;
+        let scale: Vec<f32> =
+            (0..ngroups * j).map(|_| rng.f32() * 0.1 + 0.01).collect();
+        let zero: Vec<i32> = (0..ngroups * j).map(|_| rng.usize(0, 5) as i32 - 2).collect();
+        let mut out = vec![0f32; m * j];
+        gemm_i8_grouped(&xq, &wt, m, n, j, g, &scale, Some(&zero), None,
+                        &mut out);
+        // reference: dequantize weight then f32 GEMM
+        for i in 0..m {
+            for c in 0..j {
+                let mut want = 0f64;
+                for k in 0..n {
+                    let gi = k / g;
+                    let w = (wt[c * n + k] as i32 - zero[gi * j + c]) as f64
+                        * scale[gi * j + c] as f64;
+                    want += xq[i * n + k] as f64 * w;
+                }
+                assert!((out[i * j + c] as f64 - want).abs() < 1e-3);
+            }
+        }
+    }
+}

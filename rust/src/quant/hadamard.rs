@@ -1,0 +1,98 @@
+//! Online block-Hadamard transform, block size 64 — bit-compatible with
+//! `python/compile/quant/hadamard.py::fwht_block64` (same butterfly order,
+//! same 1/√64 normalisation). Used by the `+hadamard` method variants on
+//! the per-token-dynamic projections.
+
+pub const BLOCK: usize = 64;
+const INV_SQRT: f32 = 0.125; // 1/sqrt(64)
+
+/// In-place normalised FWHT on each 64-channel block of each row.
+pub fn fwht_block64(x: &mut [f32], m: usize, d: usize) {
+    assert_eq!(x.len(), m * d);
+    assert_eq!(d % BLOCK, 0, "d must be divisible by 64");
+    for i in 0..m {
+        let row = &mut x[i * d..(i + 1) * d];
+        for b in 0..d / BLOCK {
+            let blk = &mut row[b * BLOCK..(b + 1) * BLOCK];
+            fwht64(blk);
+        }
+    }
+}
+
+#[inline]
+fn fwht64(v: &mut [f32]) {
+    let mut h = 1;
+    while h < BLOCK {
+        let step = 2 * h;
+        let mut base = 0;
+        while base < BLOCK {
+            for i in 0..h {
+                let a = v[base + i];
+                let b = v[base + h + i];
+                v[base + i] = a + b;
+                v[base + h + i] = a - b;
+            }
+            base += step;
+        }
+        h *= 2;
+    }
+    for x in v.iter_mut() {
+        *x *= INV_SQRT;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn preserves_norm() {
+        let mut rng = Rng::new(1);
+        let d = 128;
+        let orig: Vec<f32> = (0..2 * d).map(|_| rng.normal()).collect();
+        let mut x = orig.clone();
+        fwht_block64(&mut x, 2, d);
+        for i in 0..2 {
+            let n0: f32 =
+                orig[i * d..(i + 1) * d].iter().map(|v| v * v).sum();
+            let n1: f32 = x[i * d..(i + 1) * d].iter().map(|v| v * v).sum();
+            assert!((n0 - n1).abs() / n0 < 1e-4);
+        }
+    }
+
+    #[test]
+    fn involutive() {
+        let mut rng = Rng::new(2);
+        let orig: Vec<f32> = (0..192).map(|_| rng.normal()).collect();
+        let mut x = orig.clone();
+        fwht_block64(&mut x, 1, 192);
+        fwht_block64(&mut x, 1, 192);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matches_dense_definition() {
+        // H_64[a][b] = (-1)^{popcount(a & b)} / sqrt(64)
+        let mut x = vec![0f32; 64];
+        x[5] = 1.0;
+        fwht64(&mut x);
+        for (b, v) in x.iter().enumerate() {
+            let sign = if (5usize & b).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
+            assert!((v - sign * INV_SQRT).abs() < 1e-6, "b={b}");
+        }
+    }
+
+    #[test]
+    fn smooths_outlier_spike() {
+        // One huge channel spreads across its block — the rotation's point.
+        let mut x = vec![0.1f32; 64];
+        x[7] = 50.0;
+        let before_max = 50.0f32;
+        fwht_block64(&mut x, 1, 64);
+        let after_max = x.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        assert!(after_max < before_max / 4.0);
+    }
+}

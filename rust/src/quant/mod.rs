@@ -1,0 +1,53 @@
+//! Integer-kernel substrate (the CUTLASS-INT4 stand-in, DESIGN.md §2).
+//!
+//! * [`pack`] — INT4 nibble packing (two weights per byte).
+//! * [`gemm`] — f32 reference GEMM and the i8/packed-int4 integer GEMM with
+//!   the per-output-column rescale epilogue (the exact shape QSM aligns
+//!   per-channel static quantization to, paper Eq. 5).
+//! * [`dynamic`] — the explicit per-token Quant/DeQuant passes dynamic
+//!   quantization needs (the overhead MergeQuant eliminates; Table 6).
+//! * [`reconstruct`] — the dimension-reconstruction gather (paper App.
+//!   C.1), MergeQuant's only runtime addition.
+//! * [`hadamard`] — online block-FWHT(64) used by the `+hadamard`
+//!   variants; bit-matches the Python `quant.hadamard.fwht_block64`.
+
+pub mod dynamic;
+pub mod gemm;
+pub mod hadamard;
+pub mod pack;
+pub mod reconstruct;
+
+/// Symmetric qmax for a bit width: 2^(b-1) − 1 (paper Eq. 1).
+#[inline]
+pub fn qmax_for_bits(bits: u32) -> i32 {
+    (1 << (bits - 1)) - 1
+}
+
+/// Round-half-away-from-zero then clamp — the ⌈·⌋ of Eq. (1). `f32::round`
+/// has exactly these semantics, matching the JAX pipeline's oracle.
+#[inline]
+pub fn quantize_value(x: f32, inv_scale: f32, qmax: i32) -> i8 {
+    let q = (x * inv_scale).round();
+    q.clamp(-(qmax as f32), qmax as f32) as i8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax_for_bits(4), 7);
+        assert_eq!(qmax_for_bits(3), 3);
+        assert_eq!(qmax_for_bits(8), 127);
+    }
+
+    #[test]
+    fn rounding_half_away() {
+        assert_eq!(quantize_value(0.5, 1.0, 7), 1);
+        assert_eq!(quantize_value(-0.5, 1.0, 7), -1);
+        assert_eq!(quantize_value(2.5, 1.0, 7), 3);
+        assert_eq!(quantize_value(100.0, 1.0, 7), 7);
+        assert_eq!(quantize_value(-100.0, 1.0, 7), -7);
+    }
+}

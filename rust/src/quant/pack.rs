@@ -1,0 +1,106 @@
+//! INT4 nibble packing: two signed 4-bit values per byte.
+//!
+//! Values must lie in [-8, 7] (we only ever store [-qmax, qmax] ⊆ [-7, 7]
+//! symmetric, or shifted-signed asymmetric codes, which also fit). Layout:
+//! element 2i in the low nibble, 2i+1 in the high nibble; odd lengths pad
+//! the final high nibble with 0.
+
+/// Pack a row of i8 four-bit values; panics (debug) if out of range.
+pub fn pack_int4(vals: &[i8]) -> Vec<u8> {
+    let mut out = vec![0u8; vals.len().div_ceil(2)];
+    for (i, &v) in vals.iter().enumerate() {
+        debug_assert!((-8..=7).contains(&v), "int4 range: {v}");
+        let nib = (v as u8) & 0x0F;
+        if i % 2 == 0 {
+            out[i / 2] |= nib;
+        } else {
+            out[i / 2] |= nib << 4;
+        }
+    }
+    out
+}
+
+/// Unpack into a caller-provided buffer (len = number of values).
+/// Branchless two-per-byte loop — vectorizes under AVX-512BW.
+pub fn unpack_int4_into(packed: &[u8], out: &mut [i8]) {
+    let pairs = out.len() / 2;
+    for i in 0..pairs {
+        let byte = packed[i];
+        // Sign-extend low and high nibbles.
+        out[2 * i] = ((byte << 4) as i8) >> 4;
+        out[2 * i + 1] = (byte as i8) >> 4;
+    }
+    if out.len() % 2 == 1 {
+        let byte = packed[pairs];
+        out[out.len() - 1] = ((byte << 4) as i8) >> 4;
+    }
+}
+
+pub fn unpack_int4(packed: &[u8], len: usize) -> Vec<i8> {
+    let mut out = vec![0i8; len];
+    unpack_int4_into(packed, &mut out);
+    out
+}
+
+/// Extract value i without unpacking the row.
+#[inline]
+pub fn get_int4(packed: &[u8], i: usize) -> i8 {
+    let byte = packed[i / 2];
+    let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+    ((nib << 4) as i8) >> 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_all_values() {
+        let vals: Vec<i8> = (-8..=7).collect();
+        let packed = pack_int4(&vals);
+        assert_eq!(packed.len(), 8);
+        assert_eq!(unpack_int4(&packed, vals.len()), vals);
+    }
+
+    #[test]
+    fn roundtrip_odd_length() {
+        let vals = vec![-7i8, 3, 5];
+        let packed = pack_int4(&vals);
+        assert_eq!(packed.len(), 2);
+        assert_eq!(unpack_int4(&packed, 3), vals);
+    }
+
+    #[test]
+    fn get_matches_unpack() {
+        let mut rng = Rng::new(5);
+        let vals: Vec<i8> =
+            (0..1001).map(|_| rng.usize(0, 15) as i8 - 8).collect();
+        let packed = pack_int4(&vals);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(get_int4(&packed, i), v);
+        }
+    }
+
+    #[test]
+    fn property_roundtrip_random() {
+        crate::util::proptest::check(
+            11,
+            100,
+            |r| {
+                let len = r.usize(0, 200);
+                (0..len).map(|_| r.usize(0, 16) as u32).collect::<Vec<u32>>()
+            },
+            |codes| {
+                let vals: Vec<i8> =
+                    codes.iter().map(|&c| c as i8 - 8).collect();
+                let rt = unpack_int4(&pack_int4(&vals), vals.len());
+                if rt == vals {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,88 @@
+//! Dimension reconstruction at runtime (paper App. C.1).
+//!
+//! After the offline split/prune of the static scale vector, the only
+//! runtime cost MergeQuant adds is this gather: reorder the quantized
+//! activation channels by `recon_idx` (dropping pruned channels and
+//! duplicating split "strong" channels). One read + one write pass over
+//! an already-int8 tensor — compare `dynamic::per_token_quant`, which must
+//! read f32, reduce, divide and round (Table 6 measures the two).
+
+/// Gather channels of xq (m, d) by idx (d,) into out (m, d).
+pub fn reconstruct_i8(xq: &[i8], idx: &[u32], m: usize, d: usize,
+                      out: &mut [i8]) {
+    assert_eq!(xq.len(), m * d);
+    assert_eq!(idx.len(), d);
+    assert_eq!(out.len(), m * d);
+    for i in 0..m {
+        let row = &xq[i * d..(i + 1) * d];
+        let or = &mut out[i * d..(i + 1) * d];
+        for (o, &src) in or.iter_mut().zip(idx) {
+            *o = row[src as usize];
+        }
+    }
+}
+
+/// f32 variant (used by the paper's own snippet on fp activations; we
+/// bench both to show the comparison is not storage-format-rigged).
+pub fn reconstruct_f32(x: &[f32], idx: &[u32], m: usize, d: usize,
+                       out: &mut [f32]) {
+    for i in 0..m {
+        let row = &x[i * d..(i + 1) * d];
+        let or = &mut out[i * d..(i + 1) * d];
+        for (o, &src) in or.iter_mut().zip(idx) {
+            *o = row[src as usize];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proptest, rng::Rng};
+
+    #[test]
+    fn gather_basic() {
+        let x = vec![1i8, 2, 3, 4, 5, 6];
+        let idx = vec![2u32, 2, 0];
+        let mut out = vec![0i8; 6];
+        reconstruct_i8(&x, &idx, 2, 3, &mut out);
+        assert_eq!(out, vec![3, 3, 1, 6, 6, 4]);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(1);
+        let d = 64;
+        let x: Vec<f32> = (0..2 * d).map(|_| rng.normal()).collect();
+        let idx: Vec<u32> = (0..d as u32).collect();
+        let mut out = vec![0f32; 2 * d];
+        reconstruct_f32(&x, &idx, 2, d, &mut out);
+        assert_eq!(out, x);
+    }
+
+    #[test]
+    fn property_gather_values_come_from_source() {
+        proptest::check(
+            21,
+            100,
+            |r| {
+                let d = r.usize(1, 64);
+                let idx: Vec<u32> =
+                    (0..d).map(|_| r.usize(0, d) as u32).collect();
+                idx
+            },
+            |idx| {
+                let d = idx.len();
+                let x: Vec<i8> = (0..d as i8).collect();
+                let mut out = vec![0i8; d];
+                reconstruct_i8(&x, idx, 1, d, &mut out);
+                for (o, &src) in out.iter().zip(idx) {
+                    if *o != x[src as usize] {
+                        return Err(format!("out {o} != x[{src}]"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

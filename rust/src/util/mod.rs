@@ -1,0 +1,8 @@
+//! Small self-contained substrates: PRNG, JSON, statistics, property
+//! testing. (The vendored registry has no rand / serde / criterion /
+//! proptest — DESIGN.md §2 substitution table.)
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

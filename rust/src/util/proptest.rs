@@ -1,0 +1,165 @@
+//! Tiny property-testing harness (proptest is not vendored).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs and asserts
+//! the property on each; on failure it performs a bounded greedy shrink
+//! using the input's `Shrink` implementation and reports the smallest
+//! failing case. Used by the coordinator-invariant tests.
+
+use super::rng::Rng;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Shrink for u32 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // drop halves
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        // drop one element
+        if self.len() > 1 {
+            let mut v = self.clone();
+            v.pop();
+            out.push(v);
+        }
+        // shrink one element
+        for (i, x) in self.iter().enumerate().take(4) {
+            for sx in x.shrink().into_iter().take(2) {
+                let mut v = self.clone();
+                v[i] = sx;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run a property over `cases` random inputs; panics with the (shrunken)
+/// counterexample on failure.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut generate: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (smallest, smsg) = shrink_loop(input, msg, &prop);
+            panic!(
+                "property failed (case {case}, seed {seed}): {smsg}\n\
+                 counterexample: {smallest:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink, P: Fn(&T) -> Result<(), String>>(
+    mut cur: T,
+    mut msg: String,
+    prop: &P,
+) -> (T, String) {
+    for _ in 0..200 {
+        let mut advanced = false;
+        for cand in cur.shrink() {
+            if let Err(m) = prop(&cand) {
+                cur = cand;
+                msg = m;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (cur, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(1, 200, |r| r.usize(0, 100), |x| {
+            if *x < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(2, 200, |r| r.usize(0, 100), |x| {
+            if *x < 50 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 50"))
+            }
+        });
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // Property "len < 5" fails; shrinking should land near len 5.
+        let gen = |r: &mut Rng| (0..r.usize(5, 40)).collect::<Vec<usize>>();
+        let prop = |v: &Vec<usize>| {
+            if v.len() < 5 {
+                Ok(())
+            } else {
+                Err("too long".into())
+            }
+        };
+        let mut rng = Rng::new(3);
+        let bad = gen(&mut rng);
+        let (small, _) = shrink_loop(bad, "seed".into(), &prop);
+        assert!(small.len() >= 5 && small.len() <= 6);
+    }
+}

@@ -1,0 +1,99 @@
+//! Summary statistics + timing helpers for the bench harness.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    let mean = v.iter().sum::<f64>() / n as f64;
+    let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+        / n.max(1) as f64;
+    let q = |p: f64| v[(p * (n - 1) as f64).round() as usize];
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: v[0],
+        p50: q(0.5),
+        p90: q(0.9),
+        p99: q(0.99),
+        max: v[n - 1],
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured runs then `iters` measured,
+/// returning per-iteration seconds.
+pub fn time_iters<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// Adaptive timing: run until `min_time` has elapsed or `max_iters`
+/// reached (at least 3 iterations). Returns per-iteration seconds.
+pub fn time_adaptive<F: FnMut()>(min_time: Duration, max_iters: usize,
+                                 mut f: F) -> Vec<f64> {
+    f(); // warmup
+    let mut out = Vec::new();
+    let start = Instant::now();
+    while (start.elapsed() < min_time || out.len() < 3)
+        && out.len() < max_iters
+    {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn summary_empty() {
+        assert_eq!(summarize(&[]).n, 0);
+    }
+
+    #[test]
+    fn timing_runs() {
+        let mut count = 0;
+        let ts = time_iters(2, 5, || count += 1);
+        assert_eq!(ts.len(), 5);
+        assert_eq!(count, 7);
+        assert!(ts.iter().all(|t| *t >= 0.0));
+    }
+}

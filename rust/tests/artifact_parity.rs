@@ -1,0 +1,159 @@
+//! Parity tests binding the three layers together (require `make
+//! artifacts`; they skip when the tree is absent so `cargo test` stays
+//! green on a fresh checkout):
+//!
+//! * engine-vs-JAX goldens: the Rust engine on a `.qmod` bundle must
+//!   reproduce the JAX quantized forward's logits;
+//! * greedy-decode golden: token-exact agreement on a fixed prompt;
+//! * engine-vs-PJRT: the AOT HLO (L2/L1 via Pallas) and the native engine
+//!   agree on the same tokens.
+
+use mergequant::artifacts_dir;
+use mergequant::engine::{Engine, KvCache, QModel, Workspace};
+use mergequant::eval::corpus::{load_f32, load_json, load_tokens};
+
+fn goldens_available() -> bool {
+    artifacts_dir().join("goldens").join("goldens.json").exists()
+}
+
+fn load_engine(method: &str) -> Engine {
+    let p = artifacts_dir()
+        .join("models")
+        .join("tiny-llama-s")
+        .join(format!("{method}.qmod"));
+    Engine::new(QModel::load(&p).expect("bundle"))
+}
+
+fn golden_tokens() -> (Vec<u32>, usize, usize) {
+    let g = load_json(&artifacts_dir().join("goldens").join("goldens.json"))
+        .unwrap();
+    let shape = g.get("tokens_shape").unwrap().as_arr().unwrap();
+    let (b, t) = (shape[0].as_usize().unwrap(), shape[1].as_usize().unwrap());
+    let toks =
+        load_tokens(&artifacts_dir().join("goldens").join("tokens.i32"))
+            .unwrap();
+    (toks, b, t)
+}
+
+fn engine_logits(engine: &Engine, toks: &[u32], b: usize, t: usize)
+                 -> Vec<f32> {
+    let cfg = engine.config().clone();
+    let mut out = Vec::new();
+    let mut ws = Workspace::new();
+    for bi in 0..b {
+        let mut cache = KvCache::new(cfg.n_layers, t, cfg.d_model);
+        engine.prefill(&toks[bi * t..(bi + 1) * t], &mut cache, &mut ws);
+        out.extend_from_slice(&ws.logits[..t * cfg.vocab]);
+    }
+    out
+}
+
+fn check_method(method: &str, rtol: f32) {
+    let g = load_json(&artifacts_dir().join("goldens").join("goldens.json"))
+        .unwrap();
+    let entry = match g.get("logits").and_then(|l| l.get(method)) {
+        Some(e) => e,
+        None => return, // method not exported
+    };
+    let file = entry.get("file").unwrap().as_str().unwrap();
+    let want =
+        load_f32(&artifacts_dir().join("goldens").join(file)).unwrap();
+    let (toks, b, t) = golden_tokens();
+    let engine = load_engine(if method == "fp32" { "fp16" } else { method });
+    let got = engine_logits(&engine, &toks, b, t);
+    assert_eq!(got.len(), want.len(), "{method} logits size");
+    let mut worst = 0f32;
+    let scale = want.iter().fold(0f32, |a, &v| a.max(v.abs()));
+    for (a, b) in got.iter().zip(&want) {
+        worst = worst.max((a - b).abs());
+    }
+    assert!(worst <= rtol * scale.max(1.0),
+            "{method}: worst |diff| {worst} vs scale {scale}");
+}
+
+#[test]
+fn engine_matches_jax_fp32_golden() {
+    if !goldens_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    check_method("fp32", 2e-3);
+}
+
+#[test]
+fn engine_matches_jax_quant_goldens() {
+    if !goldens_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    for method in ["mergequant", "mergequant_nh", "rtn", "smoothquant",
+                   "quarot"] {
+        check_method(method, 5e-3);
+    }
+}
+
+#[test]
+fn greedy_decode_matches_golden() {
+    if !goldens_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let g = load_json(&artifacts_dir().join("goldens").join("goldens.json"))
+        .unwrap();
+    let greedy = g.get("greedy").unwrap();
+    let prompt: Vec<u32> = greedy.get("prompt").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_usize().unwrap() as u32).collect();
+    let want: Vec<u32> = greedy.get("completion").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_usize().unwrap() as u32).collect();
+    let engine = load_engine("fp16");
+    let got = engine.generate(&prompt, want.len(),
+                              prompt.len() + want.len() + 4);
+    assert_eq!(got, want, "greedy decode must be token-exact");
+}
+
+#[test]
+fn engine_matches_pjrt_runtime() {
+    if !goldens_available()
+        || !artifacts_dir().join("hlo").join("hlo.json").exists()
+    {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let meta =
+        load_json(&artifacts_dir().join("hlo").join("hlo.json")).unwrap();
+    let name = "tiny-llama-s.prefill.fp32";
+    let info = meta.get(name).unwrap();
+    let (b, t) = (info.get("batch").unwrap().as_usize().unwrap(),
+                  info.get("seq").unwrap().as_usize().unwrap());
+    let mut rt = mergequant::runtime::Runtime::cpu().unwrap();
+    rt.load_hlo(name, &artifacts_dir().join("hlo")
+        .join(format!("{name}.hlo.txt"))).unwrap();
+    let tokens: Vec<i32> = (0..b * t).map(|i| 3 + (i as i32 * 13) % 500)
+        .collect();
+    let pjrt_logits =
+        rt.execute_prefill_logits(name, &tokens, b, t).unwrap();
+    let engine = load_engine("fp16");
+    let toks_u32: Vec<u32> = tokens.iter().map(|&v| v as u32).collect();
+    let got = engine_logits(&engine, &toks_u32, b, t);
+    assert_eq!(got.len(), pjrt_logits.len());
+    let scale = pjrt_logits.iter().fold(0f32, |a, &v| a.max(v.abs()));
+    let mut worst = 0f32;
+    for (a, b) in got.iter().zip(&pjrt_logits) {
+        worst = worst.max((a - b).abs());
+    }
+    assert!(worst < 2e-3 * scale.max(1.0),
+            "engine vs PJRT worst diff {worst} (scale {scale})");
+}
+
+#[test]
+fn quantized_decode_hlo_loads() {
+    let path = artifacts_dir().join("hlo")
+        .join("tiny-llama-s.decode.mergequant.hlo.txt");
+    if !path.exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut rt = mergequant::runtime::Runtime::cpu().unwrap();
+    rt.load_hlo("decode.mq", &path).unwrap();
+    assert!(rt.has("decode.mq"));
+}

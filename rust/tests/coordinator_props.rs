@@ -1,0 +1,238 @@
+//! Property tests on coordinator invariants (homegrown proptest harness):
+//! every request answered exactly once, batch caps respected, KV slabs
+//! never leaked, FIFO admission, backpressure correctness.
+
+use std::collections::HashSet;
+
+use mergequant::bench::synthetic_model;
+use mergequant::coordinator::{Request, Scheduler, SchedulerConfig};
+use mergequant::engine::Engine;
+use mergequant::util::proptest::check;
+use mergequant::util::rng::Rng;
+
+fn make_scheduler(max_batch: usize, slabs: usize) -> Scheduler {
+    let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+    Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch,
+            kv_slabs: slabs,
+            max_seq: 48,
+            max_prefills_per_iter: 2,
+            queue_cap: 64,
+            prefill_chunk: 0,
+        },
+    )
+}
+
+/// Workload: list of (prompt_len, max_new).
+fn gen_workload(r: &mut Rng) -> Vec<(usize, usize)> {
+    let n = r.usize(1, 12);
+    (0..n)
+        .map(|_| (r.usize(1, 20), r.usize(1, 10)))
+        .collect()
+}
+
+#[test]
+fn every_request_answered_exactly_once() {
+    check(101, 12, gen_workload, |workload| {
+        let mut sched = make_scheduler(4, 4);
+        for (i, &(plen, mnew)) in workload.iter().enumerate() {
+            let prompt: Vec<u32> = (0..plen as u32).map(|t| 3 + t % 90).collect();
+            sched
+                .submit(Request::new(i as u64, prompt, mnew))
+                .map_err(|_| "queue full unexpectedly".to_string())?;
+        }
+        let responses = sched.run_to_completion();
+        if responses.len() != workload.len() {
+            return Err(format!("{} responses for {} requests",
+                               responses.len(), workload.len()));
+        }
+        let ids: HashSet<u64> = responses.iter().map(|r| r.id).collect();
+        if ids.len() != workload.len() {
+            return Err("duplicate response ids".into());
+        }
+        for r in &responses {
+            let (plen, mnew) = workload[r.id as usize];
+            if r.prompt_len != plen {
+                return Err(format!("prompt_len {} != {}", r.prompt_len, plen));
+            }
+            if r.tokens.len() > mnew {
+                return Err(format!("generated {} > max_new {}",
+                                   r.tokens.len(), mnew));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn active_set_never_exceeds_max_batch() {
+    check(202, 8, gen_workload, |workload| {
+        let max_batch = 3;
+        let mut sched = make_scheduler(max_batch, 3);
+        for (i, &(plen, mnew)) in workload.iter().enumerate() {
+            let prompt: Vec<u32> = (0..plen as u32).map(|t| 3 + t % 90).collect();
+            let _ = sched.submit(Request::new(i as u64, prompt, mnew));
+        }
+        while sched.has_work() {
+            sched.step();
+            if sched.active_len() > max_batch {
+                return Err(format!("active {} > max_batch {max_batch}",
+                                   sched.active_len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fifo_first_token_order() {
+    // With one admission per iteration, earlier submissions must get their
+    // first token (TTFT) no later than later submissions.
+    let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+    let mut sched = Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 2,
+            kv_slabs: 2,
+            max_seq: 48,
+            max_prefills_per_iter: 1,
+            queue_cap: 64,
+            prefill_chunk: 0,
+        },
+    );
+    for i in 0..6u64 {
+        let prompt: Vec<u32> = (0..8).map(|t| 3 + t % 90).collect();
+        sched.submit(Request::new(i, prompt, 4)).unwrap();
+    }
+    let mut responses = sched.run_to_completion();
+    responses.sort_by_key(|r| r.id);
+    for w in responses.windows(2) {
+        assert!(w[0].ttft <= w[1].ttft,
+                "FIFO violated: id {} ttft {:?} > id {} ttft {:?}",
+                w[0].id, w[0].ttft, w[1].id, w[1].ttft);
+    }
+}
+
+#[test]
+fn oversized_prompts_rejected_not_hung() {
+    let mut sched = make_scheduler(2, 2);
+    // prompt longer than max_seq (48)
+    let prompt: Vec<u32> = (0..64).map(|t| 3 + t % 90).collect();
+    sched.submit(Request::new(1, prompt, 4)).unwrap();
+    sched.submit(Request::new(2, vec![3, 4, 5], 4)).unwrap();
+    let responses = sched.run_to_completion();
+    assert_eq!(responses.len(), 2);
+    let r1 = responses.iter().find(|r| r.id == 1).unwrap();
+    assert!(r1.tokens.is_empty(), "oversized prompt must yield no tokens");
+    let r2 = responses.iter().find(|r| r.id == 2).unwrap();
+    assert_eq!(r2.tokens.len(), 4);
+}
+
+#[test]
+fn backpressure_queue_cap() {
+    let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+    let mut sched = Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 1,
+            kv_slabs: 1,
+            max_seq: 32,
+            max_prefills_per_iter: 1,
+            queue_cap: 2,
+            prefill_chunk: 0,
+        },
+    );
+    assert!(sched.submit(Request::new(1, vec![3], 2)).is_ok());
+    assert!(sched.submit(Request::new(2, vec![3], 2)).is_ok());
+    // queue full now
+    assert!(sched.submit(Request::new(3, vec![3], 2)).is_err());
+    let responses = sched.run_to_completion();
+    assert_eq!(responses.len(), 2);
+}
+
+#[test]
+fn stop_token_terminates_generation() {
+    let mut sched = make_scheduler(2, 2);
+    // First find what the model generates unconstrained.
+    let mut probe = Request::new(1, vec![3, 4, 5], 8);
+    probe.stop_token = None;
+    sched.submit(probe).unwrap();
+    let unconstrained = sched.run_to_completion()[0].tokens.clone();
+    if unconstrained.len() > 2 {
+        let stop = unconstrained[1];
+        let mut sched2 = make_scheduler(2, 2);
+        let mut req = Request::new(9, vec![3, 4, 5], 8);
+        req.stop_token = Some(stop);
+        sched2.submit(req).unwrap();
+        let r = sched2.run_to_completion();
+        assert!(r[0].tokens.len() <= 2,
+                "generation must stop at the stop token");
+    }
+}
+
+#[test]
+fn metrics_consistency() {
+    check(303, 6, gen_workload, |workload| {
+        let mut sched = make_scheduler(4, 4);
+        for (i, &(plen, mnew)) in workload.iter().enumerate() {
+            let prompt: Vec<u32> = (0..plen as u32).map(|t| 3 + t % 90).collect();
+            let _ = sched.submit(Request::new(i as u64, prompt, mnew));
+        }
+        let responses = sched.run_to_completion();
+        let m = &sched.metrics;
+        if m.requests_completed as usize != responses.len() {
+            return Err("requests_completed mismatch".into());
+        }
+        let gen_total: u64 =
+            responses.iter().map(|r| r.tokens.len() as u64).sum();
+        if m.generated_tokens != gen_total {
+            return Err(format!("generated_tokens {} != {gen_total}",
+                               m.generated_tokens));
+        }
+        if m.prefill_calls as usize != responses.len() {
+            return Err("prefill_calls mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn chunked_prefill_same_results_and_bounded_stall() {
+    // Same workload with and without chunking must produce identical
+    // token streams; chunking must increase prefill calls (smaller units).
+    let build = |chunk: usize| {
+        let engine =
+            Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+        Scheduler::new(
+            engine,
+            SchedulerConfig {
+                max_batch: 2,
+                kv_slabs: 2,
+                max_seq: 96,
+                max_prefills_per_iter: 1,
+                queue_cap: 64,
+                prefill_chunk: chunk,
+            },
+        )
+    };
+    let prompts: Vec<Vec<u32>> = (0..4)
+        .map(|i| (0..40 + i * 7).map(|t| 3 + (t * 3 + i) % 90).collect())
+        .collect();
+    let mut outs = Vec::new();
+    let mut prefill_calls = Vec::new();
+    for chunk in [0usize, 8] {
+        let mut sched = build(chunk);
+        for (i, p) in prompts.iter().enumerate() {
+            sched.submit(Request::new(i as u64, p.clone(), 6)).unwrap();
+        }
+        let mut rs = sched.run_to_completion();
+        rs.sort_by_key(|r| r.id);
+        outs.push(rs.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>());
+        prefill_calls.push(sched.metrics.prefill_calls);
+    }
+    assert_eq!(outs[0], outs[1], "chunking changed generated tokens");
+    assert!(prefill_calls[1] > prefill_calls[0],
+            "chunked mode must split prefills ({:?})", prefill_calls);
+}

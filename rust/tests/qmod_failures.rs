@@ -1,0 +1,66 @@
+//! Failure-injection tests for the `.qmod` loader: corrupted inputs must
+//! produce errors, never panics or silent garbage.
+
+use std::io::Write;
+
+use mergequant::engine::QModel;
+
+fn tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("mq_qmod_failures");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(name);
+    let mut f = std::fs::File::create(&p).unwrap();
+    f.write_all(bytes).unwrap();
+    p
+}
+
+#[test]
+fn missing_file_is_error() {
+    let err = QModel::load(std::path::Path::new("/nonexistent/x.qmod"));
+    assert!(err.is_err());
+}
+
+#[test]
+fn bad_magic_is_error() {
+    let p = tmp("bad_magic.qmod", b"NOTQMOD-----------------");
+    let e = QModel::load(&p);
+    assert!(e.is_err());
+    assert!(format!("{:#}", e.unwrap_err()).contains("magic"));
+}
+
+#[test]
+fn truncated_meta_is_error() {
+    // valid magic, meta_len says 1000 but file ends
+    let mut bytes = b"QMOD1\n".to_vec();
+    bytes.extend(1000u32.to_le_bytes());
+    bytes.extend(b"{\"partial\":");
+    let p = tmp("trunc.qmod", &bytes);
+    let res = std::panic::catch_unwind(|| QModel::load(&p));
+    // must be Err or a caught panic (slice OOB) — but never silent success
+    match res {
+        Ok(inner) => assert!(inner.is_err()),
+        Err(_) => panic!("loader panicked on truncated file"),
+    }
+}
+
+#[test]
+fn garbage_meta_is_error() {
+    let meta = b"this is not json at all";
+    let mut bytes = b"QMOD1\n".to_vec();
+    bytes.extend((meta.len() as u32).to_le_bytes());
+    bytes.extend(meta);
+    let p = tmp("garbage_meta.qmod", &bytes);
+    assert!(QModel::load(&p).is_err());
+}
+
+#[test]
+fn valid_json_missing_fields_is_error() {
+    let meta = br#"{"format":1,"method":"x"}"#;
+    let mut bytes = b"QMOD1\n".to_vec();
+    bytes.extend((meta.len() as u32).to_le_bytes());
+    bytes.extend(meta);
+    let p = tmp("missing_fields.qmod", &bytes);
+    let e = QModel::load(&p);
+    assert!(e.is_err());
+    assert!(format!("{:#}", e.unwrap_err()).contains("config"));
+}

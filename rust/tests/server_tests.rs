@@ -1,0 +1,123 @@
+//! Server + TCP gateway integration tests (synthetic model, in-process).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use mergequant::bench::synthetic_model;
+use mergequant::coordinator::server::TcpGateway;
+use mergequant::coordinator::{SchedulerConfig, Server};
+use mergequant::engine::Engine;
+use mergequant::util::json::Json;
+
+fn test_server() -> Server {
+    let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+    Server::start(
+        engine,
+        SchedulerConfig {
+            max_batch: 4,
+            kv_slabs: 4,
+            max_seq: 64,
+            max_prefills_per_iter: 2,
+            queue_cap: 64,
+            prefill_chunk: 0,
+        },
+    )
+}
+
+#[test]
+fn submit_roundtrip() {
+    let server = test_server();
+    let rx = server.submit(vec![3, 4, 5, 6], 8);
+    let resp = rx.recv().expect("response");
+    assert_eq!(resp.tokens.len(), 8);
+    assert_eq!(resp.prompt_len, 4);
+    assert!(resp.ttft <= resp.latency);
+}
+
+#[test]
+fn concurrent_submissions_all_complete() {
+    let server = Arc::new(test_server());
+    let mut handles = Vec::new();
+    for i in 0..12u32 {
+        let s = server.clone();
+        handles.push(std::thread::spawn(move || {
+            let prompt: Vec<u32> = (0..4 + i % 5).map(|t| 3 + t % 90).collect();
+            let resp = s.submit(prompt.clone(), 5).recv().unwrap();
+            assert_eq!(resp.prompt_len, prompt.len());
+            assert_eq!(resp.tokens.len(), 5);
+            resp.id
+        }));
+    }
+    let mut ids: Vec<u64> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), 12, "ids must be unique");
+}
+
+#[test]
+fn shutdown_reports_metrics() {
+    let server = test_server();
+    server.submit(vec![3, 4], 3).recv().unwrap();
+    let report = server.shutdown();
+    assert!(report.contains("requests=1"), "report: {report}");
+}
+
+#[test]
+fn tcp_gateway_end_to_end() {
+    let server = Arc::new(test_server());
+    let gw = TcpGateway::start(server.clone(), 0).unwrap();
+    let stream = TcpStream::connect(gw.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut out = stream;
+
+    // valid request
+    writeln!(out, "{{\"prompt\":[3,9,12],\"max_new\":4}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert_eq!(j.get("prompt_len").unwrap().as_usize().unwrap(), 3);
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 4);
+
+    // malformed request -> error object, connection stays usable
+    writeln!(out, "not json").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(Json::parse(line.trim()).unwrap().get("error").is_some());
+
+    writeln!(out, "{{\"prompt\":[5],\"max_new\":2}}").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(Json::parse(line.trim()).unwrap().get("tokens").is_some());
+
+    gw.stop();
+}
+
+#[test]
+fn gateway_many_clients() {
+    let server = Arc::new(test_server());
+    let gw = TcpGateway::start(server.clone(), 0).unwrap();
+    let addr = gw.addr;
+    let mut handles = Vec::new();
+    for c in 0..4 {
+        handles.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut out = stream;
+            for k in 0..3 {
+                writeln!(out, "{{\"prompt\":[{},{}],\"max_new\":3}}",
+                         3 + c, 4 + k).unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let j = Json::parse(line.trim()).unwrap();
+                assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(),
+                           3);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    gw.stop();
+}
