@@ -5,7 +5,7 @@
 //! the serving-level speedup.
 //!
 //! ```sh
-//! cargo run --release --example serve_e2e [-- --requests 32 --clients 4]
+//! cargo run --release --example serve_e2e [-- --requests 32 --clients 4 --threads 4]
 //! ```
 
 use std::io::{BufRead, BufReader, Write};
@@ -29,7 +29,8 @@ struct RunStats {
 }
 
 fn drive(method: &str, n_requests: usize, n_clients: usize,
-         prompt_len: usize, max_new: usize) -> anyhow::Result<RunStats> {
+         prompt_len: usize, max_new: usize, kernel_threads: usize)
+         -> anyhow::Result<RunStats> {
     let bundle = artifacts_dir()
         .join(format!("models/tiny-llama-s/{method}.qmod"));
     let engine = Engine::new(QModel::load(&bundle)?);
@@ -43,6 +44,7 @@ fn drive(method: &str, n_requests: usize, n_clients: usize,
             max_prefills_per_iter: 2,
             queue_cap: 256,
             prefill_chunk: 0,
+            threads: kernel_threads,
         },
     ));
     let gateway = TcpGateway::start(server.clone(), 0)?;
@@ -111,6 +113,8 @@ fn main() -> anyhow::Result<()> {
     let n_clients = args.get_usize("clients", 4);
     let prompt_len = args.get_usize("prompt-len", 64);
     let max_new = args.get_usize("max-new", 32);
+    // Engine intra-op kernel threads (0 = all cores) — DESIGN.md §7.
+    let kernel_threads = args.get_usize("threads", 1);
 
     if !artifacts_dir().join("models/tiny-llama-s/mergequant.qmod").exists() {
         eprintln!("run `make artifacts` first");
@@ -121,7 +125,8 @@ fn main() -> anyhow::Result<()> {
     let mut throughput = std::collections::HashMap::new();
     for method in ["fp16", "mergequant"] {
         println!("[{method}]");
-        let s = drive(method, n_requests, n_clients, prompt_len, max_new)?;
+        let s = drive(method, n_requests, n_clients, prompt_len, max_new,
+                      kernel_threads)?;
         let lat = summarize(&s.lat_ms);
         let ttft = summarize(&s.ttft_ms);
         let tput = s.gen_tokens as f64 / s.wall_s;

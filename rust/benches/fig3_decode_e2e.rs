@@ -6,6 +6,10 @@
 //! speedups of MergeQuant vs RTN-dynamic vs QuaRot-dynamic vs FP16 are the
 //! reproduced quantity (DESIGN.md §2). Uses the full coordinator path so
 //! batching behaviour matches serving reality.
+//!
+//! Second axis: intra-op **threads** at a fixed batch (DESIGN.md §7) —
+//! batched decode fans out across batch lanes and output-column tiles,
+//! so tok/s must scale with the pool while staying token-identical.
 
 mod common;
 
@@ -86,5 +90,35 @@ fn main() {
                      e2e_t["fp16"] / e2e_t[m]);
         }
     }
-    b.finish("decode + end-to-end speedup vs batch size (paper Fig. 3)");
+
+    // ---- threads axis: fixed batch 8, parallel-kernel scaling ----
+    let threads: Vec<usize> =
+        if std::env::var("MQ_BENCH_FAST").is_ok() { vec![1, 4] }
+        else { vec![1, 2, 4, 8] };
+    const TH_BATCH: usize = 8;
+    let (mut engine, _) = common::engine_or_synthetic("tiny-llama-s",
+                                                      "mergequant");
+    let (mut d1, mut e1) = (f64::NAN, f64::NAN);
+    for &th in &threads {
+        engine.set_threads(th);
+        let _ = run_batch(&engine, 2); // warmup
+        let (mut d, mut e) = (f64::INFINITY, f64::INFINITY);
+        for _ in 0..2 {
+            let (dr, er) = run_batch(&engine, TH_BATCH);
+            d = d.min(dr);
+            e = e.min(er);
+        }
+        b.record(&format!("mergequant decode_tok/s b{TH_BATCH} threads{th}"),
+                 (TH_BATCH * DECODE) as f64 / d);
+        if th == 1 {
+            d1 = d;
+            e1 = e;
+        } else {
+            b.record(&format!("mergequant decode_speedup b{TH_BATCH} \
+                               t{th}_vs_t1"), d1 / d);
+            b.record(&format!("mergequant e2e_speedup b{TH_BATCH} \
+                               t{th}_vs_t1"), e1 / e);
+        }
+    }
+    b.finish("decode + e2e speedup vs batch size + threads (paper Fig. 3)");
 }

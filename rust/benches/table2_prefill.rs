@@ -3,6 +3,11 @@
 //! tiny-llama-s; the reproduced quantity is the speedup column ordering
 //! QuaRot < RTN < MergeQuant (QuaRot pays the online Hadamard, RTN pays
 //! the quant pass, MergeQuant pays only the int8 gather).
+//!
+//! Second axis: intra-op **threads** on the same shape (DESIGN.md §7) —
+//! the tiled parallel kernels must show real prefill scaling (target:
+//! ≥ 2x at 4 threads vs the 1-thread baseline), with bitwise-identical
+//! logits at every point.
 
 mod common;
 
@@ -42,5 +47,34 @@ fn main() {
                      times["fp16"] / times[m]);
         }
     }
-    b.finish("prefill speedup across batch sizes (paper Table 2)");
+
+    // ---- threads axis: same prefill shape, parallel-kernel scaling ----
+    let threads: Vec<usize> =
+        if std::env::var("MQ_BENCH_FAST").is_ok() { vec![1, 4] }
+        else { vec![1, 2, 4, 8] };
+    for m in ["mergequant", "fp16"] {
+        let (mut engine, _) = common::engine_or_synthetic("tiny-llama-s", m);
+        let cfg = engine.config().clone();
+        let prompt: Vec<u32> = (0..SEQ)
+            .map(|i| 3 + (i as u32 * 13) % (cfg.vocab as u32 - 3))
+            .collect();
+        let mut ws = Workspace::new();
+        let mut t1 = f64::NAN;
+        for &th in &threads {
+            engine.set_threads(th);
+            let mut cache = KvCache::new(cfg.n_layers, SEQ, cfg.d_model);
+            let t = b.measure(&format!("{m} prefill seq{SEQ} threads{th}"),
+                              || {
+                cache.reset();
+                engine.prefill(&prompt, &mut cache, &mut ws);
+            });
+            if th == 1 {
+                t1 = t;
+            } else {
+                b.record(&format!("{m} prefill_speedup t{th}_vs_t1"),
+                         t1 / t);
+            }
+        }
+    }
+    b.finish("prefill speedup across batch sizes + threads (paper Table 2)");
 }

@@ -65,6 +65,8 @@ impl ServeConfig {
                 prefill_chunk: s.get("prefill_chunk")
                     .and_then(Json::as_usize)
                     .unwrap_or(d.prefill_chunk),
+                threads: s.get("threads").and_then(Json::as_usize)
+                    .unwrap_or(d.threads),
             };
         }
         cfg
@@ -87,7 +89,8 @@ mod tests {
     fn from_json_overrides() {
         let j = Json::parse(
             r#"{"model":"tiny-llama-m","method":"rtn",
-                "scheduler":{"max_batch":4,"max_seq":256},"port":9999}"#,
+                "scheduler":{"max_batch":4,"max_seq":256,"threads":6},
+                "port":9999}"#,
         )
         .unwrap();
         let c = ServeConfig::from_json(&j);
@@ -95,6 +98,7 @@ mod tests {
         assert_eq!(c.method, "rtn");
         assert_eq!(c.scheduler.max_batch, 4);
         assert_eq!(c.scheduler.max_seq, 256);
+        assert_eq!(c.scheduler.threads, 6);
         assert_eq!(c.scheduler.queue_cap,
                    SchedulerConfig::default().queue_cap);
         assert_eq!(c.port, 9999);

@@ -11,8 +11,15 @@
 //! 3. **Completion:** sequences that hit `max_new` / stop token / cache
 //!    capacity are finalized, their slabs returned to the pool.
 //!
-//! The scheduler is synchronous and single-threaded by design (the engine
-//! is CPU-bound); [`super::server::Server`] wraps it in a worker thread.
+//! **Threading model:** the scheduling loop itself is synchronous — one
+//! iteration at a time, driven by [`super::server::Server`]'s worker
+//! thread — but the engine underneath executes every forward call on its
+//! intra-op worker pool ([`crate::quant::parallel`]): tiled multi-threaded
+//! GEMM, prefill attention over query-row blocks, decode attention across
+//! batch lanes. [`SchedulerConfig::threads`] sizes that pool (plumbed from
+//! the JSON config / `--threads`; DESIGN.md §7). Token streams are bitwise
+//! identical for every thread count, so scheduling invariants and goldens
+//! are unaffected by the parallelism.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -39,6 +46,10 @@ pub struct SchedulerConfig {
     /// `prefill_chunk` tokens per iteration so long prompts cannot stall
     /// the decode batch (0 ⇒ disabled, whole prompt in one call).
     pub prefill_chunk: usize,
+    /// Engine intra-op compute threads (`quant::parallel` pool): 1 ⇒
+    /// serial kernels (the deterministic baseline — though every count
+    /// is bitwise identical), 0 ⇒ all available cores.
+    pub threads: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -50,6 +61,7 @@ impl Default for SchedulerConfig {
             max_prefills_per_iter: 2,
             queue_cap: 1024,
             prefill_chunk: 0,
+            threads: 1,
         }
     }
 }
@@ -84,7 +96,10 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
-    pub fn new(engine: Engine, cfg: SchedulerConfig) -> Self {
+    pub fn new(mut engine: Engine, cfg: SchedulerConfig) -> Self {
+        // The scheduler owns engine threading: config is the single
+        // source of truth for the deployment (DESIGN.md §7).
+        engine.set_threads(cfg.threads);
         let mc = engine.config();
         let pool = KvPool::new(cfg.kv_slabs, mc.n_layers, cfg.max_seq,
                                mc.d_model);

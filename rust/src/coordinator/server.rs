@@ -5,6 +5,10 @@
 //!   * an optional TCP gateway speaking line-delimited JSON
 //!     (`{"prompt":[..],"max_new":N}` → `{"id":..,"tokens":[..],…}`),
 //!     which is what `examples/serve_e2e.rs` exercises end to end.
+//!
+//! The worker thread drives scheduling only; compute fans out from inside
+//! the engine onto its intra-op pool, sized by
+//! [`SchedulerConfig::threads`] (DESIGN.md §7).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};

@@ -7,13 +7,20 @@
 //! emits integers (Eq. 4) and the epilogue is per-output-column (Eq. 5);
 //! the dynamic baselines pay `quant::dynamic` passes per linear — exactly
 //! the overhead the paper measures in Table 6.
+//!
+//! Execution is tiled and (optionally) multi-threaded: every GEMM runs on
+//! the engine's persistent [`ThreadPool`] via `quant::parallel`, prefill
+//! attention fans out over query-row blocks, and batched decode fans out
+//! across batch lanes. Results are **bitwise identical** for every thread
+//! count (DESIGN.md §7), so golden/parity tests hold regardless of the
+//! configured parallelism.
 
 use crate::quant::dynamic::per_token_quant;
-use crate::quant::gemm::{
-    epilogue_asym, epilogue_sym, gemm_f32, gemm_i8, gemm_i8_grouped,
-    gemm_i8_packed4, rowsum_i8,
-};
+use crate::quant::gemm::{gemm_i8_grouped, rowsum_i8};
 use crate::quant::hadamard::fwht_block64;
+use crate::quant::parallel::{
+    par_gemm_f32, par_qlinear, ScopedTask, ThreadPool,
+};
 use crate::quant::reconstruct::reconstruct_i8;
 
 use super::qmod::{Linear, Norm, QModel, QuantMode, QWeight};
@@ -36,7 +43,6 @@ pub struct Workspace {
     pub up: Vec<f32>,
     pub ff: Vec<f32>,       // silu(gate)·up (m, ff)
     pub proj: Vec<f32>,     // o/down projection output (m, d)
-    pub acc: Vec<i32>,      // integer GEMM accumulator
     pub xq: Vec<i8>,        // dynamic-quant activation buffer
     pub row_scale: Vec<f32>,
     pub row_sum: Vec<i32>,
@@ -60,7 +66,6 @@ impl Workspace {
             + (self.qbuf.len() + self.kbuf.len() + self.vbuf.len()) * 4
             + (self.attn.len() + self.gate.len() + self.up.len()
                 + self.ff.len() + self.proj.len()) * 4
-            + self.acc.len() * 4
             + self.xq.len()
             + self.row_scale.len() * 4
             + self.row_sum.len() * 4
@@ -127,11 +132,38 @@ enum Act<'a> {
 
 pub struct Engine {
     pub model: QModel,
+    /// Persistent intra-op worker pool; 1 thread ⇒ fully serial paths.
+    pool: ThreadPool,
 }
 
 impl Engine {
+    /// Serial engine (1 compute thread) — the deterministic baseline.
     pub fn new(model: QModel) -> Self {
-        Engine { model }
+        Self::with_threads(model, 1)
+    }
+
+    /// Engine with an intra-op pool of `threads` compute threads
+    /// (`0` ⇒ all available cores). Output is bitwise identical to the
+    /// serial engine for any value.
+    pub fn with_threads(model: QModel, threads: usize) -> Self {
+        Engine {
+            model,
+            pool: ThreadPool::new(ThreadPool::resolve(threads)),
+        }
+    }
+
+    /// Replace the worker pool (no-op when the resolved count is
+    /// unchanged). Safe at any point between forward calls.
+    pub fn set_threads(&mut self, threads: usize) {
+        let t = ThreadPool::resolve(threads);
+        if t != self.pool.threads() {
+            self.pool = ThreadPool::new(t);
+        }
+    }
+
+    /// Current compute-thread count (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
     pub fn config(&self) -> &super::qmod::ModelConfig {
@@ -176,10 +208,14 @@ impl Engine {
         }
     }
 
-    /// Integer GEMM + rescale epilogue (group-0 fast path, grouped general).
+    /// Integer GEMM + rescale epilogue. Group-0 fast path goes through the
+    /// fused tiled kernel (`quant::parallel::par_qlinear`): packed-int4
+    /// weights when `m` amortizes the unpack, epilogue applied inside each
+    /// tile so the i32 accumulator never hits memory. The grouped general
+    /// path (Table 5 W3-group) stays serial.
     #[allow(clippy::too_many_arguments)]
-    fn int_matmul(qw: &QWeight, xq: &[i8], m: usize, row_scale: Option<&[f32]>,
-                  acc: &mut Vec<i32>, rsum: &mut Vec<i32>,
+    fn int_matmul(pool: &ThreadPool, qw: &QWeight, xq: &[i8], m: usize,
+                  row_scale: Option<&[f32]>, rsum: &mut Vec<i32>,
                   scratch: &mut Vec<i8>, out: &mut [f32]) {
         let (n, j) = (qw.n, qw.j);
         if qw.group != 0 {
@@ -188,30 +224,22 @@ impl Engine {
                             &mut out[..m * j]);
             return;
         }
-        acc.resize(m * j, 0);
-        // Small m (decode GEMV): the per-row nibble unpack would double the
-        // work per weight element, so use the i8 mirror; large m amortizes
-        // the unpack across rows and enjoys the halved weight footprint.
-        match &qw.packed {
-            Some(p) if m >= 8 => gemm_i8_packed4(&xq[..m * n], p, m, n, j,
-                                                 scratch, &mut acc[..m * j]),
-            _ => gemm_i8(&xq[..m * n], &qw.wt, m, n, j, &mut acc[..m * j]),
-        }
-        match &qw.zero {
-            Some(z) => {
+        let rowsum: Option<&[i32]> = match &qw.zero {
+            Some(_) => {
                 rowsum_i8(&xq[..m * n], m, n, rsum);
-                epilogue_asym(&acc[..m * j], rsum, z, &qw.scale, row_scale,
-                              m, j, &mut out[..m * j]);
+                Some(rsum.as_slice())
             }
-            None => epilogue_sym(&acc[..m * j], &qw.scale, row_scale, m, j,
-                                 &mut out[..m * j]),
-        }
+            None => None,
+        };
+        par_qlinear(pool, &xq[..m * n], &qw.wt, qw.packed.as_deref(), m, n,
+                    j, &qw.scale, qw.zero.as_deref(), rowsum, row_scale,
+                    scratch, &mut out[..m * j]);
     }
 
     /// Apply one linear to m rows; writes (m, j) into `out`. Scratch
     /// buffers are passed individually so callers can split a Workspace.
     #[allow(clippy::too_many_arguments)]
-    fn linear(lin: &Linear, input: Act, m: usize, acc: &mut Vec<i32>,
+    fn linear(pool: &ThreadPool, lin: &Linear, input: Act, m: usize,
               xqb: &mut Vec<i8>, rs: &mut Vec<f32>, rsum: &mut Vec<i32>,
               had: &mut Vec<f32>, scratch: &mut Vec<i8>, out: &mut [f32]) {
         match lin {
@@ -220,7 +248,8 @@ impl Engine {
                     Act::F32(x) => x,
                     Act::I8(_) => unreachable!("fp linear needs f32 input"),
                 };
-                gemm_f32(&x[..m * n], wt, m, *n, *j, &mut out[..m * j]);
+                par_gemm_f32(pool, &x[..m * n], wt, m, *n, *j,
+                             &mut out[..m * j]);
             }
             Linear::Quant { qw, mode } => match mode {
                 QuantMode::Static => {
@@ -228,7 +257,8 @@ impl Engine {
                         Act::I8(xq) => xq,
                         Act::F32(_) => unreachable!("static linear needs i8"),
                     };
-                    Self::int_matmul(qw, xq, m, None, acc, rsum, scratch, out);
+                    Self::int_matmul(pool, qw, xq, m, None, rsum, scratch,
+                                     out);
                 }
                 QuantMode::TensorStatic { a_scale, a_qmax } => {
                     let x = match input {
@@ -244,8 +274,8 @@ impl Engine {
                     }
                     rs.clear();
                     rs.resize(m, *a_scale);
-                    Self::int_matmul(qw, xqb, m, Some(rs), acc, rsum, scratch,
-                                     out);
+                    Self::int_matmul(pool, qw, xqb, m, Some(rs), rsum,
+                                     scratch, out);
                 }
                 QuantMode::Dynamic { a_qmax, a_clip, hadamard } => {
                     let x = match input {
@@ -265,8 +295,8 @@ impl Engine {
                     xqb.resize(m * n, 0);
                     rs.resize(m, 0.0);
                     per_token_quant(xin, m, n, *a_qmax, *a_clip, xqb, rs);
-                    Self::int_matmul(qw, xqb, m, Some(rs), acc, rsum, scratch,
-                                     out);
+                    Self::int_matmul(pool, qw, xqb, m, Some(rs), rsum,
+                                     scratch, out);
                 }
             },
         }
@@ -385,25 +415,25 @@ impl Engine {
                 ws.hq2.resize(m * d, 0);
                 Self::rmsnorm_quant(&ws.x, &layer.attn_norm, m, d,
                                     &mut ws.hq, &mut ws.hq2);
-                Self::linear(&layer.q, Act::I8(&ws.hq2), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.q, Act::I8(&ws.hq2), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.qbuf);
-                Self::linear(&layer.k, Act::I8(&ws.hq2), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.k, Act::I8(&ws.hq2), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.kbuf);
-                Self::linear(&layer.v, Act::I8(&ws.hq2), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.v, Act::I8(&ws.hq2), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.vbuf);
             } else {
                 ws.h.resize(m * d, 0.0);
                 Self::rmsnorm_f32(&ws.x, &layer.attn_norm.g, m, d, &mut ws.h);
-                Self::linear(&layer.q, Act::F32(&ws.h), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.q, Act::F32(&ws.h), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.qbuf);
-                Self::linear(&layer.k, Act::F32(&ws.h), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.k, Act::F32(&ws.h), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.kbuf);
-                Self::linear(&layer.v, Act::F32(&ws.h), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.v, Act::F32(&ws.h), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.vbuf);
             }
@@ -413,14 +443,41 @@ impl Engine {
                 cache.write(l, start + i, &ws.kbuf[i * d..(i + 1) * d],
                             &ws.vbuf[i * d..(i + 1) * d]);
             }
-            // causal attention, row-wise over cached K/V
-            for i in 0..t {
-                self.attend_one(&ws.qbuf[i * d..(i + 1) * d],
-                                cache.layer_k(l), cache.layer_v(l),
-                                d, start + i + 1, &mut ws.scores,
-                                &mut ws.attn[i * d..(i + 1) * d]);
+            // Causal attention over cached K/V — parallel across blocks
+            // of query rows. Each task owns a disjoint slice of `attn`
+            // and a private score buffer; per-row math is identical to
+            // the serial path, so results are bitwise independent of the
+            // thread count (DESIGN.md §7).
+            if self.pool.threads() == 1 {
+                for i in 0..t {
+                    self.attend_one(&ws.qbuf[i * d..(i + 1) * d],
+                                    cache.layer_k(l), cache.layer_v(l),
+                                    d, start + i + 1, &mut ws.scores,
+                                    &mut ws.attn[i * d..(i + 1) * d]);
+                }
+            } else {
+                // Oversubscribe 4× — later rows attend to longer
+                // prefixes, so equal-size blocks are unequal work.
+                let rows = t.div_ceil(self.pool.threads() * 4).max(1);
+                let (kc, vc) = (cache.layer_k(l), cache.layer_v(l));
+                let qb = &ws.qbuf;
+                let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
+                for (bi, ablock) in
+                    ws.attn[..t * d].chunks_mut(rows * d).enumerate()
+                {
+                    tasks.push(Box::new(move || {
+                        let mut scores = Vec::new();
+                        for (ri, arow) in ablock.chunks_mut(d).enumerate() {
+                            let i = bi * rows + ri;
+                            self.attend_one(&qb[i * d..(i + 1) * d], kc, vc,
+                                            d, start + i + 1, &mut scores,
+                                            arow);
+                        }
+                    }));
+                }
+                self.pool.run(tasks);
             }
-            Self::linear(&layer.o, Act::F32(&ws.attn), m, &mut ws.acc,
+            Self::linear(&self.pool, &layer.o, Act::F32(&ws.attn), m,
                          &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                          &mut ws.had, &mut ws.scratch_w, &mut ws.proj);
             for (xv, pv) in ws.x.iter_mut().zip(&ws.proj) {
@@ -432,27 +489,48 @@ impl Engine {
                 ws.hq2.resize(m * d, 0);
                 Self::rmsnorm_quant(&ws.x, &layer.ffn_norm, m, d,
                                     &mut ws.hq, &mut ws.hq2);
-                Self::linear(&layer.gate, Act::I8(&ws.hq2), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.gate, Act::I8(&ws.hq2), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.gate);
-                Self::linear(&layer.up, Act::I8(&ws.hq2), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.up, Act::I8(&ws.hq2), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.up);
             } else {
                 ws.h.resize(m * d, 0.0);
                 Self::rmsnorm_f32(&ws.x, &layer.ffn_norm.g, m, d, &mut ws.h);
-                Self::linear(&layer.gate, Act::F32(&ws.h), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.gate, Act::F32(&ws.h), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.gate);
-                Self::linear(&layer.up, Act::F32(&ws.h), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.up, Act::F32(&ws.h), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.up);
             }
-            for i in 0..m * ff {
-                let g = ws.gate[i];
-                ws.ff[i] = g / (1.0 + (-g).exp()) * ws.up[i]; // SiLU·up
+            // SiLU·up — elementwise, parallel over row blocks (exp() is
+            // a real fraction of prefill at small d).
+            if self.pool.threads() == 1 || m * ff < (1 << 15) {
+                for i in 0..m * ff {
+                    let g = ws.gate[i];
+                    ws.ff[i] = g / (1.0 + (-g).exp()) * ws.up[i];
+                }
+            } else {
+                let rows = m.div_ceil(self.pool.threads() * 2).max(1);
+                let gb = &ws.gate;
+                let ub = &ws.up;
+                let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
+                for (bi, fblock) in
+                    ws.ff[..m * ff].chunks_mut(rows * ff).enumerate()
+                {
+                    tasks.push(Box::new(move || {
+                        let off = bi * rows * ff;
+                        for (k, fv) in fblock.iter_mut().enumerate() {
+                            let g = gb[off + k];
+                            *fv = g / (1.0 + (-g).exp()) * ub[off + k];
+                        }
+                    }));
+                }
+                self.pool.run(tasks);
             }
-            Self::linear(&layer.down, Act::F32(&ws.ff), m, &mut ws.acc,
+            Self::linear(&self.pool, &layer.down, Act::F32(&ws.ff), m,
                          &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                          &mut ws.had, &mut ws.scratch_w, &mut ws.proj);
             for (xv, pv) in ws.x.iter_mut().zip(&ws.proj) {
@@ -464,7 +542,8 @@ impl Engine {
         ws.h.resize(m * d, 0.0);
         Self::rmsnorm_f32(&ws.x, &self.model.final_norm, m, d, &mut ws.h);
         ws.logits.resize(m * vocab, 0.0);
-        gemm_f32(&ws.h, &self.model.lm_head_t, m, d, vocab, &mut ws.logits);
+        par_gemm_f32(&self.pool, &ws.h, &self.model.lm_head_t, m, d, vocab,
+                     &mut ws.logits);
     }
 
     // ------------------------------------------------------------------
@@ -499,25 +578,25 @@ impl Engine {
                 ws.hq2.resize(m * d, 0);
                 Self::rmsnorm_quant(&ws.x, &layer.attn_norm, m, d,
                                     &mut ws.hq, &mut ws.hq2);
-                Self::linear(&layer.q, Act::I8(&ws.hq2), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.q, Act::I8(&ws.hq2), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.qbuf);
-                Self::linear(&layer.k, Act::I8(&ws.hq2), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.k, Act::I8(&ws.hq2), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.kbuf);
-                Self::linear(&layer.v, Act::I8(&ws.hq2), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.v, Act::I8(&ws.hq2), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.vbuf);
             } else {
                 ws.h.resize(m * d, 0.0);
                 Self::rmsnorm_f32(&ws.x, &layer.attn_norm.g, m, d, &mut ws.h);
-                Self::linear(&layer.q, Act::F32(&ws.h), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.q, Act::F32(&ws.h), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.qbuf);
-                Self::linear(&layer.k, Act::F32(&ws.h), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.k, Act::F32(&ws.h), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.kbuf);
-                Self::linear(&layer.v, Act::F32(&ws.h), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.v, Act::F32(&ws.h), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.vbuf);
             }
@@ -528,13 +607,36 @@ impl Engine {
                 cache.write(l, pos, &ws.kbuf[i * d..(i + 1) * d],
                             &ws.vbuf[i * d..(i + 1) * d]);
             }
-            for (i, cache) in caches.iter().enumerate() {
-                self.attend_one(&ws.qbuf[i * d..(i + 1) * d],
-                                cache.layer_k(l), cache.layer_v(l),
-                                d, positions[i] + 1, &mut ws.scores,
-                                &mut ws.attn[i * d..(i + 1) * d]);
+            // Attention — parallel across batch lanes: each lane reads
+            // its own cache and writes its own `attn` row, so lanes are
+            // fully independent (DESIGN.md §7).
+            if self.pool.threads() == 1 || b == 1 {
+                for (i, cache) in caches.iter().enumerate() {
+                    self.attend_one(&ws.qbuf[i * d..(i + 1) * d],
+                                    cache.layer_k(l), cache.layer_v(l),
+                                    d, positions[i] + 1, &mut ws.scores,
+                                    &mut ws.attn[i * d..(i + 1) * d]);
+                }
+            } else {
+                let qb = &ws.qbuf;
+                let lanes: &[&mut KvCache] = &*caches;
+                let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
+                for (i, (cache, arow)) in lanes
+                    .iter()
+                    .zip(ws.attn[..m * d].chunks_mut(d))
+                    .enumerate()
+                {
+                    let klen = positions[i] + 1;
+                    tasks.push(Box::new(move || {
+                        let mut scores = Vec::new();
+                        self.attend_one(&qb[i * d..(i + 1) * d],
+                                        cache.layer_k(l), cache.layer_v(l),
+                                        d, klen, &mut scores, arow);
+                    }));
+                }
+                self.pool.run(tasks);
             }
-            Self::linear(&layer.o, Act::F32(&ws.attn), m, &mut ws.acc,
+            Self::linear(&self.pool, &layer.o, Act::F32(&ws.attn), m,
                          &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                          &mut ws.had, &mut ws.scratch_w, &mut ws.proj);
             for (xv, pv) in ws.x.iter_mut().zip(&ws.proj) {
@@ -545,19 +647,19 @@ impl Engine {
                 ws.hq2.resize(m * d, 0);
                 Self::rmsnorm_quant(&ws.x, &layer.ffn_norm, m, d,
                                     &mut ws.hq, &mut ws.hq2);
-                Self::linear(&layer.gate, Act::I8(&ws.hq2), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.gate, Act::I8(&ws.hq2), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.gate);
-                Self::linear(&layer.up, Act::I8(&ws.hq2), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.up, Act::I8(&ws.hq2), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.up);
             } else {
                 ws.h.resize(m * d, 0.0);
                 Self::rmsnorm_f32(&ws.x, &layer.ffn_norm.g, m, d, &mut ws.h);
-                Self::linear(&layer.gate, Act::F32(&ws.h), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.gate, Act::F32(&ws.h), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.gate);
-                Self::linear(&layer.up, Act::F32(&ws.h), m, &mut ws.acc,
+                Self::linear(&self.pool, &layer.up, Act::F32(&ws.h), m,
                              &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                              &mut ws.had, &mut ws.scratch_w, &mut ws.up);
             }
@@ -565,7 +667,7 @@ impl Engine {
                 let g = ws.gate[i];
                 ws.ff[i] = g / (1.0 + (-g).exp()) * ws.up[i];
             }
-            Self::linear(&layer.down, Act::F32(&ws.ff), m, &mut ws.acc,
+            Self::linear(&self.pool, &layer.down, Act::F32(&ws.ff), m,
                          &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
                          &mut ws.had, &mut ws.scratch_w, &mut ws.proj);
             for (xv, pv) in ws.x.iter_mut().zip(&ws.proj) {
@@ -578,7 +680,8 @@ impl Engine {
         ws.h.resize(m * d, 0.0);
         Self::rmsnorm_f32(&ws.x, &self.model.final_norm, m, d, &mut ws.h);
         ws.logits.resize(m * vocab, 0.0);
-        gemm_f32(&ws.h, &self.model.lm_head_t, m, d, vocab, &mut ws.logits);
+        par_gemm_f32(&self.pool, &ws.h, &self.model.lm_head_t, m, d, vocab,
+                     &mut ws.logits);
     }
 
     /// Greedy generation helper (examples / integration tests).

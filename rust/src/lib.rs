@@ -9,12 +9,15 @@
 //! * [`quant`] — integer-kernel substrate: packed-INT4/INT8 GEMM with the
 //!   per-output-column rescale epilogue that Quantization Step Migration
 //!   aligns to, per-token dynamic quant ops (the baseline overhead), the
-//!   dimension-reconstruction gather, and the online block-Hadamard.
+//!   dimension-reconstruction gather, the online block-Hadamard, and the
+//!   parallel execution subsystem (`quant::parallel`: persistent worker
+//!   pool + tiled multi-threaded kernels, DESIGN.md §7).
 //! * [`engine`] — the native quantized inference engine (prefill + batched
-//!   decode with KV cache) executing `.qmod` bundles.
-//! * [`runtime`] — PJRT wrapper (via the `xla` crate) executing the
-//!   AOT-lowered JAX/Pallas HLO artifacts; parity-checked against
-//!   [`engine`].
+//!   decode with KV cache) executing `.qmod` bundles on the parallel
+//!   kernel substrate; bitwise deterministic for any thread count.
+//! * [`runtime`] — PJRT wrapper (via the `xla` crate, behind the `pjrt`
+//!   feature; a stub otherwise) executing the AOT-lowered JAX/Pallas HLO
+//!   artifacts; parity-checked against [`engine`].
 //! * [`coordinator`] — the serving layer: request router, continuous
 //!   batcher, prefill/decode scheduler, KV pool, metrics.
 //! * [`eval`] — perplexity + zero-shot choice-task evaluation (Tables 1,

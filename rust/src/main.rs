@@ -47,7 +47,7 @@ fn run() -> Result<()> {
             eprintln!(
                 "mergequant — 4-bit static quantization serving stack\n\
                  usage: mergequant <serve|eval|generate|inspect|runtime> \
-                 [--model NAME] [--method NAME] …\n\
+                 [--model NAME] [--method NAME] [--threads N] …\n\
                  (got {other:?})"
             );
             bail!("unknown subcommand");
@@ -72,10 +72,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.scheduler.max_seq = args.get_usize("max-seq", cfg.scheduler.max_seq);
     cfg.scheduler.kv_slabs =
         args.get_usize("kv-slabs", cfg.scheduler.kv_slabs.max(cfg.scheduler.max_batch));
+    // Intra-op kernel threads (0 = all cores); the scheduler applies it.
+    cfg.scheduler.threads =
+        args.get_usize("threads", cfg.scheduler.threads);
 
     let engine = load_engine(&cfg.model, &cfg.method)?;
-    println!("serving {} / {} (params ~{:.1} MB quantized)", cfg.model,
-             cfg.method, engine.model.weight_bytes() as f64 / 1e6);
+    println!("serving {} / {} (params ~{:.1} MB quantized, {} kernel thread(s))",
+             cfg.model, cfg.method,
+             engine.model.weight_bytes() as f64 / 1e6,
+             mergequant::quant::parallel::ThreadPool::resolve(
+                 cfg.scheduler.threads));
     let server = std::sync::Arc::new(Server::start(engine, cfg.scheduler.clone()));
     let gateway = TcpGateway::start(server.clone(), cfg.port)?;
     println!("listening on {}", gateway.addr);
@@ -96,7 +102,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let model = args.get_or("model", "tiny-llama-s");
     let method = args.get_or("method", "mergequant");
     let seq = args.get_usize("seq", 256);
-    let engine = load_engine(model, method)?;
+    let mut engine = load_engine(model, method)?;
+    engine.set_threads(args.get_usize("threads", 1));
     let art = artifacts_dir();
     println!("model={model} method={method}");
     for corpus_name in ["synth-wiki", "synth-c4"] {
@@ -120,7 +127,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_generate(args: &Args) -> Result<()> {
     let model = args.get_or("model", "tiny-llama-s");
     let method = args.get_or("method", "mergequant");
-    let engine = load_engine(model, method)?;
+    let mut engine = load_engine(model, method)?;
+    engine.set_threads(args.get_usize("threads", 1));
     let prompt: Vec<u32> = args
         .get_or("prompt", "1,17,42,99")
         .split(',')

@@ -10,6 +10,12 @@
 
 use super::pack::unpack_int4_into;
 
+/// Minimum row count at which the packed-int4 weight format wins: below
+/// this (decode GEMV) the per-row nibble unpack would double the work per
+/// weight element, so the i8 mirror is used instead. Shared policy between
+/// the serial engine path and [`super::parallel::par_qlinear`].
+pub const PACKED_MIN_ROWS: usize = 8;
+
 /// y (m, j) = x (m, n) @ wt^T, f32 reference path (the FP16 baseline cost).
 pub fn gemm_f32(x: &[f32], wt: &[f32], m: usize, n: usize, j: usize,
                 out: &mut [f32]) {
@@ -26,6 +32,8 @@ pub fn gemm_f32(x: &[f32], wt: &[f32], m: usize, n: usize, j: usize,
     }
 }
 
+/// f32 dot product — the shared inner loop of [`gemm_f32`] and the
+/// attention score/value kernels.
 #[inline]
 pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     // 4 independent accumulators — breaks the dependency chain so LLVM
@@ -46,6 +54,9 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// Exact i8·i8 → i32 dot product — the shared inner loop of every
+/// integer GEMM kernel (serial and parallel; accumulation order is fixed,
+/// which is what makes tiled execution bitwise deterministic).
 #[inline]
 pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
     // i16 products (i8·i8 always fits) accumulated in i32: LLVM lowers
@@ -126,6 +137,8 @@ pub fn epilogue_asym(acc: &[i32], xq_rowsum: &[i32], zero: &[i32],
     }
 }
 
+/// Per-row sums Σ_k xq\[i,k\] (one cache-resident pass) — feeds the
+/// asymmetric epilogue's zero-point correction.
 pub fn rowsum_i8(xq: &[i8], m: usize, n: usize, out: &mut Vec<i32>) {
     out.clear();
     for i in 0..m {

@@ -3,6 +3,7 @@
 //! same 1/√64 normalisation). Used by the `+hadamard` method variants on
 //! the per-token-dynamic projections.
 
+/// Hadamard block size (channels per butterfly group).
 pub const BLOCK: usize = 64;
 const INV_SQRT: f32 = 0.125; // 1/sqrt(64)
 

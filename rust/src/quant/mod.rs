@@ -10,11 +10,18 @@
 //!   C.1), MergeQuant's only runtime addition.
 //! * [`hadamard`] — online block-FWHT(64) used by the `+hadamard`
 //!   variants; bit-matches the Python `quant.hadamard.fwht_block64`.
+//! * [`parallel`] — the parallel execution subsystem: a persistent scoped
+//!   worker pool plus cache-blocked, output-tiled variants of the f32 /
+//!   INT8 / packed-INT4 kernels, bitwise identical to the serial ones for
+//!   every thread count (DESIGN.md §7).
+
+#![warn(missing_docs)]
 
 pub mod dynamic;
 pub mod gemm;
 pub mod hadamard;
 pub mod pack;
+pub mod parallel;
 pub mod reconstruct;
 
 /// Symmetric qmax for a bit width: 2^(b-1) − 1 (paper Eq. 1).

@@ -36,6 +36,7 @@ pub fn unpack_int4_into(packed: &[u8], out: &mut [i8]) {
     }
 }
 
+/// Allocating unpack: `len` values from the packed row.
 pub fn unpack_int4(packed: &[u8], len: usize) -> Vec<i8> {
     let mut out = vec![0i8; len];
     unpack_int4_into(packed, &mut out);

@@ -1,0 +1,350 @@
+//! Parallel execution subsystem: cache-blocked, output-tiled variants of
+//! the f32 / INT8 / packed-INT4 GEMM kernels running on a persistent
+//! [`ThreadPool`] (DESIGN.md §7).
+//!
+//! # Tiling
+//!
+//! Work is partitioned over the **output** matrix only: row blocks of
+//! [`TILE_ROWS`] activation rows × column tiles of up to [`TILE_COLS`]
+//! output columns (shrunk adaptively so every thread gets ≥ 2 tiles).
+//! One (row-block, column-tile) pair is one pool task; a task walks its
+//! tile with the *same* inner loops as the serial kernel, including the
+//! per-output-column rescale epilogue of paper Eq. (5) — the epilogue
+//! never leaves the tile, so the i32 accumulator for a tile stays in
+//! registers/L1 and is not materialized as an (m, j) tensor.
+//!
+//! # Determinism
+//!
+//! The reduction (k) dimension is **never split**: every output element
+//! is produced by exactly one task running exactly the serial kernel's
+//! dot-product loop. Integer accumulation is exact, and the f32 epilogue
+//! applies the same operations in the same order, so results are
+//! **bitwise identical** to the serial kernels for every thread count
+//! (property-tested in `tests/parallel_gemm.rs`; this is what keeps
+//! `tests/artifact_parity.rs` valid under parallel execution).
+
+pub mod pool;
+
+pub use pool::{ScopedTask, ThreadPool};
+
+use super::gemm::{
+    dot_f32, dot_i8, gemm_f32, gemm_i8, gemm_i8_packed4, PACKED_MIN_ROWS,
+};
+use super::pack::unpack_int4_into;
+
+/// Row-block height: activation rows per task. 32 rows of int8
+/// activations at n = 4096 is 128 KB — fits L2 alongside the weight tile.
+pub const TILE_ROWS: usize = 32;
+
+/// Maximum output-column tile width. 64 columns × n = 4096 int4 weights
+/// is 128 KB of packed weight per tile — the cache-blocking unit.
+pub const TILE_COLS: usize = 64;
+
+/// Minimum multiply-accumulate count (m·n·j) worth parallelizing; below
+/// this the serial kernel wins on task-dispatch overhead. Falling back is
+/// always safe: serial and parallel paths are bitwise identical.
+pub const PAR_MIN_MACS: usize = 1 << 16;
+
+/// Raw mutable output pointer shared across tasks. Tasks write disjoint
+/// index sets (enforced by the tiling), which is what makes the `Send`/
+/// `Sync` assertion sound.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+
+// SAFETY: tasks only ever write through disjoint indices (disjoint
+// (row, column) tiles of the output matrix), and the pool's `run`
+// barriers the batch before the buffer is read again.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Column-tile width adapted to the matrix and pool: at most
+/// [`TILE_COLS`], at least 8, aiming for ≥ 2 tiles per thread so the
+/// queue can load-balance ragged shapes.
+fn col_tile(j: usize, threads: usize) -> usize {
+    TILE_COLS.min(j.div_ceil(threads * 2)).max(8)
+}
+
+/// Parallel `y (m, j) = x (m, n) @ wt^T` over f32 — tiled
+/// [`gemm_f32`], bitwise identical to it for every thread count.
+pub fn par_gemm_f32(pool: &ThreadPool, x: &[f32], wt: &[f32], m: usize,
+                    n: usize, j: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), m * n);
+    assert_eq!(wt.len(), j * n);
+    assert_eq!(out.len(), m * j);
+    if pool.threads() == 1 || m * n * j < PAR_MIN_MACS {
+        gemm_f32(x, wt, m, n, j, out);
+        return;
+    }
+    let tc = col_tile(j, pool.threads());
+    let optr = SendPtr(out.as_mut_ptr());
+    let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
+    for r0 in (0..m).step_by(TILE_ROWS) {
+        let r1 = (r0 + TILE_ROWS).min(m);
+        for c0 in (0..j).step_by(tc) {
+            let c1 = (c0 + tc).min(j);
+            tasks.push(Box::new(move || {
+                for i in r0..r1 {
+                    let xr = &x[i * n..(i + 1) * n];
+                    for c in c0..c1 {
+                        let v = dot_f32(xr, &wt[c * n..(c + 1) * n]);
+                        // SAFETY: (i, c) tiles are disjoint across tasks.
+                        unsafe { *optr.0.add(i * j + c) = v };
+                    }
+                }
+            }));
+        }
+    }
+    pool.run(tasks);
+}
+
+/// Parallel integer GEMM over unpacked i8 weights — tiled [`gemm_i8`],
+/// identical i32 accumulators for every thread count.
+pub fn par_gemm_i8(pool: &ThreadPool, xq: &[i8], wt: &[i8], m: usize,
+                   n: usize, j: usize, acc: &mut [i32]) {
+    assert_eq!(xq.len(), m * n);
+    assert_eq!(wt.len(), j * n);
+    assert_eq!(acc.len(), m * j);
+    if pool.threads() == 1 || m * n * j < PAR_MIN_MACS {
+        gemm_i8(xq, wt, m, n, j, acc);
+        return;
+    }
+    let tc = col_tile(j, pool.threads());
+    let aptr = SendPtr(acc.as_mut_ptr());
+    let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
+    for r0 in (0..m).step_by(TILE_ROWS) {
+        let r1 = (r0 + TILE_ROWS).min(m);
+        for c0 in (0..j).step_by(tc) {
+            let c1 = (c0 + tc).min(j);
+            tasks.push(Box::new(move || {
+                for i in r0..r1 {
+                    let xr = &xq[i * n..(i + 1) * n];
+                    for c in c0..c1 {
+                        let v = dot_i8(xr, &wt[c * n..(c + 1) * n]);
+                        // SAFETY: (i, c) tiles are disjoint across tasks.
+                        unsafe { *aptr.0.add(i * j + c) = v };
+                    }
+                }
+            }));
+        }
+    }
+    pool.run(tasks);
+}
+
+/// Parallel integer GEMM over **packed int4** weights — tiled
+/// [`gemm_i8_packed4`]. Each task unpacks the weight rows of its column
+/// tile into a task-local scratch row (the caller's `scratch` is only
+/// used by the serial fallback, keeping that path allocation-free).
+pub fn par_gemm_i8_packed4(pool: &ThreadPool, xq: &[i8], wpacked: &[u8],
+                           m: usize, n: usize, j: usize,
+                           scratch: &mut Vec<i8>, acc: &mut [i32]) {
+    let row_bytes = n.div_ceil(2);
+    assert_eq!(xq.len(), m * n);
+    assert_eq!(wpacked.len(), j * row_bytes);
+    assert_eq!(acc.len(), m * j);
+    if pool.threads() == 1 || m * n * j < PAR_MIN_MACS {
+        gemm_i8_packed4(xq, wpacked, m, n, j, scratch, acc);
+        return;
+    }
+    let tc = col_tile(j, pool.threads());
+    let aptr = SendPtr(acc.as_mut_ptr());
+    let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
+    for r0 in (0..m).step_by(TILE_ROWS) {
+        let r1 = (r0 + TILE_ROWS).min(m);
+        for c0 in (0..j).step_by(tc) {
+            let c1 = (c0 + tc).min(j);
+            tasks.push(Box::new(move || {
+                let mut wrow = vec![0i8; n];
+                for c in c0..c1 {
+                    unpack_int4_into(
+                        &wpacked[c * row_bytes..(c + 1) * row_bytes],
+                        &mut wrow,
+                    );
+                    for i in r0..r1 {
+                        let v = dot_i8(&xq[i * n..(i + 1) * n], &wrow);
+                        // SAFETY: (i, c) tiles are disjoint across tasks.
+                        unsafe { *aptr.0.add(i * j + c) = v };
+                    }
+                }
+            }));
+        }
+    }
+    pool.run(tasks);
+}
+
+/// Fused parallel quantized linear: integer GEMM (packed-int4 when
+/// `packed` is present and `m ≥` [`PACKED_MIN_ROWS`], i8 otherwise) with
+/// the per-output-column rescale epilogue of paper Eq. (5) applied
+/// *inside each tile* — the (m, j) i32 accumulator is never written to
+/// memory.
+///
+/// Semantics (bitwise, per element, matching the serial
+/// `gemm_i8`/`gemm_i8_packed4` + `epilogue_sym`/`epilogue_asym` chain):
+///
+/// * symmetric (`zero == None`): `out[i,c] = acc as f32 · col_scale[c] ·
+///   row_scale[i]`
+/// * asymmetric: `out[i,c] = (acc − xq_rowsum[i]·zero[c]) as f32 ·
+///   col_scale[c] · row_scale[i]`
+///
+/// `xq_rowsum` is required iff `zero` is present. `scratch` backs the
+/// serial fallback's weight-row unpack (decode stays allocation-free).
+#[allow(clippy::too_many_arguments)]
+pub fn par_qlinear(pool: &ThreadPool, xq: &[i8], wt: &[i8],
+                   packed: Option<&[u8]>, m: usize, n: usize, j: usize,
+                   col_scale: &[f32], zero: Option<&[i32]>,
+                   xq_rowsum: Option<&[i32]>, row_scale: Option<&[f32]>,
+                   scratch: &mut Vec<i8>, out: &mut [f32]) {
+    assert_eq!(xq.len(), m * n);
+    assert_eq!(col_scale.len(), j);
+    assert_eq!(out.len(), m * j);
+    if let Some(z) = zero {
+        assert_eq!(z.len(), j);
+        assert_eq!(xq_rowsum.expect("asymmetric path needs xq_rowsum").len(),
+                   m);
+    }
+    if let Some(r) = row_scale {
+        assert_eq!(r.len(), m);
+    }
+    let use_packed = packed.is_some() && m >= PACKED_MIN_ROWS;
+    if use_packed {
+        assert_eq!(packed.unwrap().len(), j * n.div_ceil(2));
+    } else {
+        assert_eq!(wt.len(), j * n);
+    }
+    let optr = SendPtr(out.as_mut_ptr());
+    if pool.threads() == 1 || m * n * j < PAR_MIN_MACS {
+        scratch.resize(n, 0);
+        qlinear_tile(xq, wt, packed, n, j, col_scale, zero, xq_rowsum,
+                     row_scale, use_packed, 0, m, 0, j, scratch, optr);
+        return;
+    }
+    let tc = col_tile(j, pool.threads());
+    let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
+    for r0 in (0..m).step_by(TILE_ROWS) {
+        let r1 = (r0 + TILE_ROWS).min(m);
+        for c0 in (0..j).step_by(tc) {
+            let c1 = (c0 + tc).min(j);
+            tasks.push(Box::new(move || {
+                let mut wrow =
+                    if use_packed { vec![0i8; n] } else { Vec::new() };
+                qlinear_tile(xq, wt, packed, n, j, col_scale, zero,
+                             xq_rowsum, row_scale, use_packed, r0, r1, c0,
+                             c1, &mut wrow, optr);
+            }));
+        }
+    }
+    pool.run(tasks);
+}
+
+/// One (row-block × column-tile) of the fused quantized linear. Shared
+/// by the serial fallback (whole matrix as one tile) and the pool tasks.
+#[allow(clippy::too_many_arguments)]
+fn qlinear_tile(xq: &[i8], wt: &[i8], packed: Option<&[u8]>, n: usize,
+                j: usize, col_scale: &[f32], zero: Option<&[i32]>,
+                xq_rowsum: Option<&[i32]>, row_scale: Option<&[f32]>,
+                use_packed: bool, r0: usize, r1: usize, c0: usize,
+                c1: usize, wrow: &mut [i8], out: SendPtr<f32>) {
+    let row_bytes = n.div_ceil(2);
+    for c in c0..c1 {
+        let w: &[i8] = if use_packed {
+            let p = packed.unwrap();
+            unpack_int4_into(&p[c * row_bytes..(c + 1) * row_bytes], wrow);
+            wrow
+        } else {
+            &wt[c * n..(c + 1) * n]
+        };
+        let cs = col_scale[c];
+        let zc = zero.map(|z| z[c]);
+        for i in r0..r1 {
+            let a = dot_i8(&xq[i * n..(i + 1) * n], w);
+            let corr = match zc {
+                Some(z) => a - xq_rowsum.unwrap()[i] * z,
+                None => a,
+            };
+            let rs = row_scale.map_or(1.0, |r| r[i]);
+            // Exactly epilogue_sym/epilogue_asym's expression — keeps the
+            // fused path bitwise identical to GEMM + standalone epilogue.
+            // SAFETY: (i, c) tiles are disjoint across tasks.
+            unsafe { *out.0.add(i * j + c) = corr as f32 * cs * rs };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gemm::{epilogue_asym, epilogue_sym, rowsum_i8};
+    use crate::quant::pack::pack_int4;
+    use crate::util::rng::Rng;
+
+    fn rand_i8(rng: &mut Rng, len: usize) -> Vec<i8> {
+        (0..len).map(|_| rng.usize(0, 15) as i8 - 7).collect()
+    }
+
+    #[test]
+    fn fused_serial_matches_unfused_chain() {
+        // The serial fallback of par_qlinear must already be bitwise
+        // equal to gemm + epilogue (the parallel path is covered by
+        // tests/parallel_gemm.rs across thread counts).
+        let mut rng = Rng::new(17);
+        let pool = ThreadPool::new(1);
+        for &(m, n, j) in &[(3usize, 33usize, 9usize), (12, 64, 20)] {
+            let xq = rand_i8(&mut rng, m * n);
+            let wt = rand_i8(&mut rng, j * n);
+            let mut packed = Vec::new();
+            for c in 0..j {
+                packed.extend(pack_int4(&wt[c * n..(c + 1) * n]));
+            }
+            let cs: Vec<f32> =
+                (0..j).map(|_| 0.01 + rng.f32() * 0.05).collect();
+            let rs: Vec<f32> =
+                (0..m).map(|_| 0.5 + rng.f32()).collect();
+            let zero: Vec<i32> =
+                (0..j).map(|_| rng.usize(0, 5) as i32 - 2).collect();
+
+            let mut acc = vec![0i32; m * j];
+            let mut scratch = Vec::new();
+            if m >= PACKED_MIN_ROWS {
+                gemm_i8_packed4(&xq, &packed, m, n, j, &mut scratch,
+                                &mut acc);
+            } else {
+                gemm_i8(&xq, &wt, m, n, j, &mut acc);
+            }
+            let mut rsum = Vec::new();
+            rowsum_i8(&xq, m, n, &mut rsum);
+
+            // symmetric
+            let mut want = vec![0f32; m * j];
+            epilogue_sym(&acc, &cs, Some(&rs), m, j, &mut want);
+            let mut got = vec![0f32; m * j];
+            par_qlinear(&pool, &xq, &wt, Some(&packed), m, n, j, &cs, None,
+                        None, Some(&rs), &mut scratch, &mut got);
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "sym m{m} n{n} j{j}"
+            );
+
+            // asymmetric
+            let mut want2 = vec![0f32; m * j];
+            epilogue_asym(&acc, &rsum, &zero, &cs, Some(&rs), m, j,
+                          &mut want2);
+            let mut got2 = vec![0f32; m * j];
+            par_qlinear(&pool, &xq, &wt, Some(&packed), m, n, j, &cs,
+                        Some(&zero), Some(&rsum), Some(&rs), &mut scratch,
+                        &mut got2);
+            assert_eq!(
+                got2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "asym m{m} n{n} j{j}"
+            );
+        }
+    }
+
+    #[test]
+    fn col_tile_bounds() {
+        assert_eq!(col_tile(512, 4), 64);
+        assert_eq!(col_tile(64, 4), 8);
+        assert!(col_tile(1, 8) >= 1);
+        assert_eq!(col_tile(4096, 2), 64);
+    }
+}

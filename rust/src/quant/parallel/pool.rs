@@ -1,0 +1,265 @@
+//! Persistent scoped worker pool for intra-op kernel parallelism.
+//!
+//! Built on `std::thread` only — rayon/crossbeam are not vendored
+//! (DESIGN.md §2 substitution table). Workers are spawned **once** when
+//! the pool is created and live for the pool's lifetime, so the decode
+//! hot path never pays thread-spawn latency; each [`ThreadPool::run`]
+//! call executes one *batch* of borrowing tasks to completion before
+//! returning, which is what makes the lifetime erasure inside sound
+//! (DESIGN.md §7).
+//!
+//! Determinism contract: the pool executes tasks, it does not split them.
+//! Kernels built on it partition only the *output* space (rows/columns),
+//! never the reduction dimension, so results are bitwise identical for
+//! every thread count — see [`super`] and `tests/parallel_gemm.rs`.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Lifetime-erased task stored in the shared queue. The erasure happens
+/// only inside [`ThreadPool::run`], which blocks until every task of its
+/// batch has finished — see the safety comment there.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A borrowing unit of work: may capture references into the caller's
+/// stack frame (activation slices, weight tensors, output tiles).
+pub type ScopedTask<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+struct Queue {
+    tasks: VecDeque<Task>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    work_cv: Condvar,
+}
+
+/// Per-batch completion state: (tasks still pending, a task panicked).
+type BatchState = (Mutex<(usize, bool)>, Condvar);
+
+/// Persistent worker pool executing scoped task batches.
+///
+/// * `threads == 1` spawns **no** workers: [`ThreadPool::run`] executes
+///   the batch inline on the caller (zero overhead, the serial baseline).
+/// * `threads >= 2` spawns that many workers; `run` enqueues the batch
+///   and blocks until the last task completes. The caller does not steal
+///   work, so `threads` is exactly the compute-thread count.
+///
+/// `run` may be called from several threads at once (each batch tracks
+/// its own completion), though the engine uses one caller per pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool of `threads` compute threads (`0` is clamped to 1;
+    /// use [`ThreadPool::resolve`] first to map 0 → all cores).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue {
+                tasks: VecDeque::new(),
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+        });
+        let workers = if threads == 1 {
+            Vec::new()
+        } else {
+            (0..threads)
+                .map(|i| {
+                    let sh = Arc::clone(&shared);
+                    std::thread::Builder::new()
+                        .name(format!("mq-kernel-{i}"))
+                        .spawn(move || worker_loop(sh))
+                        .expect("spawning kernel worker")
+                })
+                .collect()
+        };
+        ThreadPool { shared, workers, threads }
+    }
+
+    /// Number of compute threads (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Resolve a configured thread count: `0` means "all available
+    /// cores" (`std::thread::available_parallelism`), anything else is
+    /// taken literally.
+    pub fn resolve(threads: usize) -> usize {
+        if threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            threads
+        }
+    }
+
+    /// Execute a batch of independent tasks to completion.
+    ///
+    /// Blocks until every task has run. Tasks must be mutually
+    /// independent (kernels guarantee this by writing disjoint output
+    /// tiles). If any task panics, the panic is re-raised here after the
+    /// rest of the batch drains.
+    pub fn run<'scope>(&self, tasks: Vec<ScopedTask<'scope>>) {
+        if self.workers.is_empty() || tasks.len() <= 1 {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+        let batch: Arc<BatchState> =
+            Arc::new((Mutex::new((tasks.len(), false)), Condvar::new()));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for t in tasks {
+                let done = Arc::clone(&batch);
+                let wrapped: ScopedTask<'scope> = Box::new(move || {
+                    let r = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(t),
+                    );
+                    let (lock, cv) = &*done;
+                    let mut st = lock.lock().unwrap();
+                    st.0 -= 1;
+                    st.1 |= r.is_err();
+                    if st.0 == 0 {
+                        cv.notify_all();
+                    }
+                });
+                // SAFETY: `wrapped` may borrow data from the caller's
+                // stack ('scope). We erase that lifetime to store it in
+                // the persistent queue, but `run` does not return until
+                // the batch counter hits zero, i.e. until every wrapped
+                // task has finished executing and dropped its captures —
+                // so no borrow outlives the data it points to.
+                let wrapped: Task = unsafe {
+                    std::mem::transmute::<ScopedTask<'scope>, Task>(wrapped)
+                };
+                q.tasks.push_back(wrapped);
+            }
+            self.shared.work_cv.notify_all();
+        }
+        let (lock, cv) = &*batch;
+        let mut st = lock.lock().unwrap();
+        while st.0 > 0 {
+            st = cv.wait(st).unwrap();
+        }
+        if st.1 {
+            panic!("worker task panicked (see stderr for the original)");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.tasks.pop_front() {
+                    break t;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        task();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits = AtomicUsize::new(0);
+        for round in 0..8 {
+            let n = 1 + round * 13; // more tasks than threads
+            let tasks: Vec<ScopedTask<'_>> = (0..n)
+                .map(|_| {
+                    Box::new(|| {
+                        hits.fetch_add(1, Ordering::Relaxed);
+                    }) as ScopedTask<'_>
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        let want: usize = (0..8).map(|r| 1 + r * 13).sum();
+        assert_eq!(hits.load(Ordering::Relaxed), want);
+    }
+
+    #[test]
+    fn borrows_stack_data_and_writes_disjoint_chunks() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0u64; 97];
+        let tasks: Vec<ScopedTask<'_>> = data
+            .chunks_mut(10)
+            .enumerate()
+            .map(|(ci, chunk)| {
+                Box::new(move || {
+                    for (k, v) in chunk.iter_mut().enumerate() {
+                        *v = (ci * 10 + k) as u64;
+                    }
+                }) as ScopedTask<'_>
+            })
+            .collect();
+        pool.run(tasks);
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut x = 0;
+        pool.run(vec![Box::new(|| x += 1) as ScopedTask<'_>]);
+        assert_eq!(x, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker task panicked")]
+    fn task_panic_propagates_to_caller() {
+        let pool = ThreadPool::new(2);
+        let tasks: Vec<ScopedTask<'_>> = (0..4)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 2 {
+                        panic!("boom");
+                    }
+                }) as ScopedTask<'_>
+            })
+            .collect();
+        pool.run(tasks);
+    }
+
+    #[test]
+    fn resolve_zero_means_cores() {
+        assert!(ThreadPool::resolve(0) >= 1);
+        assert_eq!(ThreadPool::resolve(3), 3);
+    }
+}

@@ -113,6 +113,10 @@ fn greedy_decode_matches_golden() {
 
 #[test]
 fn engine_matches_pjrt_runtime() {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return;
+    }
     if !goldens_available()
         || !artifacts_dir().join("hlo").join("hlo.json").exists()
     {
@@ -147,6 +151,10 @@ fn engine_matches_pjrt_runtime() {
 
 #[test]
 fn quantized_decode_hlo_loads() {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return;
+    }
     let path = artifacts_dir().join("hlo")
         .join("tiny-llama-s.decode.mergequant.hlo.txt");
     if !path.exists() {

@@ -21,6 +21,7 @@ fn make_scheduler(max_batch: usize, slabs: usize) -> Scheduler {
             max_prefills_per_iter: 2,
             queue_cap: 64,
             prefill_chunk: 0,
+            threads: 1,
         },
     )
 }
@@ -100,6 +101,7 @@ fn fifo_first_token_order() {
             max_prefills_per_iter: 1,
             queue_cap: 64,
             prefill_chunk: 0,
+            threads: 1,
         },
     );
     for i in 0..6u64 {
@@ -142,6 +144,7 @@ fn backpressure_queue_cap() {
             max_prefills_per_iter: 1,
             queue_cap: 2,
             prefill_chunk: 0,
+            threads: 1,
         },
     );
     assert!(sched.submit(Request::new(1, vec![3], 2)).is_ok());
@@ -214,6 +217,7 @@ fn chunked_prefill_same_results_and_bounded_stall() {
                 max_prefills_per_iter: 1,
                 queue_cap: 64,
                 prefill_chunk: chunk,
+                threads: 1,
             },
         )
     };

@@ -1,0 +1,236 @@
+//! Determinism properties of the parallel execution subsystem
+//! (DESIGN.md §7): every tiled multi-threaded kernel must be **bitwise
+//! identical** to its serial counterpart across random shapes — ragged
+//! m/n/j not divisible by the tile sizes included — and thread counts
+//! 1–8. This is the guarantee that lets `tests/artifact_parity.rs` and
+//! the golden tests hold regardless of the configured parallelism.
+
+use mergequant::bench::synthetic_model;
+use mergequant::engine::{Engine, KvCache, Workspace};
+use mergequant::quant::gemm::{
+    epilogue_asym, epilogue_sym, gemm_f32, gemm_i8, gemm_i8_packed4,
+    rowsum_i8, PACKED_MIN_ROWS,
+};
+use mergequant::quant::pack::pack_int4;
+use mergequant::quant::parallel::{
+    par_gemm_f32, par_gemm_i8, par_gemm_i8_packed4, par_qlinear,
+    ThreadPool, PAR_MIN_MACS,
+};
+use mergequant::util::rng::Rng;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn rand_i8(rng: &mut Rng, len: usize) -> Vec<i8> {
+    (0..len).map(|_| rng.usize(0, 15) as i8 - 7).collect()
+}
+
+/// Random shape large enough that the parallel path actually engages
+/// (m·n·j ≥ PAR_MIN_MACS), ragged w.r.t. the 32-row / 8..64-column tiles.
+fn par_shape(rng: &mut Rng) -> (usize, usize, usize) {
+    loop {
+        let m = rng.usize(16, 49);
+        let n = rng.usize(64, 161);
+        let j = rng.usize(65, 161);
+        if m * n * j >= PAR_MIN_MACS {
+            return (m, n, j);
+        }
+    }
+}
+
+/// Small ragged shapes exercise the serial fallback inside the par_*
+/// entry points (trivially identical, but keeps the API contract honest).
+fn small_shape(rng: &mut Rng) -> (usize, usize, usize) {
+    (rng.usize(1, 9), rng.usize(1, 70), rng.usize(1, 40))
+}
+
+#[test]
+fn par_gemm_f32_bitwise_identical_for_threads_1_to_8() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..6 {
+        let (m, n, j) =
+            if case < 4 { par_shape(&mut rng) } else { small_shape(&mut rng) };
+        let x: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let wt: Vec<f32> = (0..j * n).map(|_| rng.normal()).collect();
+        let mut want = vec![0f32; m * j];
+        gemm_f32(&x, &wt, m, n, j, &mut want);
+        for th in 1..=8 {
+            let pool = ThreadPool::new(th);
+            let mut got = vec![0f32; m * j];
+            par_gemm_f32(&pool, &x, &wt, m, n, j, &mut got);
+            assert_eq!(bits(&got), bits(&want),
+                       "case {case}: m{m} n{n} j{j} threads {th}");
+        }
+    }
+}
+
+#[test]
+fn par_gemm_i8_exact_for_threads_1_to_8() {
+    let mut rng = Rng::new(0xBEE);
+    for case in 0..6 {
+        let (m, n, j) =
+            if case < 4 { par_shape(&mut rng) } else { small_shape(&mut rng) };
+        let xq = rand_i8(&mut rng, m * n);
+        let wt = rand_i8(&mut rng, j * n);
+        let mut want = vec![0i32; m * j];
+        gemm_i8(&xq, &wt, m, n, j, &mut want);
+        for th in 1..=8 {
+            let pool = ThreadPool::new(th);
+            let mut got = vec![0i32; m * j];
+            par_gemm_i8(&pool, &xq, &wt, m, n, j, &mut got);
+            assert_eq!(got, want, "case {case}: m{m} n{n} j{j} threads {th}");
+        }
+    }
+}
+
+#[test]
+fn par_gemm_packed4_matches_serial_for_threads_1_to_8() {
+    let mut rng = Rng::new(0xCAB);
+    for case in 0..5 {
+        let (m, n, j) =
+            if case < 3 { par_shape(&mut rng) } else { small_shape(&mut rng) };
+        let xq = rand_i8(&mut rng, m * n);
+        let wt = rand_i8(&mut rng, j * n);
+        let mut packed = Vec::new();
+        for c in 0..j {
+            packed.extend(pack_int4(&wt[c * n..(c + 1) * n]));
+        }
+        let mut scratch = Vec::new();
+        let mut want = vec![0i32; m * j];
+        gemm_i8_packed4(&xq, &packed, m, n, j, &mut scratch, &mut want);
+        for th in 1..=8 {
+            let pool = ThreadPool::new(th);
+            let mut got = vec![0i32; m * j];
+            par_gemm_i8_packed4(&pool, &xq, &packed, m, n, j, &mut scratch,
+                                &mut got);
+            assert_eq!(got, want, "case {case}: m{m} n{n} j{j} threads {th}");
+        }
+    }
+}
+
+#[test]
+fn fused_qlinear_bitwise_matches_gemm_plus_epilogue() {
+    // The engine's hot path: fused GEMM + in-tile epilogue vs the
+    // unfused serial chain, symmetric and asymmetric, with and without
+    // row scales, across thread counts.
+    let mut rng = Rng::new(0xD1CE);
+    for case in 0..5 {
+        let (m, n, j) =
+            if case < 3 { par_shape(&mut rng) } else { small_shape(&mut rng) };
+        let xq = rand_i8(&mut rng, m * n);
+        let wt = rand_i8(&mut rng, j * n);
+        let mut packed = Vec::new();
+        for c in 0..j {
+            packed.extend(pack_int4(&wt[c * n..(c + 1) * n]));
+        }
+        let col_scale: Vec<f32> =
+            (0..j).map(|_| 0.01 + rng.f32() * 0.05).collect();
+        let row_scale: Vec<f32> = (0..m).map(|_| 0.5 + rng.f32()).collect();
+        let zero: Vec<i32> =
+            (0..j).map(|_| rng.usize(0, 5) as i32 - 2).collect();
+
+        // Serial reference: the pre-fusion engine sequence.
+        let mut acc = vec![0i32; m * j];
+        let mut scratch = Vec::new();
+        if m >= PACKED_MIN_ROWS {
+            gemm_i8_packed4(&xq, &packed, m, n, j, &mut scratch, &mut acc);
+        } else {
+            gemm_i8(&xq, &wt, m, n, j, &mut acc);
+        }
+        let mut rsum = Vec::new();
+        rowsum_i8(&xq, m, n, &mut rsum);
+        let mut want_sym = vec![0f32; m * j];
+        epilogue_sym(&acc, &col_scale, None, m, j, &mut want_sym);
+        let mut want_asym = vec![0f32; m * j];
+        epilogue_asym(&acc, &rsum, &zero, &col_scale, Some(&row_scale), m,
+                      j, &mut want_asym);
+
+        for th in 1..=8 {
+            let pool = ThreadPool::new(th);
+            let mut got = vec![0f32; m * j];
+            par_qlinear(&pool, &xq, &wt, Some(&packed), m, n, j, &col_scale,
+                        None, None, None, &mut scratch, &mut got);
+            assert_eq!(bits(&got), bits(&want_sym),
+                       "sym case {case}: m{m} n{n} j{j} threads {th}");
+            let mut got2 = vec![0f32; m * j];
+            par_qlinear(&pool, &xq, &wt, Some(&packed), m, n, j, &col_scale,
+                        Some(&zero), Some(&rsum), Some(&row_scale),
+                        &mut scratch, &mut got2);
+            assert_eq!(bits(&got2), bits(&want_asym),
+                       "asym case {case}: m{m} n{n} j{j} threads {th}");
+        }
+    }
+}
+
+#[test]
+fn engine_forward_bitwise_identical_across_thread_counts() {
+    // End-to-end: prefill + batched decode on the full quantized engine
+    // must produce bit-identical logits for 1, 3 and 6 threads (this is
+    // what keeps goldens/artifact parity valid under parallel serving).
+    let model = synthetic_model("mergequant", 128, 256, 2, 256);
+    let prompt: Vec<u32> = (0..48).map(|i| 3 + (i * 7) % 250).collect();
+    let cfg = model.config.clone();
+
+    let mut reference: Option<(Vec<u32>, Vec<u32>)> = None;
+    for threads in [1usize, 3, 6] {
+        let engine = Engine::with_threads(model.clone(), threads);
+        assert_eq!(engine.threads(), threads);
+        let mut ws = Workspace::new();
+
+        // prefill logits
+        let mut caches: Vec<KvCache> = (0..3)
+            .map(|_| KvCache::new(cfg.n_layers, 96, cfg.d_model))
+            .collect();
+        engine.prefill(&prompt, &mut caches[0], &mut ws);
+        let prefill_bits = bits(&ws.logits[..prompt.len() * cfg.vocab]);
+
+        // batched decode logits (3 lanes, staggered cache lengths)
+        engine.prefill(&prompt[..20], &mut caches[1], &mut ws);
+        engine.prefill(&prompt[..33], &mut caches[2], &mut ws);
+        let mut decode_bits = Vec::new();
+        let mut toks = [5u32, 9, 11];
+        for _ in 0..4 {
+            let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+            engine.decode_batch(&toks, &mut refs, &mut ws);
+            decode_bits.extend(bits(&ws.logits[..3 * cfg.vocab]));
+            for (i, t) in toks.iter_mut().enumerate() {
+                *t = mergequant::engine::model::argmax(
+                    &ws.logits[i * cfg.vocab..(i + 1) * cfg.vocab],
+                ) as u32;
+            }
+        }
+
+        match &reference {
+            None => reference = Some((prefill_bits, decode_bits)),
+            Some((pref, dec)) => {
+                assert_eq!(&prefill_bits, pref,
+                           "prefill logits differ at {threads} threads");
+                assert_eq!(&decode_bits, dec,
+                           "decode logits differ at {threads} threads");
+            }
+        }
+    }
+}
+
+#[test]
+fn dynamic_baseline_engine_also_thread_invariant() {
+    // The dynamic-quant baselines share the fused kernel path (per-row
+    // scales + hadamard variants) — they must be deterministic too.
+    let model = synthetic_model("quarot", 128, 256, 1, 192);
+    let prompt: Vec<u32> = (0..40).map(|i| 3 + (i * 5) % 180).collect();
+    let cfg = model.config.clone();
+    let mut want: Option<Vec<u32>> = None;
+    for threads in [1usize, 4] {
+        let engine = Engine::with_threads(model.clone(), threads);
+        let mut ws = Workspace::new();
+        let mut cache = KvCache::new(cfg.n_layers, 64, cfg.d_model);
+        engine.prefill(&prompt, &mut cache, &mut ws);
+        let got = bits(&ws.logits[..prompt.len() * cfg.vocab]);
+        match &want {
+            None => want = Some(got),
+            Some(w) => assert_eq!(&got, w,
+                                  "quarot logits differ at {threads} threads"),
+        }
+    }
+}

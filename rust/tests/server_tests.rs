@@ -21,6 +21,7 @@ fn test_server() -> Server {
             max_prefills_per_iter: 2,
             queue_cap: 64,
             prefill_chunk: 0,
+            threads: 1,
         },
     )
 }

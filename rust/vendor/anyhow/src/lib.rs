@@ -1,0 +1,160 @@
+//! Minimal in-tree `anyhow` shim — just the subset the MergeQuant runtime
+//! uses (DESIGN.md §2 substitution table):
+//!
+//! * [`Error`]: a boxed, contextualized error message. Context added via
+//!   [`Context`] is prepended `"context: cause"`, so both `{}` and the
+//!   `{:#}` alternate form print the full chain like real anyhow.
+//! * [`Result`]: `std::result::Result<T, Error>`.
+//! * [`Context`]: `.context(..)` / `.with_context(..)` on `Result` (any
+//!   `Display` error) and on `Option`.
+//! * [`bail!`]: early-return with a formatted error.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error` — that is what allows the blanket
+//! `From<E: std::error::Error>` conversion used by `?`.
+
+use std::fmt;
+
+/// Boxed error with a flattened context chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything printable (used by `map_err(Error::msg)`).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer, anyhow-style (`"context: cause"`).
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Include one level of source, the common case for io errors
+        // wrapped by parsers.
+        match e.source() {
+            Some(src) => Error { msg: format!("{e}: {src}") },
+            None => Error::msg(&e),
+        }
+    }
+}
+
+/// `std::result::Result` specialised to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attachment extension for `Result` and `Option` (anyhow's
+/// `Context` trait, shimmed).
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Wrap the error (or `None`) with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{c}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with a formatted [`Error`] when the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+/// Construct an [`Error`] from a format string (anyhow's `anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: Result<()> = io_fail().with_context(|| "loading bundle");
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.starts_with("loading bundle: "), "{msg}");
+        assert!(msg.contains("disk on fire"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn f(x: u32) -> Result<()> {
+            if x > 3 {
+                bail!("x too big: {x}");
+            }
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(f(9).unwrap_err().to_string(), "x too big: 9");
+    }
+}
