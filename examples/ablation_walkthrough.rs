@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
         let mut caches: Vec<KvCache> = (0..4)
             .map(|_| {
                 let mut c = KvCache::new(cfg.n_layers, 96, cfg.d_model);
-                engine.prefill(&[3, 4, 5, 6], &mut c, &mut ws);
+                engine.prefill(&[3, 4, 5, 6], &mut c, &mut ws).expect("prefill");
                 c
             })
             .collect();
@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
         let toks = vec![5u32; 4];
         for _ in 0..32 {
             let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
-            engine.decode_batch(&toks, &mut refs, &mut ws);
+            engine.decode_batch(&toks, &mut refs, &mut ws).expect("decode");
         }
         let dt = t0.elapsed().as_secs_f64();
         println!("  {method:<12} {:.0} tok/s", 4.0 * 32.0 / dt);

@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
              cfg.name, model.method, cfg.d_model, cfg.n_layers, cfg.vocab);
     println!("resident weights: {:.2} MB (int4-packed)",
              model.weight_bytes() as f64 / 1e6);
-    let mb = account_model(&model, 1, 2048);
+    let mb = account_model(&model, 1, 2048, mergequant::engine::KvDtype::F32);
     println!("decode memory (batch 1, seq 2048): {:.2} MB total",
              mb.total() as f64 / 1e6);
 

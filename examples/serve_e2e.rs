@@ -45,6 +45,7 @@ fn drive(method: &str, n_requests: usize, n_clients: usize,
             queue_cap: 256,
             prefill_chunk: 0,
             threads: kernel_threads,
+            kv_dtype: mergequant::engine::KvDtype::F32,
         },
     ));
     let gateway = TcpGateway::start(server.clone(), 0)?;

@@ -103,10 +103,11 @@ def _norm_meta(w: _Writer, prefix: str, spec: dict) -> dict:
 def save_qmod(path: Path, qm: dict) -> None:
     cfg: ModelConfig = qm["config"]
     w = _Writer()
+    kv_scales = qm.get("kv")
     layers_meta = []
     for i, layer in enumerate(qm["layers"]):
         p = f"layers.{i}"
-        layers_meta.append({
+        lm = {
             "attn_norm": _norm_meta(w, f"{p}.attn_norm", layer["attn_norm"]),
             "q": _linear_meta(w, f"{p}.q", layer["q"]),
             "k": _linear_meta(w, f"{p}.k", layer["k"]),
@@ -116,9 +117,18 @@ def save_qmod(path: Path, qm: dict) -> None:
             "gate": _linear_meta(w, f"{p}.gate", layer["gate"]),
             "up": _linear_meta(w, f"{p}.up", layer["up"]),
             "down": _linear_meta(w, f"{p}.down", layer["down"]),
-        })
+        }
+        # Format 2: calibrated static INT8 KV-cache scales per layer.
+        if kv_scales is not None:
+            kv = kv_scales[i]
+            lm["kv"] = {
+                name: w.add(f"{p}.kv.{name}",
+                            np.asarray(kv[name], np.float32))
+                for name in ("k_scale", "v_scale", "qk_scale")
+            }
+        layers_meta.append(lm)
     meta = {
-        "format": 1,
+        "format": 2 if kv_scales is not None else 1,
         "method": qm["method"],
         "config": {**dataclasses.asdict(cfg),
                    "outlier_channels": list(cfg.outlier_channels)},
@@ -193,9 +203,22 @@ def load_qmod(path: Path) -> dict:
     ccfg = dict(meta["config"])
     ccfg["outlier_channels"] = tuple(ccfg["outlier_channels"])
     cfg = ModelConfig(**ccfg)
+    kv = None
+    n_kv = sum("kv" in lm for lm in meta["layers"])
+    if n_kv:
+        if n_kv != len(meta["layers"]):
+            raise ValueError(
+                f"kv scales on {n_kv} of {len(meta['layers'])} layers "
+                "(must be all or none)")
+        kv = [
+            {name: tensor(lm["kv"][name])
+             for name in ("k_scale", "v_scale", "qk_scale")}
+            for lm in meta["layers"]
+        ]
     return {
         "config": cfg,
         "method": meta["method"],
+        "kv": kv,
         "embed": tensor("embed"),
         "outlier_gain": tensor("outlier_gain"),
         "final_norm": tensor("final_norm"),

@@ -63,6 +63,11 @@ class LayerCalib:
     ffn_norm_out: TensorStats  # input to gate/up
     o_in: TensorStats  # input to out-projection
     down_in: TensorStats  # input to down-projection
+    # Post-RoPE Q/K and V — exactly what the engine writes to (K, V) or
+    # scores against (Q); feeds the static INT8 KV-cache scales.
+    q_rope: TensorStats | None = None
+    k_rope: TensorStats | None = None
+    v_out: TensorStats | None = None
 
 
 @dataclasses.dataclass
@@ -86,6 +91,12 @@ def forward_with_capture(cfg: M.ModelConfig, params, tokens: jax.Array):
         k = (h @ layer["wk"]).reshape(B, T, H, hd)
         v = (h @ layer["wv"]).reshape(B, T, H, hd)
         q, k = M.apply_rope(q, cos, sin), M.apply_rope(k, cos, sin)
+        # Post-RoPE Q/K and V, flattened back to (B, T, d) — the KV-cache
+        # quantizer calibrates on these (channel layout matches the
+        # engine's cache rows).
+        cap["q_rope"] = q.reshape(B, T, d)
+        cap["k_rope"] = k.reshape(B, T, d)
+        cap["v_out"] = v.reshape(B, T, d)
         attn = M.attention(q, k, v).reshape(B, T, d)
         cap["o_in"] = attn
         x = x + attn @ layer["wo"]
@@ -116,6 +127,9 @@ def calibrate(cfg: M.ModelConfig, params, batches: list[np.ndarray],
                 ffn_norm_out=TensorStats.collect(np.asarray(c["ffn_norm_out"]), max_samples),
                 o_in=TensorStats.collect(np.asarray(c["o_in"]), max_samples),
                 down_in=TensorStats.collect(np.asarray(c["down_in"]), max_samples),
+                q_rope=TensorStats.collect(np.asarray(c["q_rope"]), max_samples),
+                k_rope=TensorStats.collect(np.asarray(c["k_rope"]), max_samples),
+                v_out=TensorStats.collect(np.asarray(c["v_out"]), max_samples),
             )
             for c in captures
         ]
@@ -129,12 +143,39 @@ def calibrate(cfg: M.ModelConfig, params, batches: list[np.ndarray],
                     ffn_norm_out=a.ffn_norm_out.merge(b.ffn_norm_out),
                     o_in=a.o_in.merge(b.o_in),
                     down_in=a.down_in.merge(b.down_in),
+                    q_rope=a.q_rope.merge(b.q_rope),
+                    k_rope=a.k_rope.merge(b.k_rope),
+                    v_out=a.v_out.merge(b.v_out),
                 )
                 for a, b in zip(acc, layer_stats)
             ]
             final_stats = final_stats.merge(fstats)
     assert acc is not None
     return Calibration(layers=acc, final_norm_in=final_stats)
+
+
+def kv_scales_from_calib(cfg: M.ModelConfig, calib: Calibration,
+                         qmax: int = 127) -> list[dict]:
+    """Static INT8 KV-cache scales (engine `quant/kv.rs`, DESIGN.md §10).
+
+    Per layer: per-channel ``k_scale``/``v_scale`` from the post-RoPE K/V
+    absmax, and a per-head ``qk_scale`` = max_{c∈h}(q_absmax_c·k_scale_c)
+    / qmax so the engine can quantize Q with the K channel scales folded
+    in and rescale QK^T scores by one scalar per head.
+    """
+    hd = cfg.head_dim
+    out = []
+    for lc in calib.layers:
+        if lc.k_rope is None or lc.q_rope is None or lc.v_out is None:
+            raise ValueError("calibration lacks post-RoPE q/k/v captures")
+        k_scale = np.maximum(lc.k_rope.absmax, 1e-6) / qmax
+        v_scale = np.maximum(lc.v_out.absmax, 1e-6) / qmax
+        qk = (lc.q_rope.absmax * k_scale).reshape(cfg.n_heads, hd)
+        qk_scale = np.maximum(qk.max(axis=1), 1e-12) / qmax
+        out.append({"k_scale": k_scale.astype(np.float32),
+                    "v_scale": v_scale.astype(np.float32),
+                    "qk_scale": qk_scale.astype(np.float32)})
+    return out
 
 
 def channel_absmax_report(calib: Calibration) -> dict:

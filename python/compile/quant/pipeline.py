@@ -182,6 +182,11 @@ def mergequant(cfg: M.ModelConfig, params, batches: list[np.ndarray], *,
 
     name = "mergequant" if hadamard else "mergequant_nh"
     qm = B._assemble(cfg, p, layers, name)
+    # Static INT8 KV-cache scales from the same calibration corpus — the
+    # format-2 schema carries them so the serving engine never computes a
+    # scale at runtime (`kv_cache=int8`, DESIGN.md §10).
+    if calib.layers and calib.layers[0].k_rope is not None:
+        qm["kv"] = C.kv_scales_from_calib(cfg, calib)
     return qm
 
 

@@ -1,0 +1,130 @@
+"""Static INT8 KV-cache scale calibration (DESIGN.md §10).
+
+Validates the scale algebra the Rust engine (`quant/kv.rs`) relies on:
+
+* shapes / positivity of the calibrated per-channel and per-head scales;
+* the fold — quantizing Q with the K channel scales divided by the
+  per-head ``qk_scale`` makes the i8×i8 score dot recover Q·Kᵀ up to one
+  scalar (``qk_scale[h]``), i.e. per-channel factors really cancel;
+* attention context error vs f32 attention stays small on calibrated
+  activations;
+* `.qmod` round-trip of the kv section (format 2).
+"""
+
+import numpy as np
+import pytest
+
+from compile.quant import calibration as C
+
+
+@pytest.fixture(scope="module")
+def kv_scales(small_cfg, small_calib):
+    return C.kv_scales_from_calib(small_cfg, small_calib)
+
+
+def test_kv_scale_shapes_and_positivity(small_cfg, kv_scales):
+    assert len(kv_scales) == small_cfg.n_layers
+    for sc in kv_scales:
+        assert sc["k_scale"].shape == (small_cfg.d_model,)
+        assert sc["v_scale"].shape == (small_cfg.d_model,)
+        assert sc["qk_scale"].shape == (small_cfg.n_heads,)
+        for v in sc.values():
+            assert np.all(v > 0) and np.all(np.isfinite(v))
+
+
+def _round_half_away(x):
+    return np.sign(x) * np.floor(np.abs(x) + 0.5)
+
+
+def _quant(x, mult, qmax=127):
+    return np.clip(_round_half_away(x * mult), -qmax, qmax).astype(np.int32)
+
+
+def test_score_fold_recovers_qk_dot(small_cfg, small_calib, kv_scales):
+    # On calibration samples: dot(q_hat, k_hat) * qk_scale[h] ≈ q·k.
+    hd = small_cfg.head_dim
+    lc = small_calib.layers[0]
+    sc = kv_scales[0]
+    q = lc.q_rope.samples[:64]
+    k = lc.k_rope.samples[:64]
+    k_inv = 1.0 / sc["k_scale"]
+    for h in range(small_cfg.n_heads):
+        lo, hi = h * hd, (h + 1) * hd
+        q_mult = sc["k_scale"][lo:hi] / sc["qk_scale"][h]
+        qh = _quant(q[:, lo:hi], q_mult)
+        kh = _quant(k[:, lo:hi], k_inv[lo:hi])
+        got = (qh @ kh.T).astype(np.float64) * sc["qk_scale"][h]
+        want = q[:, lo:hi].astype(np.float64) @ k[:, lo:hi].T.astype(np.float64)
+        scale = np.abs(want).max() + 1e-9
+        err = np.abs(got - want).max()
+        assert err <= 0.03 * scale, f"head {h}: {err} vs scale {scale}"
+
+
+def test_int8_attention_context_close_to_f32(small_cfg, small_calib,
+                                             kv_scales):
+    # Full attention (scores → softmax → prob×V) in the integer domain vs
+    # f32, on calibrated activations of layer 0.
+    hd = small_cfg.head_dim
+    lc = small_calib.layers[0]
+    sc = kv_scales[0]
+    q = lc.q_rope.samples[:8]
+    k = lc.k_rope.samples[:48]
+    v = lc.v_out.samples[:48]
+    inv_sqrt = 1.0 / np.sqrt(hd)
+    for h in range(small_cfg.n_heads):
+        lo, hi = h * hd, (h + 1) * hd
+        # f32 reference
+        s_f = (q[:, lo:hi] @ k[:, lo:hi].T) * inv_sqrt
+        p_f = np.exp(s_f - s_f.max(axis=1, keepdims=True))
+        p_f /= p_f.sum(axis=1, keepdims=True)
+        ctx_f = p_f @ v[:, lo:hi]
+        # integer path
+        q_mult = sc["k_scale"][lo:hi] / sc["qk_scale"][h]
+        qh = _quant(q[:, lo:hi], q_mult)
+        kh = _quant(k[:, lo:hi], 1.0 / sc["k_scale"][lo:hi])
+        vh = _quant(v[:, lo:hi], 1.0 / sc["v_scale"][lo:hi])
+        s_i = (qh @ kh.T) * sc["qk_scale"][h] * inv_sqrt
+        p_i = np.exp(s_i - s_i.max(axis=1, keepdims=True))
+        p_i /= p_i.sum(axis=1, keepdims=True)
+        ctx_i = (p_i @ vh) * sc["v_scale"][lo:hi]
+        scale = np.abs(ctx_f).max() + 1e-9
+        err = np.abs(ctx_i - ctx_f).max()
+        assert err <= 0.05 * scale, f"head {h}: {err} vs {scale}"
+
+
+def test_kv_roundtrip_error_half_scale(small_calib, kv_scales):
+    lc = small_calib.layers[0]
+    sc = kv_scales[0]
+    k = np.clip(lc.k_rope.samples[:128], -127 * sc["k_scale"],
+                127 * sc["k_scale"])
+    kq = _quant(k, 1.0 / sc["k_scale"])
+    back = kq * sc["k_scale"]
+    assert np.all(np.abs(k - back) <= sc["k_scale"] / 2 + 1e-6)
+
+
+def test_qmod_carries_kv_section(tmp_path, small_cfg, small_params,
+                                 small_batches, small_calib):
+    from compile.qmod import load_qmod, save_qmod
+    from compile.quant.pipeline import mergequant
+
+    qm = mergequant(small_cfg, small_params, small_batches,
+                    lora_rank=0, use_gptq=False, calib=small_calib)
+    assert "kv" in qm and len(qm["kv"]) == small_cfg.n_layers
+    path = tmp_path / "kv.qmod"
+    save_qmod(path, qm)
+    back = load_qmod(path)
+    assert back["kv"] is not None
+    for a, b in zip(qm["kv"], back["kv"]):
+        for name in ("k_scale", "v_scale", "qk_scale"):
+            np.testing.assert_allclose(a[name], b[name], rtol=0, atol=0)
+
+
+def test_kv_scales_require_captures(small_cfg, small_calib):
+    import dataclasses
+    stripped = C.Calibration(
+        layers=[dataclasses.replace(lc, q_rope=None)
+                for lc in small_calib.layers],
+        final_norm_in=small_calib.final_norm_in,
+    )
+    with pytest.raises(ValueError):
+        C.kv_scales_from_calib(small_cfg, stripped)

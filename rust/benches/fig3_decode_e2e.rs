@@ -10,18 +10,23 @@
 //! Second axis: intra-op **threads** at a fixed batch (DESIGN.md §7) —
 //! batched decode fans out across batch lanes and output-column tiles,
 //! so tok/s must scale with the pool while staying token-identical.
+//!
+//! Third axis: **KV-cache dtype** (DESIGN.md §10) — f32 vs statically-
+//! quantized int8 KV at a fixed batch, measuring the integer-domain
+//! attention path against the f32 baseline.
 
 mod common;
 
 use mergequant::bench::Bench;
-use mergequant::engine::{Engine, KvCache, Workspace};
+use mergequant::engine::{Engine, KvCache, KvDtype, Workspace};
 
 const PREFILL: usize = 256;
 const DECODE: usize = 64;
 
 /// One full request batch: prefill `batch` sequences then decode them
-/// jointly for DECODE steps. Returns (decode_secs, e2e_secs).
-fn run_batch(engine: &Engine, batch: usize) -> (f64, f64) {
+/// jointly for DECODE steps over `kv`-dtype caches. Returns
+/// (decode_secs, e2e_secs).
+fn run_batch(engine: &Engine, batch: usize, kv: KvDtype) -> (f64, f64) {
     let cfg = engine.config().clone();
     let mut ws = Workspace::new();
     let prompt: Vec<u32> =
@@ -30,9 +35,9 @@ fn run_batch(engine: &Engine, batch: usize) -> (f64, f64) {
     let t0 = std::time::Instant::now();
     let mut caches: Vec<KvCache> = (0..batch)
         .map(|_| {
-            let mut c =
-                KvCache::new(cfg.n_layers, PREFILL + DECODE + 2, cfg.d_model);
-            engine.prefill(&prompt, &mut c, &mut ws);
+            let mut c = KvCache::with_dtype(
+                kv, cfg.n_layers, PREFILL + DECODE + 2, cfg.d_model);
+            engine.prefill(&prompt, &mut c, &mut ws).expect("bench prefill");
             c
         })
         .collect();
@@ -40,7 +45,7 @@ fn run_batch(engine: &Engine, batch: usize) -> (f64, f64) {
     let mut toks: Vec<u32> = vec![5; batch];
     for step in 0..DECODE {
         let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
-        engine.decode_batch(&toks, &mut refs, &mut ws);
+        engine.decode_batch(&toks, &mut refs, &mut ws).expect("bench decode");
         let v = cfg.vocab;
         for i in 0..batch {
             toks[i] =
@@ -69,11 +74,11 @@ fn main() {
             }
             // one warmup, then best-of-N measured runs: small batches are
             // tens of ms and vulnerable to background interference.
-            let _ = run_batch(&engine, batch.min(2));
+            let _ = run_batch(&engine, batch.min(2), KvDtype::F32);
             let reps = if batch <= 4 { 3 } else { 1 };
             let (mut d, mut e) = (f64::INFINITY, f64::INFINITY);
             for _ in 0..reps {
-                let (dr, er) = run_batch(&engine, batch);
+                let (dr, er) = run_batch(&engine, batch, KvDtype::F32);
                 d = d.min(dr);
                 e = e.min(er);
             }
@@ -91,6 +96,32 @@ fn main() {
         }
     }
 
+    // ---- kv axis: fixed batch, f32 vs statically-quantized int8 KV ----
+    const KV_BATCH: usize = 8;
+    {
+        let (mut engine, _) = common::engine_or_synthetic("tiny-llama-s",
+                                                          "mergequant");
+        // Pre-format-2 or synthetic bundle: probe-calibrate KV scales.
+        engine.ensure_kv_scales().expect("probe calibration");
+        let mut decode_t = std::collections::HashMap::new();
+        for kv in [KvDtype::F32, KvDtype::Int8] {
+            let _ = run_batch(&engine, 2, kv); // warmup
+            let (mut d, mut e) = (f64::INFINITY, f64::INFINITY);
+            for _ in 0..2 {
+                let (dr, er) = run_batch(&engine, KV_BATCH, kv);
+                d = d.min(dr);
+                e = e.min(er);
+            }
+            let _ = e;
+            decode_t.insert(kv.as_str(), d);
+            b.record(&format!("mergequant decode_tok/s b{KV_BATCH} \
+                               kv_{}", kv.as_str()),
+                     (KV_BATCH * DECODE) as f64 / d);
+        }
+        b.record(&format!("mergequant decode_int8kv_vs_f32kv b{KV_BATCH}"),
+                 decode_t["f32"] / decode_t["int8"]);
+    }
+
     // ---- threads axis: fixed batch 8, parallel-kernel scaling ----
     let threads: Vec<usize> =
         if std::env::var("MQ_BENCH_FAST").is_ok() { vec![1, 4] }
@@ -101,10 +132,10 @@ fn main() {
     let (mut d1, mut e1) = (f64::NAN, f64::NAN);
     for &th in &threads {
         engine.set_threads(th);
-        let _ = run_batch(&engine, 2); // warmup
+        let _ = run_batch(&engine, 2, KvDtype::F32); // warmup
         let (mut d, mut e) = (f64::INFINITY, f64::INFINITY);
         for _ in 0..2 {
-            let (dr, er) = run_batch(&engine, TH_BATCH);
+            let (dr, er) = run_batch(&engine, TH_BATCH, KvDtype::F32);
             d = d.min(dr);
             e = e.min(er);
         }
@@ -120,5 +151,6 @@ fn main() {
                                t{th}_vs_t1"), e1 / e);
         }
     }
-    b.finish("decode + e2e speedup vs batch size + threads (paper Fig. 3)");
+    b.finish("decode + e2e speedup vs batch size + threads + kv dtype \
+              (paper Fig. 3)");
 }

@@ -37,7 +37,7 @@ fn main() {
             let t = b.measure(&format!("{m} prefill b{batch} seq{SEQ}"), || {
                 for c in caches.iter_mut() {
                     c.reset();
-                    engine.prefill(&prompt, c, &mut ws);
+                    engine.prefill(&prompt, c, &mut ws).expect("bench prefill");
                 }
             });
             times.insert(m, t);
@@ -66,7 +66,7 @@ fn main() {
             let t = b.measure(&format!("{m} prefill seq{SEQ} threads{th}"),
                               || {
                 cache.reset();
-                engine.prefill(&prompt, &mut cache, &mut ws);
+                engine.prefill(&prompt, &mut cache, &mut ws).expect("bench prefill");
             });
             if th == 1 {
                 t1 = t;

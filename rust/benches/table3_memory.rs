@@ -8,8 +8,9 @@
 mod common;
 
 use mergequant::bench::Bench;
-use mergequant::engine::memory::{account_model, project, MethodKind,
-                                 LLAMA2_7B};
+use mergequant::engine::memory::{account_model, project, projected_kv_bytes,
+                                 MethodKind, LLAMA2_7B};
+use mergequant::engine::{KvCache, KvDtype};
 
 fn main() {
     let mut b = Bench::new("table3_memory");
@@ -17,13 +18,34 @@ fn main() {
     // (a) measured on the tiny bundles
     for m in ["fp16", "rtn", "quarot", "mergequant"] {
         if let Some(engine) = common::try_engine("tiny-llama-s", m) {
-            let mb = account_model(&engine.model, 1, 2048);
+            let mb = account_model(&engine.model, 1, 2048, KvDtype::F32);
             b.record(&format!("measured {m} total_MB"),
                      mb.total() as f64 / 1e6);
             b.record(&format!("measured {m} weights_MB"),
                      mb.weights as f64 / 1e6);
             b.record(&format!("measured {m} dyn_overhead_KB"),
                      mb.dynamic_overhead as f64 / 1e3);
+        }
+    }
+
+    // (a') resident KV bytes vs cache dtype (DESIGN.md §10) — measured on
+    // real slabs and on the accounting formulas; int8 storage is exactly
+    // 4× smaller per slab (scales live with the weights, not per slab).
+    {
+        let (engine, _) = common::engine_or_synthetic("tiny-llama-s",
+                                                      "mergequant");
+        let cfg = engine.config().clone();
+        let slab = |kv| KvCache::with_dtype(kv, cfg.n_layers, 2048,
+                                            cfg.d_model).bytes();
+        let (f32b, i8b) = (slab(KvDtype::F32), slab(KvDtype::Int8));
+        b.record("measured kv_slab f32_MB", f32b as f64 / 1e6);
+        b.record("measured kv_slab int8_MB", i8b as f64 / 1e6);
+        b.record("kv int8 reduction_factor", f32b as f64 / i8b as f64);
+        for kv in [KvDtype::F32, KvDtype::Int8] {
+            let mb = account_model(&engine.model, 1, 2048, kv);
+            b.record(&format!("measured mergequant kv_{} total_MB",
+                              kv.as_str()),
+                     mb.total() as f64 / 1e6);
         }
     }
 
@@ -36,6 +58,17 @@ fn main() {
         let t = project(&LLAMA2_7B, &kind, 1, 2048, 4).total();
         b.record(&format!("7B {name} GB"), t as f64 / 1e9);
         b.record(&format!("7B {name} saving_factor"), fp as f64 / t as f64);
+    }
+
+    // (c) paper-scale KV projection: fp16 KV (paper baseline) vs static
+    // INT8 KV at Llama-2-7B dimensions, long-context batch serving.
+    for (batch, seq) in [(1usize, 2048usize), (32, 4096)] {
+        let fp16 = projected_kv_bytes(&LLAMA2_7B, batch, seq, 2);
+        let int8 = projected_kv_bytes(&LLAMA2_7B, batch, seq, 1);
+        b.record(&format!("7B kv fp16 b{batch} s{seq} GB"),
+                 fp16 as f64 / 1e9);
+        b.record(&format!("7B kv int8 b{batch} s{seq} GB"),
+                 int8 as f64 / 1e9);
     }
     b.finish("memory for single-token decode, batch 1 seq 2048 (paper Table 3)");
 }

@@ -190,6 +190,8 @@ pub fn synthetic_model(mode: &str, d: usize, ff: usize, n_layers: usize,
         };
         layers.push(layer);
     }
+    // No KV scales attached: like a pre-format-2 bundle. Int8-KV users
+    // call `Engine::ensure_kv_scales` (probe-calibration fallback).
     QModel {
         config,
         method: mode.into(),
@@ -198,5 +200,6 @@ pub fn synthetic_model(mode: &str, d: usize, ff: usize, n_layers: usize,
         final_norm: vec![1.0; d],
         lm_head_t: normal(&mut rng, vocab * d, 0.05),
         layers,
+        kv: None,
     }
 }

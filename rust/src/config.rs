@@ -7,6 +7,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::coordinator::SchedulerConfig;
+use crate::engine::KvDtype;
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
@@ -67,6 +68,18 @@ impl ServeConfig {
                     .unwrap_or(d.prefill_chunk),
                 threads: s.get("threads").and_then(Json::as_usize)
                     .unwrap_or(d.threads),
+                kv_dtype: match s.get("kv_cache").and_then(Json::as_str) {
+                    Some(v) => KvDtype::parse(v).unwrap_or_else(|| {
+                        // Mirror the CLI's loud rejection as far as a
+                        // non-failing parse can: never drop the setting
+                        // silently.
+                        eprintln!("warning: scheduler.kv_cache {v:?} is \
+                                   not one of f32|int8 — using {}",
+                                  d.kv_dtype.as_str());
+                        d.kv_dtype
+                    }),
+                    None => d.kv_dtype,
+                },
             };
         }
         cfg
@@ -89,7 +102,8 @@ mod tests {
     fn from_json_overrides() {
         let j = Json::parse(
             r#"{"model":"tiny-llama-m","method":"rtn",
-                "scheduler":{"max_batch":4,"max_seq":256,"threads":6},
+                "scheduler":{"max_batch":4,"max_seq":256,"threads":6,
+                             "kv_cache":"int8"},
                 "port":9999}"#,
         )
         .unwrap();
@@ -99,9 +113,19 @@ mod tests {
         assert_eq!(c.scheduler.max_batch, 4);
         assert_eq!(c.scheduler.max_seq, 256);
         assert_eq!(c.scheduler.threads, 6);
+        assert_eq!(c.scheduler.kv_dtype, KvDtype::Int8);
         assert_eq!(c.scheduler.queue_cap,
                    SchedulerConfig::default().queue_cap);
         assert_eq!(c.port, 9999);
+    }
+
+    #[test]
+    fn kv_cache_defaults_to_f32_and_rejects_garbage() {
+        let c = ServeConfig::from_json(
+            &Json::parse(r#"{"scheduler":{"kv_cache":"mystery"}}"#).unwrap());
+        assert_eq!(c.scheduler.kv_dtype, KvDtype::F32);
+        let d = ServeConfig::from_json(&Json::parse("{}").unwrap());
+        assert_eq!(d.scheduler.kv_dtype, KvDtype::F32);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //!   * freeing an unallocated id is an error;
 //!   * freed slabs are reset (len == 0) before reuse.
 
-use crate::engine::KvCache;
+use crate::engine::{KvCache, KvDtype};
 
 pub struct KvPool {
     slabs: Vec<KvCache>,
@@ -17,10 +17,19 @@ pub struct KvPool {
 }
 
 impl KvPool {
+    /// Pool of f32 slabs (seed-compatible default).
     pub fn new(capacity: usize, n_layers: usize, max_seq: usize, d: usize)
                -> Self {
-        let slabs =
-            (0..capacity).map(|_| KvCache::new(n_layers, max_seq, d)).collect();
+        Self::with_dtype(KvDtype::F32, capacity, n_layers, max_seq, d)
+    }
+
+    /// Pool with an explicit slab storage dtype — `Int8` slabs are 4×
+    /// smaller, which is the whole Table-3 scaling story for resident KV.
+    pub fn with_dtype(dtype: KvDtype, capacity: usize, n_layers: usize,
+                      max_seq: usize, d: usize) -> Self {
+        let slabs = (0..capacity)
+            .map(|_| KvCache::with_dtype(dtype, n_layers, max_seq, d))
+            .collect();
         KvPool {
             slabs,
             free: (0..capacity).rev().collect(),
@@ -73,6 +82,11 @@ impl KvPool {
 
     pub fn total_bytes(&self) -> usize {
         self.slabs.iter().map(|s| s.bytes()).sum()
+    }
+
+    /// Storage dtype of the slabs (uniform across the pool).
+    pub fn dtype(&self) -> KvDtype {
+        self.slabs.first().map_or(KvDtype::F32, |s| s.dtype())
     }
 }
 
@@ -130,5 +144,13 @@ mod tests {
         let b = p.alloc().unwrap();
         let caches = p.get_many_mut(&[a, b]);
         assert_eq!(caches.len(), 2);
+    }
+
+    #[test]
+    fn int8_slabs_are_4x_smaller() {
+        let f = KvPool::with_dtype(KvDtype::F32, 4, 2, 16, 8);
+        let q = KvPool::with_dtype(KvDtype::Int8, 4, 2, 16, 8);
+        assert_eq!(q.dtype(), KvDtype::Int8);
+        assert_eq!(f.total_bytes(), 4 * q.total_bytes());
     }
 }

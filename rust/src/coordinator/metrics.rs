@@ -13,6 +13,9 @@ pub struct Metrics {
     pub prefill_calls: u64,
     pub peak_active: usize,
     pub rejected: u64,
+    /// Requests terminated by a typed engine error (per-request failure
+    /// path — e.g. KV-cache overflow) rather than normal completion.
+    pub failed: u64,
     latencies_s: Vec<f64>,
     ttfts_s: Vec<f64>,
     batch_sizes: Vec<f64>,
@@ -51,14 +54,15 @@ impl Metrics {
         let ttft = self.ttft_summary();
         format!(
             "requests={} prompt_toks={} gen_toks={} decode_iters={} \
-             mean_batch={:.2} peak_batch={} lat_p50={:.1}ms lat_p99={:.1}ms \
-             ttft_p50={:.1}ms",
+             mean_batch={:.2} peak_batch={} failed={} lat_p50={:.1}ms \
+             lat_p99={:.1}ms ttft_p50={:.1}ms",
             self.requests_completed,
             self.prompt_tokens,
             self.generated_tokens,
             self.decode_iterations,
             self.mean_batch_size(),
             self.peak_active,
+            self.failed,
             lat.p50 * 1e3,
             lat.p99 * 1e3,
             ttft.p50 * 1e3,

@@ -33,6 +33,10 @@ pub struct Response {
     /// Total latency from submission to completion.
     pub latency: Duration,
     pub prompt_len: usize,
+    /// Per-request failure description (e.g. a typed engine error such as
+    /// KV-cache overflow); `None` on success. Failed requests still get a
+    /// response — failures never kill the scheduler worker.
+    pub error: Option<String>,
 }
 
 impl Response {

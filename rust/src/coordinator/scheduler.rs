@@ -24,7 +24,7 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use crate::engine::{model::argmax, Engine, Workspace};
+use crate::engine::{model::argmax, Engine, EngineError, KvDtype, Workspace};
 
 use super::kv_pool::KvPool;
 use super::metrics::Metrics;
@@ -50,6 +50,11 @@ pub struct SchedulerConfig {
     /// serial kernels (the deterministic baseline — though every count
     /// is bitwise identical), 0 ⇒ all available cores.
     pub threads: usize,
+    /// KV-slab storage dtype: `F32` (paper-parity default) or `Int8`
+    /// (statically-quantized cache, 4× more servable KV per box;
+    /// DESIGN.md §10). Plumbed from JSON `scheduler.kv_cache` /
+    /// `--kv-cache`.
+    pub kv_dtype: KvDtype,
 }
 
 impl Default for SchedulerConfig {
@@ -62,6 +67,7 @@ impl Default for SchedulerConfig {
             queue_cap: 1024,
             prefill_chunk: 0,
             threads: 1,
+            kv_dtype: KvDtype::F32,
         }
     }
 }
@@ -73,6 +79,9 @@ struct Active {
     next: u32,
     ttft: Duration,
     done: bool,
+    /// Set when a typed engine error terminated this sequence; carried
+    /// into the Response so the failure is per-request, not fatal.
+    error: Option<String>,
 }
 
 /// One request mid-way through a chunked prefill (at most one in flight;
@@ -100,9 +109,15 @@ impl Scheduler {
         // The scheduler owns engine threading: config is the single
         // source of truth for the deployment (DESIGN.md §7).
         engine.set_threads(cfg.threads);
+        // Int8 slabs need per-layer KV scales; bundles predating the
+        // format-2 schema (and fp16 baselines) get probe-calibrated
+        // fallback scales so `kv_cache=int8` serves everywhere.
+        if cfg.kv_dtype == KvDtype::Int8 {
+            engine.ensure_kv_scales().expect("probe KV calibration");
+        }
         let mc = engine.config();
-        let pool = KvPool::new(cfg.kv_slabs, mc.n_layers, cfg.max_seq,
-                               mc.d_model);
+        let pool = KvPool::with_dtype(cfg.kv_dtype, cfg.kv_slabs,
+                                      mc.n_layers, cfg.max_seq, mc.d_model);
         Scheduler {
             engine,
             cfg,
@@ -156,6 +171,21 @@ impl Scheduler {
         self.active.len()
     }
 
+    /// Fail a not-yet-active request with a typed engine error: free its
+    /// slab, answer it (empty tokens + error), keep the worker alive.
+    fn fail_request(&mut self, req: Request, slab: usize, err: &EngineError) {
+        self.pool.dealloc(slab);
+        self.metrics.failed += 1;
+        self.completed.push(Response {
+            id: req.id,
+            tokens: Vec::new(),
+            ttft: Duration::ZERO,
+            latency: req.submitted.elapsed(),
+            prompt_len: req.prompt.len(),
+            error: Some(err.to_string()),
+        });
+    }
+
     /// Advance the in-flight chunked prefill by one chunk; returns true
     /// if it consumed this iteration's prefill budget.
     fn advance_chunked(&mut self) -> bool {
@@ -164,7 +194,10 @@ impl Scheduler {
         let end = (pf.consumed + chunk).min(pf.req.prompt.len());
         let toks: Vec<u32> = pf.req.prompt[pf.consumed..end].to_vec();
         let cache = self.pool.get_mut(pf.slab);
-        self.engine.prefill(&toks, cache, &mut self.ws);
+        if let Err(e) = self.engine.prefill(&toks, cache, &mut self.ws) {
+            self.fail_request(pf.req, pf.slab, &e);
+            return true;
+        }
         self.metrics.prefill_calls += 1;
         pf.consumed = end;
         if pf.consumed == pf.req.prompt.len() {
@@ -180,6 +213,7 @@ impl Scheduler {
                 next: first,
                 ttft,
                 done: false,
+                error: None,
             });
         } else {
             self.prefilling = Some(pf);
@@ -194,20 +228,6 @@ impl Scheduler {
             && self.active.len() < self.cfg.max_batch
             && !self.pending.is_empty()
         {
-            // A prompt longer than the slab can never run — reject.
-            let prompt_len = self.pending.front().unwrap().prompt.len();
-            if prompt_len + 1 >= self.cfg.max_seq {
-                let req = self.pending.pop_front().unwrap();
-                self.metrics.rejected += 1;
-                self.completed.push(Response {
-                    id: req.id,
-                    tokens: Vec::new(),
-                    ttft: Duration::ZERO,
-                    latency: req.submitted.elapsed(),
-                    prompt_len,
-                });
-                continue;
-            }
             let Some(slab) = self.pool.alloc() else { break };
             let req = self.pending.pop_front().unwrap();
             // Long prompts go through the chunked path so one admission
@@ -221,7 +241,15 @@ impl Scheduler {
             }
             let vocab = self.engine.config().vocab;
             let cache = self.pool.get_mut(slab);
-            self.engine.prefill(&req.prompt, cache, &mut self.ws);
+            // Oversized prompts (and any other engine-side failure)
+            // surface as the typed error → per-request failure; the
+            // worker thread never dies on them.
+            if let Err(e) = self.engine.prefill(&req.prompt, cache,
+                                                &mut self.ws) {
+                self.fail_request(req, slab, &e);
+                admitted += 1;
+                continue;
+            }
             self.metrics.prefill_calls += 1;
             let last = &self.ws.logits
                 [(req.prompt.len() - 1) * vocab..req.prompt.len() * vocab];
@@ -234,6 +262,7 @@ impl Scheduler {
                 next: first,
                 ttft,
                 done: false,
+                error: None,
             });
             admitted += 1;
         }
@@ -259,7 +288,30 @@ impl Scheduler {
         let slabs: Vec<usize> =
             run_idx.iter().map(|&i| self.active[i].slab).collect();
         let mut caches = self.pool.get_many_mut(&slabs);
-        self.engine.decode_batch(&tokens, &mut caches, &mut self.ws);
+        if let Err(e) = self.engine.decode_batch(&tokens, &mut caches,
+                                                 &mut self.ws) {
+            // The engine validates before computing, so nothing advanced:
+            // terminate only the offending lane (its partial tokens ship
+            // with the error) and let the rest retry next iteration.
+            match e {
+                EngineError::KvOverflow { lane, .. } => {
+                    let idx = run_idx[lane];
+                    self.active[idx].error = Some(e.to_string());
+                    self.active[idx].done = true;
+                    self.metrics.failed += 1;
+                }
+                _ => {
+                    // No lane attribution — fail the whole run set rather
+                    // than livelock on a persistent error.
+                    for &idx in &run_idx {
+                        self.active[idx].error = Some(e.to_string());
+                        self.active[idx].done = true;
+                        self.metrics.failed += 1;
+                    }
+                }
+            }
+            return;
+        }
         self.metrics.record_decode_iter(run_idx.len());
         let vocab = self.engine.config().vocab;
         for (bi, &i) in run_idx.iter().enumerate() {
@@ -288,15 +340,21 @@ impl Scheduler {
                 let a = self.active.swap_remove(i);
                 self.pool.dealloc(a.slab);
                 let latency = a.req.submitted.elapsed();
-                self.metrics.record_completion(latency, a.ttft,
-                                               a.req.prompt.len(),
-                                               a.tokens.len());
+                // Failed sequences count only in `failed` (set at the
+                // failure site) — mirroring fail_request(), so completion
+                // counts and latency percentiles describe successes only.
+                if a.error.is_none() {
+                    self.metrics.record_completion(latency, a.ttft,
+                                                   a.req.prompt.len(),
+                                                   a.tokens.len());
+                }
                 self.completed.push(Response {
                     id: a.req.id,
                     tokens: a.tokens,
                     ttft: a.ttft,
                     latency,
                     prompt_len: a.req.prompt.len(),
+                    error: a.error,
                 });
             } else {
                 i += 1;

@@ -107,6 +107,7 @@ fn worker_loop(engine: Engine, cfg: SchedulerConfig, rx: Receiver<Msg>)
                                 ttft: std::time::Duration::ZERO,
                                 latency: req.submitted.elapsed(),
                                 prompt_len: req.prompt.len(),
+                                error: Some("queue full".into()),
                             });
                         }
                     }
@@ -206,14 +207,18 @@ fn handle_conn(stream: TcpStream, server: Arc<Server>) -> anyhow::Result<()> {
             .unwrap_or_default();
         let max_new = j.get("max_new").and_then(Json::as_usize).unwrap_or(16);
         let resp = server.submit(prompt, max_new).recv()?;
-        let reply = obj(vec![
+        let mut fields = vec![
             ("id", num(resp.id as f64)),
             ("prompt_len", num(resp.prompt_len as f64)),
             ("ttft_ms", num(resp.ttft.as_secs_f64() * 1e3)),
             ("latency_ms", num(resp.latency.as_secs_f64() * 1e3)),
             ("tokens", Json::Arr(
                 resp.tokens.iter().map(|&t| num(t as f64)).collect())),
-        ]);
+        ];
+        if let Some(e) = &resp.error {
+            fields.push(("error", Json::Str(e.clone())));
+        }
+        let reply = obj(fields);
         writeln!(out, "{}", reply.to_string())?;
     }
 }

@@ -8,6 +8,8 @@
 //! Llama-2-7B dimensions with the same formulas, so the bench reports
 //! both the measured and the paper-scale numbers.
 
+use crate::quant::kv::KvDtype;
+
 use super::qmod::{Linear, QModel, QuantMode};
 
 #[derive(Clone, Debug, Default)]
@@ -28,14 +30,15 @@ impl MemoryBreakdown {
     }
 }
 
-/// Account a loaded model for (batch, seq) single-token decoding.
-pub fn account_model(model: &QModel, batch: usize, seq: usize)
+/// Account a loaded model for (batch, seq) single-token decoding with the
+/// given KV-cache storage dtype (f32 seed layout or static INT8).
+pub fn account_model(model: &QModel, batch: usize, seq: usize, kv: KvDtype)
                      -> MemoryBreakdown {
     let cfg = &model.config;
     let (d, ff, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
     let mut mb = MemoryBreakdown {
         weights: model.weight_bytes(),
-        kv_cache: cfg.n_layers * batch * seq * d * 2 * 4,
+        kv_cache: cfg.n_layers * batch * seq * d * 2 * kv.bytes_per_elt(),
         ..Default::default()
     };
     // decode-step activation buffers (one token per sequence)
@@ -89,6 +92,13 @@ pub const LLAMA2_7B: ProjectedConfig = ProjectedConfig {
     n_layers: 32,
     vocab: 32000,
 };
+
+/// Projected resident KV bytes at arbitrary dimensions for a given
+/// per-element byte width (2 = fp16 paper baseline, 1 = static INT8).
+pub fn projected_kv_bytes(cfg: &ProjectedConfig, batch: usize, seq: usize,
+                          bytes_per_elt: usize) -> usize {
+    cfg.n_layers * batch * seq * cfg.d_model * 2 * bytes_per_elt
+}
 
 pub enum MethodKind {
     Fp16,

@@ -7,5 +7,6 @@ pub mod memory;
 pub mod model;
 pub mod qmod;
 
-pub use model::{Engine, KvCache, Workspace};
+pub use crate::quant::kv::{KvDtype, KvLayerScales};
+pub use model::{Engine, EngineError, KvCache, Workspace};
 pub use qmod::{Linear, ModelConfig, Norm, QModel, QuantMode, QWeight};

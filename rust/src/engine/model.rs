@@ -18,6 +18,7 @@
 use crate::quant::dynamic::per_token_quant;
 use crate::quant::gemm::{gemm_i8_grouped, rowsum_i8};
 use crate::quant::hadamard::fwht_block64;
+use crate::quant::kv::{self, KvDtype, KvLayerScales};
 use crate::quant::parallel::{
     par_gemm_f32, par_qlinear, ScopedTask, ThreadPool,
 };
@@ -26,6 +27,35 @@ use crate::quant::reconstruct::reconstruct_i8;
 use super::qmod::{Linear, Norm, QModel, QuantMode, QWeight};
 
 const EPS: f32 = 1e-5;
+
+/// Typed engine failures. Forward calls validate *before* touching any
+/// cache state, so an `Err` leaves caches and workspace unmodified — the
+/// coordinator surfaces these as per-request failures instead of dying
+/// on a panic (DESIGN.md §6).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// Writing position `pos` would exceed the cache capacity `cap`.
+    /// `lane` is the batch lane (0 for prefill / single-sequence calls).
+    KvOverflow { lane: usize, pos: usize, cap: usize },
+    /// An int8 KV cache was supplied but the bundle carries no calibrated
+    /// KV scales (pre-format-2 `.qmod`).
+    MissingKvScales,
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::KvOverflow { lane, pos, cap } => write!(
+                f, "KV cache overflow on lane {lane}: position {pos} >= \
+                    capacity {cap}"),
+            EngineError::MissingKvScales => write!(
+                f, "int8 KV cache requested but the bundle has no \
+                    calibrated KV scales"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
 
 /// Reusable scratch buffers — no allocation on the decode hot path after
 /// the first step.
@@ -49,6 +79,7 @@ pub struct Workspace {
     pub had: Vec<f32>,      // hadamard-transformed activations
     pub scratch_w: Vec<i8>, // unpacked weight row
     pub scores: Vec<f32>,   // attention score row (≤ max cache len)
+    pub qint: Vec<i8>,      // quantized query head (int8-KV attention)
     pub logits: Vec<f32>,
 }
 
@@ -72,14 +103,25 @@ impl Workspace {
             + self.had.len() * 4
             + self.scratch_w.len()
             + self.scores.len() * 4
+            + self.qint.len()
             + self.logits.len() * 4
     }
 }
 
-/// Per-sequence KV cache: layout (L, cap, d) with d = H·hd.
+/// Dtype-parametric K/V storage: contiguous (L, cap, d) planes either in
+/// f32 (seed layout) or statically-quantized int8 (4× smaller).
+enum KvStore {
+    F32 { k: Vec<f32>, v: Vec<f32> },
+    I8 { k: Vec<i8>, v: Vec<i8> },
+}
+
+/// Per-sequence KV cache: layout (L, cap, d) with d = H·hd. Storage is
+/// dtype-parametric ([`KvDtype`]): `F32` keeps the full-precision seed
+/// behaviour, `Int8` stores per-channel statically-quantized values (the
+/// engine quantizes at write time with the bundle's calibrated scales and
+/// attends in the integer domain — `quant::kv`).
 pub struct KvCache {
-    k: Vec<f32>,
-    v: Vec<f32>,
+    store: KvStore,
     pub cap: usize,
     pub len: usize,
     pub n_layers: usize,
@@ -87,37 +129,99 @@ pub struct KvCache {
 }
 
 impl KvCache {
+    /// Full-precision cache (seed-compatible default).
     pub fn new(n_layers: usize, cap: usize, d: usize) -> Self {
-        KvCache {
-            k: vec![0f32; n_layers * cap * d],
-            v: vec![0f32; n_layers * cap * d],
-            cap,
-            len: 0,
-            n_layers,
-            d,
+        Self::with_dtype(KvDtype::F32, n_layers, cap, d)
+    }
+
+    /// Cache with an explicit storage dtype.
+    pub fn with_dtype(dtype: KvDtype, n_layers: usize, cap: usize, d: usize)
+                      -> Self {
+        let n = n_layers * cap * d;
+        let store = match dtype {
+            KvDtype::F32 => KvStore::F32 { k: vec![0f32; n], v: vec![0f32; n] },
+            KvDtype::Int8 => KvStore::I8 { k: vec![0i8; n], v: vec![0i8; n] },
+        };
+        KvCache { store, cap, len: 0, n_layers, d }
+    }
+
+    /// Storage element type of this cache.
+    pub fn dtype(&self) -> KvDtype {
+        match self.store {
+            KvStore::F32 { .. } => KvDtype::F32,
+            KvStore::I8 { .. } => KvDtype::Int8,
         }
     }
 
     #[inline]
-    fn layer_k(&self, l: usize) -> &[f32] {
-        &self.k[l * self.cap * self.d..(l + 1) * self.cap * self.d]
+    fn plane(&self, l: usize) -> std::ops::Range<usize> {
+        l * self.cap * self.d..(l + 1) * self.cap * self.d
     }
 
     #[inline]
-    fn layer_v(&self, l: usize) -> &[f32] {
-        &self.v[l * self.cap * self.d..(l + 1) * self.cap * self.d]
+    fn layer_k_f32(&self, l: usize) -> &[f32] {
+        match &self.store {
+            KvStore::F32 { k, .. } => &k[self.plane(l)],
+            KvStore::I8 { .. } => unreachable!("f32 view of int8 KV cache"),
+        }
     }
 
     #[inline]
-    fn write(&mut self, l: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
-        assert!(pos < self.cap, "KV cache overflow: {pos} >= {}", self.cap);
-        let off = l * self.cap * self.d + pos * self.d;
-        self.k[off..off + self.d].copy_from_slice(k_row);
-        self.v[off..off + self.d].copy_from_slice(v_row);
+    fn layer_v_f32(&self, l: usize) -> &[f32] {
+        match &self.store {
+            KvStore::F32 { v, .. } => &v[self.plane(l)],
+            KvStore::I8 { .. } => unreachable!("f32 view of int8 KV cache"),
+        }
     }
 
+    #[inline]
+    fn layer_k_i8(&self, l: usize) -> &[i8] {
+        match &self.store {
+            KvStore::I8 { k, .. } => &k[self.plane(l)],
+            KvStore::F32 { .. } => unreachable!("int8 view of f32 KV cache"),
+        }
+    }
+
+    #[inline]
+    fn layer_v_i8(&self, l: usize) -> &[i8] {
+        match &self.store {
+            KvStore::I8 { v, .. } => &v[self.plane(l)],
+            KvStore::F32 { .. } => unreachable!("int8 view of f32 KV cache"),
+        }
+    }
+
+    /// Store one K/V row, quantizing on the way in for int8 storage.
+    /// Callers (the engine forward passes) validate capacity and scale
+    /// availability up front and return [`EngineError`] — by the time a
+    /// write happens it cannot fail.
+    #[inline]
+    fn write(&mut self, l: usize, pos: usize, k_row: &[f32], v_row: &[f32],
+             scales: Option<&KvLayerScales>) {
+        debug_assert!(pos < self.cap,
+                      "KV write past validated capacity: {pos} >= {}",
+                      self.cap);
+        let d = self.d;
+        let off = l * self.cap * d + pos * d;
+        match &mut self.store {
+            KvStore::F32 { k, v } => {
+                k[off..off + d].copy_from_slice(k_row);
+                v[off..off + d].copy_from_slice(v_row);
+            }
+            KvStore::I8 { k, v } => {
+                let sc = scales.expect("int8 KV write validated scales");
+                kv::quantize_row_i8(k_row, &sc.k_inv, &mut k[off..off + d]);
+                kv::quantize_row_i8(v_row, &sc.v_inv, &mut v[off..off + d]);
+            }
+        }
+    }
+
+    /// Resident bytes of the K/V planes (Table 3 accounting): 4 bytes per
+    /// element for f32 storage, 1 for int8.
     pub fn bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * 4
+        match &self.store {
+            KvStore::F32 { k, v } => (k.len() + v.len()) * 4,
+            KvStore::I8 { k, v } => k.len() + v.len(),
+        }
     }
 
     pub fn reset(&mut self) {
@@ -380,6 +484,46 @@ impl Engine {
         }
     }
 
+    /// Resolve the KV scales a cache needs: `None` for f32 storage, the
+    /// bundle's calibrated per-layer scales for int8 —
+    /// [`EngineError::MissingKvScales`] when the bundle has none.
+    fn kv_scales_for<'m>(&'m self, cache: &KvCache)
+                         -> Result<Option<&'m [KvLayerScales]>, EngineError> {
+        match cache.dtype() {
+            KvDtype::F32 => Ok(None),
+            KvDtype::Int8 => self
+                .model
+                .kv
+                .as_deref()
+                .map(Some)
+                .ok_or(EngineError::MissingKvScales),
+        }
+    }
+
+    /// One query row attended over layer `l` of `cache`, dispatching on
+    /// the cache dtype: f32 storage runs the seed `attend_one`, int8
+    /// storage runs the integer-domain path (`quant::kv::attend_one_i8`).
+    /// Both are per-row order-fixed, so the §7 bitwise-determinism
+    /// guarantee holds for either dtype.
+    #[allow(clippy::too_many_arguments)]
+    fn attend_cached(&self, cache: &KvCache, kvsc: Option<&[KvLayerScales]>,
+                     l: usize, q: &[f32], klen: usize,
+                     scores: &mut Vec<f32>, qq: &mut Vec<i8>,
+                     out: &mut [f32]) {
+        let cfg = &self.model.config;
+        match cache.dtype() {
+            KvDtype::F32 => self.attend_one(q, cache.layer_k_f32(l),
+                                            cache.layer_v_f32(l), cfg.d_model,
+                                            klen, scores, out),
+            KvDtype::Int8 => {
+                let sc = &kvsc.expect("validated int8 KV scales")[l];
+                kv::attend_one_i8(q, cache.layer_k_i8(l), cache.layer_v_i8(l),
+                                  sc, cfg.d_model, klen, cfg.n_heads, scores,
+                                  qq, out);
+            }
+        }
+    }
+
     // ------------------------------------------------------------------
     // Prefill
     // ------------------------------------------------------------------
@@ -389,13 +533,24 @@ impl Engine {
     /// in `ws.logits`. With `cache.len == 0` this is a plain prefill; with
     /// a non-empty cache it implements *chunked prefill* (the scheduler
     /// bounds decode stalls with it) and multi-turn prompt reuse.
+    ///
+    /// Capacity and KV-scale availability are validated **before** any
+    /// state is touched: an `Err` leaves `cache` and `ws` unchanged.
     pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache,
-                   ws: &mut Workspace) {
+                   ws: &mut Workspace) -> Result<(), EngineError> {
         let cfg = &self.model.config;
         let (d, ff, vocab) = (cfg.d_model, cfg.d_ff, cfg.vocab);
         let t = tokens.len();
         let m = t;
         let start = cache.len;
+        if start + t > cache.cap {
+            return Err(EngineError::KvOverflow {
+                lane: 0,
+                pos: start + t - 1,
+                cap: cache.cap,
+            });
+        }
+        let kvsc = self.kv_scales_for(cache)?;
         let positions: Vec<usize> = (start..start + t).collect();
 
         self.embed(tokens, &mut ws.x);
@@ -441,25 +596,27 @@ impl Engine {
             self.rope(&mut ws.kbuf, m, &positions);
             for i in 0..t {
                 cache.write(l, start + i, &ws.kbuf[i * d..(i + 1) * d],
-                            &ws.vbuf[i * d..(i + 1) * d]);
+                            &ws.vbuf[i * d..(i + 1) * d],
+                            kvsc.map(|s| &s[l]));
             }
             // Causal attention over cached K/V — parallel across blocks
             // of query rows. Each task owns a disjoint slice of `attn`
             // and a private score buffer; per-row math is identical to
             // the serial path, so results are bitwise independent of the
-            // thread count (DESIGN.md §7).
+            // thread count (DESIGN.md §7) for both KV dtypes.
+            let cache_ref: &KvCache = cache;
             if self.pool.threads() == 1 {
                 for i in 0..t {
-                    self.attend_one(&ws.qbuf[i * d..(i + 1) * d],
-                                    cache.layer_k(l), cache.layer_v(l),
-                                    d, start + i + 1, &mut ws.scores,
-                                    &mut ws.attn[i * d..(i + 1) * d]);
+                    self.attend_cached(cache_ref, kvsc, l,
+                                       &ws.qbuf[i * d..(i + 1) * d],
+                                       start + i + 1, &mut ws.scores,
+                                       &mut ws.qint,
+                                       &mut ws.attn[i * d..(i + 1) * d]);
                 }
             } else {
                 // Oversubscribe 4× — later rows attend to longer
                 // prefixes, so equal-size blocks are unequal work.
                 let rows = t.div_ceil(self.pool.threads() * 4).max(1);
-                let (kc, vc) = (cache.layer_k(l), cache.layer_v(l));
                 let qb = &ws.qbuf;
                 let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
                 for (bi, ablock) in
@@ -467,11 +624,13 @@ impl Engine {
                 {
                     tasks.push(Box::new(move || {
                         let mut scores = Vec::new();
+                        let mut qq = Vec::new();
                         for (ri, arow) in ablock.chunks_mut(d).enumerate() {
                             let i = bi * rows + ri;
-                            self.attend_one(&qb[i * d..(i + 1) * d], kc, vc,
-                                            d, start + i + 1, &mut scores,
-                                            arow);
+                            self.attend_cached(cache_ref, kvsc, l,
+                                               &qb[i * d..(i + 1) * d],
+                                               start + i + 1, &mut scores,
+                                               &mut qq, arow);
                         }
                     }));
                 }
@@ -544,6 +703,7 @@ impl Engine {
         ws.logits.resize(m * vocab, 0.0);
         par_gemm_f32(&self.pool, &ws.h, &self.model.lm_head_t, m, d, vocab,
                      &mut ws.logits);
+        Ok(())
     }
 
     // ------------------------------------------------------------------
@@ -551,15 +711,32 @@ impl Engine {
     // ------------------------------------------------------------------
 
     /// One decode step for a batch of sequences. `tokens[i]` is the next
-    /// input token of sequence i; each sequence attends to its own cache.
-    /// Returns logits (B, vocab) in `ws.logits`.
+    /// input token of sequence i; each sequence attends to its own cache
+    /// (lanes may mix KV dtypes). Returns logits (B, vocab) in
+    /// `ws.logits`.
+    ///
+    /// All lanes are validated **before** any state is touched: an `Err`
+    /// names the offending lane and leaves every cache unchanged.
     pub fn decode_batch(&self, tokens: &[u32], caches: &mut [&mut KvCache],
-                        ws: &mut Workspace) {
+                        ws: &mut Workspace) -> Result<(), EngineError> {
         let cfg = &self.model.config;
         let (d, ff, vocab) = (cfg.d_model, cfg.d_ff, cfg.vocab);
         let b = tokens.len();
         assert_eq!(caches.len(), b);
         let m = b;
+        for (i, c) in caches.iter().enumerate() {
+            if c.len >= c.cap {
+                return Err(EngineError::KvOverflow {
+                    lane: i,
+                    pos: c.len,
+                    cap: c.cap,
+                });
+            }
+        }
+        let lane_scales: Vec<Option<&[KvLayerScales]>> = caches
+            .iter()
+            .map(|c| self.kv_scales_for(c))
+            .collect::<Result<_, _>>()?;
         let positions: Vec<usize> = caches.iter().map(|c| c.len).collect();
 
         self.embed(tokens, &mut ws.x);
@@ -605,21 +782,24 @@ impl Engine {
             for (i, cache) in caches.iter_mut().enumerate() {
                 let pos = positions[i];
                 cache.write(l, pos, &ws.kbuf[i * d..(i + 1) * d],
-                            &ws.vbuf[i * d..(i + 1) * d]);
+                            &ws.vbuf[i * d..(i + 1) * d],
+                            lane_scales[i].map(|s| &s[l]));
             }
             // Attention — parallel across batch lanes: each lane reads
             // its own cache and writes its own `attn` row, so lanes are
-            // fully independent (DESIGN.md §7).
+            // fully independent (DESIGN.md §7) for both KV dtypes.
             if self.pool.threads() == 1 || b == 1 {
                 for (i, cache) in caches.iter().enumerate() {
-                    self.attend_one(&ws.qbuf[i * d..(i + 1) * d],
-                                    cache.layer_k(l), cache.layer_v(l),
-                                    d, positions[i] + 1, &mut ws.scores,
-                                    &mut ws.attn[i * d..(i + 1) * d]);
+                    self.attend_cached(cache, lane_scales[i], l,
+                                       &ws.qbuf[i * d..(i + 1) * d],
+                                       positions[i] + 1, &mut ws.scores,
+                                       &mut ws.qint,
+                                       &mut ws.attn[i * d..(i + 1) * d]);
                 }
             } else {
                 let qb = &ws.qbuf;
                 let lanes: &[&mut KvCache] = &*caches;
+                let lsc = &lane_scales;
                 let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
                 for (i, (cache, arow)) in lanes
                     .iter()
@@ -629,9 +809,10 @@ impl Engine {
                     let klen = positions[i] + 1;
                     tasks.push(Box::new(move || {
                         let mut scores = Vec::new();
-                        self.attend_one(&qb[i * d..(i + 1) * d],
-                                        cache.layer_k(l), cache.layer_v(l),
-                                        d, klen, &mut scores, arow);
+                        let mut qq = Vec::new();
+                        self.attend_cached(cache, lsc[i], l,
+                                           &qb[i * d..(i + 1) * d], klen,
+                                           &mut scores, &mut qq, arow);
                     }));
                 }
                 self.pool.run(tasks);
@@ -682,16 +863,28 @@ impl Engine {
         ws.logits.resize(m * vocab, 0.0);
         par_gemm_f32(&self.pool, &ws.h, &self.model.lm_head_t, m, d, vocab,
                      &mut ws.logits);
+        Ok(())
     }
 
-    /// Greedy generation helper (examples / integration tests).
+    /// Greedy generation helper (examples / integration tests), f32 KV.
+    /// Sizes its own cache, so the only failure mode is a prompt longer
+    /// than `max_seq` — kept panicking for call-site brevity.
     pub fn generate(&self, prompt: &[u32], max_new: usize, max_seq: usize)
                     -> Vec<u32> {
+        self.generate_with(prompt, max_new, max_seq, KvDtype::F32)
+            .expect("generate: prompt exceeds max_seq")
+    }
+
+    /// Greedy generation over an explicit KV-cache dtype.
+    pub fn generate_with(&self, prompt: &[u32], max_new: usize,
+                         max_seq: usize, kv_dtype: KvDtype)
+                         -> Result<Vec<u32>, EngineError> {
         let cfg = &self.model.config;
-        let mut cache = KvCache::new(cfg.n_layers, max_seq, cfg.d_model);
+        let mut cache =
+            KvCache::with_dtype(kv_dtype, cfg.n_layers, max_seq, cfg.d_model);
         let mut ws = Workspace::new();
         // prefill all but the last prompt token, then step
-        self.prefill(prompt, &mut cache, &mut ws);
+        self.prefill(prompt, &mut cache, &mut ws)?;
         let vocab = cfg.vocab;
         let last = &ws.logits[(prompt.len() - 1) * vocab..prompt.len() * vocab];
         let mut next = argmax(last) as u32;
@@ -702,11 +895,71 @@ impl Engine {
             }
             let toks = [next];
             let mut caches = [&mut cache];
-            self.decode_batch(&toks, &mut caches, &mut ws);
+            self.decode_batch(&toks, &mut caches, &mut ws)?;
             next = argmax(&ws.logits[..vocab]) as u32;
             out.push(next);
         }
-        out
+        Ok(out)
+    }
+
+    /// Attach probe-calibrated KV scales when the bundle carries none
+    /// (pre-format-2 `.qmod`, fp16 baselines, synthetic models) so the
+    /// int8-KV path serves everywhere. No-op for format-2 bundles — the
+    /// single shared fallback behind the scheduler, CLI, benches and
+    /// tests.
+    pub fn ensure_kv_scales(&mut self) -> Result<(), EngineError> {
+        if self.model.kv.is_some() {
+            return Ok(());
+        }
+        let vocab = self.model.config.vocab as u32;
+        let probe: Vec<u32> =
+            (0..48u32).map(|i| (3 + i * 7) % vocab.max(1)).collect();
+        let scales = self.calibrate_kv_scales(&probe)?;
+        self.model.kv = Some(scales);
+        Ok(())
+    }
+
+    /// Probe-based KV-scale calibration fallback: prefill `probe` through
+    /// an f32 cache and derive per-channel K/V scales from the observed
+    /// absmax. Per-head score scales approximate Q ranges by the K ranges
+    /// (the two are projections of the same normed input; nothing binds
+    /// their magnitudes, so this is a heuristic) with 3× clamp headroom —
+    /// Q̂ saturates only if per-head |Q| exceeds 3× |K|, at the cost of
+    /// ~1% extra score quantization error. The *real* path is build-time
+    /// calibration in `python/compile` (format-2 bundles carry exact
+    /// per-head Q statistics); prefer [`Engine::ensure_kv_scales`] unless
+    /// a specific probe is needed.
+    pub fn calibrate_kv_scales(&self, probe: &[u32])
+                               -> Result<Vec<KvLayerScales>, EngineError> {
+        let cfg = &self.model.config;
+        let (d, h) = (cfg.d_model, cfg.n_heads);
+        let hd = cfg.head_dim();
+        let qmax = kv::KV_QMAX as f32;
+        let mut cache = KvCache::new(cfg.n_layers, probe.len().max(1), d);
+        let mut ws = Workspace::new();
+        self.prefill(probe, &mut cache, &mut ws)?;
+        let t = cache.len;
+        let mut out = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let (kc, vc) = (cache.layer_k_f32(l), cache.layer_v_f32(l));
+            let absmax = |plane: &[f32], c: usize| {
+                (0..t).fold(1e-6f32, |a, r| a.max(plane[r * d + c].abs()))
+            };
+            let kabs: Vec<f32> = (0..d).map(|c| absmax(kc, c)).collect();
+            let k_scale: Vec<f32> = kabs.iter().map(|a| a / qmax).collect();
+            let v_scale: Vec<f32> =
+                (0..d).map(|c| absmax(vc, c) / qmax).collect();
+            let qk_scale: Vec<f32> = (0..h)
+                .map(|hh| {
+                    (0..hd).fold(1e-12f32, |a, i| {
+                        let c = hh * hd + i;
+                        a.max(kabs[c] * k_scale[c])
+                    }) * 3.0 / qmax
+                })
+                .collect();
+            out.push(KvLayerScales::new(k_scale, v_scale, qk_scale));
+        }
+        Ok(out)
     }
 }
 

@@ -8,6 +8,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::quant::kv::KvLayerScales;
 use crate::quant::pack::pack_int4;
 use crate::util::json::Json;
 
@@ -145,6 +146,10 @@ pub struct QModel {
     pub final_norm: Vec<f32>,  // (d,)
     pub lm_head_t: Vec<f32>,   // (vocab, d) transposed
     pub layers: Vec<LayerWeights>,
+    /// Calibrated per-layer KV-cache scales (format-2 bundles; `None` for
+    /// older bundles — the engine then refuses `kv_cache=int8` with a
+    /// typed error rather than guessing scales).
+    pub kv: Option<Vec<KvLayerScales>>,
 }
 
 struct Blob<'a> {
@@ -378,12 +383,30 @@ impl QModel {
         let (v, d) = (config.vocab, config.d_model);
         let lm_head = blob.f32("lm_head")?; // (d, v)
         let mut layers = Vec::new();
+        let mut kv_layers: Vec<KvLayerScales> = Vec::new();
         for lm in meta
             .req("layers")
             .map_err(anyhow::Error::msg)?
             .as_arr()
             .context("layers")?
         {
+            // Optional per-layer calibrated KV scales (format 2).
+            if let Some(kvm) = lm.get("kv") {
+                let k_scale =
+                    blob.f32(kvm.req_str("k_scale").map_err(anyhow::Error::msg)?)?;
+                let v_scale =
+                    blob.f32(kvm.req_str("v_scale").map_err(anyhow::Error::msg)?)?;
+                let qk_scale =
+                    blob.f32(kvm.req_str("qk_scale").map_err(anyhow::Error::msg)?)?;
+                if k_scale.len() != d || v_scale.len() != d
+                    || qk_scale.len() != config.n_heads
+                {
+                    bail!("kv scale shapes ({}, {}, {}) do not match \
+                           d={d} heads={}", k_scale.len(), v_scale.len(),
+                          qk_scale.len(), config.n_heads);
+                }
+                kv_layers.push(KvLayerScales::new(k_scale, v_scale, qk_scale));
+            }
             layers.push(LayerWeights {
                 attn_norm: load_norm(&blob, lm.req("attn_norm").map_err(anyhow::Error::msg)?)?,
                 q: load_linear(&blob, lm.req("q").map_err(anyhow::Error::msg)?)?,
@@ -396,6 +419,10 @@ impl QModel {
                 down: load_linear(&blob, lm.req("down").map_err(anyhow::Error::msg)?)?,
             });
         }
+        if !kv_layers.is_empty() && kv_layers.len() != layers.len() {
+            bail!("kv scales on {} of {} layers (must be all or none)",
+                  kv_layers.len(), layers.len());
+        }
         Ok(QModel {
             config,
             method: meta.req_str("method").map_err(anyhow::Error::msg)?.into(),
@@ -404,6 +431,7 @@ impl QModel {
             final_norm: blob.f32("final_norm")?,
             lm_head_t: transpose_f32(&lm_head, d, v),
             layers,
+            kv: if kv_layers.is_empty() { None } else { Some(kv_layers) },
         })
     }
 
@@ -421,6 +449,9 @@ impl QModel {
             for lin in [&l.q, &l.k, &l.v, &l.o, &l.gate, &l.up, &l.down] {
                 total += lin.resident_bytes();
             }
+        }
+        if let Some(kv) = &self.kv {
+            total += kv.iter().map(|s| s.resident_bytes()).sum::<usize>();
         }
         total
     }

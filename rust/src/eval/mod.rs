@@ -28,7 +28,7 @@ pub fn perplexity(engine: &Engine, tokens: &[u32], seq: usize) -> f64 {
     for w in 0..n {
         let x = &tokens[w * seq..(w + 1) * seq];
         cache.reset();
-        engine.prefill(x, &mut cache, &mut ws);
+        engine.prefill(x, &mut cache, &mut ws).expect("eval window fits cache");
         for i in 0..seq {
             let target = tokens[w * seq + i + 1] as usize;
             let row = &ws.logits[i * vocab..(i + 1) * vocab];
@@ -92,7 +92,7 @@ pub fn choice_accuracy(engine: &Engine, items: &[ChoiceItem]) -> f64 {
             toks.extend_from_slice(ch);
             let mut cache =
                 KvCache::new(cfg.n_layers, toks.len(), cfg.d_model);
-            engine.prefill(&toks, &mut cache, &mut ws);
+            engine.prefill(&toks, &mut cache, &mut ws).expect("choice fits cache");
             let mut ll = 0f64;
             for pos in it.prefix.len() - 1..toks.len() - 1 {
                 let row = &ws.logits[pos * vocab..(pos + 1) * vocab];

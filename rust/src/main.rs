@@ -47,7 +47,8 @@ fn run() -> Result<()> {
             eprintln!(
                 "mergequant — 4-bit static quantization serving stack\n\
                  usage: mergequant <serve|eval|generate|inspect|runtime> \
-                 [--model NAME] [--method NAME] [--threads N] …\n\
+                 [--model NAME] [--method NAME] [--threads N] \
+                 [--kv-cache f32|int8] …\n\
                  (got {other:?})"
             );
             bail!("unknown subcommand");
@@ -75,13 +76,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Intra-op kernel threads (0 = all cores); the scheduler applies it.
     cfg.scheduler.threads =
         args.get_usize("threads", cfg.scheduler.threads);
+    // KV-cache storage dtype (f32 | int8); the scheduler sizes its slabs
+    // with it (int8 = 4× more servable KV per box, DESIGN.md §10).
+    if let Some(kv) = args.get("kv-cache") {
+        cfg.scheduler.kv_dtype = mergequant::engine::KvDtype::parse(kv)
+            .with_context(|| format!("bad --kv-cache {kv:?} (f32|int8)"))?;
+    }
 
     let engine = load_engine(&cfg.model, &cfg.method)?;
-    println!("serving {} / {} (params ~{:.1} MB quantized, {} kernel thread(s))",
+    println!("serving {} / {} (params ~{:.1} MB quantized, {} kernel \
+              thread(s), kv {})",
              cfg.model, cfg.method,
              engine.model.weight_bytes() as f64 / 1e6,
              mergequant::quant::parallel::ThreadPool::resolve(
-                 cfg.scheduler.threads));
+                 cfg.scheduler.threads),
+             cfg.scheduler.kv_dtype.as_str());
     let server = std::sync::Arc::new(Server::start(engine, cfg.scheduler.clone()));
     let gateway = TcpGateway::start(server.clone(), cfg.port)?;
     println!("listening on {}", gateway.addr);
@@ -127,18 +136,23 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_generate(args: &Args) -> Result<()> {
     let model = args.get_or("model", "tiny-llama-s");
     let method = args.get_or("method", "mergequant");
+    let kv = mergequant::engine::KvDtype::parse(args.get_or("kv-cache", "f32"))
+        .context("bad --kv-cache (f32|int8)")?;
     let mut engine = load_engine(model, method)?;
     engine.set_threads(args.get_usize("threads", 1));
+    if kv == mergequant::engine::KvDtype::Int8 {
+        engine.ensure_kv_scales()?;
+    }
     let prompt: Vec<u32> = args
         .get_or("prompt", "1,17,42,99")
         .split(',')
         .filter_map(|t| t.trim().parse().ok())
         .collect();
     let max_new = args.get_usize("max-new", 32);
-    let out = engine.generate(&prompt, max_new,
-                              prompt.len() + max_new + 8);
+    let out = engine.generate_with(&prompt, max_new,
+                                   prompt.len() + max_new + 8, kv)?;
     println!("prompt:     {prompt:?}");
-    println!("completion: {out:?}");
+    println!("completion: {out:?} (kv {})", kv.as_str());
     Ok(())
 }
 
@@ -152,10 +166,14 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     println!("config  : d={} heads={} ff={} layers={} vocab={}",
              cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.n_layers, cfg.vocab);
     println!("weights : {:.2} MB resident", m.weight_bytes() as f64 / 1e6);
+    println!("kv scales: {}",
+             if m.kv.is_some() { "calibrated (format 2)" } else { "absent" });
+    let kv_dtype = mergequant::engine::KvDtype::parse(
+        args.get_or("kv-cache", "f32")).context("bad --kv-cache")?;
     let mb = mergequant::engine::memory::account_model(
-        m, args.get_usize("batch", 1), args.get_usize("seq", 2048));
-    println!("memory(batch-1, seq-2048 decode): total {:.2} MB",
-             mb.total() as f64 / 1e6);
+        m, args.get_usize("batch", 1), args.get_usize("seq", 2048), kv_dtype);
+    println!("memory(batch-1, seq-2048 decode, kv {}): total {:.2} MB",
+             kv_dtype.as_str(), mb.total() as f64 / 1e6);
     println!("  weights={:.2}MB kv={:.2}MB act={:.3}MB dyn_overhead={:.3}MB recon={:.3}MB",
              mb.weights as f64 / 1e6, mb.kv_cache as f64 / 1e6,
              mb.activations as f64 / 1e6, mb.dynamic_overhead as f64 / 1e6,

@@ -1,0 +1,311 @@
+//! Statically-quantized INT8 KV cache: per-channel scales + the
+//! integer-domain attention kernels (DESIGN.md §10).
+//!
+//! The KV cache is the MergeQuant thesis applied to attention state: all
+//! scale math happens at **calibration time** (`python/compile`), the
+//! `.qmod` bundle carries per-channel static scales, and decode adds zero
+//! dynamic quantization passes — every runtime op below uses only
+//! precomputed multipliers.
+//!
+//! Scale algebra (per layer, d = H·hd channels):
+//!
+//! * `k_scale[c] = absmax_c(K) / 127` — per-channel K quantizer;
+//!   `K̂[t,c] = round(K[t,c] / k_scale[c])`.
+//! * `v_scale[c] = absmax_c(V) / 127` — per-channel V quantizer.
+//! * `qk_scale[h] = max_{c∈h} (absmax_c(Q) · k_scale[c]) / 127` — the
+//!   per-head score scale. Q is quantized with the **K channel scales
+//!   folded in**: `Q̂[c] = round(Q[c] · k_scale[c] / qk_scale[h])`, so
+//!   the per-channel factors cancel inside the i8×i8 dot and
+//!   `Q·Kᵀ ≈ dot_i8(Q̂, K̂) · qk_scale[h]` — the two static scales
+//!   collapse into one scalar folded into the softmax pre-scale
+//!   (`qk_scale[h] / √hd`), exactly the Eq.-5 shape: integer GEMM +
+//!   scalar epilogue.
+//! * `prob × V` accumulates `Σ_t p_t · V̂[t,c]` with the i8 values cast
+//!   in the inner loop and applies `v_scale[c]` **once per output
+//!   column** in the epilogue.
+
+use crate::quant::gemm::dot_i8;
+
+/// INT8 code range for the KV cache (symmetric, 8-bit).
+pub const KV_QMAX: i32 = 127;
+
+/// KV-cache element type. `F32` is the paper-parity baseline; `Int8`
+/// stores K/V as per-channel statically-quantized int8 (4× smaller).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvDtype {
+    /// Full-precision cache (seed behaviour, default).
+    F32,
+    /// Per-channel static INT8 cache (calibrated scales from the bundle).
+    Int8,
+}
+
+impl KvDtype {
+    /// Bytes per stored K or V element.
+    pub fn bytes_per_elt(self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::Int8 => 1,
+        }
+    }
+
+    /// Parse a config/CLI spelling (`"f32"` | `"int8"`).
+    pub fn parse(s: &str) -> Option<KvDtype> {
+        match s {
+            "f32" | "fp32" => Some(KvDtype::F32),
+            "int8" | "i8" => Some(KvDtype::Int8),
+            _ => None,
+        }
+    }
+
+    /// Canonical config spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::Int8 => "int8",
+        }
+    }
+}
+
+/// Calibrated per-layer KV quantization scales, with every runtime
+/// multiplier precomputed at load time (nothing on the decode path ever
+/// divides or recomputes a scale).
+#[derive(Clone, Debug)]
+pub struct KvLayerScales {
+    /// (d,) per-channel K scales (dequant multipliers).
+    pub k_scale: Vec<f32>,
+    /// (d,) precomputed `1 / k_scale` (K quantize multipliers).
+    pub k_inv: Vec<f32>,
+    /// (d,) per-channel V scales (the per-column PV epilogue).
+    pub v_scale: Vec<f32>,
+    /// (d,) precomputed `1 / v_scale` (V quantize multipliers).
+    pub v_inv: Vec<f32>,
+    /// (H,) per-head score scales `qk_scale[h]`.
+    pub qk_scale: Vec<f32>,
+    /// (d,) precomputed Q quantize multipliers `k_scale[c] / qk_scale[h(c)]`.
+    pub q_mult: Vec<f32>,
+}
+
+impl KvLayerScales {
+    /// Build from raw calibrated scales; `d = k_scale.len()` must be a
+    /// multiple of `qk_scale.len()` (the head count).
+    pub fn new(k_scale: Vec<f32>, v_scale: Vec<f32>, qk_scale: Vec<f32>)
+               -> Self {
+        let d = k_scale.len();
+        let h = qk_scale.len();
+        assert_eq!(v_scale.len(), d, "v_scale length");
+        assert!(h > 0 && d % h == 0, "head count {h} must divide d {d}");
+        let hd = d / h;
+        let floor = |v: f32| if v > 1e-12 { v } else { 1e-12 };
+        let k_scale: Vec<f32> = k_scale.into_iter().map(floor).collect();
+        let v_scale: Vec<f32> = v_scale.into_iter().map(floor).collect();
+        let qk_scale: Vec<f32> = qk_scale.into_iter().map(floor).collect();
+        let k_inv = k_scale.iter().map(|s| 1.0 / s).collect();
+        let v_inv = v_scale.iter().map(|s| 1.0 / s).collect();
+        let q_mult = (0..d).map(|c| k_scale[c] / qk_scale[c / hd]).collect();
+        KvLayerScales { k_scale, k_inv, v_scale, v_inv, qk_scale, q_mult }
+    }
+
+    /// Resident bytes of the scale payload (Table 3 accounting).
+    pub fn resident_bytes(&self) -> usize {
+        (self.k_scale.len() + self.k_inv.len() + self.v_scale.len()
+            + self.v_inv.len() + self.qk_scale.len() + self.q_mult.len()) * 4
+    }
+}
+
+/// Quantize one (d,) row with per-channel multipliers: `out[c] =
+/// clamp(round(src[c] · mult[c]), ±127)`. Round-half-away semantics match
+/// the weight pipeline (`f32::round`). Pure element-wise — no absmax
+/// reduction, no scale computation: this is a *static* pass.
+#[inline]
+pub fn quantize_row_i8(src: &[f32], mult: &[f32], out: &mut [i8]) {
+    for ((o, &x), &m) in out.iter_mut().zip(src).zip(mult) {
+        *o = (x * m).round().clamp(-(KV_QMAX as f32), KV_QMAX as f32) as i8;
+    }
+}
+
+/// Dequantize one (d,) int8 row with per-channel scales (tests / debug).
+#[inline]
+pub fn dequantize_row_i8(src: &[i8], scale: &[f32], out: &mut [f32]) {
+    for ((o, &q), &s) in out.iter_mut().zip(src).zip(scale) {
+        *o = q as f32 * s;
+    }
+}
+
+/// One attention pass for a single query row over an **int8** cached K/V
+/// region of length `klen` — the integer-domain mirror of the engine's
+/// f32 `attend_one`. `q` is the f32 query row (d,); `kq`/`vq` are the
+/// layer's int8 cache planes with row stride `cache_stride`; `out` is the
+/// (d,) context row. `scores` and `qq` are caller scratch (so parallel
+/// tasks keep private buffers; per-row math is order-fixed and therefore
+/// bitwise identical for every thread count, DESIGN.md §7).
+///
+/// Per head: Q̂ = round(q · q_mult) once; scores via exact i8×i8→i32 dots
+/// rescaled by the single folded scalar `qk_scale[h] / √hd`; softmax in
+/// f32; context as `Σ_t p_t·V̂[t,c]` with the per-column `v_scale`
+/// epilogue at the end.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_one_i8(q: &[f32], kq: &[i8], vq: &[i8], sc: &KvLayerScales,
+                     cache_stride: usize, klen: usize, n_heads: usize,
+                     scores: &mut Vec<f32>, qq: &mut Vec<i8>,
+                     out: &mut [f32]) {
+    let d = q.len();
+    let hd = d / n_heads;
+    let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    scores.resize(klen, 0.0);
+    qq.resize(hd, 0);
+    for head in 0..n_heads {
+        let lo = head * hd;
+        // Static Q quantization: per-channel multipliers precomputed at
+        // load (k_scale folded in), one rounding pass per head.
+        quantize_row_i8(&q[lo..lo + hd], &sc.q_mult[lo..lo + hd], qq);
+        let pre = sc.qk_scale[head] * inv_sqrt;
+        // scores: i8×i8 → i32, one scalar rescale (Eq. 5 shape)
+        let mut maxv = f32::NEG_INFINITY;
+        for t in 0..klen {
+            let kh = &kq[t * cache_stride + lo..t * cache_stride + lo + hd];
+            let s = dot_i8(qq, kh) as f32 * pre;
+            scores[t] = s;
+            maxv = maxv.max(s);
+        }
+        // softmax (f32, identical shape to the f32 path)
+        let mut denom = 0f32;
+        for s in scores[..klen].iter_mut() {
+            *s = (*s - maxv).exp();
+            denom += *s;
+        }
+        let inv = 1.0 / denom;
+        // prob × V: accumulate over int8 V, dequantize per-column once
+        let oh = &mut out[lo..lo + hd];
+        oh.fill(0.0);
+        for t in 0..klen {
+            let w = scores[t] * inv;
+            let vh = &vq[t * cache_stride + lo..t * cache_stride + lo + hd];
+            for c in 0..hd {
+                oh[c] += w * vh[c] as f32;
+            }
+        }
+        // per-column dequant epilogue
+        for (o, &s) in oh.iter_mut().zip(&sc.v_scale[lo..lo + hd]) {
+            *o *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        let mut rng = Rng::new(7);
+        let d = 64;
+        let scale: Vec<f32> = (0..d).map(|_| 0.01 + rng.f32() * 0.2).collect();
+        let inv: Vec<f32> = scale.iter().map(|s| 1.0 / s).collect();
+        // values within the representable range |x| <= 127·s
+        let x: Vec<f32> = (0..d)
+            .map(|c| (rng.f32() * 2.0 - 1.0) * scale[c] * 127.0)
+            .collect();
+        let mut q = vec![0i8; d];
+        quantize_row_i8(&x, &inv, &mut q);
+        let mut back = vec![0f32; d];
+        dequantize_row_i8(&q, &scale, &mut back);
+        for c in 0..d {
+            assert!((x[c] - back[c]).abs() <= scale[c] / 2.0 + 1e-6,
+                    "channel {c}: {} vs {} (scale {})",
+                    x[c], back[c], scale[c]);
+        }
+    }
+
+    #[test]
+    fn attend_i8_matches_f32_reference_closely() {
+        // Build a tiny random K/V block, quantize it, and compare the
+        // integer attention against an exact f32 attention on the
+        // dequantized values — the only error left is Q quantization.
+        let mut rng = Rng::new(11);
+        let (h, hd, klen) = (2, 16, 9);
+        let d = h * hd;
+        let kf: Vec<f32> = (0..klen * d).map(|_| rng.normal()).collect();
+        let vf: Vec<f32> = (0..klen * d).map(|_| rng.normal()).collect();
+        let q: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let absmax = |xs: &[f32], c: usize| {
+            (0..klen).fold(0f32, |a, t| a.max(xs[t * d + c].abs())).max(1e-3)
+        };
+        let k_scale: Vec<f32> =
+            (0..d).map(|c| absmax(&kf, c) / 127.0).collect();
+        let v_scale: Vec<f32> =
+            (0..d).map(|c| absmax(&vf, c) / 127.0).collect();
+        let qk: Vec<f32> = (0..h)
+            .map(|hh| {
+                (0..hd).fold(0f32, |a, i| {
+                    let c = hh * hd + i;
+                    a.max(q[c].abs() * k_scale[c])
+                }) / 127.0
+            })
+            .collect();
+        let sc = KvLayerScales::new(k_scale.clone(), v_scale.clone(), qk);
+        let mut kq = vec![0i8; klen * d];
+        let mut vq = vec![0i8; klen * d];
+        for t in 0..klen {
+            quantize_row_i8(&kf[t * d..(t + 1) * d], &sc.k_inv,
+                            &mut kq[t * d..(t + 1) * d]);
+            quantize_row_i8(&vf[t * d..(t + 1) * d], &sc.v_inv,
+                            &mut vq[t * d..(t + 1) * d]);
+        }
+        let mut scores = Vec::new();
+        let mut qqb = Vec::new();
+        let mut got = vec![0f32; d];
+        attend_one_i8(&q, &kq, &vq, &sc, d, klen, h, &mut scores, &mut qqb,
+                      &mut got);
+        // f32 reference on the *dequantized* K/V
+        let mut kd = vec![0f32; klen * d];
+        let mut vd = vec![0f32; klen * d];
+        for t in 0..klen {
+            dequantize_row_i8(&kq[t * d..(t + 1) * d], &sc.k_scale,
+                              &mut kd[t * d..(t + 1) * d]);
+            dequantize_row_i8(&vq[t * d..(t + 1) * d], &sc.v_scale,
+                              &mut vd[t * d..(t + 1) * d]);
+        }
+        let mut want = vec![0f32; d];
+        let inv_sqrt = 1.0 / (hd as f32).sqrt();
+        for head in 0..h {
+            let lo = head * hd;
+            let mut sc_row = vec![0f32; klen];
+            let mut maxv = f32::NEG_INFINITY;
+            for t in 0..klen {
+                let mut s = 0f32;
+                for c in 0..hd {
+                    s += q[lo + c] * kd[t * d + lo + c];
+                }
+                sc_row[t] = s * inv_sqrt;
+                maxv = maxv.max(sc_row[t]);
+            }
+            let mut denom = 0f32;
+            for s in sc_row.iter_mut() {
+                *s = (*s - maxv).exp();
+                denom += *s;
+            }
+            for t in 0..klen {
+                let w = sc_row[t] / denom;
+                for c in 0..hd {
+                    want[lo + c] += w * vd[t * d + lo + c];
+                }
+            }
+        }
+        for c in 0..d {
+            assert!((got[c] - want[c]).abs() < 0.05,
+                    "channel {c}: {} vs {}", got[c], want[c]);
+        }
+    }
+
+    #[test]
+    fn dtype_parse_and_bytes() {
+        assert_eq!(KvDtype::parse("int8"), Some(KvDtype::Int8));
+        assert_eq!(KvDtype::parse("f32"), Some(KvDtype::F32));
+        assert_eq!(KvDtype::parse("weird"), None);
+        assert_eq!(KvDtype::Int8.bytes_per_elt(), 1);
+        assert_eq!(KvDtype::F32.bytes_per_elt(), 4);
+        assert_eq!(KvDtype::parse(KvDtype::Int8.as_str()), Some(KvDtype::Int8));
+    }
+
+}

@@ -10,6 +10,10 @@
 //!   C.1), MergeQuant's only runtime addition.
 //! * [`hadamard`] — online block-FWHT(64) used by the `+hadamard`
 //!   variants; bit-matches the Python `quant.hadamard.fwht_block64`.
+//! * [`kv`] — statically-quantized INT8 KV cache: per-channel calibrated
+//!   scales and the integer-domain attention kernels (QK^T as i8×i8→i32
+//!   with the scales folded into the softmax pre-scale; prob×V with a
+//!   per-column dequant epilogue; DESIGN.md §10).
 //! * [`parallel`] — the parallel execution subsystem: a persistent scoped
 //!   worker pool plus cache-blocked, output-tiled variants of the f32 /
 //!   INT8 / packed-INT4 kernels, bitwise identical to the serial ones for
@@ -20,6 +24,7 @@
 pub mod dynamic;
 pub mod gemm;
 pub mod hadamard;
+pub mod kv;
 pub mod pack;
 pub mod parallel;
 pub mod reconstruct;

@@ -9,7 +9,7 @@
 //!   agree on the same tokens.
 
 use mergequant::artifacts_dir;
-use mergequant::engine::{Engine, KvCache, QModel, Workspace};
+use mergequant::engine::{Engine, KvCache, KvDtype, QModel, Workspace};
 use mergequant::eval::corpus::{load_f32, load_json, load_tokens};
 
 fn goldens_available() -> bool {
@@ -42,7 +42,8 @@ fn engine_logits(engine: &Engine, toks: &[u32], b: usize, t: usize)
     let mut ws = Workspace::new();
     for bi in 0..b {
         let mut cache = KvCache::new(cfg.n_layers, t, cfg.d_model);
-        engine.prefill(&toks[bi * t..(bi + 1) * t], &mut cache, &mut ws);
+        engine.prefill(&toks[bi * t..(bi + 1) * t], &mut cache, &mut ws)
+            .expect("golden prefill");
         out.extend_from_slice(&ws.logits[..t * cfg.vocab]);
     }
     out
@@ -109,6 +110,36 @@ fn greedy_decode_matches_golden() {
     let got = engine.generate(&prompt, want.len(),
                               prompt.len() + want.len() + 4);
     assert_eq!(got, want, "greedy decode must be token-exact");
+}
+
+#[test]
+fn int8_kv_greedy_decode_matches_f32_kv_on_bundle() {
+    // Acceptance bar for the statically-quantized KV cache (DESIGN.md
+    // §10): greedy-decode *token parity* between the f32-KV and int8-KV
+    // paths on the trained mergequant bundle.
+    if !goldens_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let g = load_json(&artifacts_dir().join("goldens").join("goldens.json"))
+        .unwrap();
+    let prompt: Vec<u32> = g.get("greedy").unwrap().get("prompt").unwrap()
+        .as_arr().unwrap()
+        .iter().map(|v| v.as_usize().unwrap() as u32).collect();
+    let mut engine = load_engine("mergequant");
+    // Pre-format-2 artifact tree: probe-calibrate so the int8 path is
+    // still exercised (no-op on format-2 bundles).
+    engine.ensure_kv_scales().unwrap();
+    let max_seq = prompt.len() + 36;
+    let f32_toks = engine
+        .generate_with(&prompt, 32, max_seq, KvDtype::F32)
+        .unwrap();
+    let i8_toks = engine
+        .generate_with(&prompt, 32, max_seq, KvDtype::Int8)
+        .unwrap();
+    assert_eq!(f32_toks, i8_toks,
+               "int8-KV greedy decode must be token-identical to f32-KV \
+                on the trained bundle");
 }
 
 #[test]

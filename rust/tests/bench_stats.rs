@@ -1,0 +1,139 @@
+//! Coverage for the measurement substrate itself (the harness every
+//! paper table rides on): percentile math in `util/stats.rs`,
+//! adaptive-iteration stopping, and the JSONL records `src/bench/mod.rs`
+//! persists — round-tripped through `util/json.rs`.
+
+use std::time::Duration;
+
+use mergequant::bench::Bench;
+use mergequant::util::json::Json;
+use mergequant::util::stats::{summarize, time_adaptive, time_iters};
+
+// ---------------------------------------------------------------------
+// Percentile math
+// ---------------------------------------------------------------------
+
+#[test]
+fn percentiles_on_known_distribution() {
+    // 1..=100 — nearest-rank on (p·(n−1)).round() indices.
+    let xs: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+    let s = summarize(&xs);
+    assert_eq!(s.n, 100);
+    assert!((s.mean - 50.5).abs() < 1e-12);
+    assert_eq!(s.min, 1.0);
+    assert_eq!(s.max, 100.0);
+    assert_eq!(s.p50, 51.0); // (0.5·99).round() = 50 → xs[50] = 51
+    assert_eq!(s.p90, 90.0); // (0.9·99).round() = 89 → 90
+    assert_eq!(s.p99, 99.0); // (0.99·99).round() = 98 → 99
+    // std of a discrete uniform over 1..100: sqrt((n²−1)/12) ≈ 28.866
+    assert!((s.std - 28.866).abs() < 0.01, "std {}", s.std);
+}
+
+#[test]
+fn percentiles_sort_unordered_input() {
+    let s = summarize(&[5.0, 1.0, 4.0, 2.0, 3.0]);
+    assert_eq!(s.min, 1.0);
+    assert_eq!(s.p50, 3.0);
+    assert_eq!(s.max, 5.0);
+}
+
+#[test]
+fn percentiles_degenerate_sizes() {
+    let one = summarize(&[7.5]);
+    assert_eq!((one.n, one.p50, one.p90, one.p99), (1, 7.5, 7.5, 7.5));
+    assert_eq!(one.std, 0.0);
+    let two = summarize(&[2.0, 4.0]);
+    assert_eq!(two.p50, 4.0); // (0.5·1).round() = 1 (round half away)
+    assert_eq!(two.p90, 4.0);
+    assert_eq!(two.min, 2.0);
+    assert_eq!(summarize(&[]).n, 0);
+}
+
+// ---------------------------------------------------------------------
+// Adaptive-iteration stopping
+// ---------------------------------------------------------------------
+
+#[test]
+fn adaptive_runs_at_least_three_iterations() {
+    let mut count = 0usize;
+    let ts = time_adaptive(Duration::ZERO, 100, || count += 1);
+    assert_eq!(ts.len(), 3, "min_time elapsed ⇒ floor of 3 measured iters");
+    assert_eq!(count, 4, "one unmeasured warmup + 3 measured");
+}
+
+#[test]
+fn adaptive_stops_at_max_iters_even_under_min_time() {
+    let mut count = 0usize;
+    let ts = time_adaptive(Duration::from_secs(3600), 7, || count += 1);
+    assert_eq!(ts.len(), 7, "max_iters caps the run");
+    assert_eq!(count, 8);
+    assert!(ts.iter().all(|t| *t >= 0.0));
+}
+
+#[test]
+fn adaptive_runs_until_min_time() {
+    // A ~1ms body against a 20ms budget must run well past the 3-iter
+    // floor and stop before the 10_000 cap.
+    let ts = time_adaptive(Duration::from_millis(20), 10_000, || {
+        std::thread::sleep(Duration::from_millis(1));
+    });
+    assert!(ts.len() > 3 && ts.len() < 10_000, "n = {}", ts.len());
+}
+
+#[test]
+fn fixed_iters_counts_warmup_separately() {
+    let mut count = 0usize;
+    let ts = time_iters(3, 6, || count += 1);
+    assert_eq!(ts.len(), 6);
+    assert_eq!(count, 9);
+}
+
+// ---------------------------------------------------------------------
+// JSONL records round-trip through util/json.rs
+// ---------------------------------------------------------------------
+
+#[test]
+fn bench_jsonl_records_roundtrip() {
+    // Point the artifacts tree at a scratch dir so `Bench::finish`
+    // appends there, then parse every line back.
+    let dir = std::env::temp_dir()
+        .join(format!("mq_bench_jsonl_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::env::set_var("MERGEQUANT_ARTIFACTS", &dir);
+
+    let mut b = Bench::new("jsonl_roundtrip");
+    b.record("kv int8 reduction_factor", 4.0);
+    b.record("negative value", -3.25);
+    b.measure("noop \"quoted\" label", || {});
+    b.finish("round-trip fixture");
+
+    let path = dir.join("bench_results.jsonl");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> =
+        text.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert_eq!(lines.len(), 3, "one JSONL record per row");
+    let rows: Vec<Json> =
+        lines.iter().map(|l| Json::parse(l).unwrap()).collect();
+    for r in &rows {
+        assert_eq!(r.req_str("bench").unwrap(), "jsonl_roundtrip");
+        assert!(r.get("label").is_some() && r.get("mean_s").is_some()
+                && r.get("n").is_some());
+    }
+    assert_eq!(rows[0].req_str("label").unwrap(),
+               "kv int8 reduction_factor");
+    assert_eq!(rows[0].get("value").unwrap().as_f64().unwrap(), 4.0);
+    assert_eq!(rows[1].get("value").unwrap().as_f64().unwrap(), -3.25);
+    // measure() rows carry Null value and a real timing summary
+    assert_eq!(rows[2].get("value").unwrap(), &Json::Null);
+    assert_eq!(rows[2].req_str("label").unwrap(), "noop \"quoted\" label");
+    assert!(rows[2].get("mean_s").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(rows[2].get("n").unwrap().as_usize().unwrap() >= 3);
+    // Serializer → parser fixpoint on the parsed records.
+    for r in &rows {
+        assert_eq!(&Json::parse(&r.to_string()).unwrap(), r);
+    }
+
+    std::env::remove_var("MERGEQUANT_ARTIFACTS");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -6,7 +6,7 @@ use std::collections::HashSet;
 
 use mergequant::bench::synthetic_model;
 use mergequant::coordinator::{Request, Scheduler, SchedulerConfig};
-use mergequant::engine::Engine;
+use mergequant::engine::{Engine, KvDtype};
 use mergequant::util::proptest::check;
 use mergequant::util::rng::Rng;
 
@@ -22,6 +22,7 @@ fn make_scheduler(max_batch: usize, slabs: usize) -> Scheduler {
             queue_cap: 64,
             prefill_chunk: 0,
             threads: 1,
+            kv_dtype: KvDtype::F32,
         },
     )
 }
@@ -102,6 +103,7 @@ fn fifo_first_token_order() {
             queue_cap: 64,
             prefill_chunk: 0,
             threads: 1,
+            kv_dtype: KvDtype::F32,
         },
     );
     for i in 0..6u64 {
@@ -133,6 +135,113 @@ fn oversized_prompts_rejected_not_hung() {
 }
 
 #[test]
+fn kv_overflow_is_per_request_failure_not_worker_death() {
+    // Regression for the old hard `assert!` in `engine/model.rs`: a KV
+    // overflow must surface as a typed per-request failure (error field
+    // set, empty tokens) while the scheduler keeps serving everything
+    // before AND after the bad request.
+    let mut sched = make_scheduler(2, 2);
+    let oversized: Vec<u32> = (0..64).map(|t| 3 + t % 90).collect();
+    sched.submit(Request::new(1, vec![3, 4], 3)).unwrap();
+    sched.submit(Request::new(2, oversized, 4)).unwrap();
+    sched.submit(Request::new(3, vec![5, 6, 7], 3)).unwrap();
+    let responses = sched.run_to_completion();
+    assert_eq!(responses.len(), 3, "every request answered exactly once");
+    let bad = responses.iter().find(|r| r.id == 2).unwrap();
+    assert!(bad.tokens.is_empty());
+    let msg = bad.error.as_deref().expect("typed error surfaced");
+    assert!(msg.contains("KV cache overflow"), "got error {msg:?}");
+    for id in [1u64, 3] {
+        let r = responses.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(r.tokens.len(), 3, "request {id} served normally");
+        assert!(r.error.is_none());
+    }
+    assert_eq!(sched.metrics.failed, 1);
+    // The slab freed by the failure is reusable: serve another request.
+    sched.submit(Request::new(4, vec![8, 9], 2)).unwrap();
+    let more = sched.run_to_completion();
+    assert_eq!(more.len(), 1);
+    assert_eq!(more[0].tokens.len(), 2);
+}
+
+#[test]
+fn kv_overflow_mid_chunked_prefill_fails_cleanly() {
+    // An oversized prompt routed through *chunked* prefill overflows
+    // mid-flight (after several successful chunks) — the slab must come
+    // back and later requests must still be served.
+    let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+    let mut sched = Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 2,
+            kv_slabs: 2,
+            max_seq: 32,
+            max_prefills_per_iter: 1,
+            queue_cap: 64,
+            prefill_chunk: 8,
+            threads: 1,
+            kv_dtype: KvDtype::F32,
+        },
+    );
+    let oversized: Vec<u32> = (0..40).map(|t| 3 + t % 90).collect();
+    sched.submit(Request::new(1, oversized, 4)).unwrap();
+    sched.submit(Request::new(2, vec![3, 4, 5], 4)).unwrap();
+    let responses = sched.run_to_completion();
+    assert_eq!(responses.len(), 2);
+    let bad = responses.iter().find(|r| r.id == 1).unwrap();
+    assert!(bad.tokens.is_empty());
+    assert!(bad.error.as_deref().unwrap().contains("KV cache overflow"));
+    let ok = responses.iter().find(|r| r.id == 2).unwrap();
+    assert_eq!(ok.tokens.len(), 4);
+    assert!(ok.error.is_none());
+}
+
+#[test]
+fn int8_kv_scheduler_serves_full_workload() {
+    // The whole coordinator path on statically-quantized int8 KV slabs:
+    // same invariants (answered exactly once, token budgets respected).
+    check(404, 8, gen_workload, |workload| {
+        let engine =
+            Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+        let mut sched = Scheduler::new(
+            engine,
+            SchedulerConfig {
+                max_batch: 4,
+                kv_slabs: 4,
+                max_seq: 48,
+                max_prefills_per_iter: 2,
+                queue_cap: 64,
+                prefill_chunk: 0,
+                threads: 1,
+                kv_dtype: KvDtype::Int8,
+            },
+        );
+        for (i, &(plen, mnew)) in workload.iter().enumerate() {
+            let prompt: Vec<u32> =
+                (0..plen as u32).map(|t| 3 + t % 90).collect();
+            sched
+                .submit(Request::new(i as u64, prompt, mnew))
+                .map_err(|_| "queue full unexpectedly".to_string())?;
+        }
+        let responses = sched.run_to_completion();
+        if responses.len() != workload.len() {
+            return Err(format!("{} responses for {} requests",
+                               responses.len(), workload.len()));
+        }
+        for r in &responses {
+            if let Some(e) = &r.error {
+                return Err(format!("request {} failed: {e}", r.id));
+            }
+            let (_, mnew) = workload[r.id as usize];
+            if r.tokens.is_empty() || r.tokens.len() > mnew {
+                return Err(format!("bad token count {}", r.tokens.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn backpressure_queue_cap() {
     let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
     let mut sched = Scheduler::new(
@@ -145,6 +254,7 @@ fn backpressure_queue_cap() {
             queue_cap: 2,
             prefill_chunk: 0,
             threads: 1,
+            kv_dtype: KvDtype::F32,
         },
     );
     assert!(sched.submit(Request::new(1, vec![3], 2)).is_ok());
@@ -218,6 +328,7 @@ fn chunked_prefill_same_results_and_bounded_stall() {
                 queue_cap: 64,
                 prefill_chunk: chunk,
                 threads: 1,
+                kv_dtype: KvDtype::F32,
             },
         )
     };

@@ -2,7 +2,7 @@
 //! prefill/decode parity, causality, batching consistency, generation.
 
 use mergequant::bench::synthetic_model;
-use mergequant::engine::{Engine, KvCache, Workspace};
+use mergequant::engine::{Engine, EngineError, KvCache, Workspace};
 
 fn engines() -> Vec<(&'static str, Engine)> {
     ["fp16", "mergequant", "rtn", "quarot"]
@@ -18,19 +18,19 @@ fn decode_matches_prefill_all_modes() {
         let toks: Vec<u32> = (0..12).map(|i| 3 + (i * 7) % 90).collect();
         let mut ws = Workspace::new();
         let mut cache = KvCache::new(cfg.n_layers, 16, cfg.d_model);
-        engine.prefill(&toks, &mut cache, &mut ws);
+        engine.prefill(&toks, &mut cache, &mut ws).unwrap();
         let full = ws.logits.clone();
 
         let mut cache2 = KvCache::new(cfg.n_layers, 16, cfg.d_model);
         let mut ws2 = Workspace::new();
         // prefill first token only, then decode the rest step by step
-        engine.prefill(&toks[..1], &mut cache2, &mut ws2);
+        engine.prefill(&toks[..1], &mut cache2, &mut ws2).unwrap();
         let mut got = ws2.logits[..cfg.vocab].to_vec();
         let mut rows = vec![got.clone()];
         for t in 1..toks.len() {
             let tok = [toks[t]];
             let mut caches = [&mut cache2];
-            engine.decode_batch(&tok, &mut caches, &mut ws2);
+            engine.decode_batch(&tok, &mut caches, &mut ws2).unwrap();
             got = ws2.logits[..cfg.vocab].to_vec();
             rows.push(got.clone());
         }
@@ -58,10 +58,10 @@ fn batched_decode_matches_single() {
         for p in &prompts {
             let mut ws = Workspace::new();
             let mut cache = KvCache::new(cfg.n_layers, 32, cfg.d_model);
-            engine.prefill(p, &mut cache, &mut ws);
+            engine.prefill(p, &mut cache, &mut ws).unwrap();
             let next = [7u32];
             let mut caches = [&mut cache];
-            engine.decode_batch(&next, &mut caches, &mut ws);
+            engine.decode_batch(&next, &mut caches, &mut ws).unwrap();
             singles.push(ws.logits[..cfg.vocab].to_vec());
         }
         // batched decode over all three at once
@@ -70,13 +70,13 @@ fn batched_decode_matches_single() {
             .iter()
             .map(|p| {
                 let mut c = KvCache::new(cfg.n_layers, 32, cfg.d_model);
-                engine.prefill(p, &mut c, &mut ws);
+                engine.prefill(p, &mut c, &mut ws).unwrap();
                 c
             })
             .collect();
         let toks = vec![7u32; 3];
         let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
-        engine.decode_batch(&toks, &mut refs, &mut ws);
+        engine.decode_batch(&toks, &mut refs, &mut ws).unwrap();
         for (i, single) in singles.iter().enumerate() {
             let row = &ws.logits[i * cfg.vocab..(i + 1) * cfg.vocab];
             for (a, b) in row.iter().zip(single) {
@@ -94,11 +94,11 @@ fn causality_future_token_does_not_change_past() {
         let mut toks: Vec<u32> = (0..10).map(|i| 3 + i * 5).collect();
         let mut ws = Workspace::new();
         let mut cache = KvCache::new(cfg.n_layers, 16, cfg.d_model);
-        engine.prefill(&toks, &mut cache, &mut ws);
+        engine.prefill(&toks, &mut cache, &mut ws).unwrap();
         let before = ws.logits[..9 * cfg.vocab].to_vec();
         toks[9] = 88;
         cache.reset();
-        engine.prefill(&toks, &mut cache, &mut ws);
+        engine.prefill(&toks, &mut cache, &mut ws).unwrap();
         let after = &ws.logits[..9 * cfg.vocab];
         for (a, b) in before.iter().zip(after) {
             assert!((a - b).abs() < 1e-5, "{name} causality violated");
@@ -125,21 +125,46 @@ fn static_path_output_is_finite_with_outliers() {
     let toks: Vec<u32> = (0..8).map(|i| i % 96).collect();
     let mut ws = Workspace::new();
     let mut cache = KvCache::new(cfg.n_layers, 8, cfg.d_model);
-    engine.prefill(&toks, &mut cache, &mut ws);
+    engine.prefill(&toks, &mut cache, &mut ws).unwrap();
     assert!(ws.logits.iter().all(|v| v.is_finite()));
 }
 
 #[test]
-fn kv_cache_overflow_panics() {
+fn kv_cache_overflow_is_typed_error_not_panic() {
     let engine = Engine::new(synthetic_model("fp16", 64, 128, 1, 96));
     let cfg = engine.config().clone();
-    let toks: Vec<u32> = (0..9).map(|i| i).collect();
+    let toks: Vec<u32> = (0..9).collect();
     let mut ws = Workspace::new();
     let mut cache = KvCache::new(cfg.n_layers, 8, cfg.d_model);
-    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        engine.prefill(&toks, &mut cache, &mut ws);
-    }));
-    assert!(res.is_err(), "overflowing the KV capacity must panic");
+    let err = engine.prefill(&toks, &mut cache, &mut ws).unwrap_err();
+    assert_eq!(err, EngineError::KvOverflow { lane: 0, pos: 8, cap: 8 });
+    // Validation happens before any state is touched.
+    assert_eq!(cache.len, 0, "failed prefill must not advance the cache");
+    // The cache remains usable after the error.
+    engine.prefill(&toks[..8], &mut cache, &mut ws).unwrap();
+    assert_eq!(cache.len, 8);
+}
+
+#[test]
+fn decode_overflow_names_the_offending_lane() {
+    let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+    let cfg = engine.config().clone();
+    let mut ws = Workspace::new();
+    let mut big = KvCache::new(cfg.n_layers, 16, cfg.d_model);
+    let mut small = KvCache::new(cfg.n_layers, 4, cfg.d_model);
+    engine.prefill(&[3, 4, 5], &mut big, &mut ws).unwrap();
+    engine.prefill(&[3, 4, 5, 6], &mut small, &mut ws).unwrap();
+    let toks = [7u32, 8u32];
+    let mut caches = [&mut big, &mut small];
+    let err = engine.decode_batch(&toks, &mut caches, &mut ws).unwrap_err();
+    assert_eq!(err, EngineError::KvOverflow { lane: 1, pos: 4, cap: 4 });
+    // Neither lane advanced — the batch can be retried without lane 1.
+    assert_eq!(big.len, 3);
+    assert_eq!(small.len, 4);
+    let toks = [7u32];
+    let mut caches = [&mut big];
+    engine.decode_batch(&toks, &mut caches, &mut ws).unwrap();
+    assert_eq!(big.len, 4);
 }
 
 #[test]
@@ -149,15 +174,15 @@ fn workspace_reuse_no_state_leak() {
     let toks: Vec<u32> = (0..6).collect();
     let mut ws = Workspace::new();
     let mut c1 = KvCache::new(cfg.n_layers, 8, cfg.d_model);
-    engine.prefill(&toks, &mut c1, &mut ws);
+    engine.prefill(&toks, &mut c1, &mut ws).unwrap();
     let first = ws.logits.clone();
     // run something else through the same workspace
     let other: Vec<u32> = (10..18).collect();
     let mut c2 = KvCache::new(cfg.n_layers, 8, cfg.d_model);
-    engine.prefill(&other, &mut c2, &mut ws);
+    engine.prefill(&other, &mut c2, &mut ws).unwrap();
     // then repeat the original
     let mut c3 = KvCache::new(cfg.n_layers, 8, cfg.d_model);
-    engine.prefill(&toks, &mut c3, &mut ws);
+    engine.prefill(&toks, &mut c3, &mut ws).unwrap();
     for (a, b) in first.iter().zip(&ws.logits) {
         assert_eq!(a, b, "workspace reuse changed results");
     }
@@ -165,19 +190,21 @@ fn workspace_reuse_no_state_leak() {
 
 #[test]
 fn chunked_prefill_matches_single_shot() {
+    // Both-dtype, multi-chunk-size, bitwise chunked-equivalence lives in
+    // tests/kv_quant.rs; this keeps the original f32 smoke variant.
     for (name, engine) in engines() {
         let cfg = engine.config().clone();
         let toks: Vec<u32> = (0..20).map(|i| 3 + (i * 5) % 90).collect();
         let mut ws = Workspace::new();
         let mut cache = KvCache::new(cfg.n_layers, 24, cfg.d_model);
-        engine.prefill(&toks, &mut cache, &mut ws);
+        engine.prefill(&toks, &mut cache, &mut ws).unwrap();
         let last = ws.logits[19 * cfg.vocab..20 * cfg.vocab].to_vec();
 
         // same prompt in three chunks continuing the same cache
         let mut cache2 = KvCache::new(cfg.n_layers, 24, cfg.d_model);
         let mut ws2 = Workspace::new();
         for chunk in [&toks[..7], &toks[7..13], &toks[13..]] {
-            engine.prefill(chunk, &mut cache2, &mut ws2);
+            engine.prefill(chunk, &mut cache2, &mut ws2).unwrap();
         }
         assert_eq!(cache2.len, 20);
         let got = &ws2.logits[6 * cfg.vocab..7 * cfg.vocab];
@@ -198,14 +225,14 @@ fn multi_turn_cache_reuse() {
 
     let mut ws = Workspace::new();
     let mut cache = KvCache::new(cfg.n_layers, 16, cfg.d_model);
-    engine.prefill(&turn1, &mut cache, &mut ws);
-    engine.prefill(&turn2, &mut cache, &mut ws);
+    engine.prefill(&turn1, &mut cache, &mut ws).unwrap();
+    engine.prefill(&turn2, &mut cache, &mut ws).unwrap();
     let reused = ws.logits[2 * cfg.vocab..3 * cfg.vocab].to_vec();
 
     let mut full: Vec<u32> = turn1.clone();
     full.extend(&turn2);
     let mut cache2 = KvCache::new(cfg.n_layers, 16, cfg.d_model);
-    engine.prefill(&full, &mut cache2, &mut ws);
+    engine.prefill(&full, &mut cache2, &mut ws).unwrap();
     let scratch = &ws.logits[6 * cfg.vocab..7 * cfg.vocab];
     for (a, b) in reused.iter().zip(scratch) {
         assert!((a - b).abs() < 2e-3, "multi-turn reuse mismatch");

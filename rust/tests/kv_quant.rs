@@ -1,0 +1,294 @@
+//! Property tests for the statically-quantized INT8 KV cache
+//! (DESIGN.md §10): round-trip error bounds, decode-logit drift vs the
+//! f32-KV baseline, bitwise thread determinism of the integer attention
+//! path (extending the §7 guarantee), chunked-prefill equivalence for
+//! both KV dtypes, and the typed-error contract for scale-less bundles.
+//!
+//! CI runs this suite across a {threads} × {kv dtype} matrix; the env
+//! knobs `MQ_TEST_THREADS` (extra thread count for the determinism
+//! sweep) and `MQ_TEST_KV` (dtype under test where a single dtype is
+//! exercised) hook the matrix in without duplicating test code.
+
+use mergequant::bench::synthetic_model;
+use mergequant::engine::{Engine, EngineError, KvCache, KvDtype, Workspace};
+use mergequant::quant::kv::{dequantize_row_i8, quantize_row_i8, KV_QMAX};
+use mergequant::util::proptest::check;
+use mergequant::util::rng::Rng;
+
+fn env_threads() -> Option<usize> {
+    std::env::var("MQ_TEST_THREADS").ok().and_then(|v| v.parse().ok())
+}
+
+fn env_kv() -> KvDtype {
+    std::env::var("MQ_TEST_KV")
+        .ok()
+        .and_then(|v| KvDtype::parse(&v))
+        .unwrap_or(KvDtype::Int8)
+}
+
+// ---------------------------------------------------------------------
+// Round-trip error bound
+// ---------------------------------------------------------------------
+
+#[test]
+fn kv_roundtrip_error_bounded_by_half_scale_per_element() {
+    // For any per-channel scale vector and any value within the
+    // representable range |x| <= 127·s, quantize→dequantize must land
+    // within s/2 of the original (round-half-away + exact dequant).
+    check(41, 40, |r: &mut Rng| (r.usize(1, 96), r.usize(0, 1_000_000)),
+          |&(d, seed)| {
+        let mut rng = Rng::new(seed as u64 + 1);
+        let scale: Vec<f32> =
+            (0..d).map(|_| 0.001 + rng.f32() * 0.5).collect();
+        let inv: Vec<f32> = scale.iter().map(|s| 1.0 / s).collect();
+        let x: Vec<f32> = (0..d)
+            .map(|c| (rng.f32() * 2.0 - 1.0) * scale[c] * KV_QMAX as f32)
+            .collect();
+        let mut q = vec![0i8; d];
+        quantize_row_i8(&x, &inv, &mut q);
+        let mut back = vec![0f32; d];
+        dequantize_row_i8(&q, &scale, &mut back);
+        for c in 0..d {
+            let err = (x[c] - back[c]).abs();
+            if err > scale[c] / 2.0 + scale[c] * 1e-4 {
+                return Err(format!(
+                    "channel {c}: |{} - {}| = {err} > scale/2 = {}",
+                    x[c], back[c], scale[c] / 2.0));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Decode-logit drift vs the f32-KV baseline
+// ---------------------------------------------------------------------
+
+/// Prefill `prompt` then decode `steps` greedy tokens; returns the final
+/// logits row and the generated tokens.
+fn run_decode(engine: &Engine, prompt: &[u32], steps: usize, kv: KvDtype)
+              -> (Vec<f32>, Vec<u32>) {
+    let cfg = engine.config().clone();
+    let cap = prompt.len() + steps + 2;
+    let mut cache = KvCache::with_dtype(kv, cfg.n_layers, cap, cfg.d_model);
+    let mut ws = Workspace::new();
+    engine.prefill(prompt, &mut cache, &mut ws).unwrap();
+    let v = cfg.vocab;
+    let mut next =
+        mergequant::engine::model::argmax(
+            &ws.logits[(prompt.len() - 1) * v..prompt.len() * v]) as u32;
+    let mut toks = vec![next];
+    for _ in 0..steps {
+        let t = [next];
+        let mut caches = [&mut cache];
+        engine.decode_batch(&t, &mut caches, &mut ws).unwrap();
+        next = mergequant::engine::model::argmax(&ws.logits[..v]) as u32;
+        toks.push(next);
+    }
+    (ws.logits[..v].to_vec(), toks)
+}
+
+#[test]
+fn int8_kv_decode_logits_stay_close_to_f32_kv() {
+    let mut engine =
+        Engine::new(synthetic_model("mergequant", 64, 128, 2, 96));
+    engine.ensure_kv_scales().unwrap();
+    check(52, 10, |r: &mut Rng| {
+        (0..r.usize(2, 24)).map(|_| r.usize(3, 95) as u32).collect::<Vec<u32>>()
+    }, |prompt| {
+        if prompt.len() < 2 {
+            return Ok(());
+        }
+        let (f32_logits, _) = run_decode(&engine, prompt, 6, KvDtype::F32);
+        let (i8_logits, _) = run_decode(&engine, prompt, 6, KvDtype::Int8);
+        let scale = f32_logits.iter().fold(1e-6f32, |a, v| a.max(v.abs()));
+        let worst = f32_logits
+            .iter()
+            .zip(&i8_logits)
+            .fold(0f32, |a, (x, y)| a.max((x - y).abs()));
+        // Per-channel static INT8 KV keeps relative drift small; the
+        // bound is loose enough to be robust, tight enough to catch a
+        // broken scale fold (which produces O(scale) garbage).
+        if worst > 0.25 * scale {
+            return Err(format!("drift {worst} vs logit scale {scale}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn int8_kv_argmax_mostly_matches_f32_kv_teacher_forced() {
+    // Drive both cache dtypes down the *same* token path (the f32-KV
+    // greedy trajectory) so per-step argmaxes are comparable, then demand
+    // majority agreement. A broken scale fold produces garbage logits
+    // (~1/vocab agreement); honest int8 drift only flips near-ties.
+    let mut engine =
+        Engine::new(synthetic_model("mergequant", 64, 128, 2, 96));
+    engine.ensure_kv_scales().unwrap();
+    let engine = engine;
+    let cfg = engine.config().clone();
+    let prompt: Vec<u32> = (0..12).map(|i| 3 + (i * 7) % 90).collect();
+    let steps = 24usize;
+    let (_, path) = run_decode(&engine, &prompt, steps, KvDtype::F32);
+    let v = cfg.vocab;
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    let mut argmaxes: Vec<Vec<usize>> = Vec::new();
+    for kv in [KvDtype::F32, KvDtype::Int8] {
+        let cap = prompt.len() + steps + 2;
+        let mut cache =
+            KvCache::with_dtype(kv, cfg.n_layers, cap, cfg.d_model);
+        let mut ws = Workspace::new();
+        engine.prefill(&prompt, &mut cache, &mut ws).unwrap();
+        let mut maxes =
+            vec![mergequant::engine::model::argmax(
+                &ws.logits[(prompt.len() - 1) * v..prompt.len() * v])];
+        for &tok in &path[..steps] {
+            let t = [tok];
+            let mut caches = [&mut cache];
+            engine.decode_batch(&t, &mut caches, &mut ws).unwrap();
+            maxes.push(mergequant::engine::model::argmax(&ws.logits[..v]));
+        }
+        argmaxes.push(maxes);
+    }
+    for (a, b) in argmaxes[0].iter().zip(&argmaxes[1]) {
+        total += 1;
+        agree += usize::from(a == b);
+    }
+    assert!(agree * 2 >= total,
+            "int8-KV teacher-forced argmax agreement too low: \
+             {agree}/{total}");
+}
+
+// ---------------------------------------------------------------------
+// Bitwise determinism across thread counts (§7 extended to int8 KV)
+// ---------------------------------------------------------------------
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn int8_kv_attention_bitwise_identical_across_threads_1_to_8() {
+    // Probe-calibrate once so every thread count shares the same scales.
+    let mut base =
+        Engine::new(synthetic_model("mergequant", 128, 256, 2, 256));
+    base.ensure_kv_scales().unwrap();
+    let model = base.model;
+    let prompt: Vec<u32> = (0..40).map(|i| 3 + (i * 11) % 250).collect();
+    let cfg = model.config.clone();
+    let kv = env_kv();
+    let mut counts = vec![1usize, 2, 3, 4, 8];
+    if let Some(t) = env_threads() {
+        counts.push(t.max(1));
+    }
+    let mut reference: Option<(Vec<u32>, Vec<u32>)> = None;
+    for threads in counts {
+        let engine = Engine::with_threads(model.clone(), threads);
+        let mut ws = Workspace::new();
+        let mut caches: Vec<KvCache> = (0..3)
+            .map(|_| KvCache::with_dtype(kv, cfg.n_layers, 96, cfg.d_model))
+            .collect();
+        engine.prefill(&prompt, &mut caches[0], &mut ws).unwrap();
+        let prefill_bits = bits(&ws.logits[..prompt.len() * cfg.vocab]);
+        engine.prefill(&prompt[..17], &mut caches[1], &mut ws).unwrap();
+        engine.prefill(&prompt[..29], &mut caches[2], &mut ws).unwrap();
+        let mut decode_bits = Vec::new();
+        let mut toks = [5u32, 9, 11];
+        for _ in 0..4 {
+            let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+            engine.decode_batch(&toks, &mut refs, &mut ws).unwrap();
+            decode_bits.extend(bits(&ws.logits[..3 * cfg.vocab]));
+            for (i, t) in toks.iter_mut().enumerate() {
+                *t = mergequant::engine::model::argmax(
+                    &ws.logits[i * cfg.vocab..(i + 1) * cfg.vocab]) as u32;
+            }
+        }
+        match &reference {
+            None => reference = Some((prefill_bits, decode_bits)),
+            Some((p, d)) => {
+                assert_eq!(&prefill_bits, p,
+                           "int8-KV prefill differs at {threads} threads");
+                assert_eq!(&decode_bits, d,
+                           "int8-KV decode differs at {threads} threads");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Chunked prefill ≡ single-shot, both dtypes (per-row math is
+// m-independent: same dots, same order, same epilogues)
+// ---------------------------------------------------------------------
+
+#[test]
+fn chunked_prefill_identical_to_single_shot_for_both_kv_dtypes() {
+    for mode in ["fp16", "mergequant", "rtn"] {
+        let mut engine = Engine::new(synthetic_model(mode, 64, 128, 2, 96));
+        engine.ensure_kv_scales().unwrap();
+        let cfg = engine.config().clone();
+        let toks: Vec<u32> = (0..33).map(|i| 3 + (i * 5) % 90).collect();
+        for kv in [KvDtype::F32, KvDtype::Int8] {
+            let mut ws = Workspace::new();
+            let mut cache =
+                KvCache::with_dtype(kv, cfg.n_layers, 40, cfg.d_model);
+            engine.prefill(&toks, &mut cache, &mut ws).unwrap();
+            let last_row = (toks.len() - 1) * cfg.vocab;
+            let want = bits(&ws.logits[last_row..last_row + cfg.vocab]);
+            for chunk in [1usize, 7, 32] {
+                let mut c2 =
+                    KvCache::with_dtype(kv, cfg.n_layers, 40, cfg.d_model);
+                let mut ws2 = Workspace::new();
+                let mut off = 0;
+                let mut got = Vec::new();
+                while off < toks.len() {
+                    let end = (off + chunk).min(toks.len());
+                    engine.prefill(&toks[off..end], &mut c2, &mut ws2)
+                        .unwrap();
+                    let rows = end - off;
+                    got = bits(&ws2.logits
+                        [(rows - 1) * cfg.vocab..rows * cfg.vocab]);
+                    off = end;
+                }
+                assert_eq!(c2.len, toks.len());
+                assert_eq!(got, want,
+                           "{mode} kv {:?}: chunk {chunk} final logits \
+                            differ from single-shot", kv);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Typed-error contract for bundles without calibrated scales
+// ---------------------------------------------------------------------
+
+#[test]
+fn int8_cache_without_scales_is_typed_error() {
+    // Synthetic models ship like pre-format-2 bundles: kv = None.
+    let mut engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+    assert!(engine.model.kv.is_none());
+    let cfg = engine.config().clone();
+    let mut ws = Workspace::new();
+    let mut cache =
+        KvCache::with_dtype(KvDtype::Int8, cfg.n_layers, 16, cfg.d_model);
+    let err = engine.prefill(&[3, 4, 5], &mut cache, &mut ws).unwrap_err();
+    assert_eq!(err, EngineError::MissingKvScales);
+    // Probe calibration restores serviceability (and is a no-op after).
+    engine.ensure_kv_scales().unwrap();
+    assert!(engine.model.kv.is_some());
+    engine.prefill(&[3, 4, 5], &mut cache, &mut ws).unwrap();
+    assert_eq!(cache.len, 3);
+}
+
+// ---------------------------------------------------------------------
+// Memory: int8 slabs really are 4× smaller
+// ---------------------------------------------------------------------
+
+#[test]
+fn int8_cache_bytes_are_quarter_of_f32() {
+    let f = KvCache::new(4, 128, 64);
+    let q = KvCache::with_dtype(KvDtype::Int8, 4, 128, 64);
+    assert_eq!(f.bytes(), 4 * q.bytes());
+    assert!(f.bytes() as f64 / q.bytes() as f64 >= 3.5);
+}

@@ -7,7 +7,7 @@ use std::sync::Arc;
 use mergequant::bench::synthetic_model;
 use mergequant::coordinator::server::TcpGateway;
 use mergequant::coordinator::{SchedulerConfig, Server};
-use mergequant::engine::Engine;
+use mergequant::engine::{Engine, KvDtype};
 use mergequant::util::json::Json;
 
 fn test_server() -> Server {
@@ -22,6 +22,7 @@ fn test_server() -> Server {
             queue_cap: 64,
             prefill_chunk: 0,
             threads: 1,
+            kv_dtype: KvDtype::F32,
         },
     )
 }
