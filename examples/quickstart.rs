@@ -39,6 +39,14 @@ fn main() -> anyhow::Result<()> {
     println!("decode rate: {:.0} tok/s",
              completion.len() as f64 / dt.as_secs_f64());
 
+    // 2b. Seeded sampling (generation API v2): same decode path, token
+    // selection through the counter-based top-k/top-p sampler — a fixed
+    // seed replays the identical stream on any thread count.
+    let sampler = mergequant::engine::Sampler::new(0.8, 40, 0.95, 7);
+    let sampled = engine.generate_seeded(
+        &prompt, 48, 128, mergequant::engine::KvDtype::F32, &sampler)?;
+    println!("sampled    : {sampled:?} (T=0.8 top_k=40 top_p=0.95 seed=7)");
+
     // 3. Perplexity on the held-out synthetic corpus.
     let toks = mergequant::eval::corpus::val_stream(&artifacts_dir(),
                                                     "synth-wiki")?;

@@ -1,8 +1,20 @@
-//! End-to-end serving driver (the DESIGN.md validation run): start the
-//! coordinator on a quantized bundle, attach the TCP gateway, fire a
-//! closed-loop client fleet with Poisson think times at it, and report
-//! latency/throughput — then do the same for the FP16 bundle and print
-//! the serving-level speedup.
+//! End-to-end serving driver (the DESIGN.md §9 validation run), on the
+//! generation API v2.
+//!
+//! Part 1 — **API demo** (runs even without artifacts, on synthetic
+//! weights): one server, three concurrent requests through
+//! `Server::generate` / `RequestHandle`:
+//!   * a long-running request that is cancelled mid-stream,
+//!   * a sampled request (temperature/top-k/top-p, fixed seed) printed
+//!     token by token as its frames arrive,
+//!   * a greedy request that pends until the cancellation returns its KV
+//!     slab (slab reuse by a later admission) and whose tokens must match
+//!     the seed greedy golden (`Engine::generate`).
+//!
+//! Part 2 — **fleet run** (needs `make artifacts`): a closed-loop
+//! Poisson client fleet speaking the v2 NDJSON streaming protocol at the
+//! TCP gateway, for the FP16 and MergeQuant bundles, reporting
+//! latency/TTFT/throughput and the serving-level speedup.
 //!
 //! ```sh
 //! cargo run --release --example serve_e2e [-- --requests 32 --clients 4 --threads 4]
@@ -12,20 +24,144 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
+use mergequant::artifacts_dir;
+use mergequant::bench::synthetic_model;
 use mergequant::cli::Args;
 use mergequant::coordinator::server::TcpGateway;
-use mergequant::coordinator::{SchedulerConfig, Server};
+use mergequant::coordinator::{
+    Event, FinishReason, GenerationParams, SchedulerConfig, Server,
+};
 use mergequant::engine::{Engine, QModel};
 use mergequant::util::json::Json;
 use mergequant::util::rng::Rng;
 use mergequant::util::stats::summarize;
-use mergequant::artifacts_dir;
+
+/// Load the bundle when artifacts exist, otherwise fall back to the
+/// (deterministic) synthetic model of the same method.
+fn build_model(method: &str) -> anyhow::Result<(QModel, bool)> {
+    let bundle = artifacts_dir()
+        .join(format!("models/tiny-llama-s/{method}.qmod"));
+    if bundle.exists() {
+        Ok((QModel::load(&bundle)?, true))
+    } else {
+        Ok((synthetic_model(method, 64, 128, 2, 96), false))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Part 1: generate / RequestHandle / cancel demo
+// ---------------------------------------------------------------------
+
+fn api_demo(threads: usize) -> anyhow::Result<()> {
+    let (model, real) = build_model("mergequant")?;
+    println!("== generation API v2 demo ({}) ==",
+             if real { "mergequant bundle" } else { "synthetic weights" });
+    // Reference engine for the greedy golden (identical weights).
+    let golden_engine = Engine::new(build_model("mergequant")?.0);
+    let greedy_prompt: Vec<u32> = vec![1, 17, 42, 5];
+    let golden = golden_engine.generate(&greedy_prompt, 24, 2048);
+
+    // Two KV slabs for three requests: the third admission *requires*
+    // the cancellation below to return a slab.
+    let server = Server::start(
+        Engine::new(model),
+        SchedulerConfig {
+            max_batch: 2,
+            kv_slabs: 2,
+            max_seq: 2048,
+            max_prefills_per_iter: 2,
+            queue_cap: 16,
+            prefill_chunk: 0,
+            threads,
+            kv_dtype: mergequant::engine::KvDtype::F32,
+        },
+    );
+
+    // (a) long-running victim — will be torn out of the batch.
+    let h_victim = server
+        .generate(vec![2, 4, 6, 8], GenerationParams::greedy(100_000))
+        .map_err(anyhow::Error::msg)?;
+    // (b) sampled request, streamed below.
+    let h_sampled = server
+        .generate(vec![3, 9, 12, 40], GenerationParams {
+            max_new: 48,
+            temperature: 0.8,
+            top_k: 24,
+            top_p: 0.95,
+            seed: 7,
+            stop_tokens: Vec::new(),
+        })
+        .map_err(anyhow::Error::msg)?;
+    // (c) greedy request — pends: both slabs are taken.
+    let h_greedy = server
+        .generate(greedy_prompt, GenerationParams::greedy(24))
+        .map_err(anyhow::Error::msg)?;
+
+    // Stream a few tokens from the victim, then cancel it. Its slab
+    // comes back on the next scheduler iteration and admits (c).
+    print!("victim  [id {}]:", h_victim.id());
+    for _ in 0..4 {
+        if let Some(Event::Token { token, .. }) = h_victim.recv() {
+            print!(" {token}");
+        }
+    }
+    h_victim.cancel();
+    println!("  → cancel()");
+
+    // Stream the sampled request token by token (the per-token cadence
+    // MergeQuant's static decode path accelerates).
+    print!("sampled [id {}]:", h_sampled.id());
+    let sampled = loop {
+        match h_sampled.recv() {
+            Some(Event::Token { token, .. }) => print!(" {token}"),
+            Some(Event::Done { response }) => break response,
+            Some(Event::Error { response }) => {
+                anyhow::bail!("sampled request failed: {:?}", response.error)
+            }
+            None => anyhow::bail!("event stream closed early"),
+        }
+    };
+    println!("  ({} tokens, finish {})", sampled.tokens.len(),
+             sampled.finish.as_str());
+
+    let r_victim = h_victim.wait();
+    assert_eq!(r_victim.finish, FinishReason::Cancelled);
+    println!("victim finished: {} ({} tokens before teardown)",
+             r_victim.finish.as_str(), r_victim.tokens.len());
+
+    let r_greedy = h_greedy.wait();
+    assert_eq!(r_greedy.tokens, golden,
+               "greedy stream must match the seed golden");
+    println!("greedy  [id {}]: {} tokens — matches Engine::generate \
+              golden ✓ (admitted into the cancelled request's slab)",
+             r_greedy.id, r_greedy.tokens.len());
+    println!("scheduler: {}\n", server.shutdown());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Part 2: closed-loop fleet over the v2 streaming TCP protocol
+// ---------------------------------------------------------------------
 
 struct RunStats {
     wall_s: f64,
     gen_tokens: usize,
     lat_ms: Vec<f64>,
     ttft_ms: Vec<f64>,
+    /// Client-observed TTFT: send → first `token` frame on the wire.
+    client_ttft_ms: Vec<f64>,
+}
+
+impl RunStats {
+    fn new() -> Self {
+        RunStats {
+            wall_s: 0.0,
+            gen_tokens: 0,
+            lat_ms: Vec::new(),
+            ttft_ms: Vec::new(),
+            client_ttft_ms: Vec::new(),
+        }
+    }
 }
 
 fn drive(method: &str, n_requests: usize, n_clients: usize,
@@ -60,10 +196,7 @@ fn drive(method: &str, n_requests: usize, n_clients: usize,
             let stream = TcpStream::connect(addr)?;
             let mut reader = BufReader::new(stream.try_clone()?);
             let mut out = stream;
-            let mut stats = RunStats {
-                wall_s: 0.0, gen_tokens: 0,
-                lat_ms: Vec::new(), ttft_ms: Vec::new(),
-            };
+            let mut stats = RunStats::new();
             for _ in 0..per_client {
                 // Poisson think time (closed loop, ~20 req/s offered)
                 std::thread::sleep(std::time::Duration::from_secs_f64(
@@ -72,39 +205,64 @@ fn drive(method: &str, n_requests: usize, n_clients: usize,
                     .map(|_| (3 + rng.next_u64() % (vocab as u64 - 3))
                         .to_string())
                     .collect();
-                writeln!(out, "{{\"prompt\":[{}],\"max_new\":{max_new}}}",
+                // v2 streaming request (greedy params keep the paper's
+                // token streams; the protocol is the thing under test).
+                let sent = std::time::Instant::now();
+                writeln!(out,
+                         "{{\"prompt\":[{}],\"params\":{{\"max_new\":{max_new}}}}}",
                          prompt.join(","))?;
-                let mut line = String::new();
-                reader.read_line(&mut line)?;
-                let j = Json::parse(line.trim()).map_err(anyhow::Error::msg)?;
-                stats.gen_tokens += j.get("tokens")
-                    .and_then(Json::as_arr).map_or(0, |a| a.len());
-                if let Some(l) = j.get("latency_ms").and_then(Json::as_f64) {
-                    stats.lat_ms.push(l);
-                }
-                if let Some(t) = j.get("ttft_ms").and_then(Json::as_f64) {
-                    stats.ttft_ms.push(t);
+                let mut first_token_at: Option<f64> = None;
+                loop {
+                    let mut line = String::new();
+                    if reader.read_line(&mut line)? == 0 {
+                        anyhow::bail!("gateway closed mid-stream");
+                    }
+                    let j = Json::parse(line.trim())
+                        .map_err(anyhow::Error::msg)?;
+                    match j.get("event").and_then(Json::as_str) {
+                        Some("token") => {
+                            if first_token_at.is_none() {
+                                first_token_at = Some(
+                                    sent.elapsed().as_secs_f64() * 1e3);
+                            }
+                            stats.gen_tokens += 1;
+                        }
+                        Some("done") => {
+                            if let Some(l) =
+                                j.get("latency_ms").and_then(Json::as_f64)
+                            {
+                                stats.lat_ms.push(l);
+                            }
+                            if let Some(t) =
+                                j.get("ttft_ms").and_then(Json::as_f64)
+                            {
+                                stats.ttft_ms.push(t);
+                            }
+                            if let Some(t) = first_token_at {
+                                stats.client_ttft_ms.push(t);
+                            }
+                            break;
+                        }
+                        Some("error") => anyhow::bail!(
+                            "request failed: {:?}", j.get("error")),
+                        _ => anyhow::bail!("unexpected frame {line:?}"),
+                    }
                 }
             }
             Ok(stats)
         }));
     }
-    let mut agg = RunStats {
-        wall_s: 0.0, gen_tokens: 0, lat_ms: Vec::new(), ttft_ms: Vec::new(),
-    };
+    let mut agg = RunStats::new();
     for h in handles {
         let s = h.join().expect("client panicked")?;
         agg.gen_tokens += s.gen_tokens;
         agg.lat_ms.extend(s.lat_ms);
         agg.ttft_ms.extend(s.ttft_ms);
+        agg.client_ttft_ms.extend(s.client_ttft_ms);
     }
     agg.wall_s = t0.elapsed().as_secs_f64();
     gateway.stop();
-    let report = match Arc::try_unwrap(server) {
-        Ok(srv) => srv.shutdown(),
-        Err(_) => String::new(),
-    };
-    println!("  scheduler: {report}");
+    println!("  scheduler: {}", server.shutdown());
     Ok(agg)
 }
 
@@ -117,12 +275,15 @@ fn main() -> anyhow::Result<()> {
     // Engine intra-op kernel threads (0 = all cores) — DESIGN.md §7.
     let kernel_threads = args.get_usize("threads", 1);
 
+    api_demo(kernel_threads)?;
+
     if !artifacts_dir().join("models/tiny-llama-s/mergequant.qmod").exists() {
-        eprintln!("run `make artifacts` first");
+        eprintln!("(skipping fleet run: run `make artifacts` first)");
         return Ok(());
     }
-    println!("== serve_e2e: {n_requests} requests, {n_clients} clients, \
-              prompt {prompt_len}, decode {max_new} ==");
+    println!("== serve_e2e fleet: {n_requests} requests, {n_clients} \
+              clients, prompt {prompt_len}, decode {max_new}, v2 \
+              streaming ==");
     let mut throughput = std::collections::HashMap::new();
     for method in ["fp16", "mergequant"] {
         println!("[{method}]");
@@ -130,10 +291,12 @@ fn main() -> anyhow::Result<()> {
                       kernel_threads)?;
         let lat = summarize(&s.lat_ms);
         let ttft = summarize(&s.ttft_ms);
+        let cttft = summarize(&s.client_ttft_ms);
         let tput = s.gen_tokens as f64 / s.wall_s;
         println!("  wall {:.2}s  throughput {:.1} gen tok/s", s.wall_s, tput);
-        println!("  latency p50 {:.1}ms p99 {:.1}ms; ttft p50 {:.1}ms",
-                 lat.p50, lat.p99, ttft.p50);
+        println!("  latency p50 {:.1}ms p99 {:.1}ms; ttft p50 {:.1}ms \
+                  (client-observed first frame p50 {:.1}ms)",
+                 lat.p50, lat.p99, ttft.p50, cttft.p50);
         throughput.insert(method, tput);
     }
     if let (Some(fp), Some(mq)) =

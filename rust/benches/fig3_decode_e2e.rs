@@ -42,17 +42,19 @@ fn run_batch(engine: &Engine, batch: usize, kv: KvDtype) -> (f64, f64) {
         })
         .collect();
     let prefill_done = t0.elapsed();
+    // Token selection through the serving contract's sampler (greedy ⇒
+    // bitwise the seed argmax path), so the bench measures exactly what
+    // `Server::generate` runs per decode step.
+    let sampler = mergequant::engine::Sampler::greedy();
     let mut toks: Vec<u32> = vec![5; batch];
     for step in 0..DECODE {
         let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
         engine.decode_batch(&toks, &mut refs, &mut ws).expect("bench decode");
         let v = cfg.vocab;
         for i in 0..batch {
-            toks[i] =
-                mergequant::engine::model::argmax(&ws.logits[i * v..(i + 1) * v])
-                    as u32;
+            toks[i] = sampler.sample(&ws.logits[i * v..(i + 1) * v],
+                                     step as u64 + 1);
         }
-        let _ = step;
     }
     let total = t0.elapsed();
     ((total - prefill_done).as_secs_f64(), total.as_secs_f64())

@@ -52,6 +52,14 @@ impl Args {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    pub fn get_f32(&self, name: &str, default: f32) -> f32 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
     pub fn get_bool(&self, name: &str) -> bool {
         matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
     }
@@ -87,5 +95,13 @@ mod tests {
         assert_eq!(a.get_or("model", "default"), "default");
         assert_eq!(a.get_usize("port", 8080), 8080);
         assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn numeric_flags() {
+        let a = parse("generate --temperature 0.8 --seed 123456789012345");
+        assert!((a.get_f32("temperature", 0.0) - 0.8).abs() < 1e-6);
+        assert_eq!(a.get_u64("seed", 0), 123_456_789_012_345);
+        assert_eq!(a.get_f32("top-p", 1.0), 1.0);
     }
 }

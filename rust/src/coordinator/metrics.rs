@@ -16,6 +16,10 @@ pub struct Metrics {
     /// Requests terminated by a typed engine error (per-request failure
     /// path — e.g. KV-cache overflow) rather than normal completion.
     pub failed: u64,
+    /// Requests torn out of the batch (or out of the pending queue) by
+    /// cancellation — client-initiated, so they count neither as
+    /// completions nor as failures.
+    pub cancelled: u64,
     latencies_s: Vec<f64>,
     ttfts_s: Vec<f64>,
     batch_sizes: Vec<f64>,
@@ -54,8 +58,8 @@ impl Metrics {
         let ttft = self.ttft_summary();
         format!(
             "requests={} prompt_toks={} gen_toks={} decode_iters={} \
-             mean_batch={:.2} peak_batch={} failed={} lat_p50={:.1}ms \
-             lat_p99={:.1}ms ttft_p50={:.1}ms",
+             mean_batch={:.2} peak_batch={} failed={} cancelled={} \
+             lat_p50={:.1}ms lat_p99={:.1}ms ttft_p50={:.1}ms",
             self.requests_completed,
             self.prompt_tokens,
             self.generated_tokens,
@@ -63,6 +67,7 @@ impl Metrics {
             self.mean_batch_size(),
             self.peak_active,
             self.failed,
+            self.cancelled,
             lat.p50 * 1e3,
             lat.p99 * 1e3,
             ttft.p50 * 1e3,

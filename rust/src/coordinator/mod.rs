@@ -4,20 +4,26 @@
 //! Architecture (vLLM-router-like, scaled to one box):
 //!
 //! ```text
-//!  clients ──TCP/json──► gateway ──mpsc──► scheduler (owns Engine)
-//!                                             │  admit → prefill (slab from KvPool)
-//!                                             │  step  → decode_batch over active set
-//!                                             ▼
-//!                                       responses (mpsc per request)
+//!  clients ──TCP/ndjson──► gateway ──mpsc──► scheduler (owns Engine)
+//!                                               │  admit → prefill (slab from KvPool)
+//!                                               │  step  → decode_batch over active set
+//!                                               │  cancel → slab back next iteration
+//!                                               ▼
+//!                                  event streams (one per request:
+//!                                  Token… then Done/Error)
 //! ```
 //!
 //! The scheduler runs iteration-level (continuous) batching: every loop it
-//! admits up to `max_prefills_per_iter` pending requests (bounded by free
-//! KV slabs and `max_batch`), then advances *all* active sequences one
-//! decode step in a single batched engine call. Invariants (property-
-//! tested): every request is answered exactly once, the active set never
-//! exceeds `max_batch`, KV slabs are never double-allocated, FIFO
-//! admission order.
+//! applies cancellations, admits up to `max_prefills_per_iter` pending
+//! requests (bounded by free KV slabs and `max_batch`), then advances
+//! *all* active sequences one decode step in a single batched engine
+//! call. Requests carry [`GenerationParams`] (temperature/top-k/top-p,
+//! per-request seed, stop tokens, token budget) and report progress as
+//! per-token [`Event`] frames — the generation API v2 contract
+//! (DESIGN.md §11). Invariants (property-tested): every request gets
+//! exactly one terminal event, the active set never exceeds `max_batch`,
+//! KV slabs are never double-allocated or leaked (cancellation included),
+//! FIFO admission order.
 
 pub mod kv_pool;
 pub mod metrics;
@@ -27,6 +33,8 @@ pub mod server;
 
 pub use kv_pool::KvPool;
 pub use metrics::Metrics;
-pub use request::{Request, Response};
+pub use request::{
+    Event, FinishReason, GenerationParams, Request, Response, SubmitError,
+};
 pub use scheduler::{Scheduler, SchedulerConfig};
-pub use server::Server;
+pub use server::{RequestHandle, Server};

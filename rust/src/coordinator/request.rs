@@ -1,25 +1,132 @@
-//! Request/response types of the serving layer.
+//! Request/response/event types of the serving layer — the generation
+//! API v2 contract (DESIGN.md §11).
+//!
+//! A request is a prompt plus [`GenerationParams`] (sampling knobs, stop
+//! tokens, token budget). Its lifecycle is reported as a stream of
+//! [`Event`]s: one `Token` per generated token, then exactly one terminal
+//! frame — `Done` on normal completion (including cancellation) or
+//! `Error` on a per-request failure. Admission failures never enter the
+//! stream at all: they surface synchronously as [`SubmitError`].
 
 use std::time::{Duration, Instant};
+
+use crate::engine::Sampler;
+
+/// Per-request generation parameters — the serving contract's sampling
+/// surface. `temperature == 0` is the greedy special case and reproduces
+/// the seed argmax token streams bitwise; any other temperature engages
+/// the seeded top-k/top-p sampler (deterministic for a fixed `seed`
+/// regardless of thread count or scheduling, DESIGN.md §11).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenerationParams {
+    /// Token budget (includes the first token sampled at prefill).
+    pub max_new: usize,
+    /// Softmax temperature; `0.0` ⇒ greedy argmax (seed-identical).
+    pub temperature: f32,
+    /// Keep only the `top_k` highest-logit tokens (`0` ⇒ no cut).
+    pub top_k: usize,
+    /// Nucleus cut: smallest prefix of the sorted distribution with
+    /// cumulative probability ≥ `top_p` (`1.0` ⇒ no cut).
+    pub top_p: f32,
+    /// Seed of the per-request counter-based RNG (draw *t* depends only
+    /// on `(seed, t)`, never on scheduling).
+    pub seed: u64,
+    /// Generation stops after emitting any of these tokens.
+    pub stop_tokens: Vec<u32>,
+}
+
+impl Default for GenerationParams {
+    fn default() -> Self {
+        GenerationParams {
+            max_new: 16,
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: 0,
+            stop_tokens: Vec::new(),
+        }
+    }
+}
+
+impl GenerationParams {
+    /// Greedy decoding with a token budget — the v1 `submit` semantics.
+    pub fn greedy(max_new: usize) -> Self {
+        GenerationParams { max_new, ..Self::default() }
+    }
+
+    /// Reject parameter combinations the sampler cannot honour. Checked
+    /// at the `Server::generate` boundary (and therefore for every TCP
+    /// frame) so bad requests fail synchronously, not mid-stream.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_new == 0 {
+            return Err("max_new must be >= 1".into());
+        }
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            return Err(format!(
+                "temperature must be finite and >= 0 (got {})",
+                self.temperature
+            ));
+        }
+        // The comparison form also rejects NaN.
+        if !(self.top_p > 0.0 && self.top_p <= 1.0) {
+            return Err(format!(
+                "top_p must be in (0, 1] (got {})", self.top_p
+            ));
+        }
+        Ok(())
+    }
+
+    /// The engine-side sampler these parameters describe.
+    pub fn sampler(&self) -> Sampler {
+        Sampler::new(self.temperature, self.top_k, self.top_p, self.seed)
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<u32>,
-    pub max_new: usize,
-    /// Optional stop token (EOS).
-    pub stop_token: Option<u32>,
+    pub params: GenerationParams,
     pub submitted: Instant,
 }
 
 impl Request {
+    /// Greedy request with a token budget (v1-compatible constructor).
     pub fn new(id: u64, prompt: Vec<u32>, max_new: usize) -> Self {
-        Request {
-            id,
-            prompt,
-            max_new,
-            stop_token: None,
-            submitted: Instant::now(),
+        Self::with_params(id, prompt, GenerationParams::greedy(max_new))
+    }
+
+    /// Request with explicit generation parameters.
+    pub fn with_params(id: u64, prompt: Vec<u32>, params: GenerationParams)
+                       -> Self {
+        Request { id, prompt, params, submitted: Instant::now() }
+    }
+}
+
+/// Why a sequence left the continuous batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit the `max_new` token budget.
+    Length,
+    /// Emitted one of the request's stop tokens.
+    Stop,
+    /// Its KV slab filled before the budget was reached.
+    CacheFull,
+    /// Torn out of the batch by `cancel()` (or a vanished client).
+    Cancelled,
+    /// Terminated by a typed engine error (carried in `Response::error`).
+    Error,
+}
+
+impl FinishReason {
+    /// Wire name used by the v2 NDJSON protocol.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::CacheFull => "cache_full",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Error => "error",
         }
     }
 }
@@ -33,18 +140,143 @@ pub struct Response {
     /// Total latency from submission to completion.
     pub latency: Duration,
     pub prompt_len: usize,
+    /// Why the sequence finished.
+    pub finish: FinishReason,
     /// Per-request failure description (e.g. a typed engine error such as
     /// KV-cache overflow); `None` on success. Failed requests still get a
-    /// response — failures never kill the scheduler worker.
+    /// terminal event — failures never kill the scheduler worker.
     pub error: Option<String>,
 }
 
 impl Response {
+    /// Terminal summary for a request that never produced tokens
+    /// (admission failure, dead worker, cancelled while pending).
+    pub fn failed(id: u64, prompt_len: usize, latency: Duration,
+                  error: String) -> Self {
+        Response {
+            id,
+            tokens: Vec::new(),
+            ttft: Duration::ZERO,
+            latency,
+            prompt_len,
+            finish: FinishReason::Error,
+            error: Some(error),
+        }
+    }
+
     pub fn decode_tokens_per_sec(&self) -> f64 {
         let decode_time = self.latency.saturating_sub(self.ttft);
         if decode_time.is_zero() || self.tokens.len() <= 1 {
             return 0.0;
         }
         (self.tokens.len() - 1) as f64 / decode_time.as_secs_f64()
+    }
+}
+
+/// One frame of a request's event stream. `Token` frames arrive in token
+/// order; the stream ends with exactly one `Done` or `Error` frame.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// Token `token` is the `index`-th generated token of request `id`.
+    Token { id: u64, index: usize, token: u32 },
+    /// Normal completion (including cancellation — see
+    /// [`Response::finish`]); carries the full summary.
+    Done { response: Response },
+    /// Per-request failure; `response.error` holds the message and
+    /// `response.tokens` whatever was generated before the failure.
+    Error { response: Response },
+}
+
+impl Event {
+    /// Request this frame belongs to.
+    pub fn id(&self) -> u64 {
+        match self {
+            Event::Token { id, .. } => *id,
+            Event::Done { response } | Event::Error { response } => {
+                response.id
+            }
+        }
+    }
+
+    /// `true` for `Done`/`Error` — the last frame of a stream.
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, Event::Token { .. })
+    }
+}
+
+/// Typed admission failures of [`super::Server::generate`] — surfaced to
+/// the caller (and as v2 `error` frames on the TCP gateway) instead of
+/// the seed behaviour of panicking on a dead worker.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The scheduler's pending queue is at `queue_cap` (backpressure).
+    QueueFull { cap: usize },
+    /// The scheduler worker thread has exited (shutdown or crash).
+    WorkerGone,
+    /// The request's [`GenerationParams`] failed validation.
+    InvalidParams(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { cap } => {
+                write!(f, "queue full (cap {cap})")
+            }
+            SubmitError::WorkerGone => write!(f, "server worker gone"),
+            SubmitError::InvalidParams(msg) => {
+                write!(f, "invalid generation params: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_params_are_greedy() {
+        let p = GenerationParams::default();
+        assert_eq!(p.temperature, 0.0);
+        assert!(p.sampler().is_greedy());
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_params() {
+        let mut p = GenerationParams::greedy(8);
+        p.temperature = -1.0;
+        assert!(p.validate().is_err());
+        p.temperature = f32::NAN;
+        assert!(p.validate().is_err());
+        p.temperature = 0.7;
+        p.top_p = 0.0;
+        assert!(p.validate().is_err());
+        p.top_p = 1.5;
+        assert!(p.validate().is_err());
+        p.top_p = 0.9;
+        assert!(p.validate().is_ok());
+        p.max_new = 0;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn event_ids_and_terminality() {
+        let resp = Response::failed(7, 3, Duration::ZERO, "x".into());
+        assert_eq!(Event::Token { id: 7, index: 0, token: 1 }.id(), 7);
+        assert!(!Event::Token { id: 7, index: 0, token: 1 }.is_terminal());
+        assert!(Event::Error { response: resp.clone() }.is_terminal());
+        assert!(Event::Done { response: resp }.is_terminal());
+    }
+
+    #[test]
+    fn submit_error_display() {
+        assert_eq!(SubmitError::QueueFull { cap: 4 }.to_string(),
+                   "queue full (cap 4)");
+        assert_eq!(SubmitError::WorkerGone.to_string(),
+                   "server worker gone");
     }
 }

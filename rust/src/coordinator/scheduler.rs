@@ -3,13 +3,27 @@
 //! Owns the engine, a KV pool and the pending queue. Each call to
 //! [`Scheduler::step`] performs one scheduling iteration:
 //!
-//! 1. **Admission (router):** pop pending requests FIFO while there is
+//! 1. **Cancellation:** tear cancelled sequences out of the batch —
+//!    pending requests are answered immediately, active/prefilling ones
+//!    are finalized this iteration and their KV slabs returned.
+//! 2. **Admission (router):** pop pending requests FIFO while there is
 //!    batch room and a free KV slab, capped at `max_prefills_per_iter`
 //!    per iteration to bound decode stalls; run their prefill and sample
 //!    their first token (TTFT point).
-//! 2. **Decode:** one batched decode step across all active sequences.
-//! 3. **Completion:** sequences that hit `max_new` / stop token / cache
-//!    capacity are finalized, their slabs returned to the pool.
+//! 3. **Decode:** one batched decode step across all active sequences.
+//! 4. **Completion:** sequences that hit `max_new` / a stop token /
+//!    cache capacity are finalized, their slabs returned to the pool.
+//!
+//! Progress is reported as an **event stream** ([`Event`], drained via
+//! [`Scheduler::take_events`]): one `Token` frame per sampled token and
+//! exactly one terminal `Done`/`Error` frame per request — the per-token
+//! cadence the serving layer streams to clients (DESIGN.md §11).
+//!
+//! Token selection goes through each request's seeded
+//! [`Sampler`](crate::engine::Sampler) (`GenerationParams::sampler`):
+//! greedy requests run the seed argmax path bitwise unchanged, sampled
+//! requests draw from a counter-based per-request RNG, so streams are
+//! deterministic for every thread count and batch composition.
 //!
 //! **Threading model:** the scheduling loop itself is synchronous — one
 //! iteration at a time, driven by [`super::server::Server`]'s worker
@@ -24,11 +38,11 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use crate::engine::{model::argmax, Engine, EngineError, KvDtype, Workspace};
+use crate::engine::{Engine, EngineError, KvDtype, Sampler, Workspace};
 
 use super::kv_pool::KvPool;
 use super::metrics::Metrics;
-use super::request::{Request, Response};
+use super::request::{Event, FinishReason, Request, Response};
 
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
@@ -78,9 +92,12 @@ struct Active {
     tokens: Vec<u32>,
     next: u32,
     ttft: Duration,
+    /// Per-request seeded sampler (greedy for `temperature == 0`).
+    sampler: Sampler,
     done: bool,
+    finish: FinishReason,
     /// Set when a typed engine error terminated this sequence; carried
-    /// into the Response so the failure is per-request, not fatal.
+    /// into the terminal event so the failure is per-request, not fatal.
     error: Option<String>,
 }
 
@@ -101,7 +118,11 @@ pub struct Scheduler {
     active: Vec<Active>,
     ws: Workspace,
     pub metrics: Metrics,
-    completed: Vec<Response>,
+    /// Ids whose cancellation was requested but not yet applied; drained
+    /// at the start of every iteration (unknown ids are dropped — the
+    /// request already finished).
+    cancel_requests: Vec<u64>,
+    events: Vec<Event>,
 }
 
 impl Scheduler {
@@ -127,7 +148,8 @@ impl Scheduler {
             active: Vec::new(),
             ws: Workspace::new(),
             metrics: Metrics::default(),
-            completed: Vec::new(),
+            cancel_requests: Vec::new(),
+            events: Vec::new(),
         }
     }
 
@@ -145,6 +167,15 @@ impl Scheduler {
         Ok(())
     }
 
+    /// Request cancellation of `id`. Applied at the start of the next
+    /// iteration: a pending request is answered immediately (`Done`,
+    /// finish `Cancelled`), an active or prefilling one is torn out of
+    /// the continuous batch and its KV slab returned to the pool. Ids
+    /// that match nothing (already finished, never existed) are ignored.
+    pub fn cancel(&mut self, id: u64) {
+        self.cancel_requests.push(id);
+    }
+
     pub fn has_work(&self) -> bool {
         !self.pending.is_empty() || !self.active.is_empty()
             || self.prefilling.is_some()
@@ -158,17 +189,73 @@ impl Scheduler {
         self.pending.len()
     }
 
-    /// Drain finished responses accumulated since the last call.
-    pub fn take_completed(&mut self) -> Vec<Response> {
-        std::mem::take(&mut self.completed)
+    /// Free KV slabs (capacity minus live sequences) — observability for
+    /// tests and admission diagnostics.
+    pub fn kv_available(&self) -> usize {
+        self.pool.available()
+    }
+
+    pub fn kv_capacity(&self) -> usize {
+        self.pool.capacity()
+    }
+
+    /// Drain the event stream accumulated since the last call: `Token`
+    /// frames in generation order, one terminal `Done`/`Error` frame per
+    /// finished request.
+    pub fn take_events(&mut self) -> Vec<Event> {
+        std::mem::take(&mut self.events)
     }
 
     /// One scheduling iteration. Returns number of sequences advanced.
     pub fn step(&mut self) -> usize {
+        self.apply_cancellations();
         self.admit();
         self.decode();
         self.finalize();
         self.active.len()
+    }
+
+    /// Apply queued `cancel()` calls: answer pending requests outright,
+    /// mark active/prefilling sequences done with finish `Cancelled` so
+    /// this iteration's finalize returns their slabs.
+    fn apply_cancellations(&mut self) {
+        for id in std::mem::take(&mut self.cancel_requests) {
+            if let Some(pos) = self.pending.iter().position(|r| r.id == id) {
+                let req = self.pending.remove(pos).unwrap();
+                self.answer_cancelled(&req);
+                continue;
+            }
+            if self.prefilling.as_ref().is_some_and(|p| p.req.id == id) {
+                let pf = self.prefilling.take().unwrap();
+                self.pool.dealloc(pf.slab);
+                self.answer_cancelled(&pf.req);
+                continue;
+            }
+            if let Some(a) =
+                self.active.iter_mut().find(|a| a.req.id == id && !a.done)
+            {
+                a.done = true;
+                a.finish = FinishReason::Cancelled;
+                self.metrics.cancelled += 1;
+            }
+        }
+    }
+
+    /// Terminal event for a request cancelled before it produced any
+    /// token (pending / mid-prefill).
+    fn answer_cancelled(&mut self, req: &Request) {
+        self.metrics.cancelled += 1;
+        self.events.push(Event::Done {
+            response: Response {
+                id: req.id,
+                tokens: Vec::new(),
+                ttft: Duration::ZERO,
+                latency: req.submitted.elapsed(),
+                prompt_len: req.prompt.len(),
+                finish: FinishReason::Cancelled,
+                error: None,
+            },
+        });
     }
 
     /// Fail a not-yet-active request with a typed engine error: free its
@@ -176,13 +263,50 @@ impl Scheduler {
     fn fail_request(&mut self, req: Request, slab: usize, err: &EngineError) {
         self.pool.dealloc(slab);
         self.metrics.failed += 1;
-        self.completed.push(Response {
-            id: req.id,
-            tokens: Vec::new(),
-            ttft: Duration::ZERO,
-            latency: req.submitted.elapsed(),
-            prompt_len: req.prompt.len(),
-            error: Some(err.to_string()),
+        self.events.push(Event::Error {
+            response: Response::failed(req.id, req.prompt.len(),
+                                       req.submitted.elapsed(),
+                                       err.to_string()),
+        });
+    }
+
+    /// Promote a fully-prefilled request into the active set: sample its
+    /// first token (counter step 0 — the TTFT point) and emit the first
+    /// `Token` frame.
+    fn activate(&mut self, req: Request, slab: usize, first_logits_row: usize) {
+        let vocab = self.engine.config().vocab;
+        let row = &self.ws.logits
+            [first_logits_row * vocab..(first_logits_row + 1) * vocab];
+        let sampler = req.params.sampler();
+        let first = sampler.sample(row, 0);
+        let ttft = req.submitted.elapsed();
+        self.events.push(Event::Token { id: req.id, index: 0, token: first });
+        // Same termination rules (and priority) as the decode step, so a
+        // prompt that exactly fills its slab ends gracefully with
+        // `CacheFull` instead of tripping a KvOverflow next iteration.
+        let cache_full = {
+            let c = self.pool.get_mut(slab);
+            c.len + 1 >= c.cap
+        };
+        let (done, finish) = if req.params.stop_tokens.contains(&first) {
+            (true, FinishReason::Stop)
+        } else if req.params.max_new <= 1 {
+            (true, FinishReason::Length)
+        } else if cache_full {
+            (true, FinishReason::CacheFull)
+        } else {
+            (false, FinishReason::Length)
+        };
+        self.active.push(Active {
+            req,
+            slab,
+            tokens: vec![first],
+            next: first,
+            ttft,
+            sampler,
+            done,
+            finish,
+            error: None,
         });
     }
 
@@ -201,20 +325,7 @@ impl Scheduler {
         self.metrics.prefill_calls += 1;
         pf.consumed = end;
         if pf.consumed == pf.req.prompt.len() {
-            let vocab = self.engine.config().vocab;
-            let first = argmax(
-                &self.ws.logits[(toks.len() - 1) * vocab..toks.len() * vocab],
-            ) as u32;
-            let ttft = pf.req.submitted.elapsed();
-            self.active.push(Active {
-                req: pf.req,
-                slab: pf.slab,
-                tokens: vec![first],
-                next: first,
-                ttft,
-                done: false,
-                error: None,
-            });
+            self.activate(pf.req, pf.slab, toks.len() - 1);
         } else {
             self.prefilling = Some(pf);
         }
@@ -239,7 +350,6 @@ impl Scheduler {
                 admitted += usize::from(self.advance_chunked());
                 continue;
             }
-            let vocab = self.engine.config().vocab;
             let cache = self.pool.get_mut(slab);
             // Oversized prompts (and any other engine-side failure)
             // surface as the typed error → per-request failure; the
@@ -251,19 +361,8 @@ impl Scheduler {
                 continue;
             }
             self.metrics.prefill_calls += 1;
-            let last = &self.ws.logits
-                [(req.prompt.len() - 1) * vocab..req.prompt.len() * vocab];
-            let first = argmax(last) as u32;
-            let ttft = req.submitted.elapsed();
-            self.active.push(Active {
-                req,
-                slab,
-                tokens: vec![first],
-                next: first,
-                ttft,
-                done: false,
-                error: None,
-            });
+            let last_row = req.prompt.len() - 1;
+            self.activate(req, slab, last_row);
             admitted += 1;
         }
     }
@@ -275,7 +374,8 @@ impl Scheduler {
         // Sequences that already reached their budget skip the step.
         let run_idx: Vec<usize> = (0..self.active.len())
             .filter(|&i| !self.active[i].done
-                && self.active[i].tokens.len() < self.active[i].req.max_new)
+                && self.active[i].tokens.len()
+                    < self.active[i].req.params.max_new)
             .collect();
         if run_idx.is_empty() {
             for a in &mut self.active {
@@ -297,6 +397,7 @@ impl Scheduler {
                 EngineError::KvOverflow { lane, .. } => {
                     let idx = run_idx[lane];
                     self.active[idx].error = Some(e.to_string());
+                    self.active[idx].finish = FinishReason::Error;
                     self.active[idx].done = true;
                     self.metrics.failed += 1;
                 }
@@ -305,6 +406,7 @@ impl Scheduler {
                     // than livelock on a persistent error.
                     for &idx in &run_idx {
                         self.active[idx].error = Some(e.to_string());
+                        self.active[idx].finish = FinishReason::Error;
                         self.active[idx].done = true;
                         self.metrics.failed += 1;
                     }
@@ -316,19 +418,32 @@ impl Scheduler {
         let vocab = self.engine.config().vocab;
         for (bi, &i) in run_idx.iter().enumerate() {
             let row = &self.ws.logits[bi * vocab..(bi + 1) * vocab];
-            let tok = argmax(row) as u32;
             let a = &mut self.active[i];
+            // Counter step = number of tokens sampled so far, so the
+            // stream is a pure function of (seed, step) — identical for
+            // every thread count and batch composition.
+            let tok = a.sampler.sample(row, a.tokens.len() as u64);
             a.tokens.push(tok);
             a.next = tok;
+            self.events.push(Event::Token {
+                id: a.req.id,
+                index: a.tokens.len() - 1,
+                token: tok,
+            });
             let cache_full = {
                 let c = self.pool.get_mut(a.slab);
                 c.len + 1 >= c.cap
             };
-            if a.tokens.len() >= a.req.max_new
-                || Some(tok) == a.req.stop_token
-                || cache_full
-            {
+            let a = &mut self.active[i];
+            if a.req.params.stop_tokens.contains(&tok) {
                 a.done = true;
+                a.finish = FinishReason::Stop;
+            } else if a.tokens.len() >= a.req.params.max_new {
+                a.done = true;
+                a.finish = FinishReason::Length;
+            } else if cache_full {
+                a.done = true;
+                a.finish = FinishReason::CacheFull;
             }
         }
     }
@@ -340,21 +455,31 @@ impl Scheduler {
                 let a = self.active.swap_remove(i);
                 self.pool.dealloc(a.slab);
                 let latency = a.req.submitted.elapsed();
-                // Failed sequences count only in `failed` (set at the
-                // failure site) — mirroring fail_request(), so completion
-                // counts and latency percentiles describe successes only.
-                if a.error.is_none() {
+                // Failed/cancelled sequences count only in their own
+                // counters (set at the marking site) — completion counts
+                // and latency percentiles describe normal successes only.
+                if a.error.is_none() && a.finish != FinishReason::Cancelled {
                     self.metrics.record_completion(latency, a.ttft,
                                                    a.req.prompt.len(),
                                                    a.tokens.len());
                 }
-                self.completed.push(Response {
+                let response = Response {
                     id: a.req.id,
                     tokens: a.tokens,
                     ttft: a.ttft,
                     latency,
                     prompt_len: a.req.prompt.len(),
+                    finish: if a.error.is_some() {
+                        FinishReason::Error
+                    } else {
+                        a.finish
+                    },
                     error: a.error,
+                };
+                self.events.push(if response.error.is_some() {
+                    Event::Error { response }
+                } else {
+                    Event::Done { response }
                 });
             } else {
                 i += 1;
@@ -362,13 +487,22 @@ impl Scheduler {
         }
     }
 
-    /// Run until all submitted work completes; returns all responses.
+    /// Run until all submitted work completes; returns the terminal
+    /// response of every request (token frames are dropped — use
+    /// [`Scheduler::take_events`] for the full stream).
     pub fn run_to_completion(&mut self) -> Vec<Response> {
         let mut out = Vec::new();
         let start = Instant::now();
         while self.has_work() {
             self.step();
-            out.extend(self.take_completed());
+            for ev in self.take_events() {
+                match ev {
+                    Event::Done { response } | Event::Error { response } => {
+                        out.push(response)
+                    }
+                    Event::Token { .. } => {}
+                }
+            }
             assert!(start.elapsed() < Duration::from_secs(600),
                     "scheduler livelock");
         }

@@ -1,10 +1,16 @@
-//! Threaded serving front-end.
+//! Threaded serving front-end — generation API v2 (DESIGN.md §11).
 //!
 //! [`Server`] owns the scheduler on a worker thread and exposes:
-//!   * an in-process async-ish API (`submit` → `Receiver<Response>`),
-//!   * an optional TCP gateway speaking line-delimited JSON
-//!     (`{"prompt":[..],"max_new":N}` → `{"id":..,"tokens":[..],…}`),
-//!     which is what `examples/serve_e2e.rs` exercises end to end.
+//!   * the in-process streaming API: [`Server::generate`] →
+//!     [`RequestHandle`] yielding [`Event`] frames (one per token, then a
+//!     terminal `Done`/`Error`) with [`RequestHandle::cancel`] tearing
+//!     the sequence out of the continuous batch;
+//!   * typed admission errors ([`SubmitError`]) — a dead worker or a full
+//!     queue is a `Result`, never a panic;
+//!   * a TCP gateway speaking NDJSON: v1 single-shot requests
+//!     (`{"prompt":[..],"max_new":N}` → one summary object) and v2
+//!     streaming requests (`{"prompt":[..],"params":{..}}` → one frame
+//!     per token, then a terminal `done`/`error` frame).
 //!
 //! The worker thread drives scheduling only; compute fans out from inside
 //! the engine onto its intra-op pool, sized by
@@ -14,23 +20,89 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::util::json::{num, obj, Json};
+use crate::util::json::{num, obj, s, Json};
 
-use super::request::{Request, Response};
+use super::request::{
+    Event, GenerationParams, Request, Response, SubmitError,
+};
 use super::scheduler::{Scheduler, SchedulerConfig};
 use crate::engine::Engine;
 
 enum Msg {
-    Submit(Request, Sender<Response>),
+    Submit(Request, Sender<Event>, Sender<Result<(), SubmitError>>),
+    Cancel(u64),
     Shutdown,
+}
+
+/// Live handle on an in-flight request: an event stream plus a cancel
+/// control. Dropping the handle without draining it cancels the request
+/// on the worker's next delivery attempt (a vanished consumer must not
+/// keep burning decode steps).
+pub struct RequestHandle {
+    id: u64,
+    events: Receiver<Event>,
+    ctl: Sender<Msg>,
+}
+
+impl std::fmt::Debug for RequestHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RequestHandle").field("id", &self.id).finish()
+    }
+}
+
+impl RequestHandle {
+    /// Server-assigned request id (matches every event's `id`).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Next event, blocking; `None` once the stream is closed (after the
+    /// terminal frame, or if the worker died mid-request).
+    pub fn recv(&self) -> Option<Event> {
+        self.events.recv().ok()
+    }
+
+    /// Next event if one is already queued (non-blocking).
+    pub fn try_recv(&self) -> Option<Event> {
+        self.events.try_recv().ok()
+    }
+
+    /// Ask the scheduler to tear this request out of the continuous
+    /// batch; its KV slab is returned on the next scheduler iteration
+    /// and the stream ends with `Done { finish: Cancelled }`. Safe to
+    /// call at any point (no-op once the request has finished).
+    pub fn cancel(&self) {
+        let _ = self.ctl.send(Msg::Cancel(self.id));
+    }
+
+    /// Drain the stream to its terminal frame and return the summary.
+    /// If the worker dies mid-stream, a synthetic error response carrying
+    /// the tokens received so far is returned instead of panicking.
+    pub fn wait(self) -> Response {
+        let mut tokens = Vec::new();
+        loop {
+            match self.events.recv() {
+                Ok(Event::Token { token, .. }) => tokens.push(token),
+                Ok(Event::Done { response })
+                | Ok(Event::Error { response }) => return response,
+                Err(_) => {
+                    let mut resp = Response::failed(
+                        self.id, 0, std::time::Duration::ZERO,
+                        SubmitError::WorkerGone.to_string());
+                    resp.tokens = tokens;
+                    return resp;
+                }
+            }
+        }
+    }
 }
 
 pub struct Server {
     tx: Sender<Msg>,
-    worker: Option<JoinHandle<String>>,
+    worker: Mutex<Option<JoinHandle<String>>>,
     next_id: AtomicU64,
 }
 
@@ -38,44 +110,103 @@ impl Server {
     pub fn start(engine: Engine, cfg: SchedulerConfig) -> Self {
         let (tx, rx) = channel::<Msg>();
         let worker = std::thread::spawn(move || worker_loop(engine, cfg, rx));
-        Server { tx, worker: Some(worker), next_id: AtomicU64::new(1) }
+        Server {
+            tx,
+            worker: Mutex::new(Some(worker)),
+            next_id: AtomicU64::new(1),
+        }
     }
 
-    /// Submit a prompt; the response arrives on the returned channel.
+    /// Submit a generation request. Admission is synchronous: the handle
+    /// is returned only once the request holds a queue slot, so
+    /// backpressure ([`SubmitError::QueueFull`]), a dead worker
+    /// ([`SubmitError::WorkerGone`]) and parameter validation all fail
+    /// here — the event stream itself only ever carries progress.
+    pub fn generate(&self, prompt: Vec<u32>, params: GenerationParams)
+                    -> Result<RequestHandle, SubmitError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.generate_as(id, prompt, params)
+    }
+
+    fn generate_as(&self, id: u64, prompt: Vec<u32>,
+                   params: GenerationParams)
+                   -> Result<RequestHandle, SubmitError> {
+        params.validate().map_err(SubmitError::InvalidParams)?;
+        if prompt.is_empty() {
+            return Err(SubmitError::InvalidParams(
+                "prompt must be non-empty".into()));
+        }
+        let (etx, erx) = channel();
+        let (ack_tx, ack_rx) = channel();
+        let req = Request::with_params(id, prompt, params);
+        self.tx
+            .send(Msg::Submit(req, etx, ack_tx))
+            .map_err(|_| SubmitError::WorkerGone)?;
+        match ack_rx.recv() {
+            Ok(Ok(())) => Ok(RequestHandle {
+                id,
+                events: erx,
+                ctl: self.tx.clone(),
+            }),
+            Ok(Err(e)) => Err(e),
+            // Worker exited between accepting the message and acking.
+            Err(_) => Err(SubmitError::WorkerGone),
+        }
+    }
+
+    /// Submit a greedy prompt; the one-shot response arrives on the
+    /// returned channel. Thin shim over [`Server::generate`] — admission
+    /// errors arrive as an error response instead of a panic.
+    #[deprecated(note = "use Server::generate and stream the RequestHandle")]
     pub fn submit(&self, prompt: Vec<u32>, max_new: usize)
                   -> Receiver<Response> {
         let (rtx, rrx) = channel();
+        let prompt_len = prompt.len();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = Request::new(id, prompt, max_new);
-        self.tx
-            .send(Msg::Submit(req, rtx))
-            .expect("server worker gone");
+        match self.generate_as(id, prompt, GenerationParams::greedy(max_new)) {
+            Ok(handle) => {
+                // The shim's contract is a non-blocking submit returning
+                // a channel; a detached drainer bridges the streams.
+                std::thread::spawn(move || {
+                    let _ = rtx.send(handle.wait());
+                });
+            }
+            Err(e) => {
+                // Answer with the id the request would have had — legacy
+                // callers correlate by it (seed queue-full behaviour).
+                let _ = rtx.send(Response::failed(
+                    id, prompt_len, std::time::Duration::ZERO,
+                    e.to_string()));
+            }
+        }
         rrx
     }
 
-    /// Stop the worker and return its final metrics report.
-    pub fn shutdown(mut self) -> String {
+    /// Stop the worker and return its final metrics report. Subsequent
+    /// [`Server::generate`] calls return [`SubmitError::WorkerGone`].
+    pub fn shutdown(&self) -> String {
         let _ = self.tx.send(Msg::Shutdown);
-        self.worker
-            .take()
-            .map(|h| h.join().unwrap_or_default())
-            .unwrap_or_default()
+        let handle = self.worker.lock().expect("worker mutex").take();
+        handle.map(|h| h.join().unwrap_or_default()).unwrap_or_default()
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
         let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
+        if let Ok(mut guard) = self.worker.lock() {
+            if let Some(h) = guard.take() {
+                let _ = h.join();
+            }
         }
     }
 }
 
 fn worker_loop(engine: Engine, cfg: SchedulerConfig, rx: Receiver<Msg>)
                -> String {
+    let queue_cap = cfg.queue_cap;
     let mut sched = Scheduler::new(engine, cfg);
-    let mut reply_map: std::collections::HashMap<u64, Sender<Response>> =
+    let mut sinks: std::collections::HashMap<u64, Sender<Event>> =
         std::collections::HashMap::new();
     let mut shutdown = false;
     loop {
@@ -96,22 +227,21 @@ fn worker_loop(engine: Engine, cfg: SchedulerConfig, rx: Receiver<Msg>)
                 }
             };
             match msg {
-                Msg::Submit(req, reply) => {
-                    reply_map.insert(req.id, reply);
-                    if let Err(req) = sched.submit(req) {
-                        // queue full — answer with empty tokens
-                        if let Some(r) = reply_map.remove(&req.id) {
-                            let _ = r.send(Response {
-                                id: req.id,
-                                tokens: Vec::new(),
-                                ttft: std::time::Duration::ZERO,
-                                latency: req.submitted.elapsed(),
-                                prompt_len: req.prompt.len(),
-                                error: Some("queue full".into()),
-                            });
+                Msg::Submit(req, events, ack) => {
+                    let id = req.id;
+                    match sched.submit(req) {
+                        Ok(()) => {
+                            sinks.insert(id, events);
+                            let _ = ack.send(Ok(()));
+                        }
+                        Err(_rejected) => {
+                            let _ = ack.send(Err(SubmitError::QueueFull {
+                                cap: queue_cap,
+                            }));
                         }
                     }
                 }
+                Msg::Cancel(id) => sched.cancel(id),
                 Msg::Shutdown => {
                     shutdown = true;
                     break;
@@ -119,9 +249,19 @@ fn worker_loop(engine: Engine, cfg: SchedulerConfig, rx: Receiver<Msg>)
             }
         }
         sched.step();
-        for resp in sched.take_completed() {
-            if let Some(r) = reply_map.remove(&resp.id) {
-                let _ = r.send(resp);
+        for ev in sched.take_events() {
+            let id = ev.id();
+            let terminal = ev.is_terminal();
+            if let Some(sink) = sinks.get(&id) {
+                let delivered = sink.send(ev).is_ok();
+                if terminal {
+                    sinks.remove(&id);
+                } else if !delivered {
+                    // Consumer vanished mid-stream (handle dropped):
+                    // tear the request out so its slab comes back.
+                    sinks.remove(&id);
+                    sched.cancel(id);
+                }
             }
         }
         if shutdown && !sched.has_work() {
@@ -131,7 +271,7 @@ fn worker_loop(engine: Engine, cfg: SchedulerConfig, rx: Receiver<Msg>)
 }
 
 // ---------------------------------------------------------------------
-// TCP gateway (line-delimited JSON)
+// TCP gateway (NDJSON, v1 single-shot + v2 streaming)
 // ---------------------------------------------------------------------
 
 pub struct TcpGateway {
@@ -178,6 +318,11 @@ impl TcpGateway {
     }
 }
 
+/// Top-level request keys the gateway accepts; anything else is a
+/// protocol error (strictness catches client typos before they silently
+/// change sampling behaviour).
+const TOP_KEYS: &[&str] = &["prompt", "max_new", "params"];
+
 fn handle_conn(stream: TcpStream, server: Arc<Server>) -> anyhow::Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
@@ -194,31 +339,198 @@ fn handle_conn(stream: TcpStream, server: Arc<Server>) -> anyhow::Result<()> {
         let j = match Json::parse(trimmed) {
             Ok(j) => j,
             Err(e) => {
-                writeln!(out, "{}", obj(vec![("error", Json::Str(e))])
-                    .to_string())?;
+                write_frame(&mut out, &error_frame(None, &e))?;
                 continue;
             }
         };
-        let prompt: Vec<u32> = j
-            .get("prompt")
-            .and_then(Json::as_arr)
-            .map(|a| a.iter().filter_map(|v| v.as_usize()).map(|v| v as u32)
-                .collect())
-            .unwrap_or_default();
-        let max_new = j.get("max_new").and_then(Json::as_usize).unwrap_or(16);
-        let resp = server.submit(prompt, max_new).recv()?;
-        let mut fields = vec![
-            ("id", num(resp.id as f64)),
-            ("prompt_len", num(resp.prompt_len as f64)),
-            ("ttft_ms", num(resp.ttft.as_secs_f64() * 1e3)),
-            ("latency_ms", num(resp.latency.as_secs_f64() * 1e3)),
-            ("tokens", Json::Arr(
-                resp.tokens.iter().map(|&t| num(t as f64)).collect())),
-        ];
-        if let Some(e) = &resp.error {
-            fields.push(("error", Json::Str(e.clone())));
+        let (prompt, params, streaming) = match parse_request(&j) {
+            Ok(parsed) => parsed,
+            Err(msg) => {
+                write_frame(&mut out, &error_frame(None, &msg))?;
+                continue;
+            }
+        };
+        match server.generate(prompt, params) {
+            // Typed admission failure (queue full, dead worker, bad
+            // params) — the v2 error frame the contract promises.
+            Err(e) => {
+                write_frame(&mut out, &error_frame(None, &e.to_string()))?;
+            }
+            Ok(handle) => {
+                if streaming {
+                    if let Err(e) = stream_events(&mut out, &handle) {
+                        // Client hung up mid-stream: tear the request out
+                        // of the batch so its KV slab comes back.
+                        handle.cancel();
+                        return Err(e);
+                    }
+                } else {
+                    let resp = handle.wait();
+                    write_frame(&mut out, &v1_frame(&resp))?;
+                }
+            }
         }
-        let reply = obj(fields);
-        writeln!(out, "{}", reply.to_string())?;
     }
+}
+
+/// Pump one request's events onto the wire; an `Err` means the client
+/// connection failed mid-stream (the caller cancels the request).
+fn stream_events(out: &mut TcpStream, handle: &RequestHandle)
+                 -> anyhow::Result<()> {
+    loop {
+        match handle.recv() {
+            Some(Event::Token { id, index, token }) => {
+                write_frame(out, &obj(vec![
+                    ("event", s("token")),
+                    ("id", num(id as f64)),
+                    ("index", num(index as f64)),
+                    ("token", num(token as f64)),
+                ]))?;
+            }
+            Some(Event::Done { response }) => {
+                let mut fields = summary_fields(&response);
+                fields.push(("event", s("done")));
+                write_frame(out, &obj(fields))?;
+                return Ok(());
+            }
+            Some(Event::Error { response }) => {
+                let mut fields = summary_fields(&response);
+                fields.push(("event", s("error")));
+                fields.push(("error", s(response.error.as_deref()
+                    .unwrap_or("request failed"))));
+                write_frame(out, &obj(fields))?;
+                return Ok(());
+            }
+            None => {
+                write_frame(out, &error_frame(
+                    Some(handle.id()),
+                    &SubmitError::WorkerGone.to_string()))?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Decode one request line into `(prompt, params, streaming?)`. A request
+/// is v2 (streaming) iff it carries a `params` object; v1 requests keep
+/// the seed single-shot shape `{"prompt":[..],"max_new":N}`.
+fn parse_request(j: &Json)
+                 -> Result<(Vec<u32>, GenerationParams, bool), String> {
+    let Json::Obj(fields) = j else {
+        return Err("request must be a JSON object".into());
+    };
+    for k in fields.keys() {
+        if !TOP_KEYS.contains(&k.as_str()) {
+            return Err(format!(
+                "unknown field {k:?} (expected prompt, max_new or params)"));
+        }
+    }
+    let prompt = parse_tokens(
+        j.get("prompt").ok_or_else(|| "missing prompt".to_string())?,
+        "prompt")?;
+    match j.get("params") {
+        Some(p) => {
+            if j.get("max_new").is_some() {
+                return Err(
+                    "max_new belongs inside params for v2 requests".into());
+            }
+            Ok((prompt, parse_params(p)?, true))
+        }
+        None => {
+            let max_new = match j.get("max_new") {
+                None => 16,
+                Some(v) => v.as_usize()
+                    .ok_or_else(|| "max_new must be a number".to_string())?,
+            };
+            Ok((prompt, GenerationParams::greedy(max_new), false))
+        }
+    }
+}
+
+/// Decode a `params` object; unknown fields are protocol errors.
+fn parse_params(j: &Json) -> Result<GenerationParams, String> {
+    let Json::Obj(fields) = j else {
+        return Err("params must be a JSON object".into());
+    };
+    let mut p = GenerationParams::default();
+    for (k, v) in fields {
+        let numeric = |name: &str| {
+            v.as_f64().ok_or_else(|| format!("{name} must be a number"))
+        };
+        // Integer knobs are validated, not cast: `{"seed":-1}` must be a
+        // protocol error, not a silent saturation to 0 (same strictness
+        // as the unknown-field rejection). Wire integers are f64-exact
+        // up to 2^53 — ample for token budgets and PRNG keys.
+        let integer = |name: &str| -> Result<u64, String> {
+            let n = numeric(name)?;
+            if !(n >= 0.0 && n.fract() == 0.0 && n <= 9.0e15) {
+                return Err(format!(
+                    "{name} must be a non-negative integer (got {n})"));
+            }
+            Ok(n as u64)
+        };
+        match k.as_str() {
+            "max_new" => p.max_new = integer("max_new")? as usize,
+            "temperature" => p.temperature = numeric("temperature")? as f32,
+            "top_k" => p.top_k = integer("top_k")? as usize,
+            "top_p" => p.top_p = numeric("top_p")? as f32,
+            "seed" => p.seed = integer("seed")?,
+            "stop_tokens" => {
+                p.stop_tokens = parse_tokens(v, "stop_tokens")?;
+            }
+            other => return Err(format!("unknown params field {other:?}")),
+        }
+    }
+    Ok(p)
+}
+
+fn parse_tokens(j: &Json, what: &str) -> Result<Vec<u32>, String> {
+    let arr = j.as_arr()
+        .ok_or_else(|| format!("{what} must be an array of token ids"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for v in arr {
+        let n = v.as_f64()
+            .ok_or_else(|| format!("{what} entries must be numbers"))?;
+        if !(n >= 0.0 && n.fract() == 0.0 && n <= u32::MAX as f64) {
+            return Err(format!(
+                "{what} entries must be non-negative integer token ids"));
+        }
+        out.push(n as u32);
+    }
+    Ok(out)
+}
+
+fn write_frame(out: &mut TcpStream, frame: &Json) -> anyhow::Result<()> {
+    writeln!(out, "{}", frame.to_string())?;
+    Ok(())
+}
+
+/// Protocol-level error frame (no request admitted, so usually no id).
+fn error_frame(id: Option<u64>, msg: &str) -> Json {
+    let mut fields = vec![("event", s("error")), ("error", s(msg))];
+    if let Some(id) = id {
+        fields.push(("id", num(id as f64)));
+    }
+    obj(fields)
+}
+
+fn summary_fields(resp: &Response) -> Vec<(&'static str, Json)> {
+    vec![
+        ("id", num(resp.id as f64)),
+        ("prompt_len", num(resp.prompt_len as f64)),
+        ("ttft_ms", num(resp.ttft.as_secs_f64() * 1e3)),
+        ("latency_ms", num(resp.latency.as_secs_f64() * 1e3)),
+        ("finish", s(resp.finish.as_str())),
+        ("tokens", Json::Arr(
+            resp.tokens.iter().map(|&t| num(t as f64)).collect())),
+    ]
+}
+
+/// v1 single-shot reply: the seed shape plus `finish`.
+fn v1_frame(resp: &Response) -> Json {
+    let mut fields = summary_fields(resp);
+    if let Some(e) = &resp.error {
+        fields.push(("error", s(e)));
+    }
+    obj(fields)
 }

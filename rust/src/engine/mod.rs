@@ -8,5 +8,5 @@ pub mod model;
 pub mod qmod;
 
 pub use crate::quant::kv::{KvDtype, KvLayerScales};
-pub use model::{Engine, EngineError, KvCache, Workspace};
+pub use model::{Engine, EngineError, KvCache, Sampler, Workspace};
 pub use qmod::{Linear, ModelConfig, Norm, QModel, QuantMode, QWeight};

@@ -48,7 +48,8 @@ fn run() -> Result<()> {
                 "mergequant — 4-bit static quantization serving stack\n\
                  usage: mergequant <serve|eval|generate|inspect|runtime> \
                  [--model NAME] [--method NAME] [--threads N] \
-                 [--kv-cache f32|int8] …\n\
+                 [--kv-cache f32|int8] [--temperature T --top-k K \
+                 --top-p P --seed S --stop T1,T2] …\n\
                  (got {other:?})"
             );
             bail!("unknown subcommand");
@@ -94,7 +95,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = std::sync::Arc::new(Server::start(engine, cfg.scheduler.clone()));
     let gateway = TcpGateway::start(server.clone(), cfg.port)?;
     println!("listening on {}", gateway.addr);
-    println!("protocol: one JSON per line: {{\"prompt\":[1,2,3],\"max_new\":16}}");
+    println!("protocol: NDJSON, one request per line");
+    println!("  v1 single-shot: {{\"prompt\":[1,2,3],\"max_new\":16}}");
+    println!("  v2 streaming  : {{\"prompt\":[1,2,3],\"params\":{{\"max_new\":16,\
+              \"temperature\":0.8,\"top_k\":40,\"top_p\":0.95,\"seed\":7,\
+              \"stop_tokens\":[2]}}}}");
+    println!("  v2 frames     : one {{\"event\":\"token\",..}} per token, then \
+              a terminal done/error frame");
     let secs = args.get_usize("run-secs", 0);
     if secs > 0 {
         std::thread::sleep(std::time::Duration::from_secs(secs as u64));
@@ -148,10 +155,38 @@ fn cmd_generate(args: &Args) -> Result<()> {
         .split(',')
         .filter_map(|t| t.trim().parse().ok())
         .collect();
-    let max_new = args.get_usize("max-new", 32);
-    let out = engine.generate_with(&prompt, max_new,
-                                   prompt.len() + max_new + 8, kv)?;
+    // Sampling knobs (GenerationParams surface): --temperature 0 (the
+    // default) is the greedy seed path; anything else engages the seeded
+    // top-k/top-p sampler — fixed --seed ⇒ bitwise-reproducible stream.
+    let params = mergequant::coordinator::GenerationParams {
+        max_new: args.get_usize("max-new", 32),
+        temperature: args.get_f32("temperature", 0.0),
+        top_k: args.get_usize("top-k", 0),
+        top_p: args.get_f32("top-p", 1.0),
+        seed: args.get_u64("seed", 0),
+        stop_tokens: args
+            .get_or("stop", "")
+            .split(',')
+            .filter_map(|t| t.trim().parse().ok())
+            .collect(),
+    };
+    params.validate().map_err(anyhow::Error::msg)?;
+    let mut out = engine.generate_seeded(&prompt, params.max_new,
+                                         prompt.len() + params.max_new + 8,
+                                         kv, &params.sampler())?;
+    // Honour --stop like the serving path does: cut at the first stop
+    // token, inclusive. The sampler is counter-based, so the prefix is
+    // identical to what the scheduler would have streamed.
+    if let Some(pos) =
+        out.iter().position(|t| params.stop_tokens.contains(t))
+    {
+        out.truncate(pos + 1);
+    }
     println!("prompt:     {prompt:?}");
+    if params.temperature > 0.0 {
+        println!("sampling:   T={} top_k={} top_p={} seed={}",
+                 params.temperature, params.top_k, params.top_p, params.seed);
+    }
     println!("completion: {out:?} (kv {})", kv.as_str());
     Ok(())
 }

@@ -7,12 +7,19 @@ pub struct Rng {
     s: [u64; 4],
 }
 
+/// SplitMix64 finalizer: a bijective avalanche mix. Shared by the
+/// sequential generator below and by counter-based stream keying (the
+/// sampler derives one independent RNG stream per `(seed, step)` from
+/// it — `engine::Sampler`).
+pub fn mix64(z: u64) -> u64 {
+    let z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    let z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E3779B97F4A7C15);
-    let mut z = *state;
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-    z ^ (z >> 31)
+    mix64(*state)
 }
 
 impl Rng {

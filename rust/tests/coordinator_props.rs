@@ -5,7 +5,9 @@
 use std::collections::HashSet;
 
 use mergequant::bench::synthetic_model;
-use mergequant::coordinator::{Request, Scheduler, SchedulerConfig};
+use mergequant::coordinator::{
+    FinishReason, GenerationParams, Request, Scheduler, SchedulerConfig,
+};
 use mergequant::engine::{Engine, KvDtype};
 use mergequant::util::proptest::check;
 use mergequant::util::rng::Rng;
@@ -269,20 +271,133 @@ fn backpressure_queue_cap() {
 fn stop_token_terminates_generation() {
     let mut sched = make_scheduler(2, 2);
     // First find what the model generates unconstrained.
-    let mut probe = Request::new(1, vec![3, 4, 5], 8);
-    probe.stop_token = None;
-    sched.submit(probe).unwrap();
+    sched.submit(Request::new(1, vec![3, 4, 5], 8)).unwrap();
     let unconstrained = sched.run_to_completion()[0].tokens.clone();
     if unconstrained.len() > 2 {
         let stop = unconstrained[1];
         let mut sched2 = make_scheduler(2, 2);
-        let mut req = Request::new(9, vec![3, 4, 5], 8);
-        req.stop_token = Some(stop);
-        sched2.submit(req).unwrap();
+        let params = GenerationParams {
+            stop_tokens: vec![stop],
+            ..GenerationParams::greedy(8)
+        };
+        sched2
+            .submit(Request::with_params(9, vec![3, 4, 5], params))
+            .unwrap();
         let r = sched2.run_to_completion();
         assert!(r[0].tokens.len() <= 2,
                 "generation must stop at the stop token");
+        assert_eq!(r[0].finish, FinishReason::Stop);
     }
+}
+
+#[test]
+fn multiple_stop_tokens_any_terminates() {
+    let mut sched = make_scheduler(2, 2);
+    sched.submit(Request::new(1, vec![3, 4, 5], 8)).unwrap();
+    let unconstrained = sched.run_to_completion()[0].tokens.clone();
+    if unconstrained.len() > 3 {
+        // Either of two later tokens must cut the stream at the earlier.
+        let params = GenerationParams {
+            stop_tokens: vec![unconstrained[2], unconstrained[1]],
+            ..GenerationParams::greedy(8)
+        };
+        let mut sched2 = make_scheduler(2, 2);
+        sched2
+            .submit(Request::with_params(9, vec![3, 4, 5], params))
+            .unwrap();
+        let r = sched2.run_to_completion();
+        assert!(r[0].tokens.len() <= 2,
+                "earliest stop token must win ({:?})", r[0].tokens);
+    }
+}
+
+#[test]
+fn cancellation_answers_once_and_returns_slabs() {
+    // Cancel a mix of pending and active requests mid-run: every request
+    // still gets exactly one terminal response, cancelled ones finish
+    // with `Cancelled`, and every KV slab comes back to the pool.
+    let mut sched = make_scheduler(2, 2);
+    for i in 0..6u64 {
+        let prompt: Vec<u32> = (0..8).map(|t| 3 + t % 90).collect();
+        sched.submit(Request::new(i, prompt, 30)).unwrap();
+    }
+    // Let the first two become active (max_batch 2), the rest pend.
+    sched.step();
+    assert!(sched.active_len() > 0);
+    sched.cancel(0); // active
+    sched.cancel(3); // pending
+    sched.cancel(99); // unknown — must be ignored
+    let mut responses = sched.run_to_completion();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), 6, "every request answered exactly once");
+    for r in &responses {
+        match r.id {
+            0 | 3 => {
+                assert_eq!(r.finish, FinishReason::Cancelled,
+                           "id {} finish {:?}", r.id, r.finish);
+                assert!(r.error.is_none());
+            }
+            _ => {
+                assert_eq!(r.finish, FinishReason::Length);
+                assert_eq!(r.tokens.len(), 30);
+            }
+        }
+    }
+    assert_eq!(sched.metrics.cancelled, 2);
+    assert_eq!(sched.kv_available(), sched.kv_capacity(),
+               "cancellation leaked a KV slab");
+    // The freed capacity is immediately reusable.
+    sched.submit(Request::new(50, vec![5, 6], 3)).unwrap();
+    let more = sched.run_to_completion();
+    assert_eq!(more.len(), 1);
+    assert_eq!(more[0].tokens.len(), 3);
+}
+
+#[test]
+fn prompt_filling_slab_finishes_cache_full_not_error() {
+    // A prompt of exactly max_seq tokens fills its slab during prefill:
+    // the first token is still sampled, then the sequence must end
+    // gracefully with `CacheFull` — not trip a KvOverflow error on the
+    // next decode iteration.
+    let mut sched = make_scheduler(2, 2); // max_seq 48
+    let prompt: Vec<u32> = (0..48).map(|t| 3 + t % 90).collect();
+    sched.submit(Request::new(1, prompt, 4)).unwrap();
+    let r = sched.run_to_completion();
+    assert_eq!(r.len(), 1);
+    assert!(r[0].error.is_none(), "unexpected error: {:?}", r[0].error);
+    assert_eq!(r[0].finish, FinishReason::CacheFull);
+    assert_eq!(r[0].tokens.len(), 1);
+    assert_eq!(sched.metrics.failed, 0);
+}
+
+#[test]
+fn cancel_mid_chunked_prefill_frees_slab() {
+    let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+    let mut sched = Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 1,
+            kv_slabs: 1,
+            max_seq: 64,
+            max_prefills_per_iter: 1,
+            queue_cap: 64,
+            prefill_chunk: 8,
+            threads: 1,
+            kv_dtype: KvDtype::F32,
+        },
+    );
+    let long: Vec<u32> = (0..40).map(|t| 3 + t % 90).collect();
+    sched.submit(Request::new(1, long, 4)).unwrap();
+    sched.step(); // first chunk in flight — request holds the only slab
+    sched.cancel(1);
+    let responses = sched.run_to_completion();
+    assert_eq!(responses.len(), 1);
+    assert_eq!(responses[0].finish, FinishReason::Cancelled);
+    assert!(responses[0].tokens.is_empty());
+    assert_eq!(sched.kv_available(), 1, "prefilling slab not returned");
+    // Pool is usable again.
+    sched.submit(Request::new(2, vec![3, 4, 5], 2)).unwrap();
+    assert_eq!(sched.run_to_completion()[0].tokens.len(), 2);
 }
 
 #[test]

@@ -2,7 +2,9 @@
 //! prefill/decode parity, causality, batching consistency, generation.
 
 use mergequant::bench::synthetic_model;
-use mergequant::engine::{Engine, EngineError, KvCache, Workspace};
+use mergequant::engine::{
+    Engine, EngineError, KvCache, KvDtype, Sampler, Workspace,
+};
 
 fn engines() -> Vec<(&'static str, Engine)> {
     ["fp16", "mergequant", "rtn", "quarot"]
@@ -115,6 +117,22 @@ fn generate_is_deterministic_and_bounded() {
     assert_eq!(a, b);
     assert_eq!(a.len(), 16);
     assert!(a.iter().all(|&t| (t as usize) < 96));
+}
+
+#[test]
+fn seeded_greedy_sampler_matches_generate_goldens() {
+    // temperature == 0 is the greedy special case of the v2 sampler: it
+    // must reproduce `Engine::generate`'s token streams byte for byte,
+    // for every quantization method.
+    for (name, engine) in engines() {
+        let prompt: Vec<u32> = vec![5, 9, 13];
+        let golden = engine.generate(&prompt, 16, 64);
+        let seeded = engine
+            .generate_seeded(&prompt, 16, 64, KvDtype::F32,
+                             &Sampler::greedy())
+            .unwrap();
+        assert_eq!(golden, seeded, "{name}: seeded greedy diverged");
+    }
 }
 
 #[test]

@@ -1,0 +1,272 @@
+//! Sampling determinism: the seeded top-k/top-p sampler is a pure
+//! function of (logits, seed, step), so fixed-seed token streams are
+//! bitwise identical for every thread count, both KV dtypes, any batch
+//! composition, and chunked vs single-shot prefill; `temperature == 0`
+//! reproduces the seed greedy argmax streams exactly.
+//!
+//! CI matrix knobs (DESIGN.md §7/§10): `MQ_TEST_THREADS` feeds an extra
+//! thread count into the sweeps, `MQ_TEST_KV` restricts the dtype axis.
+
+use mergequant::bench::synthetic_model;
+use mergequant::coordinator::{
+    FinishReason, GenerationParams, Request, Scheduler, SchedulerConfig,
+};
+use mergequant::engine::{Engine, KvDtype, Sampler};
+use mergequant::engine::model::argmax;
+use mergequant::util::rng::Rng;
+
+fn thread_counts() -> Vec<usize> {
+    let mut counts = vec![1, 4];
+    if let Some(extra) = std::env::var("MQ_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        if extra > 0 && !counts.contains(&extra) {
+            counts.push(extra);
+        }
+    }
+    counts
+}
+
+fn kv_dtypes() -> Vec<KvDtype> {
+    match std::env::var("MQ_TEST_KV").as_deref() {
+        Ok("int8") => vec![KvDtype::Int8],
+        Ok("f32") => vec![KvDtype::F32],
+        _ => vec![KvDtype::F32, KvDtype::Int8],
+    }
+}
+
+fn random_logits(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * 3.0).collect()
+}
+
+// ------------------------------------------------------------------
+// Sampler unit behaviour
+// ------------------------------------------------------------------
+
+#[test]
+fn temperature_zero_is_argmax_and_touches_no_rng() {
+    let mut rng = Rng::new(42);
+    let s = Sampler::greedy();
+    assert!(s.is_greedy());
+    for step in 0..64u64 {
+        let logits = random_logits(&mut rng, 96);
+        assert_eq!(s.sample(&logits, step) as usize, argmax(&logits));
+    }
+}
+
+#[test]
+fn sample_respects_top_k() {
+    let mut rng = Rng::new(7);
+    let s = Sampler::new(1.5, 3, 1.0, 99);
+    for step in 0..256u64 {
+        let logits = random_logits(&mut rng, 64);
+        let tok = s.sample(&logits, step) as usize;
+        let mut order: Vec<usize> = (0..64).collect();
+        order.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
+        assert!(order[..3].contains(&tok),
+                "token {tok} outside top-3 at step {step}");
+    }
+}
+
+#[test]
+fn sample_respects_top_p() {
+    // One dominant logit carries ~99.9% of the mass: any top_p below
+    // that collapses the nucleus to the argmax.
+    let mut logits = vec![0.0f32; 32];
+    logits[5] = 10.0;
+    let s = Sampler::new(1.0, 0, 0.5, 3);
+    for step in 0..128u64 {
+        assert_eq!(s.sample(&logits, step), 5);
+    }
+}
+
+#[test]
+fn sampler_is_pure_per_step_and_seed() {
+    let mut rng = Rng::new(11);
+    let logits = random_logits(&mut rng, 96);
+    let a = Sampler::new(0.9, 20, 0.95, 1234);
+    let b = Sampler::new(0.9, 20, 0.95, 1234);
+    // Same (seed, step) ⇒ same draw, in any call order — the RNG is
+    // counter-based, not sequential state.
+    let forward: Vec<u32> = (0..32).map(|t| a.sample(&logits, t)).collect();
+    let backward: Vec<u32> =
+        (0..32).rev().map(|t| b.sample(&logits, t)).collect();
+    assert_eq!(forward,
+               backward.into_iter().rev().collect::<Vec<_>>());
+}
+
+#[test]
+fn distinct_seeds_diverge_on_flat_logits() {
+    // Uniform distribution over 96 tokens: two seeds agreeing on all of
+    // 64 draws has probability ~96^-64.
+    let logits = vec![1.0f32; 96];
+    let a = Sampler::new(1.0, 0, 1.0, 1);
+    let b = Sampler::new(1.0, 0, 1.0, 2);
+    let sa: Vec<u32> = (0..64).map(|t| a.sample(&logits, t)).collect();
+    let sb: Vec<u32> = (0..64).map(|t| b.sample(&logits, t)).collect();
+    assert_ne!(sa, sb, "different seeds must give different streams");
+    // And every draw is in range.
+    assert!(sa.iter().all(|&t| t < 96));
+}
+
+// ------------------------------------------------------------------
+// Engine-level stream determinism ({threads} × {kv})
+// ------------------------------------------------------------------
+
+#[test]
+fn engine_seeded_streams_bitwise_across_threads_and_kv() {
+    let prompts: Vec<Vec<u32>> = vec![
+        (0..6).map(|i| 3 + i * 2).collect(),
+        (0..10).map(|i| 4 + i * 3).collect(),
+    ];
+    let sampler = Sampler::new(0.8, 20, 0.95, 7);
+    for kv in kv_dtypes() {
+        let mut golden: Option<Vec<Vec<u32>>> = None;
+        for &threads in &thread_counts() {
+            let mut engine = Engine::with_threads(
+                synthetic_model("mergequant", 64, 128, 2, 96), threads);
+            if kv == KvDtype::Int8 {
+                engine.ensure_kv_scales().unwrap();
+            }
+            let streams: Vec<Vec<u32>> = prompts
+                .iter()
+                .map(|p| engine
+                    .generate_seeded(p, 12, 48, kv, &sampler)
+                    .unwrap())
+                .collect();
+            match &golden {
+                None => golden = Some(streams),
+                Some(g) => assert_eq!(
+                    g, &streams,
+                    "sampled stream changed: kv {kv:?} threads {threads}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn temperature_zero_matches_greedy_goldens_both_kv() {
+    for kv in kv_dtypes() {
+        let mut engine =
+            Engine::new(synthetic_model("mergequant", 64, 128, 2, 96));
+        if kv == KvDtype::Int8 {
+            engine.ensure_kv_scales().unwrap();
+        }
+        let prompt: Vec<u32> = vec![5, 9, 13];
+        let golden = engine.generate_with(&prompt, 16, 64, kv).unwrap();
+        let seeded = engine
+            .generate_seeded(&prompt, 16, 64, kv, &Sampler::greedy())
+            .unwrap();
+        assert_eq!(golden, seeded,
+                   "temperature=0 must be byte-identical (kv {kv:?})");
+    }
+}
+
+// ------------------------------------------------------------------
+// Scheduler-level stream determinism (continuous batching)
+// ------------------------------------------------------------------
+
+/// Mixed workload: greedy, two sampled seeds, and a stop-token request.
+fn workload() -> Vec<(Vec<u32>, GenerationParams)> {
+    let sampled = |seed| GenerationParams {
+        max_new: 10,
+        temperature: 0.8,
+        top_k: 24,
+        top_p: 0.9,
+        seed,
+        stop_tokens: Vec::new(),
+    };
+    vec![
+        ((0..5).map(|i| 3 + i * 2).collect(), GenerationParams::greedy(10)),
+        ((0..8).map(|i| 4 + i * 3).collect(), sampled(7)),
+        ((0..4).map(|i| 10 + i).collect(), sampled(9)),
+        ((0..6).map(|i| 5 + i * 5).collect(), GenerationParams {
+            stop_tokens: vec![17, 51],
+            ..sampled(11)
+        }),
+    ]
+}
+
+fn run_workload(threads: usize, kv: KvDtype, prefill_chunk: usize)
+                -> Vec<Vec<u32>> {
+    let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+    let mut sched = Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 3,
+            kv_slabs: 3,
+            max_seq: 48,
+            max_prefills_per_iter: 2,
+            queue_cap: 16,
+            prefill_chunk,
+            threads,
+            kv_dtype: kv,
+        },
+    );
+    for (i, (prompt, params)) in workload().into_iter().enumerate() {
+        sched
+            .submit(Request::with_params(i as u64, prompt, params))
+            .unwrap();
+    }
+    let mut responses = sched.run_to_completion();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), 4);
+    for r in &responses {
+        assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+        assert!(r.finish == FinishReason::Length
+                    || r.finish == FinishReason::Stop);
+    }
+    responses.into_iter().map(|r| r.tokens).collect()
+}
+
+#[test]
+fn scheduler_streams_bitwise_across_threads_kv_and_chunking() {
+    for kv in kv_dtypes() {
+        let mut golden: Option<Vec<Vec<u32>>> = None;
+        for &threads in &thread_counts() {
+            for chunk in [0usize, 3] {
+                let streams = run_workload(threads, kv, chunk);
+                match &golden {
+                    None => golden = Some(streams),
+                    Some(g) => assert_eq!(
+                        g, &streams,
+                        "stream changed: kv {kv:?} threads {threads} \
+                         chunk {chunk}"),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn scheduler_greedy_lane_unaffected_by_sampled_neighbours() {
+    // The greedy request in the mixed batch must emit the same tokens as
+    // the same workload where every other lane is also greedy — sampling
+    // one lane cannot perturb another (counter-based RNG, lane-local
+    // logits).
+    let mixed = run_workload(1, KvDtype::F32, 0);
+    let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+    let mut sched = Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 3,
+            kv_slabs: 3,
+            max_seq: 48,
+            max_prefills_per_iter: 2,
+            queue_cap: 16,
+            prefill_chunk: 0,
+            threads: 1,
+            kv_dtype: KvDtype::F32,
+        },
+    );
+    for (i, (prompt, _)) in workload().into_iter().enumerate() {
+        sched
+            .submit(Request::new(i as u64, prompt, 10))
+            .unwrap();
+    }
+    let mut all_greedy = sched.run_to_completion();
+    all_greedy.sort_by_key(|r| r.id);
+    assert_eq!(mixed[0], all_greedy[0].tokens,
+               "greedy lane must not depend on neighbour sampling");
+}

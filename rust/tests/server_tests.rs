@@ -1,4 +1,7 @@
-//! Server + TCP gateway integration tests (synthetic model, in-process).
+//! Server + TCP gateway integration tests (synthetic model, in-process):
+//! the generation API v2 contract — streamed events, typed admission
+//! errors, cancellation returning KV slabs, v1/v2 NDJSON framing,
+//! malformed/unknown-field protocol errors, mid-stream disconnects.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -6,20 +9,24 @@ use std::sync::Arc;
 
 use mergequant::bench::synthetic_model;
 use mergequant::coordinator::server::TcpGateway;
-use mergequant::coordinator::{SchedulerConfig, Server};
+use mergequant::coordinator::{
+    Event, FinishReason, GenerationParams, SchedulerConfig, Server,
+    SubmitError,
+};
 use mergequant::engine::{Engine, KvDtype};
 use mergequant::util::json::Json;
 
-fn test_server() -> Server {
+fn server_with(max_batch: usize, kv_slabs: usize, max_seq: usize,
+               queue_cap: usize) -> Server {
     let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
     Server::start(
         engine,
         SchedulerConfig {
-            max_batch: 4,
-            kv_slabs: 4,
-            max_seq: 64,
+            max_batch,
+            kv_slabs,
+            max_seq,
             max_prefills_per_iter: 2,
-            queue_cap: 64,
+            queue_cap,
             prefill_chunk: 0,
             threads: 1,
             kv_dtype: KvDtype::F32,
@@ -27,25 +34,79 @@ fn test_server() -> Server {
     )
 }
 
+fn test_server() -> Server {
+    server_with(4, 4, 64, 64)
+}
+
 #[test]
-fn submit_roundtrip() {
+fn generate_streams_token_events_then_done() {
+    let server = test_server();
+    let handle = server
+        .generate(vec![3, 4, 5, 6], GenerationParams::greedy(8))
+        .expect("admission");
+    let mut streamed = Vec::new();
+    let response = loop {
+        match handle.recv().expect("stream ended without terminal frame") {
+            Event::Token { id, index, token } => {
+                assert_eq!(id, handle.id());
+                assert_eq!(index, streamed.len(), "token frames in order");
+                streamed.push(token);
+            }
+            Event::Done { response } => break response,
+            Event::Error { response } => {
+                panic!("unexpected error: {:?}", response.error)
+            }
+        }
+    };
+    assert_eq!(streamed.len(), 8);
+    assert_eq!(response.tokens, streamed,
+               "done frame must carry the streamed tokens");
+    assert_eq!(response.prompt_len, 4);
+    assert_eq!(response.finish, FinishReason::Length);
+    assert!(response.ttft <= response.latency);
+    // Stream is closed after the terminal frame.
+    assert!(handle.recv().is_none());
+}
+
+#[test]
+fn greedy_generate_matches_engine_generate() {
+    // The serving path with temperature=0 must reproduce the seed greedy
+    // engine output token for token.
+    let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+    let prompt = vec![3u32, 9, 12, 40];
+    let golden = engine.generate(&prompt, 8, 64);
+    let server = test_server();
+    let resp = server
+        .generate(prompt, GenerationParams::greedy(8))
+        .unwrap()
+        .wait();
+    assert_eq!(resp.tokens, golden);
+}
+
+#[test]
+#[allow(deprecated)]
+fn legacy_submit_shim_roundtrip() {
     let server = test_server();
     let rx = server.submit(vec![3, 4, 5, 6], 8);
     let resp = rx.recv().expect("response");
     assert_eq!(resp.tokens.len(), 8);
     assert_eq!(resp.prompt_len, 4);
     assert!(resp.ttft <= resp.latency);
+    assert!(resp.error.is_none());
 }
 
 #[test]
-fn concurrent_submissions_all_complete() {
+fn concurrent_generates_all_complete() {
     let server = Arc::new(test_server());
     let mut handles = Vec::new();
     for i in 0..12u32 {
         let s = server.clone();
         handles.push(std::thread::spawn(move || {
             let prompt: Vec<u32> = (0..4 + i % 5).map(|t| 3 + t % 90).collect();
-            let resp = s.submit(prompt.clone(), 5).recv().unwrap();
+            let resp = s
+                .generate(prompt.clone(), GenerationParams::greedy(5))
+                .expect("admission")
+                .wait();
             assert_eq!(resp.prompt_len, prompt.len());
             assert_eq!(resp.tokens.len(), 5);
             resp.id
@@ -59,41 +120,330 @@ fn concurrent_submissions_all_complete() {
 }
 
 #[test]
-fn shutdown_reports_metrics() {
+fn shutdown_reports_metrics_and_later_generates_fail_typed() {
     let server = test_server();
-    server.submit(vec![3, 4], 3).recv().unwrap();
+    server
+        .generate(vec![3, 4], GenerationParams::greedy(3))
+        .unwrap()
+        .wait();
     let report = server.shutdown();
     assert!(report.contains("requests=1"), "report: {report}");
+    // Dead worker is a typed error, not a panic (the seed behaviour was
+    // `.expect("server worker gone")`).
+    let err = server
+        .generate(vec![3, 4], GenerationParams::greedy(2))
+        .unwrap_err();
+    assert_eq!(err, SubmitError::WorkerGone);
 }
 
 #[test]
-fn tcp_gateway_end_to_end() {
+#[allow(deprecated)]
+fn legacy_submit_after_shutdown_answers_instead_of_panicking() {
+    let server = test_server();
+    server.shutdown();
+    let resp = server.submit(vec![3, 4], 2).recv().expect("error response");
+    assert_eq!(resp.error.as_deref(),
+               Some(SubmitError::WorkerGone.to_string().as_str()));
+    assert_eq!(resp.finish, FinishReason::Error);
+}
+
+#[test]
+fn invalid_params_and_empty_prompt_rejected() {
+    let server = test_server();
+    let mut p = GenerationParams::greedy(4);
+    p.temperature = -0.5;
+    match server.generate(vec![3], p) {
+        Err(SubmitError::InvalidParams(msg)) => {
+            assert!(msg.contains("temperature"), "{msg}")
+        }
+        other => panic!("expected InvalidParams, got {other:?}"),
+    }
+    match server.generate(Vec::new(), GenerationParams::greedy(4)) {
+        Err(SubmitError::InvalidParams(msg)) => {
+            assert!(msg.contains("prompt"), "{msg}")
+        }
+        other => panic!("expected InvalidParams, got {other:?}"),
+    }
+}
+
+#[test]
+fn queue_full_is_typed_backpressure() {
+    // One active slot, one queue slot: the third request must be refused
+    // synchronously with QueueFull.
+    let server = server_with(1, 1, 4096, 1);
+    let h1 = server
+        .generate(vec![3, 4, 5], GenerationParams::greedy(100_000))
+        .unwrap();
+    // First token ⇒ admitted out of the pending queue.
+    assert!(matches!(h1.recv(), Some(Event::Token { .. })));
+    let h2 = server
+        .generate(vec![6, 7], GenerationParams::greedy(4))
+        .unwrap();
+    let err = server
+        .generate(vec![8, 9], GenerationParams::greedy(4))
+        .unwrap_err();
+    assert_eq!(err, SubmitError::QueueFull { cap: 1 });
+    h1.cancel();
+    assert_eq!(h1.wait().finish, FinishReason::Cancelled);
+    // h2 proceeds normally once the slab frees up.
+    assert_eq!(h2.wait().tokens.len(), 4);
+}
+
+#[test]
+fn cancel_returns_kv_slab_for_reuse() {
+    // Single KV slab: the second request can only ever complete if
+    // cancelling the first returns its slab to the pool.
+    let server = server_with(1, 1, 4096, 64);
+    let h1 = server
+        .generate(vec![3, 4, 5], GenerationParams::greedy(100_000))
+        .unwrap();
+    for _ in 0..2 {
+        assert!(matches!(h1.recv(), Some(Event::Token { .. })));
+    }
+    let h2 = server
+        .generate(vec![10, 11, 12], GenerationParams::greedy(4))
+        .unwrap();
+    h1.cancel();
+    let r1 = h1.wait();
+    assert_eq!(r1.finish, FinishReason::Cancelled);
+    assert!(r1.tokens.len() >= 2, "tokens streamed before cancel remain");
+    assert!(r1.error.is_none());
+    let r2 = h2.wait();
+    assert_eq!(r2.tokens.len(), 4, "cancelled slab must be reusable");
+    assert_eq!(r2.finish, FinishReason::Length);
+    let report = server.shutdown();
+    assert!(report.contains("cancelled=1"), "report: {report}");
+}
+
+#[test]
+fn dropped_handle_cancels_request() {
+    // Dropping the handle mid-stream must tear the request out (a
+    // vanished consumer must not keep burning decode steps + slab).
+    let server = server_with(1, 1, 4096, 64);
+    {
+        let h1 = server
+            .generate(vec![3, 4, 5], GenerationParams::greedy(100_000))
+            .unwrap();
+        assert!(matches!(h1.recv(), Some(Event::Token { .. })));
+        // handle dropped here without cancel()
+    }
+    // The next request can only complete once the worker notices the
+    // dead sink and frees the slab.
+    let r = server
+        .generate(vec![6, 7], GenerationParams::greedy(3))
+        .unwrap()
+        .wait();
+    assert_eq!(r.tokens.len(), 3);
+    let report = server.shutdown();
+    assert!(report.contains("cancelled=1"), "report: {report}");
+}
+
+// ---------------------------------------------------------------------
+// TCP gateway
+// ---------------------------------------------------------------------
+
+fn read_json(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Json::parse(line.trim()).unwrap_or_else(|e| {
+        panic!("bad frame {line:?}: {e}")
+    })
+}
+
+#[test]
+fn tcp_gateway_v1_single_shot() {
     let server = Arc::new(test_server());
     let gw = TcpGateway::start(server.clone(), 0).unwrap();
     let stream = TcpStream::connect(gw.addr).unwrap();
     let mut reader = BufReader::new(stream.try_clone().unwrap());
     let mut out = stream;
 
-    // valid request
     writeln!(out, "{{\"prompt\":[3,9,12],\"max_new\":4}}").unwrap();
-    let mut line = String::new();
-    reader.read_line(&mut line).unwrap();
-    let j = Json::parse(line.trim()).unwrap();
+    let j = read_json(&mut reader);
     assert_eq!(j.get("prompt_len").unwrap().as_usize().unwrap(), 3);
     assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 4);
-
-    // malformed request -> error object, connection stays usable
-    writeln!(out, "not json").unwrap();
-    line.clear();
-    reader.read_line(&mut line).unwrap();
-    assert!(Json::parse(line.trim()).unwrap().get("error").is_some());
-
-    writeln!(out, "{{\"prompt\":[5],\"max_new\":2}}").unwrap();
-    line.clear();
-    reader.read_line(&mut line).unwrap();
-    assert!(Json::parse(line.trim()).unwrap().get("tokens").is_some());
+    assert_eq!(j.get("finish").unwrap().as_str().unwrap(), "length");
+    assert!(j.get("event").is_none(), "v1 replies are not framed");
 
     gw.stop();
+}
+
+#[test]
+fn tcp_gateway_rejects_malformed_and_unknown_fields() {
+    let server = Arc::new(test_server());
+    let gw = TcpGateway::start(server.clone(), 0).unwrap();
+    let stream = TcpStream::connect(gw.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut out = stream;
+
+    // malformed JSON -> error frame, connection stays usable
+    writeln!(out, "not json").unwrap();
+    let j = read_json(&mut reader);
+    assert_eq!(j.get("event").unwrap().as_str().unwrap(), "error");
+    assert!(j.get("error").is_some());
+
+    // unknown top-level field (a typo'd max_new) -> protocol error
+    writeln!(out, "{{\"prompt\":[3],\"max_mew\":4}}").unwrap();
+    let j = read_json(&mut reader);
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("max_mew"));
+
+    // unknown params field -> protocol error
+    writeln!(out, "{{\"prompt\":[3],\"params\":{{\"temprature\":0.5}}}}")
+        .unwrap();
+    let j = read_json(&mut reader);
+    assert!(j.get("error").unwrap().as_str().unwrap()
+        .contains("temprature"));
+
+    // non-array prompt -> protocol error
+    writeln!(out, "{{\"prompt\":\"hi\",\"max_new\":2}}").unwrap();
+    let j = read_json(&mut reader);
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("prompt"));
+
+    // empty prompt -> typed admission error
+    writeln!(out, "{{\"prompt\":[],\"max_new\":2}}").unwrap();
+    let j = read_json(&mut reader);
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("prompt"));
+
+    // bad sampling params -> typed admission error
+    writeln!(out, "{{\"prompt\":[3],\"params\":{{\"temperature\":-2}}}}")
+        .unwrap();
+    let j = read_json(&mut reader);
+    assert!(j.get("error").unwrap().as_str().unwrap()
+        .contains("temperature"));
+
+    // negative/fractional integer params are protocol errors, never
+    // silently saturated casts
+    writeln!(out, "{{\"prompt\":[3],\"params\":{{\"seed\":-1}}}}").unwrap();
+    let j = read_json(&mut reader);
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("seed"));
+    writeln!(out, "{{\"prompt\":[3],\"params\":{{\"max_new\":3.9}}}}")
+        .unwrap();
+    let j = read_json(&mut reader);
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("max_new"));
+
+    // ...and a well-formed request still works on the same connection.
+    writeln!(out, "{{\"prompt\":[5],\"max_new\":2}}").unwrap();
+    let j = read_json(&mut reader);
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+
+    gw.stop();
+}
+
+#[test]
+fn tcp_gateway_v2_streaming_framing() {
+    let server = Arc::new(test_server());
+    let gw = TcpGateway::start(server.clone(), 0).unwrap();
+    let stream = TcpStream::connect(gw.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut out = stream;
+
+    writeln!(out, "{{\"prompt\":[3,9,12],\"params\":{{\"max_new\":4,\
+                   \"temperature\":0.8,\"top_k\":16,\"top_p\":0.9,\
+                   \"seed\":11}}}}").unwrap();
+    let mut streamed = Vec::new();
+    let done = loop {
+        let j = read_json(&mut reader);
+        match j.get("event").unwrap().as_str().unwrap() {
+            "token" => {
+                assert_eq!(j.get("index").unwrap().as_usize().unwrap(),
+                           streamed.len());
+                streamed.push(j.get("token").unwrap().as_usize().unwrap());
+            }
+            "done" => break j,
+            other => panic!("unexpected frame {other:?}"),
+        }
+    };
+    assert_eq!(streamed.len(), 4, "one token frame per generated token");
+    let final_tokens: Vec<usize> = done.get("tokens").unwrap().as_arr()
+        .unwrap().iter().map(|v| v.as_usize().unwrap()).collect();
+    assert_eq!(final_tokens, streamed);
+    assert_eq!(done.get("finish").unwrap().as_str().unwrap(), "length");
+    assert_eq!(done.get("prompt_len").unwrap().as_usize().unwrap(), 3);
+
+    // Same seed replays the same stream (deterministic sampling).
+    writeln!(out, "{{\"prompt\":[3,9,12],\"params\":{{\"max_new\":4,\
+                   \"temperature\":0.8,\"top_k\":16,\"top_p\":0.9,\
+                   \"seed\":11}}}}").unwrap();
+    let mut replay = Vec::new();
+    loop {
+        let j = read_json(&mut reader);
+        match j.get("event").unwrap().as_str().unwrap() {
+            "token" => replay.push(j.get("token").unwrap()
+                .as_usize().unwrap()),
+            "done" => break,
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    assert_eq!(replay, streamed, "fixed-seed stream must replay bitwise");
+
+    gw.stop();
+}
+
+#[test]
+fn tcp_gateway_v2_greedy_matches_v1_tokens() {
+    let server = Arc::new(test_server());
+    let gw = TcpGateway::start(server.clone(), 0).unwrap();
+    let stream = TcpStream::connect(gw.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut out = stream;
+
+    writeln!(out, "{{\"prompt\":[3,9,12],\"max_new\":4}}").unwrap();
+    let v1 = read_json(&mut reader);
+    let v1_tokens: Vec<usize> = v1.get("tokens").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_usize().unwrap()).collect();
+
+    writeln!(out, "{{\"prompt\":[3,9,12],\"params\":{{\"max_new\":4}}}}")
+        .unwrap();
+    let mut v2_tokens = Vec::new();
+    loop {
+        let j = read_json(&mut reader);
+        match j.get("event").unwrap().as_str().unwrap() {
+            "token" => v2_tokens.push(j.get("token").unwrap()
+                .as_usize().unwrap()),
+            "done" => break,
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    assert_eq!(v2_tokens, v1_tokens,
+               "default v2 params are greedy == v1 semantics");
+
+    gw.stop();
+}
+
+#[test]
+fn tcp_gateway_disconnect_cancels_and_frees_slab() {
+    // One slab, one batch slot: a mid-stream client disconnect must
+    // cancel the request (visible in the metrics) and return its slab so
+    // a later client can be served.
+    let server = Arc::new(server_with(1, 1, 4096, 64));
+    let gw = TcpGateway::start(server.clone(), 0).unwrap();
+
+    {
+        let stream = TcpStream::connect(gw.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut out = stream;
+        writeln!(out, "{{\"prompt\":[3,4,5],\"params\":{{\
+                       \"max_new\":100000}}}}").unwrap();
+        // Prove the stream is live, then vanish without cancelling.
+        for _ in 0..2 {
+            let j = read_json(&mut reader);
+            assert_eq!(j.get("event").unwrap().as_str().unwrap(), "token");
+        }
+    } // client connection dropped here
+
+    // A fresh client can only be served once the slab is back.
+    let stream = TcpStream::connect(gw.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut out = stream;
+    writeln!(out, "{{\"prompt\":[6,7],\"max_new\":3}}").unwrap();
+    let j = read_json(&mut reader);
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+    drop(out);
+    drop(reader);
+
+    gw.stop();
+    let report = server.shutdown();
+    assert!(report.contains("cancelled=1"), "report: {report}");
 }
 
 #[test]
