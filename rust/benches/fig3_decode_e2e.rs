@@ -14,11 +14,20 @@
 //! Third axis: **KV-cache dtype** (DESIGN.md §10) — f32 vs statically-
 //! quantized int8 KV at a fixed batch, measuring the integer-domain
 //! attention path against the f32 baseline.
+//!
+//! Fourth axis: **ragged batching** (DESIGN.md §12) — a serving-shaped
+//! mix of one chunked prefill admission riding with a full decode batch,
+//! run as one `forward_batch` ragged call per iteration vs the
+//! sequential seed shape (separate prefill + decode_batch calls). The
+//! work is identical and bitwise equal; the unified call is what the
+//! scheduler issues, so its win is the serving-iteration win.
 
 mod common;
 
 use mergequant::bench::Bench;
-use mergequant::engine::{Engine, KvCache, KvDtype, Workspace};
+use mergequant::engine::{
+    BatchPlan, Engine, KvCache, KvDtype, SpanLogits, Workspace,
+};
 
 const PREFILL: usize = 256;
 const DECODE: usize = 64;
@@ -122,6 +131,90 @@ fn main() {
         }
         b.record(&format!("mergequant decode_int8kv_vs_f32kv b{KV_BATCH}"),
                  decode_t["f32"] / decode_t["int8"]);
+    }
+
+    // ---- ragged axis: mixed prefill+decode, one call vs sequential ----
+    {
+        const LANES: usize = 7;
+        const CHUNK: usize = 32;
+        let (engine, _) = common::engine_or_synthetic("tiny-llama-s",
+                                                      "mergequant");
+        let run_mixed = |unified: bool| -> f64 {
+            let cfg = engine.config().clone();
+            let mut ws = Workspace::new();
+            let prompt: Vec<u32> = (0..PREFILL)
+                .map(|i| 3 + (i as u32 * 17) % (cfg.vocab as u32 - 3))
+                .collect();
+            let cap = PREFILL + DECODE + 2;
+            // Lane 0 is the incoming admission (prefilled CHUNK tokens
+            // per iteration); lanes 1..=LANES decode from full depth.
+            let mut caches: Vec<KvCache> = (0..LANES + 1)
+                .map(|i| {
+                    let mut c = KvCache::new(cfg.n_layers, cap, cfg.d_model);
+                    if i > 0 {
+                        engine.prefill(&prompt, &mut c, &mut ws)
+                            .expect("bench prefill");
+                    }
+                    c
+                })
+                .collect();
+            let sampler = mergequant::engine::Sampler::greedy();
+            let mut toks: Vec<u32> = vec![5; LANES];
+            let mut consumed = 0usize;
+            let v = cfg.vocab;
+            let t0 = std::time::Instant::now();
+            for step in 0..DECODE {
+                let end = (consumed + CHUNK).min(PREFILL);
+                if unified {
+                    let mut plan = BatchPlan::new();
+                    if consumed < end {
+                        plan.push_span(0, &prompt[consumed..end],
+                                       SpanLogits::None);
+                    }
+                    for (i, &t) in toks.iter().enumerate() {
+                        plan.push_span(i + 1, std::slice::from_ref(&t),
+                                       SpanLogits::Last);
+                    }
+                    let mut refs: Vec<&mut KvCache> =
+                        caches.iter_mut().collect();
+                    engine.forward_batch(&plan, &mut refs, &mut ws)
+                        .expect("bench ragged forward");
+                } else {
+                    if consumed < end {
+                        engine.prefill(&prompt[consumed..end],
+                                       &mut caches[0], &mut ws)
+                            .expect("bench chunk prefill");
+                    }
+                    let mut refs: Vec<&mut KvCache> =
+                        caches.iter_mut().skip(1).collect();
+                    engine.decode_batch(&toks, &mut refs, &mut ws)
+                        .expect("bench decode");
+                }
+                consumed = end;
+                // Decode rows are the trailing LANES logits rows in both
+                // modes (the prefill span emits none / is a separate
+                // call), so token selection is identical.
+                for (i, t) in toks.iter_mut().enumerate() {
+                    *t = sampler.sample(&ws.logits[i * v..(i + 1) * v],
+                                        step as u64 + 1);
+                }
+            }
+            t0.elapsed().as_secs_f64()
+        };
+        let mut uni = f64::INFINITY;
+        let mut seq = f64::INFINITY;
+        let _ = run_mixed(true); // warmup
+        for _ in 0..2 {
+            uni = uni.min(run_mixed(true));
+            seq = seq.min(run_mixed(false));
+        }
+        let rows = (LANES * DECODE + PREFILL) as f64;
+        b.record(&format!("mergequant ragged rows/s lanes{LANES} \
+                           chunk{CHUNK} unified"), rows / uni);
+        b.record(&format!("mergequant ragged rows/s lanes{LANES} \
+                           chunk{CHUNK} sequential"), rows / seq);
+        b.record(&format!("mergequant ragged unified_vs_sequential \
+                           lanes{LANES} chunk{CHUNK}"), seq / uni);
     }
 
     // ---- threads axis: fixed batch 8, parallel-kernel scaling ----

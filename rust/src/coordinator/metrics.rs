@@ -1,4 +1,6 @@
-//! Serving metrics: counters + latency/TTFT recorders.
+//! Serving metrics: counters, latency/TTFT recorders, and ragged-batch
+//! composition (rows per engine call, prefill-vs-decode row split, batch
+//! occupancy — DESIGN.md §12).
 
 use std::time::Duration;
 
@@ -10,7 +12,16 @@ pub struct Metrics {
     pub prompt_tokens: u64,
     pub generated_tokens: u64,
     pub decode_iterations: u64,
+    /// Prefill spans executed (one per whole-prompt admission; one per
+    /// chunk under chunked prefill).
     pub prefill_calls: u64,
+    /// Unified ragged engine calls (`Engine::forward_batch`) — exactly
+    /// one per scheduler iteration that had any work.
+    pub forward_calls: u64,
+    /// Total prefill rows stacked into ragged batches.
+    pub prefill_rows: u64,
+    /// Total decode rows (one per decode lane per iteration).
+    pub decode_rows: u64,
     pub peak_active: usize,
     pub rejected: u64,
     /// Requests terminated by a typed engine error (per-request failure
@@ -23,6 +34,8 @@ pub struct Metrics {
     latencies_s: Vec<f64>,
     ttfts_s: Vec<f64>,
     batch_sizes: Vec<f64>,
+    rows_per_iter: Vec<f64>,
+    occupancy: Vec<f64>,
 }
 
 impl Metrics {
@@ -41,6 +54,21 @@ impl Metrics {
         self.peak_active = self.peak_active.max(batch);
     }
 
+    /// Record one ragged engine call: total stacked rows, the
+    /// prefill/decode row split, and batch occupancy (lanes riding the
+    /// call over `max_batch` capacity).
+    pub fn record_forward(&mut self, rows: usize, prefill_rows: usize,
+                          decode_rows: usize, lanes: usize,
+                          max_batch: usize) {
+        self.forward_calls += 1;
+        self.prefill_rows += prefill_rows as u64;
+        self.decode_rows += decode_rows as u64;
+        self.rows_per_iter.push(rows as f64);
+        if max_batch > 0 {
+            self.occupancy.push(lanes as f64 / max_batch as f64);
+        }
+    }
+
     pub fn latency_summary(&self) -> Summary {
         summarize(&self.latencies_s)
     }
@@ -53,13 +81,25 @@ impl Metrics {
         summarize(&self.batch_sizes).mean
     }
 
+    /// Mean stacked rows per ragged engine call.
+    pub fn mean_rows_per_iter(&self) -> f64 {
+        summarize(&self.rows_per_iter).mean
+    }
+
+    /// Mean fraction of `max_batch` lanes riding each engine call.
+    pub fn mean_occupancy(&self) -> f64 {
+        summarize(&self.occupancy).mean
+    }
+
     pub fn report(&self) -> String {
         let lat = self.latency_summary();
         let ttft = self.ttft_summary();
         format!(
             "requests={} prompt_toks={} gen_toks={} decode_iters={} \
              mean_batch={:.2} peak_batch={} failed={} cancelled={} \
-             lat_p50={:.1}ms lat_p99={:.1}ms ttft_p50={:.1}ms",
+             lat_p50={:.1}ms lat_p99={:.1}ms ttft_p50={:.1}ms \
+             fwd_calls={} rows/iter={:.1} prefill_rows={} decode_rows={} \
+             occupancy={:.2}",
             self.requests_completed,
             self.prompt_tokens,
             self.generated_tokens,
@@ -71,6 +111,11 @@ impl Metrics {
             lat.p50 * 1e3,
             lat.p99 * 1e3,
             ttft.p50 * 1e3,
+            self.forward_calls,
+            self.mean_rows_per_iter(),
+            self.prefill_rows,
+            self.decode_rows,
+            self.mean_occupancy(),
         )
     }
 }
@@ -93,5 +138,22 @@ mod tests {
         assert_eq!(m.peak_active, 2);
         assert!((m.latency_summary().mean - 0.15).abs() < 1e-9);
         assert!(!m.report().is_empty());
+    }
+
+    #[test]
+    fn batch_composition_accumulates() {
+        let mut m = Metrics::default();
+        // Tick 1: one 8-row prefill span + 3 decode lanes, 4 of 8 slots.
+        m.record_forward(11, 8, 3, 4, 8);
+        // Tick 2: pure decode, 4 lanes.
+        m.record_forward(4, 0, 4, 4, 8);
+        assert_eq!(m.forward_calls, 2);
+        assert_eq!(m.prefill_rows, 8);
+        assert_eq!(m.decode_rows, 7);
+        assert!((m.mean_rows_per_iter() - 7.5).abs() < 1e-9);
+        assert!((m.mean_occupancy() - 0.5).abs() < 1e-9);
+        let r = m.report();
+        assert!(r.contains("fwd_calls=2"), "{r}");
+        assert!(r.contains("prefill_rows=8"), "{r}");
     }
 }

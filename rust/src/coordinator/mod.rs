@@ -5,25 +5,30 @@
 //!
 //! ```text
 //!  clients ──TCP/ndjson──► gateway ──mpsc──► scheduler (owns Engine)
-//!                                               │  admit → prefill (slab from KvPool)
-//!                                               │  step  → decode_batch over active set
+//!                                               │  admit  → slab from KvPool
+//!                                               │  step   → ONE forward_batch
+//!                                               │           (prefill spans +
+//!                                               │            decode lanes, ragged)
 //!                                               │  cancel → slab back next iteration
 //!                                               ▼
 //!                                  event streams (one per request:
 //!                                  Token… then Done/Error)
 //! ```
 //!
-//! The scheduler runs iteration-level (continuous) batching: every loop it
-//! applies cancellations, admits up to `max_prefills_per_iter` pending
-//! requests (bounded by free KV slabs and `max_batch`), then advances
-//! *all* active sequences one decode step in a single batched engine
-//! call. Requests carry [`GenerationParams`] (temperature/top-k/top-p,
-//! per-request seed, stop tokens, token budget) and report progress as
-//! per-token [`Event`] frames — the generation API v2 contract
-//! (DESIGN.md §11). Invariants (property-tested): every request gets
-//! exactly one terminal event, the active set never exceeds `max_batch`,
-//! KV slabs are never double-allocated or leaked (cancellation included),
-//! FIFO admission order.
+//! The scheduler runs iteration-level (continuous) batching: every loop
+//! it applies cancellations, admits pending requests (bounded by free KV
+//! slabs and `max_batch`), then stacks up to `max_prefills_per_iter`
+//! prefill spans — several chunked prefills may be in flight
+//! concurrently — and every active decode lane into **one ragged
+//! [`crate::engine::BatchPlan`]** executed by a single
+//! `Engine::forward_batch` call (DESIGN.md §12). Requests carry
+//! [`GenerationParams`] (temperature/top-k/top-p, per-request seed, stop
+//! tokens, token budget) and report progress as per-token [`Event`]
+//! frames — the generation API v2 contract (DESIGN.md §11). Invariants
+//! (property-tested): every request gets exactly one terminal event, the
+//! active set never exceeds `max_batch`, KV slabs are never
+//! double-allocated or leaked (cancellation included), FIFO admission
+//! order, one engine call per iteration.
 
 pub mod kv_pool;
 pub mod metrics;

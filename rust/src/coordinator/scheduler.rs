@@ -1,4 +1,5 @@
-//! Iteration-level (continuous-batching) scheduler.
+//! Iteration-level (continuous-batching) scheduler — **one engine call
+//! per iteration** (DESIGN.md §12).
 //!
 //! Owns the engine, a KV pool and the pending queue. Each call to
 //! [`Scheduler::step`] performs one scheduling iteration:
@@ -6,12 +7,20 @@
 //! 1. **Cancellation:** tear cancelled sequences out of the batch —
 //!    pending requests are answered immediately, active/prefilling ones
 //!    are finalized this iteration and their KV slabs returned.
-//! 2. **Admission (router):** pop pending requests FIFO while there is
-//!    batch room and a free KV slab, capped at `max_prefills_per_iter`
-//!    per iteration to bound decode stalls; run their prefill and sample
-//!    their first token (TTFT point).
-//! 3. **Decode:** one batched decode step across all active sequences.
-//! 4. **Completion:** sequences that hit `max_new` / a stop token /
+//! 2. **Admission (router):** pop pending requests FIFO into the
+//!    prefilling set while there is batch room and a free KV slab
+//!    (oversized prompts are answered with the typed overflow error up
+//!    front, before holding a slab).
+//! 3. **One ragged batch:** build a single [`BatchPlan`] — up to
+//!    `max_prefills_per_iter` prefill spans (whole prompts, or
+//!    `prefill_chunk`-token chunks of the in-flight prefills; several
+//!    chunked prefills ride concurrently) plus one decode span per
+//!    active lane — and run **one** [`Engine::forward_batch`] call over
+//!    the stacked rows.
+//! 4. **Sampling:** completed prefills are promoted to the active set
+//!    (first token — the TTFT point, in FIFO order); every decode lane
+//!    samples its next token from its span's logits row.
+//! 5. **Completion:** sequences that hit `max_new` / a stop token /
 //!    cache capacity are finalized, their slabs returned to the pool.
 //!
 //! Progress is reported as an **event stream** ([`Event`], drained via
@@ -22,23 +31,28 @@
 //! Token selection goes through each request's seeded
 //! [`Sampler`](crate::engine::Sampler) (`GenerationParams::sampler`):
 //! greedy requests run the seed argmax path bitwise unchanged, sampled
-//! requests draw from a counter-based per-request RNG, so streams are
-//! deterministic for every thread count and batch composition.
+//! requests draw from a counter-based per-request RNG. The unified pass
+//! is bitwise identical to the sequential seed paths for every batch
+//! composition (`tests/ragged_batch.rs`), so token streams are
+//! deterministic for every thread count, chunking choice, and batch
+//! composition.
 //!
 //! **Threading model:** the scheduling loop itself is synchronous — one
 //! iteration at a time, driven by [`super::server::Server`]'s worker
 //! thread — but the engine underneath executes every forward call on its
 //! intra-op worker pool ([`crate::quant::parallel`]): tiled multi-threaded
-//! GEMM, prefill attention over query-row blocks, decode attention across
-//! batch lanes. [`SchedulerConfig::threads`] sizes that pool (plumbed from
-//! the JSON config / `--threads`; DESIGN.md §7). Token streams are bitwise
-//! identical for every thread count, so scheduling invariants and goldens
-//! are unaffected by the parallelism.
+//! GEMM and ragged attention over row blocks. [`SchedulerConfig::threads`]
+//! sizes that pool (plumbed from the JSON config / `--threads`;
+//! DESIGN.md §7). Token streams are bitwise identical for every thread
+//! count, so scheduling invariants and goldens are unaffected by the
+//! parallelism.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use crate::engine::{Engine, EngineError, KvDtype, Sampler, Workspace};
+use crate::engine::{
+    BatchPlan, Engine, EngineError, KvDtype, Sampler, SpanLogits, Workspace,
+};
 
 use super::kv_pool::KvPool;
 use super::metrics::Metrics;
@@ -46,19 +60,24 @@ use super::request::{Event, FinishReason, Request, Response};
 
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
-    /// Max concurrently active sequences (decode batch cap).
+    /// Max concurrently live sequences (active decode lanes plus
+    /// in-flight prefills — every lane of the per-iteration ragged
+    /// batch).
     pub max_batch: usize,
     /// KV slabs (≥ max_batch; extra slabs buffer admissions).
     pub kv_slabs: usize,
     /// Per-sequence KV capacity.
     pub max_seq: usize,
-    /// New prefills admitted per iteration.
+    /// Prefill spans per ragged batch: bounds per-iteration prefill work
+    /// (and therefore decode stalls). Several chunked prefills may be in
+    /// flight; each iteration advances the oldest `max_prefills_per_iter`
+    /// of them by one span.
     pub max_prefills_per_iter: usize,
     /// Pending-queue bound (backpressure: submit fails beyond it).
     pub queue_cap: usize,
-    /// Chunked prefill: prompts longer than this are prefilled
-    /// `prefill_chunk` tokens per iteration so long prompts cannot stall
-    /// the decode batch (0 ⇒ disabled, whole prompt in one call).
+    /// Chunked prefill: prompts are prefilled at most `prefill_chunk`
+    /// tokens per iteration so long prompts cannot stall the decode
+    /// batch (0 ⇒ disabled, whole prompt in one span).
     pub prefill_chunk: usize,
     /// Engine intra-op compute threads (`quant::parallel` pool): 1 ⇒
     /// serial kernels (the deterministic baseline — though every count
@@ -101,12 +120,24 @@ struct Active {
     error: Option<String>,
 }
 
-/// One request mid-way through a chunked prefill (at most one in flight;
-/// that alone bounds per-iteration prefill work by `prefill_chunk`).
+/// A request whose prompt is not yet fully in its KV slab. Any number
+/// may be in flight concurrently; each iteration the oldest
+/// `max_prefills_per_iter` of them contribute one span to the ragged
+/// batch (whole remaining prompt when chunking is off).
 struct Prefilling {
     req: Request,
     slab: usize,
     consumed: usize,
+}
+
+/// What a span of the per-iteration [`BatchPlan`] stands for — used to
+/// route logits rows and to attribute typed engine errors back to the
+/// owning request.
+enum SpanRole {
+    /// Span advances `prefilling[pf]` to `consumed == end`.
+    Prefill { pf: usize, end: usize },
+    /// Span decodes one token for `active[idx]`.
+    Decode { idx: usize },
 }
 
 pub struct Scheduler {
@@ -114,7 +145,7 @@ pub struct Scheduler {
     cfg: SchedulerConfig,
     pool: KvPool,
     pending: VecDeque<Request>,
-    prefilling: Option<Prefilling>,
+    prefilling: Vec<Prefilling>,
     active: Vec<Active>,
     ws: Workspace,
     pub metrics: Metrics,
@@ -144,7 +175,7 @@ impl Scheduler {
             cfg,
             pool,
             pending: VecDeque::new(),
-            prefilling: None,
+            prefilling: Vec::new(),
             active: Vec::new(),
             ws: Workspace::new(),
             metrics: Metrics::default(),
@@ -178,7 +209,7 @@ impl Scheduler {
 
     pub fn has_work(&self) -> bool {
         !self.pending.is_empty() || !self.active.is_empty()
-            || self.prefilling.is_some()
+            || !self.prefilling.is_empty()
     }
 
     pub fn active_len(&self) -> usize {
@@ -187,6 +218,12 @@ impl Scheduler {
 
     pub fn pending_len(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Requests currently mid-prefill (concurrent chunked prefills are
+    /// allowed; observability for tests and diagnostics).
+    pub fn prefilling_len(&self) -> usize {
+        self.prefilling.len()
     }
 
     /// Free KV slabs (capacity minus live sequences) — observability for
@@ -206,11 +243,14 @@ impl Scheduler {
         std::mem::take(&mut self.events)
     }
 
-    /// One scheduling iteration. Returns number of sequences advanced.
+    /// One scheduling iteration: cancellations, admissions, then **one**
+    /// `forward_batch` ragged engine call carrying every prefill span
+    /// and decode lane, then sampling and completion. Returns the number
+    /// of active sequences.
     pub fn step(&mut self) -> usize {
         self.apply_cancellations();
         self.admit();
-        self.decode();
+        self.run_batch();
         self.finalize();
         self.active.len()
     }
@@ -225,8 +265,10 @@ impl Scheduler {
                 self.answer_cancelled(&req);
                 continue;
             }
-            if self.prefilling.as_ref().is_some_and(|p| p.req.id == id) {
-                let pf = self.prefilling.take().unwrap();
+            if let Some(pos) =
+                self.prefilling.iter().position(|p| p.req.id == id)
+            {
+                let pf = self.prefilling.remove(pos);
                 self.pool.dealloc(pf.slab);
                 self.answer_cancelled(&pf.req);
                 continue;
@@ -270,8 +312,230 @@ impl Scheduler {
         });
     }
 
+    /// Admission (router): pending → prefilling, FIFO, while there is
+    /// batch room (active + in-flight prefills), a free slab, and an
+    /// unused prefill-span slot this iteration. Prompts that can never
+    /// run — empty (no logits row to sample a first token from), or
+    /// longer than a slab — are answered with a per-request failure up
+    /// front: no slab held, no engine call burned. (The server layer
+    /// already rejects empty prompts synchronously; this guards direct
+    /// `Scheduler::submit` users, where the seed panicked instead.)
+    fn admit(&mut self) {
+        let budget = self.cfg.max_prefills_per_iter.max(1);
+        while self.prefilling.len() < budget
+            && self.active.len() + self.prefilling.len() < self.cfg.max_batch
+            && !self.pending.is_empty()
+        {
+            let plen = self.pending.front().map_or(0, |r| r.prompt.len());
+            if plen == 0 {
+                let req = self.pending.pop_front().unwrap();
+                self.metrics.failed += 1;
+                self.events.push(Event::Error {
+                    response: Response::failed(
+                        req.id, 0, req.submitted.elapsed(),
+                        "empty prompt".into()),
+                });
+                continue;
+            }
+            if plen > self.cfg.max_seq {
+                let req = self.pending.pop_front().unwrap();
+                let err = EngineError::KvOverflow {
+                    lane: 0,
+                    pos: plen - 1,
+                    cap: self.cfg.max_seq,
+                };
+                self.metrics.failed += 1;
+                self.events.push(Event::Error {
+                    response: Response::failed(req.id, plen,
+                                               req.submitted.elapsed(),
+                                               err.to_string()),
+                });
+                continue;
+            }
+            let Some(slab) = self.pool.alloc() else { break };
+            let req = self.pending.pop_front().unwrap();
+            self.prefilling.push(Prefilling { req, slab, consumed: 0 });
+        }
+    }
+
+    /// Build this iteration's [`BatchPlan`] — prefill spans first (FIFO,
+    /// bounded by `max_prefills_per_iter`), then one decode span per
+    /// runnable active lane — and run **one** `forward_batch` over it.
+    fn run_batch(&mut self) {
+        let budget = self.cfg.max_prefills_per_iter.max(1);
+        let mut plan = BatchPlan::new();
+        let mut roles: Vec<SpanRole> = Vec::new();
+        let mut slabs: Vec<usize> = Vec::new();
+        for (pi, pf) in self.prefilling.iter().enumerate().take(budget) {
+            let remaining = pf.req.prompt.len() - pf.consumed;
+            let chunk = if self.cfg.prefill_chunk == 0 {
+                remaining
+            } else {
+                self.cfg.prefill_chunk.min(remaining)
+            };
+            let end = pf.consumed + chunk;
+            let logits = if end == pf.req.prompt.len() {
+                SpanLogits::Last
+            } else {
+                SpanLogits::None
+            };
+            plan.push_span(roles.len(), &pf.req.prompt[pf.consumed..end],
+                           logits);
+            roles.push(SpanRole::Prefill { pf: pi, end });
+            slabs.push(pf.slab);
+        }
+        let prefill_rows = plan.rows();
+        for (idx, a) in self.active.iter_mut().enumerate() {
+            if a.done {
+                continue;
+            }
+            if a.tokens.len() >= a.req.params.max_new {
+                // Defensive: budget reached without the done flag —
+                // finalize it rather than skipping it forever.
+                a.done = true;
+                continue;
+            }
+            plan.push_span(roles.len(), &[a.next], SpanLogits::Last);
+            roles.push(SpanRole::Decode { idx });
+            slabs.push(a.slab);
+        }
+        if roles.is_empty() {
+            return;
+        }
+        // Roles and plan spans must stay 1:1 — logits routing and error
+        // attribution index one by the other. Guaranteed because every
+        // span here is non-empty (admission rejects empty prompts, so a
+        // prefilling entry always has ≥ 1 remaining token).
+        debug_assert_eq!(plan.spans().len(), roles.len());
+        let mut caches = self.pool.get_many_mut(&slabs);
+        let result = self.engine.forward_batch(&plan, &mut caches,
+                                               &mut self.ws);
+        drop(caches);
+        match result {
+            Ok(()) => {
+                let prefill_spans = roles
+                    .iter()
+                    .filter(|r| matches!(r, SpanRole::Prefill { .. }))
+                    .count();
+                let decode_spans = roles.len() - prefill_spans;
+                self.metrics.prefill_calls += prefill_spans as u64;
+                self.metrics.record_forward(plan.rows(), prefill_rows,
+                                            decode_spans, roles.len(),
+                                            self.cfg.max_batch);
+                if decode_spans > 0 {
+                    self.metrics.record_decode_iter(decode_spans);
+                }
+                self.consume_outputs(&plan, &roles);
+            }
+            Err(e) => self.attribute_error(&roles, &e),
+        }
+    }
+
+    /// Route the ragged batch's logits rows: promote completed prefills
+    /// into the active set (first token, FIFO — the TTFT point) and
+    /// sample one token per decode lane.
+    fn consume_outputs(&mut self, plan: &BatchPlan, roles: &[SpanRole]) {
+        // Prefill progress first; collect completions in FIFO order.
+        let mut completed: Vec<(usize, usize)> = Vec::new(); // (span, pf)
+        for (si, role) in roles.iter().enumerate() {
+            if let SpanRole::Prefill { pf, end } = role {
+                self.prefilling[*pf].consumed = *end;
+                if *end == self.prefilling[*pf].req.prompt.len() {
+                    completed.push((si, *pf));
+                }
+            }
+        }
+        let mut removed = 0usize;
+        for (si, pi) in completed {
+            let pf = self.prefilling.remove(pi - removed);
+            removed += 1;
+            let row = plan.logits_rows(si).start;
+            self.activate(pf.req, pf.slab, row);
+        }
+        // Decode lanes: one sampled token each. (Activation only pushed
+        // to the end of `active`, so the captured indices stay valid.)
+        let vocab = self.engine.config().vocab;
+        for (si, role) in roles.iter().enumerate() {
+            let SpanRole::Decode { idx } = role else { continue };
+            let i = *idx;
+            let r = plan.logits_rows(si).start;
+            let row = &self.ws.logits[r * vocab..(r + 1) * vocab];
+            let a = &mut self.active[i];
+            // Counter step = number of tokens sampled so far, so the
+            // stream is a pure function of (seed, step) — identical for
+            // every thread count and batch composition.
+            let tok = a.sampler.sample(row, a.tokens.len() as u64);
+            a.tokens.push(tok);
+            a.next = tok;
+            self.events.push(Event::Token {
+                id: a.req.id,
+                index: a.tokens.len() - 1,
+                token: tok,
+            });
+            let cache_full = {
+                let c = self.pool.get_mut(a.slab);
+                c.len + 1 >= c.cap
+            };
+            let a = &mut self.active[i];
+            if a.req.params.stop_tokens.contains(&tok) {
+                a.done = true;
+                a.finish = FinishReason::Stop;
+            } else if a.tokens.len() >= a.req.params.max_new {
+                a.done = true;
+                a.finish = FinishReason::Length;
+            } else if cache_full {
+                a.done = true;
+                a.finish = FinishReason::CacheFull;
+            }
+        }
+    }
+
+    /// A typed engine error validated before any state mutation: nothing
+    /// advanced. Terminate only the offending span's request when the
+    /// error names one; otherwise fail every participant rather than
+    /// livelock on a persistent error. Untouched lanes retry next
+    /// iteration.
+    fn attribute_error(&mut self, roles: &[SpanRole], e: &EngineError) {
+        match e {
+            EngineError::KvOverflow { lane, .. } => match roles[*lane] {
+                SpanRole::Decode { idx } => {
+                    let a = &mut self.active[idx];
+                    a.error = Some(e.to_string());
+                    a.finish = FinishReason::Error;
+                    a.done = true;
+                    self.metrics.failed += 1;
+                }
+                SpanRole::Prefill { pf, .. } => {
+                    let p = self.prefilling.remove(pf);
+                    self.fail_request(p.req, p.slab, e);
+                }
+            },
+            _ => {
+                // No span attribution — fail the whole batch. Prefill
+                // roles carry ascending indices; walk them back-to-front
+                // so removal keeps the remaining indices valid.
+                for role in roles.iter().rev() {
+                    match *role {
+                        SpanRole::Prefill { pf, .. } => {
+                            let p = self.prefilling.remove(pf);
+                            self.fail_request(p.req, p.slab, e);
+                        }
+                        SpanRole::Decode { idx } => {
+                            let a = &mut self.active[idx];
+                            a.error = Some(e.to_string());
+                            a.finish = FinishReason::Error;
+                            a.done = true;
+                            self.metrics.failed += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     /// Promote a fully-prefilled request into the active set: sample its
-    /// first token (counter step 0 — the TTFT point) and emit the first
+    /// first token (counter step 0 — the TTFT point) from logits row
+    /// `first_logits_row` of the just-run batch and emit the first
     /// `Token` frame.
     fn activate(&mut self, req: Request, slab: usize, first_logits_row: usize) {
         let vocab = self.engine.config().vocab;
@@ -308,144 +572,6 @@ impl Scheduler {
             finish,
             error: None,
         });
-    }
-
-    /// Advance the in-flight chunked prefill by one chunk; returns true
-    /// if it consumed this iteration's prefill budget.
-    fn advance_chunked(&mut self) -> bool {
-        let Some(mut pf) = self.prefilling.take() else { return false };
-        let chunk = self.cfg.prefill_chunk.max(1);
-        let end = (pf.consumed + chunk).min(pf.req.prompt.len());
-        let toks: Vec<u32> = pf.req.prompt[pf.consumed..end].to_vec();
-        let cache = self.pool.get_mut(pf.slab);
-        if let Err(e) = self.engine.prefill(&toks, cache, &mut self.ws) {
-            self.fail_request(pf.req, pf.slab, &e);
-            return true;
-        }
-        self.metrics.prefill_calls += 1;
-        pf.consumed = end;
-        if pf.consumed == pf.req.prompt.len() {
-            self.activate(pf.req, pf.slab, toks.len() - 1);
-        } else {
-            self.prefilling = Some(pf);
-        }
-        true
-    }
-
-    fn admit(&mut self) {
-        let mut admitted = usize::from(self.advance_chunked());
-        while admitted < self.cfg.max_prefills_per_iter
-            && self.prefilling.is_none()
-            && self.active.len() < self.cfg.max_batch
-            && !self.pending.is_empty()
-        {
-            let Some(slab) = self.pool.alloc() else { break };
-            let req = self.pending.pop_front().unwrap();
-            // Long prompts go through the chunked path so one admission
-            // cannot stall the whole decode batch.
-            if self.cfg.prefill_chunk > 0
-                && req.prompt.len() > self.cfg.prefill_chunk
-            {
-                self.prefilling = Some(Prefilling { req, slab, consumed: 0 });
-                admitted += usize::from(self.advance_chunked());
-                continue;
-            }
-            let cache = self.pool.get_mut(slab);
-            // Oversized prompts (and any other engine-side failure)
-            // surface as the typed error → per-request failure; the
-            // worker thread never dies on them.
-            if let Err(e) = self.engine.prefill(&req.prompt, cache,
-                                                &mut self.ws) {
-                self.fail_request(req, slab, &e);
-                admitted += 1;
-                continue;
-            }
-            self.metrics.prefill_calls += 1;
-            let last_row = req.prompt.len() - 1;
-            self.activate(req, slab, last_row);
-            admitted += 1;
-        }
-    }
-
-    fn decode(&mut self) {
-        if self.active.is_empty() {
-            return;
-        }
-        // Sequences that already reached their budget skip the step.
-        let run_idx: Vec<usize> = (0..self.active.len())
-            .filter(|&i| !self.active[i].done
-                && self.active[i].tokens.len()
-                    < self.active[i].req.params.max_new)
-            .collect();
-        if run_idx.is_empty() {
-            for a in &mut self.active {
-                a.done = true;
-            }
-            return;
-        }
-        let tokens: Vec<u32> =
-            run_idx.iter().map(|&i| self.active[i].next).collect();
-        let slabs: Vec<usize> =
-            run_idx.iter().map(|&i| self.active[i].slab).collect();
-        let mut caches = self.pool.get_many_mut(&slabs);
-        if let Err(e) = self.engine.decode_batch(&tokens, &mut caches,
-                                                 &mut self.ws) {
-            // The engine validates before computing, so nothing advanced:
-            // terminate only the offending lane (its partial tokens ship
-            // with the error) and let the rest retry next iteration.
-            match e {
-                EngineError::KvOverflow { lane, .. } => {
-                    let idx = run_idx[lane];
-                    self.active[idx].error = Some(e.to_string());
-                    self.active[idx].finish = FinishReason::Error;
-                    self.active[idx].done = true;
-                    self.metrics.failed += 1;
-                }
-                _ => {
-                    // No lane attribution — fail the whole run set rather
-                    // than livelock on a persistent error.
-                    for &idx in &run_idx {
-                        self.active[idx].error = Some(e.to_string());
-                        self.active[idx].finish = FinishReason::Error;
-                        self.active[idx].done = true;
-                        self.metrics.failed += 1;
-                    }
-                }
-            }
-            return;
-        }
-        self.metrics.record_decode_iter(run_idx.len());
-        let vocab = self.engine.config().vocab;
-        for (bi, &i) in run_idx.iter().enumerate() {
-            let row = &self.ws.logits[bi * vocab..(bi + 1) * vocab];
-            let a = &mut self.active[i];
-            // Counter step = number of tokens sampled so far, so the
-            // stream is a pure function of (seed, step) — identical for
-            // every thread count and batch composition.
-            let tok = a.sampler.sample(row, a.tokens.len() as u64);
-            a.tokens.push(tok);
-            a.next = tok;
-            self.events.push(Event::Token {
-                id: a.req.id,
-                index: a.tokens.len() - 1,
-                token: tok,
-            });
-            let cache_full = {
-                let c = self.pool.get_mut(a.slab);
-                c.len + 1 >= c.cap
-            };
-            let a = &mut self.active[i];
-            if a.req.params.stop_tokens.contains(&tok) {
-                a.done = true;
-                a.finish = FinishReason::Stop;
-            } else if a.tokens.len() >= a.req.params.max_new {
-                a.done = true;
-                a.finish = FinishReason::Length;
-            } else if cache_full {
-                a.done = true;
-                a.finish = FinishReason::CacheFull;
-            }
-        }
     }
 
     fn finalize(&mut self) {

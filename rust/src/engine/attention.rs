@@ -1,0 +1,135 @@
+//! Attention over cached K/V: f32 and int8-KV paths, plus the ragged
+//! per-span fan-out used by the unified forward pass.
+//!
+//! Every query row is attended independently against its own sequence's
+//! cached prefix (causal: row at absolute position `p` sees `p + 1`
+//! cached entries). Per-row math is strictly sequential and identical in
+//! the serial and parallel paths, so results are **bitwise identical**
+//! for every thread count and both KV dtypes (DESIGN.md §7/§10) — and,
+//! because rows never interact, for every ragged batch composition
+//! (DESIGN.md §12).
+
+use crate::quant::gemm::dot_f32;
+use crate::quant::kv::{self, KvDtype, KvLayerScales};
+use crate::quant::parallel::{ScopedTask, ThreadPool};
+
+use super::cache::KvCache;
+use super::qmod::ModelConfig;
+
+/// Attention context of one row in a ragged batch: which lane's cache it
+/// reads and how long the causal prefix is (its absolute position + 1).
+#[derive(Clone, Copy, Debug)]
+pub(super) struct RowAttn {
+    pub lane: usize,
+    pub klen: usize,
+}
+
+/// One attention head-batched pass for a single query row against a
+/// cached f32 K/V region of length `klen`. q: (d,), out: (d,).
+#[allow(clippy::too_many_arguments)]
+fn attend_one(cfg: &ModelConfig, q: &[f32], kcache: &[f32], vcache: &[f32],
+              cache_stride: usize, klen: usize, scores: &mut Vec<f32>,
+              out: &mut [f32]) {
+    let (h, hd) = (cfg.n_heads, cfg.head_dim());
+    let scale = 1.0 / (hd as f32).sqrt();
+    scores.resize(klen, 0.0);
+    for head in 0..h {
+        let qh = &q[head * hd..(head + 1) * hd];
+        // scores
+        let mut maxv = f32::NEG_INFINITY;
+        for t in 0..klen {
+            let kh = &kcache[t * cache_stride + head * hd
+                ..t * cache_stride + (head + 1) * hd];
+            let s = dot_f32(qh, kh) * scale;
+            scores[t] = s;
+            maxv = maxv.max(s);
+        }
+        // softmax
+        let mut denom = 0f32;
+        for s in scores[..klen].iter_mut() {
+            *s = (*s - maxv).exp();
+            denom += *s;
+        }
+        let inv = 1.0 / denom;
+        // weighted value sum
+        let oh = &mut out[head * hd..(head + 1) * hd];
+        oh.fill(0.0);
+        for t in 0..klen {
+            let w = scores[t] * inv;
+            let vh = &vcache[t * cache_stride + head * hd
+                ..t * cache_stride + (head + 1) * hd];
+            for c in 0..hd {
+                oh[c] += w * vh[c];
+            }
+        }
+    }
+}
+
+/// One query row attended over layer `l` of `cache`, dispatching on the
+/// cache dtype: f32 storage runs the seed [`attend_one`], int8 storage
+/// runs the integer-domain path (`quant::kv::attend_one_i8`). Both are
+/// per-row order-fixed, so the §7 bitwise-determinism guarantee holds
+/// for either dtype.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn attend_cached(cfg: &ModelConfig, cache: &KvCache,
+                            kvsc: Option<&[KvLayerScales]>, l: usize,
+                            q: &[f32], klen: usize, scores: &mut Vec<f32>,
+                            qq: &mut Vec<i8>, out: &mut [f32]) {
+    match cache.dtype() {
+        KvDtype::F32 => attend_one(cfg, q, cache.layer_k_f32(l),
+                                   cache.layer_v_f32(l), cfg.d_model, klen,
+                                   scores, out),
+        KvDtype::Int8 => {
+            let sc = &kvsc.expect("validated int8 KV scales")[l];
+            kv::attend_one_i8(q, cache.layer_k_i8(l), cache.layer_v_i8(l),
+                              sc, cfg.d_model, klen, cfg.n_heads, scores,
+                              qq, out);
+        }
+    }
+}
+
+/// Attention for every row of a ragged batch: row `i` attends over
+/// `caches[rows[i].lane]` with causal prefix `rows[i].klen`, writing its
+/// (d,) output into `attn[i·d..]`.
+///
+/// Fan-out is over blocks of rows spanning span boundaries freely —
+/// each task owns a disjoint slice of `attn` and private score buffers,
+/// and per-row math is identical to the serial path, so results are
+/// bitwise independent of the thread count for both KV dtypes. Blocks
+/// are 4×-oversubscribed: rows attending longer prefixes (late prefill
+/// rows, deep decode lanes) cost more, so equal-size blocks are unequal
+/// work.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn attend_batch(pool: &ThreadPool, cfg: &ModelConfig,
+                           caches: &[&mut KvCache],
+                           lane_scales: &[Option<&[KvLayerScales]>],
+                           l: usize, qbuf: &[f32], rows: &[RowAttn],
+                           scores: &mut Vec<f32>, qq: &mut Vec<i8>,
+                           attn: &mut [f32]) {
+    let d = cfg.d_model;
+    let m = rows.len();
+    if pool.threads() == 1 || m == 1 {
+        for (i, r) in rows.iter().enumerate() {
+            attend_cached(cfg, &caches[r.lane], lane_scales[r.lane], l,
+                          &qbuf[i * d..(i + 1) * d], r.klen, scores, qq,
+                          &mut attn[i * d..(i + 1) * d]);
+        }
+        return;
+    }
+    let block = m.div_ceil(pool.threads() * 4).max(1);
+    let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
+    for (bi, ablock) in attn[..m * d].chunks_mut(block * d).enumerate() {
+        tasks.push(Box::new(move || {
+            let mut scores = Vec::new();
+            let mut qq = Vec::new();
+            for (ri, arow) in ablock.chunks_mut(d).enumerate() {
+                let i = bi * block + ri;
+                let r = rows[i];
+                attend_cached(cfg, &caches[r.lane], lane_scales[r.lane], l,
+                              &qbuf[i * d..(i + 1) * d], r.klen,
+                              &mut scores, &mut qq, arow);
+            }
+        }));
+    }
+    pool.run(tasks);
+}

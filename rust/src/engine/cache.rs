@@ -1,0 +1,132 @@
+//! Per-sequence KV caches with dtype-parametric storage.
+//!
+//! [`KvCache`] is the unit the scheduler's slab pool hands out: a
+//! contiguous (L, cap, d) K/V plane pair per sequence, stored either in
+//! f32 (the seed layout) or statically-quantized int8 (4× smaller, the
+//! Table-3 scaling story — DESIGN.md §10). Quantization happens at write
+//! time with the bundle's calibrated per-channel scales; the integer
+//! attention path reads the int8 planes directly (`engine::attention`).
+
+use crate::quant::kv::{self, KvDtype, KvLayerScales};
+
+/// Dtype-parametric K/V storage: contiguous (L, cap, d) planes either in
+/// f32 (seed layout) or statically-quantized int8 (4× smaller).
+enum KvStore {
+    F32 { k: Vec<f32>, v: Vec<f32> },
+    I8 { k: Vec<i8>, v: Vec<i8> },
+}
+
+/// Per-sequence KV cache: layout (L, cap, d) with d = H·hd. Storage is
+/// dtype-parametric ([`KvDtype`]): `F32` keeps the full-precision seed
+/// behaviour, `Int8` stores per-channel statically-quantized values (the
+/// engine quantizes at write time with the bundle's calibrated scales and
+/// attends in the integer domain — `quant::kv`).
+pub struct KvCache {
+    store: KvStore,
+    pub cap: usize,
+    pub len: usize,
+    pub n_layers: usize,
+    d: usize,
+}
+
+impl KvCache {
+    /// Full-precision cache (seed-compatible default).
+    pub fn new(n_layers: usize, cap: usize, d: usize) -> Self {
+        Self::with_dtype(KvDtype::F32, n_layers, cap, d)
+    }
+
+    /// Cache with an explicit storage dtype.
+    pub fn with_dtype(dtype: KvDtype, n_layers: usize, cap: usize, d: usize)
+                      -> Self {
+        let n = n_layers * cap * d;
+        let store = match dtype {
+            KvDtype::F32 => KvStore::F32 { k: vec![0f32; n], v: vec![0f32; n] },
+            KvDtype::Int8 => KvStore::I8 { k: vec![0i8; n], v: vec![0i8; n] },
+        };
+        KvCache { store, cap, len: 0, n_layers, d }
+    }
+
+    /// Storage element type of this cache.
+    pub fn dtype(&self) -> KvDtype {
+        match self.store {
+            KvStore::F32 { .. } => KvDtype::F32,
+            KvStore::I8 { .. } => KvDtype::Int8,
+        }
+    }
+
+    #[inline]
+    fn plane(&self, l: usize) -> std::ops::Range<usize> {
+        l * self.cap * self.d..(l + 1) * self.cap * self.d
+    }
+
+    #[inline]
+    pub(super) fn layer_k_f32(&self, l: usize) -> &[f32] {
+        match &self.store {
+            KvStore::F32 { k, .. } => &k[self.plane(l)],
+            KvStore::I8 { .. } => unreachable!("f32 view of int8 KV cache"),
+        }
+    }
+
+    #[inline]
+    pub(super) fn layer_v_f32(&self, l: usize) -> &[f32] {
+        match &self.store {
+            KvStore::F32 { v, .. } => &v[self.plane(l)],
+            KvStore::I8 { .. } => unreachable!("f32 view of int8 KV cache"),
+        }
+    }
+
+    #[inline]
+    pub(super) fn layer_k_i8(&self, l: usize) -> &[i8] {
+        match &self.store {
+            KvStore::I8 { k, .. } => &k[self.plane(l)],
+            KvStore::F32 { .. } => unreachable!("int8 view of f32 KV cache"),
+        }
+    }
+
+    #[inline]
+    pub(super) fn layer_v_i8(&self, l: usize) -> &[i8] {
+        match &self.store {
+            KvStore::I8 { v, .. } => &v[self.plane(l)],
+            KvStore::F32 { .. } => unreachable!("int8 view of f32 KV cache"),
+        }
+    }
+
+    /// Store one K/V row, quantizing on the way in for int8 storage.
+    /// Callers (the unified forward pass) validate capacity and scale
+    /// availability up front and return `EngineError` — by the time a
+    /// write happens it cannot fail.
+    #[inline]
+    pub(super) fn write(&mut self, l: usize, pos: usize, k_row: &[f32],
+                        v_row: &[f32], scales: Option<&KvLayerScales>) {
+        debug_assert!(pos < self.cap,
+                      "KV write past validated capacity: {pos} >= {}",
+                      self.cap);
+        let d = self.d;
+        let off = l * self.cap * d + pos * d;
+        match &mut self.store {
+            KvStore::F32 { k, v } => {
+                k[off..off + d].copy_from_slice(k_row);
+                v[off..off + d].copy_from_slice(v_row);
+            }
+            KvStore::I8 { k, v } => {
+                let sc = scales.expect("int8 KV write validated scales");
+                kv::quantize_row_i8(k_row, &sc.k_inv, &mut k[off..off + d]);
+                kv::quantize_row_i8(v_row, &sc.v_inv, &mut v[off..off + d]);
+            }
+        }
+    }
+
+    /// Resident bytes of the K/V planes (Table 3 accounting): 4 bytes per
+    /// element for f32 storage, 1 for int8.
+    pub fn bytes(&self) -> usize {
+        match &self.store {
+            KvStore::F32 { k, v } => (k.len() + v.len()) * 4,
+            KvStore::I8 { k, v } => k.len() + v.len(),
+        }
+    }
+
+    /// Forget the cached prefix (storage is retained and overwritten).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+}

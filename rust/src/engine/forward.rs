@@ -1,0 +1,662 @@
+//! The unified ragged-batch forward pass (DESIGN.md §12).
+//!
+//! One engine call per scheduler iteration: a [`BatchPlan`] describes a
+//! ragged batch of per-sequence row **spans** — a 1-row decode lane and
+//! a 256-row prefill chunk are the same thing, a span with a start
+//! position (its cache's current length) and a token slice. Every layer
+//! runs ONE merged-norm → integer-GEMM → epilogue pipeline over the
+//! stacked rows of all spans; attention is dispatched per-span (causal
+//! over each sequence's cached prefix, `engine::attention`); the final
+//! norm + LM head run only over the rows each span asked logits for.
+//!
+//! Semantics mirror `python/compile/quant/qforward.py` exactly (validated
+//! against the artifact goldens): same rounding, same clamp ranges, same
+//! merged-norm → gather → integer-GEMM → epilogue pipeline. The static
+//! MergeQuant path runs **zero** per-token quantization passes — the norm
+//! emits integers (Eq. 4) and the epilogue is per-output-column (Eq. 5);
+//! the dynamic baselines pay `quant::dynamic` passes per linear — exactly
+//! the overhead the paper measures in Table 6.
+//!
+//! **Why stacking is bitwise safe:** every op in the pipeline is
+//! per-row independent — the tiled kernels never split the reduction
+//! dimension, rmsnorm/RoPE/SiLU/residual are row- or element-local, and
+//! attention rows only read their own lane's cache. A row's values
+//! therefore do not depend on `m`, on which other rows ride in the
+//! batch, or on the thread count — the unified pass is bitwise
+//! identical to the sequential seed `prefill` + `decode_batch` replay
+//! (property-tested in `tests/ragged_batch.rs` across
+//! {threads}×{kv dtype}).
+
+use crate::quant::dynamic::per_token_quant;
+use crate::quant::gemm::{gemm_i8_grouped, rowsum_i8};
+use crate::quant::hadamard::fwht_block64;
+use crate::quant::kv::{KvDtype, KvLayerScales};
+use crate::quant::parallel::{par_gemm_f32, par_qlinear, ScopedTask,
+                             ThreadPool};
+use crate::quant::reconstruct::reconstruct_i8;
+
+use super::attention::{attend_batch, RowAttn};
+use super::cache::KvCache;
+use super::model::Engine;
+use super::qmod::{Linear, Norm, QuantMode, QWeight};
+
+const EPS: f32 = 1e-5;
+
+/// Typed engine failures. [`Engine::forward_batch`] validates *before*
+/// touching any cache state, so an `Err` leaves every cache and the
+/// workspace unmodified — the coordinator surfaces these as per-request
+/// failures instead of dying on a panic (DESIGN.md §6).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// Writing position `pos` would exceed the cache capacity `cap`.
+    /// `lane` is the index of the offending span in the [`BatchPlan`]
+    /// (for the `prefill`/`decode_batch` wrappers this coincides with
+    /// the seed meaning: 0 for prefill, the batch lane for decode).
+    KvOverflow { lane: usize, pos: usize, cap: usize },
+    /// An int8 KV cache was supplied but the bundle carries no calibrated
+    /// KV scales (pre-format-2 `.qmod`).
+    MissingKvScales,
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::KvOverflow { lane, pos, cap } => write!(
+                f, "KV cache overflow on lane {lane}: position {pos} >= \
+                    capacity {cap}"),
+            EngineError::MissingKvScales => write!(
+                f, "int8 KV cache requested but the bundle has no \
+                    calibrated KV scales"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Reusable scratch buffers — no allocation on the decode hot path after
+/// the first step. One row-stacked buffer set serves every batch shape:
+/// prefill spans and decode lanes share the same (m, ·) buffers, sized
+/// by the total row count of the ragged batch (DESIGN.md §12).
+#[derive(Default)]
+pub struct Workspace {
+    pub x: Vec<f32>,        // residual stream (m, d)
+    pub h: Vec<f32>,        // f32 norm output (m, d)
+    pub hq: Vec<i8>,        // quantized norm output (m, d)
+    pub hq2: Vec<i8>,       // reconstructed quantized activations (m, d)
+    pub qbuf: Vec<f32>,     // q/k/v projections (m, d)
+    pub kbuf: Vec<f32>,
+    pub vbuf: Vec<f32>,
+    pub attn: Vec<f32>,     // attention output (m, d)
+    pub gate: Vec<f32>,     // (m, ff)
+    pub up: Vec<f32>,
+    pub ff: Vec<f32>,       // silu(gate)·up (m, ff)
+    pub proj: Vec<f32>,     // o/down projection output (m, d)
+    pub xq: Vec<i8>,        // dynamic-quant activation buffer
+    pub row_scale: Vec<f32>,
+    pub row_sum: Vec<i32>,
+    pub had: Vec<f32>,      // hadamard-transformed activations
+    pub scratch_w: Vec<i8>, // unpacked weight row
+    pub scores: Vec<f32>,   // attention score row (≤ max cache len)
+    pub qint: Vec<i8>,      // quantized query head (int8-KV attention)
+    pub xsel: Vec<f32>,     // logit-row gather of the residual (sel, d)
+    pub logits: Vec<f32>,   // (sel, vocab) — emitted rows only
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current resident bytes across all scratch buffers (Table 3).
+    pub fn bytes(&self) -> usize {
+        self.x.len() * 4
+            + self.h.len() * 4
+            + self.hq.len()
+            + self.hq2.len()
+            + (self.qbuf.len() + self.kbuf.len() + self.vbuf.len()) * 4
+            + (self.attn.len() + self.gate.len() + self.up.len()
+                + self.ff.len() + self.proj.len()) * 4
+            + self.xq.len()
+            + self.row_scale.len() * 4
+            + self.row_sum.len() * 4
+            + self.had.len() * 4
+            + self.scratch_w.len()
+            + self.scores.len() * 4
+            + self.qint.len()
+            + self.xsel.len() * 4
+            + self.logits.len() * 4
+    }
+}
+
+/// Which rows of a span contribute logits to `ws.logits`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanLogits {
+    /// No output rows (a non-final prefill chunk).
+    None,
+    /// Only the span's last row (decode lanes, final prefill chunks).
+    Last,
+    /// Every row (the seed `prefill` contract — perplexity eval, parity
+    /// tests).
+    All,
+}
+
+/// One sequence's slice of a ragged batch: `len` consecutive token rows
+/// appended to the cache at `lane`, starting at that cache's current
+/// length.
+#[derive(Clone, Debug)]
+pub struct Span {
+    /// Index into the `caches` slice passed to
+    /// [`Engine::forward_batch`].
+    pub lane: usize,
+    /// Number of token rows (1 for a decode lane).
+    pub len: usize,
+    /// Which of this span's rows emit logits.
+    pub logits: SpanLogits,
+}
+
+impl Span {
+    /// Rows this span contributes to `ws.logits`.
+    fn emitted(&self) -> usize {
+        match self.logits {
+            SpanLogits::None => 0,
+            SpanLogits::Last => usize::from(self.len > 0),
+            SpanLogits::All => self.len,
+        }
+    }
+}
+
+/// A ragged batch: the flat token stack plus one [`Span`] per
+/// participating sequence. Built fresh each scheduler iteration — one
+/// plan, one engine call (DESIGN.md §12).
+#[derive(Debug, Default)]
+pub struct BatchPlan {
+    tokens: Vec<u32>,
+    spans: Vec<Span>,
+}
+
+impl BatchPlan {
+    /// An empty plan (no spans, no rows).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a span for `lane` running `tokens`. Empty token slices are
+    /// ignored (a zero-row span computes nothing — seed `prefill(&[])`
+    /// semantics).
+    pub fn push_span(&mut self, lane: usize, tokens: &[u32],
+                     logits: SpanLogits) {
+        if tokens.is_empty() {
+            return;
+        }
+        self.tokens.extend_from_slice(tokens);
+        self.spans.push(Span { lane, len: tokens.len(), logits });
+    }
+
+    /// Total stacked rows across all spans.
+    pub fn rows(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// `true` when the plan has no spans.
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// The spans, in row-stacking order.
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// The flat token stack (span order).
+    pub fn tokens(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    /// Total logits rows the plan emits.
+    pub fn emitted_rows(&self) -> usize {
+        self.spans.iter().map(Span::emitted).sum()
+    }
+
+    /// Row range of span `span` inside `ws.logits` (in emitted-row
+    /// units: multiply by `vocab` for element offsets). Empty for
+    /// [`SpanLogits::None`] spans.
+    pub fn logits_rows(&self, span: usize) -> std::ops::Range<usize> {
+        let before: usize =
+            self.spans[..span].iter().map(Span::emitted).sum();
+        before..before + self.spans[span].emitted()
+    }
+
+    /// Global row indices (into the stacked (m, ·) buffers) that emit
+    /// logits, in emission order.
+    fn selected_rows(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.emitted_rows());
+        let mut row = 0usize;
+        for sp in &self.spans {
+            match sp.logits {
+                SpanLogits::None => {}
+                SpanLogits::Last => out.push(row + sp.len - 1),
+                SpanLogits::All => out.extend(row..row + sp.len),
+            }
+            row += sp.len;
+        }
+        out
+    }
+}
+
+enum Act<'a> {
+    F32(&'a [f32]),
+    I8(&'a [i8]),
+}
+
+impl Engine {
+    // ------------------------------------------------------------------
+    // Primitive ops
+    // ------------------------------------------------------------------
+
+    fn rmsnorm_f32(x: &[f32], g: &[f32], m: usize, d: usize, out: &mut [f32]) {
+        for i in 0..m {
+            let row = &x[i * d..(i + 1) * d];
+            let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+            let inv = 1.0 / (ms + EPS).sqrt();
+            let or = &mut out[i * d..(i + 1) * d];
+            for c in 0..d {
+                or[c] = row[c] * inv * g[c];
+            }
+        }
+    }
+
+    /// Merged-multiplier norm emitting integers (Eq. 4), then the
+    /// dimension-reconstruction gather (App. C.1). Result lands in `hq2`.
+    fn rmsnorm_quant(x: &[f32], norm: &Norm, m: usize, d: usize,
+                     hq: &mut [i8], hq2: &mut [i8]) {
+        let qmax = norm.quant_qmax.unwrap() as f32;
+        for i in 0..m {
+            let row = &x[i * d..(i + 1) * d];
+            let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+            let inv = 1.0 / (ms + EPS).sqrt();
+            let qr = &mut hq[i * d..(i + 1) * d];
+            for c in 0..d {
+                let v = (row[c] * inv * norm.g[c]).round();
+                qr[c] = v.clamp(-qmax, qmax) as i8;
+            }
+        }
+        if let Some(idx) = &norm.recon_idx {
+            reconstruct_i8(&hq[..m * d], idx, m, d, &mut hq2[..m * d]);
+        } else {
+            hq2[..m * d].copy_from_slice(&hq[..m * d]);
+        }
+    }
+
+    /// Integer GEMM + rescale epilogue. Group-0 fast path goes through the
+    /// fused tiled kernel (`quant::parallel::par_qlinear`): packed-int4
+    /// weights when `m` amortizes the unpack, epilogue applied inside each
+    /// tile so the i32 accumulator never hits memory. The grouped general
+    /// path (Table 5 W3-group) stays serial.
+    #[allow(clippy::too_many_arguments)]
+    fn int_matmul(pool: &ThreadPool, qw: &QWeight, xq: &[i8], m: usize,
+                  row_scale: Option<&[f32]>, rsum: &mut Vec<i32>,
+                  scratch: &mut Vec<i8>, out: &mut [f32]) {
+        let (n, j) = (qw.n, qw.j);
+        if qw.group != 0 {
+            gemm_i8_grouped(&xq[..m * n], &qw.wt, m, n, j, qw.group,
+                            &qw.scale, qw.zero.as_deref(), row_scale,
+                            &mut out[..m * j]);
+            return;
+        }
+        let rowsum: Option<&[i32]> = match &qw.zero {
+            Some(_) => {
+                rowsum_i8(&xq[..m * n], m, n, rsum);
+                Some(rsum.as_slice())
+            }
+            None => None,
+        };
+        par_qlinear(pool, &xq[..m * n], &qw.wt, qw.packed.as_deref(), m, n,
+                    j, &qw.scale, qw.zero.as_deref(), rowsum, row_scale,
+                    scratch, &mut out[..m * j]);
+    }
+
+    /// Apply one linear to m rows; writes (m, j) into `out`. Scratch
+    /// buffers are passed individually so callers can split a Workspace.
+    #[allow(clippy::too_many_arguments)]
+    fn linear(pool: &ThreadPool, lin: &Linear, input: Act, m: usize,
+              xqb: &mut Vec<i8>, rs: &mut Vec<f32>, rsum: &mut Vec<i32>,
+              had: &mut Vec<f32>, scratch: &mut Vec<i8>, out: &mut [f32]) {
+        match lin {
+            Linear::Fp { wt, n, j } => {
+                let x = match input {
+                    Act::F32(x) => x,
+                    Act::I8(_) => unreachable!("fp linear needs f32 input"),
+                };
+                par_gemm_f32(pool, &x[..m * n], wt, m, *n, *j,
+                             &mut out[..m * j]);
+            }
+            Linear::Quant { qw, mode } => match mode {
+                QuantMode::Static => {
+                    let xq = match input {
+                        Act::I8(xq) => xq,
+                        Act::F32(_) => unreachable!("static linear needs i8"),
+                    };
+                    Self::int_matmul(pool, qw, xq, m, None, rsum, scratch,
+                                     out);
+                }
+                QuantMode::TensorStatic { a_scale, a_qmax } => {
+                    let x = match input {
+                        Act::F32(x) => x,
+                        _ => unreachable!("tensor_static needs f32"),
+                    };
+                    let n = qw.n;
+                    xqb.resize(m * n, 0);
+                    let inv = 1.0 / *a_scale;
+                    let qm = *a_qmax as f32;
+                    for (q, &v) in xqb[..m * n].iter_mut().zip(&x[..m * n]) {
+                        *q = (v * inv).round().clamp(-qm, qm) as i8;
+                    }
+                    rs.clear();
+                    rs.resize(m, *a_scale);
+                    Self::int_matmul(pool, qw, xqb, m, Some(rs), rsum,
+                                     scratch, out);
+                }
+                QuantMode::Dynamic { a_qmax, a_clip, hadamard } => {
+                    let x = match input {
+                        Act::F32(x) => x,
+                        _ => unreachable!("dynamic needs f32"),
+                    };
+                    let n = qw.n;
+                    let xin: &[f32] = if *hadamard {
+                        had.resize(m * n, 0.0);
+                        had[..m * n].copy_from_slice(&x[..m * n]);
+                        fwht_block64(had, m, n);
+                        &had[..m * n]
+                    } else {
+                        &x[..m * n]
+                    };
+                    // The explicit per-token Quant pass (Table 6 cost).
+                    xqb.resize(m * n, 0);
+                    rs.resize(m, 0.0);
+                    per_token_quant(xin, m, n, *a_qmax, *a_clip, xqb, rs);
+                    Self::int_matmul(pool, qw, xqb, m, Some(rs), rsum,
+                                     scratch, out);
+                }
+            },
+        }
+    }
+
+    fn embed(&self, tokens: &[u32], out: &mut Vec<f32>) {
+        let d = self.model.config.d_model;
+        out.resize(tokens.len() * d, 0.0);
+        for (i, &t) in tokens.iter().enumerate() {
+            let row = &self.model.embed[t as usize * d..(t as usize + 1) * d];
+            let or = &mut out[i * d..(i + 1) * d];
+            for c in 0..d {
+                or[c] = row[c] * self.model.outlier_gain[c];
+            }
+        }
+    }
+
+    /// RoPE in place on a (m, d) buffer interpreted as (m, H, hd);
+    /// `positions[i]` is the absolute position of row i.
+    fn rope(&self, buf: &mut [f32], m: usize, positions: &[usize]) {
+        let cfg = &self.model.config;
+        let (h, hd, d) = (cfg.n_heads, cfg.head_dim(), cfg.d_model);
+        let theta = cfg.rope_theta;
+        // The frequency depends only on the pair index p — hoist the
+        // powf out of the (m × H) loops. Same inputs, so results stay
+        // bitwise identical to the per-element form.
+        let half = hd / 2;
+        let inv_freq: Vec<f32> = (0..half)
+            .map(|p| theta.powf(-(2.0 * p as f32) / hd as f32))
+            .collect();
+        for i in 0..m {
+            let pos = positions[i] as f32;
+            let row = &mut buf[i * d..(i + 1) * d];
+            for head in 0..h {
+                let hr = &mut row[head * hd..(head + 1) * hd];
+                for p in 0..half {
+                    let ang = pos * inv_freq[p];
+                    let (sin, cos) = ang.sin_cos();
+                    let a = hr[2 * p];
+                    let b = hr[2 * p + 1];
+                    hr[2 * p] = a * cos - b * sin;
+                    hr[2 * p + 1] = a * sin + b * cos;
+                }
+            }
+        }
+    }
+
+    /// Resolve the KV scales a cache needs: `None` for f32 storage, the
+    /// bundle's calibrated per-layer scales for int8 —
+    /// [`EngineError::MissingKvScales`] when the bundle has none.
+    pub(super) fn kv_scales_for<'m>(&'m self, cache: &KvCache)
+                                    -> Result<Option<&'m [KvLayerScales]>,
+                                              EngineError> {
+        match cache.dtype() {
+            KvDtype::F32 => Ok(None),
+            KvDtype::Int8 => self
+                .model
+                .kv
+                .as_deref()
+                .map(Some)
+                .ok_or(EngineError::MissingKvScales),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // The unified ragged forward pass
+    // ------------------------------------------------------------------
+
+    /// Run one ragged batch: every span's token rows ride the same
+    /// per-layer pipeline, attention fans out per span over each lane's
+    /// cached prefix, and `ws.logits` receives `(plan.emitted_rows(),
+    /// vocab)` — the rows each span selected, in span order (use
+    /// [`BatchPlan::logits_rows`] to locate a span's slice).
+    ///
+    /// Each span appends `span.len` positions to `caches[span.lane]`
+    /// starting at its current length — chunked prefill, whole-prompt
+    /// admission, multi-turn continuation and single-token decode are
+    /// all the same operation. Lanes must be pairwise distinct; lanes
+    /// may mix KV dtypes.
+    ///
+    /// Capacity and KV-scale availability are validated for **every**
+    /// span before any state is touched: an `Err` (naming the offending
+    /// span index as `lane`) leaves all caches and `ws` unchanged, so
+    /// the caller can drop the offending span and retry the rest.
+    pub fn forward_batch(&self, plan: &BatchPlan,
+                         caches: &mut [&mut KvCache], ws: &mut Workspace)
+                         -> Result<(), EngineError> {
+        let cfg = &self.model.config;
+        let (d, ff, vocab) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+        let spans = plan.spans();
+        let m = plan.rows();
+        if m == 0 {
+            ws.logits.clear();
+            return Ok(());
+        }
+        // Lanes must be in range and pairwise distinct — two spans
+        // appending to the same cache in one call is a plan-construction
+        // bug, not a runtime condition.
+        for (si, sp) in spans.iter().enumerate() {
+            assert!(sp.lane < caches.len(),
+                    "span {si}: lane {} out of range ({} caches)",
+                    sp.lane, caches.len());
+            for other in &spans[si + 1..] {
+                assert_ne!(sp.lane, other.lane,
+                           "duplicate lane {} in BatchPlan", sp.lane);
+            }
+        }
+        // Validate everything before touching any state (seed contract):
+        // capacity for every span first, then KV scales for every lane.
+        let mut starts = Vec::with_capacity(spans.len());
+        for (si, sp) in spans.iter().enumerate() {
+            let c = &caches[sp.lane];
+            if c.len + sp.len > c.cap {
+                return Err(EngineError::KvOverflow {
+                    lane: si,
+                    pos: c.len + sp.len - 1,
+                    cap: c.cap,
+                });
+            }
+            starts.push(c.len);
+        }
+        let mut lane_scales: Vec<Option<&[KvLayerScales]>> =
+            vec![None; caches.len()];
+        for sp in spans {
+            lane_scales[sp.lane] = self.kv_scales_for(&caches[sp.lane])?;
+        }
+
+        // Per-row absolute position and attention context, fixed for the
+        // whole call (every layer sees the same ragged geometry).
+        let mut positions = Vec::with_capacity(m);
+        let mut rows = Vec::with_capacity(m);
+        for (si, sp) in spans.iter().enumerate() {
+            for i in 0..sp.len {
+                positions.push(starts[si] + i);
+                rows.push(RowAttn { lane: sp.lane, klen: starts[si] + i + 1 });
+            }
+        }
+
+        self.embed(plan.tokens(), &mut ws.x);
+        ws.qbuf.resize(m * d, 0.0);
+        ws.kbuf.resize(m * d, 0.0);
+        ws.vbuf.resize(m * d, 0.0);
+        ws.attn.resize(m * d, 0.0);
+        ws.gate.resize(m * ff, 0.0);
+        ws.up.resize(m * ff, 0.0);
+        ws.ff.resize(m * ff, 0.0);
+        ws.proj.resize(m * d, 0.0);
+
+        for (l, layer) in self.model.layers.iter().enumerate() {
+            // ---- attention ----
+            if layer.attn_norm.quant_qmax.is_some() {
+                ws.hq.resize(m * d, 0);
+                ws.hq2.resize(m * d, 0);
+                Self::rmsnorm_quant(&ws.x, &layer.attn_norm, m, d,
+                                    &mut ws.hq, &mut ws.hq2);
+                Self::linear(&self.pool, &layer.q, Act::I8(&ws.hq2), m,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.qbuf);
+                Self::linear(&self.pool, &layer.k, Act::I8(&ws.hq2), m,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.kbuf);
+                Self::linear(&self.pool, &layer.v, Act::I8(&ws.hq2), m,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.vbuf);
+            } else {
+                ws.h.resize(m * d, 0.0);
+                Self::rmsnorm_f32(&ws.x, &layer.attn_norm.g, m, d, &mut ws.h);
+                Self::linear(&self.pool, &layer.q, Act::F32(&ws.h), m,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.qbuf);
+                Self::linear(&self.pool, &layer.k, Act::F32(&ws.h), m,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.kbuf);
+                Self::linear(&self.pool, &layer.v, Act::F32(&ws.h), m,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.vbuf);
+            }
+            self.rope(&mut ws.qbuf, m, &positions);
+            self.rope(&mut ws.kbuf, m, &positions);
+            // KV writes, span by span (each span owns its lane's
+            // positions — distinct lanes make the writes disjoint).
+            let mut row = 0usize;
+            for (si, sp) in spans.iter().enumerate() {
+                let cache = &mut caches[sp.lane];
+                for i in 0..sp.len {
+                    let r = row + i;
+                    cache.write(l, starts[si] + i,
+                                &ws.kbuf[r * d..(r + 1) * d],
+                                &ws.vbuf[r * d..(r + 1) * d],
+                                lane_scales[sp.lane].map(|s| &s[l]));
+                }
+                row += sp.len;
+            }
+            // Causal attention, per-span over cached K/V (parallel
+            // across row blocks; bitwise thread- and batch-composition-
+            // invariant — engine::attention).
+            attend_batch(&self.pool, cfg, &*caches, &lane_scales, l,
+                         &ws.qbuf, &rows, &mut ws.scores, &mut ws.qint,
+                         &mut ws.attn[..m * d]);
+            Self::linear(&self.pool, &layer.o, Act::F32(&ws.attn), m,
+                         &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                         &mut ws.had, &mut ws.scratch_w, &mut ws.proj);
+            for (xv, pv) in ws.x.iter_mut().zip(&ws.proj) {
+                *xv += pv;
+            }
+            // ---- ffn ----
+            if layer.ffn_norm.quant_qmax.is_some() {
+                ws.hq.resize(m * d, 0);
+                ws.hq2.resize(m * d, 0);
+                Self::rmsnorm_quant(&ws.x, &layer.ffn_norm, m, d,
+                                    &mut ws.hq, &mut ws.hq2);
+                Self::linear(&self.pool, &layer.gate, Act::I8(&ws.hq2), m,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.gate);
+                Self::linear(&self.pool, &layer.up, Act::I8(&ws.hq2), m,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.up);
+            } else {
+                ws.h.resize(m * d, 0.0);
+                Self::rmsnorm_f32(&ws.x, &layer.ffn_norm.g, m, d, &mut ws.h);
+                Self::linear(&self.pool, &layer.gate, Act::F32(&ws.h), m,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.gate);
+                Self::linear(&self.pool, &layer.up, Act::F32(&ws.h), m,
+                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                             &mut ws.had, &mut ws.scratch_w, &mut ws.up);
+            }
+            // SiLU·up — elementwise, parallel over row blocks (exp() is
+            // a real fraction of prefill at small d). Elementwise, so
+            // the fan-out threshold cannot change bits.
+            if self.pool.threads() == 1 || m * ff < (1 << 15) {
+                for i in 0..m * ff {
+                    let g = ws.gate[i];
+                    ws.ff[i] = g / (1.0 + (-g).exp()) * ws.up[i];
+                }
+            } else {
+                let rows_per = m.div_ceil(self.pool.threads() * 2).max(1);
+                let gb = &ws.gate;
+                let ub = &ws.up;
+                let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
+                for (bi, fblock) in
+                    ws.ff[..m * ff].chunks_mut(rows_per * ff).enumerate()
+                {
+                    tasks.push(Box::new(move || {
+                        let off = bi * rows_per * ff;
+                        for (k, fv) in fblock.iter_mut().enumerate() {
+                            let g = gb[off + k];
+                            *fv = g / (1.0 + (-g).exp()) * ub[off + k];
+                        }
+                    }));
+                }
+                self.pool.run(tasks);
+            }
+            Self::linear(&self.pool, &layer.down, Act::F32(&ws.ff), m,
+                         &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
+                         &mut ws.had, &mut ws.scratch_w, &mut ws.proj);
+            for (xv, pv) in ws.x.iter_mut().zip(&ws.proj) {
+                *xv += pv;
+            }
+        }
+        for (si, sp) in spans.iter().enumerate() {
+            caches[sp.lane].len = starts[si] + sp.len;
+        }
+        // Final norm + LM head over the selected rows only: per-row math
+        // is identical whichever rows are present, so skipping the
+        // non-emitting prefill rows cannot change the emitted values —
+        // it only skips the (rows × vocab) GEMM work the caller never
+        // asked for.
+        let sel = plan.selected_rows();
+        let nsel = sel.len();
+        ws.xsel.resize(nsel * d, 0.0);
+        for (k, &r) in sel.iter().enumerate() {
+            ws.xsel[k * d..(k + 1) * d]
+                .copy_from_slice(&ws.x[r * d..(r + 1) * d]);
+        }
+        ws.h.resize(nsel * d, 0.0);
+        Self::rmsnorm_f32(&ws.xsel, &self.model.final_norm, nsel, d,
+                          &mut ws.h);
+        ws.logits.resize(nsel * vocab, 0.0);
+        par_gemm_f32(&self.pool, &ws.h, &self.model.lm_head_t, nsel, d,
+                     vocab, &mut ws.logits);
+        Ok(())
+    }
+}

@@ -41,9 +41,16 @@ pub fn account_model(model: &QModel, batch: usize, seq: usize, kv: KvDtype)
         kv_cache: cfg.n_layers * batch * seq * d * 2 * kv.bytes_per_elt(),
         ..Default::default()
     };
-    // decode-step activation buffers (one token per sequence)
+    // Unified forward-batch workspace (engine/forward.rs): one
+    // row-stacked buffer set shared by prefill spans and decode lanes —
+    // here sized for a pure-decode iteration (m = batch rows, one logits
+    // row per lane). Seven f32 (m, d) buffers (x, h, q, k, v, attn,
+    // proj), two i8 (m, d) merged-norm outputs, three f32 (m, ff) FFN
+    // buffers, the (sel, d) logit-row gather and the (sel, vocab) logits
+    // with sel = m.
     let m = batch;
-    mb.activations = m * (6 * d + 3 * ff + v) * 4;
+    mb.activations =
+        m * (7 * d * 4 + 2 * d + 3 * ff * 4) + m * (d + v) * 4;
     let mut has_dynamic = false;
     let mut has_hadamard = false;
     let mut max_n = 0usize;

@@ -1,12 +1,31 @@
 //! Native quantized inference engine: loads `.qmod` bundles and executes
-//! prefill / batched decode on the integer-kernel substrate. This is the
-//! measured system behind the paper's speed tables (Fig. 3, Tables 2/3/6)
-//! and the accuracy tables (1/4/5/7 via [`crate::eval`]).
+//! the unified ragged-batch forward pass on the integer-kernel substrate.
+//! This is the measured system behind the paper's speed tables (Fig. 3,
+//! Tables 2/3/6) and the accuracy tables (1/4/5/7 via [`crate::eval`]).
+//!
+//! Module layout (DESIGN.md §12):
+//! * [`forward`] — [`BatchPlan`] + [`Engine::forward_batch`]: the single
+//!   per-layer pipeline every span (prefill chunk or decode lane) rides.
+//! * `attention` — f32/int8-KV attention and the ragged per-span fan-out.
+//! * [`cache`] — dtype-parametric [`KvCache`] storage.
+//! * [`sampler`] — the seeded [`Sampler`], the single token-selection
+//!   entry point (greedy = `Sampler::greedy()`).
+//! * [`model`] — [`Engine`] construction/calibration and the thin
+//!   seed-compatible `prefill` / `decode_batch` wrappers.
+//! * [`qmod`] — the `.qmod` bundle format; [`memory`] — Table-3
+//!   accounting.
 
+mod attention;
+pub mod cache;
+pub mod forward;
 pub mod memory;
 pub mod model;
 pub mod qmod;
+pub mod sampler;
 
 pub use crate::quant::kv::{KvDtype, KvLayerScales};
-pub use model::{Engine, EngineError, KvCache, Sampler, Workspace};
+pub use cache::KvCache;
+pub use forward::{BatchPlan, EngineError, Span, SpanLogits, Workspace};
+pub use model::Engine;
 pub use qmod::{Linear, ModelConfig, Norm, QModel, QuantMode, QWeight};
+pub use sampler::Sampler;

@@ -1,244 +1,29 @@
-//! Quantized forward passes: prefill and batched decode with KV caches.
+//! The [`Engine`]: construction, threading, calibration, and thin
+//! seed-compatible wrappers over the unified ragged forward pass.
 //!
-//! Semantics mirror `python/compile/quant/qforward.py` exactly (validated
-//! against the artifact goldens): same rounding, same clamp ranges, same
-//! merged-norm → gather → integer-GEMM → epilogue pipeline. The static
-//! MergeQuant path runs **zero** per-token quantization passes — the norm
-//! emits integers (Eq. 4) and the epilogue is per-output-column (Eq. 5);
-//! the dynamic baselines pay `quant::dynamic` passes per linear — exactly
-//! the overhead the paper measures in Table 6.
-//!
-//! Execution is tiled and (optionally) multi-threaded: every GEMM runs on
-//! the engine's persistent [`ThreadPool`] via `quant::parallel`, prefill
-//! attention fans out over query-row blocks, and batched decode fans out
-//! across batch lanes. Results are **bitwise identical** for every thread
-//! count (DESIGN.md §7), so golden/parity tests hold regardless of the
-//! configured parallelism.
+//! All forward computation lives in `engine::forward`
+//! ([`Engine::forward_batch`] + [`BatchPlan`]); attention in
+//! `engine::attention`; KV storage in `engine::cache`; token selection
+//! in `engine::sampler`. [`Engine::prefill`] and [`Engine::decode_batch`]
+//! are one-plan wrappers kept for API compatibility — a prefill is a
+//! single all-rows span, a batched decode is one single-row span per
+//! lane. Results are **bitwise identical** for every thread count and
+//! every ragged batch composition (DESIGN.md §7/§12).
 
-use crate::quant::dynamic::per_token_quant;
-use crate::quant::gemm::{gemm_i8_grouped, rowsum_i8};
-use crate::quant::hadamard::fwht_block64;
 use crate::quant::kv::{self, KvDtype, KvLayerScales};
-use crate::quant::parallel::{
-    par_gemm_f32, par_qlinear, ScopedTask, ThreadPool,
-};
-use crate::quant::reconstruct::reconstruct_i8;
-use crate::util::rng::Rng;
+use crate::quant::parallel::ThreadPool;
 
-use super::qmod::{Linear, Norm, QModel, QuantMode, QWeight};
+use super::cache::KvCache;
+use super::forward::{BatchPlan, EngineError, SpanLogits, Workspace};
+use super::qmod::QModel;
+use super::sampler::Sampler;
 
-const EPS: f32 = 1e-5;
-
-/// Typed engine failures. Forward calls validate *before* touching any
-/// cache state, so an `Err` leaves caches and workspace unmodified — the
-/// coordinator surfaces these as per-request failures instead of dying
-/// on a panic (DESIGN.md §6).
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub enum EngineError {
-    /// Writing position `pos` would exceed the cache capacity `cap`.
-    /// `lane` is the batch lane (0 for prefill / single-sequence calls).
-    KvOverflow { lane: usize, pos: usize, cap: usize },
-    /// An int8 KV cache was supplied but the bundle carries no calibrated
-    /// KV scales (pre-format-2 `.qmod`).
-    MissingKvScales,
-}
-
-impl std::fmt::Display for EngineError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            EngineError::KvOverflow { lane, pos, cap } => write!(
-                f, "KV cache overflow on lane {lane}: position {pos} >= \
-                    capacity {cap}"),
-            EngineError::MissingKvScales => write!(
-                f, "int8 KV cache requested but the bundle has no \
-                    calibrated KV scales"),
-        }
-    }
-}
-
-impl std::error::Error for EngineError {}
-
-/// Reusable scratch buffers — no allocation on the decode hot path after
-/// the first step.
-#[derive(Default)]
-pub struct Workspace {
-    pub x: Vec<f32>,        // residual stream (m, d)
-    pub h: Vec<f32>,        // f32 norm output (m, d)
-    pub hq: Vec<i8>,        // quantized norm output (m, d)
-    pub hq2: Vec<i8>,       // reconstructed quantized activations (m, d)
-    pub qbuf: Vec<f32>,     // q/k/v projections (m, d)
-    pub kbuf: Vec<f32>,
-    pub vbuf: Vec<f32>,
-    pub attn: Vec<f32>,     // attention output (m, d)
-    pub gate: Vec<f32>,     // (m, ff)
-    pub up: Vec<f32>,
-    pub ff: Vec<f32>,       // silu(gate)·up (m, ff)
-    pub proj: Vec<f32>,     // o/down projection output (m, d)
-    pub xq: Vec<i8>,        // dynamic-quant activation buffer
-    pub row_scale: Vec<f32>,
-    pub row_sum: Vec<i32>,
-    pub had: Vec<f32>,      // hadamard-transformed activations
-    pub scratch_w: Vec<i8>, // unpacked weight row
-    pub scores: Vec<f32>,   // attention score row (≤ max cache len)
-    pub qint: Vec<i8>,      // quantized query head (int8-KV attention)
-    pub logits: Vec<f32>,
-}
-
-impl Workspace {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    /// Current resident bytes across all scratch buffers (Table 3).
-    pub fn bytes(&self) -> usize {
-        self.x.len() * 4
-            + self.h.len() * 4
-            + self.hq.len()
-            + self.hq2.len()
-            + (self.qbuf.len() + self.kbuf.len() + self.vbuf.len()) * 4
-            + (self.attn.len() + self.gate.len() + self.up.len()
-                + self.ff.len() + self.proj.len()) * 4
-            + self.xq.len()
-            + self.row_scale.len() * 4
-            + self.row_sum.len() * 4
-            + self.had.len() * 4
-            + self.scratch_w.len()
-            + self.scores.len() * 4
-            + self.qint.len()
-            + self.logits.len() * 4
-    }
-}
-
-/// Dtype-parametric K/V storage: contiguous (L, cap, d) planes either in
-/// f32 (seed layout) or statically-quantized int8 (4× smaller).
-enum KvStore {
-    F32 { k: Vec<f32>, v: Vec<f32> },
-    I8 { k: Vec<i8>, v: Vec<i8> },
-}
-
-/// Per-sequence KV cache: layout (L, cap, d) with d = H·hd. Storage is
-/// dtype-parametric ([`KvDtype`]): `F32` keeps the full-precision seed
-/// behaviour, `Int8` stores per-channel statically-quantized values (the
-/// engine quantizes at write time with the bundle's calibrated scales and
-/// attends in the integer domain — `quant::kv`).
-pub struct KvCache {
-    store: KvStore,
-    pub cap: usize,
-    pub len: usize,
-    pub n_layers: usize,
-    d: usize,
-}
-
-impl KvCache {
-    /// Full-precision cache (seed-compatible default).
-    pub fn new(n_layers: usize, cap: usize, d: usize) -> Self {
-        Self::with_dtype(KvDtype::F32, n_layers, cap, d)
-    }
-
-    /// Cache with an explicit storage dtype.
-    pub fn with_dtype(dtype: KvDtype, n_layers: usize, cap: usize, d: usize)
-                      -> Self {
-        let n = n_layers * cap * d;
-        let store = match dtype {
-            KvDtype::F32 => KvStore::F32 { k: vec![0f32; n], v: vec![0f32; n] },
-            KvDtype::Int8 => KvStore::I8 { k: vec![0i8; n], v: vec![0i8; n] },
-        };
-        KvCache { store, cap, len: 0, n_layers, d }
-    }
-
-    /// Storage element type of this cache.
-    pub fn dtype(&self) -> KvDtype {
-        match self.store {
-            KvStore::F32 { .. } => KvDtype::F32,
-            KvStore::I8 { .. } => KvDtype::Int8,
-        }
-    }
-
-    #[inline]
-    fn plane(&self, l: usize) -> std::ops::Range<usize> {
-        l * self.cap * self.d..(l + 1) * self.cap * self.d
-    }
-
-    #[inline]
-    fn layer_k_f32(&self, l: usize) -> &[f32] {
-        match &self.store {
-            KvStore::F32 { k, .. } => &k[self.plane(l)],
-            KvStore::I8 { .. } => unreachable!("f32 view of int8 KV cache"),
-        }
-    }
-
-    #[inline]
-    fn layer_v_f32(&self, l: usize) -> &[f32] {
-        match &self.store {
-            KvStore::F32 { v, .. } => &v[self.plane(l)],
-            KvStore::I8 { .. } => unreachable!("f32 view of int8 KV cache"),
-        }
-    }
-
-    #[inline]
-    fn layer_k_i8(&self, l: usize) -> &[i8] {
-        match &self.store {
-            KvStore::I8 { k, .. } => &k[self.plane(l)],
-            KvStore::F32 { .. } => unreachable!("int8 view of f32 KV cache"),
-        }
-    }
-
-    #[inline]
-    fn layer_v_i8(&self, l: usize) -> &[i8] {
-        match &self.store {
-            KvStore::I8 { v, .. } => &v[self.plane(l)],
-            KvStore::F32 { .. } => unreachable!("int8 view of f32 KV cache"),
-        }
-    }
-
-    /// Store one K/V row, quantizing on the way in for int8 storage.
-    /// Callers (the engine forward passes) validate capacity and scale
-    /// availability up front and return [`EngineError`] — by the time a
-    /// write happens it cannot fail.
-    #[inline]
-    fn write(&mut self, l: usize, pos: usize, k_row: &[f32], v_row: &[f32],
-             scales: Option<&KvLayerScales>) {
-        debug_assert!(pos < self.cap,
-                      "KV write past validated capacity: {pos} >= {}",
-                      self.cap);
-        let d = self.d;
-        let off = l * self.cap * d + pos * d;
-        match &mut self.store {
-            KvStore::F32 { k, v } => {
-                k[off..off + d].copy_from_slice(k_row);
-                v[off..off + d].copy_from_slice(v_row);
-            }
-            KvStore::I8 { k, v } => {
-                let sc = scales.expect("int8 KV write validated scales");
-                kv::quantize_row_i8(k_row, &sc.k_inv, &mut k[off..off + d]);
-                kv::quantize_row_i8(v_row, &sc.v_inv, &mut v[off..off + d]);
-            }
-        }
-    }
-
-    /// Resident bytes of the K/V planes (Table 3 accounting): 4 bytes per
-    /// element for f32 storage, 1 for int8.
-    pub fn bytes(&self) -> usize {
-        match &self.store {
-            KvStore::F32 { k, v } => (k.len() + v.len()) * 4,
-            KvStore::I8 { k, v } => k.len() + v.len(),
-        }
-    }
-
-    pub fn reset(&mut self) {
-        self.len = 0;
-    }
-}
-
-enum Act<'a> {
-    F32(&'a [f32]),
-    I8(&'a [i8]),
-}
-
+/// The native quantized inference engine: a loaded `.qmod` bundle plus a
+/// persistent intra-op worker pool.
 pub struct Engine {
     pub model: QModel,
     /// Persistent intra-op worker pool; 1 thread ⇒ fully serial paths.
-    pool: ThreadPool,
+    pub(super) pool: ThreadPool,
 }
 
 impl Engine {
@@ -276,257 +61,7 @@ impl Engine {
     }
 
     // ------------------------------------------------------------------
-    // Primitive ops
-    // ------------------------------------------------------------------
-
-    fn rmsnorm_f32(x: &[f32], g: &[f32], m: usize, d: usize, out: &mut [f32]) {
-        for i in 0..m {
-            let row = &x[i * d..(i + 1) * d];
-            let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
-            let inv = 1.0 / (ms + EPS).sqrt();
-            let or = &mut out[i * d..(i + 1) * d];
-            for c in 0..d {
-                or[c] = row[c] * inv * g[c];
-            }
-        }
-    }
-
-    /// Merged-multiplier norm emitting integers (Eq. 4), then the
-    /// dimension-reconstruction gather (App. C.1). Result lands in `hq2`.
-    fn rmsnorm_quant(x: &[f32], norm: &Norm, m: usize, d: usize,
-                     hq: &mut [i8], hq2: &mut [i8]) {
-        let qmax = norm.quant_qmax.unwrap() as f32;
-        for i in 0..m {
-            let row = &x[i * d..(i + 1) * d];
-            let ms = row.iter().map(|v| v * v).sum::<f32>() / d as f32;
-            let inv = 1.0 / (ms + EPS).sqrt();
-            let qr = &mut hq[i * d..(i + 1) * d];
-            for c in 0..d {
-                let v = (row[c] * inv * norm.g[c]).round();
-                qr[c] = v.clamp(-qmax, qmax) as i8;
-            }
-        }
-        if let Some(idx) = &norm.recon_idx {
-            reconstruct_i8(&hq[..m * d], idx, m, d, &mut hq2[..m * d]);
-        } else {
-            hq2[..m * d].copy_from_slice(&hq[..m * d]);
-        }
-    }
-
-    /// Integer GEMM + rescale epilogue. Group-0 fast path goes through the
-    /// fused tiled kernel (`quant::parallel::par_qlinear`): packed-int4
-    /// weights when `m` amortizes the unpack, epilogue applied inside each
-    /// tile so the i32 accumulator never hits memory. The grouped general
-    /// path (Table 5 W3-group) stays serial.
-    #[allow(clippy::too_many_arguments)]
-    fn int_matmul(pool: &ThreadPool, qw: &QWeight, xq: &[i8], m: usize,
-                  row_scale: Option<&[f32]>, rsum: &mut Vec<i32>,
-                  scratch: &mut Vec<i8>, out: &mut [f32]) {
-        let (n, j) = (qw.n, qw.j);
-        if qw.group != 0 {
-            gemm_i8_grouped(&xq[..m * n], &qw.wt, m, n, j, qw.group,
-                            &qw.scale, qw.zero.as_deref(), row_scale,
-                            &mut out[..m * j]);
-            return;
-        }
-        let rowsum: Option<&[i32]> = match &qw.zero {
-            Some(_) => {
-                rowsum_i8(&xq[..m * n], m, n, rsum);
-                Some(rsum.as_slice())
-            }
-            None => None,
-        };
-        par_qlinear(pool, &xq[..m * n], &qw.wt, qw.packed.as_deref(), m, n,
-                    j, &qw.scale, qw.zero.as_deref(), rowsum, row_scale,
-                    scratch, &mut out[..m * j]);
-    }
-
-    /// Apply one linear to m rows; writes (m, j) into `out`. Scratch
-    /// buffers are passed individually so callers can split a Workspace.
-    #[allow(clippy::too_many_arguments)]
-    fn linear(pool: &ThreadPool, lin: &Linear, input: Act, m: usize,
-              xqb: &mut Vec<i8>, rs: &mut Vec<f32>, rsum: &mut Vec<i32>,
-              had: &mut Vec<f32>, scratch: &mut Vec<i8>, out: &mut [f32]) {
-        match lin {
-            Linear::Fp { wt, n, j } => {
-                let x = match input {
-                    Act::F32(x) => x,
-                    Act::I8(_) => unreachable!("fp linear needs f32 input"),
-                };
-                par_gemm_f32(pool, &x[..m * n], wt, m, *n, *j,
-                             &mut out[..m * j]);
-            }
-            Linear::Quant { qw, mode } => match mode {
-                QuantMode::Static => {
-                    let xq = match input {
-                        Act::I8(xq) => xq,
-                        Act::F32(_) => unreachable!("static linear needs i8"),
-                    };
-                    Self::int_matmul(pool, qw, xq, m, None, rsum, scratch,
-                                     out);
-                }
-                QuantMode::TensorStatic { a_scale, a_qmax } => {
-                    let x = match input {
-                        Act::F32(x) => x,
-                        _ => unreachable!("tensor_static needs f32"),
-                    };
-                    let n = qw.n;
-                    xqb.resize(m * n, 0);
-                    let inv = 1.0 / *a_scale;
-                    let qm = *a_qmax as f32;
-                    for (q, &v) in xqb[..m * n].iter_mut().zip(&x[..m * n]) {
-                        *q = (v * inv).round().clamp(-qm, qm) as i8;
-                    }
-                    rs.clear();
-                    rs.resize(m, *a_scale);
-                    Self::int_matmul(pool, qw, xqb, m, Some(rs), rsum,
-                                     scratch, out);
-                }
-                QuantMode::Dynamic { a_qmax, a_clip, hadamard } => {
-                    let x = match input {
-                        Act::F32(x) => x,
-                        _ => unreachable!("dynamic needs f32"),
-                    };
-                    let n = qw.n;
-                    let xin: &[f32] = if *hadamard {
-                        had.resize(m * n, 0.0);
-                        had[..m * n].copy_from_slice(&x[..m * n]);
-                        fwht_block64(had, m, n);
-                        &had[..m * n]
-                    } else {
-                        &x[..m * n]
-                    };
-                    // The explicit per-token Quant pass (Table 6 cost).
-                    xqb.resize(m * n, 0);
-                    rs.resize(m, 0.0);
-                    per_token_quant(xin, m, n, *a_qmax, *a_clip, xqb, rs);
-                    Self::int_matmul(pool, qw, xqb, m, Some(rs), rsum,
-                                     scratch, out);
-                }
-            },
-        }
-    }
-
-    fn embed(&self, tokens: &[u32], out: &mut Vec<f32>) {
-        let d = self.model.config.d_model;
-        out.resize(tokens.len() * d, 0.0);
-        for (i, &t) in tokens.iter().enumerate() {
-            let row = &self.model.embed[t as usize * d..(t as usize + 1) * d];
-            let or = &mut out[i * d..(i + 1) * d];
-            for c in 0..d {
-                or[c] = row[c] * self.model.outlier_gain[c];
-            }
-        }
-    }
-
-    /// RoPE in place on a (m, d) buffer interpreted as (m, H, hd);
-    /// `positions[i]` is the absolute position of row i.
-    fn rope(&self, buf: &mut [f32], m: usize, positions: &[usize]) {
-        let cfg = &self.model.config;
-        let (h, hd, d) = (cfg.n_heads, cfg.head_dim(), cfg.d_model);
-        let theta = cfg.rope_theta;
-        for i in 0..m {
-            let pos = positions[i] as f32;
-            let row = &mut buf[i * d..(i + 1) * d];
-            for head in 0..h {
-                let hr = &mut row[head * hd..(head + 1) * hd];
-                for p in 0..hd / 2 {
-                    let inv = theta.powf(-(2.0 * p as f32) / hd as f32);
-                    let ang = pos * inv;
-                    let (sin, cos) = ang.sin_cos();
-                    let a = hr[2 * p];
-                    let b = hr[2 * p + 1];
-                    hr[2 * p] = a * cos - b * sin;
-                    hr[2 * p + 1] = a * sin + b * cos;
-                }
-            }
-        }
-    }
-
-    /// One attention head-batched pass for a single query row against a
-    /// cached K/V region of length `klen`. q: (d,), out: (d,).
-    #[allow(clippy::too_many_arguments)]
-    fn attend_one(&self, q: &[f32], kcache: &[f32], vcache: &[f32],
-                  cache_stride: usize, klen: usize, scores: &mut Vec<f32>,
-                  out: &mut [f32]) {
-        let cfg = &self.model.config;
-        let (h, hd) = (cfg.n_heads, cfg.head_dim());
-        let scale = 1.0 / (hd as f32).sqrt();
-        scores.resize(klen, 0.0);
-        for head in 0..h {
-            let qh = &q[head * hd..(head + 1) * hd];
-            // scores
-            let mut maxv = f32::NEG_INFINITY;
-            for t in 0..klen {
-                let kh = &kcache[t * cache_stride + head * hd
-                    ..t * cache_stride + (head + 1) * hd];
-                let s = crate::quant::gemm::dot_f32(qh, kh) * scale;
-                scores[t] = s;
-                maxv = maxv.max(s);
-            }
-            // softmax
-            let mut denom = 0f32;
-            for s in scores[..klen].iter_mut() {
-                *s = (*s - maxv).exp();
-                denom += *s;
-            }
-            let inv = 1.0 / denom;
-            // weighted value sum
-            let oh = &mut out[head * hd..(head + 1) * hd];
-            oh.fill(0.0);
-            for t in 0..klen {
-                let w = scores[t] * inv;
-                let vh = &vcache[t * cache_stride + head * hd
-                    ..t * cache_stride + (head + 1) * hd];
-                for c in 0..hd {
-                    oh[c] += w * vh[c];
-                }
-            }
-        }
-    }
-
-    /// Resolve the KV scales a cache needs: `None` for f32 storage, the
-    /// bundle's calibrated per-layer scales for int8 —
-    /// [`EngineError::MissingKvScales`] when the bundle has none.
-    fn kv_scales_for<'m>(&'m self, cache: &KvCache)
-                         -> Result<Option<&'m [KvLayerScales]>, EngineError> {
-        match cache.dtype() {
-            KvDtype::F32 => Ok(None),
-            KvDtype::Int8 => self
-                .model
-                .kv
-                .as_deref()
-                .map(Some)
-                .ok_or(EngineError::MissingKvScales),
-        }
-    }
-
-    /// One query row attended over layer `l` of `cache`, dispatching on
-    /// the cache dtype: f32 storage runs the seed `attend_one`, int8
-    /// storage runs the integer-domain path (`quant::kv::attend_one_i8`).
-    /// Both are per-row order-fixed, so the §7 bitwise-determinism
-    /// guarantee holds for either dtype.
-    #[allow(clippy::too_many_arguments)]
-    fn attend_cached(&self, cache: &KvCache, kvsc: Option<&[KvLayerScales]>,
-                     l: usize, q: &[f32], klen: usize,
-                     scores: &mut Vec<f32>, qq: &mut Vec<i8>,
-                     out: &mut [f32]) {
-        let cfg = &self.model.config;
-        match cache.dtype() {
-            KvDtype::F32 => self.attend_one(q, cache.layer_k_f32(l),
-                                            cache.layer_v_f32(l), cfg.d_model,
-                                            klen, scores, out),
-            KvDtype::Int8 => {
-                let sc = &kvsc.expect("validated int8 KV scales")[l];
-                kv::attend_one_i8(q, cache.layer_k_i8(l), cache.layer_v_i8(l),
-                                  sc, cfg.d_model, klen, cfg.n_heads, scores,
-                                  qq, out);
-            }
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // Prefill
+    // Seed-compatible wrappers over forward_batch
     // ------------------------------------------------------------------
 
     /// Prefill one sequence **continuing from `cache.len`**; fills cache
@@ -535,337 +70,39 @@ impl Engine {
     /// a non-empty cache it implements *chunked prefill* (the scheduler
     /// bounds decode stalls with it) and multi-turn prompt reuse.
     ///
-    /// Capacity and KV-scale availability are validated **before** any
-    /// state is touched: an `Err` leaves `cache` and `ws` unchanged.
+    /// One-span plan over [`Engine::forward_batch`] (all rows emit
+    /// logits — the seed contract the perplexity eval and parity tests
+    /// rely on). Capacity and KV-scale availability are validated
+    /// **before** any state is touched: an `Err` leaves `cache` and `ws`
+    /// unchanged.
     pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache,
                    ws: &mut Workspace) -> Result<(), EngineError> {
-        let cfg = &self.model.config;
-        let (d, ff, vocab) = (cfg.d_model, cfg.d_ff, cfg.vocab);
-        let t = tokens.len();
-        let m = t;
-        let start = cache.len;
-        if start + t > cache.cap {
-            return Err(EngineError::KvOverflow {
-                lane: 0,
-                pos: start + t - 1,
-                cap: cache.cap,
-            });
-        }
-        let kvsc = self.kv_scales_for(cache)?;
-        let positions: Vec<usize> = (start..start + t).collect();
-
-        self.embed(tokens, &mut ws.x);
-        ws.qbuf.resize(m * d, 0.0);
-        ws.kbuf.resize(m * d, 0.0);
-        ws.vbuf.resize(m * d, 0.0);
-        ws.attn.resize(m * d, 0.0);
-        ws.gate.resize(m * ff, 0.0);
-        ws.up.resize(m * ff, 0.0);
-        ws.ff.resize(m * ff, 0.0);
-        ws.proj.resize(m * d, 0.0);
-
-        for (l, layer) in self.model.layers.iter().enumerate() {
-            // ---- attention ----
-            if layer.attn_norm.quant_qmax.is_some() {
-                ws.hq.resize(m * d, 0);
-                ws.hq2.resize(m * d, 0);
-                Self::rmsnorm_quant(&ws.x, &layer.attn_norm, m, d,
-                                    &mut ws.hq, &mut ws.hq2);
-                Self::linear(&self.pool, &layer.q, Act::I8(&ws.hq2), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.qbuf);
-                Self::linear(&self.pool, &layer.k, Act::I8(&ws.hq2), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.kbuf);
-                Self::linear(&self.pool, &layer.v, Act::I8(&ws.hq2), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.vbuf);
-            } else {
-                ws.h.resize(m * d, 0.0);
-                Self::rmsnorm_f32(&ws.x, &layer.attn_norm.g, m, d, &mut ws.h);
-                Self::linear(&self.pool, &layer.q, Act::F32(&ws.h), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.qbuf);
-                Self::linear(&self.pool, &layer.k, Act::F32(&ws.h), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.kbuf);
-                Self::linear(&self.pool, &layer.v, Act::F32(&ws.h), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.vbuf);
-            }
-            self.rope(&mut ws.qbuf, m, &positions);
-            self.rope(&mut ws.kbuf, m, &positions);
-            for i in 0..t {
-                cache.write(l, start + i, &ws.kbuf[i * d..(i + 1) * d],
-                            &ws.vbuf[i * d..(i + 1) * d],
-                            kvsc.map(|s| &s[l]));
-            }
-            // Causal attention over cached K/V — parallel across blocks
-            // of query rows. Each task owns a disjoint slice of `attn`
-            // and a private score buffer; per-row math is identical to
-            // the serial path, so results are bitwise independent of the
-            // thread count (DESIGN.md §7) for both KV dtypes.
-            let cache_ref: &KvCache = cache;
-            if self.pool.threads() == 1 {
-                for i in 0..t {
-                    self.attend_cached(cache_ref, kvsc, l,
-                                       &ws.qbuf[i * d..(i + 1) * d],
-                                       start + i + 1, &mut ws.scores,
-                                       &mut ws.qint,
-                                       &mut ws.attn[i * d..(i + 1) * d]);
-                }
-            } else {
-                // Oversubscribe 4× — later rows attend to longer
-                // prefixes, so equal-size blocks are unequal work.
-                let rows = t.div_ceil(self.pool.threads() * 4).max(1);
-                let qb = &ws.qbuf;
-                let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
-                for (bi, ablock) in
-                    ws.attn[..t * d].chunks_mut(rows * d).enumerate()
-                {
-                    tasks.push(Box::new(move || {
-                        let mut scores = Vec::new();
-                        let mut qq = Vec::new();
-                        for (ri, arow) in ablock.chunks_mut(d).enumerate() {
-                            let i = bi * rows + ri;
-                            self.attend_cached(cache_ref, kvsc, l,
-                                               &qb[i * d..(i + 1) * d],
-                                               start + i + 1, &mut scores,
-                                               &mut qq, arow);
-                        }
-                    }));
-                }
-                self.pool.run(tasks);
-            }
-            Self::linear(&self.pool, &layer.o, Act::F32(&ws.attn), m,
-                         &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                         &mut ws.had, &mut ws.scratch_w, &mut ws.proj);
-            for (xv, pv) in ws.x.iter_mut().zip(&ws.proj) {
-                *xv += pv;
-            }
-            // ---- ffn ----
-            if layer.ffn_norm.quant_qmax.is_some() {
-                ws.hq.resize(m * d, 0);
-                ws.hq2.resize(m * d, 0);
-                Self::rmsnorm_quant(&ws.x, &layer.ffn_norm, m, d,
-                                    &mut ws.hq, &mut ws.hq2);
-                Self::linear(&self.pool, &layer.gate, Act::I8(&ws.hq2), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.gate);
-                Self::linear(&self.pool, &layer.up, Act::I8(&ws.hq2), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.up);
-            } else {
-                ws.h.resize(m * d, 0.0);
-                Self::rmsnorm_f32(&ws.x, &layer.ffn_norm.g, m, d, &mut ws.h);
-                Self::linear(&self.pool, &layer.gate, Act::F32(&ws.h), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.gate);
-                Self::linear(&self.pool, &layer.up, Act::F32(&ws.h), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.up);
-            }
-            // SiLU·up — elementwise, parallel over row blocks (exp() is
-            // a real fraction of prefill at small d).
-            if self.pool.threads() == 1 || m * ff < (1 << 15) {
-                for i in 0..m * ff {
-                    let g = ws.gate[i];
-                    ws.ff[i] = g / (1.0 + (-g).exp()) * ws.up[i];
-                }
-            } else {
-                let rows = m.div_ceil(self.pool.threads() * 2).max(1);
-                let gb = &ws.gate;
-                let ub = &ws.up;
-                let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
-                for (bi, fblock) in
-                    ws.ff[..m * ff].chunks_mut(rows * ff).enumerate()
-                {
-                    tasks.push(Box::new(move || {
-                        let off = bi * rows * ff;
-                        for (k, fv) in fblock.iter_mut().enumerate() {
-                            let g = gb[off + k];
-                            *fv = g / (1.0 + (-g).exp()) * ub[off + k];
-                        }
-                    }));
-                }
-                self.pool.run(tasks);
-            }
-            Self::linear(&self.pool, &layer.down, Act::F32(&ws.ff), m,
-                         &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                         &mut ws.had, &mut ws.scratch_w, &mut ws.proj);
-            for (xv, pv) in ws.x.iter_mut().zip(&ws.proj) {
-                *xv += pv;
-            }
-        }
-        cache.len = start + t;
-        // final norm + lm head
-        ws.h.resize(m * d, 0.0);
-        Self::rmsnorm_f32(&ws.x, &self.model.final_norm, m, d, &mut ws.h);
-        ws.logits.resize(m * vocab, 0.0);
-        par_gemm_f32(&self.pool, &ws.h, &self.model.lm_head_t, m, d, vocab,
-                     &mut ws.logits);
-        Ok(())
+        let mut plan = BatchPlan::new();
+        plan.push_span(0, tokens, SpanLogits::All);
+        self.forward_batch(&plan, &mut [cache], ws)
     }
-
-    // ------------------------------------------------------------------
-    // Batched decode (continuous batching: one step over many sequences)
-    // ------------------------------------------------------------------
 
     /// One decode step for a batch of sequences. `tokens[i]` is the next
     /// input token of sequence i; each sequence attends to its own cache
     /// (lanes may mix KV dtypes). Returns logits (B, vocab) in
     /// `ws.logits`.
     ///
-    /// All lanes are validated **before** any state is touched: an `Err`
+    /// One single-row span per lane over [`Engine::forward_batch`]. All
+    /// lanes are validated **before** any state is touched: an `Err`
     /// names the offending lane and leaves every cache unchanged.
     pub fn decode_batch(&self, tokens: &[u32], caches: &mut [&mut KvCache],
                         ws: &mut Workspace) -> Result<(), EngineError> {
-        let cfg = &self.model.config;
-        let (d, ff, vocab) = (cfg.d_model, cfg.d_ff, cfg.vocab);
-        let b = tokens.len();
-        assert_eq!(caches.len(), b);
-        let m = b;
-        for (i, c) in caches.iter().enumerate() {
-            if c.len >= c.cap {
-                return Err(EngineError::KvOverflow {
-                    lane: i,
-                    pos: c.len,
-                    cap: c.cap,
-                });
-            }
+        assert_eq!(caches.len(), tokens.len());
+        let mut plan = BatchPlan::new();
+        for (i, t) in tokens.iter().enumerate() {
+            plan.push_span(i, std::slice::from_ref(t), SpanLogits::Last);
         }
-        let lane_scales: Vec<Option<&[KvLayerScales]>> = caches
-            .iter()
-            .map(|c| self.kv_scales_for(c))
-            .collect::<Result<_, _>>()?;
-        let positions: Vec<usize> = caches.iter().map(|c| c.len).collect();
-
-        self.embed(tokens, &mut ws.x);
-        ws.qbuf.resize(m * d, 0.0);
-        ws.kbuf.resize(m * d, 0.0);
-        ws.vbuf.resize(m * d, 0.0);
-        ws.attn.resize(m * d, 0.0);
-        ws.gate.resize(m * ff, 0.0);
-        ws.up.resize(m * ff, 0.0);
-        ws.ff.resize(m * ff, 0.0);
-        ws.proj.resize(m * d, 0.0);
-
-        for (l, layer) in self.model.layers.iter().enumerate() {
-            if layer.attn_norm.quant_qmax.is_some() {
-                ws.hq.resize(m * d, 0);
-                ws.hq2.resize(m * d, 0);
-                Self::rmsnorm_quant(&ws.x, &layer.attn_norm, m, d,
-                                    &mut ws.hq, &mut ws.hq2);
-                Self::linear(&self.pool, &layer.q, Act::I8(&ws.hq2), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.qbuf);
-                Self::linear(&self.pool, &layer.k, Act::I8(&ws.hq2), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.kbuf);
-                Self::linear(&self.pool, &layer.v, Act::I8(&ws.hq2), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.vbuf);
-            } else {
-                ws.h.resize(m * d, 0.0);
-                Self::rmsnorm_f32(&ws.x, &layer.attn_norm.g, m, d, &mut ws.h);
-                Self::linear(&self.pool, &layer.q, Act::F32(&ws.h), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.qbuf);
-                Self::linear(&self.pool, &layer.k, Act::F32(&ws.h), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.kbuf);
-                Self::linear(&self.pool, &layer.v, Act::F32(&ws.h), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.vbuf);
-            }
-            self.rope(&mut ws.qbuf, m, &positions);
-            self.rope(&mut ws.kbuf, m, &positions);
-            for (i, cache) in caches.iter_mut().enumerate() {
-                let pos = positions[i];
-                cache.write(l, pos, &ws.kbuf[i * d..(i + 1) * d],
-                            &ws.vbuf[i * d..(i + 1) * d],
-                            lane_scales[i].map(|s| &s[l]));
-            }
-            // Attention — parallel across batch lanes: each lane reads
-            // its own cache and writes its own `attn` row, so lanes are
-            // fully independent (DESIGN.md §7) for both KV dtypes.
-            if self.pool.threads() == 1 || b == 1 {
-                for (i, cache) in caches.iter().enumerate() {
-                    self.attend_cached(cache, lane_scales[i], l,
-                                       &ws.qbuf[i * d..(i + 1) * d],
-                                       positions[i] + 1, &mut ws.scores,
-                                       &mut ws.qint,
-                                       &mut ws.attn[i * d..(i + 1) * d]);
-                }
-            } else {
-                let qb = &ws.qbuf;
-                let lanes: &[&mut KvCache] = &*caches;
-                let lsc = &lane_scales;
-                let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
-                for (i, (cache, arow)) in lanes
-                    .iter()
-                    .zip(ws.attn[..m * d].chunks_mut(d))
-                    .enumerate()
-                {
-                    let klen = positions[i] + 1;
-                    tasks.push(Box::new(move || {
-                        let mut scores = Vec::new();
-                        let mut qq = Vec::new();
-                        self.attend_cached(cache, lsc[i], l,
-                                           &qb[i * d..(i + 1) * d], klen,
-                                           &mut scores, &mut qq, arow);
-                    }));
-                }
-                self.pool.run(tasks);
-            }
-            Self::linear(&self.pool, &layer.o, Act::F32(&ws.attn), m,
-                         &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                         &mut ws.had, &mut ws.scratch_w, &mut ws.proj);
-            for (xv, pv) in ws.x.iter_mut().zip(&ws.proj) {
-                *xv += pv;
-            }
-            if layer.ffn_norm.quant_qmax.is_some() {
-                ws.hq.resize(m * d, 0);
-                ws.hq2.resize(m * d, 0);
-                Self::rmsnorm_quant(&ws.x, &layer.ffn_norm, m, d,
-                                    &mut ws.hq, &mut ws.hq2);
-                Self::linear(&self.pool, &layer.gate, Act::I8(&ws.hq2), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.gate);
-                Self::linear(&self.pool, &layer.up, Act::I8(&ws.hq2), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.up);
-            } else {
-                ws.h.resize(m * d, 0.0);
-                Self::rmsnorm_f32(&ws.x, &layer.ffn_norm.g, m, d, &mut ws.h);
-                Self::linear(&self.pool, &layer.gate, Act::F32(&ws.h), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.gate);
-                Self::linear(&self.pool, &layer.up, Act::F32(&ws.h), m,
-                             &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                             &mut ws.had, &mut ws.scratch_w, &mut ws.up);
-            }
-            for i in 0..m * ff {
-                let g = ws.gate[i];
-                ws.ff[i] = g / (1.0 + (-g).exp()) * ws.up[i];
-            }
-            Self::linear(&self.pool, &layer.down, Act::F32(&ws.ff), m,
-                         &mut ws.xq, &mut ws.row_scale, &mut ws.row_sum,
-                         &mut ws.had, &mut ws.scratch_w, &mut ws.proj);
-            for (xv, pv) in ws.x.iter_mut().zip(&ws.proj) {
-                *xv += pv;
-            }
-        }
-        for cache in caches.iter_mut() {
-            cache.len += 1;
-        }
-        ws.h.resize(m * d, 0.0);
-        Self::rmsnorm_f32(&ws.x, &self.model.final_norm, m, d, &mut ws.h);
-        ws.logits.resize(m * vocab, 0.0);
-        par_gemm_f32(&self.pool, &ws.h, &self.model.lm_head_t, m, d, vocab,
-                     &mut ws.logits);
-        Ok(())
+        self.forward_batch(&plan, caches, ws)
     }
+
+    // ------------------------------------------------------------------
+    // Generation (one seeded implementation; greedy = Sampler::greedy())
+    // ------------------------------------------------------------------
 
     /// Greedy generation helper (examples / integration tests), f32 KV.
     /// Sizes its own cache, so the only failure mode is a prompt longer
@@ -885,7 +122,8 @@ impl Engine {
     }
 
     /// Sampled generation: the engine-level path behind the serving
-    /// contract's `GenerationParams`. Token *t* is drawn by
+    /// contract's `GenerationParams`, and the single implementation the
+    /// greedy helpers above delegate to. Token *t* is drawn by
     /// `sampler.sample(logits, t)` — a pure function of the (bitwise
     /// thread-count-invariant) logits and the counter-based stream
     /// `(seed, t)` — so fixed-seed streams are bitwise identical for
@@ -917,6 +155,10 @@ impl Engine {
         }
         Ok(out)
     }
+
+    // ------------------------------------------------------------------
+    // KV-scale calibration
+    // ------------------------------------------------------------------
 
     /// Attach probe-calibrated KV scales when the bundle carries none
     /// (pre-format-2 `.qmod`, fp16 baselines, synthetic models) so the
@@ -976,139 +218,5 @@ impl Engine {
             out.push(KvLayerScales::new(k_scale, v_scale, qk_scale));
         }
         Ok(out)
-    }
-}
-
-pub fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
-    let mut bv = f32::NEG_INFINITY;
-    for (i, &v) in xs.iter().enumerate() {
-        if v > bv {
-            bv = v;
-            best = i;
-        }
-    }
-    best
-}
-
-/// Seeded temperature / top-k / top-p token sampler (DESIGN.md §11).
-///
-/// `sample(logits, step)` is a **pure function** of its inputs: the RNG
-/// is counter-based — draw `step` uses the stream keyed by
-/// `(seed, step)`, never sequential state — so token streams cannot
-/// depend on thread count, batch composition, or scheduling order.
-/// `temperature == 0` short-circuits to [`argmax`] and is bitwise
-/// identical to the seed greedy path (no RNG is touched at all).
-#[derive(Clone, Debug, PartialEq)]
-pub struct Sampler {
-    temperature: f32,
-    top_k: usize,
-    top_p: f32,
-    seed: u64,
-}
-
-impl Sampler {
-    /// `top_k == 0` disables the top-k cut; `top_p == 1.0` disables the
-    /// nucleus cut.
-    pub fn new(temperature: f32, top_k: usize, top_p: f32, seed: u64)
-               -> Self {
-        Sampler { temperature, top_k, top_p, seed }
-    }
-
-    /// The deterministic argmax sampler (the `temperature == 0` case).
-    pub fn greedy() -> Self {
-        Sampler::new(0.0, 0, 1.0, 0)
-    }
-
-    /// `true` when sampling reduces to argmax (no RNG involved).
-    pub fn is_greedy(&self) -> bool {
-        self.temperature == 0.0
-    }
-
-    /// Counter-based stream key: the SplitMix64 finalizer
-    /// ([`crate::util::rng::mix64`]) over an odd-constant mix of
-    /// `(seed, step)`. For a fixed seed, `step ↦ key` is injective
-    /// (odd multiply then a bijective finalizer), giving one
-    /// independent RNG stream per draw.
-    fn stream_key(seed: u64, step: u64) -> u64 {
-        crate::util::rng::mix64(
-            seed ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15))
-    }
-
-    /// Draw the `step`-th token from `logits`.
-    pub fn sample(&self, logits: &[f32], step: u64) -> u32 {
-        if self.temperature <= 0.0 {
-            return argmax(logits) as u32;
-        }
-        let inv_t = 1.0 / self.temperature as f64;
-        // Pure temperature sampling (no top-k, no nucleus): exact
-        // softmax walked in index order — no candidate ranking, no sort,
-        // no allocation on the per-token hot path. Two sequential exp
-        // passes (normalizer, then the walk), bitwise reproducible.
-        if self.top_k == 0 && self.top_p >= 1.0 {
-            let maxl = logits[argmax(logits)] as f64;
-            let w = |l: f32| ((l as f64 - maxl) * inv_t).exp();
-            let total: f64 = logits.iter().map(|&l| w(l)).sum();
-            let mut rng = Rng::new(Self::stream_key(self.seed, step));
-            let mut u = rng.f64() * total;
-            for (i, &l) in logits.iter().enumerate() {
-                u -= w(l);
-                if u < 0.0 {
-                    return i as u32;
-                }
-            }
-            return (logits.len() - 1) as u32;
-        }
-        // Candidates ranked by (logit desc, index asc) — a total order,
-        // so the ranking is deterministic even under ties. With a top-k
-        // cut the boundary is selected in O(V) first and only the k
-        // survivors are sorted (the full-vocab sort would dominate the
-        // per-token cost at real vocab sizes); the selected set equals
-        // the first k of the full sort because the order is total, so
-        // streams are identical either way.
-        let by_desc = |a: &u32, b: &u32| {
-            logits[*b as usize]
-                .total_cmp(&logits[*a as usize])
-                .then(a.cmp(b))
-        };
-        let mut order: Vec<u32> = (0..logits.len() as u32).collect();
-        if self.top_k > 0 && self.top_k < order.len() {
-            let _ = order.select_nth_unstable_by(self.top_k - 1, by_desc);
-            order.truncate(self.top_k);
-        }
-        order.sort_unstable_by(by_desc);
-        // Tempered softmax over the candidate set (f64 accumulation;
-        // strictly sequential, hence bitwise reproducible).
-        let maxl = logits[order[0] as usize] as f64;
-        let mut weights: Vec<f64> = order
-            .iter()
-            .map(|&i| ((logits[i as usize] as f64 - maxl) * inv_t).exp())
-            .collect();
-        let total: f64 = weights.iter().sum();
-        // Nucleus cut: smallest prefix with cumulative mass >= top_p
-        // (candidates are already probability-sorted).
-        if self.top_p < 1.0 {
-            let mut cum = 0.0;
-            let mut keep = weights.len();
-            for (i, w) in weights.iter().enumerate() {
-                cum += w / total;
-                if cum >= self.top_p as f64 {
-                    keep = i + 1;
-                    break;
-                }
-            }
-            weights.truncate(keep);
-        }
-        let kept: f64 = weights.iter().sum();
-        let mut rng = Rng::new(Self::stream_key(self.seed, step));
-        let mut u = rng.f64() * kept;
-        for (i, w) in weights.iter().enumerate() {
-            u -= w;
-            if u < 0.0 {
-                return order[i];
-            }
-        }
-        // f64 rounding can leave u just above zero — last candidate.
-        order[weights.len() - 1]
     }
 }

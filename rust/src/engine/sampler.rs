@@ -1,0 +1,154 @@
+//! Token selection: the seeded temperature / top-k / top-p sampler.
+//!
+//! [`Sampler`] is the **single** token-selection entry point of the
+//! engine and the serving layer: greedy decoding is `Sampler::greedy()`
+//! (or any `temperature == 0` sampler), which short-circuits to
+//! [`Sampler::argmax`] without touching the RNG — bitwise identical to
+//! the seed greedy path. Every other temperature draws from a
+//! counter-based per-request stream (DESIGN.md §11).
+
+use crate::util::rng::Rng;
+
+/// Index of the largest logit (first under ties). The greedy
+/// `temperature == 0` selection rule; exposed as an associated function
+/// so tests and benches share the exact tie-breaking the engine uses.
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Seeded temperature / top-k / top-p token sampler (DESIGN.md §11).
+///
+/// `sample(logits, step)` is a **pure function** of its inputs: the RNG
+/// is counter-based — draw `step` uses the stream keyed by
+/// `(seed, step)`, never sequential state — so token streams cannot
+/// depend on thread count, batch composition, or scheduling order.
+/// `temperature == 0` short-circuits to [`Sampler::argmax`] and is
+/// bitwise identical to the seed greedy path (no RNG is touched at all).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Sampler {
+    temperature: f32,
+    top_k: usize,
+    top_p: f32,
+    seed: u64,
+}
+
+impl Sampler {
+    /// `top_k == 0` disables the top-k cut; `top_p == 1.0` disables the
+    /// nucleus cut.
+    pub fn new(temperature: f32, top_k: usize, top_p: f32, seed: u64)
+               -> Self {
+        Sampler { temperature, top_k, top_p, seed }
+    }
+
+    /// The deterministic argmax sampler (the `temperature == 0` case).
+    pub fn greedy() -> Self {
+        Sampler::new(0.0, 0, 1.0, 0)
+    }
+
+    /// `true` when sampling reduces to argmax (no RNG involved).
+    pub fn is_greedy(&self) -> bool {
+        self.temperature == 0.0
+    }
+
+    /// Index of the largest logit (first under ties) — the greedy
+    /// selection rule, shared by `temperature == 0` sampling and by
+    /// tests/benches that need raw argmax over a logits row.
+    pub fn argmax(logits: &[f32]) -> usize {
+        argmax(logits)
+    }
+
+    /// Counter-based stream key: the SplitMix64 finalizer
+    /// ([`crate::util::rng::mix64`]) over an odd-constant mix of
+    /// `(seed, step)`. For a fixed seed, `step ↦ key` is injective
+    /// (odd multiply then a bijective finalizer), giving one
+    /// independent RNG stream per draw.
+    fn stream_key(seed: u64, step: u64) -> u64 {
+        crate::util::rng::mix64(
+            seed ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Draw the `step`-th token from `logits`.
+    pub fn sample(&self, logits: &[f32], step: u64) -> u32 {
+        if self.temperature <= 0.0 {
+            return argmax(logits) as u32;
+        }
+        let inv_t = 1.0 / self.temperature as f64;
+        // Pure temperature sampling (no top-k, no nucleus): exact
+        // softmax walked in index order — no candidate ranking, no sort,
+        // no allocation on the per-token hot path. Two sequential exp
+        // passes (normalizer, then the walk), bitwise reproducible.
+        if self.top_k == 0 && self.top_p >= 1.0 {
+            let maxl = logits[argmax(logits)] as f64;
+            let w = |l: f32| ((l as f64 - maxl) * inv_t).exp();
+            let total: f64 = logits.iter().map(|&l| w(l)).sum();
+            let mut rng = Rng::new(Self::stream_key(self.seed, step));
+            let mut u = rng.f64() * total;
+            for (i, &l) in logits.iter().enumerate() {
+                u -= w(l);
+                if u < 0.0 {
+                    return i as u32;
+                }
+            }
+            return (logits.len() - 1) as u32;
+        }
+        // Candidates ranked by (logit desc, index asc) — a total order,
+        // so the ranking is deterministic even under ties. With a top-k
+        // cut the boundary is selected in O(V) first and only the k
+        // survivors are sorted (the full-vocab sort would dominate the
+        // per-token cost at real vocab sizes); the selected set equals
+        // the first k of the full sort because the order is total, so
+        // streams are identical either way.
+        let by_desc = |a: &u32, b: &u32| {
+            logits[*b as usize]
+                .total_cmp(&logits[*a as usize])
+                .then(a.cmp(b))
+        };
+        let mut order: Vec<u32> = (0..logits.len() as u32).collect();
+        if self.top_k > 0 && self.top_k < order.len() {
+            let _ = order.select_nth_unstable_by(self.top_k - 1, by_desc);
+            order.truncate(self.top_k);
+        }
+        order.sort_unstable_by(by_desc);
+        // Tempered softmax over the candidate set (f64 accumulation;
+        // strictly sequential, hence bitwise reproducible).
+        let maxl = logits[order[0] as usize] as f64;
+        let mut weights: Vec<f64> = order
+            .iter()
+            .map(|&i| ((logits[i as usize] as f64 - maxl) * inv_t).exp())
+            .collect();
+        let total: f64 = weights.iter().sum();
+        // Nucleus cut: smallest prefix with cumulative mass >= top_p
+        // (candidates are already probability-sorted).
+        if self.top_p < 1.0 {
+            let mut cum = 0.0;
+            let mut keep = weights.len();
+            for (i, w) in weights.iter().enumerate() {
+                cum += w / total;
+                if cum >= self.top_p as f64 {
+                    keep = i + 1;
+                    break;
+                }
+            }
+            weights.truncate(keep);
+        }
+        let kept: f64 = weights.iter().sum();
+        let mut rng = Rng::new(Self::stream_key(self.seed, step));
+        let mut u = rng.f64() * kept;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u < 0.0 {
+                return order[i];
+            }
+        }
+        // f64 rounding can leave u just above zero — last candidate.
+        order[weights.len() - 1]
+    }
+}

@@ -401,6 +401,112 @@ fn cancel_mid_chunked_prefill_frees_slab() {
 }
 
 #[test]
+fn empty_prompt_is_per_request_failure_not_panic() {
+    // The server layer rejects empty prompts synchronously, but direct
+    // `Scheduler::submit` users must get a per-request failure too (the
+    // seed panicked on `prompt.len() - 1`); neighbours are unaffected.
+    let mut sched = make_scheduler(2, 2);
+    sched.submit(Request::new(1, Vec::new(), 4)).unwrap();
+    sched.submit(Request::new(2, vec![3, 4, 5], 4)).unwrap();
+    let responses = sched.run_to_completion();
+    assert_eq!(responses.len(), 2);
+    let bad = responses.iter().find(|r| r.id == 1).unwrap();
+    assert!(bad.tokens.is_empty());
+    assert!(bad.error.as_deref().unwrap().contains("empty prompt"));
+    let ok = responses.iter().find(|r| r.id == 2).unwrap();
+    assert_eq!(ok.tokens.len(), 4);
+    assert!(ok.error.is_none());
+    assert_eq!(sched.metrics.failed, 1);
+    assert_eq!(sched.kv_available(), sched.kv_capacity());
+}
+
+#[test]
+fn one_engine_call_per_iteration_with_admission_and_decode() {
+    // The tentpole contract (DESIGN.md §12): an iteration with ≥1
+    // admission and ≥1 active decode lane issues exactly ONE
+    // forward_batch engine call — the admission's prefill span and every
+    // decode lane ride the same ragged batch.
+    let mut sched = make_scheduler(4, 4);
+    sched.submit(Request::new(1, vec![3, 4, 5, 6], 20)).unwrap();
+    sched.step();
+    assert_eq!(sched.active_len(), 1, "first request active");
+    assert_eq!(sched.metrics.forward_calls, 1);
+    sched.submit(Request::new(2, vec![7, 8, 9], 20)).unwrap();
+    let before_fwd = sched.metrics.forward_calls;
+    let before_decode_rows = sched.metrics.decode_rows;
+    let before_prefill_rows = sched.metrics.prefill_rows;
+    sched.step(); // admits id 2 (prefill span) + decodes id 1 — one call
+    assert_eq!(sched.metrics.forward_calls, before_fwd + 1,
+               "admission + decode must share one engine call");
+    assert_eq!(sched.active_len(), 2);
+    assert_eq!(sched.metrics.decode_rows, before_decode_rows + 1);
+    assert_eq!(sched.metrics.prefill_rows, before_prefill_rows + 3);
+    // Pure-decode iteration: still exactly one call.
+    sched.step();
+    assert_eq!(sched.metrics.forward_calls, before_fwd + 2);
+    // An idle scheduler issues none.
+    sched.cancel(1);
+    sched.cancel(2);
+    while sched.has_work() {
+        sched.step();
+    }
+    let idle_fwd = sched.metrics.forward_calls;
+    sched.step();
+    assert_eq!(sched.metrics.forward_calls, idle_fwd,
+               "no work ⇒ no engine call");
+}
+
+#[test]
+fn multiple_chunked_prefills_ride_concurrently() {
+    // The seed restriction (at most one `Prefilling` in flight) is
+    // lifted: with prefill-span budget 2, two long prompts progress
+    // through chunked prefill in the same iterations — and the token
+    // streams still match the unchunked run exactly.
+    let build = |chunk: usize| {
+        let engine =
+            Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+        Scheduler::new(
+            engine,
+            SchedulerConfig {
+                max_batch: 4,
+                kv_slabs: 4,
+                max_seq: 96,
+                max_prefills_per_iter: 2,
+                queue_cap: 64,
+                prefill_chunk: chunk,
+                threads: 1,
+                kv_dtype: KvDtype::F32,
+            },
+        )
+    };
+    let prompts: Vec<Vec<u32>> = (0..2)
+        .map(|i| (0..40).map(|t| 3 + (t * 3 + i) % 90).collect())
+        .collect();
+    let mut sched = build(8);
+    for (i, p) in prompts.iter().enumerate() {
+        sched.submit(Request::new(i as u64, p.clone(), 5)).unwrap();
+    }
+    sched.step();
+    assert_eq!(sched.prefilling_len(), 2,
+               "both long prompts must be mid-prefill concurrently");
+    let mut chunked = sched.run_to_completion();
+    chunked.sort_by_key(|r| r.id);
+
+    let mut sched2 = build(0);
+    for (i, p) in prompts.iter().enumerate() {
+        sched2.submit(Request::new(i as u64, p.clone(), 5)).unwrap();
+    }
+    let mut whole = sched2.run_to_completion();
+    whole.sort_by_key(|r| r.id);
+    for (a, b) in chunked.iter().zip(&whole) {
+        assert!(a.error.is_none(), "chunked request failed: {:?}", a.error);
+        assert_eq!(a.tokens, b.tokens,
+                   "concurrent chunked prefill changed tokens (id {})",
+                   a.id);
+    }
+}
+
+#[test]
 fn metrics_consistency() {
     check(303, 6, gen_workload, |workload| {
         let mut sched = make_scheduler(4, 4);

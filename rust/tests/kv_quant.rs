@@ -10,7 +10,9 @@
 //! exercised) hook the matrix in without duplicating test code.
 
 use mergequant::bench::synthetic_model;
-use mergequant::engine::{Engine, EngineError, KvCache, KvDtype, Workspace};
+use mergequant::engine::{
+    Engine, EngineError, KvCache, KvDtype, Sampler, Workspace,
+};
 use mergequant::quant::kv::{dequantize_row_i8, quantize_row_i8, KV_QMAX};
 use mergequant::util::proptest::check;
 use mergequant::util::rng::Rng;
@@ -75,14 +77,14 @@ fn run_decode(engine: &Engine, prompt: &[u32], steps: usize, kv: KvDtype)
     engine.prefill(prompt, &mut cache, &mut ws).unwrap();
     let v = cfg.vocab;
     let mut next =
-        mergequant::engine::model::argmax(
+        Sampler::argmax(
             &ws.logits[(prompt.len() - 1) * v..prompt.len() * v]) as u32;
     let mut toks = vec![next];
     for _ in 0..steps {
         let t = [next];
         let mut caches = [&mut cache];
         engine.decode_batch(&t, &mut caches, &mut ws).unwrap();
-        next = mergequant::engine::model::argmax(&ws.logits[..v]) as u32;
+        next = Sampler::argmax(&ws.logits[..v]) as u32;
         toks.push(next);
     }
     (ws.logits[..v].to_vec(), toks)
@@ -141,13 +143,13 @@ fn int8_kv_argmax_mostly_matches_f32_kv_teacher_forced() {
         let mut ws = Workspace::new();
         engine.prefill(&prompt, &mut cache, &mut ws).unwrap();
         let mut maxes =
-            vec![mergequant::engine::model::argmax(
+            vec![Sampler::argmax(
                 &ws.logits[(prompt.len() - 1) * v..prompt.len() * v])];
         for &tok in &path[..steps] {
             let t = [tok];
             let mut caches = [&mut cache];
             engine.decode_batch(&t, &mut caches, &mut ws).unwrap();
-            maxes.push(mergequant::engine::model::argmax(&ws.logits[..v]));
+            maxes.push(Sampler::argmax(&ws.logits[..v]));
         }
         argmaxes.push(maxes);
     }
@@ -200,7 +202,7 @@ fn int8_kv_attention_bitwise_identical_across_threads_1_to_8() {
             engine.decode_batch(&toks, &mut refs, &mut ws).unwrap();
             decode_bits.extend(bits(&ws.logits[..3 * cfg.vocab]));
             for (i, t) in toks.iter_mut().enumerate() {
-                *t = mergequant::engine::model::argmax(
+                *t = Sampler::argmax(
                     &ws.logits[i * cfg.vocab..(i + 1) * cfg.vocab]) as u32;
             }
         }

@@ -203,7 +203,7 @@ fn engine_forward_bitwise_identical_across_thread_counts() {
             engine.decode_batch(&toks, &mut refs, &mut ws).unwrap();
             decode_bits.extend(bits(&ws.logits[..3 * cfg.vocab]));
             for (i, t) in toks.iter_mut().enumerate() {
-                *t = mergequant::engine::model::argmax(
+                *t = mergequant::engine::Sampler::argmax(
                     &ws.logits[i * cfg.vocab..(i + 1) * cfg.vocab],
                 ) as u32;
             }

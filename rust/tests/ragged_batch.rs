@@ -1,0 +1,370 @@
+//! Ragged-batch equivalence (DESIGN.md §12): `Engine::forward_batch`
+//! over ANY interleaving of prefill chunks and decode steps is **bitwise
+//! identical** to the sequential seed replay (`prefill` per chunk +
+//! `decode_batch` over the tick's decode lanes), across thread counts
+//! and KV dtypes. Row math is per-row independent in the tiled kernels,
+//! so stacking spans can relabel rows but never change their values.
+//!
+//! CI matrix knobs (DESIGN.md §7/§10): `MQ_TEST_THREADS` feeds an extra
+//! thread count into the sweeps, `MQ_TEST_KV` restricts the dtype axis.
+
+use std::collections::VecDeque;
+
+use mergequant::bench::synthetic_model;
+use mergequant::engine::{
+    BatchPlan, Engine, EngineError, KvCache, KvDtype, SpanLogits, Workspace,
+};
+use mergequant::util::proptest::{check, Shrink};
+use mergequant::util::rng::Rng;
+
+fn thread_counts() -> Vec<usize> {
+    let mut counts = vec![1, 4];
+    if let Some(extra) = std::env::var("MQ_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        if extra > 0 && !counts.contains(&extra) {
+            counts.push(extra);
+        }
+    }
+    counts
+}
+
+fn kv_dtypes() -> Vec<KvDtype> {
+    match std::env::var("MQ_TEST_KV").as_deref() {
+        Ok("int8") => vec![KvDtype::Int8],
+        Ok("f32") => vec![KvDtype::F32],
+        _ => vec![KvDtype::F32, KvDtype::Int8],
+    }
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+fn test_engine(threads: usize) -> Engine {
+    let mut engine = Engine::with_threads(
+        synthetic_model("mergequant", 64, 128, 2, 96), threads);
+    engine.ensure_kv_scales().unwrap();
+    engine
+}
+
+// ---------------------------------------------------------------------
+// Property: any interleaving ≡ the sequential seed replay
+// ---------------------------------------------------------------------
+
+/// One scripted lifecycle step of a sequence: consume a prompt chunk or
+/// decode one teacher-forced token.
+#[derive(Clone, Debug)]
+enum Op {
+    Chunk(usize),
+    Decode(u32),
+}
+
+/// A scripted serving trace: per-sequence prompts plus a tick schedule.
+/// Each tick advances a subset of the sequences by one op — ticks that
+/// mix a prefill chunk with decode lanes are exactly the ragged shape
+/// the scheduler builds.
+#[derive(Clone, Debug)]
+struct Scenario {
+    prompts: Vec<Vec<u32>>,
+    /// Each tick: (sequence index, op), ascending by sequence index,
+    /// at most one op per sequence.
+    ticks: Vec<Vec<(usize, Op)>>,
+}
+
+impl Shrink for Scenario {}
+
+fn gen_scenario(r: &mut Rng) -> Scenario {
+    let n = r.usize(1, 4);
+    let prompts: Vec<Vec<u32>> = (0..n)
+        .map(|_| {
+            let len = r.usize(2, 13);
+            (0..len).map(|_| 3 + r.usize(0, 90) as u32).collect()
+        })
+        .collect();
+    let mut queues: Vec<VecDeque<Op>> = prompts
+        .iter()
+        .map(|p| {
+            let mut q = VecDeque::new();
+            let mut off = 0usize;
+            while off < p.len() {
+                let c = r.usize(1, p.len() - off + 1);
+                q.push_back(Op::Chunk(c));
+                off += c;
+            }
+            for _ in 0..r.usize(1, 6) {
+                q.push_back(Op::Decode(3 + r.usize(0, 90) as u32));
+            }
+            q
+        })
+        .collect();
+    let mut ticks = Vec::new();
+    while queues.iter().any(|q| !q.is_empty()) {
+        let mut tick: Vec<(usize, Op)> = Vec::new();
+        for (i, q) in queues.iter_mut().enumerate() {
+            if !q.is_empty() && r.usize(0, 4) > 0 {
+                tick.push((i, q.pop_front().unwrap()));
+            }
+        }
+        if tick.is_empty() {
+            let i = queues.iter().position(|q| !q.is_empty()).unwrap();
+            tick.push((i, queues[i].pop_front().unwrap()));
+        }
+        ticks.push(tick);
+    }
+    Scenario { prompts, ticks }
+}
+
+fn make_caches(engine: &Engine, sc: &Scenario, kv: KvDtype) -> Vec<KvCache> {
+    let cfg = engine.config();
+    sc.prompts
+        .iter()
+        .map(|p| KvCache::with_dtype(kv, cfg.n_layers, p.len() + 8,
+                                     cfg.d_model))
+        .collect()
+}
+
+/// Replay the trace with one ragged `forward_batch` per tick; returns
+/// the emitted logits bits (span order) plus final cache lengths.
+fn run_unified(engine: &Engine, sc: &Scenario, kv: KvDtype)
+               -> (Vec<u32>, Vec<usize>) {
+    let mut caches = make_caches(engine, sc, kv);
+    let mut consumed = vec![0usize; sc.prompts.len()];
+    let mut ws = Workspace::new();
+    let mut out = Vec::new();
+    for tick in &sc.ticks {
+        let lanes: Vec<usize> = tick.iter().map(|(s, _)| *s).collect();
+        let mut plan = BatchPlan::new();
+        for (k, (seq, op)) in tick.iter().enumerate() {
+            match op {
+                Op::Chunk(c) => {
+                    let toks =
+                        &sc.prompts[*seq][consumed[*seq]..consumed[*seq] + c];
+                    let last =
+                        consumed[*seq] + c == sc.prompts[*seq].len();
+                    plan.push_span(k, toks, if last {
+                        SpanLogits::Last
+                    } else {
+                        SpanLogits::None
+                    });
+                }
+                Op::Decode(t) => {
+                    plan.push_span(k, std::slice::from_ref(t),
+                                   SpanLogits::Last);
+                }
+            }
+        }
+        let mut refs: Vec<&mut KvCache> = caches
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(i, c)| lanes.contains(&i).then_some(c))
+            .collect();
+        engine.forward_batch(&plan, &mut refs, &mut ws).unwrap();
+        out.extend(bits(&ws.logits));
+        for (seq, op) in tick {
+            if let Op::Chunk(c) = op {
+                consumed[*seq] += c;
+            }
+        }
+    }
+    (out, caches.iter().map(|c| c.len).collect())
+}
+
+/// Replay the same trace on the sequential seed paths: one `prefill`
+/// call per chunk, one `decode_batch` over each tick's decode lanes;
+/// assemble the emitted rows in the same span order as the unified run.
+fn run_sequential(engine: &Engine, sc: &Scenario, kv: KvDtype)
+                  -> (Vec<u32>, Vec<usize>) {
+    let cfg = engine.config().clone();
+    let v = cfg.vocab;
+    let mut caches = make_caches(engine, sc, kv);
+    let mut consumed = vec![0usize; sc.prompts.len()];
+    let mut ws = Workspace::new();
+    let mut out = Vec::new();
+    for tick in &sc.ticks {
+        // Per-op emitted row, keyed by position in the tick.
+        let mut emitted: Vec<Option<Vec<u32>>> = vec![None; tick.len()];
+        let mut decode_ops: Vec<(usize, usize, u32)> = Vec::new();
+        for (k, (seq, op)) in tick.iter().enumerate() {
+            match op {
+                Op::Chunk(c) => {
+                    let toks =
+                        &sc.prompts[*seq][consumed[*seq]..consumed[*seq] + c];
+                    engine.prefill(toks, &mut caches[*seq], &mut ws)
+                        .unwrap();
+                    if consumed[*seq] + c == sc.prompts[*seq].len() {
+                        emitted[k] =
+                            Some(bits(&ws.logits[(c - 1) * v..c * v]));
+                    }
+                    consumed[*seq] += c;
+                }
+                Op::Decode(t) => decode_ops.push((k, *seq, *t)),
+            }
+        }
+        if !decode_ops.is_empty() {
+            let toks: Vec<u32> =
+                decode_ops.iter().map(|&(_, _, t)| t).collect();
+            let seqs: Vec<usize> =
+                decode_ops.iter().map(|&(_, s, _)| s).collect();
+            let mut refs: Vec<&mut KvCache> = caches
+                .iter_mut()
+                .enumerate()
+                .filter_map(|(i, c)| seqs.contains(&i).then_some(c))
+                .collect();
+            engine.decode_batch(&toks, &mut refs, &mut ws).unwrap();
+            for (bi, &(k, _, _)) in decode_ops.iter().enumerate() {
+                emitted[k] = Some(bits(&ws.logits[bi * v..(bi + 1) * v]));
+            }
+        }
+        for row in emitted.into_iter().flatten() {
+            out.extend(row);
+        }
+    }
+    (out, caches.iter().map(|c| c.len).collect())
+}
+
+#[test]
+fn ragged_forward_bitwise_equals_sequential_replay() {
+    for kv in kv_dtypes() {
+        for &threads in &thread_counts() {
+            let engine = test_engine(threads);
+            check(7919 + threads as u64, 5, gen_scenario, |sc| {
+                let (ub, ulen) = run_unified(&engine, sc, kv);
+                let (sb, slen) = run_sequential(&engine, sc, kv);
+                if ulen != slen {
+                    return Err(format!(
+                        "cache lengths diverged: {ulen:?} vs {slen:?} \
+                         (kv {kv:?}, threads {threads})"));
+                }
+                if ub != sb {
+                    return Err(format!(
+                        "logits bits diverged (kv {kv:?}, \
+                         threads {threads})"));
+                }
+                Ok(())
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Directed unit coverage of the plan contract
+// ---------------------------------------------------------------------
+
+#[test]
+fn mixed_plan_matches_separate_prefill_and_decode_calls() {
+    // One plan carrying a whole-prompt admission (All rows) + two decode
+    // lanes must reproduce the separate seed calls bitwise — including
+    // the (t, vocab) prefill logits layout.
+    let engine = test_engine(1);
+    let cfg = engine.config().clone();
+    let v = cfg.vocab;
+    let prompt_a: Vec<u32> = (0..7).map(|i| 3 + i * 5).collect();
+    let prompt_b: Vec<u32> = (0..4).map(|i| 9 + i * 3).collect();
+    let incoming: Vec<u32> = (0..6).map(|i| 4 + i * 7).collect();
+
+    // Seed replay: two prefills, then one batched decode, then the
+    // incoming prefill on its own.
+    let mut ws = Workspace::new();
+    let mut ca = KvCache::new(cfg.n_layers, 16, cfg.d_model);
+    let mut cb = KvCache::new(cfg.n_layers, 16, cfg.d_model);
+    let mut ci = KvCache::new(cfg.n_layers, 16, cfg.d_model);
+    engine.prefill(&prompt_a, &mut ca, &mut ws).unwrap();
+    engine.prefill(&prompt_b, &mut cb, &mut ws).unwrap();
+    let toks = [5u32, 11u32];
+    let mut refs = [&mut ca, &mut cb];
+    engine.decode_batch(&toks, &mut refs, &mut ws).unwrap();
+    let want_decode = bits(&ws.logits[..2 * v]);
+    engine.prefill(&incoming, &mut ci, &mut ws).unwrap();
+    let want_prefill = bits(&ws.logits[..incoming.len() * v]);
+
+    // Unified: one ragged call — the incoming admission (All) rides with
+    // both decode lanes.
+    let mut ws2 = Workspace::new();
+    let mut ca2 = KvCache::new(cfg.n_layers, 16, cfg.d_model);
+    let mut cb2 = KvCache::new(cfg.n_layers, 16, cfg.d_model);
+    let mut ci2 = KvCache::new(cfg.n_layers, 16, cfg.d_model);
+    engine.prefill(&prompt_a, &mut ca2, &mut ws2).unwrap();
+    engine.prefill(&prompt_b, &mut cb2, &mut ws2).unwrap();
+    let mut plan = BatchPlan::new();
+    plan.push_span(0, &incoming, SpanLogits::All);
+    plan.push_span(1, &[5u32], SpanLogits::Last);
+    plan.push_span(2, &[11u32], SpanLogits::Last);
+    let mut refs2 = [&mut ci2, &mut ca2, &mut cb2];
+    engine.forward_batch(&plan, &mut refs2, &mut ws2).unwrap();
+
+    assert_eq!(plan.emitted_rows(), incoming.len() + 2);
+    assert_eq!(plan.logits_rows(0), 0..incoming.len());
+    let got_prefill = bits(&ws2.logits[..incoming.len() * v]);
+    assert_eq!(got_prefill, want_prefill,
+               "admission span logits diverged from seed prefill");
+    let r1 = plan.logits_rows(1).start;
+    let got_decode = bits(&ws2.logits[r1 * v..(r1 + 2) * v]);
+    assert_eq!(got_decode, want_decode,
+               "decode lane logits diverged from seed decode_batch");
+    assert_eq!(ci2.len, incoming.len());
+    assert_eq!(ca2.len, prompt_a.len() + 1);
+    assert_eq!(cb2.len, prompt_b.len() + 1);
+}
+
+#[test]
+fn overflow_names_the_offending_span_and_mutates_nothing() {
+    let engine = test_engine(1);
+    let cfg = engine.config().clone();
+    let mut ws = Workspace::new();
+    let mut big = KvCache::new(cfg.n_layers, 16, cfg.d_model);
+    let mut small = KvCache::new(cfg.n_layers, 4, cfg.d_model);
+    engine.prefill(&[3, 4, 5], &mut big, &mut ws).unwrap();
+    let mut plan = BatchPlan::new();
+    plan.push_span(0, &[7], SpanLogits::Last);
+    plan.push_span(1, &[3, 4, 5, 6, 7], SpanLogits::Last); // 5 > cap 4
+    let mut refs = [&mut big, &mut small];
+    let err = engine.forward_batch(&plan, &mut refs, &mut ws).unwrap_err();
+    assert_eq!(err, EngineError::KvOverflow { lane: 1, pos: 4, cap: 4 });
+    assert_eq!(big.len, 3, "validation must precede any state mutation");
+    assert_eq!(small.len, 0);
+}
+
+#[test]
+fn none_spans_emit_no_logits_rows() {
+    let engine = test_engine(1);
+    let cfg = engine.config().clone();
+    let mut ws = Workspace::new();
+    let mut c = KvCache::new(cfg.n_layers, 16, cfg.d_model);
+    let mut plan = BatchPlan::new();
+    plan.push_span(0, &[3, 4, 5, 6], SpanLogits::None);
+    let mut refs = [&mut c];
+    engine.forward_batch(&plan, &mut refs, &mut ws).unwrap();
+    assert_eq!(plan.emitted_rows(), 0);
+    assert!(ws.logits.is_empty(),
+            "a non-final prefill chunk must emit no logits");
+    assert_eq!(c.len, 4, "the chunk must still fill the cache");
+    // Continue with a Last chunk: identical to chunked seed prefill.
+    let mut plan2 = BatchPlan::new();
+    plan2.push_span(0, &[7, 8], SpanLogits::Last);
+    let mut refs2 = [&mut c];
+    engine.forward_batch(&plan2, &mut refs2, &mut ws).unwrap();
+    let got = bits(&ws.logits);
+
+    let mut ws2 = Workspace::new();
+    let mut c2 = KvCache::new(cfg.n_layers, 16, cfg.d_model);
+    engine.prefill(&[3, 4, 5, 6, 7, 8], &mut c2, &mut ws2).unwrap();
+    let v = cfg.vocab;
+    let want = bits(&ws2.logits[5 * v..6 * v]);
+    assert_eq!(got, want, "None→Last chunking diverged from single-shot");
+}
+
+#[test]
+fn empty_plan_is_a_noop() {
+    let engine = test_engine(1);
+    let cfg = engine.config().clone();
+    let mut ws = Workspace::new();
+    let mut c = KvCache::new(cfg.n_layers, 8, cfg.d_model);
+    let plan = BatchPlan::new();
+    assert!(plan.is_empty());
+    let mut refs = [&mut c];
+    engine.forward_batch(&plan, &mut refs, &mut ws).unwrap();
+    assert_eq!(c.len, 0);
+    assert!(ws.logits.is_empty());
+}

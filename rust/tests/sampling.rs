@@ -12,7 +12,6 @@ use mergequant::coordinator::{
     FinishReason, GenerationParams, Request, Scheduler, SchedulerConfig,
 };
 use mergequant::engine::{Engine, KvDtype, Sampler};
-use mergequant::engine::model::argmax;
 use mergequant::util::rng::Rng;
 
 fn thread_counts() -> Vec<usize> {
@@ -51,7 +50,8 @@ fn temperature_zero_is_argmax_and_touches_no_rng() {
     assert!(s.is_greedy());
     for step in 0..64u64 {
         let logits = random_logits(&mut rng, 96);
-        assert_eq!(s.sample(&logits, step) as usize, argmax(&logits));
+        assert_eq!(s.sample(&logits, step) as usize,
+                   Sampler::argmax(&logits));
     }
 }
 
