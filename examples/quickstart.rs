@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     let engine = Engine::new(model);
     let prompt: Vec<u32> = vec![1, 17, 42, 99, 7, 256];
     let t0 = std::time::Instant::now();
-    let completion = engine.generate(&prompt, 48, 128);
+    let completion = engine.generate(&prompt, 48, 128)?;
     let dt = t0.elapsed();
     println!("prompt     : {prompt:?}");
     println!("completion : {completion:?}");

@@ -59,15 +59,18 @@ fn api_demo(threads: usize) -> anyhow::Result<()> {
     // Reference engine for the greedy golden (identical weights).
     let golden_engine = Engine::new(build_model("mergequant")?.0);
     let greedy_prompt: Vec<u32> = vec![1, 17, 42, 5];
-    let golden = golden_engine.generate(&greedy_prompt, 24, 2048);
+    let golden = golden_engine.generate(&greedy_prompt, 24, 2048)?;
 
-    // Two KV slabs for three requests: the third admission *requires*
-    // the cancellation below to return a slab.
+    // Two batch slots for three requests: the third admission *requires*
+    // the cancellation below to free a slot (its KV blocks come back to
+    // the paged arena on the same iteration — DESIGN.md §13).
     let server = Server::start(
         Engine::new(model),
         SchedulerConfig {
             max_batch: 2,
             kv_slabs: 2,
+            kv_block: 32,
+            kv_blocks: 0,
             max_seq: 2048,
             max_prefills_per_iter: 2,
             queue_cap: 16,
@@ -135,6 +138,9 @@ fn api_demo(threads: usize) -> anyhow::Result<()> {
     println!("greedy  [id {}]: {} tokens — matches Engine::generate \
               golden ✓ (admitted into the cancelled request's slab)",
              r_greedy.id, r_greedy.tokens.len());
+    // The scheduler report line carries the paged-KV packing story:
+    // kv_util (mean/peak used-token over allocated-block-token ratio)
+    // and the blocks_alloc/blocks_freed churn counters (DESIGN.md §13).
     println!("scheduler: {}\n", server.shutdown());
     Ok(())
 }
@@ -176,6 +182,8 @@ fn drive(method: &str, n_requests: usize, n_clients: usize,
         SchedulerConfig {
             max_batch: 8,
             kv_slabs: 8,
+            kv_block: 32,
+            kv_blocks: 0,
             max_seq: prompt_len + max_new + 4,
             max_prefills_per_iter: 2,
             queue_cap: 256,

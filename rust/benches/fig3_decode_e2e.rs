@@ -21,6 +21,12 @@
 //! sequential seed shape (separate prefill + decode_batch calls). The
 //! work is identical and bitwise equal; the unified call is what the
 //! scheduler issues, so its win is the serving-iteration win.
+//!
+//! Fifth axis: **paged vs slab KV** (DESIGN.md §13) — concurrent
+//! short-sequence capacity at equal KV arena bytes through the full
+//! scheduler: block-granular allocation admits sequences proportionally
+//! to the tokens they actually use instead of one `max_seq` reservation
+//! each.
 
 mod common;
 
@@ -215,6 +221,64 @@ fn main() {
                            chunk{CHUNK} sequential"), rows / seq);
         b.record(&format!("mergequant ragged unified_vs_sequential \
                            lanes{LANES} chunk{CHUNK}"), seq / uni);
+    }
+
+    // ---- paged axis: concurrent short sequences at equal arena bytes
+    // (DESIGN.md §13) — the serving win paged allocation buys: a slab
+    // arena of 8 × 512-token reservations admits at most 8 sequences no
+    // matter how short they are; the same bytes as 32-token blocks
+    // admit one sequence per ~1 block. Recorded: peak concurrent live
+    // sequences, throughput, and the scheduler's kv_util packing.
+    {
+        use mergequant::coordinator::{Request, Scheduler, SchedulerConfig};
+        const SHORT_PROMPT: usize = 20;
+        const SHORT_NEW: usize = 8;
+        const N_SHORT: usize = 192;
+        let run_capacity = |kv_block: usize| -> (usize, f64, f64) {
+            let (engine, _) = common::engine_or_synthetic("tiny-llama-s",
+                                                          "mergequant");
+            let mut sched = Scheduler::new(
+                engine,
+                SchedulerConfig {
+                    max_batch: 256,
+                    kv_slabs: 8,      // arena = 8 × 512 tokens either way
+                    kv_block,
+                    kv_blocks: 0,
+                    max_seq: 512,
+                    max_prefills_per_iter: 64,
+                    queue_cap: N_SHORT,
+                    prefill_chunk: 0,
+                    threads: 1,
+                    kv_dtype: KvDtype::F32,
+                },
+            );
+            let vocab = sched.engine().config().vocab as u32;
+            for i in 0..N_SHORT as u64 {
+                let prompt: Vec<u32> = (0..SHORT_PROMPT)
+                    .map(|t| 3 + (t as u32 * 13 + i as u32) % (vocab - 3))
+                    .collect();
+                sched.submit(Request::new(i, prompt, SHORT_NEW)).unwrap();
+            }
+            let t0 = std::time::Instant::now();
+            let mut peak = 0usize;
+            while sched.has_work() {
+                sched.step();
+                peak = peak.max(sched.active_len() + sched.prefilling_len());
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let toks = sched.metrics.generated_tokens as f64;
+            (peak, toks / wall, sched.metrics.kv_util_mean())
+        };
+        let (slab_peak, slab_tps, slab_util) = run_capacity(0);
+        let (paged_peak, paged_tps, paged_util) = run_capacity(32);
+        b.record("slab concurrent_short_seqs", slab_peak as f64);
+        b.record("paged concurrent_short_seqs kvblock32", paged_peak as f64);
+        b.record("paged_vs_slab concurrency_at_equal_bytes",
+                 paged_peak as f64 / slab_peak as f64);
+        b.record("slab short_seq gen_tok/s", slab_tps);
+        b.record("paged short_seq gen_tok/s kvblock32", paged_tps);
+        b.record("slab kv_util_mean", slab_util);
+        b.record("paged kv_util_mean kvblock32", paged_util);
     }
 
     // ---- threads axis: fixed batch 8, parallel-kernel scaling ----

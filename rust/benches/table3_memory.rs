@@ -3,7 +3,9 @@
 //! Two views: (a) measured resident bytes of the loaded tiny bundles
 //! (weights + KV + workspace), (b) the same accounting formulas projected
 //! onto Llama-2-7B dimensions — the paper's absolute column (FP16 ≈ 13.9
-//! GB, QuaRot 4.16, RTN 3.90, MergeQuant 3.87; saving ≈ 3.58×).
+//! GB, QuaRot 4.16, RTN 3.90, MergeQuant 3.87; saving ≈ 3.58×). Plus the
+//! paged-vs-slab axis (DESIGN.md §13): bytes a short sequence actually
+//! pins under block-granular vs whole-slab reservation.
 
 mod common;
 
@@ -46,6 +48,41 @@ fn main() {
             b.record(&format!("measured mergequant kv_{} total_MB",
                               kv.as_str()),
                      mb.total() as f64 / 1e6);
+        }
+    }
+
+    // (a'') paged vs slab reservation bytes (DESIGN.md §13): what a
+    // short sequence actually pins in the arena. A slab cache reserves
+    // the full max_seq plane up front; a paged cache holds only
+    // ⌈len/kv_block⌉ blocks — measured on real caches, both dtypes.
+    {
+        let (mut engine, _) = common::engine_or_synthetic("tiny-llama-s",
+                                                          "mergequant");
+        engine.ensure_kv_scales().expect("probe calibration");
+        let cfg = engine.config().clone();
+        const MAX_SEQ: usize = 2048;
+        const SHORT: usize = 24; // a 20-token chat + a few decode steps
+        const BLOCK: usize = 32;
+        let mut ws = mergequant::engine::Workspace::new();
+        let prompt: Vec<u32> = (0..SHORT)
+            .map(|i| 3 + (i as u32 * 17) % (cfg.vocab as u32 - 3))
+            .collect();
+        for kv in [KvDtype::F32, KvDtype::Int8] {
+            let slab =
+                KvCache::with_dtype(kv, cfg.n_layers, MAX_SEQ, cfg.d_model);
+            let mut paged = KvCache::paged(kv, cfg.n_layers, MAX_SEQ,
+                                           cfg.d_model, BLOCK);
+            engine.prefill(&prompt, &mut paged, &mut ws)
+                .expect("bench prefill");
+            b.record(&format!("reserved per short seq slab kv_{} KB",
+                              kv.as_str()),
+                     slab.bytes() as f64 / 1e3);
+            b.record(&format!("reserved per short seq paged kv_{} KB",
+                              kv.as_str()),
+                     paged.bytes() as f64 / 1e3);
+            b.record(&format!("paged_vs_slab reservation_factor kv_{}",
+                              kv.as_str()),
+                     slab.bytes() as f64 / paged.bytes() as f64);
         }
     }
 

@@ -56,6 +56,14 @@ impl ServeConfig {
                     .unwrap_or(d.max_batch),
                 kv_slabs: s.get("kv_slabs").and_then(Json::as_usize)
                     .unwrap_or(d.kv_slabs),
+                // Paged KV (DESIGN.md §13): block granularity + arena
+                // size. `kv_slabs` stays as the back-compat arena sizing
+                // (kv_blocks == 0 ⇒ kv_slabs × ⌈max_seq/kv_block⌉
+                // blocks, the same bytes the slab pool pre-allocated).
+                kv_block: s.get("kv_block").and_then(Json::as_usize)
+                    .unwrap_or(d.kv_block),
+                kv_blocks: s.get("kv_blocks").and_then(Json::as_usize)
+                    .unwrap_or(d.kv_blocks),
                 max_seq: s.get("max_seq").and_then(Json::as_usize)
                     .unwrap_or(d.max_seq),
                 max_prefills_per_iter: s.get("max_prefills_per_iter")
@@ -103,7 +111,8 @@ mod tests {
         let j = Json::parse(
             r#"{"model":"tiny-llama-m","method":"rtn",
                 "scheduler":{"max_batch":4,"max_seq":256,"threads":6,
-                             "kv_cache":"int8"},
+                             "kv_cache":"int8","kv_block":16,
+                             "kv_blocks":64},
                 "port":9999}"#,
         )
         .unwrap();
@@ -114,9 +123,30 @@ mod tests {
         assert_eq!(c.scheduler.max_seq, 256);
         assert_eq!(c.scheduler.threads, 6);
         assert_eq!(c.scheduler.kv_dtype, KvDtype::Int8);
+        assert_eq!(c.scheduler.kv_block, 16);
+        assert_eq!(c.scheduler.kv_blocks, 64);
+        assert_eq!(c.scheduler.block_tokens(), 16);
+        assert_eq!(c.scheduler.total_blocks(), 64);
         assert_eq!(c.scheduler.queue_cap,
                    SchedulerConfig::default().queue_cap);
         assert_eq!(c.port, 9999);
+    }
+
+    #[test]
+    fn kv_slabs_backcompat_sizes_the_block_arena() {
+        // No kv_blocks ⇒ the arena holds the same KV bytes the old slab
+        // pool pre-allocated: kv_slabs × ⌈max_seq/kv_block⌉ blocks.
+        let c = ServeConfig::from_json(&Json::parse(
+            r#"{"scheduler":{"kv_slabs":4,"max_seq":96,"kv_block":32}}"#,
+        ).unwrap());
+        assert_eq!(c.scheduler.block_tokens(), 32);
+        assert_eq!(c.scheduler.total_blocks(), 4 * 3);
+        // kv_block 0 ⇒ one block per max_seq sequence (slab behaviour).
+        let s = ServeConfig::from_json(&Json::parse(
+            r#"{"scheduler":{"kv_slabs":4,"max_seq":96,"kv_block":0}}"#,
+        ).unwrap());
+        assert_eq!(s.scheduler.block_tokens(), 96);
+        assert_eq!(s.scheduler.total_blocks(), 4);
     }
 
     #[test]

@@ -1,92 +1,176 @@
-//! Fixed-slab KV-cache pool.
+//! Shared KV block arena ([`BlockPool`]) — block-granular allocation
+//! (DESIGN.md §13).
 //!
-//! Pre-allocates `capacity` KV slabs (each `max_seq` tokens) and hands out
-//! ids. Running out of slabs is the backpressure signal the scheduler uses
-//! to stop admitting. Invariants enforced here and property-tested in
-//! `tests/coordinator_props.rs`:
-//!   * a slab id is never handed out twice without an intervening free;
-//!   * freeing an unallocated id is an error;
-//!   * freed slabs are reset (len == 0) before reuse.
+//! The pool pre-allocates `total_blocks` fixed-size [`KvBlock`]s
+//! (`block_tokens` tokens × all layers, dtype-parametric f32/int8 exactly
+//! like the old slabs) and moves them in and out of per-sequence
+//! [`KvCache`] block tables: [`BlockPool::reserve`] grows a cache to
+//! cover a span's new tokens, [`BlockPool::release`] reclaims every
+//! block of a finished/cancelled sequence. Running out of *blocks* — not
+//! slabs — is the scheduler's backpressure signal, so admission capacity
+//! is proportional to the tokens actually in flight rather than to
+//! `max_seq` reservations.
+//!
+//! Ownership replaces the old raw-pointer `get_many_mut`: blocks are
+//! plain owned storage that physically moves between the pool's free
+//! list and the sequences' block tables, so disjoint multi-sequence
+//! mutable access needs no `unsafe` anywhere. Invariants enforced here
+//! and property-tested in `tests/coordinator_props.rs`:
+//!   * a block is never held by two sequences (moves, not aliases);
+//!   * `free + allocated == total` at all times, in blocks and tokens;
+//!   * releasing a sequence twice panics (the double-free contract);
+//!   * reserve is all-or-nothing: a failed reservation hands out no
+//!     blocks;
+//!   * alloc/free churn never leaks (counters balance the allocation).
 
-use crate::engine::{KvCache, KvDtype};
+use crate::engine::{KvBlock, KvCache, KvDtype};
 
-pub struct KvPool {
-    slabs: Vec<KvCache>,
-    free: Vec<usize>,
-    allocated: Vec<bool>,
+pub struct BlockPool {
+    free: Vec<KvBlock>,
+    total_blocks: usize,
+    block_tokens: usize,
+    n_layers: usize,
+    d: usize,
+    dtype: KvDtype,
+    max_seq: usize,
+    per_block_bytes: usize,
+    blocks_alloc: u64,
+    blocks_freed: u64,
 }
 
-impl KvPool {
-    /// Pool of f32 slabs (seed-compatible default).
-    pub fn new(capacity: usize, n_layers: usize, max_seq: usize, d: usize)
-               -> Self {
-        Self::with_dtype(KvDtype::F32, capacity, n_layers, max_seq, d)
+impl BlockPool {
+    /// Arena of f32 blocks (seed-compatible default).
+    pub fn new(total_blocks: usize, block_tokens: usize, n_layers: usize,
+               max_seq: usize, d: usize) -> Self {
+        Self::with_dtype(KvDtype::F32, total_blocks, block_tokens, n_layers,
+                         max_seq, d)
     }
 
-    /// Pool with an explicit slab storage dtype — `Int8` slabs are 4×
-    /// smaller, which is the whole Table-3 scaling story for resident KV.
-    pub fn with_dtype(dtype: KvDtype, capacity: usize, n_layers: usize,
-                      max_seq: usize, d: usize) -> Self {
-        let slabs = (0..capacity)
-            .map(|_| KvCache::with_dtype(dtype, n_layers, max_seq, d))
+    /// Arena with an explicit block storage dtype — `Int8` blocks are 4×
+    /// smaller, which compounds with paging into the Table-3 serving
+    /// capacity story. The arena must cover at least one full `max_seq`
+    /// sequence, or nothing could ever finish a worst-case prompt.
+    pub fn with_dtype(dtype: KvDtype, total_blocks: usize,
+                      block_tokens: usize, n_layers: usize, max_seq: usize,
+                      d: usize) -> Self {
+        let block_tokens = block_tokens.clamp(1, max_seq.max(1));
+        assert!(total_blocks * block_tokens >= max_seq,
+                "KV arena ({total_blocks} blocks × {block_tokens} tokens) \
+                 smaller than one max_seq ({max_seq}) sequence");
+        let free: Vec<KvBlock> = (0..total_blocks)
+            .map(|_| KvBlock::new(dtype, n_layers, block_tokens, d))
             .collect();
-        KvPool {
-            slabs,
-            free: (0..capacity).rev().collect(),
-            allocated: vec![false; capacity],
+        let per_block_bytes = free.first().map_or(0, KvBlock::bytes);
+        BlockPool {
+            free,
+            total_blocks,
+            block_tokens,
+            n_layers,
+            d,
+            dtype,
+            max_seq,
+            per_block_bytes,
+            blocks_alloc: 0,
+            blocks_freed: 0,
         }
     }
 
-    pub fn capacity(&self) -> usize {
-        self.slabs.len()
+    /// Total blocks in the arena.
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
     }
 
-    pub fn available(&self) -> usize {
+    /// Blocks currently on the free list.
+    pub fn free_blocks(&self) -> usize {
         self.free.len()
     }
 
-    pub fn alloc(&mut self) -> Option<usize> {
-        let id = self.free.pop()?;
-        debug_assert!(!self.allocated[id]);
-        self.allocated[id] = true;
-        self.slabs[id].reset();
-        Some(id)
+    /// Blocks currently held by sequences.
+    pub fn allocated_blocks(&self) -> usize {
+        self.total_blocks - self.free.len()
     }
 
-    pub fn dealloc(&mut self, id: usize) {
-        assert!(self.allocated[id], "double free of KV slab {id}");
-        self.allocated[id] = false;
-        self.free.push(id);
+    /// Tokens per block (B).
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
     }
 
-    pub fn get_mut(&mut self, id: usize) -> &mut KvCache {
-        assert!(self.allocated[id], "access to unallocated slab {id}");
-        &mut self.slabs[id]
+    /// Token capacity of the free list.
+    pub fn free_tokens(&self) -> usize {
+        self.free.len() * self.block_tokens
     }
 
-    /// Mutable access to several distinct slabs at once (batched decode).
-    pub fn get_many_mut(&mut self, ids: &[usize]) -> Vec<&mut KvCache> {
-        // verify distinctness
-        for (a, &ia) in ids.iter().enumerate() {
-            assert!(self.allocated[ia], "slab {ia} not allocated");
-            for &ib in &ids[a + 1..] {
-                assert_ne!(ia, ib, "duplicate slab id in batch");
-            }
+    /// Token capacity of the blocks held by sequences — the denominator
+    /// of the `kv_util` metric.
+    pub fn allocated_tokens(&self) -> usize {
+        self.allocated_blocks() * self.block_tokens
+    }
+
+    /// Cumulative blocks handed to sequences (metrics: alloc churn).
+    pub fn blocks_alloc(&self) -> u64 {
+        self.blocks_alloc
+    }
+
+    /// Cumulative blocks reclaimed from sequences.
+    pub fn blocks_freed(&self) -> u64 {
+        self.blocks_freed
+    }
+
+    /// `true` when the free list can grow a table by `ceil(tokens/B)`
+    /// blocks — the admission gate ("enough blocks for the first prefill
+    /// chunk"), optionally leaving `headroom_blocks` untouched for this
+    /// iteration's committed decode lanes.
+    pub fn can_cover(&self, tokens: usize, headroom_blocks: usize) -> bool {
+        tokens.div_ceil(self.block_tokens)
+            <= self.free.len().saturating_sub(headroom_blocks)
+    }
+
+    /// A fresh empty pooled sequence cache (`cap == max_seq`, zero
+    /// blocks): every block it will ever hold comes from
+    /// [`BlockPool::reserve`].
+    pub fn new_sequence(&self) -> KvCache {
+        KvCache::pooled(self.dtype, self.n_layers, self.max_seq, self.d,
+                        self.block_tokens)
+    }
+
+    /// Grow `cache` until it can hold `total_tokens` tokens. All-or-
+    /// nothing: `Err(missing_blocks)` hands out nothing. A no-op when
+    /// the cache already covers the request (reserving an admitted
+    /// chunk's tokens twice is free).
+    pub fn reserve(&mut self, cache: &mut KvCache, total_tokens: usize)
+                   -> Result<(), usize> {
+        debug_assert_eq!(cache.block_tokens(), self.block_tokens,
+                         "cache from a different pool");
+        let need = total_tokens
+            .div_ceil(self.block_tokens)
+            .saturating_sub(cache.n_blocks());
+        if need > self.free.len() {
+            return Err(need - self.free.len());
         }
-        // split via raw pointers, safe because ids are distinct
-        let base = self.slabs.as_mut_ptr();
-        ids.iter()
-            .map(|&i| unsafe { &mut *base.add(i) })
-            .collect()
+        for _ in 0..need {
+            cache.push_block(self.free.pop().unwrap());
+        }
+        self.blocks_alloc += need as u64;
+        Ok(())
     }
 
+    /// Reclaim every block of a finished/cancelled sequence. Panics if
+    /// the sequence was already released (double-free contract) or never
+    /// came from a pool.
+    pub fn release(&mut self, cache: &mut KvCache) {
+        let blocks = cache.take_blocks();
+        self.blocks_freed += blocks.len() as u64;
+        self.free.extend(blocks);
+    }
+
+    /// Resident bytes of the whole arena (free + held blocks; Table 3).
     pub fn total_bytes(&self) -> usize {
-        self.slabs.iter().map(|s| s.bytes()).sum()
+        self.total_blocks * self.per_block_bytes
     }
 
-    /// Storage dtype of the slabs (uniform across the pool).
+    /// Storage dtype of the arena's blocks.
     pub fn dtype(&self) -> KvDtype {
-        self.slabs.first().map_or(KvDtype::F32, |s| s.dtype())
+        self.dtype
     }
 }
 
@@ -94,63 +178,105 @@ impl KvPool {
 mod tests {
     use super::*;
 
-    fn pool() -> KvPool {
-        KvPool::new(4, 2, 16, 8)
+    fn pool() -> BlockPool {
+        // 8 blocks × 4 tokens, max_seq 16, 2 layers, d 8
+        BlockPool::new(8, 4, 2, 16, 8)
     }
 
     #[test]
-    fn alloc_until_empty() {
+    fn reserve_until_empty_then_err() {
         let mut p = pool();
-        let ids: Vec<_> = (0..4).map(|_| p.alloc().unwrap()).collect();
-        assert_eq!(p.available(), 0);
-        assert!(p.alloc().is_none());
-        let mut sorted = ids.clone();
-        sorted.sort();
-        sorted.dedup();
-        assert_eq!(sorted.len(), 4, "ids must be unique");
+        let mut caches: Vec<KvCache> =
+            (0..2).map(|_| p.new_sequence()).collect();
+        for c in caches.iter_mut() {
+            p.reserve(c, 16).unwrap(); // 4 blocks each
+        }
+        assert_eq!(p.free_blocks(), 0);
+        let mut extra = p.new_sequence();
+        assert_eq!(p.reserve(&mut extra, 4), Err(1));
+        assert_eq!(extra.n_blocks(), 0, "failed reserve must hand out 0");
+        for c in caches.iter_mut() {
+            p.release(c);
+        }
+        assert_eq!(p.free_blocks(), p.total_blocks());
     }
 
     #[test]
-    fn freed_slab_is_reset() {
+    fn released_sequence_is_reset_and_blocks_reusable() {
         let mut p = pool();
-        let id = p.alloc().unwrap();
-        p.get_mut(id).len = 7;
-        p.dealloc(id);
-        let id2 = p.alloc().unwrap();
-        assert_eq!(p.get_mut(id2).len, 0);
+        let mut c = p.new_sequence();
+        p.reserve(&mut c, 7).unwrap(); // 2 blocks
+        c.len = 7;
+        p.release(&mut c);
+        assert_eq!(c.len, 0, "release resets the sequence length");
+        assert_eq!(p.free_blocks(), 8);
+        let mut c2 = p.new_sequence();
+        p.reserve(&mut c2, 16).unwrap();
+        assert_eq!(c2.len, 0);
+        assert_eq!(c2.held_tokens(), 16);
     }
 
     #[test]
     #[should_panic(expected = "double free")]
     fn double_free_panics() {
         let mut p = pool();
-        let id = p.alloc().unwrap();
-        p.dealloc(id);
-        p.dealloc(id);
+        let mut c = p.new_sequence();
+        p.reserve(&mut c, 4).unwrap();
+        p.release(&mut c);
+        p.release(&mut c);
     }
 
     #[test]
-    #[should_panic(expected = "duplicate slab id")]
-    fn duplicate_batch_ids_panic() {
+    fn reserve_is_idempotent_for_covered_tokens() {
         let mut p = pool();
-        let id = p.alloc().unwrap();
-        let _ = p.get_many_mut(&[id, id]);
+        let mut c = p.new_sequence();
+        p.reserve(&mut c, 5).unwrap(); // 2 blocks
+        assert_eq!(c.n_blocks(), 2);
+        p.reserve(&mut c, 5).unwrap();
+        p.reserve(&mut c, 8).unwrap(); // still 2 blocks
+        assert_eq!(c.n_blocks(), 2);
+        assert_eq!(p.blocks_alloc(), 2);
     }
 
     #[test]
-    fn get_many_mut_distinct() {
+    fn accounting_stays_exact() {
         let mut p = pool();
-        let a = p.alloc().unwrap();
-        let b = p.alloc().unwrap();
-        let caches = p.get_many_mut(&[a, b]);
-        assert_eq!(caches.len(), 2);
+        let mut a = p.new_sequence();
+        let mut b = p.new_sequence();
+        p.reserve(&mut a, 9).unwrap(); // 3 blocks
+        p.reserve(&mut b, 4).unwrap(); // 1 block
+        assert_eq!(p.allocated_blocks() + p.free_blocks(), p.total_blocks());
+        assert_eq!(p.allocated_tokens(), 16);
+        assert_eq!(p.blocks_alloc() - p.blocks_freed(),
+                   p.allocated_blocks() as u64);
+        p.release(&mut a);
+        assert_eq!(p.blocks_alloc() - p.blocks_freed(),
+                   p.allocated_blocks() as u64);
+        p.release(&mut b);
+        assert_eq!(p.free_blocks(), p.total_blocks());
+        assert_eq!(p.blocks_alloc(), p.blocks_freed());
     }
 
     #[test]
-    fn int8_slabs_are_4x_smaller() {
-        let f = KvPool::with_dtype(KvDtype::F32, 4, 2, 16, 8);
-        let q = KvPool::with_dtype(KvDtype::Int8, 4, 2, 16, 8);
+    #[should_panic(expected = "smaller than one max_seq")]
+    fn arena_must_cover_one_sequence() {
+        let _ = BlockPool::new(2, 4, 2, 16, 8);
+    }
+
+    #[test]
+    fn int8_arena_is_4x_smaller() {
+        let f = BlockPool::with_dtype(KvDtype::F32, 4, 16, 2, 16, 8);
+        let q = BlockPool::with_dtype(KvDtype::Int8, 4, 16, 2, 16, 8);
         assert_eq!(q.dtype(), KvDtype::Int8);
         assert_eq!(f.total_bytes(), 4 * q.total_bytes());
+    }
+
+    #[test]
+    fn can_cover_respects_headroom() {
+        let p = pool(); // 8 free blocks
+        assert!(p.can_cover(32, 0));
+        assert!(!p.can_cover(33, 0));
+        assert!(p.can_cover(24, 2));
+        assert!(!p.can_cover(28, 2));
     }
 }

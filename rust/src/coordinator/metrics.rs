@@ -1,6 +1,7 @@
-//! Serving metrics: counters, latency/TTFT recorders, and ragged-batch
+//! Serving metrics: counters, latency/TTFT recorders, ragged-batch
 //! composition (rows per engine call, prefill-vs-decode row split, batch
-//! occupancy — DESIGN.md §12).
+//! occupancy — DESIGN.md §12), and paged-KV packing (utilization +
+//! block-allocation churn — DESIGN.md §13).
 
 use std::time::Duration;
 
@@ -31,11 +32,23 @@ pub struct Metrics {
     /// cancellation — client-initiated, so they count neither as
     /// completions nor as failures.
     pub cancelled: u64,
+    /// Cumulative KV blocks handed to sequences (paged-allocation churn;
+    /// mirrored from the `BlockPool` each iteration — DESIGN.md §13).
+    pub blocks_alloc: u64,
+    /// Cumulative KV blocks reclaimed from finished/cancelled sequences.
+    pub blocks_freed: u64,
+    /// Prefills pushed back to the pending queue by pool-exhaustion
+    /// stall resolution (transient backpressure, not failures).
+    pub kv_requeues: u64,
     latencies_s: Vec<f64>,
     ttfts_s: Vec<f64>,
     batch_sizes: Vec<f64>,
     rows_per_iter: Vec<f64>,
     occupancy: Vec<f64>,
+    /// Per-iteration KV utilization samples: used tokens over allocated
+    /// block tokens (1.0 = perfectly packed arena).
+    kv_util: Vec<f64>,
+    kv_util_peak: f64,
 }
 
 impl Metrics {
@@ -69,6 +82,29 @@ impl Metrics {
         }
     }
 
+    /// Record one iteration's KV packing: `used` tokens actually cached
+    /// over `allocated` tokens of reserved block storage. Iterations
+    /// with nothing allocated are skipped (no sequences, no packing to
+    /// measure).
+    pub fn record_kv(&mut self, used: usize, allocated: usize) {
+        if allocated == 0 {
+            return;
+        }
+        let util = used as f64 / allocated as f64;
+        self.kv_util.push(util);
+        self.kv_util_peak = self.kv_util_peak.max(util);
+    }
+
+    /// Mean per-iteration KV utilization (used/allocated block tokens).
+    pub fn kv_util_mean(&self) -> f64 {
+        summarize(&self.kv_util).mean
+    }
+
+    /// Peak per-iteration KV utilization.
+    pub fn kv_util_peak(&self) -> f64 {
+        self.kv_util_peak
+    }
+
     pub fn latency_summary(&self) -> Summary {
         summarize(&self.latencies_s)
     }
@@ -99,7 +135,8 @@ impl Metrics {
              mean_batch={:.2} peak_batch={} failed={} cancelled={} \
              lat_p50={:.1}ms lat_p99={:.1}ms ttft_p50={:.1}ms \
              fwd_calls={} rows/iter={:.1} prefill_rows={} decode_rows={} \
-             occupancy={:.2}",
+             occupancy={:.2} kv_util={:.2} kv_util_peak={:.2} \
+             blocks_alloc={} blocks_freed={} kv_requeues={}",
             self.requests_completed,
             self.prompt_tokens,
             self.generated_tokens,
@@ -116,6 +153,11 @@ impl Metrics {
             self.prefill_rows,
             self.decode_rows,
             self.mean_occupancy(),
+            self.kv_util_mean(),
+            self.kv_util_peak(),
+            self.blocks_alloc,
+            self.blocks_freed,
+            self.kv_requeues,
         )
     }
 }
@@ -155,5 +197,25 @@ mod tests {
         let r = m.report();
         assert!(r.contains("fwd_calls=2"), "{r}");
         assert!(r.contains("prefill_rows=8"), "{r}");
+    }
+
+    #[test]
+    fn kv_utilization_accumulates() {
+        let mut m = Metrics::default();
+        // Iteration 1: 24 tokens cached in 64 allocated (0.375); then a
+        // better-packed iteration (48/64 = 0.75); an idle iteration with
+        // nothing allocated must not skew the mean.
+        m.record_kv(24, 64);
+        m.record_kv(48, 64);
+        m.record_kv(0, 0);
+        assert!((m.kv_util_mean() - 0.5625).abs() < 1e-9);
+        assert!((m.kv_util_peak() - 0.75).abs() < 1e-9);
+        m.blocks_alloc = 7;
+        m.blocks_freed = 5;
+        let r = m.report();
+        assert!(r.contains("kv_util=0.56"), "{r}");
+        assert!(r.contains("kv_util_peak=0.75"), "{r}");
+        assert!(r.contains("blocks_alloc=7"), "{r}");
+        assert!(r.contains("blocks_freed=5"), "{r}");
     }
 }

@@ -5,11 +5,12 @@
 //!
 //! ```text
 //!  clients ──TCP/ndjson──► gateway ──mpsc──► scheduler (owns Engine)
-//!                                               │  admit  → slab from KvPool
+//!                                               │  admit  → blocks for the first
+//!                                               │           chunk from BlockPool
 //!                                               │  step   → ONE forward_batch
 //!                                               │           (prefill spans +
 //!                                               │            decode lanes, ragged)
-//!                                               │  cancel → slab back next iteration
+//!                                               │  cancel → blocks back next iteration
 //!                                               ▼
 //!                                  event streams (one per request:
 //!                                  Token… then Done/Error)
@@ -17,7 +18,8 @@
 //!
 //! The scheduler runs iteration-level (continuous) batching: every loop
 //! it applies cancellations, admits pending requests (bounded by free KV
-//! slabs and `max_batch`), then stacks up to `max_prefills_per_iter`
+//! **blocks** — paged, block-granular allocation, DESIGN.md §13 — and
+//! `max_batch`), then stacks up to `max_prefills_per_iter`
 //! prefill spans — several chunked prefills may be in flight
 //! concurrently — and every active decode lane into **one ragged
 //! [`crate::engine::BatchPlan`]** executed by a single
@@ -26,8 +28,8 @@
 //! tokens, token budget) and report progress as per-token [`Event`]
 //! frames — the generation API v2 contract (DESIGN.md §11). Invariants
 //! (property-tested): every request gets exactly one terminal event, the
-//! active set never exceeds `max_batch`, KV slabs are never
-//! double-allocated or leaked (cancellation included), FIFO admission
+//! active set never exceeds `max_batch`, KV blocks are never
+//! double-handed-out or leaked (cancellation included), FIFO admission
 //! order, one engine call per iteration.
 
 pub mod kv_pool;
@@ -36,7 +38,7 @@ pub mod request;
 pub mod scheduler;
 pub mod server;
 
-pub use kv_pool::KvPool;
+pub use kv_pool::BlockPool;
 pub use metrics::Metrics;
 pub use request::{
     Event, FinishReason, GenerationParams, Request, Response, SubmitError,

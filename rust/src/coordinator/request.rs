@@ -110,7 +110,8 @@ pub enum FinishReason {
     Length,
     /// Emitted one of the request's stop tokens.
     Stop,
-    /// Its KV slab filled before the budget was reached.
+    /// Its KV capacity (logical `max_seq` or the block pool) filled
+    /// before the budget was reached.
     CacheFull,
     /// Torn out of the batch by `cancel()` (or a vanished client).
     Cancelled,

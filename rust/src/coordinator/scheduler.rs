@@ -1,27 +1,42 @@
 //! Iteration-level (continuous-batching) scheduler — **one engine call
-//! per iteration** (DESIGN.md §12).
+//! per iteration** (DESIGN.md §12) over **block-granular KV**
+//! (DESIGN.md §13).
 //!
-//! Owns the engine, a KV pool and the pending queue. Each call to
-//! [`Scheduler::step`] performs one scheduling iteration:
+//! Owns the engine, the shared KV [`BlockPool`] and the pending queue.
+//! Each call to [`Scheduler::step`] performs one scheduling iteration:
 //!
 //! 1. **Cancellation:** tear cancelled sequences out of the batch —
 //!    pending requests are answered immediately, active/prefilling ones
-//!    are finalized this iteration and their KV slabs returned.
+//!    are finalized this iteration and their KV blocks returned.
 //! 2. **Admission (router):** pop pending requests FIFO into the
-//!    prefilling set while there is batch room and a free KV slab
-//!    (oversized prompts are answered with the typed overflow error up
-//!    front, before holding a slab).
-//! 3. **One ragged batch:** build a single [`BatchPlan`] — up to
-//!    `max_prefills_per_iter` prefill spans (whole prompts, or
-//!    `prefill_chunk`-token chunks of the in-flight prefills; several
-//!    chunked prefills ride concurrently) plus one decode span per
-//!    active lane — and run **one** [`Engine::forward_batch`] call over
-//!    the stacked rows.
-//! 4. **Sampling:** completed prefills are promoted to the active set
+//!    prefilling set while there is batch room and the pool has **enough
+//!    blocks for the first prefill chunk** — not a whole `max_seq` slab,
+//!    so admission capacity tracks the tokens actually in flight. The
+//!    blocks committed work needs this iteration (decode lanes crossing
+//!    a block boundary, in-flight prefills' next chunks) are held back
+//!    from admissions. (Oversized prompts are answered with the typed
+//!    overflow error up front, before holding any block.)
+//! 3. **Block reservation:** committed decode lanes reserve their next
+//!    block first (FIFO by lane index, which finalize keeps equal to
+//!    arrival order — a lane that cannot get one finishes `CacheFull`
+//!    deterministically, oldest lanes last, instead of failing the
+//!    batch); then the oldest `max_prefills_per_iter` prefills reserve
+//!    their next chunk, FIFO-strict (when one stalls, younger prefills
+//!    wait too, so pressure cannot invert first-token order).
+//! 4. **One ragged batch:** build a single [`BatchPlan`] — the reserved
+//!    prefill spans plus one decode span per reserved lane — and run
+//!    **one** [`Engine::forward_batch`] call over the stacked rows.
+//! 5. **Sampling:** completed prefills are promoted to the active set
 //!    (first token — the TTFT point, in FIFO order); every decode lane
 //!    samples its next token from its span's logits row.
-//! 5. **Completion:** sequences that hit `max_new` / a stop token /
-//!    cache capacity are finalized, their slabs returned to the pool.
+//! 6. **Completion:** sequences that hit `max_new` / a stop token /
+//!    cache capacity are finalized, their blocks returned to the pool.
+//!    If every live sequence is a prefill that cannot reserve and
+//!    nothing freed a block this iteration, the **newest** prefilling
+//!    sequence is requeued to the head of the pending queue
+//!    (deterministic: LIFO victim, blocks released, `kv_requeues`
+//!    metric) so the oldest can always finish — the arena is asserted
+//!    to cover at least one `max_seq` sequence.
 //!
 //! Progress is reported as an **event stream** ([`Event`], drained via
 //! [`Scheduler::take_events`]): one `Token` frame per sampled token and
@@ -33,9 +48,9 @@
 //! greedy requests run the seed argmax path bitwise unchanged, sampled
 //! requests draw from a counter-based per-request RNG. The unified pass
 //! is bitwise identical to the sequential seed paths for every batch
-//! composition (`tests/ragged_batch.rs`), so token streams are
-//! deterministic for every thread count, chunking choice, and batch
-//! composition.
+//! composition and block size (`tests/ragged_batch.rs`), so token
+//! streams are deterministic for every thread count, chunking choice,
+//! block size, and batch composition.
 //!
 //! **Threading model:** the scheduling loop itself is synchronous — one
 //! iteration at a time, driven by [`super::server::Server`]'s worker
@@ -51,10 +66,11 @@ use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use crate::engine::{
-    BatchPlan, Engine, EngineError, KvDtype, Sampler, SpanLogits, Workspace,
+    BatchPlan, Engine, EngineError, KvCache, KvDtype, Sampler, SpanLogits,
+    Workspace,
 };
 
-use super::kv_pool::KvPool;
+use super::kv_pool::BlockPool;
 use super::metrics::Metrics;
 use super::request::{Event, FinishReason, Request, Response};
 
@@ -64,9 +80,17 @@ pub struct SchedulerConfig {
     /// in-flight prefills — every lane of the per-iteration ragged
     /// batch).
     pub max_batch: usize,
-    /// KV slabs (≥ max_batch; extra slabs buffer admissions).
+    /// Back-compat arena sizing (pre-paging `kv_slabs`): when
+    /// `kv_blocks == 0` the arena holds `kv_slabs × ⌈max_seq/kv_block⌉`
+    /// blocks — the same KV bytes the old slab pool pre-allocated.
     pub kv_slabs: usize,
-    /// Per-sequence KV capacity.
+    /// Tokens per KV block (the paging granularity). `0` ⇒ `max_seq`
+    /// (one block per sequence — exactly the old slab behaviour).
+    pub kv_block: usize,
+    /// Total blocks in the shared arena. `0` ⇒ derive from `kv_slabs`
+    /// (back-compat: equal arena bytes to the old slab pool).
+    pub kv_blocks: usize,
+    /// Per-sequence logical KV capacity (tokens).
     pub max_seq: usize,
     /// Prefill spans per ragged batch: bounds per-iteration prefill work
     /// (and therefore decode stalls). Several chunked prefills may be in
@@ -83,7 +107,7 @@ pub struct SchedulerConfig {
     /// serial kernels (the deterministic baseline — though every count
     /// is bitwise identical), 0 ⇒ all available cores.
     pub threads: usize,
-    /// KV-slab storage dtype: `F32` (paper-parity default) or `Int8`
+    /// KV-block storage dtype: `F32` (paper-parity default) or `Int8`
     /// (statically-quantized cache, 4× more servable KV per box;
     /// DESIGN.md §10). Plumbed from JSON `scheduler.kv_cache` /
     /// `--kv-cache`.
@@ -95,6 +119,8 @@ impl Default for SchedulerConfig {
         SchedulerConfig {
             max_batch: 8,
             kv_slabs: 8,
+            kv_block: 32,
+            kv_blocks: 0,
             max_seq: 512,
             max_prefills_per_iter: 2,
             queue_cap: 1024,
@@ -105,9 +131,32 @@ impl Default for SchedulerConfig {
     }
 }
 
+impl SchedulerConfig {
+    /// Resolved paging granularity (tokens per block).
+    pub fn block_tokens(&self) -> usize {
+        if self.kv_block == 0 {
+            self.max_seq.max(1)
+        } else {
+            self.kv_block.min(self.max_seq.max(1))
+        }
+    }
+
+    /// Resolved arena size in blocks (`kv_blocks`, or the `kv_slabs`
+    /// byte-equivalent when unset).
+    pub fn total_blocks(&self) -> usize {
+        if self.kv_blocks > 0 {
+            self.kv_blocks
+        } else {
+            self.kv_slabs * self.max_seq.max(1).div_ceil(self.block_tokens())
+        }
+    }
+}
+
 struct Active {
     req: Request,
-    slab: usize,
+    /// This sequence's KV block table — owned here, blocks borrowed from
+    /// the shared [`BlockPool`] until finalize/cancel returns them.
+    cache: KvCache,
     tokens: Vec<u32>,
     next: u32,
     ttft: Duration,
@@ -120,13 +169,13 @@ struct Active {
     error: Option<String>,
 }
 
-/// A request whose prompt is not yet fully in its KV slab. Any number
+/// A request whose prompt is not yet fully in its KV cache. Any number
 /// may be in flight concurrently; each iteration the oldest
 /// `max_prefills_per_iter` of them contribute one span to the ragged
 /// batch (whole remaining prompt when chunking is off).
 struct Prefilling {
     req: Request,
-    slab: usize,
+    cache: KvCache,
     consumed: usize,
 }
 
@@ -143,7 +192,7 @@ enum SpanRole {
 pub struct Scheduler {
     engine: Engine,
     cfg: SchedulerConfig,
-    pool: KvPool,
+    pool: BlockPool,
     pending: VecDeque<Request>,
     prefilling: Vec<Prefilling>,
     active: Vec<Active>,
@@ -161,15 +210,16 @@ impl Scheduler {
         // The scheduler owns engine threading: config is the single
         // source of truth for the deployment (DESIGN.md §7).
         engine.set_threads(cfg.threads);
-        // Int8 slabs need per-layer KV scales; bundles predating the
+        // Int8 blocks need per-layer KV scales; bundles predating the
         // format-2 schema (and fp16 baselines) get probe-calibrated
         // fallback scales so `kv_cache=int8` serves everywhere.
         if cfg.kv_dtype == KvDtype::Int8 {
             engine.ensure_kv_scales().expect("probe KV calibration");
         }
         let mc = engine.config();
-        let pool = KvPool::with_dtype(cfg.kv_dtype, cfg.kv_slabs,
-                                      mc.n_layers, cfg.max_seq, mc.d_model);
+        let pool = BlockPool::with_dtype(cfg.kv_dtype, cfg.total_blocks(),
+                                         cfg.block_tokens(), mc.n_layers,
+                                         cfg.max_seq, mc.d_model);
         Scheduler {
             engine,
             cfg,
@@ -201,7 +251,7 @@ impl Scheduler {
     /// Request cancellation of `id`. Applied at the start of the next
     /// iteration: a pending request is answered immediately (`Done`,
     /// finish `Cancelled`), an active or prefilling one is torn out of
-    /// the continuous batch and its KV slab returned to the pool. Ids
+    /// the continuous batch and its KV blocks returned to the pool. Ids
     /// that match nothing (already finished, never existed) are ignored.
     pub fn cancel(&mut self, id: u64) {
         self.cancel_requests.push(id);
@@ -226,14 +276,20 @@ impl Scheduler {
         self.prefilling.len()
     }
 
-    /// Free KV slabs (capacity minus live sequences) — observability for
-    /// tests and admission diagnostics.
+    /// Free KV blocks (arena capacity minus blocks held by live
+    /// sequences) — observability for tests and admission diagnostics.
     pub fn kv_available(&self) -> usize {
-        self.pool.available()
+        self.pool.free_blocks()
     }
 
+    /// Total KV blocks in the arena.
     pub fn kv_capacity(&self) -> usize {
-        self.pool.capacity()
+        self.pool.total_blocks()
+    }
+
+    /// Paging granularity (tokens per block).
+    pub fn kv_block_tokens(&self) -> usize {
+        self.pool.block_tokens()
     }
 
     /// Drain the event stream accumulated since the last call: `Token`
@@ -243,21 +299,43 @@ impl Scheduler {
         std::mem::take(&mut self.events)
     }
 
-    /// One scheduling iteration: cancellations, admissions, then **one**
-    /// `forward_batch` ragged engine call carrying every prefill span
-    /// and decode lane, then sampling and completion. Returns the number
-    /// of active sequences.
+    /// One scheduling iteration: cancellations, admissions, block
+    /// reservations, then **one** `forward_batch` ragged engine call
+    /// carrying every prefill span and decode lane, then sampling and
+    /// completion. Returns the number of active sequences.
     pub fn step(&mut self) -> usize {
+        let freed_before = self.pool.blocks_freed();
         self.apply_cancellations();
         self.admit();
-        self.run_batch();
+        let ran = self.run_batch();
+        // KV utilization snapshot while sequences hold their blocks:
+        // used tokens over allocated block tokens (the packing win paged
+        // allocation exists to maximize — DESIGN.md §13).
+        let used: usize =
+            self.prefilling.iter().map(|p| p.cache.len).sum::<usize>()
+                + self.active.iter().map(|a| a.cache.len).sum::<usize>();
+        self.metrics.record_kv(used, self.pool.allocated_tokens());
         self.finalize();
+        // Stall resolution: every live sequence is a prefill that could
+        // not reserve its next chunk and nothing freed a block this
+        // iteration — no future iteration can differ, so the newest
+        // prefilling sequence (deterministic LIFO victim) releases its
+        // blocks and returns to the head of the pending queue. The
+        // arena covers ≥ one max_seq sequence, so the oldest always
+        // completes eventually.
+        if !ran && self.active.is_empty() && !self.prefilling.is_empty()
+            && self.pool.blocks_freed() == freed_before
+        {
+            self.requeue_stalled_prefill();
+        }
+        self.metrics.blocks_alloc = self.pool.blocks_alloc();
+        self.metrics.blocks_freed = self.pool.blocks_freed();
         self.active.len()
     }
 
     /// Apply queued `cancel()` calls: answer pending requests outright,
     /// mark active/prefilling sequences done with finish `Cancelled` so
-    /// this iteration's finalize returns their slabs.
+    /// this iteration's finalize returns their blocks.
     fn apply_cancellations(&mut self) {
         for id in std::mem::take(&mut self.cancel_requests) {
             if let Some(pos) = self.pending.iter().position(|r| r.id == id) {
@@ -268,8 +346,8 @@ impl Scheduler {
             if let Some(pos) =
                 self.prefilling.iter().position(|p| p.req.id == id)
             {
-                let pf = self.prefilling.remove(pos);
-                self.pool.dealloc(pf.slab);
+                let mut pf = self.prefilling.remove(pos);
+                self.pool.release(&mut pf.cache);
                 self.answer_cancelled(&pf.req);
                 continue;
             }
@@ -300,28 +378,61 @@ impl Scheduler {
         });
     }
 
-    /// Fail a not-yet-active request with a typed engine error: free its
-    /// slab, answer it (empty tokens + error), keep the worker alive.
-    fn fail_request(&mut self, req: Request, slab: usize, err: &EngineError) {
-        self.pool.dealloc(slab);
+    /// Fail a not-yet-active request with a typed per-request error
+    /// (blocks already returned by the caller), keeping the worker
+    /// alive.
+    fn fail_request(&mut self, req: Request, error: String) {
         self.metrics.failed += 1;
         self.events.push(Event::Error {
             response: Response::failed(req.id, req.prompt.len(),
-                                       req.submitted.elapsed(),
-                                       err.to_string()),
+                                       req.submitted.elapsed(), error),
         });
     }
 
     /// Admission (router): pending → prefilling, FIFO, while there is
-    /// batch room (active + in-flight prefills), a free slab, and an
-    /// unused prefill-span slot this iteration. Prompts that can never
-    /// run — empty (no logits row to sample a first token from), or
-    /// longer than a slab — are answered with a per-request failure up
-    /// front: no slab held, no engine call burned. (The server layer
-    /// already rejects empty prompts synchronously; this guards direct
+    /// batch room (active + in-flight prefills), an unused prefill-span
+    /// slot this iteration, and **enough free blocks for the first
+    /// prefill chunk** — the paged admission gate (DESIGN.md §13). The
+    /// blocks this iteration's committed decode lanes are about to
+    /// claim are held back, so an admission can never starve a running
+    /// lane into `CacheFull`. Prompts that can never run — empty (no
+    /// logits row to sample a first token from), or longer than
+    /// `max_seq` — are answered with a per-request failure up front: no
+    /// block held, no engine call burned. (The server layer already
+    /// rejects empty prompts synchronously; this guards direct
     /// `Scheduler::submit` users, where the seed panicked instead.)
     fn admit(&mut self) {
         let budget = self.cfg.max_prefills_per_iter.max(1);
+        // Headroom admissions may not take: one block per committed
+        // decode lane about to cross a block boundary, plus the
+        // uncovered part of each in-flight prefill's next chunk — an
+        // admission must never steal the blocks already-admitted work
+        // needs this iteration (else a backlog could starve an older
+        // prefill through repeated admit-then-stall cycles).
+        let decode_need = self
+            .active
+            .iter()
+            .filter(|a| !a.done && a.tokens.len() < a.req.params.max_new
+                    && a.cache.len + 1 > a.cache.held_tokens())
+            .count();
+        let bt = self.pool.block_tokens();
+        let prefill_need: usize = self
+            .prefilling
+            .iter()
+            .take(budget)
+            .map(|pf| {
+                let remaining = pf.req.prompt.len() - pf.consumed;
+                let chunk = if self.cfg.prefill_chunk == 0 {
+                    remaining
+                } else {
+                    self.cfg.prefill_chunk.min(remaining)
+                };
+                (pf.consumed + chunk)
+                    .div_ceil(bt)
+                    .saturating_sub(pf.cache.n_blocks())
+            })
+            .sum();
+        let headroom = decode_need + prefill_need;
         while self.prefilling.len() < budget
             && self.active.len() + self.prefilling.len() < self.cfg.max_batch
             && !self.pending.is_empty()
@@ -329,12 +440,7 @@ impl Scheduler {
             let plen = self.pending.front().map_or(0, |r| r.prompt.len());
             if plen == 0 {
                 let req = self.pending.pop_front().unwrap();
-                self.metrics.failed += 1;
-                self.events.push(Event::Error {
-                    response: Response::failed(
-                        req.id, 0, req.submitted.elapsed(),
-                        "empty prompt".into()),
-                });
+                self.fail_request(req, "empty prompt".into());
                 continue;
             }
             if plen > self.cfg.max_seq {
@@ -344,48 +450,38 @@ impl Scheduler {
                     pos: plen - 1,
                     cap: self.cfg.max_seq,
                 };
-                self.metrics.failed += 1;
-                self.events.push(Event::Error {
-                    response: Response::failed(req.id, plen,
-                                               req.submitted.elapsed(),
-                                               err.to_string()),
-                });
+                self.fail_request(req, err.to_string());
                 continue;
             }
-            let Some(slab) = self.pool.alloc() else { break };
+            let first = if self.cfg.prefill_chunk == 0 {
+                plen
+            } else {
+                self.cfg.prefill_chunk.min(plen)
+            };
+            if !self.pool.can_cover(first, headroom) {
+                break; // backpressure: not enough blocks to start
+            }
+            let mut cache = self.pool.new_sequence();
+            self.pool
+                .reserve(&mut cache, first)
+                .expect("can_cover checked above");
             let req = self.pending.pop_front().unwrap();
-            self.prefilling.push(Prefilling { req, slab, consumed: 0 });
+            self.prefilling.push(Prefilling { req, cache, consumed: 0 });
         }
     }
 
-    /// Build this iteration's [`BatchPlan`] — prefill spans first (FIFO,
-    /// bounded by `max_prefills_per_iter`), then one decode span per
-    /// runnable active lane — and run **one** `forward_batch` over it.
-    fn run_batch(&mut self) {
+    /// Reserve blocks (decode lanes first — FIFO by lane index — then
+    /// the oldest `max_prefills_per_iter` prefill chunks), build this
+    /// iteration's [`BatchPlan`] and run **one** `forward_batch` over
+    /// it. Returns whether any span ran.
+    fn run_batch(&mut self) -> bool {
         let budget = self.cfg.max_prefills_per_iter.max(1);
-        let mut plan = BatchPlan::new();
-        let mut roles: Vec<SpanRole> = Vec::new();
-        let mut slabs: Vec<usize> = Vec::new();
-        for (pi, pf) in self.prefilling.iter().enumerate().take(budget) {
-            let remaining = pf.req.prompt.len() - pf.consumed;
-            let chunk = if self.cfg.prefill_chunk == 0 {
-                remaining
-            } else {
-                self.cfg.prefill_chunk.min(remaining)
-            };
-            let end = pf.consumed + chunk;
-            let logits = if end == pf.req.prompt.len() {
-                SpanLogits::Last
-            } else {
-                SpanLogits::None
-            };
-            plan.push_span(roles.len(), &pf.req.prompt[pf.consumed..end],
-                           logits);
-            roles.push(SpanRole::Prefill { pf: pi, end });
-            slabs.push(pf.slab);
-        }
-        let prefill_rows = plan.rows();
-        for (idx, a) in self.active.iter_mut().enumerate() {
+        // Committed decode lanes reserve their next block first: a lane
+        // that cannot get one finishes CacheFull deterministically
+        // (FIFO by lane index) instead of failing the batch.
+        let mut decode_sel: Vec<usize> = Vec::new();
+        for idx in 0..self.active.len() {
+            let a = &mut self.active[idx];
             if a.done {
                 continue;
             }
@@ -395,29 +491,91 @@ impl Scheduler {
                 a.done = true;
                 continue;
             }
-            plan.push_span(roles.len(), &[a.next], SpanLogits::Last);
-            roles.push(SpanRole::Decode { idx });
-            slabs.push(a.slab);
+            let need = a.cache.len + 1;
+            if self.pool.reserve(&mut a.cache, need).is_err() {
+                a.done = true;
+                a.finish = FinishReason::CacheFull;
+                continue;
+            }
+            decode_sel.push(idx);
         }
-        if roles.is_empty() {
-            return;
+        // Prefill chunks, FIFO-strict over the oldest `budget` prefills:
+        // when one cannot reserve, everything younger waits too (block
+        // pressure must not let a younger prefill overtake a stalled
+        // older one and invert the FIFO first-token order). Its blocks
+        // may free later; a total stall is resolved by `step`'s requeue.
+        let mut prefill_sel: Vec<(usize, usize)> = Vec::new(); // (pf, end)
+        for pi in 0..self.prefilling.len().min(budget) {
+            let pf = &mut self.prefilling[pi];
+            let remaining = pf.req.prompt.len() - pf.consumed;
+            let chunk = if self.cfg.prefill_chunk == 0 {
+                remaining
+            } else {
+                self.cfg.prefill_chunk.min(remaining)
+            };
+            let end = pf.consumed + chunk;
+            if self.pool.reserve(&mut pf.cache, end).is_err() {
+                break;
+            }
+            prefill_sel.push((pi, end));
+        }
+        if decode_sel.is_empty() && prefill_sel.is_empty() {
+            return false;
+        }
+        // Build the plan: prefill spans first, then decode lanes. Span
+        // lane indices are positional — `caches` below is collected in
+        // the same order.
+        let mut plan = BatchPlan::new();
+        let mut roles: Vec<SpanRole> = Vec::new();
+        for &(pi, end) in &prefill_sel {
+            let pf = &self.prefilling[pi];
+            let logits = if end == pf.req.prompt.len() {
+                SpanLogits::Last
+            } else {
+                SpanLogits::None
+            };
+            plan.push_span(roles.len(), &pf.req.prompt[pf.consumed..end],
+                           logits);
+            roles.push(SpanRole::Prefill { pf: pi, end });
+        }
+        let prefill_rows = plan.rows();
+        for &idx in &decode_sel {
+            plan.push_span(roles.len(), &[self.active[idx].next],
+                           SpanLogits::Last);
+            roles.push(SpanRole::Decode { idx });
         }
         // Roles and plan spans must stay 1:1 — logits routing and error
         // attribution index one by the other. Guaranteed because every
         // span here is non-empty (admission rejects empty prompts, so a
         // prefilling entry always has ≥ 1 remaining token).
         debug_assert_eq!(plan.spans().len(), roles.len());
-        let mut caches = self.pool.get_many_mut(&slabs);
-        let result = self.engine.forward_batch(&plan, &mut caches,
-                                               &mut self.ws);
-        drop(caches);
+        // ONE ragged engine call. Cache references come straight from
+        // the owning entries in span order: `iter_mut` hands out
+        // disjoint `&mut`s, so — unlike the old slab pool's raw-pointer
+        // `get_many_mut` — no `unsafe` is involved anywhere.
+        let result = {
+            let mut caches: Vec<&mut KvCache> =
+                Vec::with_capacity(roles.len());
+            let mut ps = prefill_sel.iter().peekable();
+            for (i, p) in self.prefilling.iter_mut().enumerate() {
+                if ps.peek().is_some_and(|&&(pi, _)| pi == i) {
+                    ps.next();
+                    caches.push(&mut p.cache);
+                }
+            }
+            let mut ds = decode_sel.iter().peekable();
+            for (i, a) in self.active.iter_mut().enumerate() {
+                if ds.peek().is_some_and(|&&di| di == i) {
+                    ds.next();
+                    caches.push(&mut a.cache);
+                }
+            }
+            self.engine.forward_batch(&plan, &mut caches, &mut self.ws)
+        };
         match result {
             Ok(()) => {
-                let prefill_spans = roles
-                    .iter()
-                    .filter(|r| matches!(r, SpanRole::Prefill { .. }))
-                    .count();
-                let decode_spans = roles.len() - prefill_spans;
+                let prefill_spans = prefill_sel.len();
+                let decode_spans = decode_sel.len();
                 self.metrics.prefill_calls += prefill_spans as u64;
                 self.metrics.record_forward(plan.rows(), prefill_rows,
                                             decode_spans, roles.len(),
@@ -429,6 +587,7 @@ impl Scheduler {
             }
             Err(e) => self.attribute_error(&roles, &e),
         }
+        true
     }
 
     /// Route the ragged batch's logits rows: promote completed prefills
@@ -450,33 +609,25 @@ impl Scheduler {
             let pf = self.prefilling.remove(pi - removed);
             removed += 1;
             let row = plan.logits_rows(si).start;
-            self.activate(pf.req, pf.slab, row);
+            self.activate(pf.req, pf.cache, row);
         }
         // Decode lanes: one sampled token each. (Activation only pushed
         // to the end of `active`, so the captured indices stay valid.)
         let vocab = self.engine.config().vocab;
         for (si, role) in roles.iter().enumerate() {
             let SpanRole::Decode { idx } = role else { continue };
-            let i = *idx;
             let r = plan.logits_rows(si).start;
             let row = &self.ws.logits[r * vocab..(r + 1) * vocab];
-            let a = &mut self.active[i];
+            let a = &mut self.active[*idx];
             // Counter step = number of tokens sampled so far, so the
             // stream is a pure function of (seed, step) — identical for
             // every thread count and batch composition.
             let tok = a.sampler.sample(row, a.tokens.len() as u64);
             a.tokens.push(tok);
             a.next = tok;
-            self.events.push(Event::Token {
-                id: a.req.id,
-                index: a.tokens.len() - 1,
-                token: tok,
-            });
-            let cache_full = {
-                let c = self.pool.get_mut(a.slab);
-                c.len + 1 >= c.cap
-            };
-            let a = &mut self.active[i];
+            // Logical capacity only — pool pressure is handled at the
+            // next iteration's reservation (CacheFull there too).
+            let cache_full = a.cache.len + 1 >= a.cache.cap;
             if a.req.params.stop_tokens.contains(&tok) {
                 a.done = true;
                 a.finish = FinishReason::Stop;
@@ -487,6 +638,11 @@ impl Scheduler {
                 a.done = true;
                 a.finish = FinishReason::CacheFull;
             }
+            self.events.push(Event::Token {
+                id: a.req.id,
+                index: a.tokens.len() - 1,
+                token: tok,
+            });
         }
     }
 
@@ -497,7 +653,8 @@ impl Scheduler {
     /// iteration.
     fn attribute_error(&mut self, roles: &[SpanRole], e: &EngineError) {
         match e {
-            EngineError::KvOverflow { lane, .. } => match roles[*lane] {
+            EngineError::KvOverflow { lane, .. }
+            | EngineError::KvExhausted { lane, .. } => match roles[*lane] {
                 SpanRole::Decode { idx } => {
                     let a = &mut self.active[idx];
                     a.error = Some(e.to_string());
@@ -506,8 +663,9 @@ impl Scheduler {
                     self.metrics.failed += 1;
                 }
                 SpanRole::Prefill { pf, .. } => {
-                    let p = self.prefilling.remove(pf);
-                    self.fail_request(p.req, p.slab, e);
+                    let mut p = self.prefilling.remove(pf);
+                    self.pool.release(&mut p.cache);
+                    self.fail_request(p.req, e.to_string());
                 }
             },
             _ => {
@@ -517,8 +675,9 @@ impl Scheduler {
                 for role in roles.iter().rev() {
                     match *role {
                         SpanRole::Prefill { pf, .. } => {
-                            let p = self.prefilling.remove(pf);
-                            self.fail_request(p.req, p.slab, e);
+                            let mut p = self.prefilling.remove(pf);
+                            self.pool.release(&mut p.cache);
+                            self.fail_request(p.req, e.to_string());
                         }
                         SpanRole::Decode { idx } => {
                             let a = &mut self.active[idx];
@@ -537,7 +696,8 @@ impl Scheduler {
     /// first token (counter step 0 — the TTFT point) from logits row
     /// `first_logits_row` of the just-run batch and emit the first
     /// `Token` frame.
-    fn activate(&mut self, req: Request, slab: usize, first_logits_row: usize) {
+    fn activate(&mut self, req: Request, cache: KvCache,
+                first_logits_row: usize) {
         let vocab = self.engine.config().vocab;
         let row = &self.ws.logits
             [first_logits_row * vocab..(first_logits_row + 1) * vocab];
@@ -546,12 +706,9 @@ impl Scheduler {
         let ttft = req.submitted.elapsed();
         self.events.push(Event::Token { id: req.id, index: 0, token: first });
         // Same termination rules (and priority) as the decode step, so a
-        // prompt that exactly fills its slab ends gracefully with
+        // prompt that exactly fills `max_seq` ends gracefully with
         // `CacheFull` instead of tripping a KvOverflow next iteration.
-        let cache_full = {
-            let c = self.pool.get_mut(slab);
-            c.len + 1 >= c.cap
-        };
+        let cache_full = cache.len + 1 >= cache.cap;
         let (done, finish) = if req.params.stop_tokens.contains(&first) {
             (true, FinishReason::Stop)
         } else if req.params.max_new <= 1 {
@@ -563,7 +720,7 @@ impl Scheduler {
         };
         self.active.push(Active {
             req,
-            slab,
+            cache,
             tokens: vec![first],
             next: first,
             ttft,
@@ -574,12 +731,32 @@ impl Scheduler {
         });
     }
 
+    /// Deterministic stall resolution (see [`Scheduler::step`]): the
+    /// newest prefilling sequence (LIFO victim) returns its blocks and
+    /// goes back to the **front** of the pending queue — transient pool
+    /// pressure is backpressure, not a request failure. Its consumed
+    /// chunks are discarded; re-prefilling them later reproduces the
+    /// same KV bitwise, so the eventual token stream is unchanged.
+    /// Progress is guaranteed: admission headroom keeps new admissions
+    /// from taking the older prefills' blocks, and the arena covers ≥
+    /// one `max_seq` sequence, so the oldest always completes.
+    fn requeue_stalled_prefill(&mut self) {
+        let mut p = self.prefilling.pop().unwrap();
+        self.pool.release(&mut p.cache);
+        self.metrics.kv_requeues += 1;
+        self.pending.push_front(p.req);
+    }
+
     fn finalize(&mut self) {
         let mut i = 0;
         while i < self.active.len() {
             if self.active[i].done {
-                let a = self.active.swap_remove(i);
-                self.pool.dealloc(a.slab);
+                // Order-preserving removal: lane index stays arrival
+                // order, so the decode-reservation priority (and the
+                // CacheFull cut order under block pressure) is genuinely
+                // oldest-first. `max_batch` lanes, so the shift is cheap.
+                let mut a = self.active.remove(i);
+                self.pool.release(&mut a.cache);
                 let latency = a.req.submitted.elapsed();
                 // Failed/cancelled sequences count only in their own
                 // counters (set at the marking site) — completion counts

@@ -71,7 +71,7 @@ impl RequestHandle {
     }
 
     /// Ask the scheduler to tear this request out of the continuous
-    /// batch; its KV slab is returned on the next scheduler iteration
+    /// batch; its KV blocks are returned on the next scheduler iteration
     /// and the stream ends with `Done { finish: Cancelled }`. Safe to
     /// call at any point (no-op once the request has finished).
     pub fn cancel(&self) {
@@ -258,7 +258,7 @@ fn worker_loop(engine: Engine, cfg: SchedulerConfig, rx: Receiver<Msg>)
                     sinks.remove(&id);
                 } else if !delivered {
                     // Consumer vanished mid-stream (handle dropped):
-                    // tear the request out so its slab comes back.
+                    // tear the request out so its KV blocks come back.
                     sinks.remove(&id);
                     sched.cancel(id);
                 }
@@ -360,7 +360,7 @@ fn handle_conn(stream: TcpStream, server: Arc<Server>) -> anyhow::Result<()> {
                 if streaming {
                     if let Err(e) = stream_events(&mut out, &handle) {
                         // Client hung up mid-stream: tear the request out
-                        // of the batch so its KV slab comes back.
+                        // of the batch so its KV blocks come back.
                         handle.cancel();
                         return Err(e);
                     }

@@ -1,15 +1,19 @@
 //! Attention over cached K/V: f32 and int8-KV paths, plus the ragged
 //! per-span fan-out used by the unified forward pass.
 //!
+//! The cached prefix is **paged** (DESIGN.md §13): both dtype paths walk
+//! it block-by-block — logical position `t` is row `t % B` of block
+//! `t / B` — instead of over one contiguous plane. The per-row math and
+//! the accumulation order over `t` are exactly the slab-layout ones, so
+//! results are **bitwise identical** for every block size, every thread
+//! count, and both KV dtypes (DESIGN.md §7/§10/§13) — and, because rows
+//! never interact, for every ragged batch composition (DESIGN.md §12).
+//!
 //! Every query row is attended independently against its own sequence's
 //! cached prefix (causal: row at absolute position `p` sees `p + 1`
-//! cached entries). Per-row math is strictly sequential and identical in
-//! the serial and parallel paths, so results are **bitwise identical**
-//! for every thread count and both KV dtypes (DESIGN.md §7/§10) — and,
-//! because rows never interact, for every ragged batch composition
-//! (DESIGN.md §12).
+//! cached entries).
 
-use crate::quant::gemm::dot_f32;
+use crate::quant::gemm::{dot_f32, dot_i8};
 use crate::quant::kv::{self, KvDtype, KvLayerScales};
 use crate::quant::parallel::{ScopedTask, ThreadPool};
 
@@ -24,25 +28,33 @@ pub(super) struct RowAttn {
     pub klen: usize,
 }
 
-/// One attention head-batched pass for a single query row against a
-/// cached f32 K/V region of length `klen`. q: (d,), out: (d,).
-#[allow(clippy::too_many_arguments)]
-fn attend_one(cfg: &ModelConfig, q: &[f32], kcache: &[f32], vcache: &[f32],
-              cache_stride: usize, klen: usize, scores: &mut Vec<f32>,
-              out: &mut [f32]) {
-    let (h, hd) = (cfg.n_heads, cfg.head_dim());
+/// One attention head-batched pass for a single query row against the
+/// cached f32 K/V prefix of length `klen` in layer `l` of `cache`,
+/// iterated block-by-block. q: (d,), out: (d,).
+fn attend_one(cfg: &ModelConfig, q: &[f32], cache: &KvCache, l: usize,
+              klen: usize, scores: &mut Vec<f32>, out: &mut [f32]) {
+    let (h, hd, d) = (cfg.n_heads, cfg.head_dim(), cfg.d_model);
+    let bt = cache.block_tokens();
     let scale = 1.0 / (hd as f32).sqrt();
     scores.resize(klen, 0.0);
     for head in 0..h {
-        let qh = &q[head * hd..(head + 1) * hd];
-        // scores
+        let lo = head * hd;
+        let qh = &q[lo..lo + hd];
+        // scores, ascending t via (block, row) — same order, same dots,
+        // same bits as the contiguous-plane walk
         let mut maxv = f32::NEG_INFINITY;
-        for t in 0..klen {
-            let kh = &kcache[t * cache_stride + head * hd
-                ..t * cache_stride + (head + 1) * hd];
-            let s = dot_f32(qh, kh) * scale;
-            scores[t] = s;
-            maxv = maxv.max(s);
+        let (mut t0, mut b) = (0usize, 0usize);
+        while t0 < klen {
+            let rows = bt.min(klen - t0);
+            let kp = cache.block_k_f32(b, l);
+            for r in 0..rows {
+                let kh = &kp[r * d + lo..r * d + lo + hd];
+                let s = dot_f32(qh, kh) * scale;
+                scores[t0 + r] = s;
+                maxv = maxv.max(s);
+            }
+            t0 += rows;
+            b += 1;
         }
         // softmax
         let mut denom = 0f32;
@@ -51,39 +63,111 @@ fn attend_one(cfg: &ModelConfig, q: &[f32], kcache: &[f32], vcache: &[f32],
             denom += *s;
         }
         let inv = 1.0 / denom;
-        // weighted value sum
-        let oh = &mut out[head * hd..(head + 1) * hd];
+        // weighted value sum, again ascending t block-by-block
+        let oh = &mut out[lo..lo + hd];
         oh.fill(0.0);
-        for t in 0..klen {
-            let w = scores[t] * inv;
-            let vh = &vcache[t * cache_stride + head * hd
-                ..t * cache_stride + (head + 1) * hd];
-            for c in 0..hd {
-                oh[c] += w * vh[c];
+        let (mut t0, mut b) = (0usize, 0usize);
+        while t0 < klen {
+            let rows = bt.min(klen - t0);
+            let vp = cache.block_v_f32(b, l);
+            for r in 0..rows {
+                let w = scores[t0 + r] * inv;
+                let vh = &vp[r * d + lo..r * d + lo + hd];
+                for c in 0..hd {
+                    oh[c] += w * vh[c];
+                }
             }
+            t0 += rows;
+            b += 1;
+        }
+    }
+}
+
+/// Integer-domain mirror of [`attend_one`] over an int8 cached prefix,
+/// iterated block-by-block (the contiguous-plane reference kernel is
+/// `quant::kv::attend_one_i8`; a slab cache is one block, and the paged
+/// walk preserves the accumulation order over `t`, so the two are
+/// bitwise identical — pinned directly by the
+/// `paged_int8_attention_is_bitwise_the_reference_kernel` unit test
+/// below, and exercised end-to-end in `tests/ragged_batch.rs`).
+///
+/// Per head: Q̂ = round(q · q_mult) once; scores via exact i8×i8→i32
+/// dots rescaled by the single folded scalar `qk_scale[h] / √hd`;
+/// softmax in f32; context as `Σ_t p_t·V̂[t,c]` with the per-column
+/// `v_scale` epilogue at the end (DESIGN.md §10).
+#[allow(clippy::too_many_arguments)]
+fn attend_one_i8(cfg: &ModelConfig, q: &[f32], cache: &KvCache,
+                 sc: &KvLayerScales, l: usize, klen: usize,
+                 scores: &mut Vec<f32>, qq: &mut Vec<i8>, out: &mut [f32]) {
+    let (h, hd, d) = (cfg.n_heads, cfg.head_dim(), cfg.d_model);
+    let bt = cache.block_tokens();
+    let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    scores.resize(klen, 0.0);
+    qq.resize(hd, 0);
+    for head in 0..h {
+        let lo = head * hd;
+        // Static Q quantization: per-channel multipliers precomputed at
+        // load (k_scale folded in), one rounding pass per head.
+        kv::quantize_row_i8(&q[lo..lo + hd], &sc.q_mult[lo..lo + hd], qq);
+        let pre = sc.qk_scale[head] * inv_sqrt;
+        let mut maxv = f32::NEG_INFINITY;
+        let (mut t0, mut b) = (0usize, 0usize);
+        while t0 < klen {
+            let rows = bt.min(klen - t0);
+            let kp = cache.block_k_i8(b, l);
+            for r in 0..rows {
+                let kh = &kp[r * d + lo..r * d + lo + hd];
+                let s = dot_i8(qq, kh) as f32 * pre;
+                scores[t0 + r] = s;
+                maxv = maxv.max(s);
+            }
+            t0 += rows;
+            b += 1;
+        }
+        let mut denom = 0f32;
+        for s in scores[..klen].iter_mut() {
+            *s = (*s - maxv).exp();
+            denom += *s;
+        }
+        let inv = 1.0 / denom;
+        let oh = &mut out[lo..lo + hd];
+        oh.fill(0.0);
+        let (mut t0, mut b) = (0usize, 0usize);
+        while t0 < klen {
+            let rows = bt.min(klen - t0);
+            let vp = cache.block_v_i8(b, l);
+            for r in 0..rows {
+                let w = scores[t0 + r] * inv;
+                let vh = &vp[r * d + lo..r * d + lo + hd];
+                for c in 0..hd {
+                    oh[c] += w * vh[c] as f32;
+                }
+            }
+            t0 += rows;
+            b += 1;
+        }
+        // per-column dequant epilogue
+        for (o, &s) in oh.iter_mut().zip(&sc.v_scale[lo..lo + hd]) {
+            *o *= s;
         }
     }
 }
 
 /// One query row attended over layer `l` of `cache`, dispatching on the
 /// cache dtype: f32 storage runs the seed [`attend_one`], int8 storage
-/// runs the integer-domain path (`quant::kv::attend_one_i8`). Both are
-/// per-row order-fixed, so the §7 bitwise-determinism guarantee holds
-/// for either dtype.
+/// runs the integer-domain path. Both are per-row order-fixed, so the §7
+/// bitwise-determinism guarantee holds for either dtype and any block
+/// size.
 #[allow(clippy::too_many_arguments)]
 pub(super) fn attend_cached(cfg: &ModelConfig, cache: &KvCache,
                             kvsc: Option<&[KvLayerScales]>, l: usize,
                             q: &[f32], klen: usize, scores: &mut Vec<f32>,
                             qq: &mut Vec<i8>, out: &mut [f32]) {
     match cache.dtype() {
-        KvDtype::F32 => attend_one(cfg, q, cache.layer_k_f32(l),
-                                   cache.layer_v_f32(l), cfg.d_model, klen,
-                                   scores, out),
+        KvDtype::F32 => attend_one(cfg, q, cache, l, klen, scores, out),
         KvDtype::Int8 => {
             let sc = &kvsc.expect("validated int8 KV scales")[l];
-            kv::attend_one_i8(q, cache.layer_k_i8(l), cache.layer_v_i8(l),
-                              sc, cfg.d_model, klen, cfg.n_heads, scores,
-                              qq, out);
+            attend_one_i8(cfg, q, cache, sc, l, klen, scores, qq, out);
         }
     }
 }
@@ -132,4 +216,91 @@ pub(super) fn attend_batch(pool: &ThreadPool, cfg: &ModelConfig,
         }));
     }
     pool.run(tasks);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The §13 kernel-equivalence pin: the paged block-walking int8
+    /// attention must reproduce the contiguous-plane reference kernel
+    /// (`quant::kv::attend_one_i8`) bit for bit — including a block
+    /// size that does not divide the prefix length, and a non-zero
+    /// layer (the logical→physical plane offset).
+    #[test]
+    fn paged_int8_attention_is_bitwise_the_reference_kernel() {
+        let (h, hd, klen, bt) = (2usize, 8usize, 13usize, 4usize);
+        let d = h * hd;
+        let n_layers = 2;
+        let cfg = ModelConfig {
+            name: "attn-test".into(),
+            vocab: 16,
+            d_model: d,
+            n_heads: h,
+            d_ff: 32,
+            n_layers,
+            max_seq: 64,
+            rope_theta: 10_000.0,
+        };
+        let mut rng = Rng::new(23);
+        let kf: Vec<f32> = (0..klen * d).map(|_| rng.normal()).collect();
+        let vf: Vec<f32> = (0..klen * d).map(|_| rng.normal()).collect();
+        let q: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let absmax = |xs: &[f32], c: usize| {
+            (0..klen).fold(1e-3f32, |a, t| a.max(xs[t * d + c].abs()))
+        };
+        let k_scale: Vec<f32> =
+            (0..d).map(|c| absmax(&kf, c) / 127.0).collect();
+        let v_scale: Vec<f32> =
+            (0..d).map(|c| absmax(&vf, c) / 127.0).collect();
+        let qk: Vec<f32> = (0..h)
+            .map(|hh| {
+                (0..hd).fold(1e-6f32, |a, i| {
+                    let c = hh * hd + i;
+                    a.max(q[c].abs() * k_scale[c])
+                }) / 127.0
+            })
+            .collect();
+        let sc = KvLayerScales::new(k_scale, v_scale, qk);
+
+        // Reference: contiguous planes quantized row by row.
+        let mut kq = vec![0i8; klen * d];
+        let mut vq = vec![0i8; klen * d];
+        for t in 0..klen {
+            kv::quantize_row_i8(&kf[t * d..(t + 1) * d], &sc.k_inv,
+                                &mut kq[t * d..(t + 1) * d]);
+            kv::quantize_row_i8(&vf[t * d..(t + 1) * d], &sc.v_inv,
+                                &mut vq[t * d..(t + 1) * d]);
+        }
+        let mut scores = Vec::new();
+        let mut qq = Vec::new();
+        let mut want = vec![0f32; d];
+        kv::attend_one_i8(&q, &kq, &vq, &sc, d, klen, h, &mut scores,
+                          &mut qq, &mut want);
+
+        // Paged: the same rows written through the block table (layer 0
+        // gets decoy zeros so a plane-offset bug cannot cancel out),
+        // attended at layer 1 with a block size that splits the prefix
+        // 4+4+4+1.
+        let mut cache =
+            KvCache::paged(KvDtype::Int8, n_layers, klen + 3, d, bt);
+        let zeros = vec![0f32; d];
+        for t in 0..klen {
+            cache.write(0, t, &zeros, &zeros, Some(&sc));
+            cache.write(1, t, &kf[t * d..(t + 1) * d],
+                        &vf[t * d..(t + 1) * d], Some(&sc));
+        }
+        cache.len = klen;
+        let mut scores2 = Vec::new();
+        let mut qq2 = Vec::new();
+        let mut got = vec![0f32; d];
+        attend_one_i8(&cfg, &q, &cache, &sc, 1, klen, &mut scores2,
+                      &mut qq2, &mut got);
+        let bits = |xs: &[f32]| -> Vec<u32> {
+            xs.iter().map(|v| v.to_bits()).collect()
+        };
+        assert_eq!(bits(&got), bits(&want),
+                   "paged int8 kernel diverged from the reference");
+    }
 }

@@ -1,114 +1,313 @@
-//! Per-sequence KV caches with dtype-parametric storage.
+//! Per-sequence paged KV caches with dtype-parametric storage.
 //!
-//! [`KvCache`] is the unit the scheduler's slab pool hands out: a
-//! contiguous (L, cap, d) K/V plane pair per sequence, stored either in
-//! f32 (the seed layout) or statically-quantized int8 (4× smaller, the
-//! Table-3 scaling story — DESIGN.md §10). Quantization happens at write
-//! time with the bundle's calibrated per-channel scales; the integer
-//! attention path reads the int8 planes directly (`engine::attention`).
+//! Storage is **block-granular** (DESIGN.md §13): a [`KvBlock`] holds
+//! `block_tokens` K/V rows for *all* layers — layout (L, B, d) per plane,
+//! in f32 (the seed layout) or statically-quantized int8 (4× smaller,
+//! the Table-3 scaling story). A [`KvCache`] is a *block table*: logical
+//! token position `t` lives in block `t / B` at row `t % B`, so a
+//! sequence only ever holds storage proportional to its actual length
+//! rounded up to one block — the serving-side complement to the
+//! quantization memory savings.
+//!
+//! Three cache modes share one type:
+//! * **auto-grow slab** ([`KvCache::with_dtype`]): one eagerly-allocated
+//!   block of `B == cap` tokens — byte-for-byte the pre-paging slab
+//!   layout, used by the engine-level tests/benches/`generate` paths;
+//! * **auto-grow paged** ([`KvCache::paged`]): blocks self-allocated
+//!   lazily as `len` crosses a block boundary (engine-level paged runs);
+//! * **pooled** ([`KvCache::pooled`]): blocks come exclusively from the
+//!   coordinator's shared [`BlockPool`](crate::coordinator::BlockPool)
+//!   via [`KvCache::push_block`]; writing past the reserved blocks is a
+//!   validated engine error, never an allocation.
+//!
+//! Quantization happens at write time with the bundle's calibrated
+//! per-channel scales; the integer attention path reads the int8 planes
+//! directly (`engine::attention`).
 
 use crate::quant::kv::{self, KvDtype, KvLayerScales};
 
-/// Dtype-parametric K/V storage: contiguous (L, cap, d) planes either in
-/// f32 (seed layout) or statically-quantized int8 (4× smaller).
-enum KvStore {
+/// Dtype-parametric K/V plane pair of one block: (L, B, d) each.
+enum BlockStore {
     F32 { k: Vec<f32>, v: Vec<f32> },
     I8 { k: Vec<i8>, v: Vec<i8> },
 }
 
-/// Per-sequence KV cache: layout (L, cap, d) with d = H·hd. Storage is
-/// dtype-parametric ([`KvDtype`]): `F32` keeps the full-precision seed
-/// behaviour, `Int8` stores per-channel statically-quantized values (the
-/// engine quantizes at write time with the bundle's calibrated scales and
-/// attends in the integer domain — `quant::kv`).
+/// One physical KV block: `block_tokens` K/V rows for every layer.
+/// Blocks are the unit the coordinator's `BlockPool` hands out and
+/// reclaims; outside the pool they are plain owned storage, so disjoint
+/// per-sequence access needs no `unsafe`.
+pub struct KvBlock {
+    store: BlockStore,
+}
+
+impl KvBlock {
+    /// A zeroed block of `block_tokens` rows × `n_layers` layers × `d`
+    /// channels per plane.
+    pub fn new(dtype: KvDtype, n_layers: usize, block_tokens: usize,
+               d: usize) -> Self {
+        let n = n_layers * block_tokens * d;
+        let store = match dtype {
+            KvDtype::F32 => BlockStore::F32 { k: vec![0f32; n],
+                                              v: vec![0f32; n] },
+            KvDtype::Int8 => BlockStore::I8 { k: vec![0i8; n],
+                                              v: vec![0i8; n] },
+        };
+        KvBlock { store }
+    }
+
+    /// Storage element type of this block.
+    pub fn dtype(&self) -> KvDtype {
+        match self.store {
+            BlockStore::F32 { .. } => KvDtype::F32,
+            BlockStore::I8 { .. } => KvDtype::Int8,
+        }
+    }
+
+    /// Elements per plane (`n_layers · block_tokens · d`).
+    pub fn plane_elts(&self) -> usize {
+        match &self.store {
+            BlockStore::F32 { k, .. } => k.len(),
+            BlockStore::I8 { k, .. } => k.len(),
+        }
+    }
+
+    /// Resident bytes of the K/V planes (Table 3 accounting).
+    pub fn bytes(&self) -> usize {
+        match &self.store {
+            BlockStore::F32 { k, v } => (k.len() + v.len()) * 4,
+            BlockStore::I8 { k, v } => k.len() + v.len(),
+        }
+    }
+}
+
+/// How a cache obtains (and gives back) its blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum CacheMode {
+    /// Self-allocates blocks on write; never exhausts below `cap`.
+    AutoGrow,
+    /// Blocks are reserved by the coordinator's `BlockPool`; writing
+    /// past them is a validated [`EngineError::KvExhausted`]
+    /// (`crate::engine::EngineError`).
+    Pooled,
+    /// A pooled cache whose blocks were returned; giving it back again
+    /// is a double free.
+    Released,
+}
+
+/// Per-sequence KV cache: a block table over (L, B, d) K/V blocks with
+/// `d = H·hd`. Storage is dtype-parametric ([`KvDtype`]): `F32` keeps
+/// the full-precision seed behaviour, `Int8` stores per-channel
+/// statically-quantized values (the engine quantizes at write time with
+/// the bundle's calibrated scales and attends in the integer domain —
+/// `quant::kv`).
 pub struct KvCache {
-    store: KvStore,
+    blocks: Vec<KvBlock>,
+    block_tokens: usize,
+    /// Logical capacity in tokens (`max_seq` for serving caches).
     pub cap: usize,
+    /// Tokens written so far (the causal prefix length).
     pub len: usize,
+    /// Layer count L (every block carries all layers).
     pub n_layers: usize,
     d: usize,
+    dtype: KvDtype,
+    mode: CacheMode,
 }
 
 impl KvCache {
-    /// Full-precision cache (seed-compatible default).
+    /// Full-precision slab cache (seed-compatible default): one block of
+    /// `cap` tokens, eagerly allocated.
     pub fn new(n_layers: usize, cap: usize, d: usize) -> Self {
         Self::with_dtype(KvDtype::F32, n_layers, cap, d)
     }
 
-    /// Cache with an explicit storage dtype.
+    /// Slab cache with an explicit storage dtype: one eagerly-allocated
+    /// block of `cap` tokens — byte-identical to the pre-paging layout.
     pub fn with_dtype(dtype: KvDtype, n_layers: usize, cap: usize, d: usize)
                       -> Self {
-        let n = n_layers * cap * d;
-        let store = match dtype {
-            KvDtype::F32 => KvStore::F32 { k: vec![0f32; n], v: vec![0f32; n] },
-            KvDtype::Int8 => KvStore::I8 { k: vec![0i8; n], v: vec![0i8; n] },
-        };
-        KvCache { store, cap, len: 0, n_layers, d }
+        let cap = cap.max(1);
+        KvCache {
+            blocks: vec![KvBlock::new(dtype, n_layers, cap, d)],
+            block_tokens: cap,
+            cap,
+            len: 0,
+            n_layers,
+            d,
+            dtype,
+            mode: CacheMode::AutoGrow,
+        }
+    }
+
+    /// Paged auto-grow cache: no blocks yet; a fresh `block_tokens`-row
+    /// block is self-allocated whenever a write crosses a block
+    /// boundary. Bitwise-equivalent to the slab layout for every block
+    /// size (property-tested in `tests/ragged_batch.rs`).
+    pub fn paged(dtype: KvDtype, n_layers: usize, cap: usize, d: usize,
+                 block_tokens: usize) -> Self {
+        let cap = cap.max(1);
+        KvCache {
+            blocks: Vec::new(),
+            block_tokens: block_tokens.clamp(1, cap),
+            cap,
+            len: 0,
+            n_layers,
+            d,
+            dtype,
+            mode: CacheMode::AutoGrow,
+        }
+    }
+
+    /// Pooled cache: starts with zero blocks; every block must be pushed
+    /// by the owning `BlockPool` ([`KvCache::push_block`]) before the
+    /// corresponding positions are written. Writing past the reserved
+    /// blocks is a validated engine error, never an allocation.
+    pub fn pooled(dtype: KvDtype, n_layers: usize, cap: usize, d: usize,
+                  block_tokens: usize) -> Self {
+        let mut c = Self::paged(dtype, n_layers, cap, d, block_tokens);
+        c.mode = CacheMode::Pooled;
+        c
     }
 
     /// Storage element type of this cache.
     pub fn dtype(&self) -> KvDtype {
-        match self.store {
-            KvStore::F32 { .. } => KvDtype::F32,
-            KvStore::I8 { .. } => KvDtype::Int8,
+        self.dtype
+    }
+
+    /// Tokens per block (B).
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Physical blocks currently held.
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Token capacity of the blocks currently held (`n_blocks · B`) —
+    /// what a pooled cache can store without another reservation.
+    pub fn held_tokens(&self) -> usize {
+        self.blocks.len() * self.block_tokens
+    }
+
+    /// `true` when the cache self-allocates blocks on write (slab and
+    /// engine-level paged caches); `false` for pool-reserved caches.
+    pub fn auto_grow(&self) -> bool {
+        self.mode == CacheMode::AutoGrow
+    }
+
+    /// Attach one pool-owned block (coordinator `BlockPool::reserve`).
+    /// Geometry and dtype must match the cache.
+    pub fn push_block(&mut self, block: KvBlock) {
+        assert_eq!(block.dtype(), self.dtype, "block dtype mismatch");
+        assert_eq!(block.plane_elts(),
+                   self.n_layers * self.block_tokens * self.d,
+                   "block geometry mismatch");
+        self.blocks.push(block);
+    }
+
+    /// Detach every block for return to the pool (coordinator
+    /// `BlockPool::release`). Panics on a second release — the paged
+    /// analogue of the slab pool's double-free contract.
+    pub fn take_blocks(&mut self) -> Vec<KvBlock> {
+        match self.mode {
+            CacheMode::Pooled => {
+                self.mode = CacheMode::Released;
+                self.len = 0;
+                std::mem::take(&mut self.blocks)
+            }
+            CacheMode::Released => {
+                panic!("double free of KV sequence (blocks already \
+                        returned)")
+            }
+            CacheMode::AutoGrow => {
+                panic!("release of a non-pooled KV cache")
+            }
         }
     }
 
+    /// Block-plane accessors: the (B, d) slice of block `b`, layer `l`.
+    /// Attention iterates the cached prefix block-by-block through
+    /// these; row `r` of the slice is logical position `b·B + r`.
     #[inline]
     fn plane(&self, l: usize) -> std::ops::Range<usize> {
-        l * self.cap * self.d..(l + 1) * self.cap * self.d
+        l * self.block_tokens * self.d..(l + 1) * self.block_tokens * self.d
     }
 
     #[inline]
-    pub(super) fn layer_k_f32(&self, l: usize) -> &[f32] {
-        match &self.store {
-            KvStore::F32 { k, .. } => &k[self.plane(l)],
-            KvStore::I8 { .. } => unreachable!("f32 view of int8 KV cache"),
+    pub(super) fn block_k_f32(&self, b: usize, l: usize) -> &[f32] {
+        match &self.blocks[b].store {
+            BlockStore::F32 { k, .. } => &k[self.plane(l)],
+            BlockStore::I8 { .. } => unreachable!("f32 view of int8 KV"),
         }
     }
 
     #[inline]
-    pub(super) fn layer_v_f32(&self, l: usize) -> &[f32] {
-        match &self.store {
-            KvStore::F32 { v, .. } => &v[self.plane(l)],
-            KvStore::I8 { .. } => unreachable!("f32 view of int8 KV cache"),
+    pub(super) fn block_v_f32(&self, b: usize, l: usize) -> &[f32] {
+        match &self.blocks[b].store {
+            BlockStore::F32 { v, .. } => &v[self.plane(l)],
+            BlockStore::I8 { .. } => unreachable!("f32 view of int8 KV"),
         }
     }
 
     #[inline]
-    pub(super) fn layer_k_i8(&self, l: usize) -> &[i8] {
-        match &self.store {
-            KvStore::I8 { k, .. } => &k[self.plane(l)],
-            KvStore::F32 { .. } => unreachable!("int8 view of f32 KV cache"),
+    pub(super) fn block_k_i8(&self, b: usize, l: usize) -> &[i8] {
+        match &self.blocks[b].store {
+            BlockStore::I8 { k, .. } => &k[self.plane(l)],
+            BlockStore::F32 { .. } => unreachable!("int8 view of f32 KV"),
         }
     }
 
     #[inline]
-    pub(super) fn layer_v_i8(&self, l: usize) -> &[i8] {
-        match &self.store {
-            KvStore::I8 { v, .. } => &v[self.plane(l)],
-            KvStore::F32 { .. } => unreachable!("int8 view of f32 KV cache"),
+    pub(super) fn block_v_i8(&self, b: usize, l: usize) -> &[i8] {
+        match &self.blocks[b].store {
+            BlockStore::I8 { v, .. } => &v[self.plane(l)],
+            BlockStore::F32 { .. } => unreachable!("int8 view of f32 KV"),
         }
+    }
+
+    /// One cached K row (layer `l`, logical position `t`) — calibration
+    /// and debugging only; the hot paths read whole block planes.
+    pub(super) fn k_row_f32(&self, l: usize, t: usize) -> &[f32] {
+        let (b, r) = (t / self.block_tokens, t % self.block_tokens);
+        let p = self.block_k_f32(b, l);
+        &p[r * self.d..(r + 1) * self.d]
+    }
+
+    /// One cached V row (layer `l`, logical position `t`).
+    pub(super) fn v_row_f32(&self, l: usize, t: usize) -> &[f32] {
+        let (b, r) = (t / self.block_tokens, t % self.block_tokens);
+        let p = self.block_v_f32(b, l);
+        &p[r * self.d..(r + 1) * self.d]
     }
 
     /// Store one K/V row, quantizing on the way in for int8 storage.
-    /// Callers (the unified forward pass) validate capacity and scale
-    /// availability up front and return `EngineError` — by the time a
-    /// write happens it cannot fail.
+    /// Callers (the unified forward pass) validate capacity, block
+    /// reservation, and scale availability up front and return
+    /// `EngineError` — by the time a write happens it can only allocate
+    /// (auto-grow caches crossing a block boundary), never fail.
     #[inline]
     pub(super) fn write(&mut self, l: usize, pos: usize, k_row: &[f32],
                         v_row: &[f32], scales: Option<&KvLayerScales>) {
         debug_assert!(pos < self.cap,
                       "KV write past validated capacity: {pos} >= {}",
                       self.cap);
+        let bt = self.block_tokens;
+        let b = pos / bt;
+        while b >= self.blocks.len() {
+            assert!(self.auto_grow(),
+                    "KV write at position {pos} past the reserved blocks \
+                     ({} held)", self.held_tokens());
+            self.blocks
+                .push(KvBlock::new(self.dtype, self.n_layers, bt, self.d));
+        }
         let d = self.d;
-        let off = l * self.cap * d + pos * d;
-        match &mut self.store {
-            KvStore::F32 { k, v } => {
+        let off = l * bt * d + (pos % bt) * d;
+        match &mut self.blocks[b].store {
+            BlockStore::F32 { k, v } => {
                 k[off..off + d].copy_from_slice(k_row);
                 v[off..off + d].copy_from_slice(v_row);
             }
-            KvStore::I8 { k, v } => {
+            BlockStore::I8 { k, v } => {
                 let sc = scales.expect("int8 KV write validated scales");
                 kv::quantize_row_i8(k_row, &sc.k_inv, &mut k[off..off + d]);
                 kv::quantize_row_i8(v_row, &sc.v_inv, &mut v[off..off + d]);
@@ -116,17 +315,74 @@ impl KvCache {
         }
     }
 
-    /// Resident bytes of the K/V planes (Table 3 accounting): 4 bytes per
-    /// element for f32 storage, 1 for int8.
+    /// Resident bytes of the held K/V blocks (Table 3 accounting): 4
+    /// bytes per element for f32 storage, 1 for int8 — proportional to
+    /// blocks held, not to `cap`.
     pub fn bytes(&self) -> usize {
-        match &self.store {
-            KvStore::F32 { k, v } => (k.len() + v.len()) * 4,
-            KvStore::I8 { k, v } => k.len() + v.len(),
+        self.blocks.iter().map(KvBlock::bytes).sum()
+    }
+
+    /// Forget the cached prefix (held storage is retained and
+    /// overwritten).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slab_cache_is_one_block() {
+        let c = KvCache::with_dtype(KvDtype::F32, 2, 16, 8);
+        assert_eq!(c.n_blocks(), 1);
+        assert_eq!(c.block_tokens(), 16);
+        assert_eq!(c.held_tokens(), 16);
+        assert_eq!(c.bytes(), 2 * 16 * 8 * 2 * 4);
+    }
+
+    #[test]
+    fn paged_cache_grows_lazily_on_write() {
+        let mut c = KvCache::paged(KvDtype::F32, 2, 16, 8, 4);
+        assert_eq!(c.n_blocks(), 0);
+        assert_eq!(c.bytes(), 0);
+        let row = vec![1f32; 8];
+        for pos in 0..6 {
+            for l in 0..2 {
+                c.write(l, pos, &row, &row, None);
+            }
+        }
+        c.len = 6;
+        assert_eq!(c.n_blocks(), 2, "6 tokens at B=4 need 2 blocks");
+        assert_eq!(c.held_tokens(), 8);
+        // logical→physical translation round-trips the written values
+        for t in 0..6 {
+            assert_eq!(c.k_row_f32(1, t), &row[..]);
         }
     }
 
-    /// Forget the cached prefix (storage is retained and overwritten).
-    pub fn reset(&mut self) {
-        self.len = 0;
+    #[test]
+    #[should_panic(expected = "past the reserved blocks")]
+    fn pooled_cache_never_self_allocates() {
+        let mut c = KvCache::pooled(KvDtype::F32, 1, 16, 8, 4);
+        let row = vec![0f32; 8];
+        c.write(0, 0, &row, &row, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free of KV sequence")]
+    fn double_release_panics() {
+        let mut c = KvCache::pooled(KvDtype::F32, 1, 16, 8, 4);
+        c.push_block(KvBlock::new(KvDtype::F32, 1, 4, 8));
+        let _ = c.take_blocks();
+        let _ = c.take_blocks();
+    }
+
+    #[test]
+    fn int8_blocks_are_4x_smaller() {
+        let f = KvBlock::new(KvDtype::F32, 2, 16, 8);
+        let q = KvBlock::new(KvDtype::Int8, 2, 16, 8);
+        assert_eq!(f.bytes(), 4 * q.bytes());
     }
 }

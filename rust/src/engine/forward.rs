@@ -48,11 +48,22 @@ const EPS: f32 = 1e-5;
 /// failures instead of dying on a panic (DESIGN.md §6).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum EngineError {
-    /// Writing position `pos` would exceed the cache capacity `cap`.
-    /// `lane` is the index of the offending span in the [`BatchPlan`]
-    /// (for the `prefill`/`decode_batch` wrappers this coincides with
-    /// the seed meaning: 0 for prefill, the batch lane for decode).
+    /// Writing position `pos` would exceed the cache's *logical*
+    /// capacity `cap` (`max_seq` for serving caches) — a per-sequence
+    /// limit. `lane` is the index of the offending span in the
+    /// [`BatchPlan`] (for the `prefill`/`decode_batch` wrappers this
+    /// coincides with the seed meaning: 0 for prefill, the batch lane
+    /// for decode).
     KvOverflow { lane: usize, pos: usize, cap: usize },
+    /// Writing position `pos` would run past the `reserved` tokens of
+    /// block storage a pooled cache currently holds — a *pool*
+    /// condition, distinct from the per-sequence [`KvOverflow`]: the
+    /// coordinator reserves blocks from its shared `BlockPool` before
+    /// every span, so seeing this error means the span was planned
+    /// without covering its new tokens (DESIGN.md §13).
+    ///
+    /// [`KvOverflow`]: EngineError::KvOverflow
+    KvExhausted { lane: usize, pos: usize, reserved: usize },
     /// An int8 KV cache was supplied but the bundle carries no calibrated
     /// KV scales (pre-format-2 `.qmod`).
     MissingKvScales,
@@ -64,6 +75,9 @@ impl std::fmt::Display for EngineError {
             EngineError::KvOverflow { lane, pos, cap } => write!(
                 f, "KV cache overflow on lane {lane}: position {pos} >= \
                     capacity {cap}"),
+            EngineError::KvExhausted { lane, pos, reserved } => write!(
+                f, "KV blocks exhausted on lane {lane}: position {pos} \
+                    past the {reserved} reserved tokens"),
             EngineError::MissingKvScales => write!(
                 f, "int8 KV cache requested but the bundle has no \
                     calibrated KV scales"),
@@ -484,15 +498,26 @@ impl Engine {
             }
         }
         // Validate everything before touching any state (seed contract):
-        // capacity for every span first, then KV scales for every lane.
+        // capacity for every span first — the per-sequence logical cap,
+        // then the block reservation for pooled caches (auto-grow caches
+        // allocate their own blocks at write time) — then KV scales for
+        // every lane.
         let mut starts = Vec::with_capacity(spans.len());
         for (si, sp) in spans.iter().enumerate() {
             let c = &caches[sp.lane];
-            if c.len + sp.len > c.cap {
+            let end = c.len + sp.len;
+            if end > c.cap {
                 return Err(EngineError::KvOverflow {
                     lane: si,
-                    pos: c.len + sp.len - 1,
+                    pos: end - 1,
                     cap: c.cap,
+                });
+            }
+            if !c.auto_grow() && end > c.held_tokens() {
+                return Err(EngineError::KvExhausted {
+                    lane: si,
+                    pos: end - 1,
+                    reserved: c.held_tokens(),
                 });
             }
             starts.push(c.len);

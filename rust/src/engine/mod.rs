@@ -6,8 +6,10 @@
 //! Module layout (DESIGN.md §12):
 //! * [`forward`] — [`BatchPlan`] + [`Engine::forward_batch`]: the single
 //!   per-layer pipeline every span (prefill chunk or decode lane) rides.
-//! * `attention` — f32/int8-KV attention and the ragged per-span fan-out.
-//! * [`cache`] — dtype-parametric [`KvCache`] storage.
+//! * `attention` — f32/int8-KV attention (block-by-block over the paged
+//!   prefix) and the ragged per-span fan-out.
+//! * [`cache`] — dtype-parametric paged [`KvCache`] storage: block
+//!   tables over [`KvBlock`]s (DESIGN.md §13).
 //! * [`sampler`] — the seeded [`Sampler`], the single token-selection
 //!   entry point (greedy = `Sampler::greedy()`).
 //! * [`model`] — [`Engine`] construction/calibration and the thin
@@ -24,7 +26,7 @@ pub mod qmod;
 pub mod sampler;
 
 pub use crate::quant::kv::{KvDtype, KvLayerScales};
-pub use cache::KvCache;
+pub use cache::{KvBlock, KvCache};
 pub use forward::{BatchPlan, EngineError, Span, SpanLogits, Workspace};
 pub use model::Engine;
 pub use qmod::{Linear, ModelConfig, Norm, QModel, QuantMode, QWeight};

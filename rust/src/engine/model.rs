@@ -106,11 +106,11 @@ impl Engine {
 
     /// Greedy generation helper (examples / integration tests), f32 KV.
     /// Sizes its own cache, so the only failure mode is a prompt longer
-    /// than `max_seq` — kept panicking for call-site brevity.
+    /// than `max_seq` — surfaced as the typed
+    /// [`EngineError::KvOverflow`], never a panic.
     pub fn generate(&self, prompt: &[u32], max_new: usize, max_seq: usize)
-                    -> Vec<u32> {
+                    -> Result<Vec<u32>, EngineError> {
         self.generate_with(prompt, max_new, max_seq, KvDtype::F32)
-            .expect("generate: prompt exceeds max_seq")
     }
 
     /// Greedy generation over an explicit KV-cache dtype.
@@ -199,14 +199,22 @@ impl Engine {
         let t = cache.len;
         let mut out = Vec::with_capacity(cfg.n_layers);
         for l in 0..cfg.n_layers {
-            let (kc, vc) = (cache.layer_k_f32(l), cache.layer_v_f32(l));
-            let absmax = |plane: &[f32], c: usize| {
-                (0..t).fold(1e-6f32, |a, r| a.max(plane[r * d + c].abs()))
+            // Per-channel absmax over the cached rows, read through the
+            // paged logical→physical translation (the probe cache is a
+            // single slab block, but the row accessor works for any
+            // block size).
+            let k_absmax = |c: usize| {
+                (0..t).fold(1e-6f32,
+                            |a, r| a.max(cache.k_row_f32(l, r)[c].abs()))
             };
-            let kabs: Vec<f32> = (0..d).map(|c| absmax(kc, c)).collect();
+            let v_absmax = |c: usize| {
+                (0..t).fold(1e-6f32,
+                            |a, r| a.max(cache.v_row_f32(l, r)[c].abs()))
+            };
+            let kabs: Vec<f32> = (0..d).map(k_absmax).collect();
             let k_scale: Vec<f32> = kabs.iter().map(|a| a / qmax).collect();
             let v_scale: Vec<f32> =
-                (0..d).map(|c| absmax(vc, c) / qmax).collect();
+                (0..d).map(|c| v_absmax(c) / qmax).collect();
             let qk_scale: Vec<f32> = (0..h)
                 .map(|hh| {
                     (0..hd).fold(1e-12f32, |a, i| {

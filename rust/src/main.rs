@@ -48,7 +48,8 @@ fn run() -> Result<()> {
                 "mergequant — 4-bit static quantization serving stack\n\
                  usage: mergequant <serve|eval|generate|inspect|runtime> \
                  [--model NAME] [--method NAME] [--threads N] \
-                 [--kv-cache f32|int8] [--temperature T --top-k K \
+                 [--kv-cache f32|int8] [--kv-block TOKENS] \
+                 [--kv-blocks N] [--temperature T --top-k K \
                  --top-p P --seed S --stop T1,T2] …\n\
                  (got {other:?})"
             );
@@ -74,11 +75,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.scheduler.max_seq = args.get_usize("max-seq", cfg.scheduler.max_seq);
     cfg.scheduler.kv_slabs =
         args.get_usize("kv-slabs", cfg.scheduler.kv_slabs.max(cfg.scheduler.max_batch));
+    // Paged KV (DESIGN.md §13): --kv-block sets the paging granularity
+    // in tokens (0 = one block per max_seq sequence, the old slab
+    // behaviour); --kv-blocks sets the arena size directly (0 = derive
+    // from --kv-slabs at equal bytes — the back-compat path).
+    cfg.scheduler.kv_block =
+        args.get_usize("kv-block", cfg.scheduler.kv_block);
+    cfg.scheduler.kv_blocks =
+        args.get_usize("kv-blocks", cfg.scheduler.kv_blocks);
     // Intra-op kernel threads (0 = all cores); the scheduler applies it.
     cfg.scheduler.threads =
         args.get_usize("threads", cfg.scheduler.threads);
-    // KV-cache storage dtype (f32 | int8); the scheduler sizes its slabs
-    // with it (int8 = 4× more servable KV per box, DESIGN.md §10).
+    // KV-cache storage dtype (f32 | int8); the scheduler sizes its KV
+    // blocks with it (int8 = 4× more servable KV per box, DESIGN.md §10).
     if let Some(kv) = args.get("kv-cache") {
         cfg.scheduler.kv_dtype = mergequant::engine::KvDtype::parse(kv)
             .with_context(|| format!("bad --kv-cache {kv:?} (f32|int8)"))?;
@@ -86,12 +95,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let engine = load_engine(&cfg.model, &cfg.method)?;
     println!("serving {} / {} (params ~{:.1} MB quantized, {} kernel \
-              thread(s), kv {})",
+              thread(s), kv {}, arena {} blocks × {} tokens)",
              cfg.model, cfg.method,
              engine.model.weight_bytes() as f64 / 1e6,
              mergequant::quant::parallel::ThreadPool::resolve(
                  cfg.scheduler.threads),
-             cfg.scheduler.kv_dtype.as_str());
+             cfg.scheduler.kv_dtype.as_str(),
+             cfg.scheduler.total_blocks(),
+             cfg.scheduler.block_tokens());
     let server = std::sync::Arc::new(Server::start(engine, cfg.scheduler.clone()));
     let gateway = TcpGateway::start(server.clone(), cfg.port)?;
     println!("listening on {}", gateway.addr);

@@ -108,7 +108,7 @@ fn greedy_decode_matches_golden() {
         .iter().map(|v| v.as_usize().unwrap() as u32).collect();
     let engine = load_engine("fp16");
     let got = engine.generate(&prompt, want.len(),
-                              prompt.len() + want.len() + 4);
+                              prompt.len() + want.len() + 4).unwrap();
     assert_eq!(got, want, "greedy decode must be token-exact");
 }
 

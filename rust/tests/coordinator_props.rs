@@ -1,12 +1,14 @@
 //! Property tests on coordinator invariants (homegrown proptest harness):
-//! every request answered exactly once, batch caps respected, KV slabs
-//! never leaked, FIFO admission, backpressure correctness.
+//! every request answered exactly once, batch caps respected, KV blocks
+//! never leaked (block-granular paged allocation, DESIGN.md §13), FIFO
+//! admission, backpressure correctness.
 
 use std::collections::HashSet;
 
 use mergequant::bench::synthetic_model;
 use mergequant::coordinator::{
-    FinishReason, GenerationParams, Request, Scheduler, SchedulerConfig,
+    BlockPool, FinishReason, GenerationParams, Request, Scheduler,
+    SchedulerConfig,
 };
 use mergequant::engine::{Engine, KvDtype};
 use mergequant::util::proptest::check;
@@ -19,6 +21,8 @@ fn make_scheduler(max_batch: usize, slabs: usize) -> Scheduler {
         SchedulerConfig {
             max_batch,
             kv_slabs: slabs,
+            kv_block: 16,
+            kv_blocks: 0,
             max_seq: 48,
             max_prefills_per_iter: 2,
             queue_cap: 64,
@@ -100,6 +104,8 @@ fn fifo_first_token_order() {
         SchedulerConfig {
             max_batch: 2,
             kv_slabs: 2,
+            kv_block: 16,
+            kv_blocks: 0,
             max_seq: 48,
             max_prefills_per_iter: 1,
             queue_cap: 64,
@@ -159,7 +165,7 @@ fn kv_overflow_is_per_request_failure_not_worker_death() {
         assert!(r.error.is_none());
     }
     assert_eq!(sched.metrics.failed, 1);
-    // The slab freed by the failure is reusable: serve another request.
+    // The blocks freed by the failure are reusable: serve another request.
     sched.submit(Request::new(4, vec![8, 9], 2)).unwrap();
     let more = sched.run_to_completion();
     assert_eq!(more.len(), 1);
@@ -168,15 +174,17 @@ fn kv_overflow_is_per_request_failure_not_worker_death() {
 
 #[test]
 fn kv_overflow_mid_chunked_prefill_fails_cleanly() {
-    // An oversized prompt routed through *chunked* prefill overflows
-    // mid-flight (after several successful chunks) — the slab must come
-    // back and later requests must still be served.
+    // An oversized prompt routed through *chunked* prefill is oversized
+    // for max_seq — it must fail with the typed overflow error, its
+    // blocks must come back, and later requests must still be served.
     let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
     let mut sched = Scheduler::new(
         engine,
         SchedulerConfig {
             max_batch: 2,
             kv_slabs: 2,
+            kv_block: 16,
+            kv_blocks: 0,
             max_seq: 32,
             max_prefills_per_iter: 1,
             queue_cap: 64,
@@ -200,7 +208,7 @@ fn kv_overflow_mid_chunked_prefill_fails_cleanly() {
 
 #[test]
 fn int8_kv_scheduler_serves_full_workload() {
-    // The whole coordinator path on statically-quantized int8 KV slabs:
+    // The whole coordinator path on statically-quantized int8 KV blocks:
     // same invariants (answered exactly once, token budgets respected).
     check(404, 8, gen_workload, |workload| {
         let engine =
@@ -210,6 +218,8 @@ fn int8_kv_scheduler_serves_full_workload() {
             SchedulerConfig {
                 max_batch: 4,
                 kv_slabs: 4,
+                kv_block: 16,
+                kv_blocks: 0,
                 max_seq: 48,
                 max_prefills_per_iter: 2,
                 queue_cap: 64,
@@ -251,6 +261,8 @@ fn backpressure_queue_cap() {
         SchedulerConfig {
             max_batch: 1,
             kv_slabs: 1,
+            kv_block: 16,
+            kv_blocks: 0,
             max_seq: 32,
             max_prefills_per_iter: 1,
             queue_cap: 2,
@@ -312,10 +324,10 @@ fn multiple_stop_tokens_any_terminates() {
 }
 
 #[test]
-fn cancellation_answers_once_and_returns_slabs() {
+fn cancellation_answers_once_and_returns_blocks() {
     // Cancel a mix of pending and active requests mid-run: every request
     // still gets exactly one terminal response, cancelled ones finish
-    // with `Cancelled`, and every KV slab comes back to the pool.
+    // with `Cancelled`, and every KV block comes back to the pool.
     let mut sched = make_scheduler(2, 2);
     for i in 0..6u64 {
         let prompt: Vec<u32> = (0..8).map(|t| 3 + t % 90).collect();
@@ -345,7 +357,7 @@ fn cancellation_answers_once_and_returns_slabs() {
     }
     assert_eq!(sched.metrics.cancelled, 2);
     assert_eq!(sched.kv_available(), sched.kv_capacity(),
-               "cancellation leaked a KV slab");
+               "cancellation leaked KV blocks");
     // The freed capacity is immediately reusable.
     sched.submit(Request::new(50, vec![5, 6], 3)).unwrap();
     let more = sched.run_to_completion();
@@ -354,11 +366,11 @@ fn cancellation_answers_once_and_returns_slabs() {
 }
 
 #[test]
-fn prompt_filling_slab_finishes_cache_full_not_error() {
-    // A prompt of exactly max_seq tokens fills its slab during prefill:
-    // the first token is still sampled, then the sequence must end
-    // gracefully with `CacheFull` — not trip a KvOverflow error on the
-    // next decode iteration.
+fn prompt_filling_cache_finishes_cache_full_not_error() {
+    // A prompt of exactly max_seq tokens fills its logical capacity
+    // during prefill: the first token is still sampled, then the
+    // sequence must end gracefully with `CacheFull` — not trip a
+    // KvOverflow error on the next decode iteration.
     let mut sched = make_scheduler(2, 2); // max_seq 48
     let prompt: Vec<u32> = (0..48).map(|t| 3 + t % 90).collect();
     sched.submit(Request::new(1, prompt, 4)).unwrap();
@@ -371,13 +383,15 @@ fn prompt_filling_slab_finishes_cache_full_not_error() {
 }
 
 #[test]
-fn cancel_mid_chunked_prefill_frees_slab() {
+fn cancel_mid_chunked_prefill_frees_blocks() {
     let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
     let mut sched = Scheduler::new(
         engine,
         SchedulerConfig {
             max_batch: 1,
             kv_slabs: 1,
+            kv_block: 16,
+            kv_blocks: 0,
             max_seq: 64,
             max_prefills_per_iter: 1,
             queue_cap: 64,
@@ -388,13 +402,14 @@ fn cancel_mid_chunked_prefill_frees_slab() {
     );
     let long: Vec<u32> = (0..40).map(|t| 3 + t % 90).collect();
     sched.submit(Request::new(1, long, 4)).unwrap();
-    sched.step(); // first chunk in flight — request holds the only slab
+    sched.step(); // first chunk in flight — request holds reserved blocks
     sched.cancel(1);
     let responses = sched.run_to_completion();
     assert_eq!(responses.len(), 1);
     assert_eq!(responses[0].finish, FinishReason::Cancelled);
     assert!(responses[0].tokens.is_empty());
-    assert_eq!(sched.kv_available(), 1, "prefilling slab not returned");
+    assert_eq!(sched.kv_available(), sched.kv_capacity(),
+               "prefilling blocks not returned");
     // Pool is usable again.
     sched.submit(Request::new(2, vec![3, 4, 5], 2)).unwrap();
     assert_eq!(sched.run_to_completion()[0].tokens.len(), 2);
@@ -470,6 +485,8 @@ fn multiple_chunked_prefills_ride_concurrently() {
             SchedulerConfig {
                 max_batch: 4,
                 kv_slabs: 4,
+                kv_block: 16,
+                kv_blocks: 0,
                 max_seq: 96,
                 max_prefills_per_iter: 2,
                 queue_cap: 64,
@@ -544,6 +561,8 @@ fn chunked_prefill_same_results_and_bounded_stall() {
             SchedulerConfig {
                 max_batch: 2,
                 kv_slabs: 2,
+                kv_block: 16,
+                kv_blocks: 0,
                 max_seq: 96,
                 max_prefills_per_iter: 1,
                 queue_cap: 64,
@@ -571,4 +590,283 @@ fn chunked_prefill_same_results_and_bounded_stall() {
     assert_eq!(outs[0], outs[1], "chunking changed generated tokens");
     assert!(prefill_calls[1] > prefill_calls[0],
             "chunked mode must split prefills ({:?})", prefill_calls);
+}
+
+// ---------------------------------------------------------------------
+// Paged KV: block-allocator properties + scheduler-level equivalence
+// (DESIGN.md §13)
+// ---------------------------------------------------------------------
+
+/// Churn script: per step either reserve a random sequence up to a new
+/// token total, admit a new sequence, or release one.
+fn gen_churn(r: &mut Rng) -> Vec<(usize, usize)> {
+    let n = r.usize(4, 40);
+    (0..n).map(|_| (r.usize(0, 3), r.usize(1, 40))).collect()
+}
+
+#[test]
+fn block_pool_churn_never_leaks_and_accounts_exactly() {
+    check(909, 24, gen_churn, |script| {
+        let block_tokens = 8;
+        let total = 6;
+        let max_seq = 40;
+        let mut pool = BlockPool::new(total, block_tokens, 2, max_seq, 16);
+        let mut live: Vec<(mergequant::engine::KvCache, usize)> = Vec::new();
+        for &(op, arg) in script {
+            match op {
+                0 => {
+                    // admit a new sequence
+                    live.push((pool.new_sequence(), 0));
+                }
+                1 if !live.is_empty() => {
+                    // grow a sequence to `arg` tokens (≤ max_seq)
+                    let i = arg % live.len();
+                    let want = (arg % max_seq).max(1);
+                    let before = pool.free_blocks();
+                    let need = want.div_ceil(block_tokens)
+                        .saturating_sub(live[i].0.n_blocks());
+                    match pool.reserve(&mut live[i].0, want) {
+                        Ok(()) => {
+                            if need > before {
+                                return Err("reserve succeeded past the \
+                                            free list".into());
+                            }
+                            if pool.free_blocks() != before - need {
+                                return Err("reserve took a wrong block \
+                                            count".into());
+                            }
+                            live[i].1 = live[i].1.max(want);
+                        }
+                        Err(_) => {
+                            if need <= before {
+                                return Err("reserve failed with blocks \
+                                            free".into());
+                            }
+                            if pool.free_blocks() != before {
+                                return Err("failed reserve must hand out \
+                                            nothing".into());
+                            }
+                        }
+                    }
+                }
+                _ if !live.is_empty() => {
+                    let i = arg % live.len();
+                    let (mut c, _) = live.swap_remove(i);
+                    pool.release(&mut c);
+                }
+                _ => {}
+            }
+            // Global invariants after every op.
+            let held: usize =
+                live.iter().map(|(c, _)| c.n_blocks()).sum();
+            if held + pool.free_blocks() != pool.total_blocks() {
+                return Err(format!(
+                    "block leak: {held} held + {} free != {} total",
+                    pool.free_blocks(), pool.total_blocks()));
+            }
+            if pool.blocks_alloc() - pool.blocks_freed()
+                != pool.allocated_blocks() as u64
+            {
+                return Err("alloc/free counters drifted from the \
+                            allocation".into());
+            }
+            if pool.allocated_tokens()
+                != pool.allocated_blocks() * pool.block_tokens()
+            {
+                return Err("token accounting inexact".into());
+            }
+        }
+        for (mut c, _) in live {
+            pool.release(&mut c);
+        }
+        if pool.free_blocks() != pool.total_blocks() {
+            return Err("churn leaked blocks".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn paged_scheduler_streams_match_slab_scheduler() {
+    // The tentpole determinism claim at the serving level: the same
+    // workload through a paged arena (any block size) produces exactly
+    // the token streams of the slab-equivalent configuration (kv_block
+    // 0 ⇒ one block per sequence), for both KV dtypes.
+    let run = |kv_block: usize, kv: KvDtype| -> Vec<Vec<u32>> {
+        let engine =
+            Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+        let mut sched = Scheduler::new(
+            engine,
+            SchedulerConfig {
+                max_batch: 3,
+                kv_slabs: 3,
+                kv_block,
+                kv_blocks: 0,
+                max_seq: 48,
+                max_prefills_per_iter: 2,
+                queue_cap: 64,
+                prefill_chunk: 5,
+                threads: 1,
+                kv_dtype: kv,
+            },
+        );
+        for i in 0..5u64 {
+            let prompt: Vec<u32> =
+                (0..9 + i).map(|t| 3 + (t as u32 * 7 + i as u32) % 90)
+                    .collect();
+            sched.submit(Request::new(i, prompt, 8)).unwrap();
+        }
+        let mut rs = sched.run_to_completion();
+        rs.sort_by_key(|r| r.id);
+        assert_eq!(sched.kv_available(), sched.kv_capacity(),
+                   "paged run leaked blocks (kv_block {kv_block})");
+        rs.into_iter()
+            .inspect(|r| assert!(r.error.is_none(), "{:?}", r.error))
+            .map(|r| r.tokens)
+            .collect()
+    };
+    for kv in [KvDtype::F32, KvDtype::Int8] {
+        let slab = run(0, kv);
+        for kv_block in [16usize, 48] {
+            assert_eq!(run(kv_block, kv), slab,
+                       "kv_block {kv_block} changed token streams \
+                        (kv {kv:?})");
+        }
+    }
+}
+
+#[test]
+fn decode_lanes_finish_cache_full_fifo_under_block_pressure() {
+    // Tight arena: 5 blocks × 8 tokens (40), max_seq 32. Two lanes grow
+    // until the pool runs dry; the later lane (higher lane index) must
+    // be the one cut off with CacheFull — deterministically — while the
+    // earlier lane keeps generating, and nothing errors or leaks.
+    let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+    let mut sched = Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 2,
+            kv_slabs: 0,
+            kv_block: 8,
+            kv_blocks: 5,
+            max_seq: 32,
+            max_prefills_per_iter: 2,
+            queue_cap: 16,
+            prefill_chunk: 0,
+            threads: 1,
+            kv_dtype: KvDtype::F32,
+        },
+    );
+    let prompt: Vec<u32> = (0..8).map(|t| 3 + t % 90).collect();
+    sched.submit(Request::new(1, prompt.clone(), 30)).unwrap();
+    sched.submit(Request::new(2, prompt, 30)).unwrap();
+    let mut rs = sched.run_to_completion();
+    rs.sort_by_key(|r| r.id);
+    assert_eq!(rs.len(), 2);
+    for r in &rs {
+        assert!(r.error.is_none(), "block pressure must not error: {:?}",
+                r.error);
+    }
+    assert_eq!(rs[1].finish, FinishReason::CacheFull,
+               "the higher lane index must be cut first");
+    assert!(rs[1].tokens.len() < rs[0].tokens.len(),
+            "FIFO priority: lane 0 ({} toks) must outlive lane 1 ({})",
+            rs[0].tokens.len(), rs[1].tokens.len());
+    assert_eq!(sched.metrics.failed, 0);
+    assert_eq!(sched.kv_available(), sched.kv_capacity(),
+               "pressure run leaked blocks");
+}
+
+#[test]
+fn stalled_prefills_requeue_newest_deterministically() {
+    // Both prompts fit max_seq but the arena (4 blocks × 8 = 32 tokens)
+    // cannot hold both at once mid-chunked-prefill. The scheduler must
+    // not livelock AND must not fail anyone: the NEWEST prefilling
+    // sequence releases its blocks and goes back to the head of the
+    // pending queue (transient backpressure, not an error), both
+    // requests eventually complete, and every block comes back.
+    let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+    let mut sched = Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 4,
+            kv_slabs: 0,
+            kv_block: 8,
+            kv_blocks: 4,
+            max_seq: 32,
+            max_prefills_per_iter: 2,
+            queue_cap: 16,
+            prefill_chunk: 8,
+            threads: 1,
+            kv_dtype: KvDtype::F32,
+        },
+    );
+    let prompt: Vec<u32> = (0..24).map(|t| 3 + t % 90).collect();
+    sched.submit(Request::new(1, prompt.clone(), 2)).unwrap();
+    sched.submit(Request::new(2, prompt, 2)).unwrap();
+    let mut rs = sched.run_to_completion();
+    rs.sort_by_key(|r| r.id);
+    assert_eq!(rs.len(), 2, "every request answered exactly once");
+    for r in &rs {
+        assert!(r.error.is_none(),
+                "pool pressure must never fail a request: {:?}", r.error);
+        assert!(!r.tokens.is_empty(), "request {} starved", r.id);
+    }
+    // The requeued request is served after re-admission; nothing is
+    // counted as failed, and the stall is visible in kv_requeues.
+    assert_eq!(rs[1].tokens.len(), 2);
+    assert_eq!(rs[1].finish, FinishReason::Length);
+    assert_eq!(sched.metrics.failed, 0);
+    assert!(sched.metrics.kv_requeues >= 1,
+            "stall resolution must be observable");
+    assert_eq!(sched.kv_available(), sched.kv_capacity(),
+               "requeue leaked blocks");
+}
+
+#[test]
+fn paged_admission_outpacks_slab_admission_at_equal_bytes() {
+    // The capacity thesis (DESIGN.md §13): at equal arena bytes, short
+    // sequences admit proportionally to their actual token usage, not
+    // to max_seq reservations. Arena = 4 × 64 tokens either way; 16
+    // short requests (5-token prompt + 3 decode) peak at 4 concurrent
+    // under slab reservations vs 16 under paging.
+    let peak = |kv_block: usize| -> (usize, f64) {
+        let engine =
+            Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+        let mut sched = Scheduler::new(
+            engine,
+            SchedulerConfig {
+                max_batch: 32,
+                kv_slabs: 4,
+                kv_block,
+                kv_blocks: 0,
+                max_seq: 64,
+                max_prefills_per_iter: 16,
+                queue_cap: 64,
+                prefill_chunk: 0,
+                threads: 1,
+                kv_dtype: KvDtype::F32,
+            },
+        );
+        for i in 0..16u64 {
+            let prompt: Vec<u32> = (0..5).map(|t| 3 + t % 90).collect();
+            sched.submit(Request::new(i, prompt, 3)).unwrap();
+        }
+        let mut peak = 0usize;
+        while sched.has_work() {
+            sched.step();
+            peak = peak.max(sched.active_len() + sched.prefilling_len());
+        }
+        (peak, sched.metrics.kv_util_mean())
+    };
+    let (slab_peak, slab_util) = peak(0);
+    let (paged_peak, paged_util) = peak(8);
+    assert!(slab_peak <= 4, "slab reservations cap concurrency at 4, \
+                             got {slab_peak}");
+    assert!(paged_peak >= 4 * slab_peak,
+            "paged admission must pack ≥4× more short sequences \
+             (slab {slab_peak}, paged {paged_peak})");
+    assert!(paged_util > slab_util,
+            "paged utilization ({paged_util:.2}) must beat slab \
+             ({slab_util:.2})");
 }

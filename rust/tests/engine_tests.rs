@@ -112,8 +112,8 @@ fn causality_future_token_does_not_change_past() {
 fn generate_is_deterministic_and_bounded() {
     let engine = Engine::new(synthetic_model("mergequant", 64, 128, 2, 96));
     let prompt: Vec<u32> = vec![5, 9, 13];
-    let a = engine.generate(&prompt, 16, 64);
-    let b = engine.generate(&prompt, 16, 64);
+    let a = engine.generate(&prompt, 16, 64).unwrap();
+    let b = engine.generate(&prompt, 16, 64).unwrap();
     assert_eq!(a, b);
     assert_eq!(a.len(), 16);
     assert!(a.iter().all(|&t| (t as usize) < 96));
@@ -126,7 +126,7 @@ fn seeded_greedy_sampler_matches_generate_goldens() {
     // for every quantization method.
     for (name, engine) in engines() {
         let prompt: Vec<u32> = vec![5, 9, 13];
-        let golden = engine.generate(&prompt, 16, 64);
+        let golden = engine.generate(&prompt, 16, 64).unwrap();
         let seeded = engine
             .generate_seeded(&prompt, 16, 64, KvDtype::F32,
                              &Sampler::greedy())

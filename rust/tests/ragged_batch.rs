@@ -38,6 +38,23 @@ fn kv_dtypes() -> Vec<KvDtype> {
     }
 }
 
+/// Paged block sizes for the paged≡slab sweeps: small (many blocks per
+/// sequence), medium, and 0 ⇒ the slab layout itself (one block of
+/// `cap`). `MQ_TEST_KV_BLOCK` feeds an extra size in from the CI
+/// matrix.
+fn kv_block_sizes() -> Vec<usize> {
+    let mut sizes = vec![16, 64, 0];
+    if let Some(extra) = std::env::var("MQ_TEST_KV_BLOCK")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        if !sizes.contains(&extra) {
+            sizes.push(extra);
+        }
+    }
+    sizes
+}
+
 fn bits(xs: &[f32]) -> Vec<u32> {
     xs.iter().map(|v| v.to_bits()).collect()
 }
@@ -125,11 +142,26 @@ fn make_caches(engine: &Engine, sc: &Scenario, kv: KvDtype) -> Vec<KvCache> {
         .collect()
 }
 
-/// Replay the trace with one ragged `forward_batch` per tick; returns
-/// the emitted logits bits (span order) plus final cache lengths.
-fn run_unified(engine: &Engine, sc: &Scenario, kv: KvDtype)
+/// Paged variant of [`make_caches`]: block tables of `block_tokens`-row
+/// blocks grown lazily (0 ⇒ slab: one block of the whole capacity).
+fn make_paged_caches(engine: &Engine, sc: &Scenario, kv: KvDtype,
+                     block_tokens: usize) -> Vec<KvCache> {
+    let cfg = engine.config();
+    sc.prompts
+        .iter()
+        .map(|p| {
+            let cap = p.len() + 8;
+            let bt = if block_tokens == 0 { cap } else { block_tokens };
+            KvCache::paged(kv, cfg.n_layers, cap, cfg.d_model, bt)
+        })
+        .collect()
+}
+
+/// Replay the trace with one ragged `forward_batch` per tick over the
+/// given caches (slab or paged); returns the emitted logits bits (span
+/// order) plus final cache lengths.
+fn run_unified(engine: &Engine, sc: &Scenario, mut caches: Vec<KvCache>)
                -> (Vec<u32>, Vec<usize>) {
-    let mut caches = make_caches(engine, sc, kv);
     let mut consumed = vec![0usize; sc.prompts.len()];
     let mut ws = Workspace::new();
     let mut out = Vec::new();
@@ -230,7 +262,8 @@ fn ragged_forward_bitwise_equals_sequential_replay() {
         for &threads in &thread_counts() {
             let engine = test_engine(threads);
             check(7919 + threads as u64, 5, gen_scenario, |sc| {
-                let (ub, ulen) = run_unified(&engine, sc, kv);
+                let (ub, ulen) =
+                    run_unified(&engine, sc, make_caches(&engine, sc, kv));
                 let (sb, slen) = run_sequential(&engine, sc, kv);
                 if ulen != slen {
                     return Err(format!(
@@ -246,6 +279,60 @@ fn ragged_forward_bitwise_equals_sequential_replay() {
             });
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Property: paged KV ≡ slab KV, bitwise, on scripted serving traces
+// (DESIGN.md §13) — across {threads}×{kv dtype}×{kv_block}.
+// ---------------------------------------------------------------------
+
+#[test]
+fn paged_kv_bitwise_equals_slab_kv() {
+    for kv in kv_dtypes() {
+        for &threads in &thread_counts() {
+            let engine = test_engine(threads);
+            check(6271 + threads as u64, 5, gen_scenario, |sc| {
+                let (slab_bits, slab_len) =
+                    run_unified(&engine, sc, make_caches(&engine, sc, kv));
+                for bt in kv_block_sizes() {
+                    let (pb, pl) = run_unified(
+                        &engine, sc,
+                        make_paged_caches(&engine, sc, kv, bt));
+                    if pl != slab_len {
+                        return Err(format!(
+                            "cache lengths diverged: {pl:?} vs \
+                             {slab_len:?} (kv {kv:?}, threads {threads}, \
+                             kv_block {bt})"));
+                    }
+                    if pb != slab_bits {
+                        return Err(format!(
+                            "paged logits bits diverged from slab \
+                             (kv {kv:?}, threads {threads}, \
+                             kv_block {bt})"));
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+}
+
+#[test]
+fn paged_cache_reports_block_proportional_bytes() {
+    // The capacity story in bytes: a short sequence in a paged cache
+    // holds only ⌈len/B⌉ blocks, not a full max_seq slab.
+    let engine = test_engine(1);
+    let cfg = engine.config().clone();
+    let mut ws = Workspace::new();
+    let mut slab = KvCache::new(cfg.n_layers, 512, cfg.d_model);
+    let mut paged =
+        KvCache::paged(KvDtype::F32, cfg.n_layers, 512, cfg.d_model, 16);
+    engine.prefill(&[3, 4, 5, 6, 7], &mut slab, &mut ws).unwrap();
+    engine.prefill(&[3, 4, 5, 6, 7], &mut paged, &mut ws).unwrap();
+    assert_eq!(paged.n_blocks(), 1, "5 tokens fit one 16-token block");
+    assert_eq!(slab.bytes() / paged.bytes(), 512 / 16,
+               "slab reserves the whole capacity, paged only the blocks \
+                in use");
 }
 
 // ---------------------------------------------------------------------
@@ -366,5 +453,43 @@ fn empty_plan_is_a_noop() {
     let mut refs = [&mut c];
     engine.forward_batch(&plan, &mut refs, &mut ws).unwrap();
     assert_eq!(c.len, 0);
+    assert!(ws.logits.is_empty());
+}
+
+#[test]
+#[should_panic(expected = "duplicate lane")]
+fn duplicate_lane_in_plan_panics() {
+    // The paged analogue of the slab pool's duplicate-id contract: two
+    // spans appending to the same cache in one call is a plan-
+    // construction bug and must panic, not corrupt the cache.
+    let engine = test_engine(1);
+    let cfg = engine.config().clone();
+    let mut ws = Workspace::new();
+    let mut c = KvCache::new(cfg.n_layers, 16, cfg.d_model);
+    let mut plan = BatchPlan::new();
+    plan.push_span(0, &[3], SpanLogits::Last);
+    plan.push_span(0, &[4], SpanLogits::Last);
+    let mut refs = [&mut c];
+    let _ = engine.forward_batch(&plan, &mut refs, &mut ws);
+}
+
+#[test]
+fn pooled_cache_without_blocks_is_kv_exhausted_not_overflow() {
+    // The §13 error split: a pooled cache under its logical cap but
+    // past its reserved blocks fails with the typed KvExhausted (a pool
+    // condition), while exceeding `cap` stays KvOverflow (a per-
+    // sequence condition) — and validation precedes any state mutation.
+    let engine = test_engine(1);
+    let cfg = engine.config().clone();
+    let mut ws = Workspace::new();
+    let mut pooled =
+        KvCache::pooled(KvDtype::F32, cfg.n_layers, 16, cfg.d_model, 4);
+    let mut plan = BatchPlan::new();
+    plan.push_span(0, &[3, 4, 5], SpanLogits::Last);
+    let mut refs = [&mut pooled];
+    let err = engine.forward_batch(&plan, &mut refs, &mut ws).unwrap_err();
+    assert_eq!(err,
+               EngineError::KvExhausted { lane: 0, pos: 2, reserved: 0 });
+    assert_eq!(pooled.len, 0, "validation must precede state mutation");
     assert!(ws.logits.is_empty());
 }

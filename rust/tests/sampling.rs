@@ -196,6 +196,8 @@ fn run_workload(threads: usize, kv: KvDtype, prefill_chunk: usize)
         SchedulerConfig {
             max_batch: 3,
             kv_slabs: 3,
+            kv_block: 16,
+            kv_blocks: 0,
             max_seq: 48,
             max_prefills_per_iter: 2,
             queue_cap: 16,
@@ -252,6 +254,8 @@ fn scheduler_greedy_lane_unaffected_by_sampled_neighbours() {
         SchedulerConfig {
             max_batch: 3,
             kv_slabs: 3,
+            kv_block: 16,
+            kv_blocks: 0,
             max_seq: 48,
             max_prefills_per_iter: 2,
             queue_cap: 16,

@@ -1,6 +1,6 @@
 //! Server + TCP gateway integration tests (synthetic model, in-process):
 //! the generation API v2 contract — streamed events, typed admission
-//! errors, cancellation returning KV slabs, v1/v2 NDJSON framing,
+//! errors, cancellation returning KV blocks, v1/v2 NDJSON framing,
 //! malformed/unknown-field protocol errors, mid-stream disconnects.
 
 use std::io::{BufRead, BufReader, Write};
@@ -24,6 +24,8 @@ fn server_with(max_batch: usize, kv_slabs: usize, max_seq: usize,
         SchedulerConfig {
             max_batch,
             kv_slabs,
+            kv_block: 16,
+            kv_blocks: 0,
             max_seq,
             max_prefills_per_iter: 2,
             queue_cap,
@@ -74,7 +76,7 @@ fn greedy_generate_matches_engine_generate() {
     // engine output token for token.
     let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
     let prompt = vec![3u32, 9, 12, 40];
-    let golden = engine.generate(&prompt, 8, 64);
+    let golden = engine.generate(&prompt, 8, 64).unwrap();
     let server = test_server();
     let resp = server
         .generate(prompt, GenerationParams::greedy(8))
