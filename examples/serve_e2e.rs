@@ -63,7 +63,10 @@ fn api_demo(threads: usize) -> anyhow::Result<()> {
 
     // Two batch slots for three requests: the third admission *requires*
     // the cancellation below to free a slot (its KV blocks come back to
-    // the paged arena on the same iteration — DESIGN.md §13).
+    // the paged arena on the same iteration — DESIGN.md §13). The radix
+    // prefix cache rides along (DESIGN.md §14): these prompts share no
+    // prefix, so it must change nothing — but the report line below
+    // carries its hit/eviction counters end to end.
     let server = Server::start(
         Engine::new(model),
         SchedulerConfig {
@@ -77,6 +80,8 @@ fn api_demo(threads: usize) -> anyhow::Result<()> {
             prefill_chunk: 0,
             threads,
             kv_dtype: mergequant::engine::KvDtype::F32,
+            prefix_cache: true,
+            prefix_cache_blocks: 64,
         },
     );
 
@@ -138,9 +143,10 @@ fn api_demo(threads: usize) -> anyhow::Result<()> {
     println!("greedy  [id {}]: {} tokens — matches Engine::generate \
               golden ✓ (admitted into the cancelled request's slab)",
              r_greedy.id, r_greedy.tokens.len());
-    // The scheduler report line carries the paged-KV packing story:
-    // kv_util (mean/peak used-token over allocated-block-token ratio)
-    // and the blocks_alloc/blocks_freed churn counters (DESIGN.md §13).
+    // The scheduler report line carries the paged-KV packing story —
+    // kv_util (mean/peak used-token over allocated-block-token ratio),
+    // the blocks_alloc/blocks_freed churn counters (DESIGN.md §13) —
+    // and the prefix-cache counters (prefix_hit_rate=…, DESIGN.md §14).
     println!("scheduler: {}\n", server.shutdown());
     Ok(())
 }
@@ -190,6 +196,8 @@ fn drive(method: &str, n_requests: usize, n_clients: usize,
             prefill_chunk: 0,
             threads: kernel_threads,
             kv_dtype: mergequant::engine::KvDtype::F32,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
         },
     ));
     let gateway = TcpGateway::start(server.clone(), 0)?;

@@ -27,6 +27,11 @@
 //! scheduler: block-granular allocation admits sequences proportionally
 //! to the tokens they actually use instead of one `max_seq` reservation
 //! each.
+//!
+//! Sixth axis: **shared-prefix fleet** (DESIGN.md §14) — N requests
+//! over one system prompt with the radix prefix cache on vs off:
+//! storing the prefix blocks once lifts admitted concurrency at a
+//! tight arena, and skipping the matched prefill collapses TTFT.
 
 mod common;
 
@@ -250,6 +255,8 @@ fn main() {
                     prefill_chunk: 0,
                     threads: 1,
                     kv_dtype: KvDtype::F32,
+                    prefix_cache: false,
+                    prefix_cache_blocks: 0,
                 },
             );
             let vocab = sched.engine().config().vocab as u32;
@@ -279,6 +286,72 @@ fn main() {
         b.record("paged short_seq gen_tok/s kvblock32", paged_tps);
         b.record("slab kv_util_mean", slab_util);
         b.record("paged kv_util_mean kvblock32", paged_util);
+    }
+
+    // ---- prefix axis: shared-prefix fleet, radix cache + CoW blocks
+    // (DESIGN.md §14) — a fleet over one system prompt. Sharing stores
+    // the 192-token prefix once (6 blocks) instead of per lane, so the
+    // 48-block arena admits the whole fleet; matched prefixes skip
+    // their prefill, so TTFT collapses toward one decode step.
+    {
+        use mergequant::coordinator::{Request, Scheduler, SchedulerConfig};
+        const FLEET: usize = 24;
+        const FLEET_PREFIX: usize = 192;
+        const FLEET_SUFFIX: usize = 8;
+        const FLEET_NEW: usize = 16;
+        let run_fleet = |prefix: bool| -> (usize, f64, f64, f64) {
+            let (engine, _) = common::engine_or_synthetic("tiny-llama-s",
+                                                          "mergequant");
+            let mut sched = Scheduler::new(
+                engine,
+                SchedulerConfig {
+                    max_batch: 64,
+                    kv_slabs: 0,
+                    kv_block: 32,
+                    kv_blocks: 48, // 1536 tokens: ~6 unshared lanes
+                    max_seq: 512,
+                    max_prefills_per_iter: 1,
+                    queue_cap: FLEET,
+                    prefill_chunk: 0,
+                    threads: 1,
+                    kv_dtype: KvDtype::F32,
+                    prefix_cache: prefix,
+                    prefix_cache_blocks: 0,
+                },
+            );
+            let vocab = sched.engine().config().vocab as u32;
+            for i in 0..FLEET as u64 {
+                let mut prompt: Vec<u32> = (0..FLEET_PREFIX)
+                    .map(|t| 3 + (t as u32 * 7) % (vocab - 3))
+                    .collect();
+                prompt.extend((0..FLEET_SUFFIX).map(|t| {
+                    5 + (t as u32 * 11 + i as u32) % (vocab - 3)
+                }));
+                sched.submit(Request::new(i, prompt, FLEET_NEW)).unwrap();
+            }
+            let t0 = std::time::Instant::now();
+            let mut peak = 0usize;
+            while sched.has_work() {
+                sched.step();
+                peak = peak.max(sched.active_len() + sched.prefilling_len());
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let m = &sched.metrics;
+            (peak, m.prefix_hit_rate(), m.ttft_summary().p50,
+             m.generated_tokens as f64 / wall)
+        };
+        let (u_peak, _, u_ttft, u_tps) = run_fleet(false);
+        let (s_peak, hit, s_ttft, s_tps) = run_fleet(true);
+        b.record("unshared fleet concurrent_lanes", u_peak as f64);
+        b.record("shared fleet concurrent_lanes prefix192", s_peak as f64);
+        b.record("shared_vs_unshared fleet concurrency",
+                 s_peak as f64 / u_peak as f64);
+        b.record("shared fleet prefix_hit_rate", hit);
+        b.record("unshared fleet ttft_p50_ms", u_ttft * 1e3);
+        b.record("shared fleet ttft_p50_ms", s_ttft * 1e3);
+        b.record("unshared fleet gen_tok/s", u_tps);
+        b.record("shared fleet gen_tok/s", s_tps);
+        b.record("shared_vs_unshared fleet ttft_p50", u_ttft / s_ttft);
     }
 
     // ---- threads axis: fixed batch 8, parallel-kernel scaling ----

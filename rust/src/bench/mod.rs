@@ -4,6 +4,8 @@
 //! this and appends machine-readable JSON lines to
 //! `artifacts/bench_results.jsonl` for EXPERIMENTS.md.
 
+pub mod record;
+
 use std::io::Write as _;
 use std::time::Duration;
 

@@ -1,0 +1,195 @@
+//! `mergequant bench` — the versioned benchmark suite behind the
+//! repo-root `BENCH_<n>.json` snapshots: Figure-3 decode throughput per
+//! method, Table-2 prefill throughput, Table-3 memory accounting, and
+//! the PR-6 shared-prefix fleet axis (prefix cache on vs off against
+//! the PR-5 paged baseline, DESIGN.md §14).
+//!
+//! Counter-valued fields (prefill rows, hit rate, matched tokens, peak
+//! concurrency) are deterministic — identical on every machine — while
+//! wall-clock fields (tok/s, TTFT) are machine-dependent and refreshed
+//! with `mergequant bench --record`.
+
+use std::time::Instant;
+
+use crate::coordinator::{Request, Scheduler, SchedulerConfig};
+use crate::engine::{memory, Engine, KvCache, KvDtype, Workspace};
+use crate::util::json::{num, obj, s, Json};
+
+use super::synthetic_model;
+
+const METHODS: [&str; 4] = ["fp16", "rtn", "quarot", "mergequant"];
+
+/// Fleet geometry: FLEET requests over one PREFIX_TOKS-token system
+/// prompt, each with a private SUFFIX_TOKS-token tail. Sized so the
+/// 24-block arena admits every lane when prefixes are shared but only
+/// three when each lane prefills privately.
+const FLEET: usize = 8;
+const PREFIX_TOKS: usize = 96;
+const SUFFIX_TOKS: usize = 8;
+const MAX_NEW: usize = 16;
+
+fn method_engine(method: &str) -> Engine {
+    Engine::new(synthetic_model(method, 64, 128, 2, 96))
+}
+
+/// Per-method decode + prefill throughput (Figure 3 / Table 2 axes) on
+/// the synthetic bundle: one lane, `pf` prompt tokens, `dec` decode
+/// steps, best-of-3 wall clock.
+fn method_row(method: &str, pf: usize, dec: usize) -> Json {
+    let engine = method_engine(method);
+    let cfg = engine.config().clone();
+    let prompt: Vec<u32> =
+        (0..pf).map(|t| 3 + (t as u32 * 7) % 90).collect();
+    let mut prefill_s = f64::INFINITY;
+    let mut decode_s = f64::INFINITY;
+    for _ in 0..3 {
+        let mut ws = Workspace::new();
+        let mut c = KvCache::new(cfg.n_layers, pf + dec + 1, cfg.d_model);
+        let t0 = Instant::now();
+        engine.prefill(&prompt, &mut c, &mut ws).unwrap();
+        prefill_s = prefill_s.min(t0.elapsed().as_secs_f64());
+        let t1 = Instant::now();
+        for i in 0..dec {
+            let tok = 3 + (i as u32 * 13) % 90;
+            let mut refs = [&mut c];
+            engine.decode_batch(&[tok], &mut refs, &mut ws).unwrap();
+        }
+        decode_s = decode_s.min(t1.elapsed().as_secs_f64());
+    }
+    obj(vec![
+        ("method", s(method)),
+        ("prefill_tok_s", num(pf as f64 / prefill_s)),
+        ("decode_tok_s", num(dec as f64 / decode_s)),
+    ])
+}
+
+/// Table-3 memory accounting rows (deterministic byte totals).
+fn memory_rows() -> Json {
+    let mut rows = Vec::new();
+    for method in ["fp16", "mergequant"] {
+        let engine = method_engine(method);
+        for kv in [KvDtype::F32, KvDtype::Int8] {
+            let mb = memory::account_model(&engine.model, 8, 2048, kv);
+            rows.push(obj(vec![
+                ("method", s(method)),
+                ("kv", s(kv.as_str())),
+                ("weights_bytes", num(mb.weights as f64)),
+                ("kv_bytes", num(mb.kv_cache as f64)),
+                ("total_bytes", num(mb.total() as f64)),
+            ]));
+        }
+    }
+    Json::Arr(rows)
+}
+
+fn fleet_scheduler(prefix: bool) -> Scheduler {
+    let engine = method_engine("mergequant");
+    Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 16,
+            kv_slabs: 0,
+            kv_block: 16,
+            kv_blocks: 24,
+            max_seq: 256,
+            max_prefills_per_iter: 1,
+            queue_cap: 64,
+            prefill_chunk: 0,
+            threads: 1,
+            kv_dtype: KvDtype::F32,
+            prefix_cache: prefix,
+            prefix_cache_blocks: 0,
+        },
+    )
+}
+
+/// One shared-prefix fleet run; returns the axis row. Deterministic
+/// fields: `prefill_rows` (832 unshared vs 160 shared), `hit_rate`
+/// (0.875: 7 of 8 lanes), `matched_tokens` (7 × 96), `peak_active`
+/// (8 shared vs 3 — the arena fits every lane only when the 96-token
+/// prefix is stored once).
+fn fleet_run(prefix: bool) -> Json {
+    let mut sched = fleet_scheduler(prefix);
+    let t0 = Instant::now();
+    for i in 0..FLEET as u64 {
+        let mut prompt: Vec<u32> =
+            (0..PREFIX_TOKS).map(|t| 3 + (t as u32 * 5) % 90).collect();
+        prompt.extend(
+            (0..SUFFIX_TOKS).map(|t| 7 + (t as u32 * 11 + i as u32) % 90));
+        sched.submit(Request::new(i, prompt, MAX_NEW)).unwrap();
+    }
+    let rs = sched.run_to_completion();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(rs.len(), FLEET);
+    for r in &rs {
+        assert!(r.error.is_none(), "fleet lane failed: {:?}", r.error);
+    }
+    let m = &sched.metrics;
+    obj(vec![
+        ("prefix_cache", Json::Bool(prefix)),
+        ("requests", num(FLEET as f64)),
+        ("prefill_rows", num(m.prefill_rows as f64)),
+        ("peak_active", num(m.peak_active as f64)),
+        ("hit_rate", num(m.prefix_hit_rate())),
+        ("matched_tokens", num(m.prefix_matched_tokens as f64)),
+        ("shared_blocks_peak", num(m.prefix_shared_blocks as f64)),
+        ("bytes_saved_peak", num(m.prefix_bytes_saved as f64)),
+        ("tok_s", num(m.generated_tokens as f64 / wall)),
+        ("ttft_p50_ms", num(m.ttft_summary().p50 * 1e3)),
+    ])
+}
+
+/// Run the whole suite; `fast` shrinks the wall-clock axes only — the
+/// deterministic counters are identical either way.
+pub fn run_suite(fast: bool) -> Json {
+    let (pf, dec) = if fast { (64, 16) } else { (256, 64) };
+    let methods: Vec<Json> =
+        METHODS.iter().map(|m| method_row(m, pf, dec)).collect();
+    let off = fleet_run(false);
+    let on = fleet_run(true);
+    let saved_rows = off.get("prefill_rows").and_then(Json::as_f64)
+        .unwrap_or(0.0)
+        - on.get("prefill_rows").and_then(Json::as_f64).unwrap_or(0.0);
+    obj(vec![
+        ("suite", s("mergequant-bench")),
+        ("version", num(6.0)),
+        ("fast", Json::Bool(fast)),
+        ("model", s("synthetic d64 ff128 L2 v96")),
+        ("methods", Json::Arr(methods)),
+        ("memory", memory_rows()),
+        ("prefix_fleet", obj(vec![
+            ("prefix_toks", num(PREFIX_TOKS as f64)),
+            ("suffix_toks", num(SUFFIX_TOKS as f64)),
+            ("max_new", num(MAX_NEW as f64)),
+            ("unshared", off),
+            ("shared", on),
+            ("prefill_rows_saved", num(saved_rows)),
+        ])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_axis_counters_are_the_committed_numbers() {
+        // Pin the deterministic fields the committed BENCH_6.json
+        // carries: an 8-lane fleet over a 96-token prefix prefills
+        // 832 rows unshared vs 160 shared (7 × 96 = 672 saved), hits
+        // 7/8, and only fits all 8 lanes concurrently when shared.
+        let off = fleet_run(false);
+        let on = fleet_run(true);
+        let f = |j: &Json, k: &str| {
+            j.get(k).and_then(Json::as_f64).unwrap()
+        };
+        assert_eq!(f(&off, "prefill_rows"), 832.0);
+        assert_eq!(f(&on, "prefill_rows"), 160.0);
+        assert_eq!(f(&on, "hit_rate"), 0.875);
+        assert_eq!(f(&on, "matched_tokens"), 672.0);
+        assert_eq!(f(&on, "peak_active"), 8.0);
+        assert!(f(&off, "peak_active") <= 3.0,
+                "unshared arena must throttle admission");
+        assert!(f(&on, "ttft_p50_ms") >= 0.0);
+    }
+}

@@ -88,6 +88,13 @@ impl ServeConfig {
                     }),
                     None => d.kv_dtype,
                 },
+                // Prefix sharing (DESIGN.md §14): radix index over
+                // frozen KV blocks + CoW boundary blocks.
+                prefix_cache: s.get("prefix_cache").and_then(Json::as_bool)
+                    .unwrap_or(d.prefix_cache),
+                prefix_cache_blocks: s.get("prefix_cache_blocks")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.prefix_cache_blocks),
             };
         }
         cfg
@@ -147,6 +154,20 @@ mod tests {
         ).unwrap());
         assert_eq!(s.scheduler.block_tokens(), 96);
         assert_eq!(s.scheduler.total_blocks(), 4);
+    }
+
+    #[test]
+    fn prefix_cache_knobs_parse_and_default_off() {
+        let c = ServeConfig::from_json(&Json::parse(
+            r#"{"scheduler":{"prefix_cache":true,
+                             "prefix_cache_blocks":128}}"#,
+        ).unwrap());
+        assert!(c.scheduler.prefix_cache);
+        assert_eq!(c.scheduler.prefix_cache_blocks, 128);
+        let d = ServeConfig::from_json(&Json::parse("{}").unwrap());
+        assert!(!d.scheduler.prefix_cache,
+                "prefix cache must be opt-in");
+        assert_eq!(d.scheduler.prefix_cache_blocks, 0);
     }
 
     #[test]

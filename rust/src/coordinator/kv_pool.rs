@@ -11,17 +11,28 @@
 //! is proportional to the tokens actually in flight rather than to
 //! `max_seq` reservations.
 //!
-//! Ownership replaces the old raw-pointer `get_many_mut`: blocks are
-//! plain owned storage that physically moves between the pool's free
-//! list and the sequences' block tables, so disjoint multi-sequence
-//! mutable access needs no `unsafe` anywhere. Invariants enforced here
-//! and property-tested in `tests/coordinator_props.rs`:
-//!   * a block is never held by two sequences (moves, not aliases);
-//!   * `free + allocated == total` at all times, in blocks and tokens;
+//! Ownership replaces the old raw-pointer `get_many_mut`: free blocks
+//! are plain owned storage; a block leaves the free list wrapped in an
+//! `Arc` so sequences sharing a frozen prefix (and the prefix cache's
+//! radix index) can hold the same physical block. Writes demand unique
+//! ownership — the scheduler copies-on-write the one shareable-and-
+//! writable block, the partially-filled boundary, via
+//! [`BlockPool::reserve_writable`] before every engine call. A block
+//! returns to the free list only when its *last* handle is released
+//! ([`std::sync::Arc::try_unwrap`] in [`BlockPool::release`] /
+//! [`BlockPool::reclaim`]). Invariants enforced here and
+//! property-tested in `tests/coordinator_props.rs`:
+//!   * `free + allocated == total` at all times, in blocks and tokens,
+//!     where `allocated` counts distinct *physical* blocks off the free
+//!     list however many tables share them;
 //!   * releasing a sequence twice panics (the double-free contract);
 //!   * reserve is all-or-nothing: a failed reservation hands out no
 //!     blocks;
-//!   * alloc/free churn never leaks (counters balance the allocation).
+//!   * alloc/free churn never leaks (counters balance the allocation):
+//!     `blocks_alloc` counts free-list departures, `blocks_freed`
+//!     free-list returns — attaching a shared handle touches neither.
+
+use std::sync::Arc;
 
 use crate::engine::{KvBlock, KvCache, KvDtype};
 
@@ -148,7 +159,45 @@ impl BlockPool {
             return Err(need - self.free.len());
         }
         for _ in 0..need {
-            cache.push_block(self.free.pop().unwrap());
+            cache.push_block(Arc::new(self.free.pop().unwrap()));
+        }
+        self.blocks_alloc += need as u64;
+        Ok(())
+    }
+
+    /// Blocks `cache` would pull off the free list to *write* up to
+    /// `total_tokens`: table growth plus one fresh block when the next
+    /// write would land in a shared boundary block (copy-on-write). The
+    /// admission gate charges a prefix-sharing request only this — the
+    /// unshared blocks it actually needs.
+    pub fn blocks_needed(&self, cache: &KvCache, total_tokens: usize)
+                         -> usize {
+        let growth = total_tokens
+            .div_ceil(self.block_tokens)
+            .saturating_sub(cache.n_blocks());
+        let cow = usize::from(total_tokens > cache.len
+                              && cache.boundary_shared());
+        growth + cow
+    }
+
+    /// [`BlockPool::reserve`] plus copy-on-write: after this succeeds,
+    /// every position in `[cache.len, total_tokens)` is backed by a
+    /// uniquely-owned block, so the engine may write. All-or-nothing
+    /// like `reserve`.
+    pub fn reserve_writable(&mut self, cache: &mut KvCache,
+                            total_tokens: usize) -> Result<(), usize> {
+        let need = self.blocks_needed(cache, total_tokens);
+        if need > self.free.len() {
+            return Err(need - self.free.len());
+        }
+        if total_tokens > cache.len && cache.boundary_shared() {
+            cache.cow_boundary(Arc::new(self.free.pop().unwrap()));
+        }
+        let growth = total_tokens
+            .div_ceil(self.block_tokens)
+            .saturating_sub(cache.n_blocks());
+        for _ in 0..growth {
+            cache.push_block(Arc::new(self.free.pop().unwrap()));
         }
         self.blocks_alloc += need as u64;
         Ok(())
@@ -156,11 +205,28 @@ impl BlockPool {
 
     /// Reclaim every block of a finished/cancelled sequence. Panics if
     /// the sequence was already released (double-free contract) or never
-    /// came from a pool.
+    /// came from a pool. Blocks still shared with other sequences or the
+    /// prefix cache stay allocated; each returns to the free list when
+    /// its last handle is reclaimed.
     pub fn release(&mut self, cache: &mut KvCache) {
-        let blocks = cache.take_blocks();
-        self.blocks_freed += blocks.len() as u64;
-        self.free.extend(blocks);
+        for block in cache.take_blocks() {
+            self.reclaim(block);
+        }
+    }
+
+    /// Drop one handle to a pool block (prefix-cache eviction, CoW
+    /// leftovers): if it was the last handle, the block physically
+    /// returns to the free list and counts as freed.
+    pub fn reclaim(&mut self, block: Arc<KvBlock>) {
+        if let Ok(b) = Arc::try_unwrap(block) {
+            self.blocks_freed += 1;
+            self.free.push(b);
+        }
+    }
+
+    /// Resident bytes of one block (sharing-savings accounting).
+    pub fn block_bytes(&self) -> usize {
+        self.per_block_bytes
     }
 
     /// Resident bytes of the whole arena (free + held blocks; Table 3).
@@ -278,5 +344,75 @@ mod tests {
         assert!(!p.can_cover(33, 0));
         assert!(p.can_cover(24, 2));
         assert!(!p.can_cover(28, 2));
+    }
+
+    #[test]
+    fn shared_blocks_return_to_free_only_on_last_release() {
+        let mut p = pool(); // 8 blocks × 4 tokens
+        let mut a = p.new_sequence();
+        p.reserve(&mut a, 8).unwrap(); // 2 blocks
+        a.len = 8;
+        // b borrows a's two frozen blocks: no free-list traffic.
+        let mut b = p.new_sequence();
+        b.push_block(a.block_arc(0));
+        b.push_block(a.block_arc(1));
+        b.len = 8;
+        assert_eq!(p.free_blocks(), 6);
+        assert_eq!(p.blocks_alloc(), 2);
+        assert_eq!(a.shared_blocks(), 2);
+        p.release(&mut a);
+        assert_eq!(p.free_blocks(), 6, "b still references both blocks");
+        assert_eq!(p.blocks_freed(), 0);
+        p.release(&mut b);
+        assert_eq!(p.free_blocks(), 8);
+        assert_eq!(p.blocks_alloc(), p.blocks_freed());
+    }
+
+    #[test]
+    fn reserve_writable_charges_and_performs_boundary_cow() {
+        let mut p = pool(); // 8 blocks × 4 tokens
+        let mut a = p.new_sequence();
+        p.reserve(&mut a, 6).unwrap(); // 2 blocks
+        a.len = 6; // boundary block 1 holds rows 4..6
+        let mut b = p.new_sequence();
+        b.push_block(a.block_arc(0)); // full frozen block: shared, fine
+        b.push_block(a.block_arc(1)); // partial boundary: needs CoW
+        b.len = 6;
+        // next write (pos 6) lands in the shared boundary → 1 CoW
+        // block; growing to 9 tokens additionally needs 1 new block.
+        assert_eq!(p.blocks_needed(&b, 7), 1);
+        assert_eq!(p.blocks_needed(&b, 9), 2);
+        assert_eq!(p.blocks_needed(&b, 6), 0, "no write, no CoW");
+        p.reserve_writable(&mut b, 9).unwrap();
+        assert!(!b.boundary_shared());
+        assert_eq!(b.shared_blocks(), 1, "full block 0 stays shared");
+        assert_eq!(p.free_blocks(), 4);
+        assert_eq!(p.blocks_alloc(), 4);
+        // all-or-nothing when the free list can't cover CoW + growth:
+        // c shares a's full block 0 as a *partial* boundary (2 of its 4
+        // rows matched), so writing needs 1 CoW + 3 growth blocks.
+        let mut d = p.new_sequence();
+        p.reserve(&mut d, 4).unwrap(); // free: 4 → 3
+        let mut c = p.new_sequence();
+        c.push_block(a.block_arc(0));
+        c.len = 2;
+        assert!(c.boundary_shared());
+        assert_eq!(p.blocks_needed(&c, 16), 4);
+        assert_eq!(p.reserve_writable(&mut c, 16), Err(1));
+        assert_eq!(c.n_blocks(), 1, "failed reserve hands out nothing");
+        assert!(c.boundary_shared(), "failed reserve leaves CoW undone");
+    }
+
+    #[test]
+    fn reclaim_frees_only_last_handle() {
+        let mut p = pool();
+        let mut a = p.new_sequence();
+        p.reserve(&mut a, 4).unwrap();
+        let extra = a.block_arc(0);
+        p.release(&mut a);
+        assert_eq!(p.free_blocks(), 7, "extra handle keeps it allocated");
+        p.reclaim(extra);
+        assert_eq!(p.free_blocks(), 8);
+        assert_eq!(p.blocks_alloc(), p.blocks_freed());
     }
 }

@@ -40,6 +40,29 @@ pub struct Metrics {
     /// Prefills pushed back to the pending queue by pool-exhaustion
     /// stall resolution (transient backpressure, not failures).
     pub kv_requeues: u64,
+    /// Prefix-cache admissions examined (one per admitted request while
+    /// `prefix_cache` is on — DESIGN.md §14).
+    pub prefix_lookups: u64,
+    /// Admissions that matched a cached prefix (≥ 1 token skipped).
+    pub prefix_hits: u64,
+    /// Prompt tokens whose prefill was skipped by attaching cached
+    /// blocks instead of recomputing them.
+    pub prefix_matched_tokens: u64,
+    /// Blocks currently pinned by the radix index (gauge, mirrored each
+    /// iteration).
+    pub prefix_cached_blocks: u64,
+    /// Cumulative blocks dropped from the radix index (capacity LRU +
+    /// pool-pressure eviction).
+    pub prefix_evicted_blocks: u64,
+    /// Peak distinct physical blocks referenced by ≥ 2 live block
+    /// tables at once.
+    pub prefix_shared_blocks: u64,
+    /// Live-lane block-table entries backed by unshared blocks at the
+    /// sharing peak.
+    pub prefix_private_blocks: u64,
+    /// Peak KV bytes saved by sharing: table entries beyond the
+    /// distinct physical blocks behind them, times block bytes.
+    pub prefix_bytes_saved: u64,
     latencies_s: Vec<f64>,
     ttfts_s: Vec<f64>,
     batch_sizes: Vec<f64>,
@@ -95,6 +118,26 @@ impl Metrics {
         self.kv_util_peak = self.kv_util_peak.max(util);
     }
 
+    /// Record one iteration's sharing snapshot (peaks are kept: the
+    /// high-water mark is the capacity story).
+    pub fn record_prefix_sharing(&mut self, shared: u64, private: u64,
+                                 bytes_saved: u64) {
+        if bytes_saved >= self.prefix_bytes_saved {
+            self.prefix_bytes_saved = bytes_saved;
+            self.prefix_private_blocks = private;
+        }
+        self.prefix_shared_blocks = self.prefix_shared_blocks.max(shared);
+    }
+
+    /// Fraction of admissions that matched a cached prefix.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
+
     /// Mean per-iteration KV utilization (used/allocated block tokens).
     pub fn kv_util_mean(&self) -> f64 {
         summarize(&self.kv_util).mean
@@ -136,7 +179,11 @@ impl Metrics {
              lat_p50={:.1}ms lat_p99={:.1}ms ttft_p50={:.1}ms \
              fwd_calls={} rows/iter={:.1} prefill_rows={} decode_rows={} \
              occupancy={:.2} kv_util={:.2} kv_util_peak={:.2} \
-             blocks_alloc={} blocks_freed={} kv_requeues={}",
+             blocks_alloc={} blocks_freed={} kv_requeues={} \
+             prefix_hit_rate={:.3} prefix_hits={} prefix_lookups={} \
+             prefix_matched_toks={} prefix_cached_blocks={} \
+             prefix_shared_blocks={} prefix_evicted_blocks={} \
+             prefix_bytes_saved={}",
             self.requests_completed,
             self.prompt_tokens,
             self.generated_tokens,
@@ -158,6 +205,14 @@ impl Metrics {
             self.blocks_alloc,
             self.blocks_freed,
             self.kv_requeues,
+            self.prefix_hit_rate(),
+            self.prefix_hits,
+            self.prefix_lookups,
+            self.prefix_matched_tokens,
+            self.prefix_cached_blocks,
+            self.prefix_shared_blocks,
+            self.prefix_evicted_blocks,
+            self.prefix_bytes_saved,
         )
     }
 }
@@ -217,5 +272,24 @@ mod tests {
         assert!(r.contains("kv_util_peak=0.75"), "{r}");
         assert!(r.contains("blocks_alloc=7"), "{r}");
         assert!(r.contains("blocks_freed=5"), "{r}");
+    }
+
+    #[test]
+    fn prefix_sharing_accumulates_and_reports() {
+        let mut m = Metrics::default();
+        m.prefix_lookups = 8;
+        m.prefix_hits = 6;
+        m.prefix_matched_tokens = 96;
+        m.prefix_cached_blocks = 4;
+        m.record_prefix_sharing(2, 5, 4096);
+        m.record_prefix_sharing(3, 1, 2048); // lower peak: bytes kept
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-9);
+        assert_eq!(m.prefix_bytes_saved, 4096);
+        assert_eq!(m.prefix_shared_blocks, 3);
+        assert_eq!(m.prefix_private_blocks, 5);
+        let r = m.report();
+        assert!(r.contains("prefix_hit_rate=0.750"), "{r}");
+        assert!(r.contains("prefix_matched_toks=96"), "{r}");
+        assert!(r.contains("prefix_bytes_saved=4096"), "{r}");
     }
 }

@@ -34,12 +34,14 @@
 
 pub mod kv_pool;
 pub mod metrics;
+pub mod prefix_cache;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 
 pub use kv_pool::BlockPool;
 pub use metrics::Metrics;
+pub use prefix_cache::PrefixCache;
 pub use request::{
     Event, FinishReason, GenerationParams, Request, Response, SubmitError,
 };

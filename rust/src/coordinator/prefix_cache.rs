@@ -1,0 +1,357 @@
+//! Radix prefix index over frozen KV blocks (DESIGN.md §14).
+//!
+//! The trie is keyed on token ids in runs of exactly `block_tokens`
+//! (B): every edge carries a B-token segment plus an `Arc` handle to
+//! the physical [`KvBlock`] holding those tokens' K/V rows, so a path
+//! from the root spells out a cached prompt prefix block by block.
+//! Edges are never split — a prompt that diverges *inside* a block
+//! matches that edge partially (the longest common prefix `r`, `0 < r
+//! < B`) and borrows the edge's **full** block as its partially-filled
+//! boundary block; the scheduler copies-on-write the `r` frozen rows
+//! before the lane's first write. Because cached KV rows are bitwise
+//! identical across batch compositions (the repo's standing
+//! invariant), attaching them instead of recomputing prefill changes
+//! no output bit.
+//!
+//! A lookup never matches a whole prompt: the match is capped at
+//! `prompt.len() - 1` so the final prompt token is always computed —
+//! its forward row produces the first-token logits, making TTFT on a
+//! full hit ≈ one decode step.
+//!
+//! Eviction is LRU over *leaf* edges only (interior edges are pinned
+//! by their children, keeping cached prefixes contiguous), driven by
+//! an internal deterministic clock — no wall time, so traces replay
+//! exactly. Evicted handles flow back through
+//! [`BlockPool::reclaim`](crate::coordinator::BlockPool::reclaim),
+//! which returns a block to the free list only when the trie held its
+//! last reference.
+
+use std::sync::Arc;
+
+use crate::engine::{KvBlock, KvCache};
+
+struct Edge {
+    tokens: Vec<u32>,
+    block: Arc<KvBlock>,
+    last_used: u64,
+    child: Node,
+}
+
+#[derive(Default)]
+struct Node {
+    edges: Vec<Edge>,
+}
+
+pub struct PrefixCache {
+    root: Node,
+    block_tokens: usize,
+    /// Edge-count cap; 0 means unbounded (pressure-driven eviction
+    /// only).
+    capacity_blocks: usize,
+    /// Deterministic LRU clock, bumped once per lookup/insert.
+    clock: u64,
+    cached_blocks: usize,
+}
+
+/// Longest common prefix of two token runs.
+fn lcp(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+impl PrefixCache {
+    pub fn new(block_tokens: usize, capacity_blocks: usize) -> Self {
+        PrefixCache {
+            root: Node::default(),
+            block_tokens: block_tokens.max(1),
+            capacity_blocks,
+            clock: 0,
+            cached_blocks: 0,
+        }
+    }
+
+    /// Edges (= blocks) currently held by the trie. Some may also be
+    /// held by live sequences; distinct physical storage either way.
+    pub fn cached_blocks(&self) -> usize {
+        self.cached_blocks
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cached_blocks == 0
+    }
+
+    /// Match `prompt` against the cached prefixes. Returns the matched
+    /// token count `p` (capped at `prompt.len() - 1`) and the
+    /// `ceil(p / B)` block handles covering it, in table order; when
+    /// `p % B != 0` the final handle is the *full* block whose first
+    /// `p % B` rows matched (the borrower's boundary block, CoW'd
+    /// before its first write). Deterministic: full-segment matches are
+    /// unique by construction, and partial ties break to the
+    /// oldest-inserted edge.
+    pub fn lookup(&mut self, prompt: &[u32])
+                  -> (usize, Vec<Arc<KvBlock>>) {
+        let limit = prompt.len().saturating_sub(1);
+        let mut matched = 0usize;
+        let mut arcs = Vec::new();
+        if limit == 0 {
+            return (matched, arcs);
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let mut node = &mut self.root;
+        loop {
+            let rest = &prompt[matched..limit];
+            let mut full: Option<usize> = None;
+            let mut best: Option<(usize, usize)> = None; // (idx, r)
+            for (i, e) in node.edges.iter().enumerate() {
+                let l = lcp(&e.tokens, rest);
+                if l == e.tokens.len() {
+                    full = Some(i);
+                    break;
+                }
+                if l > 0 && best.is_none_or(|(_, br)| l > br) {
+                    best = Some((i, l));
+                }
+            }
+            if let Some(i) = full {
+                let e = &mut node.edges[i];
+                e.last_used = clock;
+                arcs.push(Arc::clone(&e.block));
+                matched += e.tokens.len();
+                let here = node;
+                node = &mut here.edges[i].child;
+                continue;
+            }
+            if let Some((i, r)) = best {
+                let e = &mut node.edges[i];
+                e.last_used = clock;
+                arcs.push(Arc::clone(&e.block));
+                matched += r;
+            }
+            break;
+        }
+        (matched, arcs)
+    }
+
+    /// Record `key`'s frozen full blocks (the first `B·⌊key.len()/B⌋`
+    /// positions of `cache`) under the trie. Idempotent: existing edges
+    /// are reused (and LRU-touched), so re-inserting a growing sequence
+    /// every iteration costs one walk. Returns any handles evicted to
+    /// respect `capacity_blocks` — the caller must hand them to
+    /// [`BlockPool::reclaim`](crate::coordinator::BlockPool::reclaim).
+    #[must_use]
+    pub fn insert(&mut self, key: &[u32], cache: &KvCache)
+                  -> Vec<Arc<KvBlock>> {
+        let bt = self.block_tokens;
+        debug_assert_eq!(cache.block_tokens(), bt,
+                         "cache from a different pool");
+        let full = key.len() / bt;
+        if full > 0 {
+            self.clock += 1;
+            let clock = self.clock;
+            let mut node = &mut self.root;
+            for b in 0..full {
+                let seg = &key[b * bt..(b + 1) * bt];
+                let idx = match node.edges.iter()
+                                         .position(|e| e.tokens == seg) {
+                    Some(i) => {
+                        node.edges[i].last_used = clock;
+                        i
+                    }
+                    None => {
+                        node.edges.push(Edge {
+                            tokens: seg.to_vec(),
+                            block: cache.block_arc(b),
+                            last_used: clock,
+                            child: Node::default(),
+                        });
+                        self.cached_blocks += 1;
+                        node.edges.len() - 1
+                    }
+                };
+                let here = node;
+                node = &mut here.edges[idx].child;
+            }
+        }
+        let mut evicted = Vec::new();
+        if self.capacity_blocks > 0 {
+            while self.cached_blocks > self.capacity_blocks {
+                match self.evict_lru_leaf() {
+                    Some(a) => evicted.push(a),
+                    None => break,
+                }
+            }
+        }
+        evicted
+    }
+
+    /// Evict the least-recently-used *leaf* edge and return its block
+    /// handle for pool reclamation. Interior edges are pinned by their
+    /// children; ties break to the first edge in depth-first order.
+    pub fn evict_lru_leaf(&mut self) -> Option<Arc<KvBlock>> {
+        fn min_leaf(node: &Node) -> Option<u64> {
+            let mut m: Option<u64> = None;
+            for e in &node.edges {
+                let c = if e.child.edges.is_empty() {
+                    Some(e.last_used)
+                } else {
+                    min_leaf(&e.child)
+                };
+                m = match (m, c) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
+            }
+            m
+        }
+        fn remove_leaf(node: &mut Node, target: u64)
+                       -> Option<Arc<KvBlock>> {
+            for i in 0..node.edges.len() {
+                if node.edges[i].child.edges.is_empty() {
+                    if node.edges[i].last_used == target {
+                        return Some(node.edges.remove(i).block);
+                    }
+                } else if let Some(a) =
+                    remove_leaf(&mut node.edges[i].child, target)
+                {
+                    return Some(a);
+                }
+            }
+            None
+        }
+        let target = min_leaf(&self.root)?;
+        let block = remove_leaf(&mut self.root, target)
+            .expect("leaf with the minimal clock exists");
+        self.cached_blocks -= 1;
+        Some(block)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::BlockPool;
+    use crate::engine::KvDtype;
+
+    fn pool() -> BlockPool {
+        // 16 blocks × 4 tokens, max_seq 32, 1 layer, d 8
+        BlockPool::with_dtype(KvDtype::F32, 16, 4, 1, 32, 8)
+    }
+
+    fn seq(p: &mut BlockPool, tokens: usize) -> crate::engine::KvCache {
+        let mut c = p.new_sequence();
+        p.reserve(&mut c, tokens).unwrap();
+        c.len = tokens;
+        c
+    }
+
+    #[test]
+    fn full_and_partial_matches_are_block_granular() {
+        let mut p = pool();
+        let mut pc = PrefixCache::new(4, 0);
+        let key: Vec<u32> = (0..10).collect();
+        let c = seq(&mut p, 10);
+        assert!(pc.insert(&key, &c).is_empty());
+        assert_eq!(pc.cached_blocks(), 2, "only the 2 full blocks");
+
+        // exact continuation: both full blocks match, 3rd token run
+        // diverges inside the (uncached) tail
+        let (m, arcs) = pc.lookup(&[0, 1, 2, 3, 4, 5, 6, 7, 99, 98]);
+        assert_eq!(m, 8);
+        assert_eq!(arcs.len(), 2);
+        assert_eq!(Arc::as_ptr(&arcs[0]), c.block_ptr(0));
+        assert_eq!(Arc::as_ptr(&arcs[1]), c.block_ptr(1));
+
+        // divergence inside the second block: partial borrow of its
+        // full block
+        let (m, arcs) = pc.lookup(&[0, 1, 2, 3, 4, 5, 77, 76, 75]);
+        assert_eq!(m, 6);
+        assert_eq!(arcs.len(), 2);
+        assert_eq!(Arc::as_ptr(&arcs[1]), c.block_ptr(1));
+
+        // no shared first block: miss
+        let (m, arcs) = pc.lookup(&[9, 9, 9, 9, 9]);
+        assert_eq!(m, 0);
+        assert!(arcs.is_empty());
+    }
+
+    #[test]
+    fn match_never_covers_the_final_prompt_token() {
+        let mut p = pool();
+        let mut pc = PrefixCache::new(4, 0);
+        let key: Vec<u32> = (0..8).collect();
+        let c = seq(&mut p, 8);
+        let _ = pc.insert(&key, &c);
+        // identical prompt: cap at len-1 = 7 → one full block + 3 rows
+        // of the second, borrowed as a partial boundary
+        let (m, arcs) = pc.lookup(&key);
+        assert_eq!(m, 7);
+        assert_eq!(arcs.len(), 2);
+        // single-token prompts can never match
+        let (m, arcs) = pc.lookup(&[0]);
+        assert_eq!(m, 0);
+        assert!(arcs.is_empty());
+    }
+
+    #[test]
+    fn insert_is_idempotent_and_dedups_against_existing_edges() {
+        let mut p = pool();
+        let mut pc = PrefixCache::new(4, 0);
+        let key: Vec<u32> = (0..8).collect();
+        let a = seq(&mut p, 8);
+        let _ = pc.insert(&key, &a);
+        let _ = pc.insert(&key, &a);
+        assert_eq!(pc.cached_blocks(), 2);
+        // a second sequence with the same history reuses a's blocks
+        let b = seq(&mut p, 8);
+        let _ = pc.insert(&key, &b);
+        assert_eq!(pc.cached_blocks(), 2);
+        let (_, arcs) = pc.lookup(&[0, 1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(Arc::as_ptr(&arcs[0]), a.block_ptr(0));
+    }
+
+    #[test]
+    fn lru_eviction_takes_leaves_first_and_respects_capacity() {
+        let mut p = pool();
+        let mut pc = PrefixCache::new(4, 3);
+        let shared: Vec<u32> = (0..4).collect();
+        let mut key_a = shared.clone();
+        key_a.extend([100, 101, 102, 103]);
+        let mut key_b = shared.clone();
+        key_b.extend([200, 201, 202, 203]);
+        let a = seq(&mut p, 8);
+        let b = seq(&mut p, 8);
+        assert!(pc.insert(&key_a, &a).is_empty());
+        assert!(pc.insert(&key_b, &b).is_empty()); // 3 edges: at cap
+        // touch a's leaf so b's leaf is LRU
+        let (m, _) = pc.lookup(&[&key_a[..], &[1]].concat());
+        assert_eq!(m, 8);
+        let mut key_c = shared.clone();
+        key_c.extend([300, 301, 302, 303]);
+        let c = seq(&mut p, 8);
+        let evicted = pc.insert(&key_c, &c);
+        assert_eq!(evicted.len(), 1, "capacity 3: one leaf evicted");
+        assert_eq!(Arc::as_ptr(&evicted[0]), b.block_ptr(1),
+                   "b's leaf was least recently used");
+        assert_eq!(pc.cached_blocks(), 3);
+        // the shared interior edge is pinned while leaves exist
+        let (m, _) = pc.lookup(&[&key_a[..], &[1]].concat());
+        assert_eq!(m, 8, "a's path survived");
+    }
+
+    #[test]
+    fn evicted_blocks_flow_back_to_the_pool() {
+        let mut p = pool();
+        let mut pc = PrefixCache::new(4, 0);
+        let key: Vec<u32> = (0..8).collect();
+        let mut c = seq(&mut p, 8);
+        let _ = pc.insert(&key, &c);
+        p.release(&mut c);
+        assert_eq!(p.free_blocks(), 14, "trie still pins both blocks");
+        while let Some(a) = pc.evict_lru_leaf() {
+            p.reclaim(a);
+        }
+        assert!(pc.is_empty());
+        assert_eq!(p.free_blocks(), 16);
+        assert_eq!(p.blocks_alloc(), p.blocks_freed());
+    }
+}

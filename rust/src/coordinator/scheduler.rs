@@ -62,16 +62,18 @@
 //! count, so scheduling invariants and goldens are unaffected by the
 //! parallelism.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::engine::{
-    BatchPlan, Engine, EngineError, KvCache, KvDtype, Sampler, SpanLogits,
-    Workspace,
+    BatchPlan, Engine, EngineError, KvBlock, KvCache, KvDtype, Sampler,
+    SpanLogits, Workspace,
 };
 
 use super::kv_pool::BlockPool;
 use super::metrics::Metrics;
+use super::prefix_cache::PrefixCache;
 use super::request::{Event, FinishReason, Request, Response};
 
 #[derive(Clone, Debug)]
@@ -112,6 +114,17 @@ pub struct SchedulerConfig {
     /// DESIGN.md §10). Plumbed from JSON `scheduler.kv_cache` /
     /// `--kv-cache`.
     pub kv_dtype: KvDtype,
+    /// Prefix sharing (DESIGN.md §14): keep finished sequences' frozen
+    /// KV blocks in a radix index and map admissions with a matching
+    /// prompt prefix onto them — prefill is skipped for the matched
+    /// region and admission is charged only the unshared blocks. Off by
+    /// default: the index deliberately retains blocks past request
+    /// completion, so `kv_available == kv_capacity` no longer holds at
+    /// drain. Token streams are bitwise identical either way.
+    pub prefix_cache: bool,
+    /// Prefix-index capacity in blocks (LRU-evicted beyond it); 0 ⇒
+    /// unbounded — blocks are then reclaimed only under pool pressure.
+    pub prefix_cache_blocks: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -127,6 +140,8 @@ impl Default for SchedulerConfig {
             prefill_chunk: 0,
             threads: 1,
             kv_dtype: KvDtype::F32,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
         }
     }
 }
@@ -193,6 +208,9 @@ pub struct Scheduler {
     engine: Engine,
     cfg: SchedulerConfig,
     pool: BlockPool,
+    /// Radix prefix index over frozen KV blocks
+    /// (`SchedulerConfig::prefix_cache`; DESIGN.md §14).
+    prefix: Option<PrefixCache>,
     pending: VecDeque<Request>,
     prefilling: Vec<Prefilling>,
     active: Vec<Active>,
@@ -220,10 +238,14 @@ impl Scheduler {
         let pool = BlockPool::with_dtype(cfg.kv_dtype, cfg.total_blocks(),
                                          cfg.block_tokens(), mc.n_layers,
                                          cfg.max_seq, mc.d_model);
+        let prefix = cfg.prefix_cache.then(|| {
+            PrefixCache::new(cfg.block_tokens(), cfg.prefix_cache_blocks)
+        });
         Scheduler {
             engine,
             cfg,
             pool,
+            prefix,
             pending: VecDeque::new(),
             prefilling: Vec::new(),
             active: Vec::new(),
@@ -292,6 +314,13 @@ impl Scheduler {
         self.pool.block_tokens()
     }
 
+    /// Blocks currently pinned by the radix prefix index (0 when
+    /// `prefix_cache` is off). At drain,
+    /// `kv_available + prefix_cached_blocks == kv_capacity`.
+    pub fn prefix_cached_blocks(&self) -> usize {
+        self.prefix.as_ref().map_or(0, PrefixCache::cached_blocks)
+    }
+
     /// Drain the event stream accumulated since the last call: `Token`
     /// frames in generation order, one terminal `Done`/`Error` frame per
     /// finished request.
@@ -315,6 +344,10 @@ impl Scheduler {
             self.prefilling.iter().map(|p| p.cache.len).sum::<usize>()
                 + self.active.iter().map(|a| a.cache.len).sum::<usize>();
         self.metrics.record_kv(used, self.pool.allocated_tokens());
+        // Publish frozen full blocks into the radix index *before*
+        // finalize, so finished sequences' prefixes stay cached and
+        // staggered admissions can share in-flight prefixes.
+        self.update_prefix_index();
         self.finalize();
         // Stall resolution: every live sequence is a prefill that could
         // not reserve its next chunk and nothing freed a block this
@@ -330,7 +363,37 @@ impl Scheduler {
         }
         self.metrics.blocks_alloc = self.pool.blocks_alloc();
         self.metrics.blocks_freed = self.pool.blocks_freed();
+        if self.prefix.is_some() {
+            self.record_sharing_snapshot();
+        }
         self.active.len()
+    }
+
+    /// Sharing snapshot for metrics: count the live lanes' block-table
+    /// entries against the distinct physical blocks behind them — the
+    /// difference, in bytes, is the KV capacity prefix sharing is
+    /// currently saving.
+    fn record_sharing_snapshot(&mut self) {
+        let mut refs: HashMap<*const KvBlock, usize> = HashMap::new();
+        let tables = self
+            .prefilling
+            .iter()
+            .map(|p| &p.cache)
+            .chain(self.active.iter().map(|a| &a.cache));
+        for cache in tables {
+            for b in 0..cache.n_blocks() {
+                *refs.entry(cache.block_ptr(b)).or_insert(0) += 1;
+            }
+        }
+        let entries: usize = refs.values().sum();
+        let shared = refs.values().filter(|&&n| n > 1).count();
+        let saved = (entries - refs.len()) * self.pool.block_bytes();
+        self.metrics.record_prefix_sharing(shared as u64,
+                                           (refs.len() - shared) as u64,
+                                           saved as u64);
+        if let Some(pc) = &self.prefix {
+            self.metrics.prefix_cached_blocks = pc.cached_blocks() as u64;
+        }
     }
 
     /// Apply queued `cancel()` calls: answer pending requests outright,
@@ -409,13 +472,12 @@ impl Scheduler {
         // admission must never steal the blocks already-admitted work
         // needs this iteration (else a backlog could starve an older
         // prefill through repeated admit-then-stall cycles).
-        let decode_need = self
+        let decode_need: usize = self
             .active
             .iter()
-            .filter(|a| !a.done && a.tokens.len() < a.req.params.max_new
-                    && a.cache.len + 1 > a.cache.held_tokens())
-            .count();
-        let bt = self.pool.block_tokens();
+            .filter(|a| !a.done && a.tokens.len() < a.req.params.max_new)
+            .map(|a| self.pool.blocks_needed(&a.cache, a.cache.len + 1))
+            .sum();
         let prefill_need: usize = self
             .prefilling
             .iter()
@@ -427,9 +489,7 @@ impl Scheduler {
                 } else {
                     self.cfg.prefill_chunk.min(remaining)
                 };
-                (pf.consumed + chunk)
-                    .div_ceil(bt)
-                    .saturating_sub(pf.cache.n_blocks())
+                self.pool.blocks_needed(&pf.cache, pf.consumed + chunk)
             })
             .sum();
         let headroom = decode_need + prefill_need;
@@ -453,20 +513,99 @@ impl Scheduler {
                 self.fail_request(req, err.to_string());
                 continue;
             }
+            // Prefix match (DESIGN.md §14): attach the cached frozen
+            // blocks covering the matched tokens and start the prefill
+            // *after* them — the matched region is never recomputed,
+            // and admission is charged only the unshared blocks the
+            // request actually needs (a CoW boundary block plus table
+            // growth). On a full hit the remaining prefill is the final
+            // prompt token, so TTFT ≈ one decode step.
+            let (matched, shared) = match self.prefix.as_mut() {
+                Some(pc) => {
+                    pc.lookup(&self.pending.front().unwrap().prompt)
+                }
+                None => (0, Vec::new()),
+            };
             let first = if self.cfg.prefill_chunk == 0 {
                 plen
             } else {
-                self.cfg.prefill_chunk.min(plen)
+                (matched + self.cfg.prefill_chunk).min(plen)
             };
-            if !self.pool.can_cover(first, headroom) {
+            let mut cache = self.pool.new_sequence();
+            for block in shared {
+                cache.push_block(block);
+            }
+            cache.len = matched;
+            let need = self.pool.blocks_needed(&cache, first);
+            if need > self.pool.free_blocks().saturating_sub(headroom)
+                && !Self::evict_until(&mut self.prefix, &mut self.pool,
+                                      &mut self.metrics, need + headroom)
+            {
                 break; // backpressure: not enough blocks to start
             }
-            let mut cache = self.pool.new_sequence();
             self.pool
-                .reserve(&mut cache, first)
-                .expect("can_cover checked above");
+                .reserve_writable(&mut cache, first)
+                .expect("free blocks checked above");
             let req = self.pending.pop_front().unwrap();
-            self.prefilling.push(Prefilling { req, cache, consumed: 0 });
+            if self.prefix.is_some() {
+                self.metrics.prefix_lookups += 1;
+                if matched > 0 {
+                    self.metrics.prefix_hits += 1;
+                    self.metrics.prefix_matched_tokens += matched as u64;
+                }
+            }
+            self.prefilling.push(Prefilling { req, cache,
+                                              consumed: matched });
+        }
+    }
+
+    /// Evict prefix-index LRU leaves until the pool has at least `want`
+    /// free blocks; returns whether the target was reached. A handle
+    /// still shared with a live lane reclaims nothing (the lane returns
+    /// the block later), so eviction keeps draining leaves until the
+    /// target is met or the index is empty. Associated fn (not a
+    /// method) so callers can hold disjoint borrows of other fields.
+    fn evict_until(prefix: &mut Option<PrefixCache>, pool: &mut BlockPool,
+                   metrics: &mut Metrics, want: usize) -> bool {
+        let Some(pc) = prefix.as_mut() else { return false };
+        while pool.free_blocks() < want {
+            match pc.evict_lru_leaf() {
+                Some(block) => {
+                    pool.reclaim(block);
+                    metrics.prefix_evicted_blocks += 1;
+                }
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Publish every live lane's frozen *full* blocks (prompt plus the
+    /// generated tokens whose KV is already written) into the radix
+    /// index. Runs each iteration before finalize: finished sequences'
+    /// prefixes stay cached after their blocks' lane handles are
+    /// released, and staggered admissions share in-flight prefixes.
+    /// Insertion is idempotent (edge reuse), so the steady-state cost
+    /// is one trie walk per lane; capacity-evicted handles flow back
+    /// through the pool.
+    fn update_prefix_index(&mut self) {
+        let Some(pc) = self.prefix.as_mut() else { return };
+        let mut evicted: Vec<Arc<KvBlock>> = Vec::new();
+        for pf in &self.prefilling {
+            evicted.extend(pc.insert(&pf.req.prompt[..pf.consumed],
+                                     &pf.cache));
+        }
+        let mut key: Vec<u32> = Vec::new();
+        for a in &self.active {
+            let written = a.cache.len.saturating_sub(a.req.prompt.len());
+            key.clear();
+            key.extend_from_slice(&a.req.prompt);
+            key.extend_from_slice(&a.tokens[..written]);
+            evicted.extend(pc.insert(&key, &a.cache));
+        }
+        self.metrics.prefix_evicted_blocks += evicted.len() as u64;
+        for block in evicted {
+            self.pool.reclaim(block);
         }
     }
 
@@ -492,7 +631,12 @@ impl Scheduler {
                 continue;
             }
             let need = a.cache.len + 1;
-            if self.pool.reserve(&mut a.cache, need).is_err() {
+            let missing = self.pool.blocks_needed(&a.cache, need);
+            if missing > self.pool.free_blocks() {
+                Self::evict_until(&mut self.prefix, &mut self.pool,
+                                  &mut self.metrics, missing);
+            }
+            if self.pool.reserve_writable(&mut a.cache, need).is_err() {
                 a.done = true;
                 a.finish = FinishReason::CacheFull;
                 continue;
@@ -514,7 +658,12 @@ impl Scheduler {
                 self.cfg.prefill_chunk.min(remaining)
             };
             let end = pf.consumed + chunk;
-            if self.pool.reserve(&mut pf.cache, end).is_err() {
+            let missing = self.pool.blocks_needed(&pf.cache, end);
+            if missing > self.pool.free_blocks() {
+                Self::evict_until(&mut self.prefix, &mut self.pool,
+                                  &mut self.metrics, missing);
+            }
+            if self.pool.reserve_writable(&mut pf.cache, end).is_err() {
                 break;
             }
             prefill_sel.push((pi, end));

@@ -23,6 +23,18 @@
 //! Quantization happens at write time with the bundle's calibrated
 //! per-channel scales; the integer attention path reads the int8 planes
 //! directly (`engine::attention`).
+//!
+//! **Prefix sharing (DESIGN.md §14):** pooled block tables hold
+//! `Arc<KvBlock>`, so N sequences whose prompts share a frozen prefix
+//! can map the shared region of their tables onto the same physical
+//! blocks. Attention only ever reads blocks, so sharing is invisible to
+//! the compute path; writes demand unique ownership
+//! ([`std::sync::Arc::get_mut`]) and the scheduler copies-on-write the
+//! single partially-filled boundary block before any write can land in
+//! a shared one ([`KvCache::cow_boundary`]). A write reaching a shared
+//! block is a bug, not a recoverable error — it panics.
+
+use std::sync::Arc;
 
 use crate::quant::kv::{self, KvDtype, KvLayerScales};
 
@@ -78,6 +90,37 @@ impl KvBlock {
             BlockStore::I8 { k, v } => k.len() + v.len(),
         }
     }
+
+    /// Copy the first `rows` K/V rows of every layer plane from `src`
+    /// into `self` — the copy-on-write step for a partially-filled
+    /// boundary block. Copying int8 planes verbatim preserves the
+    /// already-quantized values bit-for-bit, so a CoW'd prefix stays
+    /// bitwise identical to the shared original.
+    fn copy_rows_from(&mut self, src: &KvBlock, rows: usize,
+                      n_layers: usize, block_tokens: usize, d: usize) {
+        let span = rows * d;
+        match (&mut self.store, &src.store) {
+            (BlockStore::F32 { k, v }, BlockStore::F32 { k: sk, v: sv }) => {
+                for l in 0..n_layers {
+                    let base = l * block_tokens * d;
+                    k[base..base + span]
+                        .copy_from_slice(&sk[base..base + span]);
+                    v[base..base + span]
+                        .copy_from_slice(&sv[base..base + span]);
+                }
+            }
+            (BlockStore::I8 { k, v }, BlockStore::I8 { k: sk, v: sv }) => {
+                for l in 0..n_layers {
+                    let base = l * block_tokens * d;
+                    k[base..base + span]
+                        .copy_from_slice(&sk[base..base + span]);
+                    v[base..base + span]
+                        .copy_from_slice(&sv[base..base + span]);
+                }
+            }
+            _ => panic!("CoW between mismatched KV dtypes"),
+        }
+    }
 }
 
 /// How a cache obtains (and gives back) its blocks.
@@ -101,7 +144,7 @@ enum CacheMode {
 /// the bundle's calibrated scales and attends in the integer domain —
 /// `quant::kv`).
 pub struct KvCache {
-    blocks: Vec<KvBlock>,
+    blocks: Vec<Arc<KvBlock>>,
     block_tokens: usize,
     /// Logical capacity in tokens (`max_seq` for serving caches).
     pub cap: usize,
@@ -127,7 +170,7 @@ impl KvCache {
                       -> Self {
         let cap = cap.max(1);
         KvCache {
-            blocks: vec![KvBlock::new(dtype, n_layers, cap, d)],
+            blocks: vec![Arc::new(KvBlock::new(dtype, n_layers, cap, d))],
             block_tokens: cap,
             cap,
             len: 0,
@@ -195,9 +238,10 @@ impl KvCache {
         self.mode == CacheMode::AutoGrow
     }
 
-    /// Attach one pool-owned block (coordinator `BlockPool::reserve`).
+    /// Attach one pool-owned block (coordinator `BlockPool::reserve`),
+    /// possibly shared with other sequences or the prefix cache.
     /// Geometry and dtype must match the cache.
-    pub fn push_block(&mut self, block: KvBlock) {
+    pub fn push_block(&mut self, block: Arc<KvBlock>) {
         assert_eq!(block.dtype(), self.dtype, "block dtype mismatch");
         assert_eq!(block.plane_elts(),
                    self.n_layers * self.block_tokens * self.d,
@@ -207,8 +251,10 @@ impl KvCache {
 
     /// Detach every block for return to the pool (coordinator
     /// `BlockPool::release`). Panics on a second release — the paged
-    /// analogue of the slab pool's double-free contract.
-    pub fn take_blocks(&mut self) -> Vec<KvBlock> {
+    /// analogue of the slab pool's double-free contract. Shared blocks
+    /// survive in whoever else still references them; the pool only
+    /// reclaims the ones whose last reference this was.
+    pub fn take_blocks(&mut self) -> Vec<Arc<KvBlock>> {
         match self.mode {
             CacheMode::Pooled => {
                 self.mode = CacheMode::Released;
@@ -223,6 +269,79 @@ impl KvCache {
                 panic!("release of a non-pooled KV cache")
             }
         }
+    }
+
+    /// A second handle to block `b` (prefix-cache insertion): the trie
+    /// keeps frozen full blocks alive after their sequences finish.
+    pub fn block_arc(&self, b: usize) -> Arc<KvBlock> {
+        Arc::clone(&self.blocks[b])
+    }
+
+    /// `true` when block `b` is referenced by more than one handle
+    /// (another sequence or the prefix cache) — such a block must never
+    /// be written.
+    pub fn block_shared(&self, b: usize) -> bool {
+        Arc::strong_count(&self.blocks[b]) > 1
+    }
+
+    /// Identity of block `b`'s physical storage — lets metrics count
+    /// distinct physical blocks across sequences that share them.
+    pub fn block_ptr(&self, b: usize) -> *const KvBlock {
+        Arc::as_ptr(&self.blocks[b])
+    }
+
+    /// Held blocks currently shared with another handle.
+    pub fn shared_blocks(&self) -> usize {
+        self.blocks
+            .iter()
+            .filter(|b| Arc::strong_count(b) > 1)
+            .count()
+    }
+
+    /// `true` when the next write (at position `len`) would land in a
+    /// *shared* partially-filled block — the one case that needs
+    /// copy-on-write. Full blocks below `len` are frozen (writes only
+    /// ever target positions ≥ `len`), and blocks past the boundary are
+    /// fresh pool reservations, so the boundary block is the only block
+    /// that can ever be both shared and written.
+    pub fn boundary_shared(&self) -> bool {
+        let b = self.len / self.block_tokens;
+        self.len % self.block_tokens != 0
+            && b < self.blocks.len()
+            && Arc::strong_count(&self.blocks[b]) > 1
+    }
+
+    /// `true` if any write in logical positions `[from, to)` would land
+    /// in a shared block — the forward pass's pre-mutation check that
+    /// the scheduler's CoW step actually ran.
+    pub fn write_range_shared(&self, from: usize, to: usize) -> bool {
+        if to <= from {
+            return false;
+        }
+        let first = from / self.block_tokens;
+        let last = (to - 1) / self.block_tokens;
+        (first..=last.min(self.blocks.len().saturating_sub(1)))
+            .any(|b| Arc::strong_count(&self.blocks[b]) > 1)
+    }
+
+    /// Copy-on-write the boundary block: copy the `len % B` frozen
+    /// prefix rows into `fresh` (a uniquely-owned pool block) and swap
+    /// it into the table. The shared original lives on in the prefix
+    /// cache / other sequences; this lane's handle is dropped here.
+    pub fn cow_boundary(&mut self, mut fresh: Arc<KvBlock>) {
+        let b = self.len / self.block_tokens;
+        let rows = self.len % self.block_tokens;
+        assert!(rows > 0 && b < self.blocks.len(),
+                "CoW with no partially-filled boundary block");
+        debug_assert_eq!(fresh.dtype(), self.dtype, "block dtype mismatch");
+        debug_assert_eq!(fresh.plane_elts(),
+                         self.n_layers * self.block_tokens * self.d,
+                         "block geometry mismatch");
+        Arc::get_mut(&mut fresh)
+            .expect("CoW target block must be uniquely owned")
+            .copy_rows_from(&self.blocks[b], rows, self.n_layers,
+                            self.block_tokens, self.d);
+        self.blocks[b] = fresh;
     }
 
     /// Block-plane accessors: the (B, d) slice of block `b`, layer `l`.
@@ -297,12 +416,15 @@ impl KvCache {
             assert!(self.auto_grow(),
                     "KV write at position {pos} past the reserved blocks \
                      ({} held)", self.held_tokens());
-            self.blocks
-                .push(KvBlock::new(self.dtype, self.n_layers, bt, self.d));
+            self.blocks.push(Arc::new(KvBlock::new(self.dtype,
+                                                   self.n_layers, bt,
+                                                   self.d)));
         }
         let d = self.d;
         let off = l * bt * d + (pos % bt) * d;
-        match &mut self.blocks[b].store {
+        let block = Arc::get_mut(&mut self.blocks[b])
+            .expect("write into shared KV block (CoW missed)");
+        match &mut block.store {
             BlockStore::F32 { k, v } => {
                 k[off..off + d].copy_from_slice(k_row);
                 v[off..off + d].copy_from_slice(v_row);
@@ -319,7 +441,7 @@ impl KvCache {
     /// bytes per element for f32 storage, 1 for int8 — proportional to
     /// blocks held, not to `cap`.
     pub fn bytes(&self) -> usize {
-        self.blocks.iter().map(KvBlock::bytes).sum()
+        self.blocks.iter().map(|b| b.bytes()).sum()
     }
 
     /// Forget the cached prefix (held storage is retained and
@@ -374,9 +496,57 @@ mod tests {
     #[should_panic(expected = "double free of KV sequence")]
     fn double_release_panics() {
         let mut c = KvCache::pooled(KvDtype::F32, 1, 16, 8, 4);
-        c.push_block(KvBlock::new(KvDtype::F32, 1, 4, 8));
+        c.push_block(Arc::new(KvBlock::new(KvDtype::F32, 1, 4, 8)));
         let _ = c.take_blocks();
         let _ = c.take_blocks();
+    }
+
+    #[test]
+    #[should_panic(expected = "write into shared KV block")]
+    fn write_into_shared_block_panics() {
+        let mut c = KvCache::pooled(KvDtype::F32, 1, 16, 8, 4);
+        let block = Arc::new(KvBlock::new(KvDtype::F32, 1, 4, 8));
+        c.push_block(Arc::clone(&block)); // shared with `block`
+        let row = vec![0f32; 8];
+        c.write(0, 0, &row, &row, None);
+    }
+
+    #[test]
+    fn cow_boundary_copies_frozen_rows_and_unshares() {
+        let mut donor = KvCache::paged(KvDtype::F32, 2, 16, 8, 4);
+        let rows: Vec<Vec<f32>> =
+            (0..3).map(|t| vec![t as f32 + 1.0; 8]).collect();
+        for (t, row) in rows.iter().enumerate() {
+            for l in 0..2 {
+                donor.write(l, t, row, row, None);
+            }
+        }
+        donor.len = 3;
+        // Borrower shares the donor's partially-filled block.
+        let mut c = KvCache::pooled(KvDtype::F32, 2, 16, 8, 4);
+        c.push_block(donor.block_arc(0));
+        c.len = 3;
+        assert!(c.boundary_shared());
+        assert!(c.write_range_shared(3, 4));
+        assert_eq!(c.shared_blocks(), 1);
+        c.cow_boundary(Arc::new(KvBlock::new(KvDtype::F32, 2, 4, 8)));
+        assert!(!c.boundary_shared());
+        assert_eq!(c.shared_blocks(), 0);
+        assert_ne!(c.block_ptr(0), donor.block_ptr(0));
+        // frozen rows survived the copy bit-for-bit
+        for (t, row) in rows.iter().enumerate() {
+            assert_eq!(c.k_row_f32(1, t), &row[..]);
+            assert_eq!(c.v_row_f32(0, t), &row[..]);
+        }
+        // and the boundary is now writable
+        let fresh = vec![9f32; 8];
+        for l in 0..2 {
+            c.write(l, 3, &fresh, &fresh, None);
+        }
+        c.len = 4;
+        assert_eq!(c.k_row_f32(0, 3), &fresh[..]);
+        assert_eq!(donor.k_row_f32(0, 2), &rows[2][..],
+                   "donor block untouched by the borrower's CoW");
     }
 
     #[test]

@@ -520,6 +520,13 @@ impl Engine {
                     reserved: c.held_tokens(),
                 });
             }
+            // Prefix sharing: every block this span writes must be
+            // uniquely owned by now — the scheduler copies-on-write the
+            // shared boundary block *before* building the plan, so a
+            // shared block in the write range is a coordinator bug, not
+            // a runtime condition.
+            assert!(!c.write_range_shared(c.len, end),
+                    "span {si}: write into shared KV block (CoW missed)");
             starts.push(c.len);
         }
         let mut lane_scales: Vec<Option<&[KvLayerScales]>> =

@@ -5,6 +5,8 @@
 //!   eval      — perplexity + zero-shot accuracy of a bundle
 //!   generate  — greedy generation from a prompt
 //!   inspect   — dump bundle structure and memory accounting
+//!   bench     — run the versioned benchmark suite (--record writes
+//!               the repo-root BENCH_<n>.json snapshot)
 //!   runtime   — load + run an AOT HLO artifact via PJRT (smoke)
 //!
 //! Run `mergequant <cmd> --help-less`: flags are documented below per arm.
@@ -42,14 +44,16 @@ fn run() -> Result<()> {
         Some("eval") => cmd_eval(&args),
         Some("generate") => cmd_generate(&args),
         Some("inspect") => cmd_inspect(&args),
+        Some("bench") => cmd_bench(&args),
         Some("runtime") => cmd_runtime(&args),
         other => {
             eprintln!(
                 "mergequant — 4-bit static quantization serving stack\n\
-                 usage: mergequant <serve|eval|generate|inspect|runtime> \
-                 [--model NAME] [--method NAME] [--threads N] \
+                 usage: mergequant <serve|eval|generate|inspect|bench|\
+                 runtime> [--model NAME] [--method NAME] [--threads N] \
                  [--kv-cache f32|int8] [--kv-block TOKENS] \
-                 [--kv-blocks N] [--temperature T --top-k K \
+                 [--kv-blocks N] [--prefix-cache] \
+                 [--prefix-cache-blocks N] [--temperature T --top-k K \
                  --top-p P --seed S --stop T1,T2] …\n\
                  (got {other:?})"
             );
@@ -92,17 +96,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.scheduler.kv_dtype = mergequant::engine::KvDtype::parse(kv)
             .with_context(|| format!("bad --kv-cache {kv:?} (f32|int8)"))?;
     }
+    // Prefix sharing (DESIGN.md §14): --prefix-cache turns the radix
+    // index + CoW block sharing on (opt-in); --prefix-cache-blocks
+    // bounds how many frozen blocks the index may retain (0 =
+    // unbounded, pressure-evicted either way).
+    if args.get_bool("prefix-cache") {
+        cfg.scheduler.prefix_cache = true;
+    }
+    cfg.scheduler.prefix_cache_blocks = args
+        .get_usize("prefix-cache-blocks", cfg.scheduler.prefix_cache_blocks);
 
     let engine = load_engine(&cfg.model, &cfg.method)?;
     println!("serving {} / {} (params ~{:.1} MB quantized, {} kernel \
-              thread(s), kv {}, arena {} blocks × {} tokens)",
+              thread(s), kv {}, arena {} blocks × {} tokens, prefix \
+              cache {})",
              cfg.model, cfg.method,
              engine.model.weight_bytes() as f64 / 1e6,
              mergequant::quant::parallel::ThreadPool::resolve(
                  cfg.scheduler.threads),
              cfg.scheduler.kv_dtype.as_str(),
              cfg.scheduler.total_blocks(),
-             cfg.scheduler.block_tokens());
+             cfg.scheduler.block_tokens(),
+             if cfg.scheduler.prefix_cache { "on" } else { "off" });
     let server = std::sync::Arc::new(Server::start(engine, cfg.scheduler.clone()));
     let gateway = TcpGateway::start(server.clone(), cfg.port)?;
     println!("listening on {}", gateway.addr);
@@ -254,6 +269,25 @@ fn mode_name(m: &mergequant::engine::QuantMode) -> &'static str {
             if *hadamard { "dynamic+had" } else { "dynamic" }
         }
     }
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    // The versioned suite behind the repo-root BENCH_<n>.json
+    // snapshots: fig3 decode, table2 prefill, table3 memory, and the
+    // shared-prefix fleet axis (DESIGN.md §14). Counter fields are
+    // deterministic; wall-clock fields are machine-local and refreshed
+    // by --record.
+    let fast = args.get_bool("fast")
+        || std::env::var("MQ_BENCH_FAST").is_ok();
+    let j = mergequant::bench::record::run_suite(fast);
+    println!("{}", j.to_string());
+    if args.get_bool("record") {
+        let out = args.get_or("out", "BENCH_6.json");
+        std::fs::write(out, format!("{}\n", j.to_string()))
+            .with_context(|| format!("writing {out}"))?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
 }
 
 fn cmd_runtime(args: &Args) -> Result<()> {

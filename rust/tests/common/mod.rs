@@ -1,0 +1,188 @@
+//! Shared test support: the seeded shared-prefix fleet trace generator
+//! (DESIGN.md §14) used by `ragged_batch`, `coordinator_props` and
+//! `prefix_sharing`, plus the CI-matrix env knobs. A trace is plain
+//! data with `Debug` — the proptest harness prints the failing trace
+//! verbatim, so every failure is its own reproducer.
+
+// Each test binary compiles this module independently and uses only a
+// subset of it.
+#![allow(dead_code)]
+
+use mergequant::coordinator::{Event, Request, Response, Scheduler};
+use mergequant::engine::KvDtype;
+use mergequant::util::proptest::Shrink;
+use mergequant::util::rng::Rng;
+
+/// Thread counts for determinism sweeps; `MQ_TEST_THREADS` feeds an
+/// extra count in from the CI matrix (DESIGN.md §7).
+pub fn thread_counts() -> Vec<usize> {
+    let mut counts = vec![1, 4];
+    if let Some(extra) = std::env::var("MQ_TEST_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        if extra > 0 && !counts.contains(&extra) {
+            counts.push(extra);
+        }
+    }
+    counts
+}
+
+/// KV dtypes for determinism sweeps; `MQ_TEST_KV` restricts the axis
+/// (DESIGN.md §10).
+pub fn kv_dtypes() -> Vec<KvDtype> {
+    match std::env::var("MQ_TEST_KV").as_deref() {
+        Ok("int8") => vec![KvDtype::Int8],
+        Ok("f32") => vec![KvDtype::F32],
+        _ => vec![KvDtype::F32, KvDtype::Int8],
+    }
+}
+
+/// Scheduler-level paging granularities for the shared-prefix suite
+/// (all non-zero: 0 would be the slab layout, which cannot share).
+/// `MQ_TEST_KV_BLOCK` feeds an extra size in from the CI matrix.
+pub fn sched_kv_blocks() -> Vec<usize> {
+    let mut sizes = vec![24, 32, 48];
+    if let Some(extra) = std::env::var("MQ_TEST_KV_BLOCK")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    {
+        if extra > 0 && !sizes.contains(&extra) {
+            sizes.push(extra);
+        }
+    }
+    sizes
+}
+
+/// One lane of a shared-prefix fleet: a request whose prompt reuses the
+/// first `prefix_take` tokens of the fleet's shared system prompt and
+/// then diverges into a private suffix.
+#[derive(Clone, Debug)]
+pub struct Lane {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    /// Tokens of [`FleetTrace::prefix`] this prompt starts with —
+    /// deliberately not always a block multiple, so divergence lands
+    /// mid-block as often as on a boundary.
+    pub prefix_take: usize,
+    pub max_new: usize,
+    /// Scheduler tick at which the lane is submitted (staggered
+    /// admission: later lanes find earlier lanes' prefixes cached).
+    pub submit_at: usize,
+    /// Tick at which `cancel()` fires — strictly after `submit_at`, so
+    /// the lane can be torn out mid-prefill or mid-share (`None` ⇒
+    /// runs to completion).
+    pub cancel_at: Option<usize>,
+}
+
+/// A seeded shared-prefix fleet over one system prompt: staggered
+/// admission, mid-block divergence, and mid-share cancellation events.
+#[derive(Clone, Debug)]
+pub struct FleetTrace {
+    /// The fleet's shared system prompt.
+    pub prefix: Vec<u32>,
+    pub lanes: Vec<Lane>,
+}
+
+impl Shrink for FleetTrace {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.lanes.len() > 1 {
+            // drop halves and drop one lane
+            out.push(FleetTrace {
+                prefix: self.prefix.clone(),
+                lanes: self.lanes[..self.lanes.len() / 2].to_vec(),
+            });
+            out.push(FleetTrace {
+                prefix: self.prefix.clone(),
+                lanes: self.lanes[self.lanes.len() / 2..].to_vec(),
+            });
+            let mut fewer = self.lanes.clone();
+            fewer.pop();
+            out.push(FleetTrace { prefix: self.prefix.clone(),
+                                  lanes: fewer });
+        }
+        // drop the cancellation events, keeping the lane mix
+        if self.lanes.iter().any(|l| l.cancel_at.is_some()) {
+            let lanes = self
+                .lanes
+                .iter()
+                .cloned()
+                .map(|mut l| {
+                    l.cancel_at = None;
+                    l
+                })
+                .collect();
+            out.push(FleetTrace { prefix: self.prefix.clone(), lanes });
+        }
+        out
+    }
+}
+
+/// Draw a fleet: a 8–27-token shared prefix and 2–5 lanes, each taking
+/// a random (block-unaligned in general) cut of it plus a private
+/// suffix; ~1 in 4 lanes carries a cancellation event.
+pub fn gen_fleet(r: &mut Rng) -> FleetTrace {
+    let plen = r.usize(8, 28);
+    let prefix: Vec<u32> =
+        (0..plen).map(|_| 3 + r.usize(0, 90) as u32).collect();
+    let lanes = (0..r.usize(2, 6))
+        .map(|i| {
+            let take = r.usize(1, plen + 1);
+            let mut prompt: Vec<u32> = prefix[..take].to_vec();
+            for _ in 0..r.usize(0, 7) {
+                prompt.push(3 + r.usize(0, 90) as u32);
+            }
+            let submit_at = r.usize(0, 6);
+            let cancel_at = (r.usize(0, 4) == 0)
+                .then(|| submit_at + 1 + r.usize(0, 8));
+            Lane {
+                id: i as u64,
+                prompt,
+                prefix_take: take,
+                max_new: r.usize(1, 8),
+                submit_at,
+                cancel_at,
+            }
+        })
+        .collect();
+    FleetTrace { prefix, lanes }
+}
+
+/// Drive `sched` through the trace: submissions and cancellations fire
+/// at their scheduled ticks, then the scheduler runs dry. Returns the
+/// terminal responses sorted by lane id.
+pub fn drive_fleet(sched: &mut Scheduler, trace: &FleetTrace)
+                   -> Vec<Response> {
+    let horizon = trace
+        .lanes
+        .iter()
+        .map(|l| l.cancel_at.unwrap_or(l.submit_at))
+        .max()
+        .unwrap_or(0);
+    let mut out = Vec::new();
+    let mut tick = 0usize;
+    while tick <= horizon || sched.has_work() {
+        for l in &trace.lanes {
+            if l.submit_at == tick {
+                sched
+                    .submit(Request::new(l.id, l.prompt.clone(), l.max_new))
+                    .expect("fleet exceeds queue_cap");
+            }
+            if l.cancel_at == Some(tick) {
+                sched.cancel(l.id);
+            }
+        }
+        sched.step();
+        for ev in sched.take_events() {
+            if let Event::Done { response } | Event::Error { response } = ev
+            {
+                out.push(response);
+            }
+        }
+        tick += 1;
+        assert!(tick < 100_000, "fleet livelock");
+    }
+    out.sort_by_key(|r| r.id);
+    out
+}

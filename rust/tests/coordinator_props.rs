@@ -3,6 +3,8 @@
 //! never leaked (block-granular paged allocation, DESIGN.md §13), FIFO
 //! admission, backpressure correctness.
 
+mod common;
+
 use std::collections::HashSet;
 
 use mergequant::bench::synthetic_model;
@@ -29,6 +31,8 @@ fn make_scheduler(max_batch: usize, slabs: usize) -> Scheduler {
             prefill_chunk: 0,
             threads: 1,
             kv_dtype: KvDtype::F32,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
         },
     )
 }
@@ -112,6 +116,8 @@ fn fifo_first_token_order() {
             prefill_chunk: 0,
             threads: 1,
             kv_dtype: KvDtype::F32,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
         },
     );
     for i in 0..6u64 {
@@ -191,6 +197,8 @@ fn kv_overflow_mid_chunked_prefill_fails_cleanly() {
             prefill_chunk: 8,
             threads: 1,
             kv_dtype: KvDtype::F32,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
         },
     );
     let oversized: Vec<u32> = (0..40).map(|t| 3 + t % 90).collect();
@@ -226,6 +234,8 @@ fn int8_kv_scheduler_serves_full_workload() {
                 prefill_chunk: 0,
                 threads: 1,
                 kv_dtype: KvDtype::Int8,
+                prefix_cache: false,
+                prefix_cache_blocks: 0,
             },
         );
         for (i, &(plen, mnew)) in workload.iter().enumerate() {
@@ -269,6 +279,8 @@ fn backpressure_queue_cap() {
             prefill_chunk: 0,
             threads: 1,
             kv_dtype: KvDtype::F32,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
         },
     );
     assert!(sched.submit(Request::new(1, vec![3], 2)).is_ok());
@@ -398,6 +410,8 @@ fn cancel_mid_chunked_prefill_frees_blocks() {
             prefill_chunk: 8,
             threads: 1,
             kv_dtype: KvDtype::F32,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
         },
     );
     let long: Vec<u32> = (0..40).map(|t| 3 + t % 90).collect();
@@ -493,6 +507,8 @@ fn multiple_chunked_prefills_ride_concurrently() {
                 prefill_chunk: chunk,
                 threads: 1,
                 kv_dtype: KvDtype::F32,
+                prefix_cache: false,
+                prefix_cache_blocks: 0,
             },
         )
     };
@@ -569,6 +585,8 @@ fn chunked_prefill_same_results_and_bounded_stall() {
                 prefill_chunk: chunk,
                 threads: 1,
                 kv_dtype: KvDtype::F32,
+                prefix_cache: false,
+                prefix_cache_blocks: 0,
             },
         )
     };
@@ -708,6 +726,8 @@ fn paged_scheduler_streams_match_slab_scheduler() {
                 prefill_chunk: 5,
                 threads: 1,
                 kv_dtype: kv,
+                prefix_cache: false,
+                prefix_cache_blocks: 0,
             },
         );
         for i in 0..5u64 {
@@ -755,6 +775,8 @@ fn decode_lanes_finish_cache_full_fifo_under_block_pressure() {
             prefill_chunk: 0,
             threads: 1,
             kv_dtype: KvDtype::F32,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
         },
     );
     let prompt: Vec<u32> = (0..8).map(|t| 3 + t % 90).collect();
@@ -799,6 +821,8 @@ fn stalled_prefills_requeue_newest_deterministically() {
             prefill_chunk: 8,
             threads: 1,
             kv_dtype: KvDtype::F32,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
         },
     );
     let prompt: Vec<u32> = (0..24).map(|t| 3 + t % 90).collect();
@@ -821,6 +845,266 @@ fn stalled_prefills_requeue_newest_deterministically() {
             "stall resolution must be observable");
     assert_eq!(sched.kv_available(), sched.kv_capacity(),
                "requeue leaked blocks");
+}
+
+// ---------------------------------------------------------------------
+// Prefix sharing: CoW refcount accounting + scheduler-level
+// on/off-equivalence (DESIGN.md §14)
+// ---------------------------------------------------------------------
+
+fn make_prefix_scheduler(prefix: bool) -> Scheduler {
+    let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+    Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 6,
+            kv_slabs: 8,
+            kv_block: 16,
+            kv_blocks: 0,
+            max_seq: 48,
+            max_prefills_per_iter: 2,
+            queue_cap: 64,
+            prefill_chunk: 0,
+            threads: 1,
+            kv_dtype: KvDtype::F32,
+            prefix_cache: prefix,
+            prefix_cache_blocks: 0,
+        },
+    )
+}
+
+#[test]
+fn prefix_cache_changes_timing_never_tokens() {
+    // The same seeded shared-prefix fleet (staggered admission,
+    // mid-block divergence, mid-share cancellation) through a prefix-on
+    // and a prefix-off scheduler: completed lanes stream identically;
+    // cancelled lanes are each a prefix of the same pure stream, so the
+    // shorter of the two must be a prefix of the longer (cancellation
+    // at a fixed tick cuts the faster run at a different length).
+    check(1201, 8, common::gen_fleet, |trace| {
+        let mut on = make_prefix_scheduler(true);
+        let mut off = make_prefix_scheduler(false);
+        let rs_on = common::drive_fleet(&mut on, trace);
+        let rs_off = common::drive_fleet(&mut off, trace);
+        if rs_on.len() != trace.lanes.len()
+            || rs_off.len() != trace.lanes.len()
+        {
+            return Err(format!("{}/{} responses for {} lanes",
+                               rs_on.len(), rs_off.len(),
+                               trace.lanes.len()));
+        }
+        for (a, b) in rs_on.iter().zip(&rs_off) {
+            if let Some(e) =
+                a.error.as_deref().or(b.error.as_deref())
+            {
+                return Err(format!("lane {} failed: {e}", a.id));
+            }
+            let cancelled = a.finish == FinishReason::Cancelled
+                || b.finish == FinishReason::Cancelled;
+            if cancelled {
+                let n = a.tokens.len().min(b.tokens.len());
+                if a.tokens[..n] != b.tokens[..n] {
+                    return Err(format!(
+                        "cancelled lane {} diverged before the cut: \
+                         {:?} vs {:?}", a.id, a.tokens, b.tokens));
+                }
+            } else if a.tokens != b.tokens {
+                return Err(format!(
+                    "prefix cache changed lane {}'s stream: {:?} vs \
+                     {:?}", a.id, a.tokens, b.tokens));
+            }
+        }
+        // Drain invariants per mode: off returns everything to the
+        // free list; on deliberately retains the index's blocks.
+        if off.kv_available() != off.kv_capacity()
+            || off.prefix_cached_blocks() != 0
+        {
+            return Err("prefix-off scheduler retained blocks".into());
+        }
+        if on.kv_available() + on.prefix_cached_blocks()
+            != on.kv_capacity()
+        {
+            return Err(format!(
+                "prefix-on drain leak: {} free + {} cached != {}",
+                on.kv_available(), on.prefix_cached_blocks(),
+                on.kv_capacity()));
+        }
+        let m = &on.metrics;
+        if m.prefix_hits > m.prefix_lookups {
+            return Err("more hits than lookups".into());
+        }
+        if m.prefix_hits > 0 && m.prefix_matched_tokens == 0 {
+            return Err("hits recorded without matched tokens".into());
+        }
+        if off.metrics.prefix_lookups != 0 {
+            return Err("prefix-off scheduler consulted the index".into());
+        }
+        Ok(())
+    });
+}
+
+/// Sharing churn script: per step (op, arg) with op ∈ {admit, grow
+/// (CoW via `reserve_writable`), release, attach-shared-clone}.
+fn gen_share_churn(r: &mut Rng) -> Vec<(usize, usize)> {
+    let n = r.usize(6, 48);
+    (0..n).map(|_| (r.usize(0, 4), r.usize(1, 64))).collect()
+}
+
+#[test]
+fn shared_block_churn_accounts_distinct_physical_blocks() {
+    // The §14 refcount ledger: however many tables share a block, the
+    // pool's books count it once — distinct physical blocks held across
+    // every live table + free list == arena, and the alloc/freed
+    // counters track exactly that (attaching an `Arc` clone moves
+    // neither; a shared handle's release frees nothing until it is the
+    // last). CoW growth of shared boundaries rides the same script.
+    check(1717, 24, gen_share_churn, |script| {
+        let bt = 8usize;
+        let max_seq = 48usize;
+        let mut pool = BlockPool::new(8, bt, 2, max_seq, 16);
+        let mut live: Vec<mergequant::engine::KvCache> = Vec::new();
+        for &(op, arg) in script {
+            match op {
+                0 => live.push(pool.new_sequence()),
+                1 if !live.is_empty() => {
+                    let i = arg % live.len();
+                    let want = (arg % max_seq).max(1);
+                    let before = pool.free_blocks();
+                    let need = pool.blocks_needed(&live[i], want);
+                    match pool.reserve_writable(&mut live[i], want) {
+                        Ok(()) => {
+                            if pool.free_blocks() != before - need {
+                                return Err("reserve_writable took a \
+                                            wrong block count".into());
+                            }
+                            // simulate the forward pass writing rows
+                            live[i].len = live[i].len.max(want);
+                        }
+                        Err(missing) => {
+                            if missing == 0 || need <= before {
+                                return Err("failed with blocks \
+                                            free".into());
+                            }
+                            if pool.free_blocks() != before {
+                                return Err("failed reserve must be \
+                                            all-or-nothing".into());
+                            }
+                        }
+                    }
+                }
+                2 if !live.is_empty() => {
+                    let i = arg % live.len();
+                    let mut c = live.swap_remove(i);
+                    pool.release(&mut c);
+                }
+                _ if !live.is_empty() => {
+                    // attach a shared clone of a donor's prefix — the
+                    // admission path of a prefix hit
+                    let d = arg % live.len();
+                    if live[d].len > 0 {
+                        let take = (arg % live[d].len) + 1;
+                        let mut c = pool.new_sequence();
+                        for b in 0..take.div_ceil(bt) {
+                            c.push_block(live[d].block_arc(b));
+                        }
+                        c.len = take;
+                        live.push(c);
+                    }
+                }
+                _ => {}
+            }
+            let distinct: HashSet<*const mergequant::engine::KvBlock> =
+                live.iter()
+                    .flat_map(|c| {
+                        (0..c.n_blocks()).map(|b| c.block_ptr(b))
+                    })
+                    .collect();
+            if distinct.len() + pool.free_blocks()
+                != pool.total_blocks()
+            {
+                return Err(format!(
+                    "physical ledger broke: {} distinct + {} free != \
+                     {} total", distinct.len(), pool.free_blocks(),
+                    pool.total_blocks()));
+            }
+            if pool.blocks_alloc() - pool.blocks_freed()
+                != pool.allocated_blocks() as u64
+            {
+                return Err("alloc/freed counters drifted under \
+                            sharing".into());
+            }
+        }
+        for mut c in live {
+            pool.release(&mut c);
+        }
+        if pool.free_blocks() != pool.total_blocks() {
+            return Err("sharing churn leaked blocks".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+#[should_panic(expected = "double free")]
+fn double_release_panics_under_cow_sharing() {
+    // The PR-5 double-free contract survives sharing: a table that CoW'd
+    // a shared boundary and grew private blocks still panics on a second
+    // release rather than corrupting the free list.
+    let mut pool = BlockPool::new(8, 8, 2, 48, 16);
+    let mut donor = pool.new_sequence();
+    pool.reserve_writable(&mut donor, 12).unwrap();
+    donor.len = 12;
+    let mut c = pool.new_sequence();
+    c.push_block(donor.block_arc(0));
+    c.push_block(donor.block_arc(1));
+    c.len = 12;
+    pool.reserve_writable(&mut c, 20).unwrap(); // CoW + growth
+    pool.release(&mut c);
+    pool.release(&mut c);
+}
+
+#[test]
+fn prefix_pressure_evicts_cached_blocks_and_balances_at_drain() {
+    // A tight arena (6 blocks × 8 tokens) with the index unbounded:
+    // retained prefixes eventually occupy blocks that admissions and
+    // decode growth need, so the scheduler must evict LRU leaves under
+    // pressure instead of stalling or failing — and the books balance
+    // at drain.
+    let engine = Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+    let mut sched = Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 2,
+            kv_slabs: 0,
+            kv_block: 8,
+            kv_blocks: 6,
+            max_seq: 32,
+            max_prefills_per_iter: 1,
+            queue_cap: 16,
+            prefill_chunk: 0,
+            threads: 1,
+            kv_dtype: KvDtype::F32,
+            prefix_cache: true,
+            prefix_cache_blocks: 0,
+        },
+    );
+    for i in 0..4u64 {
+        let prompt: Vec<u32> =
+            (0..16).map(|t| 3 + (t * 3 + i as u32 * 17) % 90).collect();
+        sched.submit(Request::new(i, prompt, 2)).unwrap();
+        let rs = sched.run_to_completion();
+        assert_eq!(rs.len(), 1);
+        assert!(rs[0].error.is_none(),
+                "pressure must evict, not fail: {:?}", rs[0].error);
+        assert_eq!(rs[0].tokens.len(), 2);
+    }
+    assert_eq!(sched.metrics.failed, 0);
+    assert!(sched.metrics.prefix_evicted_blocks >= 2,
+            "retention must have been pushed out under pressure (got \
+             {})", sched.metrics.prefix_evicted_blocks);
+    assert_eq!(sched.kv_available() + sched.prefix_cached_blocks(),
+               sched.kv_capacity(),
+               "eviction under pressure leaked blocks");
 }
 
 #[test]
@@ -846,6 +1130,8 @@ fn paged_admission_outpacks_slab_admission_at_equal_bytes() {
                 prefill_chunk: 0,
                 threads: 1,
                 kv_dtype: KvDtype::F32,
+                prefix_cache: false,
+                prefix_cache_blocks: 0,
             },
         );
         for i in 0..16u64 {

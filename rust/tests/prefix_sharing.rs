@@ -1,0 +1,292 @@
+//! Shared-prefix paged KV determinism suite (DESIGN.md §14) — the CI
+//! matrix target for copy-on-write block sharing + the radix prefix
+//! cache.
+//!
+//! The pinned claim: turning `prefix_cache` on changes *when* tokens
+//! arrive (prefill skipped for matched prefixes), never *what* tokens
+//! are generated. Every lane of a shared-prefix fleet — staggered
+//! admission, divergence mid-block, cancellation mid-share — streams
+//! bitwise identically to a cold-start unshared replay of the same
+//! prompt, across {threads}×{kv f32,int8}×{kv_block}×{chunking}.
+//! Cancellation truncates but never alters: a cancelled lane's stream
+//! is a prefix of its cold replay.
+//!
+//! CI matrix knobs: `MQ_TEST_THREADS`, `MQ_TEST_KV`, `MQ_TEST_KV_BLOCK`
+//! (DESIGN.md §7/§10/§13).
+
+mod common;
+
+use mergequant::bench::synthetic_model;
+use mergequant::coordinator::{
+    FinishReason, Request, Scheduler, SchedulerConfig,
+};
+use mergequant::engine::{Engine, KvDtype};
+use mergequant::util::proptest::check;
+
+use common::{drive_fleet, gen_fleet, FleetTrace};
+
+fn fleet_scheduler(prefix_on: bool, threads: usize, kv: KvDtype,
+                   kv_block: usize, chunk: usize) -> Scheduler {
+    let engine = Engine::with_threads(
+        synthetic_model("mergequant", 64, 128, 1, 96), threads);
+    Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 8,
+            kv_slabs: 8,
+            kv_block,
+            kv_blocks: 0,
+            max_seq: 48,
+            max_prefills_per_iter: 2,
+            queue_cap: 64,
+            prefill_chunk: chunk,
+            threads,
+            kv_dtype: kv,
+            prefix_cache: prefix_on,
+            prefix_cache_blocks: 0,
+        },
+    )
+}
+
+/// Cold-start unshared replay: the lane's prompt alone through a fresh
+/// prefix-off scheduler — the golden stream sharing must reproduce.
+fn solo_stream(threads: usize, kv: KvDtype, kv_block: usize,
+               prompt: &[u32], max_new: usize) -> Vec<u32> {
+    let mut sched = fleet_scheduler(false, threads, kv, kv_block, 0);
+    sched.submit(Request::new(0, prompt.to_vec(), max_new)).unwrap();
+    let rs = sched.run_to_completion();
+    assert!(rs[0].error.is_none(), "golden failed: {:?}", rs[0].error);
+    rs[0].tokens.clone()
+}
+
+fn check_fleet_against_goldens(trace: &FleetTrace, threads: usize,
+                               kv: KvDtype, kv_block: usize,
+                               goldens: &[Vec<u32>], chunk: usize)
+                               -> Result<(), String> {
+    let mut sched = fleet_scheduler(true, threads, kv, kv_block, chunk);
+    let rs = drive_fleet(&mut sched, trace);
+    if rs.len() != trace.lanes.len() {
+        return Err(format!("{} responses for {} lanes (kv {kv:?}, \
+                            threads {threads}, kv_block {kv_block}, \
+                            chunk {chunk})",
+                           rs.len(), trace.lanes.len()));
+    }
+    for (r, golden) in rs.iter().zip(goldens) {
+        if let Some(e) = &r.error {
+            return Err(format!("lane {} failed: {e}", r.id));
+        }
+        if r.finish == FinishReason::Cancelled {
+            // Cancellation truncates the stream, never rewrites it.
+            if r.tokens.len() > golden.len()
+                || r.tokens[..] != golden[..r.tokens.len()]
+            {
+                return Err(format!(
+                    "cancelled lane {} diverged from its cold replay: \
+                     {:?} not a prefix of {:?} (kv {kv:?}, threads \
+                     {threads}, kv_block {kv_block}, chunk {chunk})",
+                    r.id, r.tokens, golden));
+            }
+        } else if &r.tokens != golden {
+            return Err(format!(
+                "lane {} diverged from its cold replay: {:?} != {:?} \
+                 (kv {kv:?}, threads {threads}, kv_block {kv_block}, \
+                 chunk {chunk})",
+                r.id, r.tokens, golden));
+        }
+    }
+    // The index deliberately retains blocks past completion; every
+    // block is either free or pinned by the trie at drain.
+    if sched.kv_available() + sched.prefix_cached_blocks()
+        != sched.kv_capacity()
+    {
+        return Err(format!(
+            "drain leak: {} free + {} cached != {} capacity",
+            sched.kv_available(), sched.prefix_cached_blocks(),
+            sched.kv_capacity()));
+    }
+    Ok(())
+}
+
+#[test]
+fn shared_prefix_fleets_bitwise_match_cold_replay() {
+    for kv in common::kv_dtypes() {
+        for &threads in &common::thread_counts() {
+            for kv_block in common::sched_kv_blocks() {
+                check(4099 + threads as u64 + kv_block as u64, 3,
+                      gen_fleet, |trace| {
+                    let goldens: Vec<Vec<u32>> = trace
+                        .lanes
+                        .iter()
+                        .map(|l| solo_stream(threads, kv, kv_block,
+                                             &l.prompt, l.max_new))
+                        .collect();
+                    for chunk in [0usize, 5] {
+                        check_fleet_against_goldens(
+                            trace, threads, kv, kv_block, &goldens,
+                            chunk)?;
+                    }
+                    Ok(())
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn full_hit_admission_prefills_exactly_one_row() {
+    // A prompt whose frozen blocks are fully cached skips its entire
+    // prefill except the final token (the lookup cap): the admission's
+    // prefill span is ONE row, so TTFT collapses to one decode-sized
+    // engine call — asserted through the row metrics, not wall time.
+    let mut sched = fleet_scheduler(true, 1, KvDtype::F32, 8, 0);
+    let prompt: Vec<u32> = (0..24).map(|t| 3 + t % 90).collect();
+    sched.submit(Request::new(1, prompt.clone(), 4)).unwrap();
+    let first = sched.run_to_completion();
+    let rows_cold = sched.metrics.prefill_rows;
+    let calls_cold = sched.metrics.forward_calls;
+    assert_eq!(rows_cold, 24, "cold admission prefills every row");
+
+    sched.submit(Request::new(2, prompt, 4)).unwrap();
+    let second = sched.run_to_completion();
+    assert_eq!(second[0].tokens, first[0].tokens,
+               "prefix hit changed the stream");
+    assert_eq!(sched.metrics.prefill_rows - rows_cold, 1,
+               "full hit must prefill only the final prompt token");
+    assert_eq!(sched.metrics.forward_calls - calls_cold, 4,
+               "full-hit TTFT is one decode-sized call: 4 calls for 4 \
+                tokens");
+    assert_eq!(sched.metrics.prefix_hits, 1);
+    assert_eq!(sched.metrics.prefix_lookups, 2);
+    assert_eq!(sched.metrics.prefix_matched_tokens, 23,
+               "23 of 24 tokens attached from cache (3 blocks: 2 full \
+                + the boundary)");
+}
+
+#[test]
+fn mid_block_divergence_borrows_boundary_and_stays_bitwise() {
+    // Lane B shares A's prompt up to token 23 — inside A's second
+    // 16-token block. The trie hands back the full block as B's
+    // partially-filled boundary; the scheduler must CoW it before B's
+    // first write, and B's stream must equal its cold replay.
+    let prompt_a: Vec<u32> = (0..40).map(|t| 3 + (t * 7) % 90).collect();
+    let mut prompt_b = prompt_a[..23].to_vec();
+    prompt_b.extend((0..9).map(|t| 5 + (t * 11) % 90));
+    let golden_b = solo_stream(1, KvDtype::F32, 16, &prompt_b, 6);
+
+    let mut sched = fleet_scheduler(true, 1, KvDtype::F32, 16, 0);
+    sched.submit(Request::new(1, prompt_a, 6)).unwrap();
+    let _ = sched.run_to_completion();
+    sched.submit(Request::new(2, prompt_b, 6)).unwrap();
+    let rs = sched.run_to_completion();
+    assert_eq!(rs[0].tokens, golden_b,
+               "mid-block divergence corrupted the stream");
+    assert_eq!(sched.metrics.prefix_hits, 1);
+    assert_eq!(sched.metrics.prefix_matched_tokens, 23,
+               "16 (full block) + 7 rows of the borrowed boundary");
+    assert!(sched.metrics.prefix_bytes_saved > 0,
+            "sharing must be visible while both tables overlap");
+    assert_eq!(sched.kv_available() + sched.prefix_cached_blocks(),
+               sched.kv_capacity());
+}
+
+#[test]
+fn cancellation_mid_share_frees_private_blocks_keeps_prefix() {
+    // Three lanes share a 32-token prefix; the middle one is cancelled
+    // mid-decode. Its private blocks must come back (the shared ones
+    // stay pinned by the survivors + trie), survivors must stream
+    // exactly their cold replays, and the pool must balance at drain.
+    let prefix: Vec<u32> = (0..32).map(|t| 3 + (t * 5) % 90).collect();
+    let prompts: Vec<Vec<u32>> = (0..3u32)
+        .map(|i| {
+            let mut p = prefix.clone();
+            p.extend((0..4).map(|t| 7 + (t * 13 + i) % 90));
+            p
+        })
+        .collect();
+    let goldens: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| solo_stream(1, KvDtype::F32, 16, p, 8))
+        .collect();
+
+    let mut sched = fleet_scheduler(true, 1, KvDtype::F32, 16, 0);
+    // Stagger: lane 0 prefills cold and populates the index, then
+    // lanes 1 and 2 admit against it and share its prefix blocks.
+    sched.submit(Request::new(0, prompts[0].clone(), 8)).unwrap();
+    sched.step();
+    sched.step();
+    sched.submit(Request::new(1, prompts[1].clone(), 8)).unwrap();
+    sched.submit(Request::new(2, prompts[2].clone(), 8)).unwrap();
+    for _ in 0..3 {
+        sched.step();
+    }
+    sched.cancel(1); // a sharing lane, torn out mid-decode
+    let mut rs = sched.run_to_completion();
+    rs.sort_by_key(|r| r.id);
+    assert_eq!(rs.len(), 3);
+    for r in &rs {
+        assert!(r.error.is_none(), "lane {} error {:?}", r.id, r.error);
+    }
+    assert_eq!(rs[1].finish, FinishReason::Cancelled);
+    assert!(rs[1].tokens[..] == goldens[1][..rs[1].tokens.len()],
+            "cancelled lane rewrote its stream");
+    for i in [0usize, 2] {
+        assert_eq!(rs[i].tokens, goldens[i],
+                   "survivor lane {i} diverged after the cancellation");
+    }
+    assert!(sched.metrics.prefix_shared_blocks > 0,
+            "the fleet must actually have shared blocks");
+    assert_eq!(sched.kv_available() + sched.prefix_cached_blocks(),
+               sched.kv_capacity(),
+               "cancellation mid-share leaked blocks");
+    // The retained prefix still serves: a fourth lane full-hits.
+    let lookups = sched.metrics.prefix_lookups;
+    sched.submit(Request::new(9, prompts[0].clone(), 8)).unwrap();
+    let again = sched.run_to_completion();
+    assert_eq!(again[0].tokens, goldens[0]);
+    assert_eq!(sched.metrics.prefix_lookups, lookups + 1);
+    assert_eq!(sched.metrics.prefix_hits, 3,
+               "lanes 1 and 2 hit lane 0's prefix, then the \
+                re-submission hits again after the cancellation");
+}
+
+#[test]
+fn capacity_bound_evicts_lru_and_report_carries_hit_rate() {
+    // A 4-block index cap forces LRU leaf eviction while serving; the
+    // metrics line must expose the hit-rate for the serve_e2e CI step.
+    let engine = Engine::with_threads(
+        synthetic_model("mergequant", 64, 128, 1, 96), 1);
+    let mut sched = Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 4,
+            kv_slabs: 8,
+            kv_block: 8,
+            kv_blocks: 0,
+            max_seq: 48,
+            max_prefills_per_iter: 2,
+            queue_cap: 64,
+            prefill_chunk: 0,
+            threads: 1,
+            kv_dtype: KvDtype::F32,
+            prefix_cache: true,
+            prefix_cache_blocks: 4,
+        },
+    );
+    for i in 0..6u64 {
+        // six distinct 16-token prompts: 2 full blocks each, 12 > cap 4
+        let prompt: Vec<u32> =
+            (0..16).map(|t| 3 + (t * 3 + i as u32 * 17) % 90).collect();
+        sched.submit(Request::new(i, prompt, 2)).unwrap();
+        let rs = sched.run_to_completion();
+        assert!(rs[0].error.is_none());
+    }
+    assert!(sched.prefix_cached_blocks() <= 4,
+            "index exceeded its configured capacity");
+    assert!(sched.metrics.prefix_evicted_blocks >= 8,
+            "LRU eviction must have cycled the index");
+    assert_eq!(sched.kv_available() + sched.prefix_cached_blocks(),
+               sched.kv_capacity());
+    let report = sched.metrics.report();
+    assert!(report.contains("prefix_hit_rate="), "{report}");
+    assert!(report.contains("prefix_cached_blocks="), "{report}");
+}

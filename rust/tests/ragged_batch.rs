@@ -8,9 +8,12 @@
 //! CI matrix knobs (DESIGN.md §7/§10): `MQ_TEST_THREADS` feeds an extra
 //! thread count into the sweeps, `MQ_TEST_KV` restricts the dtype axis.
 
+mod common;
+
 use std::collections::VecDeque;
 
 use mergequant::bench::synthetic_model;
+use mergequant::coordinator::BlockPool;
 use mergequant::engine::{
     BatchPlan, Engine, EngineError, KvCache, KvDtype, SpanLogits, Workspace,
 };
@@ -471,6 +474,134 @@ fn duplicate_lane_in_plan_panics() {
     plan.push_span(0, &[4], SpanLogits::Last);
     let mut refs = [&mut c];
     let _ = engine.forward_batch(&plan, &mut refs, &mut ws);
+}
+
+// ---------------------------------------------------------------------
+// Property: shared-prefix block tables + CoW ≡ cold unshared replay,
+// bitwise (DESIGN.md §14) — the engine-level half of the prefix-sharing
+// determinism suite. Frozen KV rows are pure functions of the token
+// prefix, so lanes reading another lane's blocks through Arc handles
+// must emit the exact bits of a private prefill of the same tokens.
+// ---------------------------------------------------------------------
+
+/// Run one lane: a single prefill span (the unmatched prompt tail) and
+/// then `dec` teacher-forced decode steps; returns every emitted logits
+/// row as bits. The caller has already reserved the prompt's blocks.
+fn run_lane(engine: &Engine, ws: &mut Workspace, pool: &mut BlockPool,
+            c: &mut KvCache, span: &[u32], dec: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut plan = BatchPlan::new();
+    plan.push_span(0, span, SpanLogits::Last);
+    let mut refs = [&mut *c];
+    engine.forward_batch(&plan, &mut refs, ws).unwrap();
+    out.extend(bits(&ws.logits));
+    for &t in dec {
+        pool.reserve_writable(c, c.len + 1)
+            .expect("decode growth exceeds the test arena");
+        let mut plan = BatchPlan::new();
+        plan.push_span(0, std::slice::from_ref(&t), SpanLogits::Last);
+        let mut refs = [&mut *c];
+        engine.forward_batch(&plan, &mut refs, ws).unwrap();
+        out.extend(bits(&ws.logits));
+    }
+    out
+}
+
+#[test]
+fn shared_prefix_tables_bitwise_equal_cold_replay() {
+    const BT: usize = 8;
+    for kv in kv_dtypes() {
+        for &threads in &thread_counts() {
+            let engine = test_engine(threads);
+            let cfg = engine.config().clone();
+            check(5381 + threads as u64, 4, common::gen_fleet, |trace| {
+                let mut pool = BlockPool::with_dtype(
+                    kv, 48, BT, cfg.n_layers, 64, cfg.d_model);
+                let mut ws = Workspace::new();
+
+                // Donor lane: prefill the fleet's shared prefix once;
+                // its frozen blocks are what every lane borrows.
+                let mut donor = pool.new_sequence();
+                pool.reserve_writable(&mut donor, trace.prefix.len())
+                    .expect("donor exceeds the test arena");
+                let mut plan = BatchPlan::new();
+                plan.push_span(0, &trace.prefix, SpanLogits::None);
+                let mut refs = [&mut donor];
+                engine.forward_batch(&plan, &mut refs, &mut ws).unwrap();
+
+                // Keep every shared table alive until the end so blocks
+                // are multiply shared while later lanes attach.
+                let mut held: Vec<KvCache> = Vec::new();
+                for lane in &trace.lanes {
+                    let matched =
+                        lane.prefix_take.min(lane.prompt.len() - 1);
+                    let dec: Vec<u32> = (0..3)
+                        .map(|s| 3 + ((lane.id as usize * 7 + s * 13)
+                                      % 90) as u32)
+                        .collect();
+
+                    // Shared run: attach the donor's covering blocks
+                    // (the last one possibly part-full — the CoW
+                    // boundary), then reserve writable growth.
+                    let mut c = pool.new_sequence();
+                    let full = matched / BT;
+                    for b in 0..full {
+                        c.push_block(donor.block_arc(b));
+                    }
+                    if matched % BT != 0 {
+                        c.push_block(donor.block_arc(full));
+                    }
+                    c.len = matched;
+                    let was_shared = c.shared_blocks();
+                    pool.reserve_writable(&mut c, lane.prompt.len())
+                        .expect("lane exceeds the test arena");
+                    if c.shared_blocks() != full {
+                        return Err(format!(
+                            "lane {}: {} shared blocks after CoW, want \
+                             the {full} frozen ones (had {was_shared}; \
+                             kv {kv:?}, threads {threads})",
+                            lane.id, c.shared_blocks()));
+                    }
+                    let got = run_lane(&engine, &mut ws, &mut pool,
+                                       &mut c, &lane.prompt[matched..],
+                                       &dec);
+                    held.push(c);
+
+                    // Cold unshared replay of the identical token
+                    // sequence: whole prompt privately prefilled.
+                    let mut c2 = pool.new_sequence();
+                    pool.reserve_writable(&mut c2, lane.prompt.len())
+                        .expect("cold lane exceeds the test arena");
+                    let want = run_lane(&engine, &mut ws, &mut pool,
+                                        &mut c2, &lane.prompt, &dec);
+                    pool.release(&mut c2);
+
+                    if got != want {
+                        return Err(format!(
+                            "lane {} (take {}, matched {matched}) \
+                             diverged from cold replay (kv {kv:?}, \
+                             threads {threads})",
+                            lane.id, lane.prefix_take));
+                    }
+                }
+                for mut c in held {
+                    pool.release(&mut c);
+                }
+                pool.release(&mut donor);
+                if pool.free_blocks() != pool.total_blocks() {
+                    return Err(format!(
+                        "pool leaked: {} free of {} after release",
+                        pool.free_blocks(), pool.total_blocks()));
+                }
+                if pool.blocks_alloc() != pool.blocks_freed() {
+                    return Err(format!(
+                        "alloc/freed imbalance at drain: {} vs {}",
+                        pool.blocks_alloc(), pool.blocks_freed()));
+                }
+                Ok(())
+            });
+        }
+    }
 }
 
 #[test]

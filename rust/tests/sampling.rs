@@ -204,6 +204,8 @@ fn run_workload(threads: usize, kv: KvDtype, prefill_chunk: usize)
             prefill_chunk,
             threads,
             kv_dtype: kv,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
         },
     );
     for (i, (prompt, params)) in workload().into_iter().enumerate() {
@@ -262,6 +264,8 @@ fn scheduler_greedy_lane_unaffected_by_sampled_neighbours() {
             prefill_chunk: 0,
             threads: 1,
             kv_dtype: KvDtype::F32,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
         },
     );
     for (i, (prompt, _)) in workload().into_iter().enumerate() {

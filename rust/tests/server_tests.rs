@@ -32,6 +32,8 @@ fn server_with(max_batch: usize, kv_slabs: usize, max_seq: usize,
             prefill_chunk: 0,
             threads: 1,
             kv_dtype: KvDtype::F32,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
         },
     )
 }
