@@ -29,7 +29,8 @@ use mergequant::bench::synthetic_model;
 use mergequant::cli::Args;
 use mergequant::coordinator::server::TcpGateway;
 use mergequant::coordinator::{
-    Event, FinishReason, GenerationParams, SchedulerConfig, Server,
+    Event, FinishReason, GenerationParams, Request, Scheduler,
+    SchedulerConfig, Server,
 };
 use mergequant::engine::{Engine, QModel};
 use mergequant::util::json::Json;
@@ -82,6 +83,7 @@ fn api_demo(threads: usize) -> anyhow::Result<()> {
             kv_dtype: mergequant::engine::KvDtype::F32,
             prefix_cache: true,
             prefix_cache_blocks: 64,
+            max_decode_latency: 0,
         },
     );
 
@@ -98,6 +100,8 @@ fn api_demo(threads: usize) -> anyhow::Result<()> {
             top_p: 0.95,
             seed: 7,
             stop_tokens: Vec::new(),
+            priority: 0,
+            deadline_ms: None,
         })
         .map_err(anyhow::Error::msg)?;
     // (c) greedy request — pends: both slabs are taken.
@@ -152,6 +156,80 @@ fn api_demo(threads: usize) -> anyhow::Result<()> {
 }
 
 // ---------------------------------------------------------------------
+// Part 1b: bursty mixed-priority preemption demo (DESIGN.md §15)
+// ---------------------------------------------------------------------
+
+/// A high-class burst lands on a dry block pool: the low-class decode
+/// lane is preempted (its blocks handed to the newcomer), the burst is
+/// served, and the victim resumes — streaming **bitwise** the tokens the
+/// uninterrupted `Engine::generate` run produces. Driven synchronously
+/// through `Scheduler::step` so the interleaving is deterministic (the
+/// report line at the end is what CI greps `preemptions=` /
+/// `slo_violations=` from).
+fn preemption_demo(threads: usize) -> anyhow::Result<()> {
+    let (model, real) = build_model("mergequant")?;
+    println!("== priority preemption demo ({}) ==",
+             if real { "mergequant bundle" } else { "synthetic weights" });
+    // Golden: the low-class request run uninterrupted on its own engine.
+    let low_prompt: Vec<u32> = (0..49).map(|i| 3 + (i * 5) % 90).collect();
+    let golden = Engine::new(model).generate(&low_prompt, 12, 64)?;
+
+    // Arena of exactly 4 blocks × 16 tokens: the 49-token low-class
+    // prompt takes all four, so the high-class arrival finds the free
+    // list empty and *must* preempt to be admitted.
+    let mut sched = Scheduler::new(
+        Engine::with_threads(build_model("mergequant")?.0, threads),
+        SchedulerConfig {
+            max_batch: 4,
+            kv_slabs: 0,
+            kv_block: 16,
+            kv_blocks: 4,
+            max_seq: 64,
+            max_prefills_per_iter: 2,
+            queue_cap: 16,
+            prefill_chunk: 0,
+            threads,
+            kv_dtype: mergequant::engine::KvDtype::F32,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
+            max_decode_latency: 0,
+        },
+    );
+    // Low-class background request with an impossible deadline (counts
+    // one SLO violation; deadlines are observational — DESIGN.md §15).
+    sched.submit(Request::with_params(1, low_prompt, GenerationParams {
+        priority: 0,
+        deadline_ms: Some(0),
+        ..GenerationParams::greedy(12)
+    })).map_err(|r| anyhow::anyhow!("submit {} rejected", r.id))?;
+    sched.step(); // prefill + first token: all 4 blocks held
+    sched.step(); // second token
+    // …the interactive burst arrives.
+    sched.submit(Request::with_params(
+        2, (0..16).map(|i| 5 + i * 3).collect(), GenerationParams {
+            priority: 2,
+            ..GenerationParams::greedy(8)
+        })).map_err(|r| anyhow::anyhow!("submit {} rejected", r.id))?;
+    let mut rs = sched.run_to_completion();
+    rs.sort_by_key(|r| r.id);
+
+    assert_eq!(sched.preemption_log(), &[1],
+               "the class-0 lane must be the (only) victim");
+    assert_eq!(rs[1].finish, FinishReason::Length, "burst must complete");
+    assert_eq!(rs[0].finish, FinishReason::Length,
+               "the victim resumes and finishes — never cache_full");
+    assert_eq!(rs[0].tokens, golden,
+               "preempt/resume must be bitwise invisible in the stream");
+    println!("victim  [id 1]: preempted by the class-2 burst, resumed, \
+              {} tokens — matches Engine::generate golden ✓",
+             rs[0].tokens.len());
+    println!("burst   [id 2]: class 2, {} tokens, admitted into the \
+              victim's blocks", rs[1].tokens.len());
+    println!("scheduler: {}\n", sched.metrics.report());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
 // Part 2: closed-loop fleet over the v2 streaming TCP protocol
 // ---------------------------------------------------------------------
 
@@ -198,6 +276,7 @@ fn drive(method: &str, n_requests: usize, n_clients: usize,
             kv_dtype: mergequant::engine::KvDtype::F32,
             prefix_cache: false,
             prefix_cache_blocks: 0,
+            max_decode_latency: 0,
         },
     ));
     let gateway = TcpGateway::start(server.clone(), 0)?;
@@ -292,6 +371,7 @@ fn main() -> anyhow::Result<()> {
     let kernel_threads = args.get_usize("threads", 1);
 
     api_demo(kernel_threads)?;
+    preemption_demo(kernel_threads)?;
 
     if !artifacts_dir().join("models/tiny-llama-s/mergequant.qmod").exists() {
         eprintln!("(skipping fleet run: run `make artifacts` first)");

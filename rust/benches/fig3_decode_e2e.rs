@@ -32,6 +32,11 @@
 //! over one system prompt with the radix prefix cache on vs off:
 //! storing the prefix blocks once lifts admitted concurrency at a
 //! tight arena, and skipping the matched prefill collapses TTFT.
+//!
+//! Seventh axis: **bursty mixed-priority fleet** (DESIGN.md §15) — a
+//! high-class burst landing on a saturated arena with priority classes
+//! on vs off: preemption collapses the burst's TTFT from
+//! "wait out the whole low-class decode" to ~2 forward calls.
 
 mod common;
 
@@ -257,6 +262,7 @@ fn main() {
                     kv_dtype: KvDtype::F32,
                     prefix_cache: false,
                     prefix_cache_blocks: 0,
+                    max_decode_latency: 0,
                 },
             );
             let vocab = sched.engine().config().vocab as u32;
@@ -317,6 +323,7 @@ fn main() {
                     kv_dtype: KvDtype::F32,
                     prefix_cache: prefix,
                     prefix_cache_blocks: 0,
+                    max_decode_latency: 0,
                 },
             );
             let vocab = sched.engine().config().vocab as u32;
@@ -352,6 +359,74 @@ fn main() {
         b.record("unshared fleet gen_tok/s", u_tps);
         b.record("shared fleet gen_tok/s", s_tps);
         b.record("shared_vs_unshared fleet ttft_p50", u_ttft / s_ttft);
+    }
+
+    // ---- preemption axis: bursty mixed-priority fleet (DESIGN.md §15)
+    // — a long low-class decode lane holds a 4-block arena when a
+    // high-class burst arrives. With classes, the burst preempts the
+    // lane and its first token lands ~2 forward calls after arrival;
+    // without, it queues behind the whole decode. Recorded: the burst's
+    // wall-clock TTFT both ways and the preemption count (the victim's
+    // stream is bitwise unchanged — tests/preemption.rs pins that).
+    {
+        use mergequant::coordinator::{
+            GenerationParams, Request, Scheduler, SchedulerConfig,
+        };
+        let run_burst = |classed: bool| -> (f64, u64) {
+            let (engine, _) = common::engine_or_synthetic("tiny-llama-s",
+                                                          "mergequant");
+            let mut sched = Scheduler::new(
+                engine,
+                SchedulerConfig {
+                    max_batch: 4,
+                    kv_slabs: 0,
+                    kv_block: 16,
+                    kv_blocks: 4,
+                    max_seq: 64,
+                    max_prefills_per_iter: 2,
+                    queue_cap: 16,
+                    prefill_chunk: 0,
+                    threads: 1,
+                    kv_dtype: KvDtype::F32,
+                    prefix_cache: false,
+                    prefix_cache_blocks: 0,
+                    max_decode_latency: 0,
+                },
+            );
+            let vocab = sched.engine().config().vocab as u32;
+            let low: Vec<u32> = (0..16)
+                .map(|t| 3 + (t as u32 * 7) % (vocab - 3)).collect();
+            let high: Vec<u32> = (0..33)
+                .map(|t| 5 + (t as u32 * 3) % (vocab - 3)).collect();
+            sched.submit(Request::new(0, low, 40)).unwrap();
+            sched.step();
+            sched.step();
+            let burst_at = std::time::Instant::now();
+            sched.submit(Request::with_params(1, high, GenerationParams {
+                priority: if classed { 2 } else { 0 },
+                ..GenerationParams::greedy(4)
+            })).unwrap();
+            let mut ttft = f64::NAN;
+            while sched.has_work() {
+                sched.step();
+                for ev in sched.take_events() {
+                    use mergequant::coordinator::Event;
+                    if ttft.is_nan()
+                        && matches!(ev, Event::Token { id: 1, .. })
+                    {
+                        ttft = burst_at.elapsed().as_secs_f64();
+                    }
+                }
+            }
+            (ttft, sched.metrics.preemptions)
+        };
+        let (c_ttft, c_preempt) = run_burst(true);
+        let (u_ttft, u_preempt) = run_burst(false);
+        b.record("classed burst ttft_ms", c_ttft * 1e3);
+        b.record("unclassed burst ttft_ms", u_ttft * 1e3);
+        b.record("classed_vs_unclassed burst ttft", u_ttft / c_ttft);
+        b.record("classed burst preemptions", c_preempt as f64);
+        b.record("unclassed burst preemptions", u_preempt as f64);
     }
 
     // ---- threads axis: fixed batch 8, parallel-kernel scaling ----

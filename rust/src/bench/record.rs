@@ -1,17 +1,21 @@
 //! `mergequant bench` — the versioned benchmark suite behind the
 //! repo-root `BENCH_<n>.json` snapshots: Figure-3 decode throughput per
-//! method, Table-2 prefill throughput, Table-3 memory accounting, and
-//! the PR-6 shared-prefix fleet axis (prefix cache on vs off against
-//! the PR-5 paged baseline, DESIGN.md §14).
+//! method, Table-2 prefill throughput, Table-3 memory accounting, the
+//! PR-6 shared-prefix fleet axis (prefix cache on vs off against the
+//! PR-5 paged baseline, DESIGN.md §14), and the PR-7 bursty
+//! mixed-priority axis (preemptive classes on vs off, DESIGN.md §15).
 //!
 //! Counter-valued fields (prefill rows, hit rate, matched tokens, peak
-//! concurrency) are deterministic — identical on every machine — while
-//! wall-clock fields (tok/s, TTFT) are machine-dependent and refreshed
-//! with `mergequant bench --record`.
+//! concurrency, preemption counts, TTFT in forward calls) are
+//! deterministic — identical on every machine — while wall-clock fields
+//! (tok/s, TTFT in ms) are machine-dependent and refreshed with
+//! `mergequant bench --record`.
 
 use std::time::Instant;
 
-use crate::coordinator::{Request, Scheduler, SchedulerConfig};
+use crate::coordinator::{
+    Event, GenerationParams, Request, Scheduler, SchedulerConfig,
+};
 use crate::engine::{memory, Engine, KvCache, KvDtype, Workspace};
 use crate::util::json::{num, obj, s, Json};
 
@@ -99,8 +103,91 @@ fn fleet_scheduler(prefix: bool) -> Scheduler {
             kv_dtype: KvDtype::F32,
             prefix_cache: prefix,
             prefix_cache_blocks: 0,
+            max_decode_latency: 0,
         },
     )
+}
+
+/// Arena of exactly 4 blocks × 16 tokens for the preemption axis: the
+/// low-class lane's decode growth plus the 33-token high-class prompt
+/// cannot coexist, so the classed run must preempt and the unclassed
+/// run must queue.
+fn preempt_scheduler() -> Scheduler {
+    let engine = method_engine("mergequant");
+    Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 4,
+            kv_slabs: 0,
+            kv_block: 16,
+            kv_blocks: 4,
+            max_seq: 64,
+            max_prefills_per_iter: 2,
+            queue_cap: 64,
+            prefill_chunk: 0,
+            threads: 1,
+            kv_dtype: KvDtype::F32,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
+            max_decode_latency: 0,
+        },
+    )
+}
+
+/// One bursty mixed-priority run (DESIGN.md §15): a long low-class
+/// decode lane holds the arena, then a high-class request bursts in.
+/// `classed` gives the burst priority 2 (it preempts the lane and is
+/// served immediately); unclassed it queues behind the whole decode.
+/// Deterministic fields: `preemptions` (1 vs 0), `prefill_rows`
+/// (66 = 16 + 33 + 17-token resume recompute, vs 49), `generated`
+/// (44 both — preemption changes scheduling, never streams),
+/// `ttft_calls_high` (the forward call that sampled the burst's first
+/// token: 3 vs 41) and `slo_violations` (1 — the low lane carries an
+/// impossible deadline in both runs).
+fn preempt_run(classed: bool) -> Json {
+    let mut sched = preempt_scheduler();
+    let low_prompt: Vec<u32> =
+        (0..16u32).map(|t| 3 + (t * 7) % 90).collect();
+    let high_prompt: Vec<u32> =
+        (0..33u32).map(|t| 5 + (t * 3) % 90).collect();
+    let t0 = Instant::now();
+    sched.submit(Request::with_params(0, low_prompt, GenerationParams {
+        priority: 0,
+        deadline_ms: Some(0),
+        ..GenerationParams::greedy(40)
+    })).unwrap();
+    sched.step(); // prefill + first token (1 block)
+    sched.step(); // second token claims the lane's second block
+    sched.take_events();
+    sched.submit(Request::with_params(1, high_prompt, GenerationParams {
+        priority: if classed { 2 } else { 0 },
+        ..GenerationParams::greedy(4)
+    })).unwrap();
+    let mut ttft_calls_high = 0u64;
+    while sched.has_work() {
+        sched.step();
+        for ev in sched.take_events() {
+            if ttft_calls_high == 0
+                && matches!(ev, Event::Token { id: 1, .. })
+            {
+                // forward_calls was bumped by the call that produced
+                // this frame — TTFT measured in engine calls, not ms.
+                ttft_calls_high = sched.metrics.forward_calls;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = &sched.metrics;
+    obj(vec![
+        ("classed", Json::Bool(classed)),
+        ("preemptions", num(m.preemptions as f64)),
+        ("slo_violations", num(m.slo_violations as f64)),
+        ("prefill_rows", num(m.prefill_rows as f64)),
+        ("generated", num(m.generated_tokens as f64)),
+        ("ttft_calls_high", num(ttft_calls_high as f64)),
+        ("tok_s", num(m.generated_tokens as f64 / wall)),
+        ("ttft_p50_ms", num(m.ttft_summary().p50 * 1e3)),
+    ])
 }
 
 /// One shared-prefix fleet run; returns the axis row. Deterministic
@@ -150,9 +237,15 @@ pub fn run_suite(fast: bool) -> Json {
     let saved_rows = off.get("prefill_rows").and_then(Json::as_f64)
         .unwrap_or(0.0)
         - on.get("prefill_rows").and_then(Json::as_f64).unwrap_or(0.0);
+    let p_on = preempt_run(true);
+    let p_off = preempt_run(false);
+    let calls_saved = p_off.get("ttft_calls_high")
+        .and_then(Json::as_f64).unwrap_or(0.0)
+        - p_on.get("ttft_calls_high").and_then(Json::as_f64)
+            .unwrap_or(0.0);
     obj(vec![
         ("suite", s("mergequant-bench")),
-        ("version", num(6.0)),
+        ("version", num(7.0)),
         ("fast", Json::Bool(fast)),
         ("model", s("synthetic d64 ff128 L2 v96")),
         ("methods", Json::Arr(methods)),
@@ -164,6 +257,15 @@ pub fn run_suite(fast: bool) -> Json {
             ("unshared", off),
             ("shared", on),
             ("prefill_rows_saved", num(saved_rows)),
+        ])),
+        ("preempt_fleet", obj(vec![
+            ("low_prompt_toks", num(16.0)),
+            ("low_max_new", num(40.0)),
+            ("high_prompt_toks", num(33.0)),
+            ("high_max_new", num(4.0)),
+            ("classed", p_on),
+            ("unclassed", p_off),
+            ("high_ttft_calls_saved", num(calls_saved)),
         ])),
     ])
 }
@@ -191,5 +293,32 @@ mod tests {
         assert!(f(&off, "peak_active") <= 3.0,
                 "unshared arena must throttle admission");
         assert!(f(&on, "ttft_p50_ms") >= 0.0);
+    }
+
+    #[test]
+    fn preempt_axis_counters_are_the_committed_numbers() {
+        // Pin the deterministic fields the committed BENCH_7.json
+        // carries. Classed: the burst preempts the low lane at its
+        // arrival call (first token on forward call 3) and the resume
+        // recomputes 17 rows (66 total prefill rows). Unclassed: the
+        // burst waits out the full 40-token decode (first token on
+        // call 41, 49 prefill rows). Both runs generate the identical
+        // 44 tokens and count the low lane's impossible deadline once.
+        let on = preempt_run(true);
+        let off = preempt_run(false);
+        let f = |j: &Json, k: &str| {
+            j.get(k).and_then(Json::as_f64).unwrap()
+        };
+        assert_eq!(f(&on, "preemptions"), 1.0);
+        assert_eq!(f(&on, "prefill_rows"), 66.0);
+        assert_eq!(f(&on, "ttft_calls_high"), 3.0);
+        assert_eq!(f(&off, "preemptions"), 0.0);
+        assert_eq!(f(&off, "prefill_rows"), 49.0);
+        assert_eq!(f(&off, "ttft_calls_high"), 41.0);
+        for run in [&on, &off] {
+            assert_eq!(f(run, "generated"), 44.0,
+                       "scheduling must never change what is generated");
+            assert_eq!(f(run, "slo_violations"), 1.0);
+        }
     }
 }

@@ -95,6 +95,12 @@ impl ServeConfig {
                 prefix_cache_blocks: s.get("prefix_cache_blocks")
                     .and_then(Json::as_usize)
                     .unwrap_or(d.prefix_cache_blocks),
+                // SLO gate (DESIGN.md §15): decode-latency target in
+                // ms; 0 keeps it off.
+                max_decode_latency: s.get("max_decode_latency")
+                    .and_then(Json::as_usize)
+                    .map(|v| v as u64)
+                    .unwrap_or(d.max_decode_latency),
             };
         }
         cfg
@@ -164,6 +170,12 @@ mod tests {
         ).unwrap());
         assert!(c.scheduler.prefix_cache);
         assert_eq!(c.scheduler.prefix_cache_blocks, 128);
+        assert_eq!(c.scheduler.max_decode_latency, 0,
+                   "SLO gate defaults off");
+        let slo = ServeConfig::from_json(&Json::parse(
+            r#"{"scheduler":{"max_decode_latency":25}}"#,
+        ).unwrap());
+        assert_eq!(slo.scheduler.max_decode_latency, 25);
         let d = ServeConfig::from_json(&Json::parse("{}").unwrap());
         assert!(!d.scheduler.prefix_cache,
                 "prefix cache must be opt-in");

@@ -1,8 +1,12 @@
 //! Serving metrics: counters, latency/TTFT recorders, ragged-batch
 //! composition (rows per engine call, prefill-vs-decode row split, batch
-//! occupancy — DESIGN.md §12), and paged-KV packing (utilization +
-//! block-allocation churn — DESIGN.md §13).
+//! occupancy — DESIGN.md §12), paged-KV packing (utilization +
+//! block-allocation churn — DESIGN.md §13), and traffic shaping
+//! (preemptions, SLO accounting, per-priority-class TTFT/TPOT
+//! percentiles — DESIGN.md §15).
 
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
 use std::time::Duration;
 
 use crate::util::stats::{summarize, Summary};
@@ -40,6 +44,17 @@ pub struct Metrics {
     /// Prefills pushed back to the pending queue by pool-exhaustion
     /// stall resolution (transient backpressure, not failures).
     pub kv_requeues: u64,
+    /// Decode lanes transparently preempted by a strictly-higher-class
+    /// demander under block pressure (DESIGN.md §15): blocks released,
+    /// generation state requeued, stream resumed bitwise later — never
+    /// a failure, never visible in the event stream.
+    pub preemptions: u64,
+    /// Completions whose end-to-end latency exceeded their request's
+    /// `deadline_ms` (observational SLO accounting).
+    pub slo_violations: u64,
+    /// Iterations whose admissions were deferred because the last
+    /// decode-bearing engine call ran over `max_decode_latency`.
+    pub slo_deferrals: u64,
     /// Prefix-cache admissions examined (one per admitted request while
     /// `prefix_cache` is on — DESIGN.md §14).
     pub prefix_lookups: u64,
@@ -65,6 +80,12 @@ pub struct Metrics {
     pub prefix_bytes_saved: u64,
     latencies_s: Vec<f64>,
     ttfts_s: Vec<f64>,
+    /// Per-priority-class TTFT samples (seconds) — the per-class
+    /// latency story preemption exists to shape.
+    class_ttfts_s: BTreeMap<u8, Vec<f64>>,
+    /// Per-priority-class TPOT samples (seconds per generated token
+    /// after the first; requests with one token contribute none).
+    class_tpots_s: BTreeMap<u8, Vec<f64>>,
     batch_sizes: Vec<f64>,
     rows_per_iter: Vec<f64>,
     occupancy: Vec<f64>,
@@ -76,12 +97,38 @@ pub struct Metrics {
 
 impl Metrics {
     pub fn record_completion(&mut self, latency: Duration, ttft: Duration,
-                             prompt_len: usize, generated: usize) {
+                             prompt_len: usize, generated: usize,
+                             class: u8, deadline_ms: Option<u64>) {
         self.requests_completed += 1;
         self.prompt_tokens += prompt_len as u64;
         self.generated_tokens += generated as u64;
         self.latencies_s.push(latency.as_secs_f64());
         self.ttfts_s.push(ttft.as_secs_f64());
+        self.class_ttfts_s
+            .entry(class)
+            .or_default()
+            .push(ttft.as_secs_f64());
+        if generated > 1 {
+            let tpot = latency.saturating_sub(ttft).as_secs_f64()
+                / (generated - 1) as f64;
+            self.class_tpots_s.entry(class).or_default().push(tpot);
+        }
+        if let Some(d) = deadline_ms {
+            if latency.as_secs_f64() * 1e3 > d as f64 {
+                self.slo_violations += 1;
+            }
+        }
+    }
+
+    /// Per-class TTFT summary (`None` when the class saw no
+    /// completions).
+    pub fn class_ttft_summary(&self, class: u8) -> Option<Summary> {
+        self.class_ttfts_s.get(&class).map(|v| summarize(v))
+    }
+
+    /// Per-class TPOT summary (seconds per post-first token).
+    pub fn class_tpot_summary(&self, class: u8) -> Option<Summary> {
+        self.class_tpots_s.get(&class).map(|v| summarize(v))
     }
 
     pub fn record_decode_iter(&mut self, batch: usize) {
@@ -173,13 +220,14 @@ impl Metrics {
     pub fn report(&self) -> String {
         let lat = self.latency_summary();
         let ttft = self.ttft_summary();
-        format!(
+        let mut s = format!(
             "requests={} prompt_toks={} gen_toks={} decode_iters={} \
              mean_batch={:.2} peak_batch={} failed={} cancelled={} \
              lat_p50={:.1}ms lat_p99={:.1}ms ttft_p50={:.1}ms \
              fwd_calls={} rows/iter={:.1} prefill_rows={} decode_rows={} \
              occupancy={:.2} kv_util={:.2} kv_util_peak={:.2} \
              blocks_alloc={} blocks_freed={} kv_requeues={} \
+             preemptions={} slo_violations={} slo_deferrals={} \
              prefix_hit_rate={:.3} prefix_hits={} prefix_lookups={} \
              prefix_matched_toks={} prefix_cached_blocks={} \
              prefix_shared_blocks={} prefix_evicted_blocks={} \
@@ -205,6 +253,9 @@ impl Metrics {
             self.blocks_alloc,
             self.blocks_freed,
             self.kv_requeues,
+            self.preemptions,
+            self.slo_violations,
+            self.slo_deferrals,
             self.prefix_hit_rate(),
             self.prefix_hits,
             self.prefix_lookups,
@@ -213,7 +264,31 @@ impl Metrics {
             self.prefix_shared_blocks,
             self.prefix_evicted_blocks,
             self.prefix_bytes_saved,
-        )
+        );
+        // Per-class latency tail only when classes are actually in
+        // play (>1 class, or any non-default class) — uniform default
+        // traffic keeps the pre-§15 report shape.
+        let classed = self.class_ttfts_s.len() > 1
+            || self.class_ttfts_s.keys().any(|&c| c != 0);
+        if classed {
+            for (c, v) in &self.class_ttfts_s {
+                let t = summarize(v);
+                let _ = write!(
+                    s,
+                    " c{}_n={} c{}_ttft_p50={:.1}ms c{}_ttft_p95={:.1}ms",
+                    c, t.n, c, t.p50 * 1e3, c, t.p95 * 1e3,
+                );
+            }
+            for (c, v) in &self.class_tpots_s {
+                let t = summarize(v);
+                let _ = write!(
+                    s,
+                    " c{}_tpot_p50={:.2}ms c{}_tpot_p95={:.2}ms",
+                    c, t.p50 * 1e3, c, t.p95 * 1e3,
+                );
+            }
+        }
+        s
     }
 }
 
@@ -225,9 +300,9 @@ mod tests {
     fn counters_accumulate() {
         let mut m = Metrics::default();
         m.record_completion(Duration::from_millis(100),
-                            Duration::from_millis(10), 8, 4);
+                            Duration::from_millis(10), 8, 4, 0, None);
         m.record_completion(Duration::from_millis(200),
-                            Duration::from_millis(20), 16, 8);
+                            Duration::from_millis(20), 16, 8, 0, None);
         m.record_decode_iter(2);
         assert_eq!(m.requests_completed, 2);
         assert_eq!(m.prompt_tokens, 24);
@@ -235,6 +310,45 @@ mod tests {
         assert_eq!(m.peak_active, 2);
         assert!((m.latency_summary().mean - 0.15).abs() < 1e-9);
         assert!(!m.report().is_empty());
+        // Uniform class-0 traffic keeps the pre-§15 report shape: no
+        // per-class tail.
+        assert!(!m.report().contains("c0_ttft_p50"), "{}", m.report());
+    }
+
+    #[test]
+    fn slo_and_class_percentiles_accumulate() {
+        let mut m = Metrics::default();
+        // Class 0, deadline met (latency 100ms <= 500ms).
+        m.record_completion(Duration::from_millis(100),
+                            Duration::from_millis(10), 8, 4, 0, Some(500));
+        // Class 0, deadline missed (an impossible 0ms target).
+        m.record_completion(Duration::from_millis(100),
+                            Duration::from_millis(10), 8, 4, 0, Some(0));
+        // Class 2: 30ms TTFT, 90ms of decode over 9 post-first tokens
+        // = 10ms TPOT.
+        m.record_completion(Duration::from_millis(120),
+                            Duration::from_millis(30), 8, 10, 2, None);
+        // One-token completion contributes a TTFT sample but no TPOT.
+        m.record_completion(Duration::from_millis(40),
+                            Duration::from_millis(40), 8, 1, 2, None);
+        assert_eq!(m.slo_violations, 1);
+        let t0 = m.class_ttft_summary(0).unwrap();
+        assert_eq!(t0.n, 2);
+        assert!((t0.p50 - 0.010).abs() < 1e-9);
+        let t2 = m.class_tpot_summary(2).unwrap();
+        assert_eq!(t2.n, 1);
+        assert!((t2.p50 - 0.010).abs() < 1e-9);
+        assert!(m.class_ttft_summary(1).is_none());
+        m.preemptions = 3;
+        m.slo_deferrals = 2;
+        let r = m.report();
+        assert!(r.contains("preemptions=3"), "{r}");
+        assert!(r.contains("slo_violations=1"), "{r}");
+        assert!(r.contains("slo_deferrals=2"), "{r}");
+        assert!(r.contains("c0_n=2"), "{r}");
+        assert!(r.contains("c0_ttft_p50=10.0ms"), "{r}");
+        assert!(r.contains("c2_ttft_p95=40.0ms"), "{r}");
+        assert!(r.contains("c2_tpot_p50=10.00ms"), "{r}");
     }
 
     #[test]

@@ -34,6 +34,7 @@
 
 pub mod kv_pool;
 pub mod metrics;
+pub(crate) mod pending;
 pub mod prefix_cache;
 pub mod request;
 pub mod scheduler;

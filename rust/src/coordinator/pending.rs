@@ -1,0 +1,314 @@
+//! Weighted-fair pending queues (DESIGN.md §15).
+//!
+//! The scheduler's pending set is one FIFO queue *per priority class*
+//! with deterministic **stride scheduling** between the non-empty
+//! classes: class `c` has weight `c + 1` and a virtual `pass` counter
+//! advanced by `STRIDE_SCALE / weight` per admission, so over time class
+//! `c` receives `(c + 1)` admissions for every one a class-0 request
+//! gets — weighted fairness without starvation (every class's pass keeps
+//! growing, so every class keeps winning selections). Selection is pure
+//! integer arithmetic over queue state: no clocks, no randomness — the
+//! admission order is a deterministic function of the submission/requeue
+//! sequence, which is what lets the preempt/resume replay suite pin
+//! token streams bitwise.
+//!
+//! A single-class workload (all requests priority 0 — the pre-§15
+//! default) collapses to exactly the old `VecDeque` FIFO: one queue,
+//! selected every time, popped front-first.
+//!
+//! Entries carry an optional [`ResumeState`]: a preempted decode lane
+//! re-enters here at the *front* of its class queue (it already earned
+//! its admission — `push_front` refunds the stride charge) together
+//! with everything needed to resume its stream byte-identically.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use super::request::Request;
+
+/// Stride numerator: `pass += STRIDE_SCALE / (class + 1)` per admission.
+/// Large enough that integer division keeps class weights well separated
+/// for the full `u8` class range.
+const STRIDE_SCALE: u64 = 1 << 20;
+
+/// Generation state of a preempted decode lane, carried through the
+/// pending queue so re-admission can resume the stream bitwise
+/// (DESIGN.md §15): the KV for `work` is recomputed (or re-attached from
+/// the prefix cache — the lane's own prompt is a warm hit), the last
+/// generated token becomes the resume input, and sampling continues at
+/// counter step `tokens.len()` — the pure `(seed, step)` sampler makes
+/// the continuation identical to the uninterrupted run.
+#[derive(Debug)]
+pub(crate) struct ResumeState {
+    /// Tokens generated (and already streamed) before preemption;
+    /// never re-emitted.
+    pub tokens: Vec<u32>,
+    /// `prompt ++ tokens[..len-1]` — the sequence whose KV must be in
+    /// cache before decoding continues (the final generated token is
+    /// the next forward input, its KV not yet written).
+    pub work: Vec<u32>,
+    /// TTFT of the original activation (the first token already
+    /// reached the client; preemption must not re-time it).
+    pub ttft: Duration,
+}
+
+/// One queued request: fresh (`resume: None`) or preempted-and-requeued.
+#[derive(Debug)]
+pub(crate) struct PendingEntry {
+    pub req: Request,
+    pub resume: Option<ResumeState>,
+}
+
+impl PendingEntry {
+    pub fn fresh(req: Request) -> Self {
+        PendingEntry { req, resume: None }
+    }
+
+    /// The token sequence admission must prefill for this entry (the
+    /// prompt, or the preempted lane's recompute work).
+    pub fn work(&self) -> &[u32] {
+        match &self.resume {
+            Some(r) => &r.work,
+            None => &self.req.prompt,
+        }
+    }
+}
+
+struct ClassQueue {
+    q: VecDeque<PendingEntry>,
+    /// Stride-scheduling virtual time of this class; the non-empty
+    /// class with the smallest pass is admitted next.
+    pass: u64,
+}
+
+/// Per-class FIFO queues with stride-scheduled selection.
+#[derive(Default)]
+pub(crate) struct PendingQueues {
+    classes: BTreeMap<u8, ClassQueue>,
+    len: usize,
+    /// Global virtual time: the pass of the last admission. A class
+    /// going from empty to non-empty joins at `max(own pass, vtime)` so
+    /// an idle class cannot bank arbitrarily old credit and then
+    /// monopolize admission.
+    vtime: u64,
+}
+
+impl PendingQueues {
+    fn stride(class: u8) -> u64 {
+        STRIDE_SCALE / (class as u64 + 1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Class whose front entry is admitted next: smallest pass among
+    /// non-empty classes, ties to the *higher* class. Deterministic.
+    fn pick(&self) -> Option<u8> {
+        let mut best: Option<(u64, u8)> = None;
+        for (&c, cq) in &self.classes {
+            if cq.q.is_empty() {
+                continue;
+            }
+            match best {
+                Some((bp, _)) if cq.pass > bp => {}
+                // `>=` on class: ascending iteration means equal pass
+                // keeps the later (higher) class.
+                _ => best = Some((cq.pass, c)),
+            }
+        }
+        best.map(|(_, c)| c)
+    }
+
+    fn class_mut(&mut self, class: u8) -> &mut ClassQueue {
+        let vtime = self.vtime;
+        let cq = self.classes.entry(class).or_insert(ClassQueue {
+            q: VecDeque::new(),
+            pass: vtime,
+        });
+        if cq.q.is_empty() {
+            cq.pass = cq.pass.max(vtime);
+        }
+        cq
+    }
+
+    /// Enqueue a fresh submission at the back of its class queue.
+    pub fn push_back(&mut self, entry: PendingEntry) {
+        let class = entry.req.params.priority;
+        self.class_mut(class).q.push_back(entry);
+        self.len += 1;
+    }
+
+    /// Requeue at the *front* of the class queue (preempted lanes,
+    /// stalled prefills): the entry already paid its admission, so the
+    /// stride charge is refunded — the class retries at its pre-pop
+    /// pass and a requeue never costs the class future throughput.
+    pub fn push_front(&mut self, entry: PendingEntry) {
+        let class = entry.req.params.priority;
+        let cq = self.class_mut(class);
+        cq.pass = cq.pass.saturating_sub(Self::stride(class));
+        cq.q.push_front(entry);
+        self.len += 1;
+    }
+
+    /// Front entry of the stride-selected class (what `pop` would
+    /// return), without charging the admission.
+    pub fn peek(&self) -> Option<&PendingEntry> {
+        let c = self.pick()?;
+        self.classes[&c].q.front()
+    }
+
+    /// Admit the stride-selected front entry, advancing the winning
+    /// class's pass by its stride.
+    pub fn pop(&mut self) -> Option<PendingEntry> {
+        let c = self.pick()?;
+        let cq = self.classes.get_mut(&c).unwrap();
+        let entry = cq.q.pop_front().unwrap();
+        self.vtime = cq.pass;
+        cq.pass += Self::stride(c);
+        self.len -= 1;
+        Some(entry)
+    }
+
+    /// Remove the entry with request id `id` (cancellation), wherever
+    /// it is queued. No pass accounting: a cancelled admission was
+    /// never granted.
+    pub fn take(&mut self, id: u64) -> Option<PendingEntry> {
+        for cq in self.classes.values_mut() {
+            if let Some(pos) = cq.q.iter().position(|e| e.req.id == id) {
+                self.len -= 1;
+                return cq.q.remove(pos);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::request::GenerationParams;
+    use super::*;
+
+    fn req(id: u64, class: u8) -> PendingEntry {
+        let params = GenerationParams {
+            priority: class,
+            ..GenerationParams::greedy(4)
+        };
+        PendingEntry::fresh(Request::with_params(id, vec![1, 2, 3], params))
+    }
+
+    fn drain_ids(q: &mut PendingQueues) -> Vec<u64> {
+        let mut out = Vec::new();
+        while let Some(e) = q.pop() {
+            out.push(e.req.id);
+        }
+        assert!(q.is_empty());
+        out
+    }
+
+    #[test]
+    fn single_class_is_plain_fifo() {
+        let mut q = PendingQueues::default();
+        for id in 0..6 {
+            q.push_back(req(id, 0));
+        }
+        assert_eq!(drain_ids(&mut q), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn weighted_fair_ratio_between_classes() {
+        // Saturated class 0 (weight 1) vs class 1 (weight 2): class 1
+        // receives two admissions per class-0 admission.
+        let mut q = PendingQueues::default();
+        for id in 0..4 {
+            q.push_back(req(id, 0));
+        }
+        for id in 10..18 {
+            q.push_back(req(id, 1));
+        }
+        let order = drain_ids(&mut q);
+        // Both classes start at pass 0 (tie → class 1), then the
+        // strides settle into the 2:1 steady state — and class 0 is
+        // never starved.
+        assert_eq!(order,
+                   vec![10, 0, 11, 12, 1, 13, 14, 2, 15, 16, 3, 17]);
+    }
+
+    #[test]
+    fn ties_prefer_higher_class_and_fifo_within_class() {
+        let mut q = PendingQueues::default();
+        q.push_back(req(1, 0));
+        q.push_back(req(2, 3));
+        q.push_back(req(3, 3));
+        // Equal pass (both fresh at vtime 0): class 3 wins the tie and
+        // its entries drain FIFO (2 strictly before 3); the class-0
+        // entry interleaves per stride, unstarved.
+        assert_eq!(q.pop().unwrap().req.id, 2);
+        assert_eq!(q.pop().unwrap().req.id, 1);
+        assert_eq!(q.pop().unwrap().req.id, 3);
+    }
+
+    #[test]
+    fn push_front_refunds_the_stride_charge() {
+        let mut q = PendingQueues::default();
+        q.push_back(req(1, 0));
+        q.push_back(req(2, 0));
+        q.push_back(req(9, 2));
+        let e = q.pop().unwrap(); // class 2 wins the tie
+        assert_eq!(e.req.id, 9);
+        // Requeue (e.g. preempted): the refund restores its pass, so it
+        // wins the very next selection instead of waiting a full round.
+        q.push_front(e);
+        assert_eq!(q.pop().unwrap().req.id, 9);
+        assert_eq!(q.pop().unwrap().req.id, 1);
+        assert_eq!(q.pop().unwrap().req.id, 2);
+    }
+
+    #[test]
+    fn idle_class_joins_at_current_vtime() {
+        let mut q = PendingQueues::default();
+        for id in 0..8 {
+            q.push_back(req(id, 1));
+        }
+        for _ in 0..6 {
+            q.pop();
+        }
+        // A class-0 straggler arriving late joins at the current vtime
+        // (one stride behind the running class — the standard stride
+        // arrival rule), so it gets exactly one prompt admission and
+        // then interleaves; it cannot bank ancient credit and
+        // monopolize the queue.
+        q.push_back(req(100, 0));
+        assert_eq!(q.pop().unwrap().req.id, 100);
+        assert_eq!(q.pop().unwrap().req.id, 6);
+        assert_eq!(q.pop().unwrap().req.id, 7);
+    }
+
+    #[test]
+    fn take_removes_by_id_across_classes() {
+        let mut q = PendingQueues::default();
+        q.push_back(req(1, 0));
+        q.push_back(req(2, 1));
+        q.push_back(req(3, 0));
+        assert_eq!(q.take(2).unwrap().req.id, 2);
+        assert!(q.take(2).is_none());
+        assert_eq!(q.len(), 2);
+        assert_eq!(drain_ids(&mut q), vec![1, 3]);
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = PendingQueues::default();
+        q.push_back(req(1, 0));
+        q.push_back(req(2, 2));
+        for _ in 0..2 {
+            let peeked = q.peek().unwrap().req.id;
+            assert_eq!(q.pop().unwrap().req.id, peeked);
+        }
+    }
+}

@@ -33,6 +33,16 @@ pub struct GenerationParams {
     pub seed: u64,
     /// Generation stops after emitting any of these tokens.
     pub stop_tokens: Vec<u32>,
+    /// Priority class (DESIGN.md §15): higher is more important. Classes
+    /// share admission weighted-fair (weight `class + 1`), and a request
+    /// under block pressure may transparently preempt active lanes of a
+    /// *strictly lower* class. Default `0` — uniform traffic degrades to
+    /// plain FIFO admission and the pre-§15 CacheFull behaviour, bitwise.
+    pub priority: u8,
+    /// Optional end-to-end latency target in milliseconds. Purely
+    /// observational: a completion whose latency exceeds it increments
+    /// the `slo_violations` counter (never alters token streams).
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for GenerationParams {
@@ -44,6 +54,8 @@ impl Default for GenerationParams {
             top_p: 1.0,
             seed: 0,
             stop_tokens: Vec::new(),
+            priority: 0,
+            deadline_ms: None,
         }
     }
 }
@@ -244,6 +256,8 @@ mod tests {
         assert_eq!(p.temperature, 0.0);
         assert!(p.sampler().is_greedy());
         assert!(p.validate().is_ok());
+        assert_eq!(p.priority, 0);
+        assert_eq!(p.deadline_ms, None);
     }
 
     #[test]

@@ -43,6 +43,28 @@
 //! exactly one terminal `Done`/`Error` frame per request — the per-token
 //! cadence the serving layer streams to clients (DESIGN.md §11).
 //!
+//! **Priorities, preemption, and the SLO gate (DESIGN.md §15):**
+//! admission is weighted-fair across priority classes
+//! ([`super::pending::PendingQueues`] — stride scheduling, higher class
+//! ⇒ more admissions, no starvation), and block pressure is resolved by
+//! **transparent preemption** before anyone is cut `CacheFull`: when a
+//! demander (an admission, a prefill chunk, or a decode lane needing its
+//! next block) cannot be covered, active lanes of a *strictly lower*
+//! class are preempted — lowest class first, youngest (highest lane
+//! index — finalize keeps lane index equal to arrival order) within a
+//! class — their blocks released and their generation state requeued to
+//! the front of their class queue. A preempted stream emits **no**
+//! frame: on re-admission its KV is recomputed (its own prompt is a warm
+//! prefix-cache hit) with a logits-free final span, and the pure
+//! `(seed, step)` sampler continues at step `tokens.len()`, so the
+//! resumed stream is bitwise the uninterrupted one
+//! (`tests/preemption.rs`). Same-class pressure keeps the pre-§15
+//! deterministic CacheFull cut (youngest first), so uniform-priority
+//! traffic is bitwise unchanged. `max_decode_latency` (ms, 0 = off)
+//! defers admissions for a tick whenever the last decode-bearing engine
+//! call ran over the target — wall-clock gates only *when* work is
+//! admitted, never what any stream contains.
+//!
 //! Token selection goes through each request's seeded
 //! [`Sampler`](crate::engine::Sampler) (`GenerationParams::sampler`):
 //! greedy requests run the seed argmax path bitwise unchanged, sampled
@@ -62,7 +84,7 @@
 //! count, so scheduling invariants and goldens are unaffected by the
 //! parallelism.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -73,6 +95,7 @@ use crate::engine::{
 
 use super::kv_pool::BlockPool;
 use super::metrics::Metrics;
+use super::pending::{PendingEntry, PendingQueues, ResumeState};
 use super::prefix_cache::PrefixCache;
 use super::request::{Event, FinishReason, Request, Response};
 
@@ -125,6 +148,14 @@ pub struct SchedulerConfig {
     /// Prefix-index capacity in blocks (LRU-evicted beyond it); 0 ⇒
     /// unbounded — blocks are then reclaimed only under pool pressure.
     pub prefix_cache_blocks: usize,
+    /// Decode-latency SLO in milliseconds (DESIGN.md §15): when the
+    /// last decode-bearing engine call exceeded this, admission is
+    /// deferred for the iteration (`slo_deferrals` metric) so live
+    /// decode lanes get the next call without new prefill rows stacked
+    /// under them. `0` ⇒ off (the default — and what every determinism
+    /// suite uses, keeping scheduling wall-clock independent; token
+    /// streams are bitwise identical either way).
+    pub max_decode_latency: u64,
 }
 
 impl Default for SchedulerConfig {
@@ -142,6 +173,7 @@ impl Default for SchedulerConfig {
             kv_dtype: KvDtype::F32,
             prefix_cache: false,
             prefix_cache_blocks: 0,
+            max_decode_latency: 0,
         }
     }
 }
@@ -182,6 +214,11 @@ struct Active {
     /// Set when a typed engine error terminated this sequence; carried
     /// into the terminal event so the failure is per-request, not fatal.
     error: Option<String>,
+    /// Preempted this iteration by a strictly-higher-class demander
+    /// (DESIGN.md §15): blocks already released, lane skipped for the
+    /// rest of the iteration, swept into the pending queue (with its
+    /// generation state, no event) by `collect_preempted`.
+    preempted: bool,
 }
 
 /// A request whose prompt is not yet fully in its KV cache. Any number
@@ -192,6 +229,21 @@ struct Prefilling {
     req: Request,
     cache: KvCache,
     consumed: usize,
+    /// Present when this is a preempted lane recomputing its KV: the
+    /// prefill runs over `resume.work` (prompt plus already-streamed
+    /// tokens) instead of the prompt, its final span requests **no**
+    /// logits, and completion resumes decoding instead of activating.
+    resume: Option<ResumeState>,
+}
+
+impl Prefilling {
+    /// The token sequence this prefill is writing into KV.
+    fn work(&self) -> &[u32] {
+        match &self.resume {
+            Some(rs) => &rs.work,
+            None => &self.req.prompt,
+        }
+    }
 }
 
 /// What a span of the per-iteration [`BatchPlan`] stands for — used to
@@ -211,7 +263,8 @@ pub struct Scheduler {
     /// Radix prefix index over frozen KV blocks
     /// (`SchedulerConfig::prefix_cache`; DESIGN.md §14).
     prefix: Option<PrefixCache>,
-    pending: VecDeque<Request>,
+    /// Per-class weighted-fair pending queues (DESIGN.md §15).
+    pending: PendingQueues,
     prefilling: Vec<Prefilling>,
     active: Vec<Active>,
     ws: Workspace,
@@ -221,6 +274,12 @@ pub struct Scheduler {
     /// request already finished).
     cancel_requests: Vec<u64>,
     events: Vec<Event>,
+    /// Wall time of the last decode-bearing engine call (ms) — the
+    /// signal `max_decode_latency` gates admission on.
+    last_decode_ms: f64,
+    /// Request ids preempted, in preemption order — observability for
+    /// the victim-selection determinism tests and diagnostics.
+    preempt_log: Vec<u64>,
 }
 
 impl Scheduler {
@@ -246,13 +305,15 @@ impl Scheduler {
             cfg,
             pool,
             prefix,
-            pending: VecDeque::new(),
+            pending: PendingQueues::default(),
             prefilling: Vec::new(),
             active: Vec::new(),
             ws: Workspace::new(),
             metrics: Metrics::default(),
             cancel_requests: Vec::new(),
             events: Vec::new(),
+            last_decode_ms: 0.0,
+            preempt_log: Vec::new(),
         }
     }
 
@@ -266,7 +327,7 @@ impl Scheduler {
             self.metrics.rejected += 1;
             return Err(req);
         }
-        self.pending.push_back(req);
+        self.pending.push_back(PendingEntry::fresh(req));
         Ok(())
     }
 
@@ -321,6 +382,36 @@ impl Scheduler {
         self.prefix.as_ref().map_or(0, PrefixCache::cached_blocks)
     }
 
+    /// Request ids preempted so far, in preemption order — the victim
+    /// sequence is part of the deterministic scheduling contract
+    /// (DESIGN.md §15) and is pinned by `tests/preemption.rs`.
+    pub fn preemption_log(&self) -> &[u64] {
+        &self.preempt_log
+    }
+
+    /// Distinct physical KV blocks referenced by live lanes (prefilling
+    /// and active block tables; a CoW-shared block counts once).
+    /// Observability for the §15 accounting invariant: with the prefix
+    /// cache off, `kv_available + kv_live_blocks == kv_capacity` holds
+    /// after every iteration, preemption churn included.
+    pub fn kv_live_blocks(&self) -> usize {
+        let mut seen: Vec<*const KvBlock> = Vec::new();
+        let tables = self
+            .prefilling
+            .iter()
+            .map(|p| &p.cache)
+            .chain(self.active.iter().map(|a| &a.cache));
+        for cache in tables {
+            for b in 0..cache.n_blocks() {
+                let p = cache.block_ptr(b);
+                if !seen.contains(&p) {
+                    seen.push(p);
+                }
+            }
+        }
+        seen.len()
+    }
+
     /// Drain the event stream accumulated since the last call: `Token`
     /// frames in generation order, one terminal `Done`/`Error` frame per
     /// finished request.
@@ -337,6 +428,10 @@ impl Scheduler {
         self.apply_cancellations();
         self.admit();
         let ran = self.run_batch();
+        // Sweep lanes preempted this iteration (by admission, a prefill
+        // chunk, or a decode lane of a higher class) back into their
+        // class queues — blocks already released, no event emitted.
+        self.collect_preempted();
         // KV utilization snapshot while sequences hold their blocks:
         // used tokens over allocated block tokens (the packing win paged
         // allocation exists to maximize — DESIGN.md §13).
@@ -401,9 +496,12 @@ impl Scheduler {
     /// this iteration's finalize returns their blocks.
     fn apply_cancellations(&mut self) {
         for id in std::mem::take(&mut self.cancel_requests) {
-            if let Some(pos) = self.pending.iter().position(|r| r.id == id) {
-                let req = self.pending.remove(pos).unwrap();
-                self.answer_cancelled(&req);
+            if let Some(entry) = self.pending.take(id) {
+                let (tokens, ttft) = match entry.resume {
+                    Some(rs) => (rs.tokens, rs.ttft),
+                    None => (Vec::new(), Duration::ZERO),
+                };
+                self.answer_cancelled(&entry.req, tokens, ttft);
                 continue;
             }
             if let Some(pos) =
@@ -411,7 +509,11 @@ impl Scheduler {
             {
                 let mut pf = self.prefilling.remove(pos);
                 self.pool.release(&mut pf.cache);
-                self.answer_cancelled(&pf.req);
+                let (tokens, ttft) = match pf.resume {
+                    Some(rs) => (rs.tokens, rs.ttft),
+                    None => (Vec::new(), Duration::ZERO),
+                };
+                self.answer_cancelled(&pf.req, tokens, ttft);
                 continue;
             }
             if let Some(a) =
@@ -424,15 +526,18 @@ impl Scheduler {
         }
     }
 
-    /// Terminal event for a request cancelled before it produced any
-    /// token (pending / mid-prefill).
-    fn answer_cancelled(&mut self, req: &Request) {
+    /// Terminal event for a request cancelled outside the active set
+    /// (pending / mid-prefill). A preempted-and-requeued request carries
+    /// its already-streamed tokens and original TTFT into the summary;
+    /// a fresh one reports none.
+    fn answer_cancelled(&mut self, req: &Request, tokens: Vec<u32>,
+                        ttft: Duration) {
         self.metrics.cancelled += 1;
         self.events.push(Event::Done {
             response: Response {
                 id: req.id,
-                tokens: Vec::new(),
-                ttft: Duration::ZERO,
+                tokens,
+                ttft,
                 latency: req.submitted.elapsed(),
                 prompt_len: req.prompt.len(),
                 finish: FinishReason::Cancelled,
@@ -465,6 +570,21 @@ impl Scheduler {
     /// rejects empty prompts synchronously; this guards direct
     /// `Scheduler::submit` users, where the seed panicked instead.)
     fn admit(&mut self) {
+        // SLO gate (`max_decode_latency`, DESIGN.md §15): the last
+        // decode-bearing engine call ran over target while decode lanes
+        // are still live — defer admissions one iteration so those
+        // lanes get the next call without new prefill rows stacked
+        // under them. Wall clock gates only *when* work is admitted;
+        // every token stream is bitwise unchanged.
+        if self.cfg.max_decode_latency > 0
+            && self.last_decode_ms > self.cfg.max_decode_latency as f64
+            && self.active.iter().any(|a| !a.done && !a.preempted)
+        {
+            if !self.pending.is_empty() {
+                self.metrics.slo_deferrals += 1;
+            }
+            return;
+        }
         let budget = self.cfg.max_prefills_per_iter.max(1);
         // Headroom admissions may not take: one block per committed
         // decode lane about to cross a block boundary, plus the
@@ -483,7 +603,7 @@ impl Scheduler {
             .iter()
             .take(budget)
             .map(|pf| {
-                let remaining = pf.req.prompt.len() - pf.consumed;
+                let remaining = pf.work().len() - pf.consumed;
                 let chunk = if self.cfg.prefill_chunk == 0 {
                     remaining
                 } else {
@@ -493,24 +613,34 @@ impl Scheduler {
             })
             .sum();
         let headroom = decode_need + prefill_need;
-        while self.prefilling.len() < budget
-            && self.active.len() + self.prefilling.len() < self.cfg.max_batch
-            && !self.pending.is_empty()
-        {
-            let plen = self.pending.front().map_or(0, |r| r.prompt.len());
+        loop {
+            // Preempted lanes are dead weight awaiting the sweep, not
+            // batch occupants.
+            let live = self.active.iter().filter(|a| !a.preempted).count();
+            if self.prefilling.len() >= budget
+                || live + self.prefilling.len() >= self.cfg.max_batch
+            {
+                break;
+            }
+            // Weighted-fair selection across priority classes; `pop`
+            // below returns the same entry (nothing else touches the
+            // queues in between).
+            let Some(entry) = self.pending.peek() else { break };
+            let plen = entry.work().len();
+            let class = entry.req.params.priority;
             if plen == 0 {
-                let req = self.pending.pop_front().unwrap();
-                self.fail_request(req, "empty prompt".into());
+                let e = self.pending.pop().unwrap();
+                self.fail_request(e.req, "empty prompt".into());
                 continue;
             }
             if plen > self.cfg.max_seq {
-                let req = self.pending.pop_front().unwrap();
+                let e = self.pending.pop().unwrap();
                 let err = EngineError::KvOverflow {
                     lane: 0,
                     pos: plen - 1,
                     cap: self.cfg.max_seq,
                 };
-                self.fail_request(req, err.to_string());
+                self.fail_request(e.req, err.to_string());
                 continue;
             }
             // Prefix match (DESIGN.md §14): attach the cached frozen
@@ -519,11 +649,12 @@ impl Scheduler {
             // and admission is charged only the unshared blocks the
             // request actually needs (a CoW boundary block plus table
             // growth). On a full hit the remaining prefill is the final
-            // prompt token, so TTFT ≈ one decode step.
+            // prompt token, so TTFT ≈ one decode step. A preempted
+            // lane's recompute work starts with its own prompt, whose
+            // frozen blocks usually still sit in the index — resume
+            // compounds with sharing into a warm hit.
             let (matched, shared) = match self.prefix.as_mut() {
-                Some(pc) => {
-                    pc.lookup(&self.pending.front().unwrap().prompt)
-                }
+                Some(pc) => pc.lookup(self.pending.peek().unwrap().work()),
                 None => (0, Vec::new()),
             };
             let first = if self.cfg.prefill_chunk == 0 {
@@ -537,16 +668,24 @@ impl Scheduler {
             }
             cache.len = matched;
             let need = self.pool.blocks_needed(&cache, first);
-            if need > self.pool.free_blocks().saturating_sub(headroom)
-                && !Self::evict_until(&mut self.prefix, &mut self.pool,
-                                      &mut self.metrics, need + headroom)
-            {
-                break; // backpressure: not enough blocks to start
+            if need > self.pool.free_blocks().saturating_sub(headroom) {
+                // Prefix eviction first (reclaims idle blocks), then
+                // preemption of strictly-lower-class active lanes —
+                // same-class pressure stays plain backpressure, so
+                // uniform-priority traffic admits exactly as before.
+                let covered = Self::evict_until(&mut self.prefix,
+                                                &mut self.pool,
+                                                &mut self.metrics,
+                                                need + headroom)
+                    || self.preempt_for(class, need + headroom);
+                if !covered {
+                    break; // backpressure: not enough blocks to start
+                }
             }
             self.pool
                 .reserve_writable(&mut cache, first)
                 .expect("free blocks checked above");
-            let req = self.pending.pop_front().unwrap();
+            let entry = self.pending.pop().unwrap();
             if self.prefix.is_some() {
                 self.metrics.prefix_lookups += 1;
                 if matched > 0 {
@@ -554,8 +693,84 @@ impl Scheduler {
                     self.metrics.prefix_matched_tokens += matched as u64;
                 }
             }
-            self.prefilling.push(Prefilling { req, cache,
-                                              consumed: matched });
+            self.prefilling.push(Prefilling {
+                req: entry.req,
+                cache,
+                consumed: matched,
+                resume: entry.resume,
+            });
+        }
+    }
+
+    /// Preempt active lanes of a class **strictly below** `class` —
+    /// lowest class first, youngest (highest lane index = latest
+    /// arrival) within a class — releasing each victim's blocks, until
+    /// the pool has `want` free blocks; returns whether the target was
+    /// met. Victims are only marked here (`preempted`) so lane indices
+    /// stay stable through the iteration; `collect_preempted` requeues
+    /// them after the batch. A victim sharing blocks with the prefix
+    /// index may free less than its table length, so the loop keeps
+    /// going until the target is met or no eligible victim remains.
+    fn preempt_for(&mut self, class: u8, want: usize) -> bool {
+        while self.pool.free_blocks() < want {
+            let victim = self
+                .active
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| {
+                    !a.done && !a.preempted && a.req.params.priority < class
+                })
+                .min_by_key(|&(i, a)| {
+                    (a.req.params.priority, std::cmp::Reverse(i))
+                })
+                .map(|(i, _)| i);
+            let Some(v) = victim else { return false };
+            let a = &mut self.active[v];
+            self.pool.release(&mut a.cache);
+            a.preempted = true;
+            self.metrics.preemptions += 1;
+            self.preempt_log.push(a.req.id);
+        }
+        true
+    }
+
+    /// Move lanes preempted this iteration out of the active set and
+    /// back into their class queues, carrying their generation state
+    /// ([`ResumeState`]) so re-admission recomputes
+    /// `prompt ++ tokens[..len-1]` and continues sampling at the next
+    /// counter step — the resumed stream is bitwise the uninterrupted
+    /// one. No event is emitted: to the client, preemption is invisible
+    /// backpressure, never a `cache_full` finish. Victims are requeued
+    /// in reverse arrival order so the oldest one ends up frontmost in
+    /// its class queue (`push_front` also refunds the stride charge).
+    fn collect_preempted(&mut self) {
+        if !self.active.iter().any(|a| a.preempted) {
+            return;
+        }
+        let mut victims: Vec<Active> = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].preempted {
+                victims.push(self.active.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        for a in victims.into_iter().rev() {
+            let k = a.tokens.len();
+            debug_assert!(k > 0, "active lanes always hold >= 1 token");
+            let mut work =
+                Vec::with_capacity(a.req.prompt.len() + k - 1);
+            work.extend_from_slice(&a.req.prompt);
+            work.extend_from_slice(&a.tokens[..k - 1]);
+            self.pending.push_front(PendingEntry {
+                req: a.req,
+                resume: Some(ResumeState {
+                    tokens: a.tokens,
+                    work,
+                    ttft: a.ttft,
+                }),
+            });
         }
     }
 
@@ -592,7 +807,7 @@ impl Scheduler {
         let Some(pc) = self.prefix.as_mut() else { return };
         let mut evicted: Vec<Arc<KvBlock>> = Vec::new();
         for pf in &self.prefilling {
-            evicted.extend(pc.insert(&pf.req.prompt[..pf.consumed],
+            evicted.extend(pc.insert(&pf.work()[..pf.consumed],
                                      &pf.cache));
         }
         let mut key: Vec<u32> = Vec::new();
@@ -620,22 +835,35 @@ impl Scheduler {
         // (FIFO by lane index) instead of failing the batch.
         let mut decode_sel: Vec<usize> = Vec::new();
         for idx in 0..self.active.len() {
-            let a = &mut self.active[idx];
-            if a.done {
+            if self.active[idx].done || self.active[idx].preempted {
                 continue;
             }
-            if a.tokens.len() >= a.req.params.max_new {
+            if self.active[idx].tokens.len()
+                >= self.active[idx].req.params.max_new
+            {
                 // Defensive: budget reached without the done flag —
                 // finalize it rather than skipping it forever.
-                a.done = true;
+                self.active[idx].done = true;
                 continue;
             }
-            let need = a.cache.len + 1;
-            let missing = self.pool.blocks_needed(&a.cache, need);
+            let need = self.active[idx].cache.len + 1;
+            let class = self.active[idx].req.params.priority;
+            let missing = self.pool.blocks_needed(&self.active[idx].cache,
+                                                  need);
             if missing > self.pool.free_blocks() {
                 Self::evict_until(&mut self.prefix, &mut self.pool,
                                   &mut self.metrics, missing);
             }
+            if missing > self.pool.free_blocks() {
+                // Pressure on a running lane: transparently preempt
+                // strictly-lower-class lanes before cutting anyone
+                // CacheFull. Same-class pressure falls through to the
+                // deterministic youngest-first CacheFull cut below —
+                // uniform-priority traffic is bitwise the pre-§15
+                // behaviour.
+                self.preempt_for(class, missing);
+            }
+            let a = &mut self.active[idx];
             if self.pool.reserve_writable(&mut a.cache, need).is_err() {
                 a.done = true;
                 a.finish = FinishReason::CacheFull;
@@ -650,24 +878,33 @@ impl Scheduler {
         // may free later; a total stall is resolved by `step`'s requeue.
         let mut prefill_sel: Vec<(usize, usize)> = Vec::new(); // (pf, end)
         for pi in 0..self.prefilling.len().min(budget) {
-            let pf = &mut self.prefilling[pi];
-            let remaining = pf.req.prompt.len() - pf.consumed;
+            let pf = &self.prefilling[pi];
+            let remaining = pf.work().len() - pf.consumed;
             let chunk = if self.cfg.prefill_chunk == 0 {
                 remaining
             } else {
                 self.cfg.prefill_chunk.min(remaining)
             };
             let end = pf.consumed + chunk;
+            let class = pf.req.params.priority;
             let missing = self.pool.blocks_needed(&pf.cache, end);
             if missing > self.pool.free_blocks() {
                 Self::evict_until(&mut self.prefix, &mut self.pool,
                                   &mut self.metrics, missing);
             }
+            if missing > self.pool.free_blocks() {
+                self.preempt_for(class, missing);
+            }
+            let pf = &mut self.prefilling[pi];
             if self.pool.reserve_writable(&mut pf.cache, end).is_err() {
                 break;
             }
             prefill_sel.push((pi, end));
         }
+        // A prefill (or later decode lane) may have preempted a lane
+        // that had already reserved this iteration: its blocks are
+        // gone, so it must not ride the plan.
+        decode_sel.retain(|&i| !self.active[i].preempted);
         if decode_sel.is_empty() && prefill_sel.is_empty() {
             return false;
         }
@@ -678,12 +915,15 @@ impl Scheduler {
         let mut roles: Vec<SpanRole> = Vec::new();
         for &(pi, end) in &prefill_sel {
             let pf = &self.prefilling[pi];
-            let logits = if end == pf.req.prompt.len() {
+            // A resumed lane's final chunk requests *no* logits: its
+            // next token was sampled before preemption — recompute
+            // rebuilds KV only, nothing is re-sampled or re-emitted.
+            let logits = if end == pf.work().len() && pf.resume.is_none() {
                 SpanLogits::Last
             } else {
                 SpanLogits::None
             };
-            plan.push_span(roles.len(), &pf.req.prompt[pf.consumed..end],
+            plan.push_span(roles.len(), &pf.work()[pf.consumed..end],
                            logits);
             roles.push(SpanRole::Prefill { pf: pi, end });
         }
@@ -702,6 +942,7 @@ impl Scheduler {
         // the owning entries in span order: `iter_mut` hands out
         // disjoint `&mut`s, so — unlike the old slab pool's raw-pointer
         // `get_many_mut` — no `unsafe` is involved anywhere.
+        let fwd_start = Instant::now();
         let result = {
             let mut caches: Vec<&mut KvCache> =
                 Vec::with_capacity(roles.len());
@@ -731,6 +972,11 @@ impl Scheduler {
                                             self.cfg.max_batch);
                 if decode_spans > 0 {
                     self.metrics.record_decode_iter(decode_spans);
+                    // The SLO-gate signal: wall time of this decode-
+                    // bearing call (prefill rows riding it included —
+                    // that contention is exactly what the gate sheds).
+                    self.last_decode_ms =
+                        fwd_start.elapsed().as_secs_f64() * 1e3;
                 }
                 self.consume_outputs(&plan, &roles);
             }
@@ -748,7 +994,7 @@ impl Scheduler {
         for (si, role) in roles.iter().enumerate() {
             if let SpanRole::Prefill { pf, end } = role {
                 self.prefilling[*pf].consumed = *end;
-                if *end == self.prefilling[*pf].req.prompt.len() {
+                if *end == self.prefilling[*pf].work().len() {
                     completed.push((si, *pf));
                 }
             }
@@ -757,8 +1003,16 @@ impl Scheduler {
         for (si, pi) in completed {
             let pf = self.prefilling.remove(pi - removed);
             removed += 1;
-            let row = plan.logits_rows(si).start;
-            self.activate(pf.req, pf.cache, row);
+            match pf.resume {
+                // Preempted lane: KV rebuilt, stream state restored —
+                // re-enters decode with no sampling and no event (its
+                // final span produced no logits row).
+                Some(rs) => self.resume_lane(pf.req, pf.cache, rs),
+                None => {
+                    let row = plan.logits_rows(si).start;
+                    self.activate(pf.req, pf.cache, row);
+                }
+            }
         }
         // Decode lanes: one sampled token each. (Activation only pushed
         // to the end of `active`, so the captured indices stay valid.)
@@ -877,6 +1131,35 @@ impl Scheduler {
             done,
             finish,
             error: None,
+            preempted: false,
+        });
+    }
+
+    /// Re-enter a preempted lane into the active set after its
+    /// recompute prefill completed. Its KV again covers
+    /// `prompt ++ tokens[..len-1]`, the last generated token is the
+    /// next forward input, and the counter-based sampler continues at
+    /// step `tokens.len()` — so the continuation is bitwise the
+    /// uninterrupted stream (DESIGN.md §15). Nothing is sampled or
+    /// emitted here: every token it holds already reached the client.
+    /// Termination states are unreachable at this point: a lane is
+    /// only preempted while live, i.e. below `max_new`, not stopped,
+    /// and with logical KV room for its next position.
+    fn resume_lane(&mut self, req: Request, cache: KvCache,
+                   rs: ResumeState) {
+        let sampler = req.params.sampler();
+        let next = *rs.tokens.last().expect("preempted lane holds tokens");
+        self.active.push(Active {
+            req,
+            cache,
+            tokens: rs.tokens,
+            next,
+            ttft: rs.ttft,
+            sampler,
+            done: false,
+            finish: FinishReason::Length,
+            error: None,
+            preempted: false,
         });
     }
 
@@ -893,7 +1176,12 @@ impl Scheduler {
         let mut p = self.prefilling.pop().unwrap();
         self.pool.release(&mut p.cache);
         self.metrics.kv_requeues += 1;
-        self.pending.push_front(p.req);
+        // A stalled resumed lane keeps its generation state: the next
+        // admission recomputes the same work and continues the stream.
+        self.pending.push_front(PendingEntry {
+            req: p.req,
+            resume: p.resume,
+        });
     }
 
     fn finalize(&mut self) {
@@ -913,7 +1201,9 @@ impl Scheduler {
                 if a.error.is_none() && a.finish != FinishReason::Cancelled {
                     self.metrics.record_completion(latency, a.ttft,
                                                    a.req.prompt.len(),
-                                                   a.tokens.len());
+                                                   a.tokens.len(),
+                                                   a.req.params.priority,
+                                                   a.req.params.deadline_ms);
                 }
                 let response = Response {
                     id: a.req.id,

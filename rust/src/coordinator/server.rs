@@ -478,6 +478,18 @@ fn parse_params(j: &Json) -> Result<GenerationParams, String> {
             "stop_tokens" => {
                 p.stop_tokens = parse_tokens(v, "stop_tokens")?;
             }
+            // Traffic shaping (DESIGN.md §15): priority class (higher
+            // = more important; may transparently preempt strictly
+            // lower classes) and an observational latency deadline.
+            "priority" => {
+                let n = integer("priority")?;
+                if n > u8::MAX as u64 {
+                    return Err(format!(
+                        "priority must be <= {} (got {n})", u8::MAX));
+                }
+                p.priority = n as u8;
+            }
+            "deadline_ms" => p.deadline_ms = Some(integer("deadline_ms")?),
             other => return Err(format!("unknown params field {other:?}")),
         }
     }

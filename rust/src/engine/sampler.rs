@@ -32,6 +32,13 @@ fn argmax(xs: &[f32]) -> usize {
 /// depend on thread count, batch composition, or scheduling order.
 /// `temperature == 0` short-circuits to [`Sampler::argmax`] and is
 /// bitwise identical to the seed greedy path (no RNG is touched at all).
+///
+/// **Resume-at-step contract** (DESIGN.md §15): because there is no
+/// sequential RNG state, a stream interrupted after `k` draws resumes
+/// bitwise-identically by constructing a fresh `Sampler` from the same
+/// params and calling `sample(logits, k)` onward — the scheduler's
+/// preemption path relies on this to make victim eviction invisible in
+/// the token stream.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Sampler {
     temperature: f32,

@@ -53,8 +53,10 @@ fn run() -> Result<()> {
                  runtime> [--model NAME] [--method NAME] [--threads N] \
                  [--kv-cache f32|int8] [--kv-block TOKENS] \
                  [--kv-blocks N] [--prefix-cache] \
-                 [--prefix-cache-blocks N] [--temperature T --top-k K \
-                 --top-p P --seed S --stop T1,T2] …\n\
+                 [--prefix-cache-blocks N] [--max-decode-latency MS] \
+                 [--temperature T --top-k K \
+                 --top-p P --seed S --stop T1,T2 --priority P \
+                 --deadline-ms MS] …\n\
                  (got {other:?})"
             );
             bail!("unknown subcommand");
@@ -105,6 +107,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     cfg.scheduler.prefix_cache_blocks = args
         .get_usize("prefix-cache-blocks", cfg.scheduler.prefix_cache_blocks);
+    // SLO gate (DESIGN.md §15): --max-decode-latency sets the decode
+    // latency target in ms; while the last decode-bearing forward call
+    // exceeded it, new prefill admissions are deferred (0 = off).
+    cfg.scheduler.max_decode_latency = args
+        .get_usize("max-decode-latency",
+                   cfg.scheduler.max_decode_latency as usize) as u64;
 
     let engine = load_engine(&cfg.model, &cfg.method)?;
     println!("serving {} / {} (params ~{:.1} MB quantized, {} kernel \
@@ -125,7 +133,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("  v1 single-shot: {{\"prompt\":[1,2,3],\"max_new\":16}}");
     println!("  v2 streaming  : {{\"prompt\":[1,2,3],\"params\":{{\"max_new\":16,\
               \"temperature\":0.8,\"top_k\":40,\"top_p\":0.95,\"seed\":7,\
-              \"stop_tokens\":[2]}}}}");
+              \"stop_tokens\":[2],\"priority\":2,\"deadline_ms\":250}}}}");
     println!("  v2 frames     : one {{\"event\":\"token\",..}} per token, then \
               a terminal done/error frame");
     let secs = args.get_usize("run-secs", 0);
@@ -195,6 +203,14 @@ fn cmd_generate(args: &Args) -> Result<()> {
             .split(',')
             .filter_map(|t| t.trim().parse().ok())
             .collect(),
+        // Scheduling class + deadline (DESIGN.md §15). Single-shot
+        // generation never contends, so these only flow through for
+        // parity with the serving path.
+        priority: args.get_usize("priority", 0).min(u8::MAX as usize) as u8,
+        deadline_ms: {
+            let d = args.get_u64("deadline-ms", u64::MAX);
+            if d == u64::MAX { None } else { Some(d) }
+        },
     };
     params.validate().map_err(anyhow::Error::msg)?;
     let mut out = engine.generate_seeded(&prompt, params.max_new,
@@ -282,7 +298,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let j = mergequant::bench::record::run_suite(fast);
     println!("{}", j.to_string());
     if args.get_bool("record") {
-        let out = args.get_or("out", "BENCH_6.json");
+        let out = args.get_or("out", "BENCH_7.json");
         std::fs::write(out, format!("{}\n", j.to_string()))
             .with_context(|| format!("writing {out}"))?;
         eprintln!("wrote {out}");

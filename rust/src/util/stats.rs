@@ -10,6 +10,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
     pub max: f64,
 }
@@ -32,6 +33,7 @@ pub fn summarize(xs: &[f64]) -> Summary {
         min: v[0],
         p50: q(0.5),
         p90: q(0.9),
+        p95: q(0.95),
         p99: q(0.99),
         max: v[n - 1],
     }
@@ -81,6 +83,8 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+        // p95 rounds to the last rank on a 5-sample vector.
+        assert_eq!(s.p95, 5.0);
     }
 
     #[test]

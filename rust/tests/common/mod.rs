@@ -8,7 +8,9 @@
 // subset of it.
 #![allow(dead_code)]
 
-use mergequant::coordinator::{Event, Request, Response, Scheduler};
+use mergequant::coordinator::{
+    Event, GenerationParams, Request, Response, Scheduler,
+};
 use mergequant::engine::KvDtype;
 use mergequant::util::proptest::Shrink;
 use mergequant::util::rng::Rng;
@@ -73,6 +75,12 @@ pub struct Lane {
     /// the lane can be torn out mid-prefill or mid-share (`None` ⇒
     /// runs to completion).
     pub cancel_at: Option<usize>,
+    /// Scheduling class (DESIGN.md §15): higher preempts strictly lower
+    /// under block pressure. Neutral fleets use 0 everywhere, which
+    /// degrades to plain FIFO admission.
+    pub priority: u8,
+    /// Observational latency deadline in ms (`None` ⇒ no deadline).
+    pub deadline_ms: Option<u64>,
 }
 
 /// A seeded shared-prefix fleet over one system prompt: staggered
@@ -143,6 +151,51 @@ pub fn gen_fleet(r: &mut Rng) -> FleetTrace {
                 max_new: r.usize(1, 8),
                 submit_at,
                 cancel_at,
+                priority: 0,
+                deadline_ms: None,
+            }
+        })
+        .collect();
+    FleetTrace { prefix, lanes }
+}
+
+/// Draw an adversarial bursty mixed-priority fleet (DESIGN.md §15):
+/// 6–10 lanes arriving in two bursts (tick 0 and ~tick 3) with
+/// priorities drawn from {0, 1, 2, 3}, some with impossible
+/// (`Some(0)`) or generous deadlines, and ~1 in 5 carrying a
+/// cancellation — the workload shape that exercises weighted-fair
+/// admission, preemption, and SLO accounting together.
+pub fn gen_burst_fleet(r: &mut Rng) -> FleetTrace {
+    let plen = r.usize(8, 20);
+    let prefix: Vec<u32> =
+        (0..plen).map(|_| 3 + r.usize(0, 90) as u32).collect();
+    let lanes = (0..r.usize(6, 11))
+        .map(|i| {
+            let take = r.usize(1, plen + 1);
+            let mut prompt: Vec<u32> = prefix[..take].to_vec();
+            for _ in 0..r.usize(0, 9) {
+                prompt.push(3 + r.usize(0, 90) as u32);
+            }
+            // Two arrival bursts; the second lands while the first is
+            // mid-decode, so admission competes with live lanes.
+            let submit_at =
+                if r.usize(0, 2) == 0 { 0 } else { 3 + r.usize(0, 2) };
+            let cancel_at = (r.usize(0, 5) == 0)
+                .then(|| submit_at + 1 + r.usize(0, 8));
+            let deadline_ms = match r.usize(0, 4) {
+                0 => Some(0),          // impossible: always a violation
+                1 => Some(60_000),     // generous: never a violation
+                _ => None,
+            };
+            Lane {
+                id: i as u64,
+                prompt,
+                prefix_take: take,
+                max_new: r.usize(1, 10),
+                submit_at,
+                cancel_at,
+                priority: r.usize(0, 4) as u8,
+                deadline_ms,
             }
         })
         .collect();
@@ -165,8 +218,14 @@ pub fn drive_fleet(sched: &mut Scheduler, trace: &FleetTrace)
     while tick <= horizon || sched.has_work() {
         for l in &trace.lanes {
             if l.submit_at == tick {
+                let params = GenerationParams {
+                    priority: l.priority,
+                    deadline_ms: l.deadline_ms,
+                    ..GenerationParams::greedy(l.max_new)
+                };
                 sched
-                    .submit(Request::new(l.id, l.prompt.clone(), l.max_new))
+                    .submit(Request::with_params(
+                        l.id, l.prompt.clone(), params))
                     .expect("fleet exceeds queue_cap");
             }
             if l.cancel_at == Some(tick) {

@@ -33,6 +33,7 @@ fn make_scheduler(max_batch: usize, slabs: usize) -> Scheduler {
             kv_dtype: KvDtype::F32,
             prefix_cache: false,
             prefix_cache_blocks: 0,
+            max_decode_latency: 0,
         },
     )
 }
@@ -118,6 +119,7 @@ fn fifo_first_token_order() {
             kv_dtype: KvDtype::F32,
             prefix_cache: false,
             prefix_cache_blocks: 0,
+            max_decode_latency: 0,
         },
     );
     for i in 0..6u64 {
@@ -199,6 +201,7 @@ fn kv_overflow_mid_chunked_prefill_fails_cleanly() {
             kv_dtype: KvDtype::F32,
             prefix_cache: false,
             prefix_cache_blocks: 0,
+            max_decode_latency: 0,
         },
     );
     let oversized: Vec<u32> = (0..40).map(|t| 3 + t % 90).collect();
@@ -236,6 +239,7 @@ fn int8_kv_scheduler_serves_full_workload() {
                 kv_dtype: KvDtype::Int8,
                 prefix_cache: false,
                 prefix_cache_blocks: 0,
+                max_decode_latency: 0,
             },
         );
         for (i, &(plen, mnew)) in workload.iter().enumerate() {
@@ -281,6 +285,7 @@ fn backpressure_queue_cap() {
             kv_dtype: KvDtype::F32,
             prefix_cache: false,
             prefix_cache_blocks: 0,
+            max_decode_latency: 0,
         },
     );
     assert!(sched.submit(Request::new(1, vec![3], 2)).is_ok());
@@ -412,6 +417,7 @@ fn cancel_mid_chunked_prefill_frees_blocks() {
             kv_dtype: KvDtype::F32,
             prefix_cache: false,
             prefix_cache_blocks: 0,
+            max_decode_latency: 0,
         },
     );
     let long: Vec<u32> = (0..40).map(|t| 3 + t % 90).collect();
@@ -509,6 +515,7 @@ fn multiple_chunked_prefills_ride_concurrently() {
                 kv_dtype: KvDtype::F32,
                 prefix_cache: false,
                 prefix_cache_blocks: 0,
+                max_decode_latency: 0,
             },
         )
     };
@@ -587,6 +594,7 @@ fn chunked_prefill_same_results_and_bounded_stall() {
                 kv_dtype: KvDtype::F32,
                 prefix_cache: false,
                 prefix_cache_blocks: 0,
+                max_decode_latency: 0,
             },
         )
     };
@@ -728,6 +736,7 @@ fn paged_scheduler_streams_match_slab_scheduler() {
                 kv_dtype: kv,
                 prefix_cache: false,
                 prefix_cache_blocks: 0,
+                max_decode_latency: 0,
             },
         );
         for i in 0..5u64 {
@@ -777,6 +786,7 @@ fn decode_lanes_finish_cache_full_fifo_under_block_pressure() {
             kv_dtype: KvDtype::F32,
             prefix_cache: false,
             prefix_cache_blocks: 0,
+            max_decode_latency: 0,
         },
     );
     let prompt: Vec<u32> = (0..8).map(|t| 3 + t % 90).collect();
@@ -823,6 +833,7 @@ fn stalled_prefills_requeue_newest_deterministically() {
             kv_dtype: KvDtype::F32,
             prefix_cache: false,
             prefix_cache_blocks: 0,
+            max_decode_latency: 0,
         },
     );
     let prompt: Vec<u32> = (0..24).map(|t| 3 + t % 90).collect();
@@ -847,6 +858,149 @@ fn stalled_prefills_requeue_newest_deterministically() {
                "requeue leaked blocks");
 }
 
+#[test]
+fn bursty_mixed_priority_fleet_conserves_blocks_and_starves_no_one() {
+    // Adversarial §15 workload: two arrival bursts of 6–10 lanes with
+    // priorities 0..=3, impossible and generous deadlines, and
+    // cancellations, through a tight arena (6 blocks × 8 tokens) that
+    // forces preemption churn. With the prefix cache off the physical
+    // ledger must balance after EVERY tick — free + live == capacity —
+    // and every lane must get exactly one terminal response with no
+    // starvation (preempted lanes resume, they are never dropped).
+    use mergequant::coordinator::Event;
+    check(2029, 10, common::gen_burst_fleet, |trace| {
+        let engine =
+            Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+        let mut sched = Scheduler::new(
+            engine,
+            SchedulerConfig {
+                max_batch: 4,
+                kv_slabs: 0,
+                kv_block: 8,
+                kv_blocks: 6,
+                max_seq: 48,
+                max_prefills_per_iter: 2,
+                queue_cap: 64,
+                prefill_chunk: 0,
+                threads: 1,
+                kv_dtype: KvDtype::F32,
+                prefix_cache: false,
+                prefix_cache_blocks: 0,
+                max_decode_latency: 0,
+            },
+        );
+        let horizon = trace
+            .lanes
+            .iter()
+            .map(|l| l.cancel_at.unwrap_or(l.submit_at))
+            .max()
+            .unwrap_or(0);
+        let mut responses = Vec::new();
+        let mut tick = 0usize;
+        while tick <= horizon || sched.has_work() {
+            for l in &trace.lanes {
+                if l.submit_at == tick {
+                    let params = GenerationParams {
+                        priority: l.priority,
+                        deadline_ms: l.deadline_ms,
+                        ..GenerationParams::greedy(l.max_new)
+                    };
+                    sched
+                        .submit(Request::with_params(
+                            l.id, l.prompt.clone(), params))
+                        .map_err(|_| "queue full unexpectedly")?;
+                }
+                if l.cancel_at == Some(tick) {
+                    sched.cancel(l.id);
+                }
+            }
+            sched.step();
+            // The per-tick ledger, preemption churn included.
+            if sched.kv_available() + sched.kv_live_blocks()
+                != sched.kv_capacity()
+            {
+                return Err(format!(
+                    "tick {tick}: {} free + {} live != {} capacity",
+                    sched.kv_available(), sched.kv_live_blocks(),
+                    sched.kv_capacity()));
+            }
+            for ev in sched.take_events() {
+                if let Event::Done { response }
+                | Event::Error { response } = ev
+                {
+                    responses.push(response);
+                }
+            }
+            tick += 1;
+            if tick >= 100_000 {
+                return Err("fleet livelock".into());
+            }
+        }
+        if responses.len() != trace.lanes.len() {
+            return Err(format!("{} responses for {} lanes",
+                               responses.len(), trace.lanes.len()));
+        }
+        let ids: HashSet<u64> = responses.iter().map(|r| r.id).collect();
+        if ids.len() != trace.lanes.len() {
+            return Err("duplicate response ids".into());
+        }
+        for r in &responses {
+            if let Some(e) = &r.error {
+                return Err(format!("lane {} failed: {e}", r.id));
+            }
+            let lane = &trace.lanes[r.id as usize];
+            if r.tokens.len() > lane.max_new {
+                return Err(format!("lane {} over budget: {} > {}",
+                                   r.id, r.tokens.len(), lane.max_new));
+            }
+            // No starvation: every lane that was not cancelled streams
+            // at least its first token (CacheFull cuts still do).
+            if r.finish != FinishReason::Cancelled && r.tokens.is_empty() {
+                return Err(format!("lane {} starved", r.id));
+            }
+        }
+        if sched.kv_available() != sched.kv_capacity() {
+            return Err("bursty fleet leaked blocks at drain".into());
+        }
+        // Same trace through a prefix-on scheduler: the drain ledger
+        // balances against the retained index instead.
+        let engine =
+            Engine::new(synthetic_model("mergequant", 64, 128, 1, 96));
+        let mut on = Scheduler::new(
+            engine,
+            SchedulerConfig {
+                max_batch: 4,
+                kv_slabs: 0,
+                kv_block: 8,
+                kv_blocks: 6,
+                max_seq: 48,
+                max_prefills_per_iter: 2,
+                queue_cap: 64,
+                prefill_chunk: 0,
+                threads: 1,
+                kv_dtype: KvDtype::F32,
+                prefix_cache: true,
+                prefix_cache_blocks: 0,
+                max_decode_latency: 0,
+            },
+        );
+        let rs_on = common::drive_fleet(&mut on, trace);
+        if rs_on.len() != trace.lanes.len() {
+            return Err(format!("prefix-on: {} responses for {} lanes",
+                               rs_on.len(), trace.lanes.len()));
+        }
+        if on.kv_available() + on.prefix_cached_blocks()
+            != on.kv_capacity()
+        {
+            return Err(format!(
+                "prefix-on drain leak: {} free + {} cached != {}",
+                on.kv_available(), on.prefix_cached_blocks(),
+                on.kv_capacity()));
+        }
+        Ok(())
+    });
+}
+
 // ---------------------------------------------------------------------
 // Prefix sharing: CoW refcount accounting + scheduler-level
 // on/off-equivalence (DESIGN.md §14)
@@ -869,6 +1023,7 @@ fn make_prefix_scheduler(prefix: bool) -> Scheduler {
             kv_dtype: KvDtype::F32,
             prefix_cache: prefix,
             prefix_cache_blocks: 0,
+            max_decode_latency: 0,
         },
     )
 }
@@ -1086,6 +1241,7 @@ fn prefix_pressure_evicts_cached_blocks_and_balances_at_drain() {
             kv_dtype: KvDtype::F32,
             prefix_cache: true,
             prefix_cache_blocks: 0,
+            max_decode_latency: 0,
         },
     );
     for i in 0..4u64 {
@@ -1132,6 +1288,7 @@ fn paged_admission_outpacks_slab_admission_at_equal_bytes() {
                 kv_dtype: KvDtype::F32,
                 prefix_cache: false,
                 prefix_cache_blocks: 0,
+                max_decode_latency: 0,
             },
         );
         for i in 0..16u64 {

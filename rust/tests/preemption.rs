@@ -1,0 +1,435 @@
+//! Preempt/resume replay suite (DESIGN.md §15) — the CI matrix target
+//! for priority classes, transparent decode-lane preemption, and the
+//! SLO gate.
+//!
+//! The pinned claim: preemption changes *when* a stream's tokens are
+//! computed, never *what* they are. A decode lane evicted under block
+//! pressure by a strictly-higher class re-enters pending with its
+//! generation state, recomputes its KV (prefix-cache hit when the index
+//! is on), and continues its counter-based sampler at the next step —
+//! so every lane of a bursty mixed-priority fleet that runs to a normal
+//! finish streams **bitwise identically** to an uninterrupted solo
+//! replay of the same prompt, across
+//! {threads}×{kv f32,int8}×{kv_block}×{prefix on,off}×{chunking}.
+//! Victim selection is deterministic (lowest class, then youngest) and
+//! observable via `Scheduler::preemption_log`; a preempted stream never
+//! surfaces `cache_full`.
+//!
+//! CI matrix knobs: `MQ_TEST_THREADS`, `MQ_TEST_KV`, `MQ_TEST_KV_BLOCK`
+//! (DESIGN.md §7/§10/§13).
+
+mod common;
+
+use std::cell::Cell;
+
+use mergequant::bench::synthetic_model;
+use mergequant::coordinator::{
+    Event, FinishReason, GenerationParams, Request, Scheduler,
+    SchedulerConfig,
+};
+use mergequant::engine::{Engine, KvDtype};
+use mergequant::util::proptest::check;
+
+use common::{drive_fleet, gen_burst_fleet, FleetTrace};
+
+/// Tight-arena scheduler: `⌈max_seq/kv_block⌉ + 1` blocks — enough for
+/// one full sequence plus change, so a bursty fleet is guaranteed to
+/// contend and higher classes must preempt to make progress.
+fn tight_scheduler(prefix_on: bool, threads: usize, kv: KvDtype,
+                   kv_block: usize, chunk: usize) -> Scheduler {
+    let engine = Engine::with_threads(
+        synthetic_model("mergequant", 64, 128, 1, 96), threads);
+    Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 4,
+            kv_slabs: 0,
+            kv_block,
+            kv_blocks: 48usize.div_ceil(kv_block) + 1,
+            max_seq: 48,
+            max_prefills_per_iter: 2,
+            queue_cap: 64,
+            prefill_chunk: chunk,
+            threads,
+            kv_dtype: kv,
+            prefix_cache: prefix_on,
+            prefix_cache_blocks: 0,
+            max_decode_latency: 0,
+        },
+    )
+}
+
+/// Ample-arena scheduler for solo goldens and the hand-scripted unit
+/// scenarios below.
+fn roomy_scheduler(threads: usize, kv: KvDtype, kv_block: usize,
+                   kv_blocks: usize, max_seq: usize) -> Scheduler {
+    let engine = Engine::with_threads(
+        synthetic_model("mergequant", 64, 128, 1, 96), threads);
+    Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 4,
+            kv_slabs: 0,
+            kv_block,
+            kv_blocks,
+            max_seq,
+            max_prefills_per_iter: 2,
+            queue_cap: 64,
+            prefill_chunk: 0,
+            threads,
+            kv_dtype: kv,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
+            max_decode_latency: 0,
+        },
+    )
+}
+
+/// Uninterrupted solo replay: the lane's prompt alone through an
+/// uncontended scheduler — the golden stream preemption must reproduce.
+fn solo_stream(threads: usize, kv: KvDtype, kv_block: usize,
+               prompt: &[u32], max_new: usize) -> Vec<u32> {
+    let mut sched = roomy_scheduler(threads, kv, kv_block, 8, 48);
+    sched.submit(Request::new(0, prompt.to_vec(), max_new)).unwrap();
+    let rs = sched.run_to_completion();
+    assert!(rs[0].error.is_none(), "golden failed: {:?}", rs[0].error);
+    rs[0].tokens.clone()
+}
+
+fn check_fleet_against_goldens(trace: &FleetTrace, mut sched: Scheduler,
+                               ctx: &str, goldens: &[Vec<u32>],
+                               preempt_total: &Cell<u64>)
+                               -> Result<(), String> {
+    let rs = drive_fleet(&mut sched, trace);
+    if rs.len() != trace.lanes.len() {
+        return Err(format!("{} responses for {} lanes {ctx}",
+                           rs.len(), trace.lanes.len()));
+    }
+    for (r, golden) in rs.iter().zip(goldens) {
+        if let Some(e) = &r.error {
+            return Err(format!("lane {} failed: {e} {ctx}", r.id));
+        }
+        match r.finish {
+            // Cancellation and same-class CacheFull truncate a stream;
+            // neither may rewrite it.
+            FinishReason::Cancelled | FinishReason::CacheFull => {
+                if r.tokens.len() > golden.len()
+                    || r.tokens[..] != golden[..r.tokens.len()]
+                {
+                    return Err(format!(
+                        "truncated lane {} ({:?}) diverged from its solo \
+                         replay: {:?} not a prefix of {:?} {ctx}",
+                        r.id, r.finish, r.tokens, golden));
+                }
+            }
+            // A normal finish must be the whole uninterrupted stream —
+            // preemption and resume bitwise invisible.
+            _ => {
+                if &r.tokens != golden {
+                    return Err(format!(
+                        "lane {} diverged from its solo replay: {:?} != \
+                         {:?} {ctx}", r.id, r.tokens, golden));
+                }
+            }
+        }
+    }
+    // The ledger balances at drain (the per-tick variant lives in
+    // coordinator_props); with the index on, retained blocks account
+    // for the difference.
+    if sched.kv_available() + sched.prefix_cached_blocks()
+        != sched.kv_capacity()
+    {
+        return Err(format!(
+            "drain leak: {} free + {} cached != {} capacity {ctx}",
+            sched.kv_available(), sched.prefix_cached_blocks(),
+            sched.kv_capacity()));
+    }
+    preempt_total.set(preempt_total.get() + sched.metrics.preemptions);
+    Ok(())
+}
+
+#[test]
+fn preempted_streams_bitwise_match_uninterrupted_replay() {
+    // The headline §15 property over the full determinism matrix. The
+    // sweep must actually exercise preemption: the aggregate count
+    // across all fleets is asserted non-zero at the end.
+    let preempt_total = Cell::new(0u64);
+    for kv in common::kv_dtypes() {
+        for &threads in &common::thread_counts() {
+            for kv_block in common::sched_kv_blocks() {
+                check(5407 + threads as u64 + kv_block as u64, 2,
+                      gen_burst_fleet, |trace| {
+                    let goldens: Vec<Vec<u32>> = trace
+                        .lanes
+                        .iter()
+                        .map(|l| solo_stream(threads, kv, kv_block,
+                                             &l.prompt, l.max_new))
+                        .collect();
+                    for prefix_on in [false, true] {
+                        for chunk in [0usize, 5] {
+                            let ctx = format!(
+                                "(prefix {prefix_on}, kv {kv:?}, threads \
+                                 {threads}, kv_block {kv_block}, chunk \
+                                 {chunk})");
+                            check_fleet_against_goldens(
+                                trace,
+                                tight_scheduler(prefix_on, threads, kv,
+                                                kv_block, chunk),
+                                &ctx, &goldens, &preempt_total)?;
+                        }
+                    }
+                    Ok(())
+                });
+            }
+        }
+    }
+    assert!(preempt_total.get() > 0,
+            "the tight-arena sweep never preempted anyone — the matrix \
+             exercised nothing");
+}
+
+// ---------------------------------------------------------------------
+// Deterministic victim selection (the §15 scheduling contract)
+// ---------------------------------------------------------------------
+
+fn classed(id: u64, prompt: Vec<u32>, max_new: usize, class: u8)
+           -> Request {
+    Request::with_params(id, prompt, GenerationParams {
+        priority: class,
+        ..GenerationParams::greedy(max_new)
+    })
+}
+
+/// Drive two low lanes to steady decode (2 blocks each of the 4-block
+/// arena), then admit one high-class lane whose prefill needs a block —
+/// forcing exactly one preemption. Returns the scheduler post-drain and
+/// the responses sorted by id.
+fn preempt_scenario(low_classes: [u8; 2], high_class: u8)
+                    -> (Scheduler, Vec<mergequant::coordinator::Response>) {
+    // 4 blocks × 16 tokens, max_seq 64 (the arena covers one max_seq
+    // sequence). 16-token prompts fill one block exactly; the first
+    // decode step claims each lane's second block, so the high-class
+    // arrival at tick 3 finds the free list empty.
+    let mut sched = roomy_scheduler(1, KvDtype::F32, 16, 4, 64);
+    let prompt: Vec<u32> = (0..16).map(|t| 3 + (t * 7) % 90).collect();
+    sched.submit(classed(1, prompt.clone(), 4, low_classes[0])).unwrap();
+    sched.submit(classed(2, prompt.clone(), 4, low_classes[1])).unwrap();
+    sched.step(); // both prefill + first token (1 block each)
+    sched.step(); // second token — each lane claims its second block
+    assert_eq!(sched.kv_available(), 0, "scenario geometry drifted");
+    sched.submit(classed(3, prompt, 4, high_class)).unwrap();
+    let mut rs = sched.run_to_completion();
+    rs.sort_by_key(|r| r.id);
+    (sched, rs)
+}
+
+#[test]
+fn victim_selection_lowest_class_first() {
+    // Lanes of class 0 and 1 hold the arena; a class-2 admission must
+    // evict the class-0 lane — even though the class-1 lane is younger.
+    let (sched, rs) = preempt_scenario([0, 1], 2);
+    assert_eq!(sched.preemption_log(), &[1],
+               "victim must be the lowest class, not the youngest lane");
+    assert_eq!(sched.metrics.preemptions, 1);
+    for r in &rs {
+        assert!(r.error.is_none(), "lane {} failed: {:?}", r.id, r.error);
+        assert_eq!(r.finish, FinishReason::Length,
+                   "lane {} finished {:?}", r.id, r.finish);
+        assert_eq!(r.tokens.len(), 4, "lane {} truncated", r.id);
+    }
+    // The preempted lane's stream equals its solo replay bitwise.
+    let golden = solo_stream(1, KvDtype::F32, 16,
+                             &(0..16).map(|t| 3 + (t * 7) % 90)
+                                 .collect::<Vec<u32>>(), 4);
+    assert_eq!(rs[0].tokens, golden,
+               "preempt/resume changed the victim's stream");
+}
+
+#[test]
+fn victim_selection_youngest_within_class() {
+    // Both low lanes are class 0: the tie breaks to the youngest (the
+    // higher lane index — lane index equals arrival order), so lane 2.
+    let (sched, rs) = preempt_scenario([0, 0], 1);
+    assert_eq!(sched.preemption_log(), &[2],
+               "equal classes must evict the youngest lane");
+    assert_eq!(sched.metrics.preemptions, 1);
+    for r in &rs {
+        assert!(r.error.is_none());
+        assert_eq!(r.finish, FinishReason::Length);
+        assert_eq!(r.tokens.len(), 4);
+    }
+}
+
+#[test]
+fn preemption_is_invisible_in_the_event_stream() {
+    // Transparent-backpressure regression: the victim's event stream
+    // must look exactly like an uninterrupted run — consecutive Token
+    // frames 0..n with no duplicates or re-emissions around the
+    // preemption, then exactly one terminal Done with finish `length`,
+    // and never `cache_full`.
+    let mut sched = roomy_scheduler(1, KvDtype::F32, 16, 4, 64);
+    let prompt: Vec<u32> = (0..16).map(|t| 3 + (t * 7) % 90).collect();
+    sched.submit(classed(1, prompt.clone(), 4, 0)).unwrap();
+    sched.submit(classed(2, prompt.clone(), 4, 1)).unwrap();
+    let mut victim_events = Vec::new();
+    let drain = |sched: &mut Scheduler,
+                 victim_events: &mut Vec<Event>| {
+        for ev in sched.take_events() {
+            if ev.id() == 1 {
+                victim_events.push(ev);
+            }
+        }
+    };
+    sched.step();
+    sched.step();
+    drain(&mut sched, &mut victim_events);
+    sched.submit(classed(3, prompt.clone(), 4, 2)).unwrap();
+    while sched.has_work() {
+        sched.step();
+        drain(&mut sched, &mut victim_events);
+    }
+    assert_eq!(sched.preemption_log(), &[1], "lane 1 must be the victim");
+    let (terminals, tokens): (Vec<&Event>, Vec<&Event>) =
+        victim_events.iter().partition(|e| e.is_terminal());
+    assert_eq!(tokens.len(), 4, "4 Token frames for max_new 4");
+    for (i, ev) in tokens.iter().enumerate() {
+        let Event::Token { index, .. } = ev else { unreachable!() };
+        assert_eq!(*index, i,
+                   "token frames must stay consecutive across the \
+                    preemption (no re-emission, no gap)");
+    }
+    assert_eq!(terminals.len(), 1, "exactly one terminal frame");
+    let Event::Done { response } = terminals[0] else {
+        panic!("victim must finish Done, got {:?}", terminals[0]);
+    };
+    assert_eq!(response.finish, FinishReason::Length,
+               "a preempted lane must never surface cache_full");
+    let golden = solo_stream(1, KvDtype::F32, 16, &prompt, 4);
+    assert_eq!(response.tokens, golden);
+}
+
+#[test]
+fn same_class_pressure_keeps_cache_full_fifo_cut() {
+    // The pre-§15 contract survives: uniform-priority block pressure
+    // still cuts the youngest lane CacheFull deterministically (the
+    // `decode_lanes_finish_cache_full_fifo_under_block_pressure`
+    // geometry — 5 blocks × 8 tokens, max_seq 32) even when a lane of a
+    // *lower* class was preempted out of the arena earlier: preemption
+    // never reorders the same-class cut.
+    let mut sched = roomy_scheduler(1, KvDtype::F32, 8, 5, 32);
+    let prompt: Vec<u32> = (0..8).map(|t| 3 + t % 90).collect();
+    // A class-0 background lane admits first and starts decoding…
+    sched.submit(classed(7, prompt.clone(), 30, 0)).unwrap();
+    sched.step();
+    sched.step();
+    // …then two class-1 lanes arrive and grow until the pool runs dry;
+    // their admissions preempt the background lane out of the way.
+    sched.submit(classed(1, prompt.clone(), 30, 1)).unwrap();
+    sched.submit(classed(2, prompt, 30, 1)).unwrap();
+    let mut rs = sched.run_to_completion();
+    rs.sort_by_key(|r| r.id);
+    assert_eq!(rs.len(), 3);
+    for r in &rs {
+        assert!(r.error.is_none(), "pressure must not error: {:?}",
+                r.error);
+    }
+    assert!(sched.metrics.preemptions >= 1,
+            "the class-1 burst must preempt the background lane");
+    assert!(sched.preemption_log().iter().all(|&id| id == 7),
+            "only the class-0 lane may be preempted: {:?}",
+            sched.preemption_log());
+    // Same-class cut: lane 2 (younger) is cut CacheFull first, lane 1
+    // outlives it — bitwise the pre-§15 deterministic order.
+    assert_eq!(rs[1].finish, FinishReason::CacheFull,
+               "the younger same-class lane must be cut first");
+    assert!(rs[1].tokens.len() < rs[0].tokens.len(),
+            "FIFO priority inverted: lane 1 ({}) vs lane 2 ({})",
+            rs[0].tokens.len(), rs[1].tokens.len());
+    // The preempted background lane was never cut: it resumed and ran
+    // to its budget or a graceful CacheFull — never an error, and its
+    // stream is a prefix of (or equal to) its solo replay.
+    let golden = solo_stream(1, KvDtype::F32, 8,
+                             &(0..8).map(|t| 3 + t % 90)
+                                 .collect::<Vec<u32>>(), 30);
+    let bg = &rs[2];
+    assert!(!bg.tokens.is_empty(), "background lane starved");
+    assert_eq!(bg.tokens[..], golden[..bg.tokens.len()],
+               "background lane diverged from its solo replay");
+    assert_eq!(sched.kv_available(), sched.kv_capacity(),
+               "pressure run leaked blocks");
+}
+
+// ---------------------------------------------------------------------
+// SLO accounting (observational — never a token-stream input)
+// ---------------------------------------------------------------------
+
+#[test]
+fn no_slo_violations_when_capacity_suffices() {
+    // Generous deadlines + a generous decode-latency target on an
+    // uncontended scheduler: nothing may be deferred and nothing may be
+    // counted violated.
+    let engine = Engine::with_threads(
+        synthetic_model("mergequant", 64, 128, 1, 96), 1);
+    let mut sched = Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 4,
+            kv_slabs: 8,
+            kv_block: 16,
+            kv_blocks: 0,
+            max_seq: 48,
+            max_prefills_per_iter: 2,
+            queue_cap: 64,
+            prefill_chunk: 0,
+            threads: 1,
+            kv_dtype: KvDtype::F32,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
+            max_decode_latency: 60_000,
+        },
+    );
+    for i in 0..3u64 {
+        let prompt: Vec<u32> =
+            (0..8).map(|t| 3 + (t + i as u32) % 90).collect();
+        sched.submit(Request::with_params(i, prompt, GenerationParams {
+            priority: (i % 3) as u8,
+            deadline_ms: Some(60_000),
+            ..GenerationParams::greedy(4)
+        })).unwrap();
+    }
+    let rs = sched.run_to_completion();
+    assert_eq!(rs.len(), 3);
+    for r in &rs {
+        assert!(r.error.is_none());
+        assert_eq!(r.tokens.len(), 4);
+    }
+    assert_eq!(sched.metrics.slo_violations, 0,
+               "generous deadlines must never count as violated");
+    assert_eq!(sched.metrics.slo_deferrals, 0,
+               "a 60s decode target must never defer admission");
+    assert_eq!(sched.metrics.preemptions, 0,
+               "an uncontended arena must never preempt");
+}
+
+#[test]
+fn impossible_deadline_counts_violations_without_touching_tokens() {
+    // deadline_ms = 0 cannot be met; every such completion increments
+    // slo_violations — and the tokens are exactly the undeadlined run's.
+    let run = |deadline: Option<u64>| {
+        let mut sched = roomy_scheduler(1, KvDtype::F32, 16, 8, 48);
+        let prompt: Vec<u32> = (0..8).map(|t| 3 + t % 90).collect();
+        sched.submit(Request::with_params(1, prompt, GenerationParams {
+            deadline_ms: deadline,
+            ..GenerationParams::greedy(5)
+        })).unwrap();
+        let rs = sched.run_to_completion();
+        assert!(rs[0].error.is_none());
+        (rs[0].tokens.clone(), sched.metrics.slo_violations)
+    };
+    let (tokens_none, v_none) = run(None);
+    let (tokens_zero, v_zero) = run(Some(0));
+    assert_eq!(v_none, 0);
+    assert_eq!(v_zero, 1, "an impossible deadline must be counted");
+    assert_eq!(tokens_zero, tokens_none,
+               "deadlines are observational: tokens must not change");
+}

@@ -44,6 +44,7 @@ fn fleet_scheduler(prefix_on: bool, threads: usize, kv: KvDtype,
             kv_dtype: kv,
             prefix_cache: prefix_on,
             prefix_cache_blocks: 0,
+            max_decode_latency: 0,
         },
     )
 }
@@ -270,6 +271,7 @@ fn capacity_bound_evicts_lru_and_report_carries_hit_rate() {
             kv_dtype: KvDtype::F32,
             prefix_cache: true,
             prefix_cache_blocks: 4,
+            max_decode_latency: 0,
         },
     );
     for i in 0..6u64 {

@@ -110,6 +110,37 @@ fn distinct_seeds_diverge_on_flat_logits() {
     assert!(sa.iter().all(|&t| t < 96));
 }
 
+#[test]
+fn sampler_resumes_bitwise_from_any_split_point() {
+    // The preemption path's resume-at-step contract: interrupt a stream
+    // after k draws, rebuild the sampler from the same params, continue
+    // at step k — the concatenation must equal the uninterrupted stream.
+    let mut rng = Rng::new(23);
+    let logits: Vec<Vec<f32>> =
+        (0..20).map(|_| random_logits(&mut rng, 96)).collect();
+    let full = Sampler::new(0.9, 16, 0.92, 4242);
+    let golden: Vec<u32> = logits
+        .iter()
+        .enumerate()
+        .map(|(t, l)| full.sample(l, t as u64))
+        .collect();
+    for split in [1usize, 7, 13, 19] {
+        let first = Sampler::new(0.9, 16, 0.92, 4242);
+        let second = Sampler::new(0.9, 16, 0.92, 4242);
+        let mut resumed: Vec<u32> = logits[..split]
+            .iter()
+            .enumerate()
+            .map(|(t, l)| first.sample(l, t as u64))
+            .collect();
+        resumed.extend(logits[split..]
+            .iter()
+            .enumerate()
+            .map(|(i, l)| second.sample(l, (split + i) as u64)));
+        assert_eq!(golden, resumed,
+                   "resumed stream diverged at split {split}");
+    }
+}
+
 // ------------------------------------------------------------------
 // Engine-level stream determinism ({threads} × {kv})
 // ------------------------------------------------------------------
@@ -176,6 +207,8 @@ fn workload() -> Vec<(Vec<u32>, GenerationParams)> {
         top_p: 0.9,
         seed,
         stop_tokens: Vec::new(),
+        priority: 0,
+        deadline_ms: None,
     };
     vec![
         ((0..5).map(|i| 3 + i * 2).collect(), GenerationParams::greedy(10)),
@@ -206,6 +239,7 @@ fn run_workload(threads: usize, kv: KvDtype, prefill_chunk: usize)
             kv_dtype: kv,
             prefix_cache: false,
             prefix_cache_blocks: 0,
+            max_decode_latency: 0,
         },
     );
     for (i, (prompt, params)) in workload().into_iter().enumerate() {
@@ -266,6 +300,7 @@ fn scheduler_greedy_lane_unaffected_by_sampled_neighbours() {
             kv_dtype: KvDtype::F32,
             prefix_cache: false,
             prefix_cache_blocks: 0,
+            max_decode_latency: 0,
         },
     );
     for (i, (prompt, _)) in workload().into_iter().enumerate() {

@@ -34,6 +34,7 @@ fn server_with(max_batch: usize, kv_slabs: usize, max_seq: usize,
             kv_dtype: KvDtype::F32,
             prefix_cache: false,
             prefix_cache_blocks: 0,
+            max_decode_latency: 0,
         },
     )
 }
@@ -329,6 +330,61 @@ fn tcp_gateway_rejects_malformed_and_unknown_fields() {
     writeln!(out, "{{\"prompt\":[5],\"max_new\":2}}").unwrap();
     let j = read_json(&mut reader);
     assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+
+    gw.stop();
+}
+
+#[test]
+fn tcp_gateway_v2_priority_and_deadline_params() {
+    // The §15 scheduling params ride the v2 params object: a valid
+    // priority/deadline_ms pair is accepted (and on an uncontended
+    // server changes nothing about the stream), a class that does not
+    // fit u8 is a protocol error that names the bound, and the
+    // connection stays usable throughout.
+    let server = Arc::new(test_server());
+    let gw = TcpGateway::start(server.clone(), 0).unwrap();
+    let stream = TcpStream::connect(gw.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut out = stream;
+
+    writeln!(out, "{{\"prompt\":[3,9,12],\"params\":{{\"max_new\":4,\
+                   \"priority\":2,\"deadline_ms\":250}}}}").unwrap();
+    let mut classed = Vec::new();
+    loop {
+        let j = read_json(&mut reader);
+        match j.get("event").unwrap().as_str().unwrap() {
+            "token" => classed.push(j.get("token").unwrap()
+                .as_usize().unwrap()),
+            "done" => break,
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    assert_eq!(classed.len(), 4);
+
+    // Out-of-range class: a typed protocol error naming the u8 bound.
+    writeln!(out, "{{\"prompt\":[3],\"params\":{{\"max_new\":2,\
+                   \"priority\":300}}}}").unwrap();
+    let j = read_json(&mut reader);
+    assert!(j.get("error").unwrap().as_str().unwrap()
+        .contains("priority must be <= 255"));
+
+    // The class annotation never changes the tokens: same prompt with
+    // default class streams the identical greedy tokens.
+    writeln!(out, "{{\"prompt\":[3,9,12],\"params\":{{\"max_new\":4}}}}")
+        .unwrap();
+    let mut plain = Vec::new();
+    loop {
+        let j = read_json(&mut reader);
+        match j.get("event").unwrap().as_str().unwrap() {
+            "token" => plain.push(j.get("token").unwrap()
+                .as_usize().unwrap()),
+            "done" => break,
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    assert_eq!(plain, classed,
+               "priority/deadline are scheduling inputs, not sampling \
+                inputs");
 
     gw.stop();
 }
