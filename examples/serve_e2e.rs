@@ -11,6 +11,12 @@
 //!     slab (slab reuse by a later admission) and whose tokens must match
 //!     the seed greedy golden (`Engine::generate`).
 //!
+//! Part 1c — **router demo** (synthetic fallback too): three chat
+//! sessions take three turns across a two-replica router fleet
+//! (DESIGN.md §16) — session affinity keeps follow-up turns on warm
+//! prefix blocks, a mid-run drain retires and respawns a replica, and
+//! every stream is golden-checked against `Engine::generate`.
+//!
 //! Part 2 — **fleet run** (needs `make artifacts`): a closed-loop
 //! Poisson client fleet speaking the v2 NDJSON streaming protocol at the
 //! TCP gateway, for the FP16 and MergeQuant bundles, reporting
@@ -29,8 +35,8 @@ use mergequant::bench::synthetic_model;
 use mergequant::cli::Args;
 use mergequant::coordinator::server::TcpGateway;
 use mergequant::coordinator::{
-    Event, FinishReason, GenerationParams, Request, Scheduler,
-    SchedulerConfig, Server,
+    Event, FinishReason, GenerationParams, Request, Router,
+    RouterConfig, Scheduler, SchedulerConfig, Server,
 };
 use mergequant::engine::{Engine, QModel};
 use mergequant::util::json::Json;
@@ -99,9 +105,7 @@ fn api_demo(threads: usize) -> anyhow::Result<()> {
             top_k: 24,
             top_p: 0.95,
             seed: 7,
-            stop_tokens: Vec::new(),
-            priority: 0,
-            deadline_ms: None,
+            ..GenerationParams::greedy(48)
         })
         .map_err(anyhow::Error::msg)?;
     // (c) greedy request — pends: both slabs are taken.
@@ -226,6 +230,119 @@ fn preemption_demo(threads: usize) -> anyhow::Result<()> {
     println!("burst   [id 2]: class 2, {} tokens, admitted into the \
               victim's blocks", rs[1].tokens.len());
     println!("scheduler: {}\n", sched.metrics.report());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Part 1c: replica-sharded router demo (DESIGN.md §16)
+// ---------------------------------------------------------------------
+
+/// Three chat sessions take three turns each across a two-replica
+/// router fleet: session affinity keeps every follow-up turn on its
+/// pinned replica (a warm prefix-cache hit), a mid-run drain retires
+/// one replica — finishing its work, respawning it clean — without the
+/// router ever refusing admissions, and every turn's tokens are
+/// golden-checked against the uninterrupted `Engine::generate` run:
+/// routing decides *placement*, never stream content. The router
+/// report printed at the end is what CI greps `dispatch=` /
+/// `affinity_hit_rate=` from.
+fn router_demo(threads: usize) -> anyhow::Result<()> {
+    let (model, real) = build_model("mergequant")?;
+    println!("== router tier demo ({}) ==",
+             if real { "mergequant bundle" } else { "synthetic weights" });
+    let golden_engine = Engine::new(model);
+    // Whole-box arena; `RouterConfig::per_replica` splits the 64 blocks
+    // evenly across the two replicas (32 blocks × 16 tokens each).
+    let cfg = SchedulerConfig {
+        max_batch: 4,
+        kv_slabs: 0,
+        kv_block: 16,
+        kv_blocks: 64,
+        max_seq: 256,
+        max_prefills_per_iter: 2,
+        queue_cap: 16,
+        prefill_chunk: 0,
+        threads,
+        kv_dtype: mergequant::engine::KvDtype::F32,
+        prefix_cache: true,
+        prefix_cache_blocks: 0,
+        max_decode_latency: 0,
+    };
+    let router = Router::start(RouterConfig::new(2, cfg), |i| {
+        Engine::new(build_model("mergequant")
+            .unwrap_or_else(|e| panic!("reloading replica {i}: {e:#}"))
+            .0)
+    });
+
+    const SESSIONS: usize = 3;
+    const TURNS: usize = 3;
+    const MAX_NEW: usize = 6;
+    let mut prompts: Vec<Vec<u32>> = (0..SESSIONS)
+        .map(|s| (0..24)
+            .map(|j| 3 + ((s * 31 + j * 7) % 89) as u32)
+            .collect())
+        .collect();
+    let mut drained_replica = None;
+    for turn in 0..TURNS {
+        for (s, prompt) in prompts.iter_mut().enumerate() {
+            if turn > 0 {
+                // Follow-up turn: prior prompt + completion + fresh
+                // user tokens — the pinned replica replays none of it.
+                prompt.extend((0..4).map(|j| {
+                    5 + ((s * 13 + turn * 17 + j * 5) % 89) as u32
+                }));
+            }
+            let golden = golden_engine.generate(prompt, MAX_NEW, 256)?;
+            let mut params = GenerationParams::greedy(MAX_NEW);
+            params.session = Some(format!("chat-{s}"));
+            let resp = router
+                .generate(prompt.clone(), params)
+                .map_err(anyhow::Error::msg)?
+                .wait();
+            anyhow::ensure!(resp.error.is_none(),
+                            "turn failed: {:?}", resp.error);
+            anyhow::ensure!(resp.tokens == golden,
+                            "routing must never change stream content \
+                             (session {s}, turn {turn})");
+            prompt.extend(&resp.tokens);
+        }
+        println!("turn {turn}: {SESSIONS} sessions streamed, all \
+                  bitwise ≡ Engine::generate goldens ✓");
+        if turn == 0 {
+            // Mid-run drain: retire whichever replica session chat-0
+            // pinned. The fleet is idle between turns, so one poll
+            // tears it down and respawns it (generation + 1); chat-0's
+            // stale pin re-routes on its next turn instead of erroring.
+            let victim = router
+                .session_replica("chat-0")
+                .expect("chat-0 must be pinned after its first turn");
+            router.drain(victim).map_err(anyhow::Error::msg)?;
+            let deadline = std::time::Instant::now()
+                + std::time::Duration::from_secs(10);
+            while router.poll_drains() > 0 {
+                anyhow::ensure!(std::time::Instant::now() < deadline,
+                                "drain stuck");
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            println!("drained replica {victim} after turn 0 — in-flight \
+                      work finished, respawned clean, router kept \
+                      admitting");
+            drained_replica = Some(victim);
+        }
+    }
+    let m = router.metrics();
+    anyhow::ensure!(m.drains == 1 && m.respawns == 1,
+                    "exactly one drain + respawn expected");
+    anyhow::ensure!(m.rerouted >= 1,
+                    "the drained replica's pins must re-route");
+    println!("affinity: {} hits / {} misses; {} session(s) re-routed \
+              off drained replica {}",
+             m.affinity_hits, m.affinity_misses, m.rerouted,
+             drained_replica.unwrap_or_default());
+    // Multi-line shutdown report: the router aggregate line (dispatch
+    // counts, affinity_hit_rate — CI greps these), the drained
+    // replica's final report, then each live replica's report.
+    println!("{}\n", router.shutdown());
     Ok(())
 }
 
@@ -372,6 +489,7 @@ fn main() -> anyhow::Result<()> {
 
     api_demo(kernel_threads)?;
     preemption_demo(kernel_threads)?;
+    router_demo(kernel_threads)?;
 
     if !artifacts_dir().join("models/tiny-llama-s/mergequant.qmod").exists() {
         eprintln!("(skipping fleet run: run `make artifacts` first)");

@@ -13,8 +13,11 @@
 
 use std::time::Instant;
 
+use crate::coordinator::router::dispatch::{Candidate, Dispatcher,
+                                           Placement};
 use crate::coordinator::{
-    Event, GenerationParams, Request, Scheduler, SchedulerConfig,
+    Event, GenerationParams, Request, Response, RouterConfig, Scheduler,
+    SchedulerConfig,
 };
 use crate::engine::{memory, Engine, KvCache, KvDtype, Workspace};
 use crate::util::json::{num, obj, s, Json};
@@ -31,6 +34,24 @@ const FLEET: usize = 8;
 const PREFIX_TOKS: usize = 96;
 const SUFFIX_TOKS: usize = 8;
 const MAX_NEW: usize = 16;
+
+/// Router-axis geometry (DESIGN.md §16): SESSIONS multi-turn chats of
+/// TURNS turns each. Every turn's prompt is the previous prompt plus
+/// the previous completion plus TURN_TOKS fresh user tokens, so a turn
+/// that lands on the replica that served the session before hits warm
+/// prefix blocks; a turn that lands anywhere else re-prefills cold.
+const SESSIONS: usize = 6;
+const TURNS: usize = 3;
+const BASE_TOKS: usize = 32;
+const TURN_TOKS: usize = 8;
+const CHAT_MAX_NEW: usize = 8;
+
+/// Sharding-throughput arm: independent single-turn requests
+/// round-robined across the fleet, every replica decoding on its own
+/// thread.
+const TP_REQS: usize = 16;
+const TP_PROMPT_TOKS: usize = 48;
+const TP_MAX_NEW: usize = 16;
 
 fn method_engine(method: &str) -> Engine {
     Engine::new(synthetic_model(method, 64, 128, 2, 96))
@@ -190,6 +211,191 @@ fn preempt_run(classed: bool) -> Json {
     ])
 }
 
+/// One replica of the router axis: the whole-box arena (256 blocks ×
+/// 16 tokens) split by [`RouterConfig::per_replica`] — the same split
+/// `mergequant route` applies.
+fn router_replica_scheduler(replicas: usize) -> Scheduler {
+    let whole_box = SchedulerConfig {
+        max_batch: 8,
+        kv_slabs: 0,
+        kv_block: 16,
+        kv_blocks: 256,
+        max_seq: 128,
+        max_prefills_per_iter: 1,
+        queue_cap: 64,
+        prefill_chunk: 0,
+        threads: 1,
+        kv_dtype: KvDtype::F32,
+        prefix_cache: true,
+        prefix_cache_blocks: 0,
+        max_decode_latency: 0,
+    };
+    let per = RouterConfig::new(replicas, whole_box).per_replica();
+    Scheduler::new(method_engine("mergequant"), per)
+}
+
+/// Session base prompts start on distinct tokens so no two sessions
+/// ever share a KV block — every prefix hit below is a same-session
+/// hit, never accidental cross-session sharing.
+fn chat_base(session: usize) -> Vec<u32> {
+    (0..BASE_TOKS)
+        .map(|j| 3 + ((session * 31 + j * 7) % 89) as u32)
+        .collect()
+}
+
+fn chat_turn(session: usize, turn: usize) -> Vec<u32> {
+    (0..TURN_TOKS)
+        .map(|j| 5 + ((session * 13 + turn * 17 + j * 5) % 89) as u32)
+        .collect()
+}
+
+/// One router-axis arm: SESSIONS chats × TURNS sequential turns over
+/// `replicas` synchronously-stepped scheduler replicas — the exact
+/// dispatch code `mergequant route` runs ([`Dispatcher`]), driven
+/// deterministically (no gateway threads, no wall-clock in any
+/// counter). `affinity` routes through the session-pinning dispatcher;
+/// the baseline shuffles placement `(session + turn) % replicas`, so
+/// consecutive turns always land on different replicas and re-prefill
+/// cold. Returns the axis row plus every completion in submission
+/// order, for cross-arm bitwise comparison: placement must never
+/// change stream content.
+fn router_run(replicas: usize, affinity: bool)
+              -> (Json, Vec<Vec<u32>>) {
+    let mut scheds: Vec<Scheduler> = (0..replicas)
+        .map(|_| router_replica_scheduler(replicas))
+        .collect();
+    let mut dispatcher = Dispatcher::new(true);
+    let mut dispatched = vec![0u64; replicas];
+    let (mut hits, mut misses) = (0u64, 0u64);
+    let mut prompts: Vec<Vec<u32>> =
+        (0..SESSIONS).map(chat_base).collect();
+    let mut streams: Vec<Vec<u32>> = Vec::new();
+    let t0 = Instant::now();
+    let mut next_id = 0u64;
+    for turn in 0..TURNS {
+        for (session, prompt) in prompts.iter_mut().enumerate() {
+            if turn > 0 {
+                prompt.extend(chat_turn(session, turn));
+            }
+            let sid = format!("chat-{session}");
+            let idx = if affinity {
+                let cands: Vec<Candidate> = scheds
+                    .iter()
+                    .enumerate()
+                    .map(|(i, sc)| {
+                        let mut stats = sc.stats();
+                        stats.replica = i;
+                        Candidate { generation: 0, stats }
+                    })
+                    .collect();
+                let (idx, placement) = dispatcher
+                    .choose(Some(&sid), &cands)
+                    .expect("non-empty fleet");
+                match placement {
+                    Placement::AffinityHit => hits += 1,
+                    Placement::Pinned | Placement::Repinned => {
+                        misses += 1;
+                    }
+                    Placement::LeastLoaded => {}
+                }
+                idx
+            } else {
+                (session + turn) % replicas
+            };
+            dispatched[idx] += 1;
+            let params = GenerationParams {
+                session: Some(sid),
+                ..GenerationParams::greedy(CHAT_MAX_NEW)
+            };
+            scheds[idx]
+                .submit(Request::with_params(next_id, prompt.clone(),
+                                             params))
+                .unwrap();
+            next_id += 1;
+            let rs = scheds[idx].run_to_completion();
+            assert_eq!(rs.len(), 1);
+            assert!(rs[0].error.is_none(),
+                    "chat turn failed: {:?}", rs[0].error);
+            prompt.extend(&rs[0].tokens);
+            streams.push(rs[0].tokens.clone());
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (mut lookups, mut phits, mut matched) = (0u64, 0u64, 0u64);
+    let (mut prefill, mut generated) = (0u64, 0u64);
+    for sc in &scheds {
+        lookups += sc.metrics.prefix_lookups;
+        phits += sc.metrics.prefix_hits;
+        matched += sc.metrics.prefix_matched_tokens;
+        prefill += sc.metrics.prefill_rows;
+        generated += sc.metrics.generated_tokens;
+    }
+    let row = obj(vec![
+        ("replicas", num(replicas as f64)),
+        ("affinity", Json::Bool(affinity)),
+        ("dispatch", Json::Arr(
+            dispatched.iter().map(|&d| num(d as f64)).collect())),
+        ("affinity_hits", num(hits as f64)),
+        ("affinity_misses", num(misses as f64)),
+        ("prefix_lookups", num(lookups as f64)),
+        ("prefix_hits", num(phits as f64)),
+        ("prefix_hit_rate", num(if lookups == 0 {
+            0.0
+        } else {
+            phits as f64 / lookups as f64
+        })),
+        ("matched_tokens", num(matched as f64)),
+        ("prefill_rows", num(prefill as f64)),
+        ("generated", num(generated as f64)),
+        ("tok_s", num(generated as f64 / wall)),
+    ]);
+    (row, streams)
+}
+
+/// Sharding-throughput arm: TP_REQS independent prompts round-robined
+/// across `replicas` schedulers, each replica run to completion on its
+/// own thread. Only `tok_s` is wall-clock; the counters and streams
+/// stay deterministic. Returns streams ordered by request id.
+fn router_throughput(replicas: usize) -> (Json, Vec<Vec<u32>>) {
+    let mut scheds: Vec<Scheduler> = (0..replicas)
+        .map(|_| router_replica_scheduler(replicas))
+        .collect();
+    for i in 0..TP_REQS {
+        let prompt: Vec<u32> = (0..TP_PROMPT_TOKS)
+            .map(|j| 3 + ((i * 29 + j * 7) % 89) as u32)
+            .collect();
+        scheds[i % replicas]
+            .submit(Request::new(i as u64, prompt, TP_MAX_NEW))
+            .unwrap();
+    }
+    let t0 = Instant::now();
+    let mut responses: Vec<Response> = std::thread::scope(|scope| {
+        let handles: Vec<_> = scheds
+            .iter_mut()
+            .map(|sc| scope.spawn(move || sc.run_to_completion()))
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("replica thread"))
+            .collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), TP_REQS);
+    for r in &responses {
+        assert!(r.error.is_none(), "lane failed: {:?}", r.error);
+    }
+    let generated: u64 =
+        scheds.iter().map(|sc| sc.metrics.generated_tokens).sum();
+    let row = obj(vec![
+        ("replicas", num(replicas as f64)),
+        ("requests", num(TP_REQS as f64)),
+        ("generated", num(generated as f64)),
+        ("tok_s", num(generated as f64 / wall)),
+    ]);
+    (row, responses.into_iter().map(|r| r.tokens).collect())
+}
+
 /// One shared-prefix fleet run; returns the axis row. Deterministic
 /// fields: `prefill_rows` (832 unshared vs 160 shared), `hit_rate`
 /// (0.875: 7 of 8 lanes), `matched_tokens` (7 × 96), `peak_active`
@@ -243,9 +449,29 @@ pub fn run_suite(fast: bool) -> Json {
         .and_then(Json::as_f64).unwrap_or(0.0)
         - p_on.get("ttft_calls_high").and_then(Json::as_f64)
             .unwrap_or(0.0);
+    // Router axis (DESIGN.md §16): the suite is its own determinism
+    // witness — every arm must produce bitwise-identical completions,
+    // because routing decides placement, never stream content.
+    let (r1, chat_streams) = router_run(1, true);
+    let (r2, a2) = router_run(2, true);
+    let (r4, a4) = router_run(4, true);
+    let (h2, b2) = router_run(2, false);
+    let (h4, b4) = router_run(4, false);
+    for (arm, st) in [("affinity-2", &a2), ("affinity-4", &a4),
+                      ("shuffle-2", &b2), ("shuffle-4", &b4)] {
+        assert_eq!(st, &&chat_streams,
+                   "routing changed stream content ({arm})");
+    }
+    let (tp1, tp_streams) = router_throughput(1);
+    let (tp2, u2) = router_throughput(2);
+    let (tp4, u4) = router_throughput(4);
+    for (arm, st) in [("throughput-2", &u2), ("throughput-4", &u4)] {
+        assert_eq!(st, &&tp_streams,
+                   "sharding changed stream content ({arm})");
+    }
     obj(vec![
         ("suite", s("mergequant-bench")),
-        ("version", num(7.0)),
+        ("version", num(8.0)),
         ("fast", Json::Bool(fast)),
         ("model", s("synthetic d64 ff128 L2 v96")),
         ("methods", Json::Arr(methods)),
@@ -266,6 +492,21 @@ pub fn run_suite(fast: bool) -> Json {
             ("classed", p_on),
             ("unclassed", p_off),
             ("high_ttft_calls_saved", num(calls_saved)),
+        ])),
+        ("router_fleet", obj(vec![
+            ("sessions", num(SESSIONS as f64)),
+            ("turns", num(TURNS as f64)),
+            ("base_toks", num(BASE_TOKS as f64)),
+            ("turn_toks", num(TURN_TOKS as f64)),
+            ("max_new", num(CHAT_MAX_NEW as f64)),
+            ("affinity", Json::Arr(vec![r1, r2, r4])),
+            ("shuffle", Json::Arr(vec![h2, h4])),
+            ("throughput", obj(vec![
+                ("requests", num(TP_REQS as f64)),
+                ("prompt_toks", num(TP_PROMPT_TOKS as f64)),
+                ("max_new", num(TP_MAX_NEW as f64)),
+                ("arms", Json::Arr(vec![tp1, tp2, tp4])),
+            ])),
         ])),
     ])
 }
@@ -293,6 +534,76 @@ mod tests {
         assert!(f(&off, "peak_active") <= 3.0,
                 "unshared arena must throttle admission");
         assert!(f(&on, "ttft_p50_ms") >= 0.0);
+    }
+
+    #[test]
+    fn router_axis_counters_are_the_committed_numbers() {
+        // Pin the deterministic fields the committed BENCH_8.json
+        // carries. 6 sessions × 3 turns with affinity: every turn
+        // after a session's first is a pin hit (12 hits / 6 misses)
+        // landing on warm prefix blocks (12 of 18 lookups hit) —
+        // independent of fleet width. The shuffle baseline only hits
+        // when (session + turn) mod replicas wraps a turn back onto a
+        // replica that served the session before: 2 replicas wrap
+        // turn 2 onto turn 0's replica (6 hits), 4 replicas never
+        // wrap (0).
+        let f = |j: &Json, k: &str| {
+            j.get(k).and_then(Json::as_f64).unwrap()
+        };
+        let (r1, base) = router_run(1, true);
+        let (r2, a2) = router_run(2, true);
+        let (r4, a4) = router_run(4, true);
+        for r in [&r1, &r2, &r4] {
+            assert_eq!(f(r, "affinity_hits"), 12.0);
+            assert_eq!(f(r, "affinity_misses"), 6.0);
+            assert_eq!(f(r, "prefix_lookups"), 18.0);
+            assert_eq!(f(r, "prefix_hits"), 12.0);
+            assert_eq!(f(r, "generated"), 144.0,
+                       "every turn decodes exactly max_new tokens");
+        }
+        // Idle-fleet dispatch spreads sessions: warm prefix blocks
+        // count as held KV, so the least-loaded tie-break never dumps
+        // every session on replica 0.
+        let spread = |j: &Json| {
+            let Some(Json::Arr(d)) = j.get("dispatch") else {
+                panic!("dispatch must be an array");
+            };
+            assert!(d.iter().all(|v| v.as_f64().unwrap() > 0.0),
+                    "idle-fleet dispatch must use every replica");
+        };
+        spread(&r2);
+        spread(&r4);
+        let (h2, b2) = router_run(2, false);
+        let (h4, b4) = router_run(4, false);
+        assert_eq!(f(&h2, "affinity_hits"), 0.0);
+        assert_eq!(f(&h2, "prefix_hits"), 6.0);
+        assert_eq!(f(&h4, "prefix_hits"), 0.0);
+        assert_eq!(f(&h4, "matched_tokens"), 0.0);
+        // Affinity lands strictly more warm-prefix tokens than any
+        // shuffle (exact totals are block-granular — not pinned).
+        assert!(f(&r2, "matched_tokens") > f(&h2, "matched_tokens"));
+        assert!(f(&h2, "matched_tokens") > 0.0);
+        assert!(f(&r2, "prefill_rows") < f(&h2, "prefill_rows"));
+        // Placement decides where a stream runs, never its content.
+        for st in [&a2, &a4, &b2, &b4] {
+            assert_eq!(st, &base);
+        }
+    }
+
+    #[test]
+    fn router_throughput_streams_are_placement_invariant() {
+        let (t1, base) = router_throughput(1);
+        let (t2, u2) = router_throughput(2);
+        let (t4, u4) = router_throughput(4);
+        let f = |j: &Json, k: &str| {
+            j.get(k).and_then(Json::as_f64).unwrap()
+        };
+        for t in [&t1, &t2, &t4] {
+            assert_eq!(f(t, "generated"),
+                       (TP_REQS * TP_MAX_NEW) as f64);
+        }
+        assert_eq!(u2, base);
+        assert_eq!(u4, base);
     }
 
     #[test]

@@ -16,6 +16,10 @@ pub struct ServeConfig {
     pub method: String,
     pub scheduler: SchedulerConfig,
     pub port: u16,
+    /// Engine replicas behind the router tier (`mergequant route`,
+    /// DESIGN.md §16). `serve` ignores it; `route` splits the KV arena
+    /// evenly across this many replicas.
+    pub replicas: usize,
 }
 
 impl Default for ServeConfig {
@@ -25,8 +29,18 @@ impl Default for ServeConfig {
             method: "mergequant".into(),
             scheduler: SchedulerConfig::default(),
             port: 0,
+            replicas: 1,
         }
     }
+}
+
+/// One-line deprecation note for the pre-paging `kv_slabs` arena
+/// sizing (PR 5 back-compat alias) — printed once per parse site so
+/// configs migrate to `kv_blocks` before the alias is dropped.
+pub fn warn_kv_slabs_deprecated(source: &str) {
+    eprintln!("warning: kv_slabs ({source}) is deprecated — size the \
+               arena with kv_blocks (same bytes: kv_slabs × \
+               ⌈max_seq/kv_block⌉ blocks)");
 }
 
 impl ServeConfig {
@@ -49,7 +63,13 @@ impl ServeConfig {
         if let Some(p) = j.get("port").and_then(Json::as_usize) {
             cfg.port = p as u16;
         }
+        if let Some(r) = j.get("replicas").and_then(Json::as_usize) {
+            cfg.replicas = r.max(1);
+        }
         if let Some(s) = j.get("scheduler") {
+            if s.get("kv_slabs").is_some() {
+                warn_kv_slabs_deprecated("config scheduler.kv_slabs");
+            }
             let d = SchedulerConfig::default();
             cfg.scheduler = SchedulerConfig {
                 max_batch: s.get("max_batch").and_then(Json::as_usize)
@@ -143,6 +163,18 @@ mod tests {
         assert_eq!(c.scheduler.queue_cap,
                    SchedulerConfig::default().queue_cap);
         assert_eq!(c.port, 9999);
+        assert_eq!(c.replicas, 1, "replicas defaults to standalone");
+    }
+
+    #[test]
+    fn replicas_parse_and_clamp() {
+        let c = ServeConfig::from_json(
+            &Json::parse(r#"{"replicas":4}"#).unwrap());
+        assert_eq!(c.replicas, 4);
+        // 0 replicas is meaningless — clamp to a standalone fleet.
+        let z = ServeConfig::from_json(
+            &Json::parse(r#"{"replicas":0}"#).unwrap());
+        assert_eq!(z.replicas, 1);
     }
 
     #[test]

@@ -9,7 +9,180 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::time::Duration;
 
+use crate::util::json::{num, obj, Json};
 use crate::util::stats::{summarize, Summary};
+
+/// Machine-readable snapshot of one replica's live load — the signal
+/// the router tier dispatches on (DESIGN.md §16). Produced by
+/// `Scheduler::stats` (and `Server::stats` over the worker mailbox);
+/// serialized onto the wire by the router gateway's `stats` control
+/// frame.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReplicaStats {
+    /// Replica index within the router's fleet (0 standalone).
+    pub replica: usize,
+    /// `true` while the router has stopped admissions to this replica
+    /// (set by the router, never by the scheduler).
+    pub draining: bool,
+    /// Requests queued but not yet admitted.
+    pub pending: usize,
+    /// Requests mid-prefill.
+    pub prefilling: usize,
+    /// Active decode lanes.
+    pub active: usize,
+    /// Free KV blocks in this replica's arena.
+    pub kv_available: usize,
+    /// Total KV blocks in this replica's arena.
+    pub kv_capacity: usize,
+    /// Blocks pinned by this replica's radix prefix index.
+    pub prefix_cached_blocks: usize,
+    /// Cumulative completions (monotonic).
+    pub requests_completed: u64,
+    /// Cumulative generated tokens (monotonic).
+    pub generated_tokens: u64,
+    /// Cumulative prefix-cache lookups (monotonic).
+    pub prefix_lookups: u64,
+    /// Cumulative prefix-cache hits (monotonic).
+    pub prefix_hits: u64,
+}
+
+impl ReplicaStats {
+    /// Queue depth: everything submitted but not finished.
+    pub fn depth(&self) -> usize {
+        self.pending + self.prefilling + self.active
+    }
+
+    /// Blocks currently held (live sequences + prefix-pinned).
+    pub fn kv_used(&self) -> usize {
+        self.kv_capacity.saturating_sub(self.kv_available)
+    }
+
+    /// Current arena occupancy in [0, 1].
+    pub fn kv_util(&self) -> f64 {
+        if self.kv_capacity == 0 {
+            0.0
+        } else {
+            self.kv_used() as f64 / self.kv_capacity as f64
+        }
+    }
+
+    /// No live or queued work (drain-teardown condition).
+    pub fn is_idle(&self) -> bool {
+        self.depth() == 0
+    }
+
+    /// Fraction of admissions that matched a cached prefix.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
+
+    /// Least-loaded dispatch key: lexicographic (queue depth, blocks
+    /// held, replica index) — the index tie-break makes placement
+    /// deterministic on an idle fleet.
+    pub fn load_key(&self) -> (usize, usize, usize) {
+        (self.depth(), self.kv_used(), self.replica)
+    }
+
+    /// Wire shape of the router gateway's `stats` control frame.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("replica", num(self.replica as f64)),
+            ("draining", Json::Bool(self.draining)),
+            ("pending", num(self.pending as f64)),
+            ("prefilling", num(self.prefilling as f64)),
+            ("active", num(self.active as f64)),
+            ("kv_available", num(self.kv_available as f64)),
+            ("kv_capacity", num(self.kv_capacity as f64)),
+            ("kv_util", num(self.kv_util())),
+            ("prefix_cached_blocks",
+             num(self.prefix_cached_blocks as f64)),
+            ("requests_completed",
+             num(self.requests_completed as f64)),
+            ("generated_tokens", num(self.generated_tokens as f64)),
+            ("prefix_hit_rate", num(self.prefix_hit_rate())),
+        ])
+    }
+}
+
+/// Router-tier counters (DESIGN.md §16): where requests went, how often
+/// session affinity found its pinned replica, and the drain/respawn
+/// history. Per-replica serving metrics stay inside each replica's own
+/// [`Metrics`]; this struct only accounts for placement.
+#[derive(Clone, Debug, Default)]
+pub struct RouterMetrics {
+    /// Requests dispatched per replica index.
+    pub dispatched: Vec<u64>,
+    /// Session-carrying requests that landed on their pinned replica.
+    pub affinity_hits: u64,
+    /// Session-carrying requests that had no live pin (first turn, or
+    /// pin invalidated by drain/respawn) and were (re)pinned.
+    pub affinity_misses: u64,
+    /// Sessions whose pin pointed at a draining or respawned replica
+    /// and was moved to a live one (the re-route path).
+    pub rerouted: u64,
+    /// Drain commands accepted.
+    pub drains: u64,
+    /// Replicas torn down and re-spawned after draining idle.
+    pub respawns: u64,
+    /// Dispatches retried on the next-least-loaded replica because the
+    /// chosen one answered queue-full.
+    pub failovers: u64,
+}
+
+impl RouterMetrics {
+    /// Grow the per-replica dispatch table to `n` replicas.
+    pub fn ensure_replicas(&mut self, n: usize) {
+        if self.dispatched.len() < n {
+            self.dispatched.resize(n, 0);
+        }
+    }
+
+    /// Fraction of session-carrying dispatches that hit their pin.
+    pub fn affinity_hit_rate(&self) -> f64 {
+        let total = self.affinity_hits + self.affinity_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.affinity_hits as f64 / total as f64
+        }
+    }
+
+    /// One-line router-aggregate report; `stats` contributes the live
+    /// per-replica kv_util tail. Greppable like `Metrics::report`.
+    pub fn report(&self, stats: &[ReplicaStats]) -> String {
+        let join = |it: &mut dyn Iterator<Item = String>| {
+            it.collect::<Vec<_>>().join(",")
+        };
+        let dispatch =
+            join(&mut self.dispatched.iter().map(|d| d.to_string()));
+        let util = join(&mut stats
+            .iter()
+            .map(|r| format!("{:.2}", r.kv_util())));
+        let depth =
+            join(&mut stats.iter().map(|r| r.depth().to_string()));
+        format!(
+            "router: replicas={} dispatch=[{}] affinity_hits={} \
+             affinity_misses={} affinity_hit_rate={:.3} rerouted={} \
+             drains={} respawns={} failovers={} kv_util=[{}] \
+             depth=[{}]",
+            self.dispatched.len(),
+            dispatch,
+            self.affinity_hits,
+            self.affinity_misses,
+            self.affinity_hit_rate(),
+            self.rerouted,
+            self.drains,
+            self.respawns,
+            self.failovers,
+            util,
+            depth,
+        )
+    }
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -386,6 +559,66 @@ mod tests {
         assert!(r.contains("kv_util_peak=0.75"), "{r}");
         assert!(r.contains("blocks_alloc=7"), "{r}");
         assert!(r.contains("blocks_freed=5"), "{r}");
+    }
+
+    #[test]
+    fn replica_stats_derived_fields() {
+        let r = ReplicaStats {
+            replica: 1,
+            pending: 2,
+            prefilling: 1,
+            active: 3,
+            kv_available: 6,
+            kv_capacity: 24,
+            prefix_cached_blocks: 4,
+            prefix_lookups: 8,
+            prefix_hits: 6,
+            ..ReplicaStats::default()
+        };
+        assert_eq!(r.depth(), 6);
+        assert_eq!(r.kv_used(), 18);
+        assert!((r.kv_util() - 0.75).abs() < 1e-9);
+        assert!((r.prefix_hit_rate() - 0.75).abs() < 1e-9);
+        assert!(!r.is_idle());
+        assert_eq!(r.load_key(), (6, 18, 1));
+        let idle = ReplicaStats { kv_capacity: 8, kv_available: 8,
+                                  ..ReplicaStats::default() };
+        assert!(idle.is_idle());
+        assert_eq!(idle.kv_util(), 0.0);
+        let j = r.to_json();
+        assert_eq!(j.get("replica").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("draining").and_then(Json::as_bool),
+                   Some(false));
+        assert_eq!(j.get("kv_util").and_then(Json::as_f64), Some(0.75));
+    }
+
+    #[test]
+    fn router_metrics_report_shape() {
+        let mut m = RouterMetrics::default();
+        m.ensure_replicas(2);
+        m.dispatched[0] = 5;
+        m.dispatched[1] = 3;
+        m.affinity_hits = 4;
+        m.affinity_misses = 2;
+        m.rerouted = 1;
+        m.drains = 1;
+        m.respawns = 1;
+        assert!((m.affinity_hit_rate() - 4.0 / 6.0).abs() < 1e-9);
+        let stats = vec![
+            ReplicaStats { replica: 0, kv_capacity: 8, kv_available: 6,
+                           ..ReplicaStats::default() },
+            ReplicaStats { replica: 1, kv_capacity: 8, kv_available: 8,
+                           active: 1, ..ReplicaStats::default() },
+        ];
+        let r = m.report(&stats);
+        assert!(r.contains("replicas=2"), "{r}");
+        assert!(r.contains("dispatch=[5,3]"), "{r}");
+        assert!(r.contains("affinity_hit_rate=0.667"), "{r}");
+        assert!(r.contains("drains=1"), "{r}");
+        assert!(r.contains("kv_util=[0.25,0.00]"), "{r}");
+        assert!(r.contains("depth=[0,1]"), "{r}");
+        // Hit rate with no session traffic reads 0, not NaN.
+        assert_eq!(RouterMetrics::default().affinity_hit_rate(), 0.0);
     }
 
     #[test]

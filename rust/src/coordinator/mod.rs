@@ -26,7 +26,10 @@
 //! `Engine::forward_batch` call (DESIGN.md §12). Requests carry
 //! [`GenerationParams`] (temperature/top-k/top-p, per-request seed, stop
 //! tokens, token budget) and report progress as per-token [`Event`]
-//! frames — the generation API v2 contract (DESIGN.md §11). Invariants
+//! frames — the generation API v2 contract (DESIGN.md §11). The
+//! replica-sharded front door ([`router`], DESIGN.md §16) stacks N of
+//! these servers behind one gateway with least-loaded dispatch,
+//! session affinity, and graceful drain/respawn. Invariants
 //! (property-tested): every request gets exactly one terminal event, the
 //! active set never exceeds `max_batch`, KV blocks are never
 //! double-handed-out or leaked (cancellation included), FIFO admission
@@ -37,14 +40,16 @@ pub mod metrics;
 pub(crate) mod pending;
 pub mod prefix_cache;
 pub mod request;
+pub mod router;
 pub mod scheduler;
 pub mod server;
 
 pub use kv_pool::BlockPool;
-pub use metrics::Metrics;
+pub use metrics::{Metrics, ReplicaStats, RouterMetrics};
 pub use prefix_cache::PrefixCache;
 pub use request::{
     Event, FinishReason, GenerationParams, Request, Response, SubmitError,
 };
+pub use router::{Router, RouterConfig, RouterGateway};
 pub use scheduler::{Scheduler, SchedulerConfig};
 pub use server::{RequestHandle, Server};

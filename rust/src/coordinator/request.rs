@@ -43,6 +43,12 @@ pub struct GenerationParams {
     /// observational: a completion whose latency exceeds it increments
     /// the `slo_violations` counter (never alters token streams).
     pub deadline_ms: Option<u64>,
+    /// Optional session id (DESIGN.md §16): requests sharing a session
+    /// are pinned by the router tier to the replica holding that
+    /// session's prefix-cache state, so multi-turn re-submissions hit
+    /// warm KV blocks. Placement metadata only — a standalone server
+    /// accepts and ignores it, and it never alters token streams.
+    pub session: Option<String>,
 }
 
 impl Default for GenerationParams {
@@ -56,8 +62,27 @@ impl Default for GenerationParams {
             stop_tokens: Vec::new(),
             priority: 0,
             deadline_ms: None,
+            session: None,
         }
     }
+}
+
+/// Charset/length rules for wire session ids: 1–64 chars drawn from
+/// `[A-Za-z0-9._:-]`. Checked by [`GenerationParams::validate`] (and
+/// therefore for every TCP frame) — a malformed id is an admission
+/// error, never a silent affinity miss.
+pub fn validate_session(id: &str) -> Result<(), String> {
+    if id.is_empty() || id.len() > 64 {
+        return Err(format!(
+            "session id must be 1-64 characters (got {})", id.len()));
+    }
+    if !id.chars().all(|c| {
+        c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.' | ':')
+    }) {
+        return Err(
+            "session id may only contain [A-Za-z0-9._:-]".into());
+    }
+    Ok(())
 }
 
 impl GenerationParams {
@@ -84,6 +109,9 @@ impl GenerationParams {
             return Err(format!(
                 "top_p must be in (0, 1] (got {})", self.top_p
             ));
+        }
+        if let Some(id) = &self.session {
+            validate_session(id)?;
         }
         Ok(())
     }
@@ -276,6 +304,20 @@ mod tests {
         assert!(p.validate().is_ok());
         p.max_new = 0;
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn session_ids_are_validated() {
+        let mut p = GenerationParams::greedy(4);
+        assert_eq!(p.session, None);
+        for ok in ["u1", "chat-7", "a.b:c_d", &"x".repeat(64)] {
+            p.session = Some(ok.into());
+            assert!(p.validate().is_ok(), "{ok:?} must be accepted");
+        }
+        for bad in ["", "has space", "emoji\u{1F600}", &"x".repeat(65)] {
+            p.session = Some(bad.into());
+            assert!(p.validate().is_err(), "{bad:?} must be rejected");
+        }
     }
 
     #[test]

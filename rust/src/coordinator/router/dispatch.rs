@@ -1,0 +1,193 @@
+//! Dispatch policy of the router tier (DESIGN.md §16): least-loaded
+//! placement over live [`ReplicaStats`] snapshots, plus the session
+//! affinity table that pins multi-turn sessions to the replica holding
+//! their prefix-cache state.
+//!
+//! The policy is a plain synchronous struct — no threads, no I/O — so
+//! the deterministic bench/replay harnesses can drive it directly over
+//! synchronously-stepped schedulers, while [`super::Router`] drives the
+//! identical code over threaded [`crate::coordinator::Server`] replicas.
+
+use std::collections::HashMap;
+
+use crate::coordinator::metrics::ReplicaStats;
+
+/// One live replica offered to [`Dispatcher::choose`]. `stats.replica`
+/// carries the fleet index; `generation` counts respawns of that slot,
+/// so a pin taken before a drain/respawn cycle never silently lands a
+/// session on the cold re-spawned replica.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    /// Respawn generation of the slot (bumped by every drain teardown).
+    pub generation: u64,
+    /// Live load snapshot, with `stats.replica` set to the slot index.
+    pub stats: ReplicaStats,
+}
+
+/// Where a placement decision came from — the router's affinity
+/// accounting keys off this.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// No session id (or affinity disabled): plain least-loaded.
+    LeastLoaded,
+    /// The session's pinned replica is live: routed to its warm prefix
+    /// cache.
+    AffinityHit,
+    /// First sighting of this session: pinned to the least-loaded
+    /// replica.
+    Pinned,
+    /// The session's pin pointed at a draining, respawned, or excluded
+    /// replica: re-pinned to a live one (the re-route path).
+    Repinned,
+}
+
+struct Pin {
+    replica: usize,
+    generation: u64,
+}
+
+/// Least-loaded dispatch + session affinity table.
+pub struct Dispatcher {
+    affinity: bool,
+    sessions: HashMap<String, Pin>,
+}
+
+impl Dispatcher {
+    /// `affinity: false` ignores session ids entirely (the "no-affinity
+    /// shuffle" baseline the benches compare against).
+    pub fn new(affinity: bool) -> Self {
+        Dispatcher { affinity, sessions: HashMap::new() }
+    }
+
+    /// Pick a replica for a request among `candidates` (live replicas
+    /// only). Returns the chosen fleet index and how the choice was
+    /// made; `None` when no candidate was offered. Ties on load break
+    /// to the lowest index, so placement on an idle fleet is
+    /// deterministic.
+    pub fn choose(&mut self, session: Option<&str>,
+                  candidates: &[Candidate])
+                  -> Option<(usize, Placement)> {
+        let least = candidates
+            .iter()
+            .min_by_key(|c| c.stats.load_key())?;
+        let (least_idx, least_gen) =
+            (least.stats.replica, least.generation);
+        let sid = match session {
+            Some(sid) if self.affinity => sid,
+            _ => return Some((least_idx, Placement::LeastLoaded)),
+        };
+        if let Some(pin) = self.sessions.get(sid) {
+            let live = candidates.iter().any(|c| {
+                c.stats.replica == pin.replica
+                    && c.generation == pin.generation
+            });
+            if live {
+                return Some((pin.replica, Placement::AffinityHit));
+            }
+            self.sessions.insert(
+                sid.to_string(),
+                Pin { replica: least_idx, generation: least_gen });
+            return Some((least_idx, Placement::Repinned));
+        }
+        self.sessions.insert(
+            sid.to_string(),
+            Pin { replica: least_idx, generation: least_gen });
+        Some((least_idx, Placement::Pinned))
+    }
+
+    /// Replica a session is currently pinned to (observability).
+    pub fn session_replica(&self, session: &str) -> Option<usize> {
+        self.sessions.get(session).map(|p| p.replica)
+    }
+
+    /// Number of pinned sessions (observability).
+    pub fn sessions_pinned(&self) -> usize {
+        self.sessions.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(replica: usize, generation: u64, depth: usize,
+            kv_used: usize) -> Candidate {
+        Candidate {
+            generation,
+            stats: ReplicaStats {
+                replica,
+                active: depth,
+                kv_capacity: 16,
+                kv_available: 16 - kv_used,
+                ..ReplicaStats::default()
+            },
+        }
+    }
+
+    #[test]
+    fn least_loaded_prefers_depth_then_blocks_then_index() {
+        let mut d = Dispatcher::new(true);
+        // Equal depth: fewer blocks held wins.
+        let c = [cand(0, 0, 1, 8), cand(1, 0, 1, 2)];
+        assert_eq!(d.choose(None, &c),
+                   Some((1, Placement::LeastLoaded)));
+        // Depth dominates blocks.
+        let c = [cand(0, 0, 2, 0), cand(1, 0, 1, 12)];
+        assert_eq!(d.choose(None, &c),
+                   Some((1, Placement::LeastLoaded)));
+        // Full tie: lowest index (deterministic idle-fleet placement).
+        let c = [cand(0, 0, 0, 0), cand(1, 0, 0, 0)];
+        assert_eq!(d.choose(None, &c),
+                   Some((0, Placement::LeastLoaded)));
+        assert_eq!(d.choose(None, &[]), None);
+    }
+
+    #[test]
+    fn sessions_pin_and_stick_under_load() {
+        let mut d = Dispatcher::new(true);
+        let c = [cand(0, 0, 0, 0), cand(1, 0, 0, 0)];
+        assert_eq!(d.choose(Some("u1"), &c),
+                   Some((0, Placement::Pinned)));
+        assert_eq!(d.session_replica("u1"), Some(0));
+        // Replica 0 now busier — the pin still wins.
+        let c = [cand(0, 0, 5, 10), cand(1, 0, 0, 0)];
+        assert_eq!(d.choose(Some("u1"), &c),
+                   Some((0, Placement::AffinityHit)));
+        // A different session takes the least-loaded replica.
+        assert_eq!(d.choose(Some("u2"), &c),
+                   Some((1, Placement::Pinned)));
+        assert_eq!(d.sessions_pinned(), 2);
+    }
+
+    #[test]
+    fn draining_and_respawned_pins_are_rerouted() {
+        let mut d = Dispatcher::new(true);
+        let c = [cand(0, 0, 0, 0), cand(1, 0, 1, 0)];
+        assert_eq!(d.choose(Some("u1"), &c),
+                   Some((0, Placement::Pinned)));
+        // Replica 0 drains: it is no longer offered as a candidate, so
+        // the session re-pins to a live replica instead of erroring.
+        let c = [cand(1, 0, 1, 0)];
+        assert_eq!(d.choose(Some("u1"), &c),
+                   Some((1, Placement::Repinned)));
+        assert_eq!(d.session_replica("u1"), Some(1));
+        // Respawn bumps the generation: a pin taken against the old
+        // incarnation must not read the cold replica as warm.
+        let c = [cand(1, 1, 0, 0), cand(0, 1, 5, 0)];
+        assert_eq!(d.choose(Some("u1"), &c),
+                   Some((1, Placement::Repinned)));
+        // Same generation next time: a genuine hit.
+        assert_eq!(d.choose(Some("u1"), &c),
+                   Some((1, Placement::AffinityHit)));
+    }
+
+    #[test]
+    fn affinity_off_ignores_sessions() {
+        let mut d = Dispatcher::new(false);
+        let c = [cand(0, 0, 0, 0), cand(1, 0, 0, 0)];
+        assert_eq!(d.choose(Some("u1"), &c),
+                   Some((0, Placement::LeastLoaded)));
+        assert_eq!(d.sessions_pinned(), 0);
+        assert_eq!(d.session_replica("u1"), None);
+    }
+}

@@ -1,0 +1,225 @@
+//! TCP front door of the router tier (DESIGN.md §16): the same NDJSON
+//! protocol the single-replica gateway speaks (v1 single-shot + v2
+//! streaming request frames, identical reply frames — clients cannot
+//! tell a router from a standalone server), plus fleet control frames:
+//!
+//! ```text
+//!   {"cmd":"stats"}                → {"event":"stats","replicas":[..]}
+//!   {"cmd":"drain","replica":i}    → {"event":"drain","replica":i,
+//!                                     "status":"draining"}
+//! ```
+//!
+//! A line is a control frame iff it carries a `cmd` key. Unknown
+//! fields, unknown commands, and malformed `replica` values are
+//! protocol errors — the same strictness as request frames.
+
+use std::io::{BufRead, BufReader};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::server::{
+    error_frame, parse_request, stream_events, v1_frame, write_frame,
+};
+use crate::util::json::{num, obj, s, Json};
+
+use super::Router;
+
+pub struct RouterGateway {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl RouterGateway {
+    /// Serve `router` on 127.0.0.1:<port> (0 = ephemeral).
+    pub fn start(router: Arc<Router>, port: u16)
+                 -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            // Handlers are detached for the same reason as the
+            // single-replica gateway's: they block in read_line until
+            // their client hangs up.
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let r = router.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, r);
+                        });
+                    }
+                    Err(ref e)
+                        if e.kind()
+                            == std::io::ErrorKind::WouldBlock =>
+                    {
+                        std::thread::sleep(
+                            std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(RouterGateway { addr, stop, handle: Some(handle) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, router: Arc<Router>)
+               -> anyhow::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let j = match Json::parse(trimmed) {
+            Ok(j) => j,
+            Err(e) => {
+                write_frame(&mut out, &error_frame(None, &e))?;
+                continue;
+            }
+        };
+        if j.get("cmd").is_some() {
+            write_frame(&mut out, &control_frame(&router, &j))?;
+            continue;
+        }
+        let (prompt, params, streaming) = match parse_request(&j) {
+            Ok(parsed) => parsed,
+            Err(msg) => {
+                write_frame(&mut out, &error_frame(None, &msg))?;
+                continue;
+            }
+        };
+        match router.generate(prompt, params) {
+            Err(e) => {
+                write_frame(&mut out,
+                            &error_frame(None, &e.to_string()))?;
+            }
+            Ok(handle) => {
+                if streaming {
+                    if let Err(e) = stream_events(&mut out, &handle) {
+                        handle.cancel();
+                        return Err(e);
+                    }
+                } else {
+                    let resp = handle.wait();
+                    write_frame(&mut out, &v1_frame(&resp))?;
+                }
+            }
+        }
+    }
+}
+
+/// Execute one control frame and build its reply (errors included —
+/// control failures never tear down the connection).
+fn control_frame(router: &Router, j: &Json) -> Json {
+    match parse_control(j) {
+        Err(msg) => error_frame(None, &msg),
+        Ok(Control::Stats) => obj(vec![
+            ("event", s("stats")),
+            ("replicas", Json::Arr(
+                router.stats().iter().map(|r| r.to_json()).collect())),
+        ]),
+        Ok(Control::Drain(replica)) => match router.drain(replica) {
+            Ok(()) => obj(vec![
+                ("event", s("drain")),
+                ("replica", num(replica as f64)),
+                ("status", s("draining")),
+            ]),
+            Err(msg) => error_frame(None, &msg),
+        },
+    }
+}
+
+enum Control {
+    Stats,
+    Drain(usize),
+}
+
+/// Decode a control frame. Strict like `parse_request`: every key must
+/// be expected for the command, and `replica` must be a non-negative
+/// integer.
+fn parse_control(j: &Json) -> Result<Control, String> {
+    let Json::Obj(fields) = j else {
+        return Err("control frame must be a JSON object".into());
+    };
+    let cmd = j
+        .get("cmd")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "cmd must be a string".to_string())?;
+    let allowed: &[&str] = match cmd {
+        "stats" => &["cmd"],
+        "drain" => &["cmd", "replica"],
+        other => {
+            return Err(format!(
+                "unknown cmd {other:?} (expected drain or stats)"));
+        }
+    };
+    for k in fields.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(format!(
+                "unknown field {k:?} for cmd {cmd:?}"));
+        }
+    }
+    match cmd {
+        "stats" => Ok(Control::Stats),
+        _ => {
+            let n = j
+                .get("replica")
+                .ok_or_else(|| "drain requires replica".to_string())?
+                .as_f64()
+                .ok_or_else(|| "replica must be a number".to_string())?;
+            if !(n >= 0.0 && n.fract() == 0.0 && n <= 9.0e15) {
+                return Err(format!(
+                    "replica must be a non-negative integer (got {n})"));
+            }
+            Ok(Control::Drain(n as usize))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Result<Control, String> {
+        parse_control(&Json::parse(text).unwrap())
+    }
+
+    #[test]
+    fn control_frames_parse_strictly() {
+        assert!(matches!(parse(r#"{"cmd":"stats"}"#),
+                         Ok(Control::Stats)));
+        assert!(matches!(parse(r#"{"cmd":"drain","replica":2}"#),
+                         Ok(Control::Drain(2))));
+        // Unknown fields are protocol errors.
+        assert!(parse(r#"{"cmd":"stats","bogus":1}"#).is_err());
+        assert!(parse(r#"{"cmd":"drain","replica":0,"force":true}"#)
+            .is_err());
+        // Missing/malformed replica.
+        assert!(parse(r#"{"cmd":"drain"}"#).is_err());
+        assert!(parse(r#"{"cmd":"drain","replica":-1}"#).is_err());
+        assert!(parse(r#"{"cmd":"drain","replica":1.5}"#).is_err());
+        assert!(parse(r#"{"cmd":"drain","replica":"0"}"#).is_err());
+        // Unknown command / malformed cmd value.
+        assert!(parse(r#"{"cmd":"restart"}"#).is_err());
+        assert!(parse(r#"{"cmd":7}"#).is_err());
+    }
+}

@@ -1,0 +1,358 @@
+//! Replica-sharded serving front door (DESIGN.md §16).
+//!
+//! A [`Router`] owns N engine replicas — each a full
+//! [`crate::coordinator::Server`] with its own worker thread, engine
+//! thread-pool, `BlockPool`, prefix cache, and pending queue — and
+//! places incoming requests across them:
+//!
+//!   * **least-loaded dispatch** over live [`ReplicaStats`] snapshots
+//!     (queue depth, then KV blocks held, then index — deterministic on
+//!     an idle fleet);
+//!   * **session affinity**: requests carrying
+//!     `GenerationParams::session` are pinned to the replica holding
+//!     that session's prefix-cache state, so multi-turn re-submissions
+//!     hit warm KV blocks instead of re-prefilling cold;
+//!   * **graceful drain**: [`Router::drain`] stops new admissions to a
+//!     replica, in-flight streams run to completion, then the replica
+//!     is torn down (its final metrics report kept) and re-spawned
+//!     fresh — the fleet keeps serving throughout.
+//!
+//! Determinism is per-replica: every replica is a standalone server, so
+//! a request's token stream is bitwise identical to running it on a
+//! single-replica server with the same seed. Routing decides placement,
+//! never stream content (`tests/router.rs` pins this).
+
+pub mod dispatch;
+pub mod gateway;
+
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::metrics::{ReplicaStats, RouterMetrics};
+use crate::coordinator::request::{GenerationParams, SubmitError};
+use crate::coordinator::scheduler::SchedulerConfig;
+use crate::coordinator::server::{RequestHandle, Server};
+use crate::engine::Engine;
+
+pub use dispatch::{Candidate, Dispatcher, Placement};
+pub use gateway::RouterGateway;
+
+/// Fleet-level configuration: how many replicas, whether session
+/// affinity is honoured, and the whole-box scheduler settings the
+/// per-replica arenas are split from.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Engine replicas to spawn (min 1).
+    pub replicas: usize,
+    /// Honour `GenerationParams::session` pins (on by default; the
+    /// benches turn it off for the no-affinity shuffle baseline).
+    pub affinity: bool,
+    /// Whole-box scheduler settings; `per_replica` splits the KV arena.
+    pub scheduler: SchedulerConfig,
+}
+
+impl RouterConfig {
+    pub fn new(replicas: usize, scheduler: SchedulerConfig) -> Self {
+        RouterConfig { replicas: replicas.max(1), affinity: true,
+                       scheduler }
+    }
+
+    /// Per-replica scheduler settings: the whole-box arena is split
+    /// evenly, with a floor of one `max_seq` sequence per replica so a
+    /// mis-sized fleet degrades to smaller arenas, never to replicas
+    /// that can admit nothing.
+    pub fn per_replica(&self) -> SchedulerConfig {
+        let mut cfg = self.scheduler.clone();
+        let n = self.replicas.max(1);
+        let floor = cfg
+            .max_seq
+            .max(1)
+            .div_ceil(cfg.block_tokens());
+        cfg.kv_blocks = (cfg.total_blocks() / n).max(floor);
+        // The split is expressed in blocks from here on; the slab
+        // back-compat sizing must not re-inflate it.
+        cfg.kv_slabs = 0;
+        cfg
+    }
+}
+
+enum ReplicaState {
+    Live,
+    Draining,
+}
+
+/// One replica slot: the live server, its drain state, and the respawn
+/// generation (bumped on every teardown, so stale session pins are
+/// detected instead of landing on a cold re-spawned replica).
+struct Replica {
+    server: Arc<Server>,
+    state: ReplicaState,
+    generation: u64,
+}
+
+struct Inner {
+    replicas: Vec<Replica>,
+    dispatcher: Dispatcher,
+    metrics: RouterMetrics,
+    /// Final metrics reports of replicas torn down by drain — surfaced
+    /// by [`Router::shutdown`].
+    drained_reports: Vec<String>,
+}
+
+/// The front-door process state: replica slots behind one mutex, plus
+/// the engine factory drains re-spawn from.
+pub struct Router {
+    inner: Mutex<Inner>,
+    factory: Box<dyn Fn(usize) -> Engine + Send + Sync>,
+    cfg: SchedulerConfig,
+}
+
+impl Router {
+    /// Spawn `cfg.replicas` servers, each on an engine built by
+    /// `factory(i)`. The factory is retained: a drained replica is
+    /// re-spawned from it.
+    pub fn start<F>(cfg: RouterConfig, factory: F) -> Self
+    where
+        F: Fn(usize) -> Engine + Send + Sync + 'static,
+    {
+        let per_replica = cfg.per_replica();
+        let replicas = (0..cfg.replicas.max(1))
+            .map(|i| Replica {
+                server: Arc::new(Server::start(factory(i),
+                                               per_replica.clone())),
+                state: ReplicaState::Live,
+                generation: 0,
+            })
+            .collect::<Vec<_>>();
+        let mut metrics = RouterMetrics::default();
+        metrics.ensure_replicas(replicas.len());
+        Router {
+            inner: Mutex::new(Inner {
+                replicas,
+                dispatcher: Dispatcher::new(cfg.affinity),
+                metrics,
+                drained_reports: Vec::new(),
+            }),
+            factory: Box::new(factory),
+            cfg: per_replica,
+        }
+    }
+
+    /// Fleet width (live + draining slots).
+    pub fn replicas(&self) -> usize {
+        self.lock().replicas.len()
+    }
+
+    /// Dispatch a request to a replica and return its stream handle.
+    /// Placement: session pin if live, else least-loaded; a queue-full
+    /// replica fails over to the next-least-loaded one. The stream
+    /// itself is the chosen replica's — bitwise identical to a
+    /// standalone server (routing never alters content).
+    pub fn generate(&self, prompt: Vec<u32>, params: GenerationParams)
+                    -> Result<RequestHandle, SubmitError> {
+        // Validate before placement so malformed requests never perturb
+        // session pins or dispatch counters.
+        params.validate().map_err(SubmitError::InvalidParams)?;
+        let mut inner = self.lock();
+        self.poll_drains_locked(&mut inner);
+        let mut excluded: Vec<usize> = Vec::new();
+        let mut last_err = SubmitError::WorkerGone;
+        loop {
+            let candidates = candidates(&inner, &excluded);
+            let chosen = inner
+                .dispatcher
+                .choose(params.session.as_deref(), &candidates);
+            let Some((idx, placement)) = chosen else {
+                return Err(last_err);
+            };
+            let server = inner.replicas[idx].server.clone();
+            match server.generate(prompt.clone(), params.clone()) {
+                Ok(handle) => {
+                    let n = inner.replicas.len();
+                    let m = &mut inner.metrics;
+                    m.ensure_replicas(n);
+                    m.dispatched[idx] += 1;
+                    match placement {
+                        Placement::LeastLoaded => {}
+                        Placement::AffinityHit => m.affinity_hits += 1,
+                        Placement::Pinned => m.affinity_misses += 1,
+                        Placement::Repinned => {
+                            m.affinity_misses += 1;
+                            m.rerouted += 1;
+                        }
+                    }
+                    return Ok(handle);
+                }
+                Err(e @ SubmitError::QueueFull { .. }) => {
+                    // Backpressure is per-replica: offer the request to
+                    // the next-least-loaded one before giving up.
+                    inner.metrics.failovers += 1;
+                    last_err = e;
+                    excluded.push(idx);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Stop new admissions to `replica`. In-flight streams finish
+    /// normally; once the replica runs idle it is torn down (final
+    /// report kept) and re-spawned fresh — progressed lazily by every
+    /// router operation and explicitly by [`Router::poll_drains`].
+    /// Refuses to drain the last live replica: the fleet keeps serving
+    /// throughout a drain, by contract.
+    pub fn drain(&self, replica: usize) -> Result<(), String> {
+        let mut inner = self.lock();
+        if replica >= inner.replicas.len() {
+            return Err(format!(
+                "no replica {replica} (fleet of {})",
+                inner.replicas.len()));
+        }
+        let live = inner
+            .replicas
+            .iter()
+            .filter(|r| matches!(r.state, ReplicaState::Live))
+            .count();
+        match inner.replicas[replica].state {
+            ReplicaState::Draining => {
+                return Err(format!(
+                    "replica {replica} is already draining"));
+            }
+            ReplicaState::Live if live <= 1 => {
+                return Err(
+                    "cannot drain the last live replica".into());
+            }
+            ReplicaState::Live => {}
+        }
+        inner.replicas[replica].state = ReplicaState::Draining;
+        inner.metrics.drains += 1;
+        // An already-idle replica tears down immediately.
+        self.poll_drains_locked(&mut inner);
+        Ok(())
+    }
+
+    /// Advance drain teardowns whose replicas have run idle; returns
+    /// how many replicas are still draining.
+    pub fn poll_drains(&self) -> usize {
+        let mut inner = self.lock();
+        self.poll_drains_locked(&mut inner);
+        inner
+            .replicas
+            .iter()
+            .filter(|r| matches!(r.state, ReplicaState::Draining))
+            .count()
+    }
+
+    /// Per-replica load snapshots, `replica`/`draining` filled in.
+    pub fn stats(&self) -> Vec<ReplicaStats> {
+        let mut inner = self.lock();
+        self.poll_drains_locked(&mut inner);
+        snapshot(&inner)
+    }
+
+    /// Replica a session is currently pinned to (observability).
+    pub fn session_replica(&self, session: &str) -> Option<usize> {
+        self.lock().dispatcher.session_replica(session)
+    }
+
+    /// Router-tier placement counters (dispatch counts, affinity
+    /// hits/misses, drains, respawns, failovers).
+    pub fn metrics(&self) -> RouterMetrics {
+        self.lock().metrics.clone()
+    }
+
+    /// One-line router-aggregate report: dispatch counts, affinity hit
+    /// rate, drain/respawn history, live per-replica kv_util and queue
+    /// depth. Greppable, like `Metrics::report`.
+    pub fn report(&self) -> String {
+        let mut inner = self.lock();
+        self.poll_drains_locked(&mut inner);
+        let stats = snapshot(&inner);
+        inner.metrics.report(&stats)
+    }
+
+    /// Stop every replica (each finishes its in-flight work first) and
+    /// return the router report plus per-replica final reports —
+    /// including those of replicas torn down by earlier drains.
+    pub fn shutdown(&self) -> String {
+        let mut inner = self.lock();
+        let stats = snapshot(&inner);
+        let mut lines = vec![inner.metrics.report(&stats)];
+        lines.append(&mut inner.drained_reports);
+        for (i, r) in inner.replicas.iter().enumerate() {
+            lines.push(format!("replica[{i}]: {}", r.server.shutdown()));
+        }
+        lines.join("\n")
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().expect("router state poisoned")
+    }
+
+    /// Tear down and re-spawn every draining replica whose work has
+    /// drained. Teardown joins the worker, which is immediate once the
+    /// replica reports idle (no pending, prefilling, or active work —
+    /// every stream has delivered its terminal frame).
+    fn poll_drains_locked(&self, inner: &mut Inner) {
+        for i in 0..inner.replicas.len() {
+            if !matches!(inner.replicas[i].state, ReplicaState::Draining)
+            {
+                continue;
+            }
+            let idle = inner.replicas[i]
+                .server
+                .stats()
+                .map(|s| s.is_idle())
+                // A dead worker has no work left by definition.
+                .unwrap_or(true);
+            if !idle {
+                continue;
+            }
+            let report = inner.replicas[i].server.shutdown();
+            inner
+                .drained_reports
+                .push(format!("replica[{i}] drained: {report}"));
+            let generation = inner.replicas[i].generation + 1;
+            inner.replicas[i] = Replica {
+                server: Arc::new(Server::start((self.factory)(i),
+                                               self.cfg.clone())),
+                state: ReplicaState::Live,
+                generation,
+            };
+            inner.metrics.respawns += 1;
+        }
+    }
+}
+
+/// Live (non-draining, non-excluded) candidates with fresh stats.
+/// Replicas whose worker died are skipped — they can't admit.
+fn candidates(inner: &Inner, excluded: &[usize]) -> Vec<Candidate> {
+    inner
+        .replicas
+        .iter()
+        .enumerate()
+        .filter(|(i, r)| {
+            matches!(r.state, ReplicaState::Live) && !excluded.contains(i)
+        })
+        .filter_map(|(i, r)| {
+            r.server.stats().ok().map(|mut s| {
+                s.replica = i;
+                Candidate { generation: r.generation, stats: s }
+            })
+        })
+        .collect()
+}
+
+/// Per-replica snapshots for reports and the stats control frame.
+fn snapshot(inner: &Inner) -> Vec<ReplicaStats> {
+    inner
+        .replicas
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let mut s = r.server.stats().unwrap_or_default();
+            s.replica = i;
+            s.draining = matches!(r.state, ReplicaState::Draining);
+            s
+        })
+        .collect()
+}

@@ -94,7 +94,7 @@ use crate::engine::{
 };
 
 use super::kv_pool::BlockPool;
-use super::metrics::Metrics;
+use super::metrics::{Metrics, ReplicaStats};
 use super::pending::{PendingEntry, PendingQueues, ResumeState};
 use super::prefix_cache::PrefixCache;
 use super::request::{Event, FinishReason, Request, Response};
@@ -387,6 +387,27 @@ impl Scheduler {
     /// (DESIGN.md §15) and is pinned by `tests/preemption.rs`.
     pub fn preemption_log(&self) -> &[u64] {
         &self.preempt_log
+    }
+
+    /// Machine-readable load snapshot (DESIGN.md §16): queue depths,
+    /// arena occupancy, and the cumulative counters the router tier
+    /// dispatches on. `replica`/`draining` are left at their defaults —
+    /// fleet position is the router's to fill in.
+    pub fn stats(&self) -> ReplicaStats {
+        ReplicaStats {
+            replica: 0,
+            draining: false,
+            pending: self.pending.len(),
+            prefilling: self.prefilling.len(),
+            active: self.active.len(),
+            kv_available: self.pool.free_blocks(),
+            kv_capacity: self.pool.total_blocks(),
+            prefix_cached_blocks: self.prefix_cached_blocks(),
+            requests_completed: self.metrics.requests_completed,
+            generated_tokens: self.metrics.generated_tokens,
+            prefix_lookups: self.metrics.prefix_lookups,
+            prefix_hits: self.metrics.prefix_hits,
+        }
     }
 
     /// Distinct physical KV blocks referenced by live lanes (prefilling

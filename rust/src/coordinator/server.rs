@@ -25,6 +25,7 @@ use std::thread::JoinHandle;
 
 use crate::util::json::{num, obj, s, Json};
 
+use super::metrics::ReplicaStats;
 use super::request::{
     Event, GenerationParams, Request, Response, SubmitError,
 };
@@ -34,6 +35,9 @@ use crate::engine::Engine;
 enum Msg {
     Submit(Request, Sender<Event>, Sender<Result<(), SubmitError>>),
     Cancel(u64),
+    /// Reply with a live [`ReplicaStats`] snapshot — answered between
+    /// scheduler iterations, so it reflects at-most-one-tick-old load.
+    Stats(Sender<ReplicaStats>),
     Shutdown,
 }
 
@@ -154,32 +158,15 @@ impl Server {
         }
     }
 
-    /// Submit a greedy prompt; the one-shot response arrives on the
-    /// returned channel. Thin shim over [`Server::generate`] — admission
-    /// errors arrive as an error response instead of a panic.
-    #[deprecated(note = "use Server::generate and stream the RequestHandle")]
-    pub fn submit(&self, prompt: Vec<u32>, max_new: usize)
-                  -> Receiver<Response> {
-        let (rtx, rrx) = channel();
-        let prompt_len = prompt.len();
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        match self.generate_as(id, prompt, GenerationParams::greedy(max_new)) {
-            Ok(handle) => {
-                // The shim's contract is a non-blocking submit returning
-                // a channel; a detached drainer bridges the streams.
-                std::thread::spawn(move || {
-                    let _ = rtx.send(handle.wait());
-                });
-            }
-            Err(e) => {
-                // Answer with the id the request would have had — legacy
-                // callers correlate by it (seed queue-full behaviour).
-                let _ = rtx.send(Response::failed(
-                    id, prompt_len, std::time::Duration::ZERO,
-                    e.to_string()));
-            }
-        }
-        rrx
+    /// Live load snapshot of this server's scheduler (DESIGN.md §16) —
+    /// the signal the router tier dispatches on. Answered by the worker
+    /// between iterations; `Err` once the worker has exited.
+    pub fn stats(&self) -> Result<ReplicaStats, SubmitError> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::Stats(tx))
+            .map_err(|_| SubmitError::WorkerGone)?;
+        rx.recv().map_err(|_| SubmitError::WorkerGone)
     }
 
     /// Stop the worker and return its final metrics report. Subsequent
@@ -242,6 +229,11 @@ fn worker_loop(engine: Engine, cfg: SchedulerConfig, rx: Receiver<Msg>)
                     }
                 }
                 Msg::Cancel(id) => sched.cancel(id),
+                // A vanished requester is fine — the snapshot is
+                // advisory (the router may have timed out or died).
+                Msg::Stats(reply) => {
+                    let _ = reply.send(sched.stats());
+                }
                 Msg::Shutdown => {
                     shutdown = true;
                     break;
@@ -375,7 +367,9 @@ fn handle_conn(stream: TcpStream, server: Arc<Server>) -> anyhow::Result<()> {
 
 /// Pump one request's events onto the wire; an `Err` means the client
 /// connection failed mid-stream (the caller cancels the request).
-fn stream_events(out: &mut TcpStream, handle: &RequestHandle)
+/// Shared with the router gateway — replicas speak the identical v2
+/// frame protocol (DESIGN.md §16).
+pub(crate) fn stream_events(out: &mut TcpStream, handle: &RequestHandle)
                  -> anyhow::Result<()> {
     loop {
         match handle.recv() {
@@ -413,8 +407,9 @@ fn stream_events(out: &mut TcpStream, handle: &RequestHandle)
 
 /// Decode one request line into `(prompt, params, streaming?)`. A request
 /// is v2 (streaming) iff it carries a `params` object; v1 requests keep
-/// the seed single-shot shape `{"prompt":[..],"max_new":N}`.
-fn parse_request(j: &Json)
+/// the seed single-shot shape `{"prompt":[..],"max_new":N}`. Shared
+/// with the router gateway.
+pub(crate) fn parse_request(j: &Json)
                  -> Result<(Vec<u32>, GenerationParams, bool), String> {
     let Json::Obj(fields) = j else {
         return Err("request must be a JSON object".into());
@@ -490,6 +485,14 @@ fn parse_params(j: &Json) -> Result<GenerationParams, String> {
                 p.priority = n as u8;
             }
             "deadline_ms" => p.deadline_ms = Some(integer("deadline_ms")?),
+            // Router-tier session affinity (DESIGN.md §16). Charset and
+            // length are enforced by `GenerationParams::validate` at the
+            // `Server::generate` boundary; only the type is checked
+            // here.
+            "session" => match v {
+                Json::Str(id) => p.session = Some(id.clone()),
+                _ => return Err("session must be a string".into()),
+            },
             other => return Err(format!("unknown params field {other:?}")),
         }
     }
@@ -512,13 +515,14 @@ fn parse_tokens(j: &Json, what: &str) -> Result<Vec<u32>, String> {
     Ok(out)
 }
 
-fn write_frame(out: &mut TcpStream, frame: &Json) -> anyhow::Result<()> {
+pub(crate) fn write_frame(out: &mut TcpStream, frame: &Json)
+                          -> anyhow::Result<()> {
     writeln!(out, "{}", frame.to_string())?;
     Ok(())
 }
 
 /// Protocol-level error frame (no request admitted, so usually no id).
-fn error_frame(id: Option<u64>, msg: &str) -> Json {
+pub(crate) fn error_frame(id: Option<u64>, msg: &str) -> Json {
     let mut fields = vec![("event", s("error")), ("error", s(msg))];
     if let Some(id) = id {
         fields.push(("id", num(id as f64)));
@@ -539,7 +543,7 @@ fn summary_fields(resp: &Response) -> Vec<(&'static str, Json)> {
 }
 
 /// v1 single-shot reply: the seed shape plus `finish`.
-fn v1_frame(resp: &Response) -> Json {
+pub(crate) fn v1_frame(resp: &Response) -> Json {
     let mut fields = summary_fields(resp);
     if let Some(e) = &resp.error {
         fields.push(("error", s(e)));

@@ -2,6 +2,9 @@
 //!
 //! Subcommands:
 //!   serve     — start the serving coordinator (+ optional TCP gateway)
+//!   route     — start the replica-sharded front door: N engine
+//!               replicas behind least-loaded dispatch with session
+//!               affinity and graceful drain (DESIGN.md §16)
 //!   eval      — perplexity + zero-shot accuracy of a bundle
 //!   generate  — greedy generation from a prompt
 //!   inspect   — dump bundle structure and memory accounting
@@ -14,8 +17,10 @@
 use anyhow::{bail, Context, Result};
 
 use mergequant::cli::Args;
-use mergequant::config::ServeConfig;
-use mergequant::coordinator::{server::TcpGateway, Server};
+use mergequant::config::{warn_kv_slabs_deprecated, ServeConfig};
+use mergequant::coordinator::{
+    server::TcpGateway, Router, RouterConfig, RouterGateway, Server,
+};
 use mergequant::engine::{Engine, QModel};
 use mergequant::eval::{choice_accuracy, corpus, parse_task, perplexity};
 use mergequant::{artifacts_dir, runtime};
@@ -41,6 +46,7 @@ fn run() -> Result<()> {
     let args = Args::parse();
     match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
+        Some("route") => cmd_route(&args),
         Some("eval") => cmd_eval(&args),
         Some("generate") => cmd_generate(&args),
         Some("inspect") => cmd_inspect(&args),
@@ -49,14 +55,15 @@ fn run() -> Result<()> {
         other => {
             eprintln!(
                 "mergequant — 4-bit static quantization serving stack\n\
-                 usage: mergequant <serve|eval|generate|inspect|bench|\
-                 runtime> [--model NAME] [--method NAME] [--threads N] \
+                 usage: mergequant <serve|route|eval|generate|inspect|\
+                 bench|runtime> [--model NAME] [--method NAME] \
+                 [--replicas N] [--threads N] \
                  [--kv-cache f32|int8] [--kv-block TOKENS] \
                  [--kv-blocks N] [--prefix-cache] \
                  [--prefix-cache-blocks N] [--max-decode-latency MS] \
                  [--temperature T --top-k K \
                  --top-p P --seed S --stop T1,T2 --priority P \
-                 --deadline-ms MS] …\n\
+                 --deadline-ms MS --session ID] …\n\
                  (got {other:?})"
             );
             bail!("unknown subcommand");
@@ -64,7 +71,9 @@ fn run() -> Result<()> {
     }
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
+/// Resolve the serving config shared by `serve` and `route`: the JSON
+/// config file first, then per-flag overrides.
+fn serve_config(args: &Args) -> Result<ServeConfig> {
     let mut cfg = match args.get("config") {
         Some(path) => ServeConfig::from_file(std::path::Path::new(path))?,
         None => ServeConfig::default(),
@@ -76,9 +85,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.method = m.into();
     }
     cfg.port = args.get_usize("port", cfg.port as usize) as u16;
+    cfg.replicas = args.get_usize("replicas", cfg.replicas).max(1);
     cfg.scheduler.max_batch =
         args.get_usize("max-batch", cfg.scheduler.max_batch);
     cfg.scheduler.max_seq = args.get_usize("max-seq", cfg.scheduler.max_seq);
+    if args.get("kv-slabs").is_some() {
+        warn_kv_slabs_deprecated("--kv-slabs");
+    }
     cfg.scheduler.kv_slabs =
         args.get_usize("kv-slabs", cfg.scheduler.kv_slabs.max(cfg.scheduler.max_batch));
     // Paged KV (DESIGN.md §13): --kv-block sets the paging granularity
@@ -113,7 +126,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.scheduler.max_decode_latency = args
         .get_usize("max-decode-latency",
                    cfg.scheduler.max_decode_latency as usize) as u64;
+    Ok(cfg)
+}
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = serve_config(args)?;
     let engine = load_engine(&cfg.model, &cfg.method)?;
     println!("serving {} / {} (params ~{:.1} MB quantized, {} kernel \
               thread(s), kv {}, arena {} blocks × {} tokens, prefix \
@@ -140,6 +157,52 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if secs > 0 {
         std::thread::sleep(std::time::Duration::from_secs(secs as u64));
         gateway.stop();
+        Ok(())
+    } else {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+}
+
+fn cmd_route(args: &Args) -> Result<()> {
+    let cfg = serve_config(args)?;
+    let replicas = cfg.replicas;
+    // Pre-validate the bundle once so a bad --model/--method fails
+    // loudly here instead of inside a replica factory thread.
+    let engine = load_engine(&cfg.model, &cfg.method)?;
+    let rcfg = RouterConfig::new(replicas, cfg.scheduler.clone());
+    let per = rcfg.per_replica();
+    println!("routing {} / {} across {} replica(s) (params ~{:.1} MB \
+              quantized per replica, kv {}, per-replica arena {} \
+              blocks × {} tokens, prefix cache {}, affinity on)",
+             cfg.model, cfg.method, replicas,
+             engine.model.weight_bytes() as f64 / 1e6,
+             per.kv_dtype.as_str(),
+             per.total_blocks(),
+             per.block_tokens(),
+             if per.prefix_cache { "on" } else { "off" });
+    drop(engine);
+    let model = cfg.model.clone();
+    let method = cfg.method.clone();
+    let router = std::sync::Arc::new(Router::start(rcfg, move |i| {
+        // The bundle parsed above; a respawn that cannot reload it is
+        // unrecoverable, so fail loudly.
+        load_engine(&model, &method)
+            .unwrap_or_else(|e| panic!("reloading replica {i}: {e:#}"))
+    }));
+    let gateway = RouterGateway::start(router.clone(), cfg.port)?;
+    println!("listening on {}", gateway.addr);
+    println!("protocol: NDJSON, one request per line (v1/v2 frames \
+              identical to `serve`; params may add \"session\":\"ID\" \
+              for replica affinity)");
+    println!("  control: {{\"cmd\":\"stats\"}} | \
+              {{\"cmd\":\"drain\",\"replica\":0}}");
+    let secs = args.get_usize("run-secs", 0);
+    if secs > 0 {
+        std::thread::sleep(std::time::Duration::from_secs(secs as u64));
+        gateway.stop();
+        println!("{}", router.shutdown());
         Ok(())
     } else {
         loop {
@@ -211,6 +274,10 @@ fn cmd_generate(args: &Args) -> Result<()> {
             let d = args.get_u64("deadline-ms", u64::MAX);
             if d == u64::MAX { None } else { Some(d) }
         },
+        // Session affinity (DESIGN.md §16) is placement metadata for
+        // the router tier; single-shot generation validates and
+        // ignores it, same as a standalone server.
+        session: args.get("session").map(String::from),
     };
     params.validate().map_err(anyhow::Error::msg)?;
     let mut out = engine.generate_seeded(&prompt, params.max_new,
@@ -298,7 +365,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let j = mergequant::bench::record::run_suite(fast);
     println!("{}", j.to_string());
     if args.get_bool("record") {
-        let out = args.get_or("out", "BENCH_7.json");
+        let out = args.get_or("out", "BENCH_8.json");
         std::fs::write(out, format!("{}\n", j.to_string()))
             .with_context(|| format!("writing {out}"))?;
         eprintln!("wrote {out}");

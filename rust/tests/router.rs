@@ -1,0 +1,282 @@
+//! Router-tier replay suite (DESIGN.md §16): routing decides placement,
+//! never stream content. Pins the acceptance properties of the
+//! replica-sharded front door:
+//!
+//!   (a) every routed stream is bitwise identical to a standalone
+//!       server run of the same request, across the {threads} ×
+//!       {kv dtype} determinism matrix;
+//!   (b) session-affinity turns land on the pinned replica and hit its
+//!       warm prefix blocks; with affinity off nothing is pinned;
+//!   (c) a mid-fleet drain completes in-flight streams bitwise-intact
+//!       while the router keeps admitting, then tears the replica down
+//!       and respawns it with clean block accounting
+//!       (`kv_available + prefix_cached_blocks == kv_capacity`).
+
+mod common;
+
+use std::sync::Arc;
+
+use mergequant::bench::synthetic_model;
+use mergequant::coordinator::{
+    Event, FinishReason, GenerationParams, Router, RouterConfig,
+    SchedulerConfig, Server,
+};
+use mergequant::engine::{Engine, KvDtype};
+
+fn replica_engine() -> Engine {
+    Engine::new(synthetic_model("mergequant", 64, 128, 1, 96))
+}
+
+/// Whole-box scheduler settings; the router splits the 48-block arena
+/// across the fleet (`RouterConfig::per_replica`).
+fn whole_box(threads: usize, kv: KvDtype, prefix: bool)
+             -> SchedulerConfig {
+    SchedulerConfig {
+        max_batch: 4,
+        kv_slabs: 0,
+        kv_block: 16,
+        kv_blocks: 48,
+        max_seq: 96,
+        max_prefills_per_iter: 2,
+        queue_cap: 64,
+        prefill_chunk: 0,
+        threads,
+        kv_dtype: kv,
+        prefix_cache: prefix,
+        prefix_cache_blocks: 0,
+        max_decode_latency: 0,
+    }
+}
+
+fn router_with(replicas: usize, cfg: SchedulerConfig) -> Arc<Router> {
+    Arc::new(Router::start(RouterConfig::new(replicas, cfg),
+                           |_i| replica_engine()))
+}
+
+#[test]
+fn streams_are_bitwise_identical_to_standalone() {
+    for threads in common::thread_counts() {
+        for kv in common::kv_dtypes() {
+            let cfg = whole_box(threads, kv, true);
+            let per = RouterConfig::new(3, cfg.clone()).per_replica();
+            let standalone = Server::start(replica_engine(), per);
+            let router = router_with(3, cfg);
+            for (i, seed) in [0u64, 7, 11, 0].into_iter().enumerate() {
+                let prompt: Vec<u32> = (0..10 + i)
+                    .map(|t| 3 + (t as u32 * 7 + i as u32) % 90)
+                    .collect();
+                let mut params = GenerationParams::greedy(6);
+                params.session = Some(format!("s{i}"));
+                if seed > 0 {
+                    params.temperature = 0.8;
+                    params.top_k = 16;
+                    params.top_p = 0.9;
+                    params.seed = seed;
+                }
+                let golden = standalone
+                    .generate(prompt.clone(), params.clone())
+                    .unwrap()
+                    .wait();
+                let routed =
+                    router.generate(prompt, params).unwrap().wait();
+                assert!(golden.error.is_none());
+                assert_eq!(routed.tokens, golden.tokens,
+                           "threads={threads} kv={kv:?} req={i}");
+                assert_eq!(routed.finish, golden.finish);
+            }
+            standalone.shutdown();
+            router.shutdown();
+        }
+    }
+}
+
+#[test]
+fn affinity_pins_sessions_to_warm_replicas() {
+    const SESSIONS: usize = 4;
+    const TURNS: usize = 3;
+    // Multi-turn chats: each turn's prompt is the previous prompt plus
+    // the previous completion plus fresh user tokens. Base prompts
+    // start on distinct tokens so every prefix hit is same-session.
+    let run = |affinity: bool| -> (Arc<Router>, u64, u64) {
+        let mut cfg =
+            RouterConfig::new(2, whole_box(1, KvDtype::F32, true));
+        cfg.affinity = affinity;
+        let router =
+            Arc::new(Router::start(cfg, |_i| replica_engine()));
+        let mut prompts: Vec<Vec<u32>> = (0..SESSIONS)
+            .map(|s| {
+                (0..32)
+                    .map(|j| 3 + ((s * 31 + j * 7) % 89) as u32)
+                    .collect()
+            })
+            .collect();
+        let mut pins: Vec<Option<usize>> = vec![None; SESSIONS];
+        for turn in 0..TURNS {
+            for (s, prompt) in prompts.iter_mut().enumerate() {
+                if turn > 0 {
+                    prompt.extend((0..6).map(|j| {
+                        5 + ((s * 13 + turn * 17 + j * 5) % 89) as u32
+                    }));
+                }
+                let sid = format!("chat-{s}");
+                let mut params = GenerationParams::greedy(4);
+                params.session = Some(sid.clone());
+                let resp = router
+                    .generate(prompt.clone(), params)
+                    .unwrap()
+                    .wait();
+                assert!(resp.error.is_none());
+                prompt.extend(&resp.tokens);
+                if affinity {
+                    let pin = router.session_replica(&sid);
+                    assert!(pin.is_some(), "session must stay pinned");
+                    match pins[s] {
+                        None => pins[s] = pin,
+                        Some(first) => assert_eq!(
+                            pin, Some(first),
+                            "pin must be stable across turns"),
+                    }
+                } else {
+                    assert_eq!(router.session_replica(&sid), None,
+                               "affinity off must pin nothing");
+                }
+            }
+        }
+        let (mut hits, mut lookups) = (0u64, 0u64);
+        for st in router.stats() {
+            hits += st.prefix_hits;
+            lookups += st.prefix_lookups;
+        }
+        (router, hits, lookups)
+    };
+
+    let (pinned, warm_hits, warm_lookups) = run(true);
+    let m = pinned.metrics();
+    assert_eq!(m.affinity_hits as usize, SESSIONS * (TURNS - 1));
+    assert_eq!(m.affinity_misses as usize, SESSIONS);
+    assert_eq!(m.rerouted, 0);
+    assert_eq!(warm_lookups as usize, SESSIONS * TURNS);
+    assert_eq!(warm_hits as usize, SESSIONS * (TURNS - 1),
+               "every pinned turn must land on warm prefix blocks");
+
+    let (shuffled, cold_hits, cold_lookups) = run(false);
+    assert_eq!(shuffled.metrics().affinity_hits, 0);
+    assert_eq!(cold_lookups, warm_lookups);
+    assert!(cold_hits <= warm_hits,
+            "least-loaded dispatch cannot beat session pinning");
+
+    pinned.shutdown();
+    shuffled.shutdown();
+}
+
+#[test]
+fn drain_mid_fleet_completes_streams_and_respawns_clean() {
+    let mut cfg = whole_box(1, KvDtype::F32, true);
+    // Long runway for the holder lane: it keeps the draining replica
+    // busy for thousands of decode steps and is cancelled at the end,
+    // so the drain choreography below never races its completion
+    // (same construction as the queue_full backpressure test).
+    cfg.max_seq = 4096;
+    let per = RouterConfig::new(2, cfg.clone()).per_replica();
+    // Golden stream from a standalone server with the identical
+    // per-replica config. The routed copy decodes batched next to the
+    // long holder lane — batch composition must not change it.
+    let gold_prompt: Vec<u32> =
+        (0..12).map(|t| 9 + (t * 7) % 80).collect();
+    let standalone = Server::start(replica_engine(), per);
+    let golden = standalone
+        .generate(gold_prompt.clone(), GenerationParams::greedy(24))
+        .unwrap()
+        .wait();
+    assert!(golden.error.is_none());
+    standalone.shutdown();
+
+    let router = router_with(2, cfg);
+    // A long-running holder lane keeps its replica busy for the whole
+    // drain window (cancelled at the end, so no timing races).
+    let mut hold_params = GenerationParams::greedy(100_000);
+    hold_params.session = Some("drain-me".into());
+    let holder = router
+        .generate(vec![3, 4, 5], hold_params)
+        .unwrap();
+    assert!(matches!(holder.recv(), Some(Event::Token { .. })));
+    let victim = router.session_replica("drain-me").expect("pinned");
+
+    // The golden copy rides the same session, hence the same replica.
+    let mut gold_params = GenerationParams::greedy(24);
+    gold_params.session = Some("drain-me".into());
+    let routed = router
+        .generate(gold_prompt.clone(), gold_params)
+        .unwrap();
+
+    router.drain(victim).expect("drain accepted");
+    assert_eq!(router.poll_drains(), 1,
+               "in-flight work keeps the replica draining");
+    // Error paths while the drain is in progress:
+    let again = router.drain(victim).unwrap_err();
+    assert!(again.contains("already draining"), "{again}");
+    let last = router.drain(1 - victim).unwrap_err();
+    assert!(last.contains("last live replica"), "{last}");
+    let bogus = router.drain(9).unwrap_err();
+    assert!(bogus.contains("no replica"), "{bogus}");
+
+    // The router keeps admitting throughout the drain — new work lands
+    // on the other replica.
+    let side = router
+        .generate(vec![40, 41, 42], GenerationParams::greedy(4))
+        .unwrap()
+        .wait();
+    assert!(side.error.is_none());
+    assert_eq!(side.tokens.len(), 4);
+    assert!(router.stats()[victim].draining);
+
+    // The in-flight stream survives the drain bitwise-intact.
+    let resp = routed.wait();
+    assert!(resp.error.is_none());
+    assert_eq!(resp.tokens, golden.tokens,
+               "drain must never alter an in-flight stream");
+
+    // Release the holder; the replica runs idle, tears down, respawns.
+    holder.cancel();
+    assert_eq!(holder.wait().finish, FinishReason::Cancelled);
+    let deadline = std::time::Instant::now()
+        + std::time::Duration::from_secs(10);
+    while router.poll_drains() > 0 {
+        assert!(std::time::Instant::now() < deadline, "drain stuck");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    let m = router.metrics();
+    assert_eq!(m.drains, 1);
+    assert_eq!(m.respawns, 1);
+    let stats = router.stats();
+    for st in &stats {
+        assert!(!st.draining);
+        assert_eq!(st.kv_available + st.prefix_cached_blocks,
+                   st.kv_capacity,
+                   "replica {} leaks blocks", st.replica);
+    }
+    assert_eq!(stats[victim].requests_completed, 0,
+               "respawned replica starts fresh");
+
+    // The stale session pin re-routes instead of erroring.
+    let mut stale = GenerationParams::greedy(4);
+    stale.session = Some("drain-me".into());
+    let r2 = router.generate(gold_prompt, stale).unwrap().wait();
+    assert!(r2.error.is_none());
+    assert_eq!(router.metrics().rerouted, 1);
+    router.shutdown();
+}
+
+#[test]
+fn drain_refused_on_single_replica_fleet() {
+    let router = router_with(1, whole_box(1, KvDtype::F32, false));
+    let err = router.drain(0).unwrap_err();
+    assert!(err.contains("last live replica"), "{err}");
+    // The fleet still serves after the refusal.
+    let resp = router
+        .generate(vec![3, 9, 12], GenerationParams::greedy(3))
+        .unwrap()
+        .wait();
+    assert_eq!(resp.tokens.len(), 3);
+    router.shutdown();
+}

@@ -206,9 +206,7 @@ fn workload() -> Vec<(Vec<u32>, GenerationParams)> {
         top_k: 24,
         top_p: 0.9,
         seed,
-        stop_tokens: Vec::new(),
-        priority: 0,
-        deadline_ms: None,
+        ..GenerationParams::greedy(10)
     };
     vec![
         ((0..5).map(|i| 3 + i * 2).collect(), GenerationParams::greedy(10)),

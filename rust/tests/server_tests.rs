@@ -10,8 +10,8 @@ use std::sync::Arc;
 use mergequant::bench::synthetic_model;
 use mergequant::coordinator::server::TcpGateway;
 use mergequant::coordinator::{
-    Event, FinishReason, GenerationParams, SchedulerConfig, Server,
-    SubmitError,
+    Event, FinishReason, GenerationParams, Router, RouterConfig,
+    RouterGateway, SchedulerConfig, Server, SubmitError,
 };
 use mergequant::engine::{Engine, KvDtype};
 use mergequant::util::json::Json;
@@ -89,11 +89,14 @@ fn greedy_generate_matches_engine_generate() {
 }
 
 #[test]
-#[allow(deprecated)]
-fn legacy_submit_shim_roundtrip() {
+fn generate_wait_roundtrip() {
+    // The blocking convenience path (generate + wait) — the successor
+    // of the removed `Server::submit` shim.
     let server = test_server();
-    let rx = server.submit(vec![3, 4, 5, 6], 8);
-    let resp = rx.recv().expect("response");
+    let resp = server
+        .generate(vec![3, 4, 5, 6], GenerationParams::greedy(8))
+        .expect("admission")
+        .wait();
     assert_eq!(resp.tokens.len(), 8);
     assert_eq!(resp.prompt_len, 4);
     assert!(resp.ttft <= resp.latency);
@@ -142,14 +145,33 @@ fn shutdown_reports_metrics_and_later_generates_fail_typed() {
 }
 
 #[test]
-#[allow(deprecated)]
-fn legacy_submit_after_shutdown_answers_instead_of_panicking() {
+fn session_ids_are_validated_and_never_change_streams() {
     let server = test_server();
-    server.shutdown();
-    let resp = server.submit(vec![3, 4], 2).recv().expect("error response");
-    assert_eq!(resp.error.as_deref(),
-               Some(SubmitError::WorkerGone.to_string().as_str()));
-    assert_eq!(resp.finish, FinishReason::Error);
+    // Malformed ids are typed admission errors (DESIGN.md §16: the
+    // charset/length contract is enforced at the generate boundary).
+    let mut spaced = GenerationParams::greedy(4);
+    spaced.session = Some("has space".into());
+    match server.generate(vec![3, 4], spaced) {
+        Err(SubmitError::InvalidParams(msg)) => {
+            assert!(msg.contains("session"), "{msg}")
+        }
+        other => panic!("expected InvalidParams, got {other:?}"),
+    }
+    let mut long = GenerationParams::greedy(4);
+    long.session = Some("x".repeat(65));
+    assert!(matches!(server.generate(vec![3, 4], long),
+                     Err(SubmitError::InvalidParams(_))));
+    // A valid id is placement metadata only: the standalone server
+    // accepts it and streams the identical greedy tokens.
+    let plain = server
+        .generate(vec![3, 9, 12], GenerationParams::greedy(6))
+        .unwrap()
+        .wait();
+    let mut tagged = GenerationParams::greedy(6);
+    tagged.session = Some("chat-1".into());
+    let got = server.generate(vec![3, 9, 12], tagged).unwrap().wait();
+    assert_eq!(got.tokens, plain.tokens,
+               "session is a routing input, never a sampling input");
 }
 
 #[test]
@@ -325,6 +347,35 @@ fn tcp_gateway_rejects_malformed_and_unknown_fields() {
         .unwrap();
     let j = read_json(&mut reader);
     assert!(j.get("error").unwrap().as_str().unwrap().contains("max_new"));
+
+    // session must be a JSON string (protocol error at parse time)...
+    writeln!(out, "{{\"prompt\":[3],\"params\":{{\"session\":42}}}}")
+        .unwrap();
+    let j = read_json(&mut reader);
+    assert!(j.get("error").unwrap().as_str().unwrap()
+        .contains("session"));
+
+    // ...with the documented charset (typed admission error)...
+    writeln!(out, "{{\"prompt\":[3],\"params\":{{\"session\":\
+                   \"has space\"}}}}").unwrap();
+    let j = read_json(&mut reader);
+    assert!(j.get("error").unwrap().as_str().unwrap()
+        .contains("session"));
+
+    // ...and length bound.
+    let long_id = "x".repeat(65);
+    writeln!(out, "{{\"prompt\":[3],\"params\":{{\"session\":\
+                   \"{long_id}\"}}}}").unwrap();
+    let j = read_json(&mut reader);
+    assert!(j.get("error").unwrap().as_str().unwrap()
+        .contains("session"));
+
+    // A fleet control frame is a protocol error on a standalone
+    // server's gateway (`cmd` is not a request field).
+    writeln!(out, "{{\"cmd\":\"stats\"}}").unwrap();
+    let j = read_json(&mut reader);
+    assert!(j.get("error").is_some(),
+            "standalone gateway must reject control frames");
 
     // ...and a well-formed request still works on the same connection.
     writeln!(out, "{{\"prompt\":[5],\"max_new\":2}}").unwrap();
@@ -532,4 +583,132 @@ fn gateway_many_clients() {
         h.join().unwrap();
     }
     gw.stop();
+}
+
+// ---------------------------------------------------------------------
+// Router gateway (replica-sharded front door, DESIGN.md §16)
+// ---------------------------------------------------------------------
+
+fn test_router(replicas: usize) -> Arc<Router> {
+    let cfg = SchedulerConfig {
+        max_batch: 4,
+        kv_slabs: 0,
+        kv_block: 16,
+        kv_blocks: 32,
+        max_seq: 64,
+        max_prefills_per_iter: 2,
+        queue_cap: 64,
+        prefill_chunk: 0,
+        threads: 1,
+        kv_dtype: KvDtype::F32,
+        prefix_cache: false,
+        prefix_cache_blocks: 0,
+        max_decode_latency: 0,
+    };
+    Arc::new(Router::start(
+        RouterConfig::new(replicas, cfg),
+        |_i| Engine::new(synthetic_model("mergequant", 64, 128, 1, 96)),
+    ))
+}
+
+fn read_stream_tokens(reader: &mut BufReader<TcpStream>) -> Vec<usize> {
+    let mut tokens = Vec::new();
+    loop {
+        let j = read_json(reader);
+        match j.get("event").unwrap().as_str().unwrap() {
+            "token" => tokens.push(
+                j.get("token").unwrap().as_usize().unwrap()),
+            "done" => return tokens,
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn router_gateway_requests_stats_and_strict_control_frames() {
+    let router = test_router(2);
+    let gw = RouterGateway::start(router.clone(), 0).unwrap();
+    let stream = TcpStream::connect(gw.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut out = stream;
+
+    // v1 and v2 request frames speak the standalone protocol verbatim.
+    writeln!(out, "{{\"prompt\":[3,9,12],\"max_new\":4}}").unwrap();
+    let j = read_json(&mut reader);
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 4);
+    writeln!(out, "{{\"prompt\":[3,9,12],\"params\":{{\"max_new\":3,\
+                   \"session\":\"chat-a\"}}}}").unwrap();
+    assert_eq!(read_stream_tokens(&mut reader).len(), 3);
+
+    // The stats frame reports every replica machine-readably.
+    writeln!(out, "{{\"cmd\":\"stats\"}}").unwrap();
+    let j = read_json(&mut reader);
+    assert_eq!(j.get("event").unwrap().as_str().unwrap(), "stats");
+    let reps = j.get("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(reps.len(), 2);
+    for (i, r) in reps.iter().enumerate() {
+        assert_eq!(r.get("replica").unwrap().as_usize().unwrap(), i);
+        assert!(r.get("kv_capacity").unwrap().as_usize().unwrap() > 0);
+        assert_eq!(r.get("draining").unwrap(), &Json::Bool(false));
+    }
+
+    // Control frames are strict: unknown fields, unknown commands and
+    // out-of-range replicas are protocol errors that keep the
+    // connection usable.
+    for bad in ["{\"cmd\":\"stats\",\"verbose\":true}",
+                "{\"cmd\":\"drain\",\"replica\":0,\"force\":true}",
+                "{\"cmd\":\"drain\"}",
+                "{\"cmd\":\"drain\",\"replica\":1.5}",
+                "{\"cmd\":\"restart\"}",
+                "{\"cmd\":\"drain\",\"replica\":9}"] {
+        writeln!(out, "{bad}").unwrap();
+        let j = read_json(&mut reader);
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "error",
+                   "frame must be rejected: {bad}");
+    }
+
+    // ...and the connection still serves requests afterwards.
+    writeln!(out, "{{\"prompt\":[5,6],\"max_new\":2}}").unwrap();
+    let j = read_json(&mut reader);
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+
+    gw.stop();
+    router.shutdown();
+}
+
+#[test]
+fn router_gateway_drain_reroutes_sessions_instead_of_erroring() {
+    let router = test_router(2);
+    let gw = RouterGateway::start(router.clone(), 0).unwrap();
+    let stream = TcpStream::connect(gw.addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut out = stream;
+
+    // Pin a session, then capture its greedy stream.
+    writeln!(out, "{{\"prompt\":[3,9,12],\"params\":{{\"max_new\":4,\
+                   \"session\":\"chat-b\"}}}}").unwrap();
+    let first = read_stream_tokens(&mut reader);
+    let pinned = router.session_replica("chat-b").expect("pinned");
+
+    // Drain the pinned replica over the wire; it is idle, so it tears
+    // down and respawns immediately.
+    writeln!(out, "{{\"cmd\":\"drain\",\"replica\":{pinned}}}").unwrap();
+    let j = read_json(&mut reader);
+    assert_eq!(j.get("event").unwrap().as_str().unwrap(), "drain");
+    assert_eq!(j.get("replica").unwrap().as_usize().unwrap(), pinned);
+    assert_eq!(j.get("status").unwrap().as_str().unwrap(), "draining");
+
+    // The stale pin re-routes (bitwise-identical stream), no error.
+    writeln!(out, "{{\"prompt\":[3,9,12],\"params\":{{\"max_new\":4,\
+                   \"session\":\"chat-b\"}}}}").unwrap();
+    let replay = read_stream_tokens(&mut reader);
+    assert_eq!(replay, first,
+               "re-routed session must stream identical tokens");
+    let m = router.metrics();
+    assert_eq!(m.drains, 1);
+    assert_eq!(m.respawns, 1);
+    assert_eq!(m.rerouted, 1);
+
+    gw.stop();
+    router.shutdown();
 }
