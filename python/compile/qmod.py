@@ -81,6 +81,16 @@ def _linear_meta(w: _Writer, prefix: str, spec: dict) -> dict:
     if mode == "tensor_static":
         meta["a_scale"] = float(spec["a_scale"])
         meta["a_qmax"] = int(spec["a_qmax"])
+    elif mode == "channel_static":
+        # Format 3: a_scale is a tensor *name* (per-input-channel static
+        # scales), plus the optional reconstruction gather indices.
+        meta["a_qmax"] = int(spec["a_qmax"])
+        meta["a_scale"] = w.add(f"{prefix}.a_scale",
+                                np.asarray(spec["a_scale"], np.float32))
+        if spec.get("recon_idx") is not None:
+            meta["recon_idx"] = w.add(
+                f"{prefix}.recon_idx",
+                np.asarray(spec["recon_idx"], np.int32))
     elif mode == "dynamic":
         meta["a_qmax"] = int(spec["a_qmax"])
         meta["a_clip"] = float(spec.get("a_clip", 1.0))
@@ -127,8 +137,15 @@ def save_qmod(path: Path, qm: dict) -> None:
                 for name in ("k_scale", "v_scale", "qk_scale")
             }
         layers_meta.append(lm)
+    # Format history: 1 = base schema, 2 = + per-layer KV scales,
+    # 3 = + channel_static linears (per-channel static activation quant).
+    has_chan_static = any(
+        layer[k]["mode"] == "channel_static"
+        for layer in qm["layers"]
+        for k in ("q", "k", "v", "o", "gate", "up", "down"))
     meta = {
-        "format": 2 if kv_scales is not None else 1,
+        "format": (3 if has_chan_static
+                   else 2 if kv_scales is not None else 1),
         "method": qm["method"],
         "config": {**dataclasses.asdict(cfg),
                    "outlier_channels": list(cfg.outlier_channels)},
@@ -185,6 +202,11 @@ def load_qmod(path: Path) -> dict:
         if m["mode"] == "tensor_static":
             spec["a_scale"] = m["a_scale"]
             spec["a_qmax"] = m["a_qmax"]
+        elif m["mode"] == "channel_static":
+            spec["a_scale"] = tensor(m["a_scale"])
+            spec["a_qmax"] = m["a_qmax"]
+            spec["recon_idx"] = (tensor(m["recon_idx"])
+                                 if "recon_idx" in m else None)
         elif m["mode"] == "dynamic":
             spec["a_qmax"] = m["a_qmax"]
             spec["a_clip"] = m["a_clip"]

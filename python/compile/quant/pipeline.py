@@ -10,7 +10,11 @@
 5. GPTQ per-column weight quantization of the folded weights;
 6. low-rank quantization compensation (§4.3);
 7. out/down projections: per-token dynamic with a uniform searched clip,
-   optionally behind an online block-Hadamard (the non-``_nh`` variant).
+   optionally behind an online block-Hadamard (the non-``_nh`` variant) —
+   or, with ``static_od=True`` (the ``mergequant_static`` registry row),
+   per-channel *static* activation quantization with the dequant folded
+   into the weight columns, extending the QSM discipline end to end
+   (format-3 ``.qmod`` bundles; DESIGN.md §17).
 
 Every stage is individually toggleable — Table 4's ablation rows and
 Fig. 1's calibration comparison are produced with the same entry point.
@@ -101,6 +105,62 @@ def _static_branch(norm_g: np.ndarray, stats: C.TensorStats,
     return norm_spec, specs, report
 
 
+def _channel_static_branch(w: np.ndarray, stats: C.TensorStats, *,
+                           a_bits: int, w_bits: int, w_sym: bool,
+                           w_group: int, clipping: str,
+                           do_reconstruct: bool, alpha: float,
+                           lora_rank: int, use_gptq: bool):
+    """Per-channel *static* LinearSpec for out/down (DESIGN.md §17).
+
+    Same calibration → clip → reconstruct recipe as ``_static_branch``,
+    but for a single linear whose input is an FP activation (attention
+    output / SiLU product), not a norm output: the quantize scales stay
+    in the spec (``a_scale``, applied per input channel at runtime with
+    precomputed multipliers) while the matching dequant factors are
+    folded into the weight rows offline (Eq. 5), so the runtime pays
+    quantize + integer GEMM + column epilogue — zero per-token scale
+    math. Returns (linear_spec, mean clip ratio).
+    """
+    qa = qmax_for_bits(a_bits)
+    absmax = np.maximum(stats.absmax, 1e-6)
+    if clipping == "adaptive":
+        ratios = CL.adaptive_channel_clip(stats.samples, absmax, w,
+                                          a_bits=a_bits, w_bits=w_bits)
+    elif clipping == "channel":
+        ratios = CL.channel_clip_act_only(stats.samples, absmax,
+                                          a_bits=a_bits)
+    else:
+        ratios = np.ones_like(absmax)
+    s = absmax * ratios / qa
+
+    recon: Reconstruction = (reconstruct(s, stats.sqsum, alpha=alpha)
+                             if do_reconstruct else identity_reconstruction(s))
+
+    # Quantize-then-gather, the exact order the engines replay (the Rust
+    # forward fuses both into one pass over the activation row).
+    xq = np.clip(round_half_away(stats.samples / s), -qa, qa)
+    xq_rec = recon.apply_to_activation(xq)
+    w_folded = recon.apply_to_weight(w)  # σ_i · W[src_i, :]  (Eq. 5)
+
+    ctx = GptqContext(xq_rec) if use_gptq else None
+
+    def quantize(mat):
+        if use_gptq:
+            return gptq_quantize(mat, xq_rec, bits=w_bits, sym=w_sym,
+                                 group=w_group, ctx=ctx)
+        return quantize_weight(mat, bits=w_bits, sym=w_sym, group=w_group)
+
+    if lora_rank > 0:
+        qw, _ = compensate(w_folded, xq_rec, stats.samples, w, quantize,
+                           rank=lora_rank, rounds=2)
+    else:
+        qw = quantize(w_folded)
+    spec = {"mode": "channel_static", "qw": qw, "a_qmax": qa,
+            "a_scale": s.astype(np.float32),
+            "recon_idx": recon.recon_idx if do_reconstruct else None}
+    return spec, float(np.mean(ratios))
+
+
 def _dynamic_branch(w: np.ndarray, stats: C.TensorStats, *, a_bits: int,
                     w_bits: int, w_sym: bool, w_group: int, clipping: str,
                     hadamard: bool, lora_rank: int, use_gptq: bool):
@@ -135,10 +195,16 @@ def mergequant(cfg: M.ModelConfig, params, batches: list[np.ndarray], *,
                w_group: int = 0, hadamard: bool = True,
                clipping: str = "adaptive", do_reconstruct: bool = True,
                lora_rank: int = 8, use_gptq: bool = True,
-               alpha: float | None = None,
+               alpha: float | None = None, static_od: bool = False,
                calib: C.Calibration | None = None,
                collect_report: dict | None = None) -> QuantModel:
-    """Full MergeQuant (defaults) or any ablation of it (Table 4, 5, 7)."""
+    """Full MergeQuant (defaults) or any ablation of it (Table 4, 5, 7).
+
+    ``static_od=True`` swaps the per-token dynamic out/down projections
+    for the per-channel static W4A4 path (``channel_static`` specs,
+    format-3 bundles); ``hadamard`` is then ignored — the static scales
+    are calibrated on the un-rotated activations.
+    """
     alpha = DEFAULT_ALPHA.get(cfg.name, 5.0) if alpha is None else alpha
     p = B._np_params(params)
     t0 = time.time()
@@ -162,14 +228,26 @@ def mergequant(cfg: M.ModelConfig, params, batches: list[np.ndarray], *,
             a_bits=a_bits, w_bits=w_bits, w_sym=w_sym, w_group=w_group,
             clipping=clipping, do_reconstruct=do_reconstruct, alpha=alpha,
             lora_rank=lora_rank, use_gptq=use_gptq)
-        o_spec, o_clip = _dynamic_branch(
-            l["wo"], lc.o_in, a_bits=a_bits, w_bits=w_bits, w_sym=w_sym,
-            w_group=w_group, clipping=clipping, hadamard=hadamard,
-            lora_rank=lora_rank, use_gptq=use_gptq)
-        down_spec, down_clip = _dynamic_branch(
-            l["w_down"], lc.down_in, a_bits=a_bits, w_bits=w_bits,
-            w_sym=w_sym, w_group=w_group, clipping=clipping,
-            hadamard=hadamard, lora_rank=lora_rank, use_gptq=use_gptq)
+        if static_od:
+            o_spec, o_clip = _channel_static_branch(
+                l["wo"], lc.o_in, a_bits=a_bits, w_bits=w_bits,
+                w_sym=w_sym, w_group=w_group, clipping=clipping,
+                do_reconstruct=do_reconstruct, alpha=alpha,
+                lora_rank=lora_rank, use_gptq=use_gptq)
+            down_spec, down_clip = _channel_static_branch(
+                l["w_down"], lc.down_in, a_bits=a_bits, w_bits=w_bits,
+                w_sym=w_sym, w_group=w_group, clipping=clipping,
+                do_reconstruct=do_reconstruct, alpha=alpha,
+                lora_rank=lora_rank, use_gptq=use_gptq)
+        else:
+            o_spec, o_clip = _dynamic_branch(
+                l["wo"], lc.o_in, a_bits=a_bits, w_bits=w_bits,
+                w_sym=w_sym, w_group=w_group, clipping=clipping,
+                hadamard=hadamard, lora_rank=lora_rank, use_gptq=use_gptq)
+            down_spec, down_clip = _dynamic_branch(
+                l["w_down"], lc.down_in, a_bits=a_bits, w_bits=w_bits,
+                w_sym=w_sym, w_group=w_group, clipping=clipping,
+                hadamard=hadamard, lora_rank=lora_rank, use_gptq=use_gptq)
         layers.append({
             "attn_norm": attn_norm, **attn_specs, "o": o_spec,
             "ffn_norm": ffn_norm, **ffn_specs, "down": down_spec,
@@ -180,7 +258,10 @@ def mergequant(cfg: M.ModelConfig, params, batches: list[np.ndarray], *,
     if collect_report is not None:
         collect_report.update(report)
 
-    name = "mergequant" if hadamard else "mergequant_nh"
+    if static_od:
+        name = "mergequant_static"
+    else:
+        name = "mergequant" if hadamard else "mergequant_nh"
     qm = B._assemble(cfg, p, layers, name)
     # Static INT8 KV-cache scales from the same calibration corpus — the
     # format-2 schema carries them so the serving engine never computes a
@@ -232,6 +313,11 @@ def build_method(name: str, cfg: M.ModelConfig, params,
         return mergequant(cfg, params, batches, hadamard=True, calib=calib)
     if name == "mergequant_nh":
         return mergequant(cfg, params, batches, hadamard=False, calib=calib)
+    if name == "mergequant_static":
+        # End-to-end static W4A4: o/down go per-channel static instead of
+        # per-token dynamic (PR-9 serving path, DESIGN.md §17).
+        return mergequant(cfg, params, batches, hadamard=False,
+                          static_od=True, calib=calib)
     # --- Table 4 ablation rows ---
     if name == "mq_qsm_only":
         return mergequant(cfg, params, batches, hadamard=False,

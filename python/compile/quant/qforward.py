@@ -17,6 +17,10 @@ QuantModel
                 "static"        qw: QWeight — input is the integer
                                 activations the merged norm emits (Eq. 5)
                 "tensor_static" qw + a_scale (scalar), a_qmax — SmoothQuant
+                "channel_static" qw + a_scale (n,), a_qmax,
+                                recon_idx (n,) i32 | None — per-channel
+                                static activation quant; dequant folded
+                                into the weight columns (format 3)
                 "dynamic"       qw + a_qmax, a_clip, hadamard — per-token
 exactly one of {w, qw} present per linear.
 
@@ -110,6 +114,17 @@ def _linear_apply(spec: dict, x: jax.Array, use_pallas: bool) -> jax.Array:
         qm = spec["a_qmax"]
         xq = jnp.clip(KREF.round_half_away(x2 / a_scale), -qm, qm)
         out = _int_matmul(xq, spec["qw"], use_pallas) * a_scale
+    elif mode == "channel_static":
+        # Per-channel static quantize, then the dimension-reconstruction
+        # gather; the activation dequant is already folded into the
+        # weight columns (Eq. 5), so no rescale after the matmul.
+        s = jnp.asarray(spec["a_scale"])
+        qm = spec["a_qmax"]
+        xq = jnp.clip(KREF.round_half_away(x2 / s), -qm, qm)
+        recon = spec.get("recon_idx")
+        if recon is not None:
+            xq = xq[..., jnp.asarray(recon)]
+        out = _int_matmul(xq, spec["qw"], use_pallas)
     elif mode == "dynamic":
         if spec.get("hadamard"):
             x2 = KREF.hadamard_block64_ref(x2)

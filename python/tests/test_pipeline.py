@@ -39,6 +39,69 @@ def test_mergequant_structure(small_cfg, mq_model):
         assert 0.5 <= layer[name]["a_clip"] <= 1.0
 
 
+@pytest.fixture(scope="module")
+def mq_static_model(small_cfg, small_params, small_batches, small_calib):
+    return P.build_method("mergequant_static", small_cfg, small_params,
+                          small_batches, calib=small_calib)
+
+
+def test_mergequant_static_structure(mq_static_model):
+    """End-to-end static W4A4: o/down carry channel_static specs with
+    per-channel scales (and the compiled model is named accordingly)."""
+    assert mq_static_model["method"] == "mergequant_static"
+    layer = mq_static_model["layers"][0]
+    for name in ("q", "k", "v", "gate", "up"):
+        assert layer[name]["mode"] == "static"
+    for name in ("o", "down"):
+        spec = layer[name]
+        assert spec["mode"] == "channel_static"
+        n = spec["qw"].wq.shape[0]
+        assert spec["a_scale"].shape == (n,)
+        assert (spec["a_scale"] > 0).all()
+        assert spec["a_qmax"] == 7
+        if spec["recon_idx"] is not None:
+            idx = np.asarray(spec["recon_idx"])
+            assert idx.shape == (n,)
+            assert idx.min() >= 0 and idx.max() < n
+
+
+def test_mergequant_static_runs_close_to_dynamic(small_cfg, small_params,
+                                                 mq_model, mq_static_model):
+    """The static o/down path must stay in the same accuracy band as the
+    per-token dynamic default it replaces (Table 6 trade: overhead for
+    at-worst-modest error growth)."""
+    toks = RNG.integers(3, 128, size=(2, 32)).astype(np.int32)
+    e_dyn = _logit_err(small_cfg, small_params, mq_model, toks)
+    e_static = _logit_err(small_cfg, small_params, mq_static_model, toks)
+    assert np.isfinite(e_static)
+    assert e_static < max(e_dyn * 3.0, 1.0)
+
+
+def test_qmod_roundtrip_channel_static(tmp_path, small_cfg,
+                                       mq_static_model):
+    """channel_static specs survive the .qmod bundle (format 3) bitwise."""
+    import json
+    path = tmp_path / "ms.qmod"
+    QM.save_qmod(path, mq_static_model)
+    raw = path.read_bytes()
+    mlen = int.from_bytes(raw[len(QM.MAGIC):len(QM.MAGIC) + 4], "little")
+    meta = json.loads(raw[len(QM.MAGIC) + 4:len(QM.MAGIC) + 4 + mlen])
+    assert meta["format"] == 3
+    loaded = QM.load_qmod(path)
+    spec0 = mq_static_model["layers"][0]["o"]
+    got0 = loaded["layers"][0]["o"]
+    assert got0["mode"] == "channel_static"
+    np.testing.assert_array_equal(got0["a_scale"], spec0["a_scale"])
+    if spec0["recon_idx"] is None:
+        assert got0["recon_idx"] is None
+    else:
+        np.testing.assert_array_equal(got0["recon_idx"], spec0["recon_idx"])
+    toks = RNG.integers(3, 128, size=(1, 16)).astype(np.int32)
+    a = quant_forward(small_cfg, mq_static_model, jnp.asarray(toks))
+    b = quant_forward(small_cfg, loaded, jnp.asarray(toks))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
 def test_merged_multiplier_holds_gamma_over_s(small_cfg, small_params,
                                               small_calib, small_batches):
     """g_merged · s == γ  (quant migration bookkeeping)."""

@@ -96,7 +96,8 @@ pub fn artifacts_ready() -> bool {
 
 /// Build a synthetic QModel for op-level benches that do not need trained
 /// weights (Table 6, and fallbacks). `mode`: "fp16" | "mergequant" |
-/// "rtn" | "quarot".
+/// "mergequant_static" (o/down per-channel static W4A4, the PR-9
+/// channel_static path) | "rtn" | "quarot".
 pub fn synthetic_model(mode: &str, d: usize, ff: usize, n_layers: usize,
                        vocab: usize) -> crate::engine::QModel {
     use crate::engine::qmod::*;
@@ -149,6 +150,18 @@ pub fn synthetic_model(mode: &str, d: usize, ff: usize, n_layers: usize,
         q_lin(rng, n, j, QuantMode::Dynamic {
             a_qmax: 7, a_clip: clip, hadamard: h })
     }
+    /// Per-channel static activation quantization (DESIGN.md §17):
+    /// reciprocal multipliers in a realistic scale band plus (when
+    /// `permute`) a rotate-by-one reconstruction gather, so the fused
+    /// quantize+gather path is exercised, not just the plain quantize.
+    fn chanq(rng: &mut Rng, n: usize, j: usize, permute: bool) -> Linear {
+        let a_inv: Vec<f32> =
+            (0..n).map(|_| 1.0 / (0.02 + rng.f32() * 0.05)).collect();
+        let recon_idx = permute
+            .then(|| (0..n).map(|c| ((c + 1) % n) as u32).collect());
+        q_lin(rng, n, j, QuantMode::ChannelStatic {
+            a_inv, a_qmax: 7, recon_idx })
+    }
     let mut layers = Vec::new();
     for _ in 0..n_layers {
         let layer = match mode {
@@ -173,6 +186,17 @@ pub fn synthetic_model(mode: &str, d: usize, ff: usize, n_layers: usize,
                 gate: q_lin(&mut rng, d, ff, QuantMode::Static),
                 up: q_lin(&mut rng, d, ff, QuantMode::Static),
                 down: dynq(&mut rng, ff, d, false, 0.65),
+            },
+            "mergequant_static" => LayerWeights {
+                attn_norm: make_norm(&mut rng, true, true, d),
+                q: q_lin(&mut rng, d, d, QuantMode::Static),
+                k: q_lin(&mut rng, d, d, QuantMode::Static),
+                v: q_lin(&mut rng, d, d, QuantMode::Static),
+                o: chanq(&mut rng, d, d, true),
+                ffn_norm: make_norm(&mut rng, true, true, d),
+                gate: q_lin(&mut rng, d, ff, QuantMode::Static),
+                up: q_lin(&mut rng, d, ff, QuantMode::Static),
+                down: chanq(&mut rng, ff, d, false),
             },
             "rtn" | "quarot" => {
                 let had = mode == "quarot";

@@ -2,8 +2,11 @@
 //! repo-root `BENCH_<n>.json` snapshots: Figure-3 decode throughput per
 //! method, Table-2 prefill throughput, Table-3 memory accounting, the
 //! PR-6 shared-prefix fleet axis (prefix cache on vs off against the
-//! PR-5 paged baseline, DESIGN.md §14), and the PR-7 bursty
-//! mixed-priority axis (preemptive classes on vs off, DESIGN.md §15).
+//! PR-5 paged baseline, DESIGN.md §14), the PR-7 bursty
+//! mixed-priority axis (preemptive classes on vs off, DESIGN.md §15),
+//! and the PR-9 kernel axis (scalar vs best-SIMD GEMM GOPS + decode
+//! tok/s, plus the dynamic-vs-channel-static quant-overhead arms,
+//! DESIGN.md §17).
 //!
 //! Counter-valued fields (prefill rows, hit rate, matched tokens, peak
 //! concurrency, preemption counts, TTFT in forward calls) are
@@ -11,6 +14,7 @@
 //! (tok/s, TTFT in ms) are machine-dependent and refreshed with
 //! `mergequant bench --record`.
 
+use std::path::Path;
 use std::time::Instant;
 
 use crate::coordinator::router::dispatch::{Candidate, Dispatcher,
@@ -55,6 +59,154 @@ const TP_MAX_NEW: usize = 16;
 
 fn method_engine(method: &str) -> Engine {
     Engine::new(synthetic_model(method, 64, 128, 2, 96))
+}
+
+/// Kernel-axis GEMM tile (DESIGN.md §17): large enough that the inner
+/// i8 dot dominates, small enough for the fast suite.
+const KERN_M: usize = 48;
+const KERN_N: usize = 256;
+const KERN_J: usize = 192;
+
+/// Kernel axis: for every microkernel variant this host can run, pin
+/// the dispatch table to it and measure the serial i8 GEMM and the
+/// packed-INT4 (W4A4) GEMM in GOPS plus single-lane decode tok/s on
+/// the channel-static synthetic bundle. The axis is its own
+/// determinism witness: every variant's accumulator block must be
+/// bitwise the scalar one (available() lists scalar first). The
+/// previously active kernel is restored before returning.
+fn kernel_axis(fast: bool) -> Json {
+    use crate::quant::gemm::{gemm_i8, gemm_i8_packed4};
+    use crate::quant::{pack, simd};
+    let prev = simd::active().kind();
+    let (m, n, j) = (KERN_M, KERN_N, KERN_J);
+    let reps = if fast { 2 } else { 8 };
+    let (pf, dec) = if fast { (32, 16) } else { (64, 64) };
+    let mut rng = crate::util::rng::Rng::new(0xD0717);
+    let xq: Vec<i8> =
+        (0..m * n).map(|_| rng.usize(0, 256) as u8 as i8).collect();
+    let wt: Vec<i8> =
+        (0..j * n).map(|_| rng.usize(0, 15) as i8 - 7).collect();
+    let mut packed = Vec::with_capacity(j * n.div_ceil(2));
+    for c in 0..j {
+        packed.extend(pack::pack_int4(&wt[c * n..(c + 1) * n]));
+    }
+    let ops = (2 * m * n * j) as f64;
+    let mut arms = Vec::new();
+    let mut pinned: Option<Vec<i32>> = None;
+    for kind in simd::available() {
+        assert!(simd::force(kind), "probed kernel must install");
+        let mut acc = vec![0i32; m * j];
+        let mut best_i8 = f64::INFINITY;
+        for _ in 0..reps {
+            let t = Instant::now();
+            gemm_i8(&xq, &wt, m, n, j, &mut acc);
+            best_i8 = best_i8.min(t.elapsed().as_secs_f64());
+        }
+        match &pinned {
+            Some(base) => assert_eq!(&acc, base,
+                "{} i8 GEMM diverged from scalar", kind.name()),
+            None => pinned = Some(acc.clone()),
+        }
+        let mut scratch = Vec::new();
+        let mut acc4 = vec![0i32; m * j];
+        let mut best_p4 = f64::INFINITY;
+        for _ in 0..reps {
+            let t = Instant::now();
+            gemm_i8_packed4(&xq, &packed, m, n, j, &mut scratch,
+                            &mut acc4);
+            best_p4 = best_p4.min(t.elapsed().as_secs_f64());
+        }
+        assert_eq!(Some(&acc4), pinned.as_ref(),
+                   "{} packed GEMM diverged from scalar", kind.name());
+        let decode = method_row("mergequant_static", pf, dec)
+            .get("decode_tok_s")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0);
+        arms.push(obj(vec![
+            ("kernel", s(kind.name())),
+            ("gemm_i8_gops", num(ops / best_i8 / 1e9)),
+            ("gemm_w4a4_gops", num(ops / best_p4 / 1e9)),
+            ("decode_tok_s", num(decode)),
+        ]));
+    }
+    simd::force(prev);
+    obj(vec![
+        ("m", num(m as f64)),
+        ("n", num(n as f64)),
+        ("j", num(j as f64)),
+        ("best", s(simd::best().kind().name())),
+        ("arms", Json::Arr(arms)),
+    ])
+}
+
+/// Dynamic-vs-static quant-overhead axis (Fig. 3): the synthetic
+/// bundle with per-token dynamic o/down ("mergequant", the pre-§17
+/// runtime) against per-channel static o/down ("mergequant_static",
+/// zero per-token scale math). Wall-clock like every tok/s field.
+fn quant_overhead_axis(pf: usize, dec: usize) -> Json {
+    obj(vec![
+        ("dynamic", method_row("mergequant", pf, dec)),
+        ("channel_static", method_row("mergequant_static", pf, dec)),
+    ])
+}
+
+/// Find the newest `BENCH_<n>.json` in `dir` with `n` strictly below
+/// the current suite version and render a one-line delta: the fig3
+/// mergequant decode throughput (wall-clock — "n/a" in committed
+/// snapshots, which null machine-local fields) and the shared-prefix
+/// prefill-row counter (deterministic, so a drift here is a real
+/// regression). `None` when no earlier snapshot is readable.
+pub fn delta_vs_previous(cur: &Json, dir: &Path) -> Option<String> {
+    let cur_v = cur.get("version").and_then(Json::as_f64)? as i64;
+    let mut best: Option<(i64, std::path::PathBuf)> = None;
+    for entry in std::fs::read_dir(dir).ok()?.flatten() {
+        let name = entry.file_name();
+        let v: i64 = match name
+            .to_string_lossy()
+            .strip_prefix("BENCH_")
+            .and_then(|r| r.strip_suffix(".json"))
+            .and_then(|d| d.parse().ok())
+        {
+            Some(v) => v,
+            None => continue,
+        };
+        if v < cur_v && best.as_ref().is_none_or(|(b, _)| v > *b) {
+            best = Some((v, entry.path()));
+        }
+    }
+    let (v, path) = best?;
+    let prev =
+        Json::parse(&std::fs::read_to_string(&path).ok()?).ok()?;
+    let decode = |j: &Json| -> Option<f64> {
+        if let Some(Json::Arr(ms)) = j.get("methods") {
+            for m in ms {
+                if m.get("method").and_then(Json::as_str)
+                    == Some("mergequant")
+                {
+                    return m.get("decode_tok_s").and_then(Json::as_f64);
+                }
+            }
+        }
+        None
+    };
+    let rows = |j: &Json| {
+        j.get("prefix_fleet")
+            .and_then(|p| p.get("shared"))
+            .and_then(|sh| sh.get("prefill_rows"))
+            .and_then(Json::as_f64)
+    };
+    let fmt = |x: Option<f64>| match x {
+        Some(x) => format!("{x:.1}"),
+        None => "n/a".into(),
+    };
+    Some(format!(
+        "delta vs BENCH_{v}.json: mergequant decode {} tok/s \
+         (prev {}), shared prefill_rows {} (prev {})",
+        fmt(decode(cur)),
+        fmt(decode(&prev)),
+        fmt(rows(cur)),
+        fmt(rows(&prev))
+    ))
 }
 
 /// Per-method decode + prefill throughput (Figure 3 / Table 2 axes) on
@@ -471,11 +623,13 @@ pub fn run_suite(fast: bool) -> Json {
     }
     obj(vec![
         ("suite", s("mergequant-bench")),
-        ("version", num(8.0)),
+        ("version", num(9.0)),
         ("fast", Json::Bool(fast)),
         ("model", s("synthetic d64 ff128 L2 v96")),
         ("methods", Json::Arr(methods)),
         ("memory", memory_rows()),
+        ("kernels", kernel_axis(fast)),
+        ("quant_overhead", quant_overhead_axis(pf, dec)),
         ("prefix_fleet", obj(vec![
             ("prefix_toks", num(PREFIX_TOKS as f64)),
             ("suffix_toks", num(SUFFIX_TOKS as f64)),
@@ -604,6 +758,75 @@ mod tests {
         }
         assert_eq!(u2, base);
         assert_eq!(u4, base);
+    }
+
+    #[test]
+    fn kernel_axis_covers_the_host_and_agrees_bitwise() {
+        // The bitwise scalar-vs-variant agreement is asserted inside
+        // kernel_axis itself; here pin the structure: one arm per
+        // host-available variant, scalar first, positive GOPS.
+        let ax = kernel_axis(true);
+        let Some(Json::Arr(arms)) = ax.get("arms") else {
+            panic!("kernel axis must carry an arms array");
+        };
+        assert_eq!(arms.len(), crate::quant::simd::available().len());
+        assert_eq!(arms[0].get("kernel").and_then(Json::as_str),
+                   Some("scalar"));
+        for a in arms {
+            for k in ["gemm_i8_gops", "gemm_w4a4_gops", "decode_tok_s"] {
+                assert!(a.get(k).and_then(Json::as_f64).unwrap() > 0.0,
+                        "{k} must be positive");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_overhead_axis_names_both_arms() {
+        let ax = quant_overhead_axis(16, 4);
+        let m = |arm: &str| {
+            ax.get(arm)
+                .and_then(|a| a.get("method"))
+                .and_then(Json::as_str)
+                .map(String::from)
+        };
+        assert_eq!(m("dynamic").as_deref(), Some("mergequant"));
+        assert_eq!(m("channel_static").as_deref(),
+                   Some("mergequant_static"));
+    }
+
+    #[test]
+    fn delta_line_reads_newest_older_snapshot() {
+        let dir = std::env::temp_dir()
+            .join(format!("mq_delta_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("BENCH_7.json"), r#"{"version":7}"#)
+            .unwrap();
+        std::fs::write(
+            dir.join("BENCH_8.json"),
+            r#"{"version":8,"methods":[{"method":"mergequant",
+                "decode_tok_s":null}],
+                "prefix_fleet":{"shared":{"prefill_rows":160}}}"#,
+        )
+        .unwrap();
+        let cur = obj(vec![
+            ("version", num(9.0)),
+            ("methods", Json::Arr(vec![obj(vec![
+                ("method", s("mergequant")),
+                ("decode_tok_s", num(100.0)),
+            ])])),
+            ("prefix_fleet", obj(vec![("shared", obj(vec![
+                ("prefill_rows", num(160.0)),
+            ]))])),
+        ]);
+        let line = delta_vs_previous(&cur, &dir).unwrap();
+        assert!(line.contains("BENCH_8.json"), "{line}");
+        assert!(line.contains("100.0"), "{line}");
+        assert!(line.contains("prev n/a"), "{line}");
+        assert!(line.contains("160.0 (prev 160.0)"), "{line}");
+        // Same-or-newer snapshots are never a baseline.
+        let v7 = obj(vec![("version", num(7.0))]);
+        assert!(delta_vs_previous(&v7, &dir).is_none());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -20,6 +20,11 @@ pub struct ServeConfig {
     /// DESIGN.md §16). `serve` ignores it; `route` splits the KV arena
     /// evenly across this many replicas.
     pub replicas: usize,
+    /// Forced integer-microkernel variant
+    /// (`scalar|avx2|vnni|neon`, DESIGN.md §17). `None` = auto
+    /// dispatch (or the `MQ_KERNEL` env override). Kept as the raw
+    /// spelling; the launcher validates and applies it.
+    pub kernel: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -30,17 +35,42 @@ impl Default for ServeConfig {
             scheduler: SchedulerConfig::default(),
             port: 0,
             replicas: 1,
+            kernel: None,
         }
     }
 }
 
 /// One-line deprecation note for the pre-paging `kv_slabs` arena
-/// sizing (PR 5 back-compat alias) — printed once per parse site so
-/// configs migrate to `kv_blocks` before the alias is dropped.
-pub fn warn_kv_slabs_deprecated(source: &str) {
+/// sizing (PR 5 back-compat alias) — printed **once per process**
+/// however many parse sites (config key, CLI flag) see the alias.
+/// Returns whether this call emitted the warning (false = already
+/// warned), so the behaviour is unit-testable.
+pub fn warn_kv_slabs_deprecated(source: &str) -> bool {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    if WARNED.swap(true, Ordering::Relaxed) {
+        return false;
+    }
     eprintln!("warning: kv_slabs ({source}) is deprecated — size the \
                arena with kv_blocks (same bytes: kv_slabs × \
                ⌈max_seq/kv_block⌉ blocks)");
+    true
+}
+
+/// The single resolver for the deprecated `kv_slabs` alias — every
+/// parse site (config JSON, `--kv-slabs`) funnels through here so the
+/// deprecation note is emitted exactly once and the apply-vs-fallback
+/// logic cannot drift between sites. `Some(v)` applies `v` (and
+/// warns); `None` keeps `fallback`.
+pub fn resolve_kv_slabs(raw: Option<usize>, source: &str,
+                        fallback: usize) -> usize {
+    match raw {
+        Some(v) => {
+            warn_kv_slabs_deprecated(source);
+            v
+        }
+        None => fallback,
+    }
 }
 
 impl ServeConfig {
@@ -66,16 +96,17 @@ impl ServeConfig {
         if let Some(r) = j.get("replicas").and_then(Json::as_usize) {
             cfg.replicas = r.max(1);
         }
+        if let Some(k) = j.get("kernel").and_then(Json::as_str) {
+            cfg.kernel = Some(k.into());
+        }
         if let Some(s) = j.get("scheduler") {
-            if s.get("kv_slabs").is_some() {
-                warn_kv_slabs_deprecated("config scheduler.kv_slabs");
-            }
             let d = SchedulerConfig::default();
             cfg.scheduler = SchedulerConfig {
                 max_batch: s.get("max_batch").and_then(Json::as_usize)
                     .unwrap_or(d.max_batch),
-                kv_slabs: s.get("kv_slabs").and_then(Json::as_usize)
-                    .unwrap_or(d.kv_slabs),
+                kv_slabs: resolve_kv_slabs(
+                    s.get("kv_slabs").and_then(Json::as_usize),
+                    "config scheduler.kv_slabs", d.kv_slabs),
                 // Paged KV (DESIGN.md §13): block granularity + arena
                 // size. `kv_slabs` stays as the back-compat arena sizing
                 // (kv_blocks == 0 ⇒ kv_slabs × ⌈max_seq/kv_block⌉
@@ -212,6 +243,29 @@ mod tests {
         assert!(!d.scheduler.prefix_cache,
                 "prefix cache must be opt-in");
         assert_eq!(d.scheduler.prefix_cache_blocks, 0);
+    }
+
+    #[test]
+    fn kv_slabs_alias_resolves_and_warns_at_most_once() {
+        // The resolver applies the alias value over the fallback …
+        assert_eq!(resolve_kv_slabs(Some(7), "test", 3), 7);
+        assert_eq!(resolve_kv_slabs(None, "test", 3), 3);
+        // … and however many sites warn, only the first emission in
+        // the process actually prints. (Another test may already have
+        // consumed the first slot — only the *second* consecutive call
+        // is deterministic.)
+        warn_kv_slabs_deprecated("first site");
+        assert!(!warn_kv_slabs_deprecated("second site"),
+                "deprecation note must be once-per-process");
+    }
+
+    #[test]
+    fn kernel_key_parses_and_defaults_off() {
+        let c = ServeConfig::from_json(
+            &Json::parse(r#"{"kernel":"scalar"}"#).unwrap());
+        assert_eq!(c.kernel.as_deref(), Some("scalar"));
+        let d = ServeConfig::from_json(&Json::parse("{}").unwrap());
+        assert!(d.kernel.is_none(), "kernel override must be opt-in");
     }
 
     #[test]

@@ -13,8 +13,9 @@
 //! cached prefix (causal: row at absolute position `p` sees `p + 1`
 //! cached entries).
 
-use crate::quant::gemm::{dot_f32, dot_i8};
+use crate::quant::gemm::dot_f32;
 use crate::quant::kv::{self, KvDtype, KvLayerScales};
+use crate::quant::simd;
 use crate::quant::parallel::{ScopedTask, ThreadPool};
 
 use super::cache::KvCache;
@@ -104,6 +105,7 @@ fn attend_one_i8(cfg: &ModelConfig, q: &[f32], cache: &KvCache,
     let inv_sqrt = 1.0 / (hd as f32).sqrt();
     scores.resize(klen, 0.0);
     qq.resize(hd, 0);
+    let kern = simd::active();
     for head in 0..h {
         let lo = head * hd;
         // Static Q quantization: per-channel multipliers precomputed at
@@ -117,7 +119,7 @@ fn attend_one_i8(cfg: &ModelConfig, q: &[f32], cache: &KvCache,
             let kp = cache.block_k_i8(b, l);
             for r in 0..rows {
                 let kh = &kp[r * d + lo..r * d + lo + hd];
-                let s = dot_i8(qq, kh) as f32 * pre;
+                let s = kern.dot(qq, kh) as f32 * pre;
                 scores[t0 + r] = s;
                 maxv = maxv.max(s);
             }

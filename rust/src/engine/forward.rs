@@ -370,6 +370,50 @@ impl Engine {
                     Self::int_matmul(pool, qw, xqb, m, Some(rs), rsum,
                                      scratch, out);
                 }
+                QuantMode::ChannelStatic { a_inv, a_qmax, recon_idx } => {
+                    let x = match input {
+                        Act::F32(x) => x,
+                        _ => unreachable!("channel_static needs f32"),
+                    };
+                    let n = qw.n;
+                    xqb.resize(m * n, 0);
+                    let qm = *a_qmax as f32;
+                    // Static per-channel quantize (multipliers
+                    // precomputed at load — zero per-token scale math)
+                    // with the dimension-reconstruction gather fused
+                    // into the same pass: position k of the GEMM input
+                    // is original channel idx[k], quantized with that
+                    // channel's own scale (matches qforward.py's
+                    // quantize-then-gather order element for element).
+                    match recon_idx {
+                        Some(idx) => {
+                            for i in 0..m {
+                                let row = &x[i * n..(i + 1) * n];
+                                let qr = &mut xqb[i * n..(i + 1) * n];
+                                for (q, &ix) in qr.iter_mut().zip(idx) {
+                                    let c = ix as usize;
+                                    let v = (row[c] * a_inv[c]).round();
+                                    *q = v.clamp(-qm, qm) as i8;
+                                }
+                            }
+                        }
+                        None => {
+                            for i in 0..m {
+                                let row = &x[i * n..(i + 1) * n];
+                                let qr = &mut xqb[i * n..(i + 1) * n];
+                                for c in 0..n {
+                                    let v = (row[c] * a_inv[c]).round();
+                                    qr[c] = v.clamp(-qm, qm) as i8;
+                                }
+                            }
+                        }
+                    }
+                    // The activation dequant factors are folded into
+                    // the weight columns at compile time, so no row
+                    // scale: integer GEMM + Eq.-5 column epilogue only.
+                    Self::int_matmul(pool, qw, xqb, m, None, rsum,
+                                     scratch, out);
+                }
                 QuantMode::Dynamic { a_qmax, a_clip, hadamard } => {
                     let x = match input {
                         Act::F32(x) => x,

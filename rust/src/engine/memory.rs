@@ -69,6 +69,16 @@ pub fn account_model(model: &QModel, batch: usize, seq: usize, kv: KvDtype)
                         has_dynamic = true; // int copy buffer, no row scales
                         max_n = max_n.max(qw.n);
                     }
+                    QuantMode::ChannelStatic { recon_idx, .. } => {
+                        // Static path: int copy buffer only (quantize
+                        // multipliers live with the weights, counted in
+                        // weight_bytes); the activation gather indices
+                        // are recon machinery like the norm gathers.
+                        has_dynamic = true;
+                        max_n = max_n.max(qw.n);
+                        mb.recon_indices +=
+                            recon_idx.as_ref().map_or(0, |r| r.len() * 4);
+                    }
                     QuantMode::Static => {}
                 }
             }

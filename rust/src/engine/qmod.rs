@@ -89,6 +89,22 @@ pub enum QuantMode {
     Static,
     /// SmoothQuant-style fixed scalar activation scale.
     TensorStatic { a_scale: f32, a_qmax: i32 },
+    /// Per-input-channel *static* activation quantization — the full
+    /// QSM W4A4 path for the o/down projections (format-3 bundles).
+    /// `a_inv[c] = 1/s_c` are the calibrated quantize multipliers
+    /// (Table 7 adaptive clipping baked into `s`); the matching
+    /// dequant factors are **folded into the weight columns** at
+    /// compile time (`Reconstruction.apply_to_weight`), so the
+    /// runtime epilogue is the per-output-column Eq.-5 rescale alone
+    /// — zero per-token scale math, like [`QuantMode::Static`].
+    /// `recon_idx` is the optional dimension-reconstruction gather
+    /// (Table 6 / paper App. C.1) applied to the quantized
+    /// activations before the integer GEMM.
+    ChannelStatic {
+        a_inv: Vec<f32>,
+        a_qmax: i32,
+        recon_idx: Option<Vec<u32>>,
+    },
     /// Per-token dynamic (the baseline, and out/down projections).
     Dynamic { a_qmax: i32, a_clip: f32, hadamard: bool },
 }
@@ -110,7 +126,17 @@ impl Linear {
     pub fn resident_bytes(&self) -> usize {
         match self {
             Linear::Fp { wt, .. } => wt.len() * 4,
-            Linear::Quant { qw, .. } => qw.resident_bytes(),
+            Linear::Quant { qw, mode } => {
+                let act = match mode {
+                    QuantMode::ChannelStatic { a_inv, recon_idx, .. } => {
+                        (a_inv.len()
+                            + recon_idx.as_ref().map_or(0, Vec::len))
+                            * 4
+                    }
+                    _ => 0,
+                };
+                qw.resident_bytes() + act
+            }
         }
     }
 }
@@ -301,6 +327,51 @@ fn load_linear(blob: &Blob, meta: &Json) -> Result<Linear> {
                     as i32,
             },
         }),
+        "channel_static" => {
+            let qw =
+                load_qweight(blob,
+                             meta.req("qw").map_err(anyhow::Error::msg)?)?;
+            let a_scale = blob
+                .f32(meta.req_str("a_scale").map_err(anyhow::Error::msg)?)?;
+            if a_scale.len() != qw.n {
+                bail!("channel_static a_scale has {} channels, weight \
+                       expects {}", a_scale.len(), qw.n);
+            }
+            let recon_idx = match meta.get("recon_idx").and_then(Json::as_str)
+            {
+                Some(name) => {
+                    let idx = blob.i32_as_u32(name)?;
+                    if idx.len() != qw.n {
+                        bail!("channel_static recon_idx has {} entries, \
+                               weight expects {}", idx.len(), qw.n);
+                    }
+                    if let Some(&bad) =
+                        idx.iter().find(|&&v| v as usize >= a_scale.len())
+                    {
+                        bail!("channel_static recon_idx entry {bad} out of \
+                               range (d={})", a_scale.len());
+                    }
+                    Some(idx)
+                }
+                None => None,
+            };
+            // Precompute the quantize multipliers once (nothing on the
+            // decode path divides); floor degenerate scales like the KV
+            // loader does.
+            let a_inv =
+                a_scale.iter().map(|s| 1.0 / s.max(1e-12)).collect();
+            Ok(Linear::Quant {
+                qw,
+                mode: QuantMode::ChannelStatic {
+                    a_inv,
+                    a_qmax: meta
+                        .req_usize("a_qmax")
+                        .map_err(anyhow::Error::msg)?
+                        as i32,
+                    recon_idx,
+                },
+            })
+        }
         "dynamic" => Ok(Linear::Quant {
             qw: load_qweight(blob, meta.req("qw").map_err(anyhow::Error::msg)?)?,
             mode: QuantMode::Dynamic {

@@ -17,7 +17,7 @@
 use anyhow::{bail, Context, Result};
 
 use mergequant::cli::Args;
-use mergequant::config::{warn_kv_slabs_deprecated, ServeConfig};
+use mergequant::config::{resolve_kv_slabs, ServeConfig};
 use mergequant::coordinator::{
     server::TcpGateway, Router, RouterConfig, RouterGateway, Server,
 };
@@ -58,6 +58,7 @@ fn run() -> Result<()> {
                  usage: mergequant <serve|route|eval|generate|inspect|\
                  bench|runtime> [--model NAME] [--method NAME] \
                  [--replicas N] [--threads N] \
+                 [--kernel scalar|avx2|vnni|neon] \
                  [--kv-cache f32|int8] [--kv-block TOKENS] \
                  [--kv-blocks N] [--prefix-cache] \
                  [--prefix-cache-blocks N] [--max-decode-latency MS] \
@@ -89,11 +90,10 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
     cfg.scheduler.max_batch =
         args.get_usize("max-batch", cfg.scheduler.max_batch);
     cfg.scheduler.max_seq = args.get_usize("max-seq", cfg.scheduler.max_seq);
-    if args.get("kv-slabs").is_some() {
-        warn_kv_slabs_deprecated("--kv-slabs");
-    }
-    cfg.scheduler.kv_slabs =
-        args.get_usize("kv-slabs", cfg.scheduler.kv_slabs.max(cfg.scheduler.max_batch));
+    cfg.scheduler.kv_slabs = resolve_kv_slabs(
+        args.get("kv-slabs").and_then(|v| v.parse().ok()),
+        "--kv-slabs",
+        cfg.scheduler.kv_slabs.max(cfg.scheduler.max_batch));
     // Paged KV (DESIGN.md §13): --kv-block sets the paging granularity
     // in tokens (0 = one block per max_seq sequence, the old slab
     // behaviour); --kv-blocks sets the arena size directly (0 = derive
@@ -126,19 +126,46 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
     cfg.scheduler.max_decode_latency = args
         .get_usize("max-decode-latency",
                    cfg.scheduler.max_decode_latency as usize) as u64;
+    // Integer-microkernel pin (DESIGN.md §17): --kernel / config
+    // "kernel" forces the dispatch table; unset keeps auto-dispatch
+    // (or the MQ_KERNEL env override, honored lazily at first GEMM).
+    if let Some(k) = args.get("kernel") {
+        cfg.kernel = Some(k.into());
+    }
+    apply_kernel(cfg.kernel.as_deref())?;
     Ok(cfg)
+}
+
+/// Pin the process-wide integer microkernel when a spec was given.
+/// Unlike the forgiving `MQ_KERNEL` env fallback, an *explicit* flag
+/// or config key fails loudly — a deploy that asked for vnni should
+/// not silently run scalar.
+fn apply_kernel(spec: Option<&str>) -> Result<()> {
+    use mergequant::quant::simd;
+    let Some(name) = spec else { return Ok(()) };
+    let kind = simd::KernelKind::parse(name).with_context(|| {
+        format!("bad kernel {name:?} (want scalar|avx2|vnni|neon)")
+    })?;
+    if !simd::force(kind) {
+        let avail: Vec<&str> =
+            simd::available().iter().map(|k| k.name()).collect();
+        bail!("kernel {name:?} is not available on this host \
+               (available: {})", avail.join("|"));
+    }
+    Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = serve_config(args)?;
     let engine = load_engine(&cfg.model, &cfg.method)?;
     println!("serving {} / {} (params ~{:.1} MB quantized, {} kernel \
-              thread(s), kv {}, arena {} blocks × {} tokens, prefix \
-              cache {})",
+              thread(s), {} microkernel, kv {}, arena {} blocks × {} \
+              tokens, prefix cache {})",
              cfg.model, cfg.method,
              engine.model.weight_bytes() as f64 / 1e6,
              mergequant::quant::parallel::ThreadPool::resolve(
                  cfg.scheduler.threads),
+             mergequant::quant::simd::active().kind().name(),
              cfg.scheduler.kv_dtype.as_str(),
              cfg.scheduler.total_blocks(),
              cfg.scheduler.block_tokens(),
@@ -351,6 +378,9 @@ fn mode_name(m: &mergequant::engine::QuantMode) -> &'static str {
         mergequant::engine::QuantMode::Dynamic { hadamard, .. } => {
             if *hadamard { "dynamic+had" } else { "dynamic" }
         }
+        mergequant::engine::QuantMode::ChannelStatic { .. } => {
+            "channel_static"
+        }
     }
 }
 
@@ -362,10 +392,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // by --record.
     let fast = args.get_bool("fast")
         || std::env::var("MQ_BENCH_FAST").is_ok();
+    apply_kernel(args.get("kernel"))?;
     let j = mergequant::bench::record::run_suite(fast);
     println!("{}", j.to_string());
+    // Regression visibility: diff the decode axis against the newest
+    // committed BENCH_<n>.json snapshot (if one is readable here).
+    if let Some(line) = mergequant::bench::record::delta_vs_previous(
+        &j, std::path::Path::new("."))
+    {
+        eprintln!("{line}");
+    }
     if args.get_bool("record") {
-        let out = args.get_or("out", "BENCH_8.json");
+        let out = args.get_or("out", "BENCH_9.json");
         std::fs::write(out, format!("{}\n", j.to_string()))
             .with_context(|| format!("writing {out}"))?;
         eprintln!("wrote {out}");

@@ -1,10 +1,17 @@
-//! Per-token dynamic quantization ops — the explicit "Quant"/"DeQuant"
-//! passes that dynamic W4A4 pays on every token (paper Fig. 4 red box,
-//! Table 6). These are deliberately separate memory passes, mirroring the
-//! PyTorch implementation the paper benchmarks against; the fused static
-//! path in the engine never runs them.
+//! Per-token dynamic quantization ops — **baseline only**. These are
+//! the explicit "Quant"/"DeQuant" passes that dynamic W4A4 pays on
+//! every token (paper Fig. 4 red box, Table 6), deliberately kept as
+//! separate memory passes mirroring the PyTorch implementation the
+//! paper benchmarks against. Nothing MergeQuant-static routes through
+//! here: the per-channel static path ([`QuantMode::ChannelStatic`],
+//! DESIGN.md §17) quantizes with compile-time multipliers and folds
+//! dequantization into the weight columns, and the BENCH
+//! `quant_overhead` axis exists to measure exactly this module's cost
+//! against it.
+//!
+//! [`QuantMode::ChannelStatic`]: crate::engine::QuantMode
 
-use super::{qmax_for_bits, quantize_value};
+use super::quantize_value;
 
 /// Per-token (per-row) absmax quantize: x (m, n) f32 → xq i8 + row scales.
 /// One full read pass + one write pass over the activation tensor.
@@ -26,32 +33,24 @@ pub fn per_token_quant(x: &[f32], m: usize, n: usize, qmax: i32, clip: f32,
     }
 }
 
-/// Explicit dequantize pass: y (m, j) i32 acc → f32 with row×col scales.
-/// (In the fused engine this is the GEMM epilogue; as a standalone pass it
-/// costs one more full write of the output — the dynamic-path reality.)
-pub fn dequant_pass(acc: &[i32], row_scale: &[f32], col_scale: &[f32],
-                    m: usize, j: usize, out: &mut [f32]) {
-    for i in 0..m {
-        for c in 0..j {
-            out[i * j + c] = acc[i * j + c] as f32 * row_scale[i] * col_scale[c];
-        }
-    }
-}
-
-/// Convenience: the full dynamic-quant step for a given bit width
-/// (allocating variant used by tests/benches).
-pub fn dynamic_quant_step(x: &[f32], m: usize, n: usize, bits: u32,
-                          clip: f32) -> (Vec<i8>, Vec<f32>) {
-    let mut xq = vec![0i8; m * n];
-    let mut scales = vec![0f32; m];
-    per_token_quant(x, m, n, qmax_for_bits(bits), clip, &mut xq, &mut scales);
-    (xq, scales)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::qmax_for_bits;
     use crate::util::rng::Rng;
+
+    /// Allocating wrapper over [`per_token_quant`] — test-only; the
+    /// `dequant_pass` it used to pair with was a dead export (the
+    /// fused engine runs the epilogue in `gemm::epilogue_sym`) and
+    /// was removed with it.
+    fn dynamic_quant_step(x: &[f32], m: usize, n: usize, bits: u32,
+                          clip: f32) -> (Vec<i8>, Vec<f32>) {
+        let mut xq = vec![0i8; m * n];
+        let mut scales = vec![0f32; m];
+        per_token_quant(x, m, n, qmax_for_bits(bits), clip, &mut xq,
+                        &mut scales);
+        (xq, scales)
+    }
 
     #[test]
     fn quant_dequant_bounded_error() {
@@ -84,14 +83,6 @@ mod tests {
         let (_, s1) = dynamic_quant_step(&x, 1, 2, 4, 1.0);
         let (_, s2) = dynamic_quant_step(&x, 1, 2, 4, 0.5);
         assert!((s2[0] - 0.5 * s1[0]).abs() < 1e-7);
-    }
-
-    #[test]
-    fn dequant_pass_matches() {
-        let acc = vec![14i32, -7];
-        let mut out = vec![0f32; 2];
-        dequant_pass(&acc, &[2.0], &[0.5, 1.0], 1, 2, &mut out);
-        assert_eq!(out, vec![14.0, -14.0]);
     }
 
     #[test]

@@ -55,13 +55,22 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
 }
 
 /// Exact i8·i8 → i32 dot product — the shared inner loop of every
-/// integer GEMM kernel (serial and parallel; accumulation order is fixed,
-/// which is what makes tiled execution bitwise deterministic).
+/// integer GEMM kernel (serial and parallel). Dispatches through the
+/// process-wide [`super::simd`] table; every variant is bit-identical
+/// to [`dot_i8_scalar`] (integer sums are associative and exact), so
+/// tiled execution stays bitwise deterministic for any kernel choice.
 #[inline]
 pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    super::simd::active().dot(a, b)
+}
+
+/// Portable scalar reference for [`dot_i8`] — the pinned oracle every
+/// SIMD variant must match bit for bit (`tests/simd_kernels.rs`).
+#[inline]
+pub fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
     // i16 products (i8·i8 always fits) accumulated in i32: LLVM lowers
-    // this reduction to vpmaddwd/vpdpwssd under AVX-512BW, giving the
-    // integer path its width advantage over the f32 path.
+    // this reduction to vpmaddwd/vpdpwssd under AVX-512BW even without
+    // the hand-written variants.
     let mut acc = 0i32;
     for (&x, &y) in a.iter().zip(b.iter()) {
         acc += (x as i16 * y as i16) as i32;
@@ -75,11 +84,12 @@ pub fn gemm_i8(xq: &[i8], wt: &[i8], m: usize, n: usize, j: usize,
     assert_eq!(xq.len(), m * n);
     assert_eq!(wt.len(), j * n);
     assert_eq!(acc.len(), m * j);
+    let kern = super::simd::active();
     for i in 0..m {
         let xr = &xq[i * n..(i + 1) * n];
         let ar = &mut acc[i * j..(i + 1) * j];
         for (c, o) in ar.iter_mut().enumerate() {
-            *o = dot_i8(xr, &wt[c * n..(c + 1) * n]);
+            *o = kern.dot(xr, &wt[c * n..(c + 1) * n]);
         }
     }
 }
@@ -96,11 +106,12 @@ pub fn gemm_i8_packed4(xq: &[i8], wpacked: &[u8], m: usize, n: usize,
     assert_eq!(wpacked.len(), j * row_bytes);
     assert_eq!(acc.len(), m * j);
     scratch.resize(n, 0);
+    let kern = super::simd::active();
     for c in 0..j {
         unpack_int4_into(&wpacked[c * row_bytes..(c + 1) * row_bytes],
                          scratch);
         for i in 0..m {
-            acc[i * j + c] = dot_i8(&xq[i * n..(i + 1) * n], scratch);
+            acc[i * j + c] = kern.dot(&xq[i * n..(i + 1) * n], scratch);
         }
     }
 }
@@ -155,6 +166,7 @@ pub fn gemm_i8_grouped(xq: &[i8], wt: &[i8], m: usize, n: usize, j: usize,
     let g = if group == 0 { n } else { group };
     let ngroups = n / g;
     assert_eq!(scale.len(), ngroups * j);
+    let kern = super::simd::active();
     for i in 0..m {
         let rs = row_scale.map_or(1.0, |r| r[i]);
         for c in 0..j {
@@ -163,7 +175,7 @@ pub fn gemm_i8_grouped(xq: &[i8], wt: &[i8], m: usize, n: usize, j: usize,
             let mut y = 0f32;
             for gi in 0..ngroups {
                 let lo = gi * g;
-                let acc = dot_i8(&xr[lo..lo + g], &wr[lo..lo + g]);
+                let acc = kern.dot(&xr[lo..lo + g], &wr[lo..lo + g]);
                 let corr = match zero {
                     Some(z) => {
                         let rsum: i32 =

@@ -24,8 +24,6 @@
 //!   in the inner loop and applies `v_scale[c]` **once per output
 //!   column** in the epilogue.
 
-use crate::quant::gemm::dot_i8;
-
 /// INT8 code range for the KV cache (symmetric, 8-bit).
 pub const KV_QMAX: i32 = 127;
 
@@ -153,6 +151,7 @@ pub fn attend_one_i8(q: &[f32], kq: &[i8], vq: &[i8], sc: &KvLayerScales,
     let inv_sqrt = 1.0 / (hd as f32).sqrt();
     scores.resize(klen, 0.0);
     qq.resize(hd, 0);
+    let kern = crate::quant::simd::active();
     for head in 0..n_heads {
         let lo = head * hd;
         // Static Q quantization: per-channel multipliers precomputed at
@@ -163,7 +162,7 @@ pub fn attend_one_i8(q: &[f32], kq: &[i8], vq: &[i8], sc: &KvLayerScales,
         let mut maxv = f32::NEG_INFINITY;
         for t in 0..klen {
             let kh = &kq[t * cache_stride + lo..t * cache_stride + lo + hd];
-            let s = dot_i8(qq, kh) as f32 * pre;
+            let s = kern.dot(qq, kh) as f32 * pre;
             scores[t] = s;
             maxv = maxv.max(s);
         }

@@ -18,6 +18,10 @@
 //!   worker pool plus cache-blocked, output-tiled variants of the f32 /
 //!   INT8 / packed-INT4 kernels, bitwise identical to the serial ones for
 //!   every thread count (DESIGN.md §7).
+//! * [`simd`] — runtime-dispatched SIMD variants of the i8·i8→i32 inner
+//!   loop (AVX2 / AVX-512 VNNI / NEON), selected once via feature probes
+//!   behind a dispatch table with the scalar loop as portable fallback;
+//!   every variant is bit-identical to scalar (DESIGN.md §17).
 
 #![warn(missing_docs)]
 
@@ -28,6 +32,7 @@ pub mod kv;
 pub mod pack;
 pub mod parallel;
 pub mod reconstruct;
+pub mod simd;
 
 /// Symmetric qmax for a bit width: 2^(b-1) − 1 (paper Eq. 1).
 #[inline]

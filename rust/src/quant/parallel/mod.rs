@@ -28,9 +28,10 @@ pub mod pool;
 pub use pool::{ScopedTask, ThreadPool};
 
 use super::gemm::{
-    dot_f32, dot_i8, gemm_f32, gemm_i8, gemm_i8_packed4, PACKED_MIN_ROWS,
+    dot_f32, gemm_f32, gemm_i8, gemm_i8_packed4, PACKED_MIN_ROWS,
 };
 use super::pack::unpack_int4_into;
+use super::simd;
 
 /// Row-block height: activation rows per task. 32 rows of int8
 /// activations at n = 4096 is 128 KB — fits L2 alongside the weight tile.
@@ -110,6 +111,9 @@ pub fn par_gemm_i8(pool: &ThreadPool, xq: &[i8], wt: &[i8], m: usize,
     }
     let tc = col_tile(j, pool.threads());
     let aptr = SendPtr(acc.as_mut_ptr());
+    // Hoisted once: tasks share the dispatch row, one relaxed load
+    // total instead of one per dot.
+    let kern = simd::active();
     let mut tasks: Vec<ScopedTask<'_>> = Vec::new();
     for r0 in (0..m).step_by(TILE_ROWS) {
         let r1 = (r0 + TILE_ROWS).min(m);
@@ -119,7 +123,7 @@ pub fn par_gemm_i8(pool: &ThreadPool, xq: &[i8], wt: &[i8], m: usize,
                 for i in r0..r1 {
                     let xr = &xq[i * n..(i + 1) * n];
                     for c in c0..c1 {
-                        let v = dot_i8(xr, &wt[c * n..(c + 1) * n]);
+                        let v = kern.dot(xr, &wt[c * n..(c + 1) * n]);
                         // SAFETY: (i, c) tiles are disjoint across tasks.
                         unsafe { *aptr.0.add(i * j + c) = v };
                     }
@@ -153,6 +157,7 @@ pub fn par_gemm_i8_packed4(pool: &ThreadPool, xq: &[i8], wpacked: &[u8],
         for c0 in (0..j).step_by(tc) {
             let c1 = (c0 + tc).min(j);
             tasks.push(Box::new(move || {
+                let kern = simd::active();
                 let mut wrow = vec![0i8; n];
                 for c in c0..c1 {
                     unpack_int4_into(
@@ -160,7 +165,7 @@ pub fn par_gemm_i8_packed4(pool: &ThreadPool, xq: &[i8], wpacked: &[u8],
                         &mut wrow,
                     );
                     for i in r0..r1 {
-                        let v = dot_i8(&xq[i * n..(i + 1) * n], &wrow);
+                        let v = kern.dot(&xq[i * n..(i + 1) * n], &wrow);
                         // SAFETY: (i, c) tiles are disjoint across tasks.
                         unsafe { *aptr.0.add(i * j + c) = v };
                     }
@@ -244,6 +249,7 @@ fn qlinear_tile(xq: &[i8], wt: &[i8], packed: Option<&[u8]>, n: usize,
                 use_packed: bool, r0: usize, r1: usize, c0: usize,
                 c1: usize, wrow: &mut [i8], out: SendPtr<f32>) {
     let row_bytes = n.div_ceil(2);
+    let kern = simd::active();
     for c in c0..c1 {
         let w: &[i8] = if use_packed {
             let p = packed.unwrap();
@@ -255,7 +261,7 @@ fn qlinear_tile(xq: &[i8], wt: &[i8], packed: Option<&[u8]>, n: usize,
         let cs = col_scale[c];
         let zc = zero.map(|z| z[c]);
         for i in r0..r1 {
-            let a = dot_i8(&xq[i * n..(i + 1) * n], w);
+            let a = kern.dot(&xq[i * n..(i + 1) * n], w);
             let corr = match zc {
                 Some(z) => a - xq_rowsum.unwrap()[i] * z,
                 None => a,

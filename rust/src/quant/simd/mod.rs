@@ -1,0 +1,458 @@
+//! Runtime-dispatched SIMD integer microkernels (DESIGN.md §17).
+//!
+//! Every integer GEMM in this crate bottoms out in the exact
+//! i8·i8 → i32 dot product. This module provides hardware variants of
+//! that inner loop — AVX2 and AVX-512 VNNI on x86_64, NEON on aarch64
+//! — behind a process-wide dispatch table selected **once** via
+//! feature probes, with the scalar loop
+//! ([`super::gemm::dot_i8_scalar`]) as the portable fallback and the
+//! pinned reference.
+//!
+//! The crucial property making a *global* dispatch choice sound: i8
+//! products fit i16, i16-pair sums fit i32, and i32 addition is
+//! associative and exact — so **every variant returns bit-identical
+//! results for all inputs** (pinned by the in-module property tests
+//! and by `tests/simd_kernels.rs`). A racy [`force`] mid-computation
+//! therefore cannot change any output bit; the §7 determinism
+//! contract holds per-kernel *and* across kernels.
+//!
+//! Selection order when `MQ_KERNEL` is unset: Vnni > Avx2 > Neon >
+//! Scalar. `MQ_KERNEL=scalar|avx2|vnni|neon` (env, or `--kernel` on
+//! the CLI) pins a variant; an unavailable or unknown request warns
+//! once on stderr and falls back to the best available.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which microkernel implementation backs a [`Kernel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum KernelKind {
+    /// Portable scalar reference loop (always available).
+    Scalar = 0,
+    /// AVX2: 32-lane widen + `vpmaddwd` pair-products (x86_64).
+    Avx2 = 1,
+    /// AVX-512 VNNI: 32-lane widen + `vpdpwssd` accumulate (x86_64).
+    Vnni = 2,
+    /// NEON: 16-lane `smull`/`sadalp` widening ladder (aarch64,
+    /// baseline target feature — no runtime probe needed).
+    Neon = 3,
+}
+
+impl KernelKind {
+    /// All kinds, in dispatch-preference order (best first).
+    pub const PREFERENCE: [KernelKind; 4] = [
+        KernelKind::Vnni,
+        KernelKind::Avx2,
+        KernelKind::Neon,
+        KernelKind::Scalar,
+    ];
+
+    /// Stable lowercase name (the `MQ_KERNEL` vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+            KernelKind::Vnni => "vnni",
+            KernelKind::Neon => "neon",
+        }
+    }
+
+    /// Parse an `MQ_KERNEL` / `--kernel` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelKind::Scalar),
+            "avx2" => Some(KernelKind::Avx2),
+            "vnni" => Some(KernelKind::Vnni),
+            "neon" => Some(KernelKind::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// A resolved dispatch-table row. Hot tile loops hoist one of these
+/// (`let kern = simd::active()`) and call through the stored function
+/// pointer, so dispatch costs one relaxed load per *tile*, not per
+/// dot.
+#[derive(Clone, Copy)]
+pub struct Kernel {
+    kind: KernelKind,
+    dot: fn(&[i8], &[i8]) -> i32,
+}
+
+impl Kernel {
+    /// Which variant this row dispatches to.
+    #[inline]
+    pub fn kind(&self) -> KernelKind {
+        self.kind
+    }
+
+    /// Exact i8·i8 → i32 dot product over `min(a.len(), b.len())`
+    /// elements — bitwise identical across all variants.
+    #[inline]
+    pub fn dot(&self, a: &[i8], b: &[i8]) -> i32 {
+        (self.dot)(a, b)
+    }
+}
+
+/// Build the dispatch row for `kind` without an availability check
+/// (callers guarantee the host supports it; kinds foreign to the
+/// compile target are unreachable behind [`available`] and map to the
+/// scalar loop defensively).
+fn row(kind: KernelKind) -> Kernel {
+    let dot: fn(&[i8], &[i8]) -> i32 = match kind {
+        KernelKind::Scalar => super::gemm::dot_i8_scalar,
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Avx2 => dot_avx2_entry,
+        #[cfg(target_arch = "x86_64")]
+        KernelKind::Vnni => dot_vnni_entry,
+        #[cfg(target_arch = "aarch64")]
+        KernelKind::Neon => neon::dot_i8_neon,
+        #[allow(unreachable_patterns)]
+        _ => super::gemm::dot_i8_scalar,
+    };
+    Kernel { kind, dot }
+}
+
+/// Variants usable on this host, scalar first (probe order, not
+/// preference order).
+pub fn available() -> Vec<KernelKind> {
+    let mut v = vec![KernelKind::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            v.push(KernelKind::Avx2);
+        }
+        if std::arch::is_x86_feature_detected!("avx512f")
+            && std::arch::is_x86_feature_detected!("avx512bw")
+            && std::arch::is_x86_feature_detected!("avx512vnni")
+        {
+            v.push(KernelKind::Vnni);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    v.push(KernelKind::Neon);
+    v
+}
+
+/// Dispatch row for `kind`, or `None` if this host can't run it.
+pub fn for_kind(kind: KernelKind) -> Option<Kernel> {
+    if available().contains(&kind) {
+        Some(row(kind))
+    } else {
+        None
+    }
+}
+
+/// The best variant this host supports (preference order).
+pub fn best() -> Kernel {
+    let avail = available();
+    for &k in KernelKind::PREFERENCE.iter() {
+        if avail.contains(&k) {
+            return row(k);
+        }
+    }
+    row(KernelKind::Scalar)
+}
+
+const UNINIT: u8 = u8::MAX;
+
+/// The process-wide choice; `UNINIT` until first use so the
+/// `MQ_KERNEL` probe happens lazily (tests can set the env var before
+/// the first kernel call).
+static ACTIVE: AtomicU8 = AtomicU8::new(UNINIT);
+
+/// The active dispatch row. First call probes `MQ_KERNEL` and the
+/// host features; later calls are one relaxed atomic load.
+#[inline]
+pub fn active() -> Kernel {
+    match ACTIVE.load(Ordering::Relaxed) {
+        0 => row(KernelKind::Scalar),
+        1 => row(KernelKind::Avx2),
+        2 => row(KernelKind::Vnni),
+        3 => row(KernelKind::Neon),
+        _ => init(),
+    }
+}
+
+/// Pin the process-wide dispatch to `kind`. Returns `false` (current
+/// choice unchanged) when the host can't run that variant. Safe at
+/// any time: all variants are bit-identical, so an in-flight GEMM
+/// observing the old row produces the same stream.
+pub fn force(kind: KernelKind) -> bool {
+    match for_kind(kind) {
+        Some(k) => {
+            ACTIVE.store(k.kind() as u8, Ordering::Relaxed);
+            true
+        }
+        None => false,
+    }
+}
+
+/// Cold-path initializer: honor `MQ_KERNEL` when set and available,
+/// otherwise pick [`best`], then publish the choice.
+#[cold]
+fn init() -> Kernel {
+    let kern = match std::env::var("MQ_KERNEL") {
+        Ok(name) => match KernelKind::parse(&name) {
+            Some(kind) => match for_kind(kind) {
+                Some(k) => k,
+                None => {
+                    let b = best();
+                    eprintln!(
+                        "[mergequant] MQ_KERNEL={name} not available \
+                         on this host; using {}",
+                        b.kind().name()
+                    );
+                    b
+                }
+            },
+            None => {
+                let b = best();
+                eprintln!(
+                    "[mergequant] MQ_KERNEL={name} unknown (want \
+                     scalar|avx2|vnni|neon); using {}",
+                    b.kind().name()
+                );
+                b
+            }
+        },
+        Err(_) => best(),
+    };
+    ACTIVE.store(kern.kind() as u8, Ordering::Relaxed);
+    kern
+}
+
+// ---------------------------------------------------------------- x86
+
+/// Safe entry for the AVX2 body; only reachable through [`for_kind`]
+/// after the runtime probe succeeded.
+#[cfg(target_arch = "x86_64")]
+fn dot_avx2_entry(a: &[i8], b: &[i8]) -> i32 {
+    // Safety: installed in the dispatch table only when
+    // is_x86_feature_detected!("avx2") returned true.
+    unsafe { x86::dot_i8_avx2(a, b) }
+}
+
+/// Safe entry for the AVX-512 VNNI body; only reachable through
+/// [`for_kind`] after the runtime probe succeeded.
+#[cfg(target_arch = "x86_64")]
+fn dot_vnni_entry(a: &[i8], b: &[i8]) -> i32 {
+    // Safety: installed only when avx512f+avx512bw+avx512vnni were
+    // all detected.
+    unsafe { x86::dot_i8_vnni(a, b) }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// AVX2 i8·i8 → i32 dot: per 32-byte step, sign-extend both
+    /// halves to i16×16, `vpmaddwd` pair-products into i32×8, add
+    /// into the accumulator. Exact: |i8·i8| ≤ 16384 fits i16's
+    /// product slot inside `vpmaddwd` (which widens to i32 before
+    /// the pair add), and the per-lane i32 accumulation is exact for
+    /// any realistic reduction length (≤ 2·32258 per step).
+    ///
+    /// # Safety
+    /// Requires the `avx2` target feature at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len().min(b.len());
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let va = _mm256_loadu_si256(pa.add(i) as *const __m256i);
+            let vb = _mm256_loadu_si256(pb.add(i) as *const __m256i);
+            let alo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(va));
+            let ahi = _mm256_cvtepi8_epi16(
+                _mm256_extracti128_si256::<1>(va),
+            );
+            let blo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(vb));
+            let bhi = _mm256_cvtepi8_epi16(
+                _mm256_extracti128_si256::<1>(vb),
+            );
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(alo, blo));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(ahi, bhi));
+            i += 32;
+        }
+        // Horizontal sum of the 8 i32 lanes.
+        let lo = _mm256_castsi256_si128(acc);
+        let hi = _mm256_extracti128_si256::<1>(acc);
+        let s = _mm_add_epi32(lo, hi);
+        let s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32::<1>(s));
+        let mut total = _mm_cvtsi128_si32(s);
+        while i < n {
+            total += *pa.add(i) as i32 * *pb.add(i) as i32;
+            i += 1;
+        }
+        total
+    }
+
+    /// AVX-512 VNNI i8·i8 → i32 dot: per 32-byte step, sign-extend
+    /// to i16×32 in a zmm register and fold with one `vpdpwssd`
+    /// (multiply i16 pairs, widen, accumulate i32). Exact by the
+    /// same argument as the AVX2 path.
+    ///
+    /// # Safety
+    /// Requires `avx512f`, `avx512bw` and `avx512vnni` at runtime.
+    #[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+    pub unsafe fn dot_i8_vnni(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len().min(b.len());
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm512_setzero_si512();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let va = _mm512_cvtepi8_epi16(_mm256_loadu_si256(
+                pa.add(i) as *const __m256i,
+            ));
+            let vb = _mm512_cvtepi8_epi16(_mm256_loadu_si256(
+                pb.add(i) as *const __m256i,
+            ));
+            acc = _mm512_dpwssd_epi32(acc, va, vb);
+            i += 32;
+        }
+        let mut total = _mm512_reduce_add_epi32(acc);
+        while i < n {
+            total += *pa.add(i) as i32 * *pb.add(i) as i32;
+            i += 1;
+        }
+        total
+    }
+}
+
+// --------------------------------------------------------------- arm
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// NEON i8·i8 → i32 dot: per 16-byte step, widening multiplies
+    /// (`smull`/`smull2`, i8→i16) then pairwise-add-accumulate into
+    /// the i32 accumulator (`sadalp`). NEON is a baseline feature of
+    /// aarch64-unknown-linux-gnu, so no runtime probe or
+    /// target_feature gate is needed. Exact: products fit i16,
+    /// `sadalp` widens to i32 before adding (≤ 4·16129 per lane per
+    /// step).
+    pub fn dot_i8_neon(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len().min(b.len());
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        // Safety: all loads are bounded by `n` ≤ both slice lengths;
+        // NEON is statically enabled on this target.
+        unsafe {
+            let mut acc = vdupq_n_s32(0);
+            let mut i = 0usize;
+            while i + 16 <= n {
+                let va = vld1q_s8(pa.add(i));
+                let vb = vld1q_s8(pb.add(i));
+                let lo = vmull_s8(vget_low_s8(va), vget_low_s8(vb));
+                let hi = vmull_high_s8(va, vb);
+                acc = vpadalq_s16(acc, lo);
+                acc = vpadalq_s16(acc, hi);
+                i += 16;
+            }
+            let mut total = vaddvq_s32(acc);
+            while i < n {
+                total += *pa.add(i) as i32 * *pb.add(i) as i32;
+                i += 1;
+            }
+            total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gemm::dot_i8_scalar;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn names_roundtrip() {
+        for k in KernelKind::PREFERENCE {
+            assert_eq!(KernelKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(KernelKind::parse("AVX2"), Some(KernelKind::Avx2));
+        assert_eq!(KernelKind::parse("sse9"), None);
+    }
+
+    #[test]
+    fn scalar_always_available_and_active_resolves() {
+        assert!(available().contains(&KernelKind::Scalar));
+        assert!(for_kind(KernelKind::Scalar).is_some());
+        // active() must resolve to one of the available variants.
+        let k = active().kind();
+        assert!(available().contains(&k), "active {k:?} not available");
+    }
+
+    /// Every host-available variant is bitwise the scalar reference,
+    /// over random contents and lengths including sub-lane tails and
+    /// the empty dot.
+    #[test]
+    fn property_all_variants_match_scalar() {
+        for kind in available() {
+            let kern = for_kind(kind).expect("listed as available");
+            crate::util::proptest::check(
+                97,
+                200,
+                |r| {
+                    let n = r.usize(0, 200);
+                    let a: Vec<i8> = (0..n)
+                        .map(|_| r.usize(0, 256) as u8 as i8)
+                        .collect();
+                    let b: Vec<i8> = (0..n)
+                        .map(|_| r.usize(0, 256) as u8 as i8)
+                        .collect();
+                    (a, b)
+                },
+                |(a, b)| {
+                    let want = dot_i8_scalar(a, b);
+                    let got = kern.dot(a, b);
+                    if got == want {
+                        Ok(())
+                    } else {
+                        Err(format!(
+                            "{}: {got} != scalar {want} (n={})",
+                            kind.name(),
+                            a.len()
+                        ))
+                    }
+                },
+            );
+        }
+    }
+
+    /// Extreme values (-128 everywhere) stay exact: the i16 product
+    /// slot holds 16384 and the pair sums fit i32.
+    #[test]
+    fn extremes_exact() {
+        for kind in available() {
+            let kern = for_kind(kind).expect("available");
+            for n in [0usize, 1, 15, 16, 17, 31, 32, 33, 160, 4096] {
+                let a = vec![-128i8; n];
+                let b = vec![-128i8; n];
+                assert_eq!(kern.dot(&a, &b), 16384 * n as i32,
+                           "{} n={n}", kind.name());
+                let c = vec![127i8; n];
+                assert_eq!(kern.dot(&a, &c), -16256 * n as i32,
+                           "{} n={n}", kind.name());
+            }
+        }
+    }
+
+    /// `force` installs available variants and rejects foreign ones;
+    /// restore the best kernel afterwards so test order can't matter.
+    #[test]
+    fn force_respects_availability() {
+        for kind in available() {
+            assert!(force(kind));
+            assert_eq!(active().kind(), kind);
+        }
+        #[cfg(target_arch = "x86_64")]
+        assert!(!force(KernelKind::Neon));
+        #[cfg(target_arch = "aarch64")]
+        assert!(!force(KernelKind::Avx2));
+        force(best().kind());
+    }
+}

@@ -25,6 +25,16 @@ impl Shrink for usize {
     }
 }
 
+impl Shrink for i8 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            Vec::new()
+        } else {
+            vec![0, self / 2]
+        }
+    }
+}
+
 impl Shrink for u32 {
     fn shrink(&self) -> Vec<Self> {
         let mut out = Vec::new();

@@ -1,0 +1,192 @@
+//! SIMD microkernel equivalence suite (DESIGN.md §17): every dispatch
+//! variant this host can run must be **bitwise identical** to the
+//! pinned scalar reference — at the dot level (ragged tails shorter
+//! than one SIMD lane, the empty dot, mismatched slice lengths), at
+//! the GEMM level (m = 1 decode GEMV rows and odd packed-INT4
+//! reduction lengths included), and end-to-end (one shared-prefix
+//! serving trace plus an int8-KV decode replayed under every forced
+//! kernel, on the channel-static W4A4 engine). The CI engine matrix
+//! additionally runs this whole binary with `MQ_KERNEL=scalar`
+//! exported, covering the dispatcher's env-var path.
+
+use mergequant::bench::synthetic_model;
+use mergequant::coordinator::{
+    GenerationParams, Request, Scheduler, SchedulerConfig,
+};
+use mergequant::engine::{Engine, KvDtype};
+use mergequant::quant::gemm::{dot_i8_scalar, gemm_i8, gemm_i8_packed4};
+use mergequant::quant::pack::pack_int4;
+use mergequant::quant::parallel::{
+    par_gemm_i8, par_gemm_i8_packed4, ThreadPool,
+};
+use mergequant::quant::simd;
+use mergequant::util::rng::Rng;
+
+/// Tests that `force()` the process-wide dispatch run serialized:
+/// all variants are bit-identical so a concurrent force cannot change
+/// any *output*, but `active().kind()` assertions would race.
+static KERNEL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Full-range i8 operands — the activation side is not int4-bounded.
+fn full_i8(rng: &mut Rng, len: usize) -> Vec<i8> {
+    (0..len).map(|_| rng.usize(0, 256) as u8 as i8).collect()
+}
+
+#[test]
+fn dot_variants_bitwise_match_scalar_on_ragged_lengths() {
+    let mut rng = Rng::new(0x51D0);
+    let lens = [0usize, 1, 2, 3, 7, 8, 15, 16, 17, 31, 32, 33, 63, 64,
+                65, 100, 255, 256, 257, 1000];
+    for kind in simd::available() {
+        let kern = simd::for_kind(kind).expect("listed as available");
+        for &n in &lens {
+            let a = full_i8(&mut rng, n);
+            // One operand 5 longer: every variant must share the
+            // scalar zip's min-length truncation semantics.
+            let b = full_i8(&mut rng, n + 5);
+            assert_eq!(kern.dot(&a, &b), dot_i8_scalar(&a, &b),
+                       "{} n={n} ragged", kind.name());
+            assert_eq!(kern.dot(&a, &b[..n]), dot_i8_scalar(&a, &b[..n]),
+                       "{} n={n}", kind.name());
+        }
+    }
+}
+
+#[test]
+fn gemm_bitwise_identical_under_every_forced_kernel() {
+    let _g = lock();
+    let prev = simd::active().kind();
+    let mut rng = Rng::new(0x6E33);
+    // m = 1 is the decode GEMV row; odd/prime n exercises packed-INT4
+    // half-byte tails; (12, 255, 40) engages the packed row path.
+    for (m, n, j) in [(1usize, 97usize, 33usize), (5, 31, 7),
+                      (8, 130, 17), (12, 255, 40)] {
+        let xq = full_i8(&mut rng, m * n);
+        let wt: Vec<i8> =
+            (0..j * n).map(|_| rng.usize(0, 15) as i8 - 7).collect();
+        let mut packed = Vec::new();
+        for c in 0..j {
+            packed.extend(pack_int4(&wt[c * n..(c + 1) * n]));
+        }
+        assert!(simd::force(simd::KernelKind::Scalar));
+        let mut want = vec![0i32; m * j];
+        gemm_i8(&xq, &wt, m, n, j, &mut want);
+        let mut scratch = Vec::new();
+        let mut want4 = vec![0i32; m * j];
+        gemm_i8_packed4(&xq, &packed, m, n, j, &mut scratch, &mut want4);
+        assert_eq!(want, want4, "scalar packed self-check m{m} n{n} j{j}");
+        let pool = ThreadPool::new(4);
+        for kind in simd::available() {
+            assert!(simd::force(kind));
+            let mut got = vec![0i32; m * j];
+            gemm_i8(&xq, &wt, m, n, j, &mut got);
+            assert_eq!(got, want, "{} gemm_i8 m{m} n{n} j{j}",
+                       kind.name());
+            let mut got4 = vec![0i32; m * j];
+            gemm_i8_packed4(&xq, &packed, m, n, j, &mut scratch,
+                            &mut got4);
+            assert_eq!(got4, want, "{} packed4 m{m} n{n} j{j}",
+                       kind.name());
+            let mut gotp = vec![0i32; m * j];
+            par_gemm_i8(&pool, &xq, &wt, m, n, j, &mut gotp);
+            assert_eq!(gotp, want, "{} par_gemm_i8 m{m} n{n} j{j}",
+                       kind.name());
+            let mut gotp4 = vec![0i32; m * j];
+            par_gemm_i8_packed4(&pool, &xq, &packed, m, n, j,
+                                &mut scratch, &mut gotp4);
+            assert_eq!(gotp4, want, "{} par packed m{m} n{n} j{j}",
+                       kind.name());
+        }
+    }
+    simd::force(prev);
+}
+
+/// Shared-prefix fleet over the channel-static W4A4 engine — the
+/// serving trace whose streams and scheduling counters every kernel
+/// must reproduce exactly.
+fn trace_scheduler() -> Scheduler {
+    Scheduler::new(
+        Engine::new(synthetic_model("mergequant_static", 64, 128, 2, 96)),
+        SchedulerConfig {
+            max_batch: 8,
+            kv_slabs: 0,
+            kv_block: 16,
+            kv_blocks: 24,
+            max_seq: 256,
+            max_prefills_per_iter: 1,
+            queue_cap: 64,
+            prefill_chunk: 0,
+            threads: 2,
+            kv_dtype: KvDtype::F32,
+            prefix_cache: true,
+            prefix_cache_blocks: 0,
+            max_decode_latency: 0,
+        },
+    )
+}
+
+fn run_trace() -> (Vec<Vec<u32>>, u64) {
+    let mut sched = trace_scheduler();
+    for i in 0..4u64 {
+        let mut prompt: Vec<u32> =
+            (0..48u32).map(|t| 3 + (t * 5) % 90).collect();
+        prompt.extend((0..6u32).map(|t| 7 + (t * 11 + i as u32) % 90));
+        sched.submit(Request::new(i, prompt, 8)).unwrap();
+    }
+    let mut rs = sched.run_to_completion();
+    rs.sort_by_key(|r| r.id);
+    for r in &rs {
+        assert!(r.error.is_none(), "lane failed: {:?}", r.error);
+    }
+    (rs.into_iter().map(|r| r.tokens).collect(),
+     sched.metrics.prefill_rows)
+}
+
+#[test]
+fn serving_trace_is_kernel_invariant() {
+    let _g = lock();
+    let prev = simd::active().kind();
+    assert!(simd::force(simd::KernelKind::Scalar));
+    let (base_streams, base_rows) = run_trace();
+    for kind in simd::available() {
+        assert!(simd::force(kind));
+        let (streams, rows) = run_trace();
+        assert_eq!(streams, base_streams,
+                   "kernel {} changed stream content", kind.name());
+        assert_eq!(rows, base_rows,
+                   "kernel {} changed scheduling", kind.name());
+    }
+    simd::force(prev);
+}
+
+#[test]
+fn int8_kv_decode_is_kernel_invariant() {
+    // Covers the attention-side dot (paged int8 KV) under every
+    // kernel, not just the linear-layer GEMMs.
+    let _g = lock();
+    let prev = simd::active().kind();
+    let model = synthetic_model("mergequant_static", 64, 128, 2, 96);
+    let prompt: Vec<u32> = (0..24u32).map(|i| 3 + (i * 7) % 90).collect();
+    let sampler = GenerationParams::greedy(12).sampler();
+    let mut base: Option<Vec<u32>> = None;
+    for kind in simd::available() {
+        assert!(simd::force(kind));
+        let mut engine = Engine::new(model.clone());
+        engine.ensure_kv_scales().unwrap();
+        let out = engine
+            .generate_seeded(&prompt, 12, prompt.len() + 20,
+                             KvDtype::Int8, &sampler)
+            .unwrap();
+        match &base {
+            None => base = Some(out),
+            Some(b) => assert_eq!(&out, b,
+                                  "kernel {} changed int8-KV decode",
+                                  kind.name()),
+        }
+    }
+    simd::force(prev);
+}
