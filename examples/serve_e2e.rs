@@ -90,6 +90,9 @@ fn api_demo(threads: usize) -> anyhow::Result<()> {
             prefix_cache: true,
             prefix_cache_blocks: 64,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     );
 
@@ -197,6 +200,9 @@ fn preemption_demo(threads: usize) -> anyhow::Result<()> {
             prefix_cache: false,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     );
     // Low-class background request with an impossible deadline (counts
@@ -229,6 +235,63 @@ fn preemption_demo(threads: usize) -> anyhow::Result<()> {
              rs[0].tokens.len());
     println!("burst   [id 2]: class 2, {} tokens, admitted into the \
               victim's blocks", rs[1].tokens.len());
+    println!("scheduler: {}\n", sched.metrics.report());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Part 1b½: self-speculative decode demo (DESIGN.md §18)
+// ---------------------------------------------------------------------
+
+/// One greedy request decoded through the speculative lane: a
+/// full-depth self-draft (`draft_layers: 0`) proposes `draft_k` tokens
+/// per tick and the target verifies them in one All-rows span. The
+/// stream must be **bitwise** the non-speculative `Engine::generate`
+/// golden, the full-depth draft must be accepted wholesale
+/// (acceptance_rate exactly 1.0 — the draft IS the target), and the
+/// report line at the end is what CI greps `acceptance_rate=` from.
+fn speculative_demo(threads: usize) -> anyhow::Result<()> {
+    let (model, real) = build_model("mergequant")?;
+    println!("== self-speculative decode demo ({}) ==",
+             if real { "mergequant bundle" } else { "synthetic weights" });
+    let prompt: Vec<u32> = (0..24).map(|i| 3 + (i * 7) % 90).collect();
+    let golden = Engine::new(model).generate(&prompt, 16, 64)?;
+
+    let mut sched = Scheduler::new(
+        Engine::with_threads(build_model("mergequant")?.0, threads),
+        SchedulerConfig {
+            max_batch: 2,
+            kv_slabs: 0,
+            kv_block: 16,
+            kv_blocks: 8,
+            max_seq: 64,
+            max_prefills_per_iter: 2,
+            queue_cap: 16,
+            prefill_chunk: 0,
+            threads,
+            kv_dtype: mergequant::engine::KvDtype::F32,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
+            max_decode_latency: 0,
+            speculative: true,
+            draft_k: 4,
+            draft_layers: 0,
+        },
+    );
+    sched.submit(Request::new(1, prompt, 16))
+        .map_err(|r| anyhow::anyhow!("submit {} rejected", r.id))?;
+    let rs = sched.run_to_completion();
+    assert_eq!(rs.len(), 1);
+    assert_eq!(rs[0].tokens, golden,
+               "speculation must be bitwise invisible in the stream");
+    assert!((sched.metrics.acceptance_rate() - 1.0).abs() < 1e-12,
+            "a full-depth self-draft must be accepted wholesale");
+    assert!(sched.metrics.tokens_per_forward() > 1.0,
+            "speculation must beat one token per target forward");
+    println!("greedy  [id 1]: {} tokens via draft_k=4 speculation — \
+              matches Engine::generate golden ✓ ({:.2} tokens per \
+              target forward)",
+             rs[0].tokens.len(), sched.metrics.tokens_per_forward());
     println!("scheduler: {}\n", sched.metrics.report());
     Ok(())
 }
@@ -267,6 +330,9 @@ fn router_demo(threads: usize) -> anyhow::Result<()> {
         prefix_cache: true,
         prefix_cache_blocks: 0,
         max_decode_latency: 0,
+        speculative: false,
+        draft_k: 0,
+        draft_layers: 0,
     };
     let router = Router::start(RouterConfig::new(2, cfg), |i| {
         Engine::new(build_model("mergequant")
@@ -394,6 +460,9 @@ fn drive(method: &str, n_requests: usize, n_clients: usize,
             prefix_cache: false,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     ));
     let gateway = TcpGateway::start(server.clone(), 0)?;
@@ -489,6 +558,7 @@ fn main() -> anyhow::Result<()> {
 
     api_demo(kernel_threads)?;
     preemption_demo(kernel_threads)?;
+    speculative_demo(kernel_threads)?;
     router_demo(kernel_threads)?;
 
     if !artifacts_dir().join("models/tiny-llama-s/mergequant.qmod").exists() {

@@ -263,6 +263,9 @@ fn main() {
                     prefix_cache: false,
                     prefix_cache_blocks: 0,
                     max_decode_latency: 0,
+                    speculative: false,
+                    draft_k: 0,
+                    draft_layers: 0,
                 },
             );
             let vocab = sched.engine().config().vocab as u32;
@@ -324,6 +327,9 @@ fn main() {
                     prefix_cache: prefix,
                     prefix_cache_blocks: 0,
                     max_decode_latency: 0,
+                    speculative: false,
+                    draft_k: 0,
+                    draft_layers: 0,
                 },
             );
             let vocab = sched.engine().config().vocab as u32;
@@ -391,6 +397,9 @@ fn main() {
                     prefix_cache: false,
                     prefix_cache_blocks: 0,
                     max_decode_latency: 0,
+                    speculative: false,
+                    draft_k: 0,
+                    draft_layers: 0,
                 },
             );
             let vocab = sched.engine().config().vocab as u32;

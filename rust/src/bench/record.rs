@@ -4,9 +4,11 @@
 //! PR-6 shared-prefix fleet axis (prefix cache on vs off against the
 //! PR-5 paged baseline, DESIGN.md §14), the PR-7 bursty
 //! mixed-priority axis (preemptive classes on vs off, DESIGN.md §15),
-//! and the PR-9 kernel axis (scalar vs best-SIMD GEMM GOPS + decode
+//! the PR-9 kernel axis (scalar vs best-SIMD GEMM GOPS + decode
 //! tok/s, plus the dynamic-vs-channel-static quant-overhead arms,
-//! DESIGN.md §17).
+//! DESIGN.md §17), and the PR-10 speculative axis (self-speculative
+//! decode at draft_k ∈ {2, 4, 8} against the plain single-token
+//! baseline, DESIGN.md §18).
 //!
 //! Counter-valued fields (prefill rows, hit rate, matched tokens, peak
 //! concurrency, preemption counts, TTFT in forward calls) are
@@ -56,6 +58,15 @@ const CHAT_MAX_NEW: usize = 8;
 const TP_REQS: usize = 16;
 const TP_PROMPT_TOKS: usize = 48;
 const TP_MAX_NEW: usize = 16;
+
+/// Speculative-axis geometry (DESIGN.md §18): one greedy lane, a
+/// 24-token prompt and 16 new tokens. With a full-depth self-draft
+/// (`draft_layers: 0`) the draft IS the target, so every proposal is
+/// accepted and the counters are exact functions of (prompt, max_new,
+/// draft_k): 15 post-prefill tokens land in ⌈15/(k+1)⌉ target
+/// forwards.
+const SPEC_PROMPT_TOKS: usize = 24;
+const SPEC_MAX_NEW: usize = 16;
 
 fn method_engine(method: &str) -> Engine {
     Engine::new(synthetic_model(method, 64, 128, 2, 96))
@@ -277,6 +288,9 @@ fn fleet_scheduler(prefix: bool) -> Scheduler {
             prefix_cache: prefix,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     )
 }
@@ -303,6 +317,9 @@ fn preempt_scheduler() -> Scheduler {
             prefix_cache: false,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     )
 }
@@ -381,6 +398,9 @@ fn router_replica_scheduler(replicas: usize) -> Scheduler {
         prefix_cache: true,
         prefix_cache_blocks: 0,
         max_decode_latency: 0,
+        speculative: false,
+        draft_k: 0,
+        draft_layers: 0,
     };
     let per = RouterConfig::new(replicas, whole_box).per_replica();
     Scheduler::new(method_engine("mergequant"), per)
@@ -584,6 +604,69 @@ fn fleet_run(prefix: bool) -> Json {
     ])
 }
 
+/// Single-lane arena for the speculative axis: `draft_k == 0` is the
+/// plain (non-speculative) PR-9 decode baseline; any other k turns the
+/// full-depth self-draft lane on.
+fn spec_scheduler(draft_k: usize) -> Scheduler {
+    let engine = method_engine("mergequant");
+    Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 2,
+            kv_slabs: 0,
+            kv_block: 16,
+            kv_blocks: 8,
+            max_seq: 64,
+            max_prefills_per_iter: 1,
+            queue_cap: 16,
+            prefill_chunk: 0,
+            threads: 1,
+            kv_dtype: KvDtype::F32,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
+            max_decode_latency: 0,
+            speculative: draft_k > 0,
+            draft_k,
+            draft_layers: 0,
+        },
+    )
+}
+
+/// One speculative-axis arm; returns the row plus the emitted stream
+/// (speculation must be bitwise invisible — every arm is compared to
+/// the `draft_k == 0` baseline). Deterministic fields: at full-depth
+/// self-draft acceptance is exactly 1.0, `decode_forwards` is
+/// ⌈15/(k+1)⌉ (15, 5, 3, 2 for k = 0, 2, 4, 8) and `draft_forwards`
+/// is one per proposed token (0, 10, 12, 13); only `tok_s` (and the
+/// derived `decode_speedup`) are wall-clock.
+fn spec_run(draft_k: usize) -> (Json, Vec<u32>) {
+    let mut sched = spec_scheduler(draft_k);
+    let prompt: Vec<u32> = (0..SPEC_PROMPT_TOKS)
+        .map(|t| 3 + (t as u32 * 7) % 90)
+        .collect();
+    let t0 = Instant::now();
+    sched.submit(Request::new(0, prompt, SPEC_MAX_NEW)).unwrap();
+    let rs = sched.run_to_completion();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(rs.len(), 1);
+    assert!(rs[0].error.is_none(),
+            "speculative lane failed: {:?}", rs[0].error);
+    let m = &sched.metrics;
+    let row = obj(vec![
+        ("draft_k", num(draft_k as f64)),
+        ("decode_forwards", num(m.decode_iterations as f64)),
+        ("draft_forwards", num(m.draft_forwards as f64)),
+        ("verify_forwards", num(m.verify_forwards as f64)),
+        ("draft_proposed", num(m.draft_proposed as f64)),
+        ("draft_accepted", num(m.draft_accepted as f64)),
+        ("acceptance_rate", num(m.acceptance_rate())),
+        ("tokens_per_forward", num(m.tokens_per_forward())),
+        ("generated", num(m.generated_tokens as f64)),
+        ("tok_s", num(m.generated_tokens as f64 / wall)),
+    ]);
+    (row, rs[0].tokens.clone())
+}
+
 /// Run the whole suite; `fast` shrinks the wall-clock axes only — the
 /// deterministic counters are identical either way.
 pub fn run_suite(fast: bool) -> Json {
@@ -621,15 +704,45 @@ pub fn run_suite(fast: bool) -> Json {
         assert_eq!(st, &&tp_streams,
                    "sharding changed stream content ({arm})");
     }
+    // Speculative axis (DESIGN.md §18): every arm's stream must be
+    // bitwise the non-speculative baseline's — the suite is its own
+    // determinism witness here too.
+    let (sp_base, sp_stream) = spec_run(0);
+    let base_tok_s =
+        sp_base.get("tok_s").and_then(Json::as_f64).unwrap_or(0.0);
+    let mut sp_arms = Vec::new();
+    for k in [2usize, 4, 8] {
+        let (mut row, st) = spec_run(k);
+        assert_eq!(st, sp_stream,
+                   "speculation changed stream content (draft_k={k})");
+        let tok_s =
+            row.get("tok_s").and_then(Json::as_f64).unwrap_or(0.0);
+        if let Json::Obj(m) = &mut row {
+            m.insert("decode_speedup".into(),
+                     num(if base_tok_s > 0.0 {
+                         tok_s / base_tok_s
+                     } else {
+                         0.0
+                     }));
+        }
+        sp_arms.push(row);
+    }
     obj(vec![
         ("suite", s("mergequant-bench")),
-        ("version", num(9.0)),
+        ("version", num(10.0)),
         ("fast", Json::Bool(fast)),
         ("model", s("synthetic d64 ff128 L2 v96")),
         ("methods", Json::Arr(methods)),
         ("memory", memory_rows()),
         ("kernels", kernel_axis(fast)),
         ("quant_overhead", quant_overhead_axis(pf, dec)),
+        ("speculative", obj(vec![
+            ("prompt_toks", num(SPEC_PROMPT_TOKS as f64)),
+            ("max_new", num(SPEC_MAX_NEW as f64)),
+            ("draft_layers", num(0.0)),
+            ("baseline", sp_base),
+            ("arms", Json::Arr(sp_arms)),
+        ])),
         ("prefix_fleet", obj(vec![
             ("prefix_toks", num(PREFIX_TOKS as f64)),
             ("suffix_toks", num(SUFFIX_TOKS as f64)),
@@ -827,6 +940,44 @@ mod tests {
         let v7 = obj(vec![("version", num(7.0))]);
         assert!(delta_vs_previous(&v7, &dir).is_none());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn speculative_axis_counters_are_the_committed_numbers() {
+        // Pin the deterministic fields the committed BENCH_10.json
+        // carries. One lane, 24-token prompt, 16 new tokens: the
+        // prefill emits the first token, the remaining 15 land in
+        // ⌈15/(k+1)⌉ verify forwards (the last tick clamps its draft
+        // to the tokens left), every full-depth proposal is accepted,
+        // and the stream is bitwise the non-speculative baseline's.
+        let f = |j: &Json, k: &str| {
+            j.get(k).and_then(Json::as_f64).unwrap()
+        };
+        let (base, stream) = spec_run(0);
+        assert_eq!(f(&base, "decode_forwards"), 15.0);
+        assert_eq!(f(&base, "draft_forwards"), 0.0);
+        assert_eq!(f(&base, "tokens_per_forward"), 1.0);
+        assert_eq!(f(&base, "generated"), 16.0);
+        for (k, want_dec, want_draft, want_tpf) in
+            [(2usize, 5.0, 10.0, 3.0),
+             (4, 3.0, 12.0, 5.0),
+             (8, 2.0, 13.0, 7.5)]
+        {
+            let (row, st) = spec_run(k);
+            assert_eq!(st, stream,
+                       "speculation changed the stream (draft_k={k})");
+            assert_eq!(f(&row, "decode_forwards"), want_dec,
+                       "decode_forwards at draft_k={k}");
+            assert_eq!(f(&row, "verify_forwards"), want_dec,
+                       "verify_forwards at draft_k={k}");
+            assert_eq!(f(&row, "draft_forwards"), want_draft,
+                       "draft_forwards at draft_k={k}");
+            assert_eq!(f(&row, "acceptance_rate"), 1.0,
+                       "full-depth self-draft at draft_k={k}");
+            assert_eq!(f(&row, "tokens_per_forward"), want_tpf,
+                       "tokens_per_forward at draft_k={k}");
+            assert_eq!(f(&row, "generated"), 16.0);
+        }
     }
 
     #[test]

@@ -152,6 +152,16 @@ impl ServeConfig {
                     .and_then(Json::as_usize)
                     .map(|v| v as u64)
                     .unwrap_or(d.max_decode_latency),
+                // Self-speculative decoding (DESIGN.md §18): draft
+                // lane on/off, proposal length, and draft depth.
+                speculative: s.get("speculative")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(d.speculative),
+                draft_k: s.get("draft_k").and_then(Json::as_usize)
+                    .unwrap_or(d.draft_k),
+                draft_layers: s.get("draft_layers")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(d.draft_layers),
             };
         }
         cfg
@@ -257,6 +267,22 @@ mod tests {
         warn_kv_slabs_deprecated("first site");
         assert!(!warn_kv_slabs_deprecated("second site"),
                 "deprecation note must be once-per-process");
+    }
+
+    #[test]
+    fn speculative_knobs_parse_and_default_off() {
+        let c = ServeConfig::from_json(&Json::parse(
+            r#"{"scheduler":{"speculative":true,"draft_k":4,
+                             "draft_layers":1}}"#,
+        ).unwrap());
+        assert!(c.scheduler.speculative);
+        assert_eq!(c.scheduler.draft_k, 4);
+        assert_eq!(c.scheduler.draft_layers, 1);
+        let d = ServeConfig::from_json(&Json::parse("{}").unwrap());
+        assert!(!d.scheduler.speculative,
+                "speculative decoding must be opt-in");
+        assert_eq!(d.scheduler.draft_k, 0);
+        assert_eq!(d.scheduler.draft_layers, 0);
     }
 
     #[test]

@@ -44,6 +44,14 @@ pub struct ReplicaStats {
     pub prefix_lookups: u64,
     /// Cumulative prefix-cache hits (monotonic).
     pub prefix_hits: u64,
+    /// Active SIMD microkernel on this replica (`scalar`/`avx2`/
+    /// `vnni`/`neon`) — surfaces per-host dispatch through the
+    /// gateway's `stats` frame so a mixed fleet is debuggable without
+    /// shelling into each box.
+    pub kernel: String,
+    /// Quantization mode of the replica's loaded bundle
+    /// (`static`/`channel_static`/…, `fp` for an unquantized model).
+    pub quant_mode: String,
 }
 
 impl ReplicaStats {
@@ -104,6 +112,8 @@ impl ReplicaStats {
              num(self.requests_completed as f64)),
             ("generated_tokens", num(self.generated_tokens as f64)),
             ("prefix_hit_rate", num(self.prefix_hit_rate())),
+            ("kernel", Json::Str(self.kernel.clone())),
+            ("quant_mode", Json::Str(self.quant_mode.clone())),
         ])
     }
 }
@@ -251,6 +261,21 @@ pub struct Metrics {
     /// Peak KV bytes saved by sharing: table entries beyond the
     /// distinct physical blocks behind them, times block bytes.
     pub prefix_bytes_saved: u64,
+    /// Draft-engine forward calls (one per proposed token; DESIGN.md
+    /// §18). Zero whenever speculation is off — the gate for the
+    /// speculative report tail.
+    pub draft_forwards: u64,
+    /// Target-engine verify spans carrying a non-empty draft (each
+    /// rides the iteration's single ragged forward call).
+    pub verify_forwards: u64,
+    /// Draft tokens proposed for verification.
+    pub draft_proposed: u64,
+    /// Draft tokens the target's sampled stream confirmed.
+    pub draft_accepted: u64,
+    /// Tokens emitted by decode spans (speculative spans emit up to
+    /// `draft_k + 1` each; plain decodes exactly 1). Excludes the
+    /// first token of each stream, which prefill emits.
+    pub decode_tokens: u64,
     latencies_s: Vec<f64>,
     ttfts_s: Vec<f64>,
     /// Per-priority-class TTFT samples (seconds) — the per-class
@@ -358,6 +383,27 @@ impl Metrics {
         }
     }
 
+    /// Fraction of proposed draft tokens the target stream confirmed
+    /// (DESIGN.md §18). 1.0 for a full-depth greedy self-draft.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.draft_proposed == 0 {
+            0.0
+        } else {
+            self.draft_accepted as f64 / self.draft_proposed as f64
+        }
+    }
+
+    /// Mean tokens emitted per decode-bearing target forward — the
+    /// speculative speedup headline (1.0 without speculation; up to
+    /// `draft_k + 1` at full acceptance).
+    pub fn tokens_per_forward(&self) -> f64 {
+        if self.decode_iterations == 0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / self.decode_iterations as f64
+        }
+    }
+
     /// Mean per-iteration KV utilization (used/allocated block tokens).
     pub fn kv_util_mean(&self) -> f64 {
         summarize(&self.kv_util).mean
@@ -438,6 +484,22 @@ impl Metrics {
             self.prefix_evicted_blocks,
             self.prefix_bytes_saved,
         );
+        // Speculative tail only when a draft engine actually ran —
+        // non-speculative deployments keep the pre-§18 report shape.
+        if self.draft_forwards > 0 {
+            let _ = write!(
+                s,
+                " draft_forwards={} verify_forwards={} \
+                 draft_proposed={} draft_accepted={} \
+                 acceptance_rate={:.3} tokens_per_forward={:.2}",
+                self.draft_forwards,
+                self.verify_forwards,
+                self.draft_proposed,
+                self.draft_accepted,
+                self.acceptance_rate(),
+                self.tokens_per_forward(),
+            );
+        }
         // Per-class latency tail only when classes are actually in
         // play (>1 class, or any non-default class) — uniform default
         // traffic keeps the pre-§15 report shape.
@@ -638,5 +700,44 @@ mod tests {
         assert!(r.contains("prefix_hit_rate=0.750"), "{r}");
         assert!(r.contains("prefix_matched_toks=96"), "{r}");
         assert!(r.contains("prefix_bytes_saved=4096"), "{r}");
+    }
+
+    #[test]
+    fn speculative_tail_gated_and_derived() {
+        let mut m = Metrics::default();
+        // No draft forwards ⇒ the pre-§18 report shape, tail absent.
+        assert!(!m.report().contains("acceptance_rate="), "{}",
+                m.report());
+        assert_eq!(m.acceptance_rate(), 0.0);
+        assert_eq!(m.tokens_per_forward(), 0.0);
+        // 3 verify iterations emitting 10 tokens off 12 proposals of
+        // which 8 verified: acceptance 0.667, 3.33 tokens/forward.
+        m.draft_forwards = 12;
+        m.verify_forwards = 3;
+        m.draft_proposed = 12;
+        m.draft_accepted = 8;
+        m.decode_tokens = 10;
+        m.decode_iterations = 3;
+        assert!((m.acceptance_rate() - 8.0 / 12.0).abs() < 1e-9);
+        assert!((m.tokens_per_forward() - 10.0 / 3.0).abs() < 1e-9);
+        let r = m.report();
+        assert!(r.contains("draft_forwards=12"), "{r}");
+        assert!(r.contains("verify_forwards=3"), "{r}");
+        assert!(r.contains("acceptance_rate=0.667"), "{r}");
+        assert!(r.contains("tokens_per_forward=3.33"), "{r}");
+    }
+
+    #[test]
+    fn replica_stats_carry_kernel_and_quant_mode() {
+        let r = ReplicaStats {
+            kernel: "avx2".into(),
+            quant_mode: "channel_static".into(),
+            ..ReplicaStats::default()
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("kernel").and_then(Json::as_str),
+                   Some("avx2"));
+        assert_eq!(j.get("quant_mode").and_then(Json::as_str),
+                   Some("channel_static"));
     }
 }

@@ -49,6 +49,13 @@ pub struct GenerationParams {
     /// warm KV blocks. Placement metadata only — a standalone server
     /// accepts and ignores it, and it never alters token streams.
     pub session: Option<String>,
+    /// Per-request speculative-decoding override (DESIGN.md §18):
+    /// `Some(false)` opts this request's decode lane out of the
+    /// scheduler's draft engine, `None`/`Some(true)` follow the
+    /// deployment's `speculative` config. A pure perf knob — token
+    /// streams are bitwise identical either way, only the number of
+    /// target forwards spent on the stream changes.
+    pub speculative: Option<bool>,
 }
 
 impl Default for GenerationParams {
@@ -63,6 +70,7 @@ impl Default for GenerationParams {
             priority: 0,
             deadline_ms: None,
             session: None,
+            speculative: None,
         }
     }
 }

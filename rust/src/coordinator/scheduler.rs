@@ -156,6 +156,25 @@ pub struct SchedulerConfig {
     /// suite uses, keeping scheduling wall-clock independent; token
     /// streams are bitwise identical either way).
     pub max_decode_latency: u64,
+    /// Self-speculative decoding (DESIGN.md §18): a draft engine —
+    /// the same bundle, optionally layer-truncated — proposes
+    /// `draft_k` tokens per decode lane per iteration and the target
+    /// verifies them all in one ragged span, emitting up to
+    /// `draft_k + 1` tokens per target forward. Token streams are
+    /// bitwise identical either way (the emitted stream *is* the
+    /// target sampler stream); the knob only changes how many target
+    /// forwards they cost. Off by default.
+    pub speculative: bool,
+    /// Tokens the draft lane proposes per iteration (≥ 1 when
+    /// `speculative`; 0 falls back to 1). Plumbed from JSON
+    /// `scheduler.draft_k` / `--draft-k`.
+    pub draft_k: usize,
+    /// Draft-model depth in layers: the draft engine runs only the
+    /// first `draft_layers` transformer layers of the bundle. `0` ⇒
+    /// full depth (a pure self-draft — greedy proposals always
+    /// verify, useful for measuring the span mechanics). Plumbed from
+    /// JSON `scheduler.draft_layers` / `--draft-layers`.
+    pub draft_layers: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -174,6 +193,9 @@ impl Default for SchedulerConfig {
             prefix_cache: false,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         }
     }
 }
@@ -219,6 +241,13 @@ struct Active {
     /// rest of the iteration, swept into the pending queue (with its
     /// generation state, no event) by `collect_preempted`.
     preempted: bool,
+    /// Per-lane draft KV cache for speculative decoding (DESIGN.md
+    /// §18): auto-grow paged with the *draft* engine's layer count,
+    /// never pool-backed — draft KV is private working memory, not
+    /// arena-accounted serving state. Lazily built (and rebuilt after
+    /// preemption) by a catch-up span on the draft engine; `None`
+    /// until the lane first speculates.
+    draft_cache: Option<KvCache>,
 }
 
 /// A request whose prompt is not yet fully in its KV cache. Any number
@@ -252,12 +281,25 @@ impl Prefilling {
 enum SpanRole {
     /// Span advances `prefilling[pf]` to `consumed == end`.
     Prefill { pf: usize, end: usize },
-    /// Span decodes one token for `active[idx]`.
-    Decode { idx: usize },
+    /// Span decodes for `active[idx]`: one committed token plus the
+    /// speculatively drafted continuation (empty ⇒ a plain one-token
+    /// decode — the pre-§18 behaviour, bit for bit).
+    Decode { idx: usize, draft: Vec<u32> },
 }
 
 pub struct Scheduler {
     engine: Engine,
+    /// Draft engine for self-speculative decoding
+    /// (`SchedulerConfig::speculative`; DESIGN.md §18): the same
+    /// bundle, layer-truncated to `draft_layers`. `None` when
+    /// speculation is off — or permanently dropped after a draft-lane
+    /// engine error (the scheduler then serves non-speculatively;
+    /// token streams are identical either way).
+    draft: Option<Engine>,
+    /// Scratch for draft-lane forwards — the target `ws` holds the
+    /// verify logits between plan build and consumption, so the draft
+    /// lane needs its own.
+    draft_ws: Workspace,
     cfg: SchedulerConfig,
     pool: BlockPool,
     /// Radix prefix index over frozen KV blocks
@@ -300,8 +342,16 @@ impl Scheduler {
         let prefix = cfg.prefix_cache.then(|| {
             PrefixCache::new(cfg.block_tokens(), cfg.prefix_cache_blocks)
         });
+        // Built after ensure_kv_scales so an int8 deployment's draft
+        // clone carries the same calibrated (or probe-fallback) scales
+        // as the target.
+        let draft = cfg
+            .speculative
+            .then(|| engine.draft(cfg.draft_layers, cfg.threads));
         Scheduler {
             engine,
+            draft,
+            draft_ws: Workspace::new(),
             cfg,
             pool,
             prefix,
@@ -391,8 +441,11 @@ impl Scheduler {
 
     /// Machine-readable load snapshot (DESIGN.md §16): queue depths,
     /// arena occupancy, and the cumulative counters the router tier
-    /// dispatches on. `replica`/`draining` are left at their defaults —
-    /// fleet position is the router's to fill in.
+    /// dispatches on — plus the replica's active SIMD microkernel and
+    /// the bundle's quant mode, so a mixed fleet is debuggable from
+    /// the gateway's `{"cmd":"stats"}` frame alone. `replica`/
+    /// `draining` are left at their defaults — fleet position is the
+    /// router's to fill in.
     pub fn stats(&self) -> ReplicaStats {
         ReplicaStats {
             replica: 0,
@@ -407,6 +460,8 @@ impl Scheduler {
             generated_tokens: self.metrics.generated_tokens,
             prefix_lookups: self.metrics.prefix_lookups,
             prefix_hits: self.metrics.prefix_hits,
+            kernel: crate::quant::simd::active().kind().name().into(),
+            quant_mode: self.engine.model.quant_mode_name().into(),
         }
     }
 
@@ -578,6 +633,40 @@ impl Scheduler {
         });
     }
 
+    /// Draft tokens this lane would speculate next decode: `draft_k`
+    /// when the scheduler holds a draft engine and the request didn't
+    /// opt out (`params.speculative == Some(false)`), else 0. A pure
+    /// admission/reservation hint — the actual proposal re-clamps to
+    /// the lane's remaining budget and logical KV room.
+    fn lane_draft_k(&self, a: &Active) -> usize {
+        if self.draft.is_some() && a.req.params.speculative != Some(false)
+        {
+            self.cfg.draft_k.max(1)
+        } else {
+            0
+        }
+    }
+
+    /// Blocks the oldest `budget` in-flight prefills need for their
+    /// next chunk — the prefill share of admission headroom, and part
+    /// of the committed work a speculative reservation must never
+    /// displace.
+    fn prefill_chunk_need(&self, budget: usize) -> usize {
+        self.prefilling
+            .iter()
+            .take(budget)
+            .map(|pf| {
+                let remaining = pf.work().len() - pf.consumed;
+                let chunk = if self.cfg.prefill_chunk == 0 {
+                    remaining
+                } else {
+                    self.cfg.prefill_chunk.min(remaining)
+                };
+                self.pool.blocks_needed(&pf.cache, pf.consumed + chunk)
+            })
+            .sum()
+    }
+
     /// Admission (router): pending → prefilling, FIFO, while there is
     /// batch room (active + in-flight prefills), an unused prefill-span
     /// slot this iteration, and **enough free blocks for the first
@@ -617,23 +706,15 @@ impl Scheduler {
             .active
             .iter()
             .filter(|a| !a.done && a.tokens.len() < a.req.params.max_new)
-            .map(|a| self.pool.blocks_needed(&a.cache, a.cache.len + 1))
-            .sum();
-        let prefill_need: usize = self
-            .prefilling
-            .iter()
-            .take(budget)
-            .map(|pf| {
-                let remaining = pf.work().len() - pf.consumed;
-                let chunk = if self.cfg.prefill_chunk == 0 {
-                    remaining
-                } else {
-                    self.cfg.prefill_chunk.min(remaining)
-                };
-                self.pool.blocks_needed(&pf.cache, pf.consumed + chunk)
+            .map(|a| {
+                // Speculative lanes hold back room for the whole
+                // verify span so admissions can't squeeze speculation
+                // out of a lane that was already running it.
+                self.pool.blocks_needed(
+                    &a.cache, a.cache.len + 1 + self.lane_draft_k(a))
             })
             .sum();
-        let headroom = decode_need + prefill_need;
+        let headroom = decode_need + self.prefill_chunk_need(budget);
         loop {
             // Preempted lanes are dead weight awaiting the sweep, not
             // batch occupants.
@@ -845,6 +926,65 @@ impl Scheduler {
         }
     }
 
+    /// Draft-lane proposal (DESIGN.md §18): autoregressively sample
+    /// `k` tokens for lane `a` on the draft engine, keeping the lane's
+    /// private auto-grow draft KV in sync with the target's committed
+    /// history. The first span folds in a catch-up feed — whatever
+    /// committed positions the draft cache is missing (all of them on
+    /// a fresh or preempt-rebuilt cache, none in steady state) plus
+    /// the lane's committed next token — then each subsequent forward
+    /// feeds the previous proposal. Sampling uses the lane's own
+    /// counter-based sampler at exactly the steps the target verify
+    /// walk will use, so a full-depth draft (`draft_layers == 0`)
+    /// reproduces the target stream bitwise and verifies at
+    /// acceptance 1.0.
+    ///
+    /// Associated fn so the caller can hold `self.draft` and a lane
+    /// borrow simultaneously.
+    fn propose(draft: &Engine, ws: &mut Workspace, a: &mut Active,
+               k: usize) -> Result<Vec<u32>, EngineError> {
+        let base = a.cache.len;
+        let (dtype, cap, bt) =
+            (a.cache.dtype(), a.cache.cap, a.cache.block_tokens());
+        let dcfg = draft.config();
+        let (n_layers, d_model, vocab) =
+            (dcfg.n_layers, dcfg.d_model, dcfg.vocab);
+        let dc = a.draft_cache.get_or_insert_with(|| {
+            KvCache::paged(dtype, n_layers, cap, d_model, bt)
+        });
+        // Drop the stale speculative suffix a previous iteration's
+        // rejected proposal left behind (surplus blocks are private
+        // draft memory — nothing to reclaim into the pool).
+        if dc.len > base {
+            let _ = dc.truncate(base);
+        }
+        let mut feed: Vec<u32> = (dc.len..base)
+            .map(|p| {
+                if p < a.req.prompt.len() {
+                    a.req.prompt[p]
+                } else {
+                    a.tokens[p - a.req.prompt.len()]
+                }
+            })
+            .collect();
+        feed.push(a.next);
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let mut plan = BatchPlan::new();
+            plan.push_span(0, &feed, SpanLogits::Last);
+            {
+                let mut caches = [&mut *dc];
+                draft.forward_batch(&plan, &mut caches, ws)?;
+            }
+            let tok = a.sampler.sample(&ws.logits[..vocab],
+                                       (a.tokens.len() + i) as u64);
+            out.push(tok);
+            feed.clear();
+            feed.push(tok);
+        }
+        Ok(out)
+    }
+
     /// Reserve blocks (decode lanes first — FIFO by lane index — then
     /// the oldest `max_prefills_per_iter` prefill chunks), build this
     /// iteration's [`BatchPlan`] and run **one** `forward_batch` over
@@ -853,8 +993,31 @@ impl Scheduler {
         let budget = self.cfg.max_prefills_per_iter.max(1);
         // Committed decode lanes reserve their next block first: a lane
         // that cannot get one finishes CacheFull deterministically
-        // (FIFO by lane index) instead of failing the batch.
-        let mut decode_sel: Vec<usize> = Vec::new();
+        // (FIFO by lane index) instead of failing the batch. Each
+        // lane's entry carries its speculative draft (empty ⇒ plain
+        // one-token decode).
+        let mut decode_sel: Vec<(usize, Vec<u32>)> = Vec::new();
+        // Blocks this iteration's committed work has yet to claim
+        // (every candidate lane's base token plus the prefill
+        // chunks): a speculative reservation is opportunistic and
+        // must never eat into them. Each lane deducts its own base
+        // share on reaching the front; overcounting (a lane preempted
+        // later in the walk) only makes speculation more conservative.
+        let mut later_need: usize = if self.draft.is_some() {
+            self.active
+                .iter()
+                .filter(|a| {
+                    !a.done && !a.preempted
+                        && a.tokens.len() < a.req.params.max_new
+                })
+                .map(|a| {
+                    self.pool.blocks_needed(&a.cache, a.cache.len + 1)
+                })
+                .sum::<usize>()
+                + self.prefill_chunk_need(budget)
+        } else {
+            0
+        };
         for idx in 0..self.active.len() {
             if self.active[idx].done || self.active[idx].preempted {
                 continue;
@@ -871,6 +1034,39 @@ impl Scheduler {
             let class = self.active[idx].req.params.priority;
             let missing = self.pool.blocks_needed(&self.active[idx].cache,
                                                   need);
+            later_need = later_need.saturating_sub(missing);
+            // Speculate before reserving so the lane knows how much
+            // room to ask for. The proposal runs entirely on the
+            // draft engine and the lane's private draft cache —
+            // target state is untouched until the verify span runs.
+            let mut draft_toks: Vec<u32> = Vec::new();
+            let k_goal = {
+                let a = &self.active[idx];
+                let remaining = a.req.params.max_new - a.tokens.len();
+                let cap_room = a.cache.cap.saturating_sub(need);
+                self.lane_draft_k(a)
+                    .min(remaining.saturating_sub(1))
+                    .min(cap_room)
+            };
+            if k_goal > 0 {
+                match Self::propose(self.draft.as_ref().unwrap(),
+                                    &mut self.draft_ws,
+                                    &mut self.active[idx], k_goal) {
+                    Ok(d) => {
+                        self.metrics.draft_forwards += k_goal as u64;
+                        self.metrics.draft_proposed += k_goal as u64;
+                        draft_toks = d;
+                    }
+                    Err(_) => {
+                        // A draft-lane failure must never touch a
+                        // client stream: permanently drop the draft
+                        // engine and serve plain decodes (bitwise
+                        // identical output, just more forwards).
+                        self.draft = None;
+                        self.active[idx].draft_cache = None;
+                    }
+                }
+            }
             if missing > self.pool.free_blocks() {
                 Self::evict_until(&mut self.prefix, &mut self.pool,
                                   &mut self.metrics, missing);
@@ -890,7 +1086,32 @@ impl Scheduler {
                 a.finish = FinishReason::CacheFull;
                 continue;
             }
-            decode_sel.push(idx);
+            if !draft_toks.is_empty() {
+                // Opportunistic speculative extension: the base token
+                // is committed; the verify tail may take only blocks
+                // nobody committed needs — prefix eviction is fine,
+                // preemption is not (a draft is never worth killing a
+                // lane over). On any shortfall the drafts are dropped
+                // and the lane decodes plainly this iteration.
+                let want = need + draft_toks.len();
+                let extra = self.pool
+                    .blocks_needed(&self.active[idx].cache, want);
+                if self.pool.free_blocks() < extra + later_need {
+                    Self::evict_until(&mut self.prefix, &mut self.pool,
+                                      &mut self.metrics,
+                                      extra + later_need);
+                }
+                let granted = self.pool.free_blocks()
+                    >= extra + later_need
+                    && self.pool
+                        .reserve_writable(&mut self.active[idx].cache,
+                                          want)
+                        .is_ok();
+                if !granted {
+                    draft_toks.clear();
+                }
+            }
+            decode_sel.push((idx, draft_toks));
         }
         // Prefill chunks, FIFO-strict over the oldest `budget` prefills:
         // when one cannot reserve, everything younger waits too (block
@@ -925,7 +1146,7 @@ impl Scheduler {
         // A prefill (or later decode lane) may have preempted a lane
         // that had already reserved this iteration: its blocks are
         // gone, so it must not ride the plan.
-        decode_sel.retain(|&i| !self.active[i].preempted);
+        decode_sel.retain(|(i, _)| !self.active[*i].preempted);
         if decode_sel.is_empty() && prefill_sel.is_empty() {
             return false;
         }
@@ -949,10 +1170,17 @@ impl Scheduler {
             roles.push(SpanRole::Prefill { pf: pi, end });
         }
         let prefill_rows = plan.rows();
-        for &idx in &decode_sel {
-            plan.push_span(roles.len(), &[self.active[idx].next],
-                           SpanLogits::Last);
-            roles.push(SpanRole::Decode { idx });
+        for (idx, draft) in &decode_sel {
+            // One verify span per lane: the committed next token plus
+            // the draft tail, all rows emitting logits (degenerates to
+            // the plain `SpanLogits::Last` decode span when the draft
+            // is empty).
+            plan.push_verify_span(roles.len(), self.active[*idx].next,
+                                  draft);
+            roles.push(SpanRole::Decode {
+                idx: *idx,
+                draft: draft.clone(),
+            });
         }
         // Roles and plan spans must stay 1:1 — logits routing and error
         // attribution index one by the other. Guaranteed because every
@@ -976,7 +1204,7 @@ impl Scheduler {
             }
             let mut ds = decode_sel.iter().peekable();
             for (i, a) in self.active.iter_mut().enumerate() {
-                if ds.peek().is_some_and(|&&di| di == i) {
+                if ds.peek().is_some_and(|e| e.0 == i) {
                     ds.next();
                     caches.push(&mut a.cache);
                 }
@@ -993,6 +1221,10 @@ impl Scheduler {
                                             self.cfg.max_batch);
                 if decode_spans > 0 {
                     self.metrics.record_decode_iter(decode_spans);
+                    self.metrics.verify_forwards += decode_sel
+                        .iter()
+                        .filter(|(_, d)| !d.is_empty())
+                        .count() as u64;
                     // The SLO-gate signal: wall time of this decode-
                     // bearing call (prefill rows riding it included —
                     // that contention is exactly what the gate sheds).
@@ -1035,38 +1267,95 @@ impl Scheduler {
                 }
             }
         }
-        // Decode lanes: one sampled token each. (Activation only pushed
-        // to the end of `active`, so the captured indices stay valid.)
+        // Decode lanes: walk each verify span's logits rows in order,
+        // sampling the lane's own stream draw by draw. (Activation only
+        // pushed to the end of `active`, so the captured indices stay
+        // valid.) Row i scores the position after the i-th span token,
+        // so the walk emits the committed token's successor first, then
+        // either confirms each draft token (sampled == drafted ⇒ its KV
+        // is already right — keep walking) or emits the correction and
+        // stops. Every emitted token is `sampler.sample(row, step)` at
+        // the step a plain decode would have used on bitwise-identical
+        // logits (batch-composition invariance, DESIGN.md §12), so
+        // streams are identical with speculation on, off, or anywhere
+        // in between — only the forward count changes.
         let vocab = self.engine.config().vocab;
         for (si, role) in roles.iter().enumerate() {
-            let SpanRole::Decode { idx } = role else { continue };
-            let r = plan.logits_rows(si).start;
-            let row = &self.ws.logits[r * vocab..(r + 1) * vocab];
-            let a = &mut self.active[*idx];
-            // Counter step = number of tokens sampled so far, so the
-            // stream is a pure function of (seed, step) — identical for
-            // every thread count and batch composition.
-            let tok = a.sampler.sample(row, a.tokens.len() as u64);
-            a.tokens.push(tok);
-            a.next = tok;
-            // Logical capacity only — pool pressure is handled at the
-            // next iteration's reservation (CacheFull there too).
-            let cache_full = a.cache.len + 1 >= a.cache.cap;
-            if a.req.params.stop_tokens.contains(&tok) {
-                a.done = true;
-                a.finish = FinishReason::Stop;
-            } else if a.tokens.len() >= a.req.params.max_new {
-                a.done = true;
-                a.finish = FinishReason::Length;
-            } else if cache_full {
-                a.done = true;
-                a.finish = FinishReason::CacheFull;
+            let SpanRole::Decode { idx, draft } = role else { continue };
+            let rows = plan.logits_rows(si);
+            let span_len = draft.len() + 1;
+            let (start, emitted, accepted);
+            {
+                let a = &mut self.active[*idx];
+                // forward_batch advanced the cache over the whole
+                // verify span; positions past the accepted prefix are
+                // rolled back below.
+                start = a.cache.len - span_len;
+                let mut em = 0usize;
+                let mut acc = 0u64;
+                for (i, r) in rows.enumerate() {
+                    let row = &self.ws.logits[r * vocab..(r + 1) * vocab];
+                    // Counter step = number of tokens sampled so far,
+                    // so the stream is a pure function of (seed, step)
+                    // — identical for every thread count and batch
+                    // composition.
+                    let tok =
+                        a.sampler.sample(row, a.tokens.len() as u64);
+                    a.tokens.push(tok);
+                    a.next = tok;
+                    em += 1;
+                    self.events.push(Event::Token {
+                        id: a.req.id,
+                        index: a.tokens.len() - 1,
+                        token: tok,
+                    });
+                    // Logical capacity only — pool pressure is handled
+                    // at the next iteration's reservation (CacheFull
+                    // there too). `start + em` is the lane's committed
+                    // KV length once the rollback below lands.
+                    let cache_full = start + em + 1 >= a.cache.cap;
+                    if a.req.params.stop_tokens.contains(&tok) {
+                        a.done = true;
+                        a.finish = FinishReason::Stop;
+                    } else if a.tokens.len() >= a.req.params.max_new {
+                        a.done = true;
+                        a.finish = FinishReason::Length;
+                    } else if cache_full {
+                        a.done = true;
+                        a.finish = FinishReason::CacheFull;
+                    }
+                    let matched = i < draft.len() && tok == draft[i];
+                    if matched {
+                        acc += 1;
+                    }
+                    if a.done || (i < draft.len() && !matched) {
+                        break;
+                    }
+                }
+                emitted = em;
+                accepted = acc;
             }
-            self.events.push(Event::Token {
-                id: a.req.id,
-                index: a.tokens.len() - 1,
-                token: tok,
-            });
+            self.metrics.decode_tokens += emitted as u64;
+            self.metrics.draft_accepted += accepted;
+            if !draft.is_empty() {
+                // Roll the target cache back to the accepted prefix:
+                // rejected positions' KV is discarded and whole
+                // surplus blocks return to the pool (restoring the
+                // `len == prompt + tokens − 1` lane invariant).
+                let surplus =
+                    self.active[*idx].cache.truncate(start + emitted);
+                for block in surplus {
+                    self.pool.reclaim(block);
+                }
+                // The draft cache may hold proposal positions past the
+                // accepted point; drop them so the next catch-up span
+                // refeeds from the committed stream.
+                if let Some(dc) = &mut self.active[*idx].draft_cache {
+                    if start + emitted < dc.len {
+                        let _ = dc.truncate(start + emitted);
+                    }
+                }
+            }
         }
     }
 
@@ -1079,7 +1368,7 @@ impl Scheduler {
         match e {
             EngineError::KvOverflow { lane, .. }
             | EngineError::KvExhausted { lane, .. } => match roles[*lane] {
-                SpanRole::Decode { idx } => {
+                SpanRole::Decode { idx, .. } => {
                     let a = &mut self.active[idx];
                     a.error = Some(e.to_string());
                     a.finish = FinishReason::Error;
@@ -1103,7 +1392,7 @@ impl Scheduler {
                             self.pool.release(&mut p.cache);
                             self.fail_request(p.req, e.to_string());
                         }
-                        SpanRole::Decode { idx } => {
+                        SpanRole::Decode { idx, .. } => {
                             let a = &mut self.active[idx];
                             a.error = Some(e.to_string());
                             a.finish = FinishReason::Error;
@@ -1153,6 +1442,7 @@ impl Scheduler {
             finish,
             error: None,
             preempted: false,
+            draft_cache: None,
         });
     }
 
@@ -1181,6 +1471,7 @@ impl Scheduler {
             finish: FinishReason::Length,
             error: None,
             preempted: false,
+            draft_cache: None,
         });
     }
 

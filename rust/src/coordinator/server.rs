@@ -493,6 +493,15 @@ fn parse_params(j: &Json) -> Result<GenerationParams, String> {
                 Json::Str(id) => p.session = Some(id.clone()),
                 _ => return Err("session must be a string".into()),
             },
+            // Per-request speculative-decoding override (DESIGN.md
+            // §18): `false` opts this stream out of the deployment's
+            // draft lane. A pure perf knob — never changes tokens.
+            "speculative" => match v.as_bool() {
+                Some(b) => p.speculative = Some(b),
+                None => {
+                    return Err("speculative must be a boolean".into())
+                }
+            },
             other => return Err(format!("unknown params field {other:?}")),
         }
     }

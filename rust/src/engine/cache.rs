@@ -449,6 +449,30 @@ impl KvCache {
     pub fn reset(&mut self) {
         self.len = 0;
     }
+
+    /// Roll the cache back to `new_len` tokens and detach every block
+    /// that holds no surviving row — the speculative-decode rejection
+    /// path (DESIGN.md §18): a verify span writes KV for all k drafted
+    /// tokens optimistically, and the rejected suffix must be both
+    /// logically and physically discarded. The boundary block at
+    /// `new_len` is kept even when partially filled (its stale suffix
+    /// rows are unreachable — reads stop at `len` — and will be
+    /// overwritten in place). Works for every cache mode: pooled
+    /// callers hand the returned blocks to `BlockPool::reclaim`,
+    /// auto-grow callers just drop them.
+    pub fn truncate(&mut self, new_len: usize) -> Vec<Arc<KvBlock>> {
+        assert!(new_len <= self.len,
+                "KV truncate cannot grow: {new_len} > {}", self.len);
+        assert_ne!(self.mode, CacheMode::Released,
+                   "truncate of a released KV cache");
+        self.len = new_len;
+        let keep = new_len.div_ceil(self.block_tokens);
+        let mut surplus = Vec::new();
+        while self.blocks.len() > keep {
+            surplus.push(self.blocks.pop().expect("len checked"));
+        }
+        surplus
+    }
 }
 
 #[cfg(test)]
@@ -547,6 +571,51 @@ mod tests {
         assert_eq!(c.k_row_f32(0, 3), &fresh[..]);
         assert_eq!(donor.k_row_f32(0, 2), &rows[2][..],
                    "donor block untouched by the borrower's CoW");
+    }
+
+    #[test]
+    fn truncate_pops_whole_surplus_blocks_and_keeps_boundary() {
+        let mut c = KvCache::paged(KvDtype::F32, 2, 32, 8, 4);
+        let row = vec![2f32; 8];
+        for pos in 0..11 {
+            for l in 0..2 {
+                c.write(l, pos, &row, &row, None);
+            }
+        }
+        c.len = 11; // 3 blocks at B=4
+        assert_eq!(c.n_blocks(), 3);
+        // 11 → 5: block 2 (rows 8..11) is surplus; block 1 survives
+        // as the partially-filled boundary block.
+        let surplus = c.truncate(5);
+        assert_eq!(surplus.len(), 1);
+        assert_eq!(c.len, 5);
+        assert_eq!(c.n_blocks(), 2);
+        // surviving rows untouched, and the boundary is re-writable
+        assert_eq!(c.k_row_f32(1, 4), &row[..]);
+        let fresh = vec![7f32; 8];
+        for l in 0..2 {
+            c.write(l, 5, &fresh, &fresh, None);
+        }
+        c.len = 6;
+        assert_eq!(c.v_row_f32(0, 5), &fresh[..]);
+        // truncate to a block boundary drops the exact tail count
+        let surplus = c.truncate(4);
+        assert_eq!(surplus.len(), 1);
+        assert_eq!(c.n_blocks(), 1);
+        // and to zero returns everything
+        let surplus = c.truncate(0);
+        assert_eq!(surplus.len(), 1);
+        assert_eq!(c.n_blocks(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "KV truncate cannot grow")]
+    fn truncate_past_len_panics() {
+        let mut c = KvCache::paged(KvDtype::F32, 1, 16, 8, 4);
+        let row = vec![0f32; 8];
+        c.write(0, 0, &row, &row, None);
+        c.len = 1;
+        let _ = c.truncate(2);
     }
 
     #[test]

@@ -206,6 +206,32 @@ impl BatchPlan {
         self.spans.push(Span { lane, len: tokens.len(), logits });
     }
 
+    /// Speculative verify span (DESIGN.md §18): the lane's committed
+    /// next token followed by `draft` proposed tokens, every row
+    /// emitting logits. Row `i` of the span scores the token at
+    /// position `start + i + 1` — row 0 is exactly the logits a plain
+    /// decode step would emit, rows `1..=k` score each drafted
+    /// continuation — so verifying k drafts costs ONE target forward
+    /// instead of k. With an empty draft this degenerates to the plain
+    /// decode span ([`SpanLogits::Last`]); the two are bitwise
+    /// identical on row 0 by the batch-composition invariance property
+    /// (`tests/ragged_batch.rs`), which is the whole reason greedy
+    /// speculative streams match non-speculative goldens exactly.
+    pub fn push_verify_span(&mut self, lane: usize, next: u32,
+                            draft: &[u32]) {
+        if draft.is_empty() {
+            self.push_span(lane, &[next], SpanLogits::Last);
+            return;
+        }
+        self.tokens.push(next);
+        self.tokens.extend_from_slice(draft);
+        self.spans.push(Span {
+            lane,
+            len: 1 + draft.len(),
+            logits: SpanLogits::All,
+        });
+    }
+
     /// Total stacked rows across all spans.
     pub fn rows(&self) -> usize {
         self.tokens.len()

@@ -60,6 +60,16 @@ impl Engine {
         &self.model.config
     }
 
+    /// Draft engine for self-speculative decoding (DESIGN.md §18): the
+    /// same bundle layer-truncated to `draft_layers` deep (`0` ⇒ full
+    /// depth — a pure self-draft), with its own intra-op pool of
+    /// `threads` workers and nothing mutable shared with the target.
+    /// KV scales (if present) are truncated alongside the layers, so
+    /// the draft lane serves int8 KV whenever the target can.
+    pub fn draft(&self, draft_layers: usize, threads: usize) -> Engine {
+        Engine::with_threads(self.model.truncated(draft_layers), threads)
+    }
+
     // ------------------------------------------------------------------
     // Seed-compatible wrappers over forward_batch
     // ------------------------------------------------------------------

@@ -109,6 +109,21 @@ pub enum QuantMode {
     Dynamic { a_qmax: i32, a_clip: f32, hadamard: bool },
 }
 
+impl QuantMode {
+    /// Short stable name for banners, `inspect`, and the replica stats
+    /// frame (the router reports it per replica so a mixed fleet is
+    /// debuggable from the gateway).
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantMode::Static => "static",
+            QuantMode::TensorStatic { .. } => "tensor_static",
+            QuantMode::ChannelStatic { .. } => "channel_static",
+            QuantMode::Dynamic { hadamard: true, .. } => "dynamic+had",
+            QuantMode::Dynamic { .. } => "dynamic",
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub enum Linear {
     Fp { wt: Vec<f32>, n: usize, j: usize },
@@ -525,5 +540,35 @@ impl QModel {
             total += kv.iter().map(|s| s.resident_bytes()).sum::<usize>();
         }
         total
+    }
+
+    /// The bundle's activation-quantization discipline, summarized by
+    /// the mode of the hardest projection (`down` — the one the QSM
+    /// variants differ on). `"fp"` for unquantized baselines.
+    pub fn quant_mode_name(&self) -> &'static str {
+        match self.layers.first().map(|l| &l.down) {
+            Some(Linear::Quant { mode, .. }) => mode.name(),
+            _ => "fp",
+        }
+    }
+
+    /// Layer-truncated clone for the self-speculative draft lane
+    /// (DESIGN.md §18): the same bundle — same embeddings, norms, LM
+    /// head, quantized weights — with only the first `n_layers`
+    /// transformer layers (and their KV scales). `0` means full depth
+    /// (a pure self-draft whose greedy proposals always verify).
+    /// Values above the real depth clamp to it.
+    pub fn truncated(&self, n_layers: usize) -> QModel {
+        let n = match n_layers {
+            0 => self.config.n_layers,
+            n => n.min(self.config.n_layers),
+        };
+        let mut m = self.clone();
+        m.layers.truncate(n);
+        if let Some(kv) = &mut m.kv {
+            kv.truncate(n);
+        }
+        m.config.n_layers = n;
+        m
     }
 }

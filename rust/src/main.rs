@@ -62,6 +62,7 @@ fn run() -> Result<()> {
                  [--kv-cache f32|int8] [--kv-block TOKENS] \
                  [--kv-blocks N] [--prefix-cache] \
                  [--prefix-cache-blocks N] [--max-decode-latency MS] \
+                 [--speculative --draft-k K --draft-layers N] \
                  [--temperature T --top-k K \
                  --top-p P --seed S --stop T1,T2 --priority P \
                  --deadline-ms MS --session ID] …\n\
@@ -126,6 +127,18 @@ fn serve_config(args: &Args) -> Result<ServeConfig> {
     cfg.scheduler.max_decode_latency = args
         .get_usize("max-decode-latency",
                    cfg.scheduler.max_decode_latency as usize) as u64;
+    // Self-speculative decoding (DESIGN.md §18): --speculative turns
+    // the draft lane on (opt-in; token streams bitwise unchanged),
+    // --draft-k sets tokens proposed per lane per iteration, and
+    // --draft-layers truncates the draft model's depth (0 = full
+    // depth, the pure self-draft).
+    if args.get_bool("speculative") {
+        cfg.scheduler.speculative = true;
+    }
+    cfg.scheduler.draft_k =
+        args.get_usize("draft-k", cfg.scheduler.draft_k);
+    cfg.scheduler.draft_layers =
+        args.get_usize("draft-layers", cfg.scheduler.draft_layers);
     // Integer-microkernel pin (DESIGN.md §17): --kernel / config
     // "kernel" forces the dispatch table; unset keeps auto-dispatch
     // (or the MQ_KERNEL env override, honored lazily at first GEMM).
@@ -158,18 +171,26 @@ fn apply_kernel(spec: Option<&str>) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = serve_config(args)?;
     let engine = load_engine(&cfg.model, &cfg.method)?;
-    println!("serving {} / {} (params ~{:.1} MB quantized, {} kernel \
-              thread(s), {} microkernel, kv {}, arena {} blocks × {} \
-              tokens, prefix cache {})",
+    println!("serving {} / {} (params ~{:.1} MB quantized, quant {}, \
+              {} kernel thread(s), {} microkernel, kv {}, arena {} \
+              blocks × {} tokens, prefix cache {}, speculative {})",
              cfg.model, cfg.method,
              engine.model.weight_bytes() as f64 / 1e6,
+             engine.model.quant_mode_name(),
              mergequant::quant::parallel::ThreadPool::resolve(
                  cfg.scheduler.threads),
              mergequant::quant::simd::active().kind().name(),
              cfg.scheduler.kv_dtype.as_str(),
              cfg.scheduler.total_blocks(),
              cfg.scheduler.block_tokens(),
-             if cfg.scheduler.prefix_cache { "on" } else { "off" });
+             if cfg.scheduler.prefix_cache { "on" } else { "off" },
+             if cfg.scheduler.speculative {
+                 format!("on (k={}, draft_layers={})",
+                         cfg.scheduler.draft_k.max(1),
+                         cfg.scheduler.draft_layers)
+             } else {
+                 "off".into()
+             });
     let server = std::sync::Arc::new(Server::start(engine, cfg.scheduler.clone()));
     let gateway = TcpGateway::start(server.clone(), cfg.port)?;
     println!("listening on {}", gateway.addr);
@@ -201,10 +222,13 @@ fn cmd_route(args: &Args) -> Result<()> {
     let rcfg = RouterConfig::new(replicas, cfg.scheduler.clone());
     let per = rcfg.per_replica();
     println!("routing {} / {} across {} replica(s) (params ~{:.1} MB \
-              quantized per replica, kv {}, per-replica arena {} \
-              blocks × {} tokens, prefix cache {}, affinity on)",
+              quantized per replica, quant {}, {} microkernel, kv {}, \
+              per-replica arena {} blocks × {} tokens, prefix cache \
+              {}, affinity on)",
              cfg.model, cfg.method, replicas,
              engine.model.weight_bytes() as f64 / 1e6,
+             engine.model.quant_mode_name(),
+             mergequant::quant::simd::active().kind().name(),
              per.kv_dtype.as_str(),
              per.total_blocks(),
              per.block_tokens(),
@@ -305,6 +329,10 @@ fn cmd_generate(args: &Args) -> Result<()> {
         // the router tier; single-shot generation validates and
         // ignores it, same as a standalone server.
         session: args.get("session").map(String::from),
+        // Speculation is a scheduler-lane concern (DESIGN.md §18);
+        // single-shot generation runs the plain engine loop, so the
+        // override has nothing to act on here.
+        speculative: None,
     };
     params.validate().map_err(anyhow::Error::msg)?;
     let mut out = engine.generate_seeded(&prompt, params.max_new,
@@ -358,7 +386,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             let desc = match lin {
                 mergequant::engine::Linear::Fp { .. } => "fp32".to_string(),
                 mergequant::engine::Linear::Quant { qw, mode } => format!(
-                    "{:?} w{}b group={} {}", mode_name(mode), qw.bits,
+                    "{:?} w{}b group={} {}", mode.name(), qw.bits,
                     qw.group,
                     if qw.zero.is_some() { "asym" } else { "sym" }),
             };
@@ -369,19 +397,6 @@ fn cmd_inspect(args: &Args) -> Result<()> {
                  l.attn_norm.recon_idx.is_some());
     }
     Ok(())
-}
-
-fn mode_name(m: &mergequant::engine::QuantMode) -> &'static str {
-    match m {
-        mergequant::engine::QuantMode::Static => "static",
-        mergequant::engine::QuantMode::TensorStatic { .. } => "tensor_static",
-        mergequant::engine::QuantMode::Dynamic { hadamard, .. } => {
-            if *hadamard { "dynamic+had" } else { "dynamic" }
-        }
-        mergequant::engine::QuantMode::ChannelStatic { .. } => {
-            "channel_static"
-        }
-    }
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -403,7 +418,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         eprintln!("{line}");
     }
     if args.get_bool("record") {
-        let out = args.get_or("out", "BENCH_9.json");
+        let out = args.get_or("out", "BENCH_10.json");
         std::fs::write(out, format!("{}\n", j.to_string()))
             .with_context(|| format!("writing {out}"))?;
         eprintln!("wrote {out}");

@@ -188,36 +188,49 @@ pub fn force(kind: KernelKind) -> bool {
     }
 }
 
+/// Resolve a raw `MQ_KERNEL` value (`None` = unset) to a dispatch row
+/// plus an optional warning line. Pure — no env access, no global
+/// state — so the unknown-value and unavailable-value fallback paths
+/// are unit-testable without perturbing the process-wide choice (CI
+/// only exercises the valid-value path through the env).
+fn resolve(raw: Option<&str>) -> (Kernel, Option<String>) {
+    let Some(name) = raw else {
+        return (best(), None);
+    };
+    match KernelKind::parse(name) {
+        Some(kind) => match for_kind(kind) {
+            Some(k) => (k, None),
+            None => {
+                let b = best();
+                let warn = format!(
+                    "[mergequant] MQ_KERNEL={name} not available \
+                     on this host; using {}",
+                    b.kind().name()
+                );
+                (b, Some(warn))
+            }
+        },
+        None => {
+            let b = best();
+            let warn = format!(
+                "[mergequant] MQ_KERNEL={name} unknown (want \
+                 scalar|avx2|vnni|neon); using {}",
+                b.kind().name()
+            );
+            (b, Some(warn))
+        }
+    }
+}
+
 /// Cold-path initializer: honor `MQ_KERNEL` when set and available,
 /// otherwise pick [`best`], then publish the choice.
 #[cold]
 fn init() -> Kernel {
-    let kern = match std::env::var("MQ_KERNEL") {
-        Ok(name) => match KernelKind::parse(&name) {
-            Some(kind) => match for_kind(kind) {
-                Some(k) => k,
-                None => {
-                    let b = best();
-                    eprintln!(
-                        "[mergequant] MQ_KERNEL={name} not available \
-                         on this host; using {}",
-                        b.kind().name()
-                    );
-                    b
-                }
-            },
-            None => {
-                let b = best();
-                eprintln!(
-                    "[mergequant] MQ_KERNEL={name} unknown (want \
-                     scalar|avx2|vnni|neon); using {}",
-                    b.kind().name()
-                );
-                b
-            }
-        },
-        Err(_) => best(),
-    };
+    let raw = std::env::var("MQ_KERNEL").ok();
+    let (kern, warn) = resolve(raw.as_deref());
+    if let Some(w) = warn {
+        eprintln!("{w}");
+    }
     ACTIVE.store(kern.kind() as u8, Ordering::Relaxed);
     kern
 }
@@ -439,6 +452,48 @@ mod tests {
                            "{} n={n}", kind.name());
             }
         }
+    }
+
+    /// The `MQ_KERNEL` fallback paths, pinned without touching the
+    /// process env or the published dispatch choice: an unknown value
+    /// and an unavailable-on-this-host value both fall back to
+    /// [`best`] with a one-line warning; valid requests and an unset
+    /// variable resolve silently.
+    #[test]
+    fn resolve_warns_and_falls_back() {
+        let b = best().kind();
+        // unset → best, silent
+        let (k, warn) = resolve(None);
+        assert_eq!(k.kind(), b);
+        assert!(warn.is_none());
+        // valid + available → honored, silent (scalar always is)
+        let (k, warn) = resolve(Some("scalar"));
+        assert_eq!(k.kind(), KernelKind::Scalar);
+        assert!(warn.is_none());
+        // unknown value → best, with the unknown-vocabulary warning
+        let (k, warn) = resolve(Some("sse9"));
+        assert_eq!(k.kind(), b);
+        let w = warn.expect("unknown MQ_KERNEL must warn");
+        assert!(w.contains("MQ_KERNEL=sse9 unknown"), "got: {w}");
+        assert!(w.contains("scalar|avx2|vnni|neon"), "got: {w}");
+        assert!(w.contains(&format!("using {}", b.name())), "got: {w}");
+        // parseable but foreign to this host → best, with the
+        // not-available warning
+        #[cfg(target_arch = "x86_64")]
+        let foreign = "neon";
+        #[cfg(target_arch = "aarch64")]
+        let foreign = "avx2";
+        #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+        {
+            let (k, warn) = resolve(Some(foreign));
+            assert_eq!(k.kind(), b);
+            let w = warn.expect("unavailable MQ_KERNEL must warn");
+            assert!(w.contains(&format!(
+                        "MQ_KERNEL={foreign} not available")),
+                    "got: {w}");
+        }
+        // and none of the above touched the published choice
+        assert!(available().contains(&active().kind()));
     }
 
     /// `force` installs available variants and rejects foreign ones;

@@ -34,6 +34,9 @@ fn make_scheduler(max_batch: usize, slabs: usize) -> Scheduler {
             prefix_cache: false,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     )
 }
@@ -120,6 +123,9 @@ fn fifo_first_token_order() {
             prefix_cache: false,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     );
     for i in 0..6u64 {
@@ -202,6 +208,9 @@ fn kv_overflow_mid_chunked_prefill_fails_cleanly() {
             prefix_cache: false,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     );
     let oversized: Vec<u32> = (0..40).map(|t| 3 + t % 90).collect();
@@ -240,6 +249,9 @@ fn int8_kv_scheduler_serves_full_workload() {
                 prefix_cache: false,
                 prefix_cache_blocks: 0,
                 max_decode_latency: 0,
+                speculative: false,
+                draft_k: 0,
+                draft_layers: 0,
             },
         );
         for (i, &(plen, mnew)) in workload.iter().enumerate() {
@@ -286,6 +298,9 @@ fn backpressure_queue_cap() {
             prefix_cache: false,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     );
     assert!(sched.submit(Request::new(1, vec![3], 2)).is_ok());
@@ -418,6 +433,9 @@ fn cancel_mid_chunked_prefill_frees_blocks() {
             prefix_cache: false,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     );
     let long: Vec<u32> = (0..40).map(|t| 3 + t % 90).collect();
@@ -516,6 +534,9 @@ fn multiple_chunked_prefills_ride_concurrently() {
                 prefix_cache: false,
                 prefix_cache_blocks: 0,
                 max_decode_latency: 0,
+                speculative: false,
+                draft_k: 0,
+                draft_layers: 0,
             },
         )
     };
@@ -595,6 +616,9 @@ fn chunked_prefill_same_results_and_bounded_stall() {
                 prefix_cache: false,
                 prefix_cache_blocks: 0,
                 max_decode_latency: 0,
+                speculative: false,
+                draft_k: 0,
+                draft_layers: 0,
             },
         )
     };
@@ -737,6 +761,9 @@ fn paged_scheduler_streams_match_slab_scheduler() {
                 prefix_cache: false,
                 prefix_cache_blocks: 0,
                 max_decode_latency: 0,
+                speculative: false,
+                draft_k: 0,
+                draft_layers: 0,
             },
         );
         for i in 0..5u64 {
@@ -787,6 +814,9 @@ fn decode_lanes_finish_cache_full_fifo_under_block_pressure() {
             prefix_cache: false,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     );
     let prompt: Vec<u32> = (0..8).map(|t| 3 + t % 90).collect();
@@ -834,6 +864,9 @@ fn stalled_prefills_requeue_newest_deterministically() {
             prefix_cache: false,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     );
     let prompt: Vec<u32> = (0..24).map(|t| 3 + t % 90).collect();
@@ -887,6 +920,9 @@ fn bursty_mixed_priority_fleet_conserves_blocks_and_starves_no_one() {
                 prefix_cache: false,
                 prefix_cache_blocks: 0,
                 max_decode_latency: 0,
+                speculative: false,
+                draft_k: 0,
+                draft_layers: 0,
             },
         );
         let horizon = trace
@@ -982,6 +1018,9 @@ fn bursty_mixed_priority_fleet_conserves_blocks_and_starves_no_one() {
                 prefix_cache: true,
                 prefix_cache_blocks: 0,
                 max_decode_latency: 0,
+                speculative: false,
+                draft_k: 0,
+                draft_layers: 0,
             },
         );
         let rs_on = common::drive_fleet(&mut on, trace);
@@ -1024,6 +1063,9 @@ fn make_prefix_scheduler(prefix: bool) -> Scheduler {
             prefix_cache: prefix,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     )
 }
@@ -1242,6 +1284,9 @@ fn prefix_pressure_evicts_cached_blocks_and_balances_at_drain() {
             prefix_cache: true,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     );
     for i in 0..4u64 {
@@ -1289,6 +1334,9 @@ fn paged_admission_outpacks_slab_admission_at_equal_bytes() {
                 prefix_cache: false,
                 prefix_cache_blocks: 0,
                 max_decode_latency: 0,
+                speculative: false,
+                draft_k: 0,
+                draft_layers: 0,
             },
         );
         for i in 0..16u64 {

@@ -55,6 +55,9 @@ fn tight_scheduler(prefix_on: bool, threads: usize, kv: KvDtype,
             prefix_cache: prefix_on,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     )
 }
@@ -81,6 +84,9 @@ fn roomy_scheduler(threads: usize, kv: KvDtype, kv_block: usize,
             prefix_cache: false,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     )
 }
@@ -386,6 +392,9 @@ fn no_slo_violations_when_capacity_suffices() {
             prefix_cache: false,
             prefix_cache_blocks: 0,
             max_decode_latency: 60_000,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     );
     for i in 0..3u64 {

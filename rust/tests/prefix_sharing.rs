@@ -45,6 +45,9 @@ fn fleet_scheduler(prefix_on: bool, threads: usize, kv: KvDtype,
             prefix_cache: prefix_on,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     )
 }
@@ -272,6 +275,9 @@ fn capacity_bound_evicts_lru_and_report_carries_hit_rate() {
             prefix_cache: true,
             prefix_cache_blocks: 4,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     );
     for i in 0..6u64 {

@@ -604,6 +604,92 @@ fn shared_prefix_tables_bitwise_equal_cold_replay() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Property: a k-token All-rows span ≡ k sequential Last-span decodes,
+// bitwise (DESIGN.md §18) — the identity the speculative verify path
+// rests on. The verify span scores every drafted position in ONE
+// forward; each row must carry the exact bits the lane would have
+// emitted had it decoded those tokens one forward at a time.
+// ---------------------------------------------------------------------
+
+/// A prompt plus a short teacher-forced continuation to verify.
+#[derive(Clone, Debug)]
+struct VerifyCase {
+    prompt: Vec<u32>,
+    toks: Vec<u32>,
+}
+
+impl Shrink for VerifyCase {}
+
+fn gen_verify_case(r: &mut Rng) -> VerifyCase {
+    let plen = r.usize(2, 13);
+    let prompt = (0..plen).map(|_| 3 + r.usize(0, 90) as u32).collect();
+    // The speculative draft depths the scheduler actually runs.
+    let k = [2usize, 4, 8][r.usize(0, 3)];
+    let toks = (0..k).map(|_| 3 + r.usize(0, 90) as u32).collect();
+    VerifyCase { prompt, toks }
+}
+
+#[test]
+fn verify_span_bitwise_equals_sequential_last_decodes() {
+    for kv in kv_dtypes() {
+        for &threads in &thread_counts() {
+            let engine = test_engine(threads);
+            let cfg = engine.config().clone();
+            let v = cfg.vocab;
+            check(4409 + threads as u64, 6, gen_verify_case, |case| {
+                let k = case.toks.len();
+                let cap = case.prompt.len() + k + 2;
+
+                // One ragged verify span carrying all k tokens, every
+                // row emitting logits.
+                let mut ws = Workspace::new();
+                let mut ca = KvCache::with_dtype(
+                    kv, cfg.n_layers, cap, cfg.d_model);
+                engine.prefill(&case.prompt, &mut ca, &mut ws).unwrap();
+                let mut plan = BatchPlan::new();
+                plan.push_verify_span(0, case.toks[0], &case.toks[1..]);
+                let mut refs = [&mut ca];
+                engine.forward_batch(&plan, &mut refs, &mut ws).unwrap();
+                if plan.emitted_rows() != k {
+                    return Err(format!(
+                        "verify span emitted {} rows, want {k}",
+                        plan.emitted_rows()));
+                }
+                let got = bits(&ws.logits[..k * v]);
+
+                // The seed path: k sequential single-token Last spans.
+                let mut ws2 = Workspace::new();
+                let mut cb = KvCache::with_dtype(
+                    kv, cfg.n_layers, cap, cfg.d_model);
+                engine.prefill(&case.prompt, &mut cb, &mut ws2).unwrap();
+                let mut want = Vec::new();
+                for &t in &case.toks {
+                    let mut plan = BatchPlan::new();
+                    plan.push_span(0, std::slice::from_ref(&t),
+                                   SpanLogits::Last);
+                    let mut refs = [&mut cb];
+                    engine.forward_batch(&plan, &mut refs, &mut ws2)
+                        .unwrap();
+                    want.extend(bits(&ws2.logits[..v]));
+                }
+
+                if ca.len != cb.len {
+                    return Err(format!(
+                        "cache lengths diverged: {} vs {} (kv {kv:?}, \
+                         threads {threads}, k {k})", ca.len, cb.len));
+                }
+                if got != want {
+                    return Err(format!(
+                        "verify-span logits diverged from sequential \
+                         decodes (kv {kv:?}, threads {threads}, k {k})"));
+                }
+                Ok(())
+            });
+        }
+    }
+}
+
 #[test]
 fn pooled_cache_without_blocks_is_kv_exhausted_not_overflow() {
     // The §13 error split: a pooled cache under its logical cap but

@@ -45,6 +45,9 @@ fn whole_box(threads: usize, kv: KvDtype, prefix: bool)
         prefix_cache: prefix,
         prefix_cache_blocks: 0,
         max_decode_latency: 0,
+        speculative: false,
+        draft_k: 0,
+        draft_layers: 0,
     }
 }
 

@@ -238,6 +238,9 @@ fn run_workload(threads: usize, kv: KvDtype, prefill_chunk: usize)
             prefix_cache: false,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     );
     for (i, (prompt, params)) in workload().into_iter().enumerate() {
@@ -299,6 +302,9 @@ fn scheduler_greedy_lane_unaffected_by_sampled_neighbours() {
             prefix_cache: false,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     );
     for (i, (prompt, _)) in workload().into_iter().enumerate() {

@@ -35,6 +35,9 @@ fn server_with(max_batch: usize, kv_slabs: usize, max_seq: usize,
             prefix_cache: false,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     )
 }
@@ -604,6 +607,9 @@ fn test_router(replicas: usize) -> Arc<Router> {
         prefix_cache: false,
         prefix_cache_blocks: 0,
         max_decode_latency: 0,
+        speculative: false,
+        draft_k: 0,
+        draft_layers: 0,
     };
     Arc::new(Router::start(
         RouterConfig::new(replicas, cfg),

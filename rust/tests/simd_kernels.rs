@@ -125,6 +125,9 @@ fn trace_scheduler() -> Scheduler {
             prefix_cache: true,
             prefix_cache_blocks: 0,
             max_decode_latency: 0,
+            speculative: false,
+            draft_k: 0,
+            draft_layers: 0,
         },
     )
 }

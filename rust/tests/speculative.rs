@@ -1,0 +1,203 @@
+//! Self-speculative decoding determinism (DESIGN.md §18): speculation
+//! is a pure perf knob — the emitted stream is the target sampler
+//! stream draw by draw, so turning the draft lane on (at any draft_k,
+//! any draft depth) must be **bitwise invisible** in every token
+//! stream, greedy or sampled, across thread counts and KV dtypes, on
+//! scripted serving fleets with staggered admission and mid-stream
+//! cancellation.
+//!
+//! CI matrix knobs (DESIGN.md §7/§10): `MQ_TEST_THREADS` feeds an
+//! extra thread count into the sweeps, `MQ_TEST_KV` restricts the
+//! dtype axis.
+
+mod common;
+
+use mergequant::bench::synthetic_model;
+use mergequant::coordinator::{
+    GenerationParams, Request, Scheduler, SchedulerConfig,
+};
+use mergequant::engine::{Engine, KvDtype};
+use mergequant::util::proptest::check;
+
+use common::{drive_fleet, gen_fleet, kv_dtypes, thread_counts};
+
+/// Paged-arena scheduler over the 2-layer synthetic bundle (2 layers so
+/// `draft_layers: 1` is a true truncation). `draft_k == 0` ⇒ the plain
+/// non-speculative scheduler the goldens come from.
+fn sched_with(threads: usize, kv: KvDtype, draft_k: usize,
+              draft_layers: usize) -> Scheduler {
+    let engine = Engine::with_threads(
+        synthetic_model("mergequant", 64, 128, 2, 96), threads);
+    Scheduler::new(
+        engine,
+        SchedulerConfig {
+            max_batch: 8,
+            kv_slabs: 0,
+            kv_block: 16,
+            kv_blocks: 24,
+            max_seq: 48,
+            max_prefills_per_iter: 2,
+            queue_cap: 64,
+            prefill_chunk: 0,
+            threads,
+            kv_dtype: kv,
+            prefix_cache: false,
+            prefix_cache_blocks: 0,
+            max_decode_latency: 0,
+            speculative: draft_k > 0,
+            draft_k,
+            draft_layers,
+        },
+    )
+}
+
+// ---------------------------------------------------------------------
+// Property: greedy speculative fleets ≡ the non-speculative goldens
+// ---------------------------------------------------------------------
+
+#[test]
+fn speculative_fleets_bitwise_equal_plain_fleets() {
+    for kv in kv_dtypes() {
+        for &threads in &thread_counts() {
+            check(2707 + threads as u64, 3, gen_fleet, |trace| {
+                let mut plain = sched_with(threads, kv, 0, 0);
+                let golden = drive_fleet(&mut plain, trace);
+                for draft_layers in [0usize, 1] {
+                    for draft_k in [2usize, 4, 8] {
+                        let mut sched = sched_with(
+                            threads, kv, draft_k, draft_layers);
+                        let got = drive_fleet(&mut sched, trace);
+                        if got.len() != golden.len() {
+                            return Err(format!(
+                                "response count diverged: {} vs {} \
+                                 (kv {kv:?}, threads {threads}, \
+                                 draft_k {draft_k}, draft_layers \
+                                 {draft_layers})",
+                                got.len(), golden.len()));
+                        }
+                        for (g, w) in got.iter().zip(&golden) {
+                            if g.tokens != w.tokens
+                                || g.finish != w.finish
+                            {
+                                return Err(format!(
+                                    "lane {} diverged: {:?}/{:?} vs \
+                                     {:?}/{:?} (kv {kv:?}, threads \
+                                     {threads}, draft_k {draft_k}, \
+                                     draft_layers {draft_layers})",
+                                    g.id, g.tokens, g.finish,
+                                    w.tokens, w.finish));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Seeded stochastic acceptance: replayable, and still stream-invariant
+// ---------------------------------------------------------------------
+
+/// Three sampled lanes (distinct seeds) through one scheduler; returns
+/// the streams sorted by id.
+fn run_sampled(mut sched: Scheduler) -> Vec<Vec<u32>> {
+    for i in 0..3u64 {
+        let prompt: Vec<u32> =
+            (0..12).map(|t| 3 + (t * 7 + i as u32 * 11) % 90).collect();
+        sched.submit(Request::with_params(i, prompt, GenerationParams {
+            temperature: 0.8,
+            top_k: 24,
+            top_p: 0.95,
+            seed: 11 + i,
+            ..GenerationParams::greedy(10)
+        })).unwrap();
+    }
+    let mut rs = sched.run_to_completion();
+    rs.sort_by_key(|r| r.id);
+    assert_eq!(rs.len(), 3);
+    for r in &rs {
+        assert!(r.error.is_none(), "lane {} failed: {:?}", r.id, r.error);
+    }
+    rs.into_iter().map(|r| r.tokens).collect()
+}
+
+#[test]
+fn sampled_speculative_streams_are_replayable_and_invariant() {
+    // The counter-based sampler draws from the target's verify rows at
+    // the lane's committed step index, so a sampled speculative run is
+    // (a) identical when replayed with the same seeds and (b) identical
+    // to the non-speculative run of the same seeds — stochastic
+    // acceptance never forks the stream.
+    let golden = run_sampled(sched_with(1, KvDtype::F32, 0, 0));
+    for draft_layers in [0usize, 1] {
+        for draft_k in [2usize, 4, 8] {
+            let a = run_sampled(
+                sched_with(1, KvDtype::F32, draft_k, draft_layers));
+            let b = run_sampled(
+                sched_with(1, KvDtype::F32, draft_k, draft_layers));
+            assert_eq!(a, b,
+                       "same seeds must replay identically (draft_k \
+                        {draft_k}, draft_layers {draft_layers})");
+            assert_eq!(a, golden,
+                       "sampling + speculation must match the plain \
+                        sampled run (draft_k {draft_k}, draft_layers \
+                        {draft_layers})");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-request opt-out + speculative metrics
+// ---------------------------------------------------------------------
+
+#[test]
+fn per_request_opt_out_disables_drafting_for_that_lane() {
+    let prompt: Vec<u32> = (0..12).map(|t| 3 + (t * 7) % 90).collect();
+
+    // Opted-out lane on a speculative scheduler: no draft forwards at
+    // all (it was the only lane), stream identical to the plain run.
+    let mut plain = sched_with(1, KvDtype::F32, 0, 0);
+    plain.submit(Request::new(0, prompt.clone(), 8)).unwrap();
+    let golden = plain.run_to_completion();
+
+    let mut sched = sched_with(1, KvDtype::F32, 4, 0);
+    sched.submit(Request::with_params(0, prompt.clone(),
+        GenerationParams {
+            speculative: Some(false),
+            ..GenerationParams::greedy(8)
+        })).unwrap();
+    let rs = sched.run_to_completion();
+    assert_eq!(rs[0].tokens, golden[0].tokens);
+    assert_eq!(sched.metrics.draft_forwards, 0,
+               "an opted-out lane must never touch the draft engine");
+    assert_eq!(sched.metrics.draft_proposed, 0);
+
+    // Default (None) on the same scheduler config: the draft lane runs
+    // and the full-depth self-draft is accepted wholesale.
+    let mut on = sched_with(1, KvDtype::F32, 4, 0);
+    on.submit(Request::new(0, prompt, 8)).unwrap();
+    let rs = on.run_to_completion();
+    assert_eq!(rs[0].tokens, golden[0].tokens);
+    assert!(on.metrics.draft_forwards > 0);
+    assert!(on.metrics.verify_forwards > 0);
+    assert_eq!(on.metrics.acceptance_rate(), 1.0,
+               "full-depth self-draft proposals must all verify");
+    assert!(on.metrics.tokens_per_forward() > 1.0);
+    let report = on.metrics.report();
+    assert!(report.contains("acceptance_rate="), "{report}");
+    assert!(report.contains("tokens_per_forward="), "{report}");
+}
+
+#[test]
+fn replica_stats_report_speculative_kernel_and_quant_mode() {
+    // The satellite observability surface: `stats()` carries the active
+    // microkernel and the bundle's quant mode for the router's
+    // `{"cmd":"stats"}` snapshot.
+    let sched = sched_with(1, KvDtype::F32, 2, 0);
+    let stats = sched.stats();
+    assert!(!stats.kernel.is_empty());
+    assert_eq!(stats.quant_mode, "dynamic",
+               "the synthetic mergequant bundle is per-token dynamic");
+}
